@@ -1,0 +1,16 @@
+use siwoft::prelude::*;
+use siwoft::policy::Ctx;
+fn main() {
+    let mut world = World::generate(192, 3.0, 2020);
+    let start = world.split_train(0.67);
+    let suitable = world.catalog.suitable(64.0);
+    println!("suitable 64GB class: {} markets", suitable.len());
+    let sorted = world.analytics.sort_by_lifetime_desc(&suitable);
+    for &m in sorted.iter().take(10) {
+        println!("  {} mttr={:.0} od={:.3} mean24={:.3}", world.catalog.markets[m].label(), world.analytics.mttr[m], world.od_price(m), world.market(m).mean_price(start-24.0, start));
+    }
+    let job = Job::new(1, 8.0, 64.0);
+    let mut p = PSiwoft::default();
+    let d = p.select(&job, &Ctx{world:&world, now:start});
+    println!("P chose {} ", world.catalog.markets[d.market()].label());
+}

@@ -1,0 +1,190 @@
+//! END-TO-END DRIVER — the headline validation run recorded in
+//! EXPERIMENTS.md.
+//!
+//! Exercises every layer of the stack on the full-scale workload:
+//!   1. generates the 192-market, 3-month synthetic EC2 trace set;
+//!   2. runs the market analytics through the **PJRT artifact**
+//!      (`artifacts/market_analytics_*.hlo.txt`, built by
+//!      `make artifacts`) — Layer 1+2 compute executed from Rust;
+//!   3. reproduces all six panels of the paper's Fig. 1 (3 sweeps × 3
+//!      arms × N seeds) on the Layer-3 session simulator;
+//!   4. checks the paper's acceptance criteria (who wins, where, and the
+//!      §V-C overhead orderings) and writes `results/fig1*.csv`.
+//!
+//!     make artifacts && cargo run --release --example fig1_e2e
+
+use siwoft::experiments::fig1::{find, Fig1Options, Fig1Runner, Sweep};
+use siwoft::market::{Catalog, TraceGenConfig};
+use siwoft::runtime::AnalyticsEngine;
+use siwoft::sim::Category;
+use siwoft::util::csvio;
+
+fn main() {
+    let t_start = std::time::Instant::now();
+
+    // ---- layer 1+2 through PJRT ---------------------------------------
+    // The Fig. 1 world uses a 2-month training window (192x1440) whose
+    // shape has no pre-lowered artifact, so the runner's split uses the
+    // native mirror.  To prove the artifact path end-to-end at full
+    // scale, run the 256x2160 artifact here and check it against native.
+    let engine = AnalyticsEngine::auto("artifacts");
+    println!("analytics backend: {}", engine.backend_name());
+    {
+        let catalog = Catalog::with_limit(256);
+        let cfg = TraceGenConfig { months: 3.0, seed: 99, ..Default::default() };
+        let trace = siwoft::market::generate_traces(&catalog, &cfg);
+        let t0 = std::time::Instant::now();
+        let pjrt = engine.compute(&trace, &catalog.od_prices()).expect("analytics");
+        let t_pjrt = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        let native = siwoft::market::MarketAnalytics::compute(&trace, &catalog.od_prices());
+        let t_native = t0.elapsed();
+        let max_dev = pjrt
+            .corr
+            .iter()
+            .zip(&native.corr)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "market_analytics 256x2160: pjrt {:?} vs native {:?}; max corr deviation {:.2e}",
+            t_pjrt, t_native, max_dev
+        );
+        assert!(max_dev < 1e-4, "PJRT and native analytics disagree");
+    }
+
+    // ---- Fig. 1 at paper scale ----------------------------------------
+    let opts = Fig1Options {
+        markets: 192,
+        months: 3.0,
+        world_seed: 2020,
+        seeds: 10,
+        ft_rate_per_day: 3.0,
+        train_frac: 0.67,
+        workers: 0,
+    };
+    println!(
+        "\nrunning Fig. 1: {} markets, {} months, {} seeds/bar ...",
+        opts.markets, opts.months, opts.seeds
+    );
+    let runner = Fig1Runner::prepare(opts);
+    let lens = runner.sweep(Sweep::Length);
+    let mems = runner.sweep(Sweep::Memory);
+    let revs = runner.sweep(Sweep::Revocations);
+
+    for (id, rows, is_cost) in [
+        ('a', &lens, false),
+        ('b', &mems, false),
+        ('c', &revs, false),
+        ('d', &lens, true),
+        ('e', &mems, true),
+        ('f', &revs, true),
+    ] {
+        let panel = runner.panel(rows, id, is_cost);
+        println!("{}", panel.render(46));
+        let path = format!("results/fig1{id}.csv");
+        csvio::write_file(&path, &panel.to_csv()).expect("write csv");
+        println!("wrote {path}\n");
+    }
+
+    // ---- acceptance criteria (DESIGN.md §4) ----------------------------
+    let mut pass = 0u32;
+    let mut fail = 0u32;
+    let mut check = |name: &str, ok: bool| {
+        println!("  [{}] {name}", if ok { "PASS" } else { "FAIL" });
+        if ok {
+            pass += 1
+        } else {
+            fail += 1
+        }
+    };
+
+    println!("acceptance criteria:");
+    // 1a/1d: across job lengths
+    for x in ["2h", "4h", "8h", "16h", "32h"] {
+        let p = find(&lens, x, "P");
+        let f = find(&lens, x, "F");
+        let o = find(&lens, x, "O");
+        check(
+            &format!("1a {x}: completion P ≤ F and P within 20% of O"),
+            p.completion_h() <= f.completion_h() * 1.06
+                && (p.completion_h() - o.completion_h()) / o.completion_h() < 0.20,
+        );
+        check(
+            &format!("1d {x}: cost P < O and P ≤ F"),
+            p.cost_usd() < o.cost_usd() && p.cost_usd() <= f.cost_usd() * 1.05,
+        );
+    }
+    // F's overhead grows with length; P's only slightly
+    {
+        let f_grow = find(&lens, "32h", "F").overhead_time() / find(&lens, "2h", "F").overhead_time();
+        let p_grow_abs =
+            find(&lens, "32h", "P").overhead_time() - find(&lens, "2h", "P").overhead_time();
+        check("1a: F overhead grows ≥ 3x from 2h→32h", f_grow >= 3.0);
+        check("1a: P overhead grows < 1h from 2h→32h", p_grow_abs < 1.0);
+    }
+    // 1b/1e: memory sweep — F's ckpt+recovery time grows with footprint
+    {
+        let f4 = find(&mems, "4GB", "F");
+        let f64_ = find(&mems, "64GB", "F");
+        let ckptrec =
+            |a: &siwoft::sim::AggregateResult| a.time.get(Category::Checkpoint) + a.time.get(Category::Recovery);
+        check("1b: F ckpt+recovery grows with memory", ckptrec(f64_) > ckptrec(f4) * 2.0);
+        let p4 = find(&mems, "4GB", "P");
+        let p64 = find(&mems, "64GB", "P");
+        check(
+            "1b: P overhead ~independent of memory",
+            (p64.overhead_time() - p4.overhead_time()).abs() < 1.0,
+        );
+        for x in ["4GB", "8GB", "16GB", "32GB", "64GB"] {
+            let p = find(&mems, x, "P");
+            let f = find(&mems, x, "F");
+            let o = find(&mems, x, "O");
+            check(
+                &format!("1e {x}: cost P < O and P ≤ F"),
+                p.cost_usd() < o.cost_usd() && p.cost_usd() <= f.cost_usd() * 1.05,
+            );
+            check(
+                &format!("1b {x}: completion P ≤ F"),
+                p.completion_h() <= f.completion_h() * 1.06,
+            );
+        }
+    }
+    // 1c/1f: revocation sweep
+    {
+        for x in ["2", "4", "8", "16"] {
+            let p = find(&revs, x, "P");
+            let f = find(&revs, x, "F");
+            check(&format!("1c n={x}: completion P < F"), p.completion_h() < f.completion_h());
+            check(&format!("1f n={x}: cost P < F"), p.cost_usd() < f.cost_usd());
+        }
+        // the paper's n=1 crossover: F's checkpointing ≈ P's gap
+        let p1 = find(&revs, "1", "P");
+        let f1 = find(&revs, "1", "F");
+        check(
+            "1c n=1: P and F within 15% (the paper's crossover)",
+            (p1.completion_h() - f1.completion_h()).abs() / f1.completion_h() < 0.15,
+        );
+        // F cost exceeds on-demand at high revocation counts
+        let o8 = find(&revs, "8", "O");
+        let f8 = find(&revs, "8", "F");
+        check("1f n=8: F cost ≥ O cost", f8.cost_usd() >= o8.cost_usd() * 0.9);
+    }
+    // §V-C cost ordering at 32h: buffer & reexec dominate for F
+    {
+        let f = find(&lens, "32h", "F");
+        let buf = f.cost.get(Category::Buffer);
+        let reex = f.cost.get(Category::Reexec);
+        let ckpt = f.cost.get(Category::Checkpoint);
+        let start = f.cost.get(Category::Startup);
+        check("V-C: F cost buffer > startup at 32h", buf > start);
+        check("V-C: F cost reexec > checkpoint at 32h", reex > ckpt);
+    }
+
+    println!(
+        "\n=== fig1_e2e: {pass} passed, {fail} failed, total wall time {:?} ===",
+        t_start.elapsed()
+    );
+    if fail > 0 {
+        std::process::exit(1);
+    }
+}

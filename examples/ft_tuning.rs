@@ -1,0 +1,84 @@
+//! RQ3 / §II-A: how fault-tolerance settings trade off overheads.
+//!
+//! Sweeps the checkpoint count and the replication degree, and compares
+//! P-SIWOFT's correlation filter on/off plus the lifetime-blind greedy
+//! ablation — the studies DESIGN.md indexes as abl-ckpt / abl-repl /
+//! abl-corr / abl-greedy.
+//!
+//!     cargo run --release --example ft_tuning
+
+use siwoft::experiments::ablation;
+use siwoft::sim::{Category, World};
+
+fn print_series(title: &str, series: &ablation::Series, detail: bool) {
+    println!("== {title} ==");
+    println!(
+        "{:<16} {:>12} {:>10} {:>7}{}",
+        "x",
+        "completion_h",
+        "cost_usd",
+        "revs",
+        if detail { "   ckpt_h  reexec_h" } else { "" }
+    );
+    for (x, agg) in series {
+        print!(
+            "{:<16} {:>12.3} {:>10.4} {:>7.2}",
+            x,
+            agg.completion_h(),
+            agg.cost_usd(),
+            agg.mean_revocations
+        );
+        if detail {
+            print!(
+                "   {:>6.3} {:>8.3}",
+                agg.time.get(Category::Checkpoint),
+                agg.time.get(Category::Reexec)
+            );
+        }
+        println!();
+    }
+    println!();
+}
+
+fn main() {
+    let mut world = World::generate(192, 3.0, 555);
+    let start = world.split_train(0.67);
+    let seeds = 10;
+
+    let ckpt = ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]);
+    print_series(
+        "checkpoint count (8h/16GB job, 4 forced revocations)",
+        &ckpt,
+        true,
+    );
+    // the §II-A tradeoff: find the sweet spot
+    let best = ckpt
+        .iter()
+        .min_by(|a, b| a.1.completion_h().partial_cmp(&b.1.completion_h()).unwrap())
+        .unwrap();
+    println!("fastest checkpoint setting: n={} ({:.3} h)\n", best.0, best.1.completion_h());
+
+    let repl = ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]);
+    print_series("replication degree (8h/16GB job, 3 revocations/day)", &repl, false);
+
+    let corr = ablation::corr_filter_ablation(&world, start, seeds);
+    print_series("P-SIWOFT correlation filter (trace revocations)", &corr, false);
+
+    let greedy = ablation::greedy_vs_psiwoft(&world, start, seeds);
+    print_series("market-analytics value: P-SIWOFT vs lifetime-blind greedy", &greedy, false);
+
+    let baselines = ablation::analytics_baselines(&world, start, seeds);
+    print_series(
+        "analytics baselines: MTTR (P-SIWOFT) vs survival [17] vs Daly-tuned FT",
+        &baselines,
+        true,
+    );
+
+    let p = &greedy[0].1;
+    let g = &greedy[1].1;
+    println!(
+        "greedy suffers {:.1}x the revocations of P-SIWOFT and takes {:.1}% longer",
+        g.mean_revocations / p.mean_revocations.max(0.01),
+        (g.completion_h() / p.completion_h() - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,76 @@
+//! Control-plane demo: starts the coordinator's TCP server in-process,
+//! submits a stream of jobs over the socket (as an external client
+//! would), prints the scheduling decisions, and shuts the server down.
+//!
+//!     cargo run --release --example live_serve
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use siwoft::coordinator::{Coordinator, Server};
+use siwoft::runtime::AnalyticsEngine;
+use siwoft::sim::World;
+use siwoft::util::json::Json;
+
+fn request(addr: std::net::SocketAddr, line: &str) -> Json {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    writeln!(s, "{line}").unwrap();
+    let mut reader = BufReader::new(s);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Json::parse(&reply).expect("valid reply json")
+}
+
+fn main() {
+    // world + coordinator; analytics through the artifact engine when
+    // available (never on the per-request path — one epoch up front)
+    let world = World::generate(192, 3.0, 31);
+    let engine = AnalyticsEngine::auto("artifacts");
+    println!("analytics backend: {}", engine.backend_name());
+    let server = Arc::new(Server::new(Coordinator::new(world, engine, 0)));
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let s2 = server.clone();
+    let handle = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).expect("serve");
+    });
+    let addr = rx.recv().unwrap();
+    println!("coordinator listening on {addr}\n");
+
+    // a small stream of jobs with mixed policies, like tenants would send
+    let submissions = [
+        r#"{"cmd":"submit","len_h":4,"mem_gb":8,"policy":"p","ft":"none","seed":1}"#,
+        r#"{"cmd":"submit","len_h":8,"mem_gb":16,"policy":"p","ft":"none","seed":2}"#,
+        r#"{"cmd":"submit","len_h":8,"mem_gb":16,"policy":"ft","ft":"checkpoint","seed":3}"#,
+        r#"{"cmd":"submit","len_h":2,"mem_gb":32,"policy":"o","ft":"none","seed":4}"#,
+        r#"{"cmd":"submit","len_h":16,"mem_gb":64,"policy":"p","ft":"none","seed":5}"#,
+    ];
+    println!(
+        "{:<10} {:>6} {:>7} {:>13} {:>10} {:>6}",
+        "policy", "len_h", "mem_gb", "completion_h", "cost_usd", "revs"
+    );
+    for line in submissions {
+        let req = Json::parse(line).unwrap();
+        let reply = request(addr, line);
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        let r = reply.get("result").unwrap();
+        println!(
+            "{:<10} {:>6} {:>7} {:>13.3} {:>10.4} {:>6}",
+            r.get("policy").unwrap().as_str().unwrap(),
+            req.get("len_h").unwrap().as_f64().unwrap(),
+            req.get("mem_gb").unwrap().as_f64().unwrap(),
+            r.get("completion_h").unwrap().as_f64().unwrap(),
+            r.get("cost_usd").unwrap().as_f64().unwrap(),
+            r.get("revocations").unwrap().as_f64().unwrap(),
+        );
+    }
+
+    let status = request(addr, r#"{"cmd":"status"}"#);
+    println!("\nstatus: {status}");
+
+    let bye = request(addr, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap();
+    println!("server shut down cleanly");
+}

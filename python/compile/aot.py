@@ -1,0 +1,120 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` or serialized ``HloModuleProto`` —
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction
+ids that the crate-side XLA (xla_extension 0.5.1) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are keyed by shape: ``market_analytics_{M}x{H}.hlo.txt``.
+A ``manifest.json`` lists every artifact with its input/output shapes so
+the Rust runtime (rust/src/runtime/analytics_rt.rs) can pick the right
+executable — or fall back to the native implementation — without parsing
+HLO.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        --shapes 64x2160,256x2160
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import market_analytics, survival_model
+
+DEFAULT_SHAPES = "16x168,64x2160,256x2160"
+
+#: lowered entry points: name -> (callable, output-shape builder)
+MODELS = {
+    "market_analytics": (
+        market_analytics,
+        lambda m, h: [[m], [m], [m], [m, m]],
+    ),
+    "survival": (
+        survival_model,
+        lambda m, h: [[m, 64]],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps one tuple literal)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_shape(m: int, h: int, model: str = "market_analytics") -> str:
+    fn, _ = MODELS[model]
+    prices = jax.ShapeDtypeStruct((m, h), jnp.float32)
+    ondemand = jax.ShapeDtypeStruct((m,), jnp.float32)
+    lowered = jax.jit(fn).lower(prices, ondemand)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, shapes: list[tuple[int, int]], force: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    entries = []
+    for m, h in shapes:
+        for model, (_, out_shapes) in MODELS.items():
+            name = f"{model}_{m}x{h}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            if force or not os.path.exists(path):
+                text = lower_shape(m, h, model)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"wrote {path} ({len(text)} chars)")
+            else:
+                print(f"up-to-date {path}")
+            entries.append(
+                {
+                    "name": model,
+                    "file": name,
+                    "markets": m,
+                    "hours": h,
+                    "inputs": [
+                        {"dtype": "f32", "shape": [m, h]},
+                        {"dtype": "f32", "shape": [m]},
+                    ],
+                    "outputs": [
+                        {"dtype": "f32", "shape": s} for s in out_shapes(m, h)
+                    ],
+                }
+            )
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "artifacts": entries}, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+def parse_shapes(s: str) -> list[tuple[int, int]]:
+    out = []
+    for part in s.split(","):
+        m, h = part.strip().lower().split("x")
+        out.append((int(m), int(h)))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--shapes", default=DEFAULT_SHAPES,
+                    help="comma-separated MxH list")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact exists")
+    args = ap.parse_args()
+    build(args.out_dir, parse_shapes(args.shapes), force=args.force)
+
+
+if __name__ == "__main__":
+    main()

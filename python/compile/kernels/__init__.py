@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels for P-SIWOFT market analytics."""
+
+from . import corr, indicators, ref  # noqa: F401

@@ -1,0 +1,93 @@
+"""Pallas kernel: revocation-correlation matrix (tiled X·Xᵀ on the MXU).
+
+Layer-1 hot-spot.  The correlation between every pair of the M spot
+markets is a centered, normalized Gram matrix of the indicator matrix
+``X[M, H]`` — i.e. a matmul with a fused mean-subtraction on the inputs
+and a fused rsqrt normalization on the output.  This is the one piece of
+the P-SIWOFT pipeline that is genuinely MXU-shaped (the paper computes it
+offline over "the past three months" of traces; we recompute it every
+analytics epoch).
+
+Tiling: grid ``(M/bm, M/bn)``; each step loads an A-band ``(bm, H)`` and
+a B-band ``(bn, H)`` of X into VMEM together with the per-row mean/std
+vectors, contracts the full H axis in one MXU pass, and writes a
+``(bm, bn)`` tile of C.  For bm=bn=128, H=2160 (f32): 2·1.08 MB input
+bands + 64 KB output ≈ 2.3 MB VMEM — comfortable double-buffering room.
+A two-pass schedule (row-moments kernel, then the Gram kernel) avoids
+recomputing means per tile-row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .indicators import INTERPRET, pick_block
+
+
+def _row_moments_kernel(x_ref, mu_ref, sigma_ref, *, h: int):
+    """Pass 1: per-row mean and (population) standard deviation."""
+    x = x_ref[...]
+    hf = jnp.float32(h)
+    mu = jnp.sum(x, axis=1) / hf
+    var = jnp.sum((x - mu[:, None]) ** 2, axis=1) / hf
+    mu_ref[...] = mu
+    sigma_ref[...] = jnp.sqrt(var)
+
+
+def row_moments(x: jnp.ndarray):
+    """X[M,H] → (mu[M], sigma[M]) in f32."""
+    m, h = x.shape
+    bm = pick_block(m)
+    vec = jax.ShapeDtypeStruct((m,), jnp.float32)
+    vec_spec = pl.BlockSpec((bm,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_row_moments_kernel, h=h),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, h), lambda i: (i, 0))],
+        out_specs=(vec_spec, vec_spec),
+        out_shape=(vec, vec),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _corr_tile_kernel(a_ref, b_ref, mu_i_ref, mu_j_ref, s_i_ref, s_j_ref,
+                      c_ref, *, h: int):
+    """Pass 2: one (bm, bn) tile of the correlation matrix.
+
+    cov  = (A - μᵢ)(B - μⱼ)ᵀ / H        ← the MXU contraction
+    corr = cov / (σᵢ σⱼ)  with zero-variance rows pinned to 0.
+    """
+    hf = jnp.float32(h)
+    a = a_ref[...] - mu_i_ref[...][:, None]
+    b = b_ref[...] - mu_j_ref[...][:, None]
+    cov = jax.lax.dot_general(
+        a, b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) / hf
+    denom = s_i_ref[...][:, None] * s_j_ref[...][None, :]
+    safe = jnp.where(denom > 0.0, denom, 1.0)
+    c_ref[...] = jnp.where(denom > 0.0, cov / safe, 0.0)
+
+
+def revocation_correlation(x: jnp.ndarray) -> jnp.ndarray:
+    """Pallas version of ref.revocation_correlation: X[M,H] → C[M,M]."""
+    m, h = x.shape
+    bm = pick_block(m)
+    mu, sigma = row_moments(x)
+    band = lambda sel: pl.BlockSpec((bm, h), (lambda i, j: (i, 0)) if sel == 0 else (lambda i, j: (j, 0)))
+    vec = lambda sel: pl.BlockSpec((bm,), (lambda i, j: (i,)) if sel == 0 else (lambda i, j: (j,)))
+    corr = pl.pallas_call(
+        functools.partial(_corr_tile_kernel, h=h),
+        grid=(m // bm, m // bm),
+        in_specs=[band(0), band(1), vec(0), vec(1), vec(0), vec(1)],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=INTERPRET,
+    )(x, x, mu, mu, sigma, sigma)
+    eye = jnp.eye(m, dtype=bool)
+    return jnp.where(eye, 1.0, corr)

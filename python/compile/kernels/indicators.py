@@ -1,0 +1,101 @@
+"""Pallas kernels: revocation indicators and per-market row statistics.
+
+Layer-1 of the stack.  These kernels compute, from the hourly spot-price
+matrix ``P[M, H]`` and on-demand price vector ``od[M]``:
+
+  * the revocation-indicator matrix ``X[M, H]``,
+  * per-market (mttr, events, frac_above) row statistics.
+
+TPU shaping: each grid step owns a ``(bm, H)`` row-band of the trace in
+VMEM (bm=128, H=2160 → ~1.1 MB per operand band, far under the ~16 MB
+VMEM budget), performing the compare, the transition detection (a shift
+along H) and the row reductions in a single HBM pass.  ``interpret=True``
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+correctness is validated through the interpret path (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-PJRT target; real-TPU lowering is compile-only.
+
+
+def pick_block(m: int, preferred: int = 128) -> int:
+    """Largest power-of-two block ≤ ``preferred`` that divides ``m``.
+
+    Falls back to ``m`` itself (single block) for awkward sizes so that
+    arbitrary market counts work in tests.
+    """
+    b = preferred
+    while b > 1:
+        if m % b == 0:
+            return b
+        b //= 2
+    return m if m > 0 else 1
+
+
+def _indicator_kernel(p_ref, od_ref, x_ref):
+    """x = (p > od) over one (bm, H) row band."""
+    p = p_ref[...]
+    od = od_ref[...]
+    x_ref[...] = (p > od[:, None]).astype(jnp.float32)
+
+
+def indicator_matrix(prices: jnp.ndarray, ondemand: jnp.ndarray) -> jnp.ndarray:
+    """Pallas version of ref.indicator_matrix (f32[M,H] → f32[M,H])."""
+    m, h = prices.shape
+    bm = pick_block(m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _indicator_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), jnp.float32),
+        interpret=INTERPRET,
+    )(prices, ondemand)
+
+
+def _row_stats_kernel(x_ref, mttr_ref, events_ref, frac_ref, *, h: int):
+    """Row reductions over one (bm, H) band of the indicator matrix.
+
+    events = Σ_h x·(1 - x_prev)   (below→above transitions, x_prev[0]=0)
+    frac   = Σ_h x / H
+    mttr   = (H - Σ_h x) / events, or H when the row never revoked.
+    """
+    x = x_ref[...]
+    hf = jnp.float32(h)
+    shifted = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    e = x * (1.0 - shifted)
+    events = jnp.sum(e, axis=1)
+    above = jnp.sum(x, axis=1)
+    avail = hf - above
+    frac_ref[...] = above / hf
+    events_ref[...] = events
+    mttr_ref[...] = jnp.where(events > 0.0, avail / jnp.maximum(events, 1.0), hf)
+
+
+def row_stats(x: jnp.ndarray):
+    """Pallas version of ref.row_stats: X[M,H] → (mttr, events, frac)[M]."""
+    m, h = x.shape
+    bm = pick_block(m)
+    grid = (m // bm,)
+    vec = jax.ShapeDtypeStruct((m,), jnp.float32)
+    vec_spec = pl.BlockSpec((bm,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_row_stats_kernel, h=h),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, h), lambda i: (i, 0))],
+        out_specs=(vec_spec, vec_spec, vec_spec),
+        out_shape=(vec, vec, vec),
+        interpret=INTERPRET,
+    )(x)

@@ -1,0 +1,114 @@
+"""Pure-jnp reference oracle for the market-analytics kernels.
+
+This module is the *correctness contract* shared by three implementations:
+
+  1. the Pallas kernels in ``indicators.py`` / ``corr.py`` (build-time,
+     lowered into the AOT artifact),
+  2. the lowered HLO artifact executed by the Rust runtime, and
+  3. the native Rust fallback in ``rust/src/market/analytics.rs``.
+
+All three must agree with the formulas below (f32 arithmetic, same
+definitions).  The semantics follow §III-A of the P-SIWOFT paper:
+
+  * a market is *revoked* in hour ``h`` when its spot price exceeds the
+    corresponding on-demand price (customers won't bid above on-demand);
+  * a *revocation event* is a below→above transition;
+  * MTTR (the "spot instance lifetime") is the average number of
+    available hours per revocation event, i.e. the expected time until a
+    freshly provisioned instance is revoked;
+  * the *revocation correlation* between two markets is the Pearson
+    correlation of their hourly revocation indicators over the trailing
+    window (the paper's "revoked at the same hour over the past three
+    months").
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def indicator_matrix(prices: jnp.ndarray, ondemand: jnp.ndarray) -> jnp.ndarray:
+    """X[m, h] = 1.0 where the spot price is above on-demand (revoked hour).
+
+    prices: f32[M, H] hourly spot prices; ondemand: f32[M].
+    """
+    return (prices > ondemand[:, None]).astype(jnp.float32)
+
+
+def event_matrix(x: jnp.ndarray) -> jnp.ndarray:
+    """E[m, h] = 1.0 at each below→above transition (E[:, 0] = X[:, 0])."""
+    shifted = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    return x * (1.0 - shifted)
+
+
+def row_stats(x: jnp.ndarray):
+    """Per-market statistics from the indicator matrix.
+
+    Returns (mttr, events, frac_above), each f32[M]:
+      events     — number of revocation events in the window,
+      frac_above — fraction of hours spent above on-demand,
+      mttr       — available-hours / events; the full window H when the
+                   market never revoked (a lower bound on its lifetime).
+    """
+    h = jnp.float32(x.shape[1])
+    e = event_matrix(x)
+    events = jnp.sum(e, axis=1)
+    above = jnp.sum(x, axis=1)
+    frac_above = above / h
+    avail = h - above
+    mttr = jnp.where(events > 0.0, avail / jnp.maximum(events, 1.0), h)
+    return mttr, events, frac_above
+
+
+def revocation_correlation(x: jnp.ndarray) -> jnp.ndarray:
+    """Pearson correlation C[M, M] of hourly revocation indicators.
+
+    Zero-variance rows (never / always revoked) correlate 0 with
+    everything; the diagonal is forced to 1.
+    """
+    m, h = x.shape
+    hf = jnp.float32(h)
+    mu = jnp.sum(x, axis=1) / hf
+    xc = x - mu[:, None]
+    cov = xc @ xc.T / hf
+    sigma = jnp.sqrt(jnp.diag(cov))
+    denom = sigma[:, None] * sigma[None, :]
+    corr = jnp.where(denom > 0.0, cov / jnp.where(denom > 0.0, denom, 1.0), 0.0)
+    eye = jnp.eye(m, dtype=bool)
+    return jnp.where(eye, 1.0, corr).astype(jnp.float32)
+
+
+def run_lengths(x: jnp.ndarray) -> jnp.ndarray:
+    """R[m, h] = consecutive available (X==0) hours starting at h."""
+    import numpy as np
+
+    xn = np.asarray(x)
+    m, h = xn.shape
+    runs = np.zeros((m, h), np.float32)
+    for mi in range(m):
+        nxt = 0.0
+        for hi in range(h - 1, -1, -1):
+            nxt = (1.0 - xn[mi, hi]) * (nxt + 1.0)
+            runs[mi, hi] = nxt
+    return jnp.asarray(runs)
+
+
+def survival_matrix(x: jnp.ndarray, t_buckets: int = 64) -> jnp.ndarray:
+    """S[m, t] = P(a uniformly-chosen available start survives ≥ t+1 h)."""
+    import numpy as np
+
+    runs = np.asarray(run_lengths(x))
+    m = runs.shape[0]
+    surv = np.zeros((m, t_buckets), np.float32)
+    for t in range(1, t_buckets + 1):
+        surv[:, t - 1] = (runs >= t).sum(axis=1)
+    denom = np.maximum(surv[:, 0], 1.0)
+    return jnp.asarray(surv / denom[:, None])
+
+
+def market_analytics(prices: jnp.ndarray, ondemand: jnp.ndarray):
+    """Full reference pipeline: (mttr, events, frac_above, corr)."""
+    x = indicator_matrix(prices, ondemand)
+    mttr, events, frac_above = row_stats(x)
+    corr = revocation_correlation(x)
+    return mttr, events, frac_above, corr

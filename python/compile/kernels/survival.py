@@ -1,0 +1,80 @@
+"""Pallas kernel: empirical instance-survival curves per market.
+
+Implements the duration-probability estimation of the paper's related
+work ([17], Wolski et al.: "probabilistic guarantees of execution
+duration for Amazon spot instances") as a Layer-1 kernel, consumed by
+the Rust `policy::predictive` baseline.
+
+Definition.  From the revocation-indicator matrix ``X[M, H]`` let
+``A = 1 - X`` (available hours) and ``R[m, h]`` be the number of
+consecutive available hours starting at ``h``:
+
+    R[m, h] = A[m, h] * (R[m, h+1] + 1)        (reverse scan, R[m, H] = 0)
+
+An instance provisioned at a uniformly random *available* hour survives
+at least ``t`` hours with probability
+
+    S[m, t] = #{h : R[m, h] >= t} / max(1, #{h : R[m, h] >= 1}).
+
+``S[m, 1] = 1`` by construction; a never-revoked market decays linearly
+(right-censoring at the window edge — mirrored exactly by the Rust
+native implementation, see market/analytics.rs).
+
+Kernel shape: one ``(bm, H)`` row band per grid step; the reverse scan
+runs on the VPU, the T survival thresholds (default 64) are unrolled as
+vector compare+reduce passes — no MXU needed, one HBM pass over X.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .indicators import INTERPRET, pick_block
+
+#: survival thresholds, hours 1..64 (covers 2x the longest Fig. 1 job)
+DEFAULT_T = 64
+
+
+def run_lengths(x: jnp.ndarray) -> jnp.ndarray:
+    """R[m, h] = consecutive available hours starting at h.
+
+    Formulated as a *log-depth associative scan* rather than a
+    sequential ``lax.scan``: with ``next_rev[h] = min_{k≥h, X[k]=1} k``
+    (reverse cummin over revoked indices), ``R[h] = next_rev[h] - h`` on
+    available hours.  The sequential scan lowered to an HLO while-loop
+    that executed in ~16 ms through PJRT at 64×2160; the cummin lowers to
+    ⌈log₂ H⌉ vectorized min steps (EXPERIMENTS.md §Perf, L1 iteration 2).
+    """
+    _, h = x.shape
+    idx = jnp.arange(h, dtype=jnp.float32)
+    rev_idx = jnp.where(x > 0.5, idx[None, :], jnp.float32(h))
+    next_rev = jax.lax.associative_scan(jnp.minimum, rev_idx, reverse=True, axis=1)
+    return jnp.where(x > 0.5, 0.0, next_rev - idx[None, :])
+
+
+def _survival_kernel(x_ref, s_ref, *, t_buckets: int):
+    x = x_ref[...]
+    runs = run_lengths(x)
+    cols = [jnp.sum((runs >= float(t)).astype(jnp.float32), axis=1)
+            for t in range(1, t_buckets + 1)]
+    surv = jnp.stack(cols, axis=1)  # (bm, T)
+    denom = jnp.maximum(surv[:, 0], 1.0)
+    s_ref[...] = surv / denom[:, None]
+
+
+def survival_matrix(x: jnp.ndarray, t_buckets: int = DEFAULT_T) -> jnp.ndarray:
+    """Pallas survival curves: X[M, H] → S[M, T] in f32."""
+    m, h = x.shape
+    bm = pick_block(m)
+    return pl.pallas_call(
+        functools.partial(_survival_kernel, t_buckets=t_buckets),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, h), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, t_buckets), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t_buckets), jnp.float32),
+        interpret=INTERPRET,
+    )(x)

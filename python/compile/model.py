@@ -1,0 +1,43 @@
+"""Layer-2 JAX model: the market-analytics compute graph.
+
+Composes the Layer-1 Pallas kernels into the single jitted function that
+``aot.py`` lowers to an HLO artifact.  The Rust coordinator calls this
+artifact once per *analytics epoch* (e.g. each simulated hour tick, or
+once per trace refresh) — never per provisioning decision — so all the
+per-market statistics P-SIWOFT consumes (MTTR, revocation counts,
+correlation) come out of one PJRT execution over the raw price traces.
+
+Signature (all f32):
+    market_analytics(prices[M, H], ondemand[M])
+        -> (mttr[M], events[M], frac_above[M], corr[M, M])
+
+Semantics are pinned by ``kernels/ref.py`` and mirrored bit-for-bit by
+``rust/src/market/analytics.rs``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import corr as corr_k
+from .kernels import indicators as ind_k
+
+
+def market_analytics(prices: jnp.ndarray, ondemand: jnp.ndarray):
+    """Full analytics pipeline over one price-trace window."""
+    x = ind_k.indicator_matrix(prices, ondemand)
+    mttr, events, frac_above = ind_k.row_stats(x)
+    c = corr_k.revocation_correlation(x)
+    return mttr, events, frac_above, c
+
+
+def survival_model(prices: jnp.ndarray, ondemand: jnp.ndarray):
+    """Survival-curve pipeline (second artifact): S[M, T=64].
+
+    Consumed by the Rust `policy::predictive` baseline — the
+    duration-probability approach of the paper's related work [17].
+    """
+    from .kernels import survival as surv_k
+
+    x = ind_k.indicator_matrix(prices, ondemand)
+    return (surv_k.survival_matrix(x, surv_k.DEFAULT_T),)

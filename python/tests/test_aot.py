@@ -1,0 +1,43 @@
+"""AOT lowering tests: HLO text round-trips and matches the manifest."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from compile import aot
+
+
+class TestLowering:
+    def test_hlo_text_smoke(self):
+        text = aot.lower_shape(4, 16)
+        assert "HloModule" in text
+        assert "f32[4,16]" in text       # prices input
+        assert "f32[4,4]" in text        # correlation output
+        assert len(text) > 1000
+
+    def test_parse_shapes(self):
+        assert aot.parse_shapes("64x2160,8x24") == [(64, 2160), (8, 24)]
+
+    def test_build_writes_manifest(self, tmp_path):
+        out = str(tmp_path)
+        aot.build(out, [(4, 16)])
+        with open(os.path.join(out, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["version"] == 1
+        by_name = {e["name"]: e for e in man["artifacts"]}
+        assert set(by_name) == {"market_analytics", "survival"}
+        ana = by_name["market_analytics"]
+        assert ana["markets"] == 4 and ana["hours"] == 16
+        assert ana["outputs"][3]["shape"] == [4, 4]
+        surv = by_name["survival"]
+        assert surv["outputs"][0]["shape"] == [4, 64]
+        for e in man["artifacts"]:
+            assert os.path.exists(os.path.join(out, e["file"]))
+
+    def test_build_is_incremental(self, tmp_path, capsys):
+        out = str(tmp_path)
+        aot.build(out, [(4, 16)])
+        capsys.readouterr()
+        aot.build(out, [(4, 16)])
+        assert "up-to-date" in capsys.readouterr().out

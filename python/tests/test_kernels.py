@@ -1,0 +1,175 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps market counts / window lengths / price regimes and
+asserts the Pallas kernels (interpret mode) match the pure-jnp oracle in
+``ref.py`` to f32 tolerance, plus structural invariants the Rust side
+relies on (symmetry, bounded correlations, MTTR ranges).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import corr as corr_k
+from compile.kernels import indicators as ind_k
+from compile.kernels import ref
+
+
+def make_traces(m, h, seed, spike_prob=0.15, ratio=0.3):
+    """Synthetic spot traces: baseline ratio·od with occasional spikes
+    above on-demand — the regime the indicator kernels must classify."""
+    rng = np.random.default_rng(seed)
+    od = rng.uniform(0.5, 5.0, size=m).astype(np.float32)
+    base = od * ratio
+    noise = rng.lognormal(mean=0.0, sigma=0.25, size=(m, h)).astype(np.float32)
+    spikes = (rng.random((m, h)) < spike_prob).astype(np.float32)
+    prices = base[:, None] * noise * (1.0 + spikes * rng.uniform(2.0, 6.0, size=(m, h)).astype(np.float32))
+    return prices.astype(np.float32), od
+
+
+shapes = st.tuples(st.integers(1, 24), st.integers(2, 96))
+
+
+class TestIndicatorMatrix:
+    @settings(max_examples=25, deadline=None)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        got = ind_k.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        want = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_values_binary(self):
+        prices, od = make_traces(8, 64, 7)
+        x = np.asarray(ind_k.indicator_matrix(jnp.asarray(prices), jnp.asarray(od)))
+        assert set(np.unique(x)).issubset({0.0, 1.0})
+
+    def test_all_below(self):
+        od = np.full(4, 10.0, np.float32)
+        prices = np.full((4, 16), 1.0, np.float32)
+        x = np.asarray(ind_k.indicator_matrix(jnp.asarray(prices), jnp.asarray(od)))
+        assert x.sum() == 0.0
+
+    def test_all_above(self):
+        od = np.full(4, 1.0, np.float32)
+        prices = np.full((4, 16), 10.0, np.float32)
+        x = np.asarray(ind_k.indicator_matrix(jnp.asarray(prices), jnp.asarray(od)))
+        assert x.sum() == 4 * 16
+
+    def test_boundary_equal_price_not_revoked(self):
+        # strict inequality: price == on-demand is NOT a revocation
+        od = np.full(2, 3.0, np.float32)
+        prices = np.full((2, 8), 3.0, np.float32)
+        x = np.asarray(ind_k.indicator_matrix(jnp.asarray(prices), jnp.asarray(od)))
+        assert x.sum() == 0.0
+
+
+class TestRowStats:
+    @settings(max_examples=25, deadline=None)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        got = ind_k.row_stats(x)
+        want = ref.row_stats(x)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_mttr_bounds(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        mttr, events, frac = ind_k.row_stats(x)
+        mttr, events, frac = map(np.asarray, (mttr, events, frac))
+        assert (mttr >= 0).all() and (mttr <= h).all()
+        assert (events >= 0).all() and (events <= (h + 1) // 2 + 1).all()
+        assert (frac >= 0).all() and (frac <= 1).all()
+
+    def test_never_revoked_gets_full_window(self):
+        x = jnp.zeros((3, 48), jnp.float32)
+        mttr, events, frac = map(np.asarray, ind_k.row_stats(x))
+        assert (mttr == 48.0).all() and (events == 0).all() and (frac == 0).all()
+
+    def test_always_revoked(self):
+        x = jnp.ones((2, 48), jnp.float32)
+        mttr, events, frac = map(np.asarray, ind_k.row_stats(x))
+        # one event (the initial transition), zero available hours
+        assert (events == 1.0).all() and (mttr == 0.0).all() and (frac == 1.0).all()
+
+    def test_alternating_pattern(self):
+        # 0,1,0,1,... over 8 hours: 4 events, 4 available hours → mttr 1
+        x = jnp.asarray(np.tile([0.0, 1.0], 4)[None, :].astype(np.float32))
+        mttr, events, frac = map(np.asarray, ind_k.row_stats(x))
+        assert events[0] == 4.0 and mttr[0] == 1.0 and frac[0] == 0.5
+
+    def test_single_event_run(self):
+        # 0,0,1,1,1,0,0,0: one event, 5 available hours → mttr 5
+        x = jnp.asarray(np.array([[0, 0, 1, 1, 1, 0, 0, 0]], np.float32))
+        mttr, events, frac = map(np.asarray, ind_k.row_stats(x))
+        assert events[0] == 1.0 and mttr[0] == 5.0
+
+
+class TestCorrelation:
+    @settings(max_examples=20, deadline=None)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        got = np.asarray(corr_k.revocation_correlation(x))
+        want = np.asarray(ref.revocation_correlation(x))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_structural_invariants(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        c = np.asarray(corr_k.revocation_correlation(x))
+        np.testing.assert_allclose(c, c.T, atol=1e-6)          # symmetric
+        np.testing.assert_allclose(np.diag(c), 1.0, atol=1e-6)  # unit diag
+        assert (c <= 1.0 + 1e-5).all() and (c >= -1.0 - 1e-5).all()
+
+    def test_identical_rows_fully_correlated(self):
+        row = np.array([0, 1, 1, 0, 1, 0, 0, 1], np.float32)
+        x = jnp.asarray(np.stack([row, row]))
+        c = np.asarray(corr_k.revocation_correlation(x))
+        np.testing.assert_allclose(c, 1.0, atol=1e-6)
+
+    def test_anti_correlated_rows(self):
+        row = np.array([0, 1, 1, 0, 1, 0, 0, 1], np.float32)
+        x = jnp.asarray(np.stack([row, 1.0 - row]))
+        c = np.asarray(corr_k.revocation_correlation(x))
+        np.testing.assert_allclose(c[0, 1], -1.0, atol=1e-6)
+
+    def test_zero_variance_rows_uncorrelated(self):
+        x = jnp.asarray(np.array([[0, 0, 0, 0], [0, 1, 0, 1]], np.float32))
+        c = np.asarray(corr_k.revocation_correlation(x))
+        assert c[0, 1] == 0.0 and c[1, 0] == 0.0
+        assert c[0, 0] == 1.0 and c[1, 1] == 1.0  # diagonal pinned even at σ=0
+
+    def test_block_tiling_consistency(self):
+        # M=128 exercises the multi-tile grid path (bm=128 → here 1 tile of
+        # 128; M=8 with forced small blocks compared against full ref).
+        prices, od = make_traces(16, 64, 123)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        got = np.asarray(corr_k.revocation_correlation(x))
+        want = np.asarray(ref.revocation_correlation(x))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+class TestPickBlock:
+    @pytest.mark.parametrize("m,expect", [(256, 128), (128, 128), (64, 64),
+                                          (96, 32), (7, 7), (1, 1), (24, 8)])
+    def test_divides(self, m, expect):
+        b = ind_k.pick_block(m)
+        assert b == expect and m % b == 0

@@ -1,0 +1,51 @@
+"""Layer-2 model tests: full pipeline vs oracle, shapes, determinism."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernels import make_traces
+
+
+class TestMarketAnalytics:
+    @settings(max_examples=15, deadline=None)
+    @given(st.tuples(st.integers(1, 16), st.integers(2, 64)),
+           st.integers(0, 2**31 - 1))
+    def test_matches_ref_pipeline(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        got = model.market_analytics(jnp.asarray(prices), jnp.asarray(od))
+        want = ref.market_analytics(jnp.asarray(prices), jnp.asarray(od))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_output_shapes(self):
+        prices, od = make_traces(8, 24, 0)
+        mttr, events, frac, corr = model.market_analytics(
+            jnp.asarray(prices), jnp.asarray(od))
+        assert mttr.shape == (8,) and events.shape == (8,)
+        assert frac.shape == (8,) and corr.shape == (8, 8)
+        for t in (mttr, events, frac, corr):
+            assert t.dtype == jnp.float32
+
+    def test_jit_deterministic(self):
+        prices, od = make_traces(8, 24, 42)
+        f = jax.jit(model.market_analytics)
+        a = f(jnp.asarray(prices), jnp.asarray(od))
+        b = f(jnp.asarray(prices), jnp.asarray(od))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_jit_matches_eager(self):
+        prices, od = make_traces(4, 32, 9)
+        eager = model.market_analytics(jnp.asarray(prices), jnp.asarray(od))
+        jitted = jax.jit(model.market_analytics)(jnp.asarray(prices), jnp.asarray(od))
+        for x, y in zip(eager, jitted):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)

@@ -1,0 +1,79 @@
+"""Survival-kernel correctness: Pallas vs the (loop-based) oracle."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import survival as surv_k
+from tests.test_kernels import make_traces
+
+
+class TestRunLengths:
+    def test_hand_example(self):
+        # X:   0 0 1 0 1 1 0 0   (1 = revoked hour)
+        # R:   2 1 0 1 0 0 2 1
+        x = jnp.asarray(np.array([[0, 0, 1, 0, 1, 1, 0, 0]], np.float32))
+        got = np.asarray(surv_k.run_lengths(x))
+        np.testing.assert_array_equal(got, [[2, 1, 0, 1, 0, 0, 2, 1]])
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.tuples(st.integers(1, 12), st.integers(2, 64)), st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        got = np.asarray(surv_k.run_lengths(x))
+        want = np.asarray(ref.run_lengths(x))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestSurvivalMatrix:
+    @settings(max_examples=20, deadline=None)
+    @given(st.tuples(st.integers(1, 10), st.integers(4, 64)), st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        got = np.asarray(surv_k.survival_matrix(x, 16))
+        want = np.asarray(ref.survival_matrix(x, 16))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.tuples(st.integers(1, 10), st.integers(4, 48)), st.integers(0, 2**31 - 1))
+    def test_monotone_nonincreasing_in_t(self, shape, seed):
+        m, h = shape
+        prices, od = make_traces(m, h, seed)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        s = np.asarray(surv_k.survival_matrix(x, 16))
+        assert (np.diff(s, axis=1) <= 1e-6).all(), "survival must not increase with t"
+        assert (s >= -1e-6).all() and (s <= 1 + 1e-6).all()
+
+    def test_always_available_is_censored_linear(self):
+        x = jnp.zeros((1, 32), jnp.float32)
+        s = np.asarray(surv_k.survival_matrix(x, 8))
+        # runs = 32,31,...,1 → survivors(t) = 32-t+1; S(t) = (33-t)/32
+        want = np.array([(33 - t) / 32 for t in range(1, 9)], np.float32)
+        np.testing.assert_allclose(s[0], want, rtol=1e-6)
+
+    def test_always_revoked_is_zero(self):
+        x = jnp.ones((2, 16), jnp.float32)
+        s = np.asarray(surv_k.survival_matrix(x, 8))
+        assert (s == 0).all()
+
+    def test_s1_is_one_when_any_available(self):
+        prices, od = make_traces(6, 48, 3)
+        x = ref.indicator_matrix(jnp.asarray(prices), jnp.asarray(od))
+        s = np.asarray(surv_k.survival_matrix(x, 8))
+        avail = np.asarray(x).sum(axis=1) < 48
+        np.testing.assert_allclose(s[avail, 0], 1.0, rtol=1e-6)
+
+    def test_volatile_decays_faster_than_stable(self):
+        stable = np.zeros(64, np.float32)
+        volatile = np.tile([0, 0, 0, 1], 16).astype(np.float32)
+        x = jnp.asarray(np.stack([stable, volatile]))
+        s = np.asarray(surv_k.survival_matrix(x, 8))
+        assert s[0, 5] > s[1, 5]

@@ -1,0 +1,73 @@
+//! Bench: the analytics hot path — native vs PJRT artifact, scaling in
+//! market count.  These are the §Perf numbers for L1/L2.
+//!
+//! Note the correlation matrix is O(M²·H): at M=256, H=2160 that is
+//! ~140 MFLOP-pairs per epoch — the one dense-compute spot in the whole
+//! system, and exactly what the Pallas kernel targets.
+//!
+//!     cargo bench --bench analytics
+
+use siwoft::market::{Catalog, MarketAnalytics, TraceGenConfig};
+use siwoft::runtime::AnalyticsEngine;
+use siwoft::util::benchkit::{Bench, Suite};
+
+fn main() {
+    let bench = Bench::with_times(300, 1500);
+    let mut suite = Suite::new("analytics epoch: native vs PJRT artifact");
+    suite.header();
+
+    for &(m, hours, months) in &[(64usize, 2160usize, 3.0f64), (192, 2160, 3.0), (256, 2160, 3.0)] {
+        let catalog = Catalog::with_limit(m);
+        let cfg = TraceGenConfig { months, seed: 42, ..Default::default() };
+        let trace = siwoft::market::generate_traces(&catalog, &cfg);
+        assert_eq!(trace.hours, hours);
+        let od = catalog.od_prices();
+        suite.push(bench.run_with_units(
+            &format!("native  market_analytics {m}x{hours}"),
+            (m * m * hours) as f64,
+            || MarketAnalytics::compute(&trace, &od).corr.len(),
+        ));
+    }
+
+    // survival curves (the second artifact's native mirror)
+    {
+        use siwoft::market::analytics::SurvivalCurves;
+        let catalog = Catalog::with_limit(192);
+        let cfg = TraceGenConfig { months: 3.0, seed: 42, ..Default::default() };
+        let trace = siwoft::market::generate_traces(&catalog, &cfg);
+        let od = catalog.od_prices();
+        suite.push(bench.run_with_units(
+            "native  survival 192x2160 (T=64)",
+            (192 * 2160) as f64,
+            || SurvivalCurves::compute(&trace, &od, 64).s.len(),
+        ));
+    }
+
+    match AnalyticsEngine::pjrt("artifacts") {
+        Ok(engine) => {
+            for &m in &[64usize, 256] {
+                let catalog = Catalog::with_limit(m);
+                let cfg = TraceGenConfig { months: 3.0, seed: 42, ..Default::default() };
+                let trace = siwoft::market::generate_traces(&catalog, &cfg);
+                let od = catalog.od_prices();
+                assert!(engine.has_artifact_for(m, 2160));
+                // warm the executable cache (compile once)
+                engine.compute(&trace, &od).unwrap();
+                suite.push(bench.run_with_units(
+                    &format!("pjrt    market_analytics {m}x2160"),
+                    (m * m * 2160) as f64,
+                    || engine.compute(&trace, &od).unwrap().corr.len(),
+                ));
+                engine.compute_survival(&trace, &od).unwrap();
+                suite.push(bench.run_with_units(
+                    &format!("pjrt    survival {m}x2160 (T=64)"),
+                    (m * 2160) as f64,
+                    || engine.compute_survival(&trace, &od).unwrap().s.len(),
+                ));
+            }
+        }
+        Err(e) => eprintln!("skipping PJRT benches (run `make artifacts`): {e:#}"),
+    }
+
+    siwoft::util::csvio::write_file("results/bench_analytics.csv", &suite.to_csv()).ok();
+}

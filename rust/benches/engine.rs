@@ -1,0 +1,83 @@
+//! Bench: L3 substrate performance — event-engine throughput, thread-
+//! pool fan-out, trace generation, RNG.  These are the §Perf numbers for
+//! the coordinator layer.
+//!
+//!     cargo bench --bench engine
+
+use siwoft::coordinator::Pool;
+use siwoft::market::{Catalog, TraceGenConfig};
+use siwoft::sim::{Engine, Event};
+use siwoft::util::benchkit::{Bench, Suite};
+use siwoft::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::with_times(300, 1200);
+    let mut suite = Suite::new("L3 substrate performance");
+    suite.header();
+
+    // event queue: schedule + drain N events
+    const N: usize = 100_000;
+    suite.push(bench.run_with_units(&format!("engine: schedule+drain {N} events"), N as f64, || {
+        let mut e = Engine::new();
+        let mut r = Rng::new(7);
+        for i in 0..N {
+            e.schedule_at(r.f64() * 1000.0, Event::Timer { tag: i as u64 });
+        }
+        let mut count = 0u64;
+        e.run(|_, _, _| count += 1);
+        count
+    }));
+
+    // interleaved schedule/pop (the simulator's actual pattern)
+    suite.push(bench.run_with_units("engine: interleaved 50k chain", 50_000.0, || {
+        let mut e = Engine::new();
+        e.schedule_at(0.0, Event::Timer { tag: 0 });
+        let mut n = 0u64;
+        e.run(|eng, _, ev| {
+            if let Event::Timer { tag } = ev {
+                n += 1;
+                if tag < 49_999 {
+                    eng.schedule_in(0.01, Event::Timer { tag: tag + 1 });
+                }
+            }
+        });
+        n
+    }));
+
+    // thread pool fan-out over cpu-bound items
+    let pool = Pool::new(0);
+    suite.push(bench.run_with_units(
+        &format!("pool: map 256 items x 100us ({} workers)", pool.workers()),
+        256.0,
+        || {
+            pool.map((0..256u64).collect(), |_, x| {
+                let mut s = x;
+                for i in 0..25_000u64 {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(i);
+                }
+                s
+            })
+        },
+    ));
+
+    // trace generation (world construction cost)
+    let catalog = Catalog::with_limit(192);
+    let cfg = TraceGenConfig { months: 3.0, seed: 1, ..Default::default() };
+    suite.push(bench.run_with_units(
+        "tracegen: 192 markets x 2160h",
+        (192 * 2160) as f64,
+        || siwoft::market::generate_traces(&catalog, &cfg).prices.len(),
+    ));
+
+    // rng throughput
+    let mut r = Rng::new(3);
+    suite.push(bench.run_with_units("rng: normal() x 1000", 1000.0, || {
+        let mut s = 0.0;
+        for _ in 0..1000 {
+            s += r.normal();
+        }
+        s
+    }));
+
+    siwoft::util::csvio::write_file("results/bench_engine.csv", &suite.to_csv()).ok();
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerates the completion-time panels of Fig. 1 (1a/1b/1c)
+//! and measures the end-to-end cost of producing each bar.
+//!
+//!     cargo bench --bench fig1_completion
+
+use siwoft::experiments::fig1::{Fig1Options, Fig1Runner, Sweep};
+use siwoft::util::benchkit::{Bench, Suite};
+
+fn main() {
+    let opts = Fig1Options {
+        markets: 192,
+        months: 3.0,
+        world_seed: 2020,
+        seeds: 10,
+        ft_rate_per_day: 3.0,
+        train_frac: 0.67,
+        workers: 0,
+    };
+    let runner = Fig1Runner::prepare(opts);
+
+    // the data itself (the reproduction)
+    for (sweep, id) in [(Sweep::Length, 'a'), (Sweep::Memory, 'b'), (Sweep::Revocations, 'c')] {
+        let rows = runner.sweep(sweep);
+        let panel = runner.panel(&rows, id, false);
+        println!("{}", panel.render(46));
+    }
+
+    // the harness cost (how long one full panel takes to regenerate)
+    let bench = Bench::with_times(200, 1500);
+    let mut suite = Suite::new("fig1 completion-time panels (end-to-end regeneration)");
+    suite.header();
+    suite.push(bench.run_with_units("panel 1a (5 lens x 3 arms x 10 seeds)", 150.0, || {
+        runner.sweep(Sweep::Length).len()
+    }));
+    suite.push(bench.run_with_units("panel 1b (5 mems x 3 arms x 10 seeds)", 150.0, || {
+        runner.sweep(Sweep::Memory).len()
+    }));
+    suite.push(bench.run_with_units("panel 1c (5 revs x 3 arms x 10 seeds)", 150.0, || {
+        runner.sweep(Sweep::Revocations).len()
+    }));
+    siwoft::util::csvio::write_file("results/bench_fig1_completion.csv", &suite.to_csv()).ok();
+}

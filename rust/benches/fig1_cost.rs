@@ -1,0 +1,71 @@
+//! Bench: regenerates the deployment-cost panels of Fig. 1 (1d/1e/1f)
+//! and measures single-job simulation latency per arm (the unit of work
+//! every panel bar multiplies).
+//!
+//!     cargo bench --bench fig1_cost
+
+use siwoft::experiments::fig1::{Fig1Options, Fig1Runner, Sweep};
+use siwoft::prelude::*;
+use siwoft::util::benchkit::{Bench, Suite};
+
+fn main() {
+    let opts = Fig1Options {
+        markets: 192,
+        months: 3.0,
+        world_seed: 2020,
+        seeds: 10,
+        ft_rate_per_day: 3.0,
+        train_frac: 0.67,
+        workers: 0,
+    };
+    let runner = Fig1Runner::prepare(opts);
+
+    for (sweep, id) in [(Sweep::Length, 'd'), (Sweep::Memory, 'e'), (Sweep::Revocations, 'f')] {
+        let rows = runner.sweep(sweep);
+        let panel = runner.panel(&rows, id, true);
+        println!("{}", panel.render(46));
+    }
+
+    // per-run latency of the session simulator, per arm
+    let world = &runner.world;
+    let start = runner.sim_start;
+    let job = Job::new(1, 8.0, 16.0);
+    let bench = Bench::with_times(200, 1200);
+    let mut suite = Suite::new("single-run simulation latency (8h/16GB job)");
+    suite.header();
+
+    let mut seed = 0u64;
+    suite.push(bench.run("P: p-siwoft + no-ft (trace)", || {
+        seed += 1;
+        let mut p = PSiwoft::default();
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        simulate_job(world, &mut p, &NoFt, &job, &cfg, seed)
+    }));
+    suite.push(bench.run("F: ft-spot + hourly ckpt (rate 3/day)", || {
+        seed += 1;
+        let mut p = FtSpotPolicy::new();
+        let cfg = RunConfig {
+            rule: RevocationRule::ForcedRate { per_day: 3.0 },
+            start_t: start,
+            ..Default::default()
+        };
+        simulate_job(world, &mut p, &Checkpointing::hourly(8.0), &job, &cfg, seed)
+    }));
+    suite.push(bench.run("O: on-demand", || {
+        seed += 1;
+        let mut p = OnDemandPolicy;
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        simulate_job(world, &mut p, &NoFt, &job, &cfg, seed)
+    }));
+    suite.push(bench.run("R: ft-spot + 3-replica (rate 3/day)", || {
+        seed += 1;
+        let mut p = FtSpotPolicy::new();
+        let cfg = RunConfig {
+            rule: RevocationRule::ForcedRate { per_day: 3.0 },
+            start_t: start,
+            ..Default::default()
+        };
+        simulate_job(world, &mut p, &Replication::new(3), &job, &cfg, seed)
+    }));
+    siwoft::util::csvio::write_file("results/bench_fig1_cost.csv", &suite.to_csv()).ok();
+}

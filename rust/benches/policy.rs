@@ -1,0 +1,60 @@
+//! Bench: policy decision latency — the per-request cost on the
+//! coordinator's hot path.  P-SIWOFT decisions must stay microseconds:
+//! the analytics epoch is amortized, so `select` is a sort + scan.
+//!
+//!     cargo bench --bench policy
+
+use siwoft::policy::Ctx;
+use siwoft::prelude::*;
+use siwoft::util::benchkit::{Bench, Suite};
+
+fn main() {
+    let mut world = World::generate(192, 3.0, 11);
+    let start = world.split_train(0.67);
+    let job = Job::new(1, 8.0, 16.0);
+    let bench = Bench::with_times(300, 1200);
+    let mut suite = Suite::new("policy decision latency (192-market world)");
+    suite.header();
+
+    suite.push(bench.run("p-siwoft: cold select (init + sort + pick)", || {
+        let mut p = PSiwoft::default();
+        p.select(&job, &Ctx { world: &world, now: start }).market()
+    }));
+
+    let mut warm = PSiwoft::default();
+    let _ = warm.select(&job, &Ctx { world: &world, now: start });
+    suite.push(bench.run("p-siwoft: warm select (candidate set cached)", || {
+        warm.select(&job, &Ctx { world: &world, now: start }).market()
+    }));
+
+    suite.push(bench.run("p-siwoft: on_revocation (corr filter)", || {
+        let mut p = PSiwoft::default();
+        let ctx = Ctx { world: &world, now: start };
+        let m = p.select(&job, &ctx).market();
+        p.on_revocation(&job, m, &ctx);
+    }));
+
+    suite.push(bench.run("ft-spot: select (24h mean-price scan)", || {
+        let mut p = FtSpotPolicy::new();
+        p.select(&job, &Ctx { world: &world, now: start }).market()
+    }));
+
+    suite.push(bench.run("greedy: select (spot-price scan)", || {
+        let mut p = GreedyCheapest::new();
+        p.select(&job, &Ctx { world: &world, now: start }).market()
+    }));
+
+    suite.push(bench.run("on-demand: select", || {
+        let mut p = OnDemandPolicy;
+        p.select(&job, &Ctx { world: &world, now: start }).market()
+    }));
+
+    // full session simulation (what one control-plane `submit` costs)
+    suite.push(bench.run("end-to-end submit: P trace-driven 8h job", || {
+        let mut p = PSiwoft::default();
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        simulate_job(&world, &mut p, &NoFt, &job, &cfg, 1)
+    }));
+
+    siwoft::util::csvio::write_file("results/bench_policy.csv", &suite.to_csv()).ok();
+}

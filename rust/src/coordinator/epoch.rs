@@ -1,0 +1,247 @@
+//! Rolling-epoch cluster simulation: the coordinator's long-horizon
+//! operating mode.
+//!
+//! The Fig. 1 harness computes analytics once on a training prefix.  In
+//! production the leader instead *rolls* the window: every
+//! `refresh_every_h` simulated hours an [`Event::AnalyticsEpoch`] fires
+//! and the market statistics are recomputed over the trailing
+//! `window_h` hours, so provisioning adapts as markets drift.  Jobs
+//! arrive as a Poisson stream ([`Event::JobArrival`]) and are simulated
+//! against the *current* analytics snapshot.
+//!
+//! This module is driven by the discrete-event [`Engine`] — arrivals and
+//! epochs interleave on one clock — and exercises the full
+//! leader-side loop: epoch → decide → simulate → account.
+
+use crate::job::Job;
+use crate::market::MarketAnalytics;
+use crate::policy::Policy;
+use crate::sim::engine::{Engine, Event};
+use crate::sim::{simulate_job, JobResult, RevocationRule, RunConfig, World};
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Poisson job arrival rate (jobs per simulated hour)
+    pub arrival_rate_per_h: f64,
+    /// simulated horizon (hours); must leave room inside the trace
+    pub horizon_h: f64,
+    /// analytics refresh cadence (hours)
+    pub refresh_every_h: f64,
+    /// trailing analytics window (hours)
+    pub window_h: f64,
+    /// first hour jobs may arrive (needs `window_h` of history)
+    pub start_h: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            arrival_rate_per_h: 0.5,
+            horizon_h: 240.0,
+            refresh_every_h: 24.0,
+            window_h: 720.0,
+            start_h: 720.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Aggregate report of a cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterReport {
+    pub jobs: usize,
+    pub completed: usize,
+    pub epochs: u64,
+    pub total_cost: f64,
+    pub completion: Welford,
+    pub revocations: u64,
+    pub results: Vec<JobResult>,
+}
+
+/// Run the rolling-epoch cluster simulation for one policy factory.
+///
+/// `make_policy` builds a fresh per-job policy (policies are per-job
+/// stateful); `analytics_for` recomputes the statistics for a trailing
+/// window — in production this is the PJRT engine, in tests the native
+/// mirror.
+pub fn run_cluster(
+    world: &mut World,
+    cfg: &ClusterConfig,
+    mut make_policy: impl FnMut() -> Box<dyn Policy>,
+    mut analytics_for: impl FnMut(&World, usize, usize) -> MarketAnalytics,
+    mut sample_job: impl FnMut(&mut Rng, u64) -> Job,
+) -> ClusterReport {
+    assert!(cfg.start_h >= cfg.window_h, "need window_h of history before start");
+    let trace_end = world.trace.duration();
+    assert!(
+        cfg.start_h + cfg.horizon_h <= trace_end,
+        "horizon exceeds trace ({} + {} > {trace_end})",
+        cfg.start_h,
+        cfg.horizon_h
+    );
+
+    let mut rng = Rng::with_stream(cfg.seed, 0xC1057E2);
+    let mut engine = Engine::new();
+    let mut report = ClusterReport::default();
+    let end = cfg.start_h + cfg.horizon_h;
+
+    // initial epoch + schedule
+    engine.schedule_at(cfg.start_h, Event::AnalyticsEpoch { epoch: 0 });
+    engine.schedule_at(cfg.start_h + rng.exp(cfg.arrival_rate_per_h), Event::JobArrival {
+        job_id: 1,
+    });
+
+    let mut next_job_id = 1u64;
+    while let Some((t, event)) = engine.next() {
+        if t > end {
+            break;
+        }
+        match event {
+            Event::AnalyticsEpoch { epoch } => {
+                let h1 = t.min(trace_end) as usize;
+                let h0 = h1.saturating_sub(cfg.window_h as usize);
+                world.analytics = analytics_for(world, h0, h1);
+                report.epochs += 1;
+                if t + cfg.refresh_every_h <= end {
+                    engine
+                        .schedule_in(cfg.refresh_every_h, Event::AnalyticsEpoch { epoch: epoch + 1 });
+                }
+            }
+            Event::JobArrival { job_id } => {
+                let job = sample_job(&mut rng, job_id);
+                let mut policy = make_policy();
+                let run_cfg = RunConfig {
+                    rule: RevocationRule::Trace,
+                    start_t: t,
+                    ..Default::default()
+                };
+                let ft = crate::ft::NoFt;
+                let r = simulate_job(world, policy.as_mut(), &ft, &job, &run_cfg, cfg.seed ^ job_id);
+                report.jobs += 1;
+                report.completed += r.completed as usize;
+                report.total_cost += r.cost_usd();
+                report.completion.add(r.completion_h());
+                report.revocations += r.revocations as u64;
+                report.results.push(r);
+                // next arrival
+                next_job_id += 1;
+                let dt = rng.exp(cfg.arrival_rate_per_h);
+                if t + dt <= end {
+                    engine.schedule_in(dt, Event::JobArrival { job_id: next_job_id });
+                }
+            }
+            _ => {}
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PSiwoft;
+
+    fn native_refresh(world: &World, h0: usize, h1: usize) -> MarketAnalytics {
+        let win = world.trace.window(h0, h1.max(h0 + 2));
+        MarketAnalytics::compute(&win, &world.od)
+    }
+
+    fn small_job(rng: &mut Rng, id: u64) -> Job {
+        let len = 1.0 + rng.f64() * 6.0;
+        Job::new(id, len, 16.0)
+    }
+
+    #[test]
+    fn cluster_run_processes_arrivals_and_epochs() {
+        let mut world = World::generate(64, 3.0, 616);
+        let cfg = ClusterConfig {
+            arrival_rate_per_h: 1.0,
+            horizon_h: 120.0,
+            refresh_every_h: 24.0,
+            window_h: 720.0,
+            start_h: 720.0,
+            seed: 3,
+        };
+        let report = run_cluster(
+            &mut world,
+            &cfg,
+            || Box::new(PSiwoft::default()),
+            native_refresh,
+            small_job,
+        );
+        // ~120 arrivals expected; allow wide slack
+        assert!(report.jobs > 60, "only {} jobs", report.jobs);
+        assert_eq!(report.completed, report.jobs, "some jobs failed");
+        assert!(report.epochs >= 5, "epochs {}", report.epochs);
+        assert!(report.total_cost > 0.0);
+        assert!(report.completion.mean() >= 1.0);
+    }
+
+    #[test]
+    fn cluster_deterministic_per_seed() {
+        let run = |seed| {
+            let mut world = World::generate(48, 2.0, 717);
+            let cfg = ClusterConfig {
+                arrival_rate_per_h: 0.5,
+                horizon_h: 72.0,
+                refresh_every_h: 24.0,
+                window_h: 600.0,
+                start_h: 600.0,
+                seed,
+            };
+            run_cluster(
+                &mut world,
+                &cfg,
+                || Box::new(PSiwoft::default()),
+                native_refresh,
+                small_job,
+            )
+        };
+        let a = run(5);
+        let b = run(5);
+        assert_eq!(a.jobs, b.jobs);
+        assert_eq!(a.total_cost, b.total_cost);
+        let c = run(6);
+        assert!(a.jobs != c.jobs || (a.total_cost - c.total_cost).abs() > 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "horizon exceeds trace")]
+    fn rejects_horizon_past_trace() {
+        let mut world = World::generate(24, 1.0, 1);
+        let cfg = ClusterConfig { start_h: 600.0, horizon_h: 600.0, window_h: 600.0, ..Default::default() };
+        run_cluster(
+            &mut world,
+            &cfg,
+            || Box::new(PSiwoft::default()),
+            native_refresh,
+            small_job,
+        );
+    }
+
+    #[test]
+    fn rolling_window_changes_analytics() {
+        let mut world = World::generate(48, 3.0, 818);
+        let initial = world.analytics.mttr.clone();
+        let cfg = ClusterConfig {
+            arrival_rate_per_h: 0.2,
+            horizon_h: 96.0,
+            refresh_every_h: 48.0,
+            window_h: 480.0,
+            start_h: 720.0,
+            seed: 9,
+        };
+        let _ = run_cluster(
+            &mut world,
+            &cfg,
+            || Box::new(PSiwoft::default()),
+            native_refresh,
+            small_job,
+        );
+        assert_ne!(world.analytics.mttr, initial, "analytics never refreshed");
+        assert_eq!(world.analytics.window_hours, 480);
+    }
+}

@@ -1,0 +1,280 @@
+//! The leader: owns the world, refreshes analytics through the PJRT
+//! engine once per epoch, and fans simulation work out over the thread
+//! pool.  This is the Layer-3 "request path": job batches come in,
+//! provisioning decisions and categorized results come out — no Python
+//! anywhere.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::pool::Pool;
+use crate::ft::{Checkpointing, FtMechanism, Migration, NoFt, Replication};
+use crate::job::Job;
+use crate::policy::{FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy};
+use crate::runtime::AnalyticsEngine;
+use crate::sim::{simulate_job, AggregateResult, JobResult, RunConfig, World};
+
+/// Declarative policy selection (so configs/CLI/benches can name them).
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[allow(clippy::derive_partial_eq_without_eq)]
+pub enum PolicyKind {
+    PSiwoft(PSiwoftConfig),
+    FtSpot,
+    OnDemand,
+    Greedy,
+}
+
+impl PolicyKind {
+    pub fn make(&self) -> Box<dyn Policy> {
+        match *self {
+            PolicyKind::PSiwoft(cfg) => Box::new(PSiwoft::new(cfg)),
+            PolicyKind::FtSpot => Box::new(FtSpotPolicy::new()),
+            PolicyKind::OnDemand => Box::new(OnDemandPolicy),
+            PolicyKind::Greedy => Box::new(GreedyCheapest::new()),
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<PolicyKind> {
+        match name {
+            "p-siwoft" | "psiwoft" | "p" => Some(PolicyKind::PSiwoft(PSiwoftConfig::default())),
+            "ft-spot" | "ft" | "f" => Some(PolicyKind::FtSpot),
+            "on-demand" | "ondemand" | "o" => Some(PolicyKind::OnDemand),
+            "greedy" | "g" => Some(PolicyKind::Greedy),
+            _ => None,
+        }
+    }
+}
+
+/// Declarative FT-mechanism selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FtKind {
+    None,
+    Checkpoint { n: u32 },
+    /// SpotOn-style hourly checkpoints scaled to the job length
+    CheckpointHourly,
+    Migration,
+    Replication { k: u32 },
+}
+
+impl FtKind {
+    pub fn make(&self, job: &Job) -> Box<dyn FtMechanism> {
+        match *self {
+            FtKind::None => Box::new(NoFt),
+            FtKind::Checkpoint { n } => Box::new(Checkpointing::new(n)),
+            FtKind::CheckpointHourly => Box::new(Checkpointing::hourly(job.exec_len_h)),
+            FtKind::Migration => Box::new(Migration),
+            FtKind::Replication { k } => Box::new(Replication::new(k)),
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<FtKind> {
+        match name {
+            "none" => Some(FtKind::None),
+            "checkpoint" | "ckpt" => Some(FtKind::CheckpointHourly),
+            "migration" | "migrate" => Some(FtKind::Migration),
+            "replication" | "repl" => Some(FtKind::Replication { k: 2 }),
+            _ => {
+                if let Some(n) = name.strip_prefix("ckpt:") {
+                    n.parse().ok().map(|n| FtKind::Checkpoint { n })
+                } else if let Some(k) = name.strip_prefix("repl:") {
+                    k.parse().ok().map(|k| FtKind::Replication { k })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// One experiment arm: a named (policy, ft) pairing.
+#[derive(Clone, Copy, Debug)]
+pub struct Arm {
+    pub label: &'static str,
+    pub policy: PolicyKind,
+    pub ft: FtKind,
+}
+
+/// The paper's three Fig. 1 arms: P, F, O.
+pub fn paper_arms() -> Vec<Arm> {
+    vec![
+        Arm {
+            label: "P",
+            policy: PolicyKind::PSiwoft(PSiwoftConfig::default()),
+            ft: FtKind::None,
+        },
+        Arm { label: "F", policy: PolicyKind::FtSpot, ft: FtKind::CheckpointHourly },
+        Arm { label: "O", policy: PolicyKind::OnDemand, ft: FtKind::None },
+    ]
+}
+
+/// The leader/coordinator.
+///
+/// NOTE: the PJRT [`AnalyticsEngine`] is deliberately *not* a field —
+/// xla handles are `Rc`-based and must stay on the leader thread.  The
+/// engine runs one analytics epoch up front (and on demand via
+/// [`Coordinator::refresh_analytics`]); workers only read the resulting
+/// [`World`], keeping the coordinator `Send + Sync` for the pool and the
+/// TCP control plane.
+pub struct Coordinator {
+    pub world: World,
+    pub pool: Pool,
+    pub metrics: Arc<Metrics>,
+    backend: &'static str,
+}
+
+impl Coordinator {
+    pub fn new(world: World, engine: AnalyticsEngine, workers: usize) -> Coordinator {
+        let mut c = Coordinator {
+            world,
+            pool: Pool::new(workers),
+            metrics: Arc::new(Metrics::new()),
+            backend: engine.backend_name(),
+        };
+        if let Err(e) = c.refresh_analytics(&engine) {
+            crate::log_warn!("initial analytics epoch failed ({e:#}); keeping native stats");
+        }
+        c
+    }
+
+    /// Build a coordinator around a world whose analytics were already
+    /// computed by the caller (e.g. over a training window).
+    pub fn new_without_epoch(world: World) -> Coordinator {
+        Coordinator {
+            world,
+            pool: Pool::new(0),
+            metrics: Arc::new(Metrics::new()),
+            backend: "preset",
+        }
+    }
+
+    /// Recompute the market analytics for the current trace (one
+    /// analytics epoch).  Uses the PJRT artifact when the shape matches.
+    pub fn refresh_analytics(&mut self, engine: &AnalyticsEngine) -> Result<()> {
+        let t0 = Instant::now();
+        let a = engine.compute(&self.world.trace, &self.world.od)?;
+        self.world.analytics = a;
+        self.backend = engine.backend_name();
+        Metrics::inc(&self.metrics.analytics_epochs);
+        crate::log_info!(
+            "analytics epoch ({} backend) over {}x{} in {:?}",
+            engine.backend_name(),
+            self.world.trace.markets,
+            self.world.trace.hours,
+            t0.elapsed()
+        );
+        Ok(())
+    }
+
+    pub fn analytics_backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Run one (job, arm) simulation.
+    pub fn run_one(&self, job: &Job, arm: &Arm, cfg: &RunConfig, seed: u64) -> JobResult {
+        let mut policy = arm.policy.make();
+        let ft = arm.ft.make(job);
+        let t0 = Instant::now();
+        let r = simulate_job(&self.world, policy.as_mut(), ft.as_ref(), job, cfg, seed);
+        Metrics::add(&self.metrics.decision_us, t0.elapsed().as_micros() as u64);
+        Metrics::add(&self.metrics.decisions, r.sessions as u64);
+        Metrics::add(&self.metrics.revocations, r.revocations as u64);
+        Metrics::inc(&self.metrics.jobs_submitted);
+        if r.completed {
+            Metrics::inc(&self.metrics.jobs_completed);
+        } else {
+            Metrics::inc(&self.metrics.jobs_failed);
+        }
+        r
+    }
+
+    /// Run a job under an arm across `seeds` seeds, aggregated (one bar).
+    pub fn run_seeds(&self, job: &Job, arm: &Arm, cfg: &RunConfig, seeds: u64) -> AggregateResult {
+        let runs: Vec<JobResult> = self
+            .pool
+            .map((0..seeds).collect(), |_, seed| self.run_one(job, arm, cfg, seed));
+        AggregateResult::from_runs(&runs)
+    }
+
+    /// Fan a whole batch of jobs out across the pool under one arm.
+    pub fn run_batch(&self, jobs: &[Job], arm: &Arm, cfg: &RunConfig, seed: u64) -> Vec<JobResult> {
+        self.pool.map(jobs.to_vec(), |i, job| self.run_one(&job, arm, cfg, seed ^ (i as u64) << 17))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RevocationRule;
+
+    fn coordinator() -> Coordinator {
+        let world = World::generate(48, 1.0, 21);
+        Coordinator::new(world, AnalyticsEngine::native(), 2)
+    }
+
+    #[test]
+    fn kinds_parse() {
+        assert_eq!(PolicyKind::parse("p"), Some(PolicyKind::PSiwoft(PSiwoftConfig::default())));
+        assert_eq!(PolicyKind::parse("ft"), Some(PolicyKind::FtSpot));
+        assert_eq!(PolicyKind::parse("ondemand"), Some(PolicyKind::OnDemand));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(FtKind::parse("ckpt:12"), Some(FtKind::Checkpoint { n: 12 }));
+        assert_eq!(FtKind::parse("repl:3"), Some(FtKind::Replication { k: 3 }));
+        assert_eq!(FtKind::parse("none"), Some(FtKind::None));
+        assert_eq!(FtKind::parse("zzz"), None);
+    }
+
+    #[test]
+    fn paper_arms_are_p_f_o() {
+        let arms = paper_arms();
+        assert_eq!(arms.len(), 3);
+        assert_eq!(arms[0].label, "P");
+        assert!(matches!(arms[1].policy, PolicyKind::FtSpot));
+        assert!(matches!(arms[2].policy, PolicyKind::OnDemand));
+    }
+
+    #[test]
+    fn run_seeds_aggregates_and_counts() {
+        let c = coordinator();
+        let job = Job::new(1, 4.0, 16.0);
+        let arm = Arm { label: "O", policy: PolicyKind::OnDemand, ft: FtKind::None };
+        let agg = c.run_seeds(&job, &arm, &RunConfig::default(), 4);
+        assert_eq!(agg.n, 4);
+        assert_eq!(agg.completion_rate, 1.0);
+        assert_eq!(c.metrics.jobs_completed.load(std::sync::atomic::Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn run_batch_parallel_matches_serial() {
+        let c = coordinator();
+        let jobs: Vec<Job> = (0..6).map(|i| Job::new(i, 2.0 + i as f64, 16.0)).collect();
+        let arm = Arm {
+            label: "F",
+            policy: PolicyKind::FtSpot,
+            ft: FtKind::CheckpointHourly,
+        };
+        let cfg = RunConfig { rule: RevocationRule::ForcedRate { per_day: 4.0 }, ..Default::default() };
+        let par = c.run_batch(&jobs, &arm, &cfg, 7);
+        // serial reference
+        let ser: Vec<_> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| c.run_one(j, &arm, &cfg, 7 ^ (i as u64) << 17))
+            .collect();
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.ledger, b.ledger, "parallel != serial for job {}", a.job.id);
+        }
+    }
+
+    #[test]
+    fn refresh_analytics_native() {
+        let mut c = coordinator();
+        // the constructor already ran one epoch
+        assert_eq!(c.metrics.analytics_epochs.load(std::sync::atomic::Ordering::Relaxed), 1);
+        c.refresh_analytics(&AnalyticsEngine::native()).unwrap();
+        assert_eq!(c.metrics.analytics_epochs.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(c.analytics_backend(), "native");
+    }
+}

@@ -1,0 +1,73 @@
+//! Coordinator metrics: lock-free counters snapshot-able as JSON (wired
+//! into the control-plane `status` response and periodic log lines).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub revocations: AtomicU64,
+    pub decisions: AtomicU64,
+    pub ondemand_fallbacks: AtomicU64,
+    pub analytics_epochs: AtomicU64,
+    /// microseconds spent in policy decisions (sum)
+    pub decision_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    #[inline]
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let g = |c: &AtomicU64| Json::num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("jobs_submitted", g(&self.jobs_submitted)),
+            ("jobs_completed", g(&self.jobs_completed)),
+            ("jobs_failed", g(&self.jobs_failed)),
+            ("revocations", g(&self.revocations)),
+            ("decisions", g(&self.decisions)),
+            ("ondemand_fallbacks", g(&self.ondemand_fallbacks)),
+            ("analytics_epochs", g(&self.analytics_epochs)),
+            ("decision_us_total", g(&self.decision_us)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::new();
+        Metrics::inc(&m.jobs_submitted);
+        Metrics::inc(&m.jobs_submitted);
+        Metrics::add(&m.revocations, 5);
+        let s = m.snapshot();
+        assert_eq!(s.get("jobs_submitted").unwrap().as_i64(), Some(2));
+        assert_eq!(s.get("revocations").unwrap().as_i64(), Some(5));
+        assert_eq!(s.get("jobs_completed").unwrap().as_i64(), Some(0));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_as_json() {
+        let m = Metrics::new();
+        let text = m.snapshot().to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,15 @@
+//! Layer-3 coordinator: the leader that owns the world, the analytics
+//! epochs (PJRT), the worker thread pool, metrics, and the TCP control
+//! plane.
+
+pub mod epoch;
+pub mod leader;
+pub mod metrics;
+pub mod pool;
+pub mod server;
+
+pub use epoch::{run_cluster, ClusterConfig, ClusterReport};
+pub use leader::{paper_arms, Arm, Coordinator, FtKind, PolicyKind};
+pub use metrics::Metrics;
+pub use pool::Pool;
+pub use server::Server;

@@ -1,0 +1,135 @@
+//! Worker thread pool — the async-runtime substitute for this workload
+//! (tokio is unavailable offline; the coordinator's fan-out is
+//! embarrassingly parallel simulation work, a perfect fit for scoped
+//! threads + channels).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Fixed-size pool executing boxed jobs; results are collected in
+/// submission order by [`Pool::map`].
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// `workers = 0` → one per available CPU.
+    pub fn new(workers: usize) -> Pool {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            workers
+        };
+        Pool { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parallel map preserving input order.  `f` must be `Sync` (it is
+    /// shared across workers); items are handed out through a shared
+    /// cursor so the load balances even when item costs vary wildly
+    /// (long jobs next to short ones).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.workers.min(n);
+        if threads <= 1 {
+            return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let work: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new(items.into_iter().map(Some).collect()));
+        let cursor = Arc::new(Mutex::new(0usize));
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let work = work.clone();
+                let cursor = cursor.clone();
+                let tx = tx.clone();
+                let f = &f;
+                scope.spawn(move || loop {
+                    let idx = {
+                        let mut c = cursor.lock().unwrap();
+                        if *c >= n {
+                            break;
+                        }
+                        let i = *c;
+                        *c += 1;
+                        i
+                    };
+                    let item = work.lock().unwrap()[idx].take().expect("item taken twice");
+                    let r = f(idx, item);
+                    if tx.send((idx, r)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+            for (idx, r) in rx {
+                out[idx] = Some(r);
+            }
+            out.into_iter().map(|r| r.expect("worker dropped result")).collect()
+        })
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let pool = Pool::new(4);
+        let out = pool.map((0..100).collect(), |i, x: i32| {
+            assert_eq!(i as i32, x);
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let pool = Pool::new(1);
+        let out = pool.map(vec![1, 2, 3], |_, x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let pool = Pool::new(4);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        let pool = Pool::new(4);
+        let items: Vec<u64> = (0..32).map(|i| if i % 7 == 0 { 2_000_000 } else { 100 }).collect();
+        let out = pool.map(items.clone(), |_, n| (0..n).fold(0u64, |a, b| a.wrapping_add(b)));
+        assert_eq!(out.len(), 32);
+        // spot check a couple of values
+        assert_eq!(out[1], (0..100u64).sum::<u64>());
+    }
+
+    #[test]
+    fn zero_means_cpu_count() {
+        let pool = Pool::new(0);
+        assert!(pool.workers() >= 1);
+    }
+}

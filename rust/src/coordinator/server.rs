@@ -1,0 +1,200 @@
+//! TCP control plane: a JSON-line protocol for submitting jobs to a
+//! running coordinator and inspecting its state — the "leader process"
+//! face of the system (`siwoft serve`).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"cmd":"submit","len_h":8,"mem_gb":16,"policy":"p","ft":"none"}
+//!   ← {"ok":true,"result":{"completion_h":…,"cost_usd":…,…}}
+//!   → {"cmd":"status"}
+//!   ← {"ok":true,"metrics":{…},"markets":…}
+//!   → {"cmd":"shutdown"}
+//!   ← {"ok":true}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::leader::{Arm, Coordinator, FtKind, PolicyKind};
+use crate::job::Job;
+use crate::sim::{JobResult, RunConfig};
+use crate::util::json::Json;
+
+pub struct Server {
+    coordinator: Arc<Coordinator>,
+    shutdown: Arc<AtomicBool>,
+    next_job_id: AtomicU64,
+}
+
+impl Server {
+    pub fn new(coordinator: Coordinator) -> Server {
+        Server {
+            coordinator: Arc::new(coordinator),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            next_job_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Bind and serve until a `shutdown` command arrives.  Returns the
+    /// bound address through `on_ready` (useful for tests with port 0).
+    pub fn serve(&self, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        on_ready(listener.local_addr()?);
+        crate::log_info!("control plane listening on {}", listener.local_addr()?);
+        let mut handles = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    crate::log_debug!("connection from {peer}");
+                    let coordinator = self.coordinator.clone();
+                    let shutdown = self.shutdown.clone();
+                    let id = self.next_job_id.fetch_add(1_000_000, Ordering::SeqCst);
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, &coordinator, &shutdown, id) {
+                            crate::log_warn!("connection error: {e:#}");
+                        }
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coordinator: &Coordinator,
+    shutdown: &AtomicBool,
+    id_base: u64,
+) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut next_id = id_base;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_request(&line, coordinator, shutdown, &mut next_id) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(format!("{e:#}")))]),
+        };
+        writeln!(writer, "{reply}")?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_request(
+    line: &str,
+    c: &Coordinator,
+    shutdown: &AtomicBool,
+    next_id: &mut u64,
+) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("");
+    match cmd {
+        "submit" => {
+            let len = req.get("len_h").and_then(Json::as_f64).unwrap_or(8.0);
+            let mem = req.get("mem_gb").and_then(Json::as_f64).unwrap_or(16.0);
+            let policy = req.get("policy").and_then(Json::as_str).unwrap_or("p");
+            let ft = req.get("ft").and_then(Json::as_str).unwrap_or("none");
+            let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let policy =
+                PolicyKind::parse(policy).ok_or_else(|| anyhow::anyhow!("unknown policy '{policy}'"))?;
+            let ft = FtKind::parse(ft).ok_or_else(|| anyhow::anyhow!("unknown ft '{ft}'"))?;
+            *next_id += 1;
+            let job = Job::new(*next_id, len, mem);
+            let arm = Arm { label: "api", policy, ft };
+            let r = c.run_one(&job, &arm, &RunConfig::default(), seed);
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("result", result_json(&r))]))
+        }
+        "status" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", c.metrics.snapshot()),
+            ("markets", Json::num(c.world.n_markets() as f64)),
+            ("backend", Json::str(c.analytics_backend())),
+        ])),
+        "shutdown" => {
+            shutdown.store(true, Ordering::SeqCst);
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        other => Err(anyhow::anyhow!("unknown cmd '{other}'")),
+    }
+}
+
+/// Serialize a job result for the wire.
+pub fn result_json(r: &JobResult) -> Json {
+    Json::obj(vec![
+        ("job", Json::str(r.job.name.clone())),
+        ("policy", Json::str(r.policy.clone())),
+        ("ft", Json::str(r.ft.clone())),
+        ("completed", Json::Bool(r.completed)),
+        ("completion_h", Json::num(r.completion_h())),
+        ("cost_usd", Json::num(r.cost_usd())),
+        ("revocations", Json::num(r.revocations as f64)),
+        ("sessions", Json::num(r.sessions as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::AnalyticsEngine;
+    use crate::sim::World;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn request(addr: std::net::SocketAddr, line: &str) -> Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{line}").unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(&reply).unwrap()
+    }
+
+    #[test]
+    fn submit_status_shutdown_roundtrip() {
+        let world = World::generate(24, 0.5, 33);
+        let server = Arc::new(Server::new(Coordinator::new(world, AnalyticsEngine::native(), 2)));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s2 = server.clone();
+        let t = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+
+        let reply = request(addr, r#"{"cmd":"submit","len_h":2,"mem_gb":8,"policy":"o","ft":"none"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+        let res = reply.get("result").unwrap();
+        assert_eq!(res.get("completed").unwrap().as_bool(), Some(true));
+        assert!(res.get("completion_h").unwrap().as_f64().unwrap() >= 2.0);
+
+        let reply = request(addr, r#"{"cmd":"status"}"#);
+        assert_eq!(reply.path(&["metrics", "jobs_completed"]).unwrap().as_i64(), Some(1));
+
+        let reply = request(addr, r#"{"cmd":"bogus"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+
+        let reply = request(addr, r#"{"cmd":"shutdown"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+        t.join().unwrap();
+    }
+}

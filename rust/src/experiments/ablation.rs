@@ -1,0 +1,205 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//!   * **abl-ckpt** — the checkpoint-count tradeoff of §II-A/RQ3: few
+//!     checkpoints → re-execution dominates; many → checkpointing
+//!     dominates.  Sweeps the F arm's `num_checkpoints`.
+//!   * **abl-repl** — replication degree: cost multiplies, completion
+//!     stays near the job length.
+//!   * **abl-corr** — P-SIWOFT's correlation filter (Step 13/14) on vs
+//!     off in a correlated-failure world.
+//!   * **abl-greedy** — lifetime-blind greedy spot vs P-SIWOFT: isolates
+//!     the value of the MTTR analysis.
+
+use crate::coordinator::Pool;
+use crate::ft::{Checkpointing, NoFt, Replication};
+use crate::job::Job;
+use crate::policy::{FtSpotPolicy, GreedyCheapest, PSiwoft, PSiwoftConfig};
+use crate::sim::{simulate_job, AggregateResult, JobResult, RevocationRule, RunConfig, World};
+
+/// A simple (x, aggregate) series.
+pub type Series = Vec<(String, AggregateResult)>;
+
+fn agg_over_seeds(pool: &Pool, seeds: u64, f: impl Fn(u64) -> JobResult + Sync) -> AggregateResult {
+    let runs = pool.map((0..seeds).collect(), |_, s| f(s));
+    AggregateResult::from_runs(&runs)
+}
+
+/// Checkpoint-count sweep under forced revocations.
+pub fn checkpoint_sweep(world: &World, start_t: f64, seeds: u64, counts: &[u32]) -> Series {
+    let pool = Pool::new(0);
+    let job = Job::new(0, 8.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 4 }, start_t, ..Default::default() };
+    counts
+        .iter()
+        .map(|&n| {
+            let agg = agg_over_seeds(&pool, seeds, |s| {
+                let mut p = FtSpotPolicy::new();
+                simulate_job(world, &mut p, &Checkpointing::new(n), &job, &cfg, s)
+            });
+            (format!("{n}"), agg)
+        })
+        .collect()
+}
+
+/// Replication-degree sweep.
+pub fn replication_sweep(world: &World, start_t: f64, seeds: u64, degrees: &[u32]) -> Series {
+    let pool = Pool::new(0);
+    let job = Job::new(0, 8.0, 16.0);
+    let cfg = RunConfig {
+        rule: RevocationRule::ForcedRate { per_day: 3.0 },
+        start_t,
+        ..Default::default()
+    };
+    degrees
+        .iter()
+        .map(|&k| {
+            let agg = agg_over_seeds(&pool, seeds, |s| {
+                let mut p = FtSpotPolicy::new();
+                if k <= 1 {
+                    simulate_job(world, &mut p, &NoFt, &job, &cfg, s)
+                } else {
+                    simulate_job(world, &mut p, &Replication::new(k), &job, &cfg, s)
+                }
+            });
+            (format!("k={k}"), agg)
+        })
+        .collect()
+}
+
+/// Correlation-filter on/off for P-SIWOFT.
+pub fn corr_filter_ablation(world: &World, start_t: f64, seeds: u64) -> Series {
+    let pool = Pool::new(0);
+    let job = Job::new(0, 8.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::Trace, start_t, ..Default::default() };
+    [("corr-filter=on", true), ("corr-filter=off", false)]
+        .into_iter()
+        .map(|(label, on)| {
+            let agg = agg_over_seeds(&pool, seeds, |s| {
+                let mut p = PSiwoft::new(PSiwoftConfig { use_corr_filter: on, ..Default::default() });
+                simulate_job(world, &mut p, &NoFt, &job, &cfg, s)
+            });
+            (label.to_string(), agg)
+        })
+        .collect()
+}
+
+/// Analytics-baseline shoot-out: P-SIWOFT's MTTR recipe vs the
+/// survival-probability policy (ref.\[17\]-style) vs a Daly-tuned FT arm.
+/// Isolates how much of the win is "use market statistics" vs the
+/// specific statistic used vs well-tuned fault tolerance.
+pub fn analytics_baselines(world: &World, start_t: f64, seeds: u64) -> Series {
+    use crate::ft::DalyCheckpointing;
+    use crate::policy::PredictivePolicy;
+    let pool = Pool::new(0);
+    let job = Job::new(0, 8.0, 16.0);
+    let trace_cfg = RunConfig { rule: RevocationRule::Trace, start_t, ..Default::default() };
+    let rate_cfg = RunConfig {
+        rule: RevocationRule::ForcedRate { per_day: 3.0 },
+        start_t,
+        ..Default::default()
+    };
+
+    let psiwoft = agg_over_seeds(&pool, seeds, |s| {
+        let mut p = PSiwoft::default();
+        simulate_job(world, &mut p, &NoFt, &job, &trace_cfg, s)
+    });
+    let predictive = agg_over_seeds(&pool, seeds, |s| {
+        let mut p = PredictivePolicy::from_world_trained(world, start_t as usize);
+        simulate_job(world, &mut p, &NoFt, &job, &trace_cfg, s)
+    });
+    let daly = agg_over_seeds(&pool, seeds, |s| {
+        let mut p = FtSpotPolicy::new();
+        // Daly interval tuned to the forced revocation rate (MTTR = 8h)
+        let ft = DalyCheckpointing::new(24.0 / 3.0);
+        simulate_job(world, &mut p, &ft, &job, &rate_cfg, s)
+    });
+    vec![
+        ("p-siwoft".to_string(), psiwoft),
+        ("predictive".to_string(), predictive),
+        ("ft-daly".to_string(), daly),
+    ]
+}
+
+/// P-SIWOFT vs lifetime-blind greedy (both no-FT, trace revocations).
+pub fn greedy_vs_psiwoft(world: &World, start_t: f64, seeds: u64) -> Series {
+    let pool = Pool::new(0);
+    let job = Job::new(0, 8.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::Trace, start_t, ..Default::default() };
+    let p_agg = agg_over_seeds(&pool, seeds, |s| {
+        let mut p = PSiwoft::default();
+        simulate_job(world, &mut p, &NoFt, &job, &cfg, s)
+    });
+    let g_agg = agg_over_seeds(&pool, seeds, |s| {
+        let mut g = GreedyCheapest::new();
+        simulate_job(world, &mut g, &NoFt, &job, &cfg, s)
+    });
+    vec![("p-siwoft".to_string(), p_agg), ("greedy".to_string(), g_agg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Category;
+
+    fn world() -> (World, f64) {
+        let mut w = World::generate(64, 1.5, 99);
+        let start = w.split_train(0.6);
+        (w, start)
+    }
+
+    #[test]
+    fn checkpoint_tradeoff_shape() {
+        let (w, start) = world();
+        let series = checkpoint_sweep(&w, start, 4, &[1, 8, 64]);
+        let t = |i: usize, c: Category| series[i].1.time.get(c);
+        // few checkpoints → more re-execution than many checkpoints
+        assert!(t(0, Category::Reexec) > t(2, Category::Reexec));
+        // many checkpoints → more checkpointing time than few
+        assert!(t(2, Category::Checkpoint) > t(0, Category::Checkpoint));
+    }
+
+    #[test]
+    fn replication_cost_grows_with_degree() {
+        let (w, start) = world();
+        let series = replication_sweep(&w, start, 4, &[1, 3]);
+        assert!(series[1].1.cost_usd() > series[0].1.cost_usd() * 1.5);
+        // completion stays near the job length with replicas absorbing
+        assert!(series[1].1.completion_h() < 10.0);
+    }
+
+    #[test]
+    fn greedy_loses_to_psiwoft() {
+        let (w, start) = world();
+        let series = greedy_vs_psiwoft(&w, start, 6);
+        let p = &series[0].1;
+        let g = &series[1].1;
+        // greedy chases cheap-but-volatile markets → more revocations
+        assert!(
+            p.mean_revocations <= g.mean_revocations,
+            "P revs {} vs greedy {}",
+            p.mean_revocations,
+            g.mean_revocations
+        );
+    }
+
+    #[test]
+    fn analytics_baselines_complete_and_compare() {
+        let (w, start) = world();
+        let series = analytics_baselines(&w, start, 4);
+        assert_eq!(series.len(), 3);
+        for (label, a) in &series {
+            assert_eq!(a.completion_rate, 1.0, "{label} failed runs");
+        }
+        // both analytics-driven no-FT arms stay near the 8h job length
+        assert!(series[0].1.completion_h() < 12.0);
+        assert!(series[1].1.completion_h() < 12.0);
+    }
+
+    #[test]
+    fn corr_ablation_runs() {
+        let (w, start) = world();
+        let series = corr_filter_ablation(&w, start, 3);
+        assert_eq!(series.len(), 2);
+        assert!(series.iter().all(|(_, a)| a.completion_rate > 0.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: the Fig. 1 reproduction sweeps, the ablation
+//! studies, the price-ratio sensitivity study, and table/CSV rendering.
+
+pub mod ablation;
+pub mod fig1;
+pub mod sensitivity;
+pub mod tables;
+
+pub use fig1::{Fig1Options, Fig1Runner, Sweep};
+pub use tables::Panel;

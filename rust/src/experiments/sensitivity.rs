@@ -1,0 +1,115 @@
+//! Price-ratio sensitivity study — the paper's own declared future work
+//! (§IV-C Threats: "other ratios between spot instances and on-demand
+//! instances could result in different effects ... shall be considered
+//! in future studies").
+//!
+//! Sweeps the spot/on-demand base ratio and reports, per ratio, the mean
+//! cost of the three Fig. 1 arms plus the F/O and P/O cost ratios.  The
+//! interesting output is the *crossover*: the ratio above which the
+//! fault-tolerance approach becomes more expensive than simply renting
+//! on-demand — the regime where the paper's headline conclusion is
+//! strongest.
+
+use crate::coordinator::Pool;
+use crate::ft::{Checkpointing, NoFt};
+use crate::job::Job;
+use crate::market::{Catalog, TraceGenConfig};
+use crate::policy::{FtSpotPolicy, OnDemandPolicy, PSiwoft};
+use crate::sim::{simulate_job, AggregateResult, RevocationRule, RunConfig, World};
+
+#[derive(Clone, Debug)]
+pub struct RatioPoint {
+    pub ratio: f64,
+    pub p: AggregateResult,
+    pub f: AggregateResult,
+    pub o: AggregateResult,
+}
+
+impl RatioPoint {
+    pub fn f_over_o(&self) -> f64 {
+        self.f.cost_usd() / self.o.cost_usd()
+    }
+    pub fn p_over_o(&self) -> f64 {
+        self.p.cost_usd() / self.o.cost_usd()
+    }
+}
+
+/// Run the sweep: one world per ratio (same seed ⇒ same revocation
+/// structure, only the price level moves).
+pub fn ratio_sweep(
+    ratios: &[f64],
+    markets: usize,
+    seed: u64,
+    seeds: u64,
+    ft_rate_per_day: f64,
+) -> Vec<RatioPoint> {
+    let pool = Pool::new(0);
+    let job = Job::new(0, 8.0, 16.0);
+    ratios
+        .iter()
+        .map(|&ratio| {
+            let catalog = Catalog::with_limit(markets);
+            let gen = TraceGenConfig { months: 3.0, seed, base_ratio: ratio, ..Default::default() };
+            let trace = crate::market::generate_traces(&catalog, &gen);
+            let mut world = World::new(catalog, trace);
+            let start = world.split_train(0.67);
+
+            let run = |arm: char, s: u64| {
+                let (rule, ft): (_, Box<dyn crate::ft::FtMechanism>) = match arm {
+                    'F' => (
+                        RevocationRule::ForcedRate { per_day: ft_rate_per_day },
+                        Box::new(Checkpointing::hourly(job.exec_len_h)),
+                    ),
+                    _ => (RevocationRule::Trace, Box::new(NoFt)),
+                };
+                let cfg = RunConfig { rule, start_t: start, ..Default::default() };
+                let mut policy: Box<dyn crate::policy::Policy> = match arm {
+                    'P' => Box::new(PSiwoft::default()),
+                    'F' => Box::new(FtSpotPolicy::new()),
+                    _ => Box::new(OnDemandPolicy),
+                };
+                simulate_job(&world, policy.as_mut(), ft.as_ref(), &job, &cfg, s)
+            };
+            let agg = |arm: char| {
+                AggregateResult::from_runs(
+                    &pool.map((0..seeds).collect(), |_, s| run(arm, s)),
+                )
+            };
+            RatioPoint { ratio, p: agg('P'), f: agg('F'), o: agg('O') }
+        })
+        .collect()
+}
+
+/// First ratio at which F's cost meets/exceeds on-demand, if any.
+pub fn crossover(points: &[RatioPoint]) -> Option<f64> {
+    points.iter().find(|p| p.f_over_o() >= 1.0).map(|p| p.ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_order_costs() {
+        let pts = ratio_sweep(&[0.2, 0.6], 64, 31, 4, 3.0);
+        assert_eq!(pts.len(), 2);
+        // deeper discount → cheaper P in absolute terms
+        assert!(pts[0].p.cost_usd() < pts[1].p.cost_usd());
+        // P always beats O on cost
+        for p in &pts {
+            assert!(p.p_over_o() < 1.0, "ratio {}: P/O = {}", p.ratio, p.p_over_o());
+        }
+        // F/O grows with the ratio (less discount headroom for overhead)
+        assert!(pts[1].f_over_o() > pts[0].f_over_o());
+    }
+
+    #[test]
+    fn crossover_found_at_high_ratios_under_heavy_revocation() {
+        // the Fig. 1f regime: high revocation pressure on the F arm
+        let pts = ratio_sweep(&[0.3, 0.5, 0.7], 64, 32, 4, 8.0);
+        let x = crossover(&pts);
+        assert!(x.is_some(), "no F/O crossover found up to 0.7: {:?}",
+                pts.iter().map(|p| (p.ratio, p.f_over_o())).collect::<Vec<_>>());
+        assert!(x.unwrap() >= 0.3, "crossover {x:?} implausibly low");
+    }
+}

@@ -1,0 +1,160 @@
+//! Rendering for experiment output: ASCII stacked bars (the terminal
+//! version of the paper's Fig. 1) and CSV emission.
+
+use crate::sim::{AggregateResult, Breakdown, Category, CATEGORIES};
+
+/// Glyph per category for the stacked bars.
+fn glyph(c: Category) -> char {
+    match c {
+        Category::Useful => '█',
+        Category::Checkpoint => '▒',
+        Category::Recovery => '◆',
+        Category::Reexec => '░',
+        Category::Startup => '·',
+        Category::Migration => 'm',
+        Category::Buffer => '$',
+    }
+}
+
+/// Render one stacked horizontal bar for a breakdown, scaled so that
+/// `max_total` spans `width` characters.
+pub fn stacked_bar(b: &Breakdown, max_total: f64, width: usize) -> String {
+    let mut out = String::new();
+    if max_total <= 0.0 {
+        return out;
+    }
+    let scale = width as f64 / max_total;
+    for &c in CATEGORIES {
+        let n = (b.get(c) * scale).round() as usize;
+        for _ in 0..n {
+            out.push(glyph(c));
+        }
+    }
+    out
+}
+
+pub fn legend() -> String {
+    CATEGORIES
+        .iter()
+        .map(|&c| format!("{}={}", glyph(c), c.as_str()))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+/// One figure panel: x-axis labels × arms, with stacked breakdowns.
+pub struct Panel {
+    pub title: String,
+    pub xlabel: String,
+    /// metric selector: time (Fig. 1a–c) or cost (Fig. 1d–f)
+    pub is_cost: bool,
+    /// (x label, arm label, aggregate)
+    pub bars: Vec<(String, String, AggregateResult)>,
+}
+
+impl Panel {
+    pub fn new(title: &str, xlabel: &str, is_cost: bool) -> Panel {
+        Panel { title: title.to_string(), xlabel: xlabel.to_string(), is_cost, bars: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: impl Into<String>, arm: impl Into<String>, agg: AggregateResult) {
+        self.bars.push((x.into(), arm.into(), agg));
+    }
+
+    fn value(&self, a: &AggregateResult) -> f64 {
+        if self.is_cost { a.cost_usd() } else { a.completion_h() }
+    }
+
+    fn breakdown<'a>(&self, a: &'a AggregateResult) -> &'a Breakdown {
+        if self.is_cost { &a.cost } else { &a.time }
+    }
+
+    /// Render the panel as ASCII art.
+    pub fn render(&self, width: usize) -> String {
+        let unit = if self.is_cost { "$" } else { "h" };
+        let max = self.bars.iter().map(|(_, _, a)| self.value(a)).fold(0.0f64, f64::max);
+        let mut s = format!("--- {} (x = {}) ---\n", self.title, self.xlabel);
+        let mut last_x = String::new();
+        for (x, arm, agg) in &self.bars {
+            if *x != last_x {
+                s.push_str(&format!("{x}:\n"));
+                last_x = x.clone();
+            }
+            s.push_str(&format!(
+                "  {arm:<2} {:>9.3}{unit} |{}\n",
+                self.value(agg),
+                stacked_bar(self.breakdown(agg), max, width)
+            ));
+        }
+        s.push_str(&format!("  [{}]\n", legend()));
+        s
+    }
+
+    /// Rows for CSV emission (header + one row per bar).
+    pub fn to_csv(&self) -> Vec<Vec<String>> {
+        let mut header = vec!["x".to_string(), "arm".to_string()];
+        header.extend(AggregateResult::csv_header());
+        header.push("mean_revocations".to_string());
+        header.push("completion_rate".to_string());
+        let mut rows = vec![header];
+        for (x, arm, agg) in &self.bars {
+            let mut row = vec![x.clone(), arm.clone()];
+            row.extend(agg.csv_fields());
+            row.push(format!("{:.4}", agg.mean_revocations));
+            row.push(format!("{:.4}", agg.completion_rate));
+            rows.push(row);
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agg(useful: f64, reexec: f64) -> AggregateResult {
+        let mut a = AggregateResult::default();
+        a.n = 1;
+        a.time.add(Category::Useful, useful);
+        a.time.add(Category::Reexec, reexec);
+        a.cost.add(Category::Useful, useful * 0.1);
+        a.completion_rate = 1.0;
+        a
+    }
+
+    #[test]
+    fn bar_length_scales() {
+        let mut b = Breakdown::new();
+        b.add(Category::Useful, 5.0);
+        b.add(Category::Reexec, 5.0);
+        let bar = stacked_bar(&b, 10.0, 20);
+        assert_eq!(bar.chars().count(), 20);
+        assert!(bar.contains('█') && bar.contains('░'));
+        let empty = stacked_bar(&b, 0.0, 20);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn panel_renders_and_csvs() {
+        let mut p = Panel::new("Fig 1a", "job length", false);
+        p.push("2h", "P", agg(2.0, 0.1));
+        p.push("2h", "F", agg(2.0, 0.8));
+        let out = p.render(30);
+        assert!(out.contains("Fig 1a"));
+        assert!(out.contains("P "));
+        assert!(out.contains("2h:"));
+        let csv = p.to_csv();
+        assert_eq!(csv.len(), 3);
+        assert_eq!(csv[0][0], "x");
+        assert_eq!(csv[1][1], "P");
+        // header and data rows align
+        assert_eq!(csv[0].len(), csv[1].len());
+    }
+
+    #[test]
+    fn cost_panel_uses_cost() {
+        let mut p = Panel::new("Fig 1d", "len", true);
+        p.push("2h", "P", agg(2.0, 0.0));
+        let out = p.render(10);
+        assert!(out.contains('$'));
+    }
+}

@@ -1,0 +1,62 @@
+//! Migration mechanism: reactively live-migrate the container to a new
+//! instance inside the 2-minute termination notice (HotSpot-style).
+//!
+//! Feasible only when the memory footprint fits the live-migration cap
+//! (4 GB per the paper's §II-A); larger jobs degrade to restart-from-
+//! scratch, which is exactly the failure mode the paper describes when
+//! the mechanism's preconditions don't hold.
+
+use super::{FtMechanism, Recovery};
+use crate::job::{ContainerModel, Job};
+use crate::market::TERMINATION_NOTICE_H;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Migration;
+
+impl FtMechanism for Migration {
+    fn name(&self) -> &'static str {
+        "migration"
+    }
+
+    fn on_revocation(&self, job: &Job, c: &ContainerModel, _has_durable: bool) -> Recovery {
+        match c.migration_time(job.mem_gb) {
+            // migration must also complete within the termination notice;
+            // the dirty-page stop-and-copy happens inside the window.
+            Some(t) if t <= TERMINATION_NOTICE_H * 4.0 => Recovery::Migrate { migrate_time_h: t },
+            _ => Recovery::Restart { recovery_time_h: 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_jobs_migrate() {
+        let c = ContainerModel::default();
+        let j = Job::new(1, 8.0, 2.0);
+        match Migration.on_revocation(&j, &c, false) {
+            Recovery::Migrate { migrate_time_h } => {
+                assert!(migrate_time_h > 0.0 && migrate_time_h < 0.01)
+            }
+            other => panic!("expected migrate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn large_jobs_restart_from_scratch() {
+        let c = ContainerModel::default();
+        let j = Job::new(1, 8.0, 64.0);
+        assert_eq!(
+            Migration.on_revocation(&j, &c, true),
+            Recovery::Restart { recovery_time_h: 0.0 }
+        );
+    }
+
+    #[test]
+    fn no_checkpoint_schedule() {
+        let j = Job::new(1, 8.0, 2.0);
+        assert_eq!(Migration.checkpoint_interval(&j), None);
+    }
+}

@@ -1,0 +1,89 @@
+//! Fault-tolerance mechanisms — the baselines P-SIWOFT competes against.
+//!
+//! The paper's taxonomy (§I/§II-A): *checkpointing* (proactive state dumps
+//! to remote storage), *migration* (reactive move within the 2-minute
+//! notice, feasible only for small footprints), and *replication*
+//! (k-way redundant execution).  P-SIWOFT itself pairs with
+//! [`none::NoFt`]: on revocation the job simply restarts from scratch.
+//!
+//! A mechanism is consulted by the session simulator (`sim::run`) at two
+//! points: for its checkpoint schedule while running, and for a
+//! [`Recovery`] action when a revocation notice arrives.
+
+pub mod checkpoint;
+pub mod daly;
+pub mod migration;
+pub mod none;
+pub mod replication;
+
+pub use checkpoint::Checkpointing;
+pub use daly::DalyCheckpointing;
+pub use migration::Migration;
+pub use none::NoFt;
+pub use replication::Replication;
+
+use crate::job::{ContainerModel, Job};
+
+/// What happens when the instance running a job is revoked.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Recovery {
+    /// Re-provision and restart; durable progress (checkpointed work)
+    /// survives, volatile progress is lost.  `recovery_time_h` is spent
+    /// restoring state on the new instance (0 when starting from
+    /// scratch).
+    Restart { recovery_time_h: f64 },
+    /// Live-migrate within the termination notice: progress is fully
+    /// preserved; `migrate_time_h` is spent on the transfer.
+    Migrate { migrate_time_h: f64 },
+}
+
+/// A fault-tolerance mechanism, parameterized by the paper's settings
+/// (§II-A: number of checkpoints, degree of replication, ...).
+pub trait FtMechanism: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Work-hours between checkpoints (None = no checkpointing).
+    fn checkpoint_interval(&self, job: &Job) -> Option<f64> {
+        let _ = job;
+        None
+    }
+
+    /// Duration of one checkpoint write.
+    fn checkpoint_time(&self, job: &Job, c: &ContainerModel) -> f64 {
+        c.checkpoint_time(job.mem_gb)
+    }
+
+    /// Action on revocation.  `has_durable` says whether a checkpoint
+    /// exists to restore from.
+    fn on_revocation(&self, job: &Job, c: &ContainerModel, has_durable: bool) -> Recovery;
+
+    /// Number of concurrent instances (1 except for replication).
+    fn degree(&self) -> u32 {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::ContainerModel;
+
+    #[test]
+    fn trait_defaults() {
+        struct Dummy;
+        impl FtMechanism for Dummy {
+            fn name(&self) -> &'static str {
+                "dummy"
+            }
+            fn on_revocation(&self, _: &Job, _: &ContainerModel, _: bool) -> Recovery {
+                Recovery::Restart { recovery_time_h: 0.0 }
+            }
+        }
+        let d = Dummy;
+        let j = Job::new(1, 8.0, 16.0);
+        assert_eq!(d.checkpoint_interval(&j), None);
+        assert_eq!(d.degree(), 1);
+        let c = ContainerModel::default();
+        assert!(d.checkpoint_time(&j, &c) > 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! No fault tolerance: the mechanism P-SIWOFT pairs with.  A revocation
+//! loses all volatile work; the job restarts from scratch on the next
+//! instance.  Zero proactive overhead — that absence is the whole point
+//! of the paper.
+
+use super::{FtMechanism, Recovery};
+use crate::job::{ContainerModel, Job};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoFt;
+
+impl FtMechanism for NoFt {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn on_revocation(&self, _job: &Job, _c: &ContainerModel, _has_durable: bool) -> Recovery {
+        Recovery::Restart { recovery_time_h: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_proactive_overhead() {
+        let j = Job::new(1, 8.0, 16.0);
+        assert_eq!(NoFt.checkpoint_interval(&j), None);
+        assert_eq!(NoFt.degree(), 1);
+    }
+
+    #[test]
+    fn restart_from_scratch() {
+        let c = ContainerModel::default();
+        let j = Job::new(1, 8.0, 16.0);
+        assert_eq!(
+            NoFt.on_revocation(&j, &c, false),
+            Recovery::Restart { recovery_time_h: 0.0 }
+        );
+    }
+}

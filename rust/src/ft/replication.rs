@@ -1,0 +1,66 @@
+//! Replication mechanism: run the job on `k` instances in distinct
+//! markets; a revocation kills one replica (absorbed — the survivors
+//! carry the progress) and only the loss of *all* replicas loses work
+//! back to the start (§II-A: "re-execute the lost work from the
+//! beginning ... when all replicated instances are being revoked").
+//!
+//! The session simulator handles the replica bookkeeping (replacement
+//! windows, simultaneous-loss detection); this type carries the degree
+//! and the per-replica recovery semantics.
+
+use super::{FtMechanism, Recovery};
+use crate::job::{ContainerModel, Job};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Replication {
+    pub degree: u32,
+}
+
+impl Replication {
+    pub fn new(degree: u32) -> Self {
+        assert!(degree >= 1, "replication degree must be >= 1");
+        Replication { degree }
+    }
+}
+
+impl FtMechanism for Replication {
+    fn name(&self) -> &'static str {
+        "replication"
+    }
+
+    fn degree(&self) -> u32 {
+        self.degree
+    }
+
+    /// Total loss (all replicas revoked): restart from scratch — no
+    /// durable state, replication keeps everything in replica memory.
+    fn on_revocation(&self, _job: &Job, _c: &ContainerModel, _has_durable: bool) -> Recovery {
+        Recovery::Restart { recovery_time_h: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_carried() {
+        assert_eq!(Replication::new(3).degree(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "degree")]
+    fn zero_degree_rejected() {
+        Replication::new(0);
+    }
+
+    #[test]
+    fn total_loss_restarts_from_zero() {
+        let c = ContainerModel::default();
+        let j = Job::new(1, 8.0, 16.0);
+        assert_eq!(
+            Replication::new(2).on_revocation(&j, &c, true),
+            Recovery::Restart { recovery_time_h: 0.0 }
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Batch-job model: the unit of work P-SIWOFT provisions instances for.
+//!
+//! A job is characterized (as in the paper's methodology, §IV-B) by its
+//! *execution length* and *memory footprint*; these two knobs drive all
+//! FT overheads and the Fig. 1 sweeps.
+
+/// A batch job packaged (conceptually) in a Docker container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Job {
+    pub id: u64,
+    pub name: String,
+    /// pure compute time on a dedicated instance (hours)
+    pub exec_len_h: f64,
+    /// memory footprint (GB) — drives checkpoint/migration time and
+    /// instance-type suitability
+    pub mem_gb: f64,
+    /// vCPUs requested (informational; memory is the suitability key)
+    pub vcpus: u32,
+}
+
+impl Job {
+    pub fn new(id: u64, exec_len_h: f64, mem_gb: f64) -> Job {
+        assert!(exec_len_h > 0.0, "job length must be positive");
+        assert!(mem_gb > 0.0, "memory footprint must be positive");
+        Job {
+            id,
+            name: format!("job-{id}"),
+            exec_len_h,
+            mem_gb,
+            vcpus: ((mem_gb / 4.0).ceil() as u32).max(1),
+        }
+    }
+
+    pub fn named(mut self, name: impl Into<String>) -> Job {
+        self.name = name.into();
+        self
+    }
+}
+
+/// Lifecycle of one job execution attempt on an instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    /// waiting for an instance
+    Pending,
+    /// container starting / restoring
+    Starting,
+    /// making useful progress
+    Running,
+    /// writing a checkpoint
+    Checkpointing,
+    /// re-executing previously lost work
+    Reexecuting,
+    /// finished successfully
+    Completed,
+}
+
+/// Mutable execution-progress record carried across provisioning
+/// attempts.
+#[derive(Clone, Debug)]
+pub struct JobProgress {
+    /// durable progress (hours of completed work that will not be lost
+    /// on revocation; > 0 only with checkpointing/migration)
+    pub durable_h: f64,
+    /// progress since the last durable point
+    pub volatile_h: f64,
+    /// number of revocations suffered so far
+    pub revocations: u32,
+    pub phase: JobPhase,
+}
+
+impl JobProgress {
+    pub fn new() -> Self {
+        JobProgress { durable_h: 0.0, volatile_h: 0.0, revocations: 0, phase: JobPhase::Pending }
+    }
+
+    pub fn total_h(&self) -> f64 {
+        self.durable_h + self.volatile_h
+    }
+
+    pub fn remaining(&self, job: &Job) -> f64 {
+        (job.exec_len_h - self.total_h()).max(0.0)
+    }
+
+    pub fn is_complete(&self, job: &Job) -> bool {
+        self.total_h() >= job.exec_len_h - 1e-9
+    }
+
+    /// A revocation wipes volatile progress back to the durable point.
+    pub fn on_revocation(&mut self) -> f64 {
+        let lost = self.volatile_h;
+        self.volatile_h = 0.0;
+        self.revocations += 1;
+        lost
+    }
+
+    /// Checkpoint: volatile work becomes durable.
+    pub fn commit(&mut self) {
+        self.durable_h += self.volatile_h;
+        self.volatile_h = 0.0;
+    }
+}
+
+impl Default for JobProgress {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_construction() {
+        let j = Job::new(1, 8.0, 16.0);
+        assert_eq!(j.vcpus, 4);
+        assert_eq!(j.name, "job-1");
+        let j = j.named("etl");
+        assert_eq!(j.name, "etl");
+    }
+
+    #[test]
+    #[should_panic(expected = "length must be positive")]
+    fn rejects_zero_length() {
+        Job::new(1, 0.0, 4.0);
+    }
+
+    #[test]
+    fn progress_lifecycle() {
+        let j = Job::new(1, 10.0, 8.0);
+        let mut p = JobProgress::new();
+        p.volatile_h = 4.0;
+        assert_eq!(p.remaining(&j), 6.0);
+        assert!(!p.is_complete(&j));
+
+        let lost = p.on_revocation();
+        assert_eq!(lost, 4.0);
+        assert_eq!(p.total_h(), 0.0);
+        assert_eq!(p.revocations, 1);
+
+        p.volatile_h = 5.0;
+        p.commit();
+        assert_eq!(p.durable_h, 5.0);
+        let lost = p.on_revocation();
+        assert_eq!(lost, 0.0);
+        assert_eq!(p.total_h(), 5.0);
+
+        p.volatile_h = 5.0;
+        assert!(p.is_complete(&j));
+    }
+}

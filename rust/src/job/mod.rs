@@ -1,0 +1,10 @@
+//! Batch-job substrate: job model, Docker-container cost model and the
+//! Lookbusy-like workload generators.
+
+pub mod container;
+pub mod job;
+pub mod workload;
+
+pub use container::ContainerModel;
+pub use job::{Job, JobPhase, JobProgress};
+pub use workload::{length_sweep, memory_sweep, random_batch, BatchConfig};

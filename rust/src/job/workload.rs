@@ -1,0 +1,134 @@
+//! Workload generators — the Lookbusy substitute.
+//!
+//! The paper uses the `lookbusy` synthetic load generator to build jobs
+//! with controlled execution lengths and memory footprints.  This module
+//! produces the same thing as data: the exact sweep grids of Fig. 1 plus
+//! randomized heterogeneous batches for the portfolio example.
+
+use super::job::Job;
+use crate::util::rng::Rng;
+
+/// The paper's Fig. 1 sweep values.
+pub mod paper {
+    /// job execution lengths (hours) — Fig. 1a/1d x-axis
+    pub const LENGTHS_H: &[f64] = &[2.0, 4.0, 8.0, 16.0, 32.0];
+    /// job memory footprints (GB) — Fig. 1b/1e x-axis
+    pub const MEMS_GB: &[f64] = &[4.0, 8.0, 16.0, 32.0, 64.0];
+    /// forced revocation counts — Fig. 1c/1f x-axis
+    pub const REVOCATIONS: &[u32] = &[1, 2, 4, 8, 16];
+    /// fixed values when the other knob sweeps
+    pub const FIXED_LEN_H: f64 = 8.0;
+    pub const FIXED_MEM_GB: f64 = 16.0;
+}
+
+/// Jobs sweeping execution length at fixed memory (Fig. 1a/1d).
+pub fn length_sweep() -> Vec<Job> {
+    paper::LENGTHS_H
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| Job::new(i as u64, len, paper::FIXED_MEM_GB).named(format!("len-{len}h")))
+        .collect()
+}
+
+/// Jobs sweeping memory footprint at fixed length (Fig. 1b/1e).
+pub fn memory_sweep() -> Vec<Job> {
+    paper::MEMS_GB
+        .iter()
+        .enumerate()
+        .map(|(i, &mem)| Job::new(i as u64, paper::FIXED_LEN_H, mem).named(format!("mem-{mem}gb")))
+        .collect()
+}
+
+/// The fixed job used for the revocation-count sweep (Fig. 1c/1f).
+pub fn revocation_sweep_job() -> Job {
+    Job::new(0, paper::FIXED_LEN_H, paper::FIXED_MEM_GB).named("rev-sweep")
+}
+
+/// Parameters for randomized heterogeneous batches.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    pub count: usize,
+    /// lognormal (mu, sigma) of length in hours
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    pub len_min_h: f64,
+    pub len_max_h: f64,
+    /// memory classes sampled with Zipf skew (small jobs dominate)
+    pub mem_classes_gb: Vec<f64>,
+    pub mem_zipf_s: f64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            count: 100,
+            len_mu: 1.6,  // median ≈ 5 h
+            len_sigma: 0.8,
+            len_min_h: 0.5,
+            len_max_h: 48.0,
+            mem_classes_gb: vec![4.0, 8.0, 16.0, 32.0, 64.0],
+            mem_zipf_s: 1.1,
+        }
+    }
+}
+
+/// A reproducible heterogeneous batch (the portfolio workload).
+pub fn random_batch(cfg: &BatchConfig, seed: u64) -> Vec<Job> {
+    let mut rng = Rng::with_stream(seed, 0xBA7C);
+    (0..cfg.count)
+        .map(|i| {
+            let len = rng.lognormal(cfg.len_mu, cfg.len_sigma).clamp(cfg.len_min_h, cfg.len_max_h);
+            let mem = cfg.mem_classes_gb[rng.zipf(cfg.mem_classes_gb.len(), cfg.mem_zipf_s)];
+            Job::new(i as u64, len, mem)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sweeps_match_figure_axes() {
+        let ls = length_sweep();
+        assert_eq!(ls.len(), 5);
+        assert_eq!(ls[0].exec_len_h, 2.0);
+        assert_eq!(ls[4].exec_len_h, 32.0);
+        assert!(ls.iter().all(|j| j.mem_gb == 16.0));
+
+        let ms = memory_sweep();
+        assert_eq!(ms.len(), 5);
+        assert!(ms.iter().all(|j| j.exec_len_h == 8.0));
+        assert_eq!(ms[4].mem_gb, 64.0);
+    }
+
+    #[test]
+    fn random_batch_deterministic() {
+        let cfg = BatchConfig::default();
+        let a = random_batch(&cfg, 1);
+        let b = random_batch(&cfg, 1);
+        assert_eq!(a, b);
+        let c = random_batch(&cfg, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_batch_bounds() {
+        let cfg = BatchConfig { count: 500, ..Default::default() };
+        let jobs = random_batch(&cfg, 3);
+        assert_eq!(jobs.len(), 500);
+        for j in &jobs {
+            assert!(j.exec_len_h >= cfg.len_min_h && j.exec_len_h <= cfg.len_max_h);
+            assert!(cfg.mem_classes_gb.contains(&j.mem_gb));
+        }
+    }
+
+    #[test]
+    fn random_batch_skews_small() {
+        let cfg = BatchConfig { count: 1000, ..Default::default() };
+        let jobs = random_batch(&cfg, 5);
+        let small = jobs.iter().filter(|j| j.mem_gb <= 8.0).count();
+        let large = jobs.iter().filter(|j| j.mem_gb >= 32.0).count();
+        assert!(small > large, "small {small} large {large}");
+    }
+}

@@ -1,0 +1,49 @@
+//! # siwoft — P-SIWOFT reproduction
+//!
+//! A full implementation of *"Provisioning Spot Instances Without
+//! Employing Fault-Tolerance Mechanisms"* (Alourani & Kshemkalyani,
+//! ISPDC 2020) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the provisioning coordinator: market
+//!   catalog and trace substrate, discrete-event session simulator,
+//!   P-SIWOFT (Algorithm 1) plus the fault-tolerance / on-demand /
+//!   greedy baselines, cost-and-time accounting, experiment harness.
+//! * **Layer 2 (`python/compile/model.py`)** — the market-analytics
+//!   compute graph (MTTR, revocation events, correlation), AOT-lowered
+//!   to HLO text artifacts.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   indicator/row-stat reductions and the tiled correlation matmul.
+//!
+//! Python never runs on the request path: the Rust runtime
+//! ([`runtime`]) loads the HLO artifacts through PJRT and falls back to
+//! the bit-compatible native implementation ([`market::analytics`]) when
+//! artifacts are absent.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod coordinator;
+pub mod experiments;
+pub mod ft;
+pub mod job;
+pub mod market;
+pub mod policy;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::coordinator::{paper_arms, Arm, Coordinator, FtKind, Pool, PolicyKind};
+    pub use crate::experiments::{Fig1Options, Fig1Runner, Panel, Sweep};
+    pub use crate::ft::{Checkpointing, FtMechanism, Migration, NoFt, Replication};
+    pub use crate::job::{Job, JobProgress};
+    pub use crate::market::{Catalog, MarketAnalytics, PriceTrace, TraceGenConfig};
+    pub use crate::policy::{
+        Decision, FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy,
+    };
+    pub use crate::runtime::AnalyticsEngine;
+    pub use crate::sim::{
+        simulate_job, AggregateResult, Category, JobResult, RevocationRule, RunConfig, World,
+    };
+}

@@ -1,0 +1,518 @@
+//! `siwoft` — the P-SIWOFT leader binary.
+//!
+//! Subcommands:
+//!   gen-traces   generate synthetic EC2-style spot price traces
+//!   analyze      run market analytics (PJRT artifact or native) on traces
+//!   simulate     run one job under a (policy, ft) pair
+//!   fig          reproduce Fig. 1 panels (a–f) of the paper
+//!   ablation     run the ablation studies (ckpt count, replication, corr)
+//!   serve        start the TCP control plane
+//!
+//! `siwoft <cmd> --help` prints per-command options.
+
+use std::process::ExitCode;
+
+use siwoft::coordinator::{Arm, Coordinator, FtKind, PolicyKind, Server};
+use siwoft::experiments::{ablation, Fig1Options, Fig1Runner};
+use siwoft::job::Job;
+use siwoft::market::{Catalog, MarketAnalytics, PriceTrace, TraceGenConfig};
+use siwoft::runtime::AnalyticsEngine;
+use siwoft::sim::{RevocationRule, RunConfig, World};
+use siwoft::util::cli::CommandSpec;
+use siwoft::util::csvio;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let result = match cmd {
+        "gen-traces" => gen_traces(rest),
+        "analyze" => analyze(rest),
+        "simulate" => simulate(rest),
+        "fig" => fig(rest),
+        "ablation" => run_ablation(rest),
+        "sensitivity" => sensitivity(rest),
+        "cluster" => cluster(rest),
+        "run" => run_config(rest),
+        "serve" => serve(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        "version" | "--version" => {
+            println!("siwoft {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{}", help_text())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("{msg}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn help_text() -> String {
+    "usage: siwoft <command> [options]\n\ncommands:\n  \
+     gen-traces   generate synthetic spot price traces (CSV)\n  \
+     analyze      market analytics: MTTR table + correlation summary\n  \
+     simulate     run one job under a policy/ft pair\n  \
+     fig          reproduce the paper's Fig. 1 panels\n  \
+     ablation     checkpoint/replication/correlation ablations\n  \
+     sensitivity  spot/on-demand price-ratio sweep (F/O crossover)\n  \
+     cluster      rolling-epoch cluster simulation (Poisson arrivals)\n  \
+     run          run an experiment described by a TOML config\n  \
+     serve        start the TCP control plane\n  \
+     version      print version\n\nsee `siwoft <command> --help`"
+        .to_string()
+}
+
+fn print_help() {
+    println!("{}", help_text());
+}
+
+// ---------------------------------------------------------------------
+
+fn gen_traces(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("gen-traces", "generate synthetic spot price traces")
+        .opt("markets", "192", "number of spot markets")
+        .opt("months", "3", "trace length in 30-day months")
+        .opt("seed", "2020", "rng seed")
+        .opt("out", "traces/prices.csv", "output CSV path");
+    let a = spec.parse(raw)?;
+    let catalog = Catalog::with_limit(a.usize("markets")?);
+    let cfg = TraceGenConfig { months: a.f64("months")?, seed: a.u64("seed")?, ..Default::default() };
+    let trace = siwoft::market::generate_traces(&catalog, &cfg);
+    trace.save(a.str("out")).map_err(|e| format!("save: {e}"))?;
+    println!(
+        "wrote {} markets x {} hours to {}",
+        trace.markets,
+        trace.hours,
+        a.str("out")
+    );
+    Ok(())
+}
+
+fn load_or_generate_world(traces: &str, markets: usize, months: f64, seed: u64) -> Result<World, String> {
+    if !traces.is_empty() && std::path::Path::new(traces).exists() {
+        let trace = PriceTrace::load(traces).map_err(|e| format!("load traces: {e}"))?;
+        let catalog = Catalog::with_limit(trace.markets);
+        if catalog.len() != trace.markets {
+            return Err(format!(
+                "trace has {} markets but catalog holds only {}",
+                trace.markets,
+                catalog.len()
+            ));
+        }
+        Ok(World::new(catalog, trace))
+    } else {
+        Ok(World::generate(markets, months, seed))
+    }
+}
+
+fn analyze(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("analyze", "market analytics over price traces")
+        .opt("traces", "", "trace CSV (empty = generate synthetically)")
+        .opt("history", "", "real AWS describe-spot-price-history JSON")
+        .opt("markets", "64", "synthetic market count")
+        .opt("months", "3", "synthetic months")
+        .opt("seed", "2020", "synthetic seed")
+        .opt("artifacts", "artifacts", "AOT artifacts dir")
+        .opt("top", "10", "rows to print")
+        .flag("native", "force the native backend (skip PJRT)");
+    let a = spec.parse(raw)?;
+    let world = if !a.str("history").is_empty() {
+        let text = std::fs::read_to_string(a.str("history"))
+            .map_err(|e| format!("read {}: {e}", a.str("history")))?;
+        let catalog = Catalog::full();
+        let (trace, covered) =
+            siwoft::market::importer::import(&catalog, &text).map_err(|e| format!("{e}"))?;
+        println!("imported real price history: {covered} markets covered, {} hours", trace.hours);
+        World::new(catalog, trace)
+    } else {
+        load_or_generate_world(a.str("traces"), a.usize("markets")?, a.f64("months")?, a.u64("seed")?)?
+    };
+    let engine = if a.flag("native") {
+        AnalyticsEngine::native()
+    } else {
+        AnalyticsEngine::auto(a.str("artifacts"))
+    };
+    let t0 = std::time::Instant::now();
+    let ana: MarketAnalytics =
+        engine.compute(&world.trace, &world.od).map_err(|e| format!("analytics: {e:#}"))?;
+    println!(
+        "analytics backend={} markets={} window={}h elapsed={:?}",
+        engine.backend_name(),
+        ana.markets,
+        ana.window_hours,
+        t0.elapsed()
+    );
+    let order = ana.sort_by_lifetime_desc(&(0..ana.markets).collect::<Vec<_>>());
+    println!("\ntop markets by lifetime (MTTR):");
+    println!("{:<28} {:>10} {:>8} {:>10}", "market", "mttr_h", "events", "frac_above");
+    let top = a.usize("top")?.min(order.len());
+    for &m in order.iter().take(top) {
+        println!(
+            "{:<28} {:>10.1} {:>8.0} {:>10.4}",
+            world.catalog.markets[m].label(),
+            ana.mttr[m],
+            ana.events[m],
+            ana.frac_above[m]
+        );
+    }
+    // correlation summary
+    let m = ana.markets;
+    let mut offdiag: Vec<f32> = Vec::with_capacity(m * (m - 1) / 2);
+    for i in 0..m {
+        for j in (i + 1)..m {
+            offdiag.push(ana.corr_at(i, j));
+        }
+    }
+    offdiag.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |f: f64| offdiag[((offdiag.len() - 1) as f64 * f) as usize];
+    println!(
+        "\nrevocation correlation (off-diagonal): min {:.3}  p25 {:.3}  median {:.3}  p75 {:.3}  max {:.3}",
+        q(0.0),
+        q(0.25),
+        q(0.5),
+        q(0.75),
+        q(1.0)
+    );
+    Ok(())
+}
+
+fn simulate(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("simulate", "run one job under a policy/ft pair")
+        .opt("len", "8", "job execution length (hours)")
+        .opt("mem", "16", "job memory footprint (GB)")
+        .opt("policy", "p", "p | ft | ondemand | greedy")
+        .opt("ft", "none", "none | checkpoint | ckpt:<n> | migration | repl:<k>")
+        .opt("rule", "trace", "trace | rate:<per_day> | count:<n>")
+        .opt("markets", "192", "market count")
+        .opt("months", "3", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("seeds", "5", "runs to average")
+        .opt("train-frac", "0.67", "fraction of trace used for analytics")
+        .opt("artifacts", "artifacts", "AOT artifacts dir");
+    let a = spec.parse(raw)?;
+    let policy = PolicyKind::parse(a.str("policy")).ok_or("unknown --policy")?;
+    let ft = FtKind::parse(a.str("ft")).ok_or("unknown --ft")?;
+    let rule = parse_rule(a.str("rule"))?;
+
+    let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
+    let start = world.split_train(a.f64("train-frac")?);
+    // analytics epoch through the engine (PJRT when shapes match)
+    let engine = AnalyticsEngine::auto(a.str("artifacts"));
+    let train = world.trace.window(0, start as usize);
+    if let Ok(ana) = engine.compute(&train, &world.od) {
+        world.analytics = ana;
+    }
+    let coordinator = Coordinator::new_without_epoch(world);
+    let job = Job::new(1, a.f64("len")?, a.f64("mem")?);
+    let arm = Arm { label: "cli", policy, ft };
+    let cfg = RunConfig { rule, start_t: start, ..Default::default() };
+    let agg = coordinator.run_seeds(&job, &arm, &cfg, a.u64("seeds")?);
+    println!(
+        "policy={} ft={} job(len={}h mem={}GB) over {} seeds [{} backend]",
+        a.str("policy"),
+        a.str("ft"),
+        job.exec_len_h,
+        job.mem_gb,
+        agg.n,
+        engine.backend_name(),
+    );
+    println!(
+        "completion {:.3} h   cost ${:.4}   revocations {:.2}   completion-rate {:.2}",
+        agg.completion_h(),
+        agg.cost_usd(),
+        agg.mean_revocations,
+        agg.completion_rate
+    );
+    println!("\ntime breakdown (h):");
+    for (c, v) in agg.time.iter() {
+        if v > 0.0 {
+            println!("  {:<12} {:.4}", c.as_str(), v);
+        }
+    }
+    println!("cost breakdown ($):");
+    for (c, v) in agg.cost.iter() {
+        if v > 0.0 {
+            println!("  {:<12} {:.5}", c.as_str(), v);
+        }
+    }
+    Ok(())
+}
+
+fn parse_rule(s: &str) -> Result<RevocationRule, String> {
+    if s == "trace" {
+        Ok(RevocationRule::Trace)
+    } else if let Some(r) = s.strip_prefix("rate:") {
+        Ok(RevocationRule::ForcedRate { per_day: r.parse().map_err(|_| "bad rate")? })
+    } else if let Some(n) = s.strip_prefix("count:") {
+        Ok(RevocationRule::ForcedCount { total: n.parse().map_err(|_| "bad count")? })
+    } else {
+        Err(format!("unknown --rule '{s}'"))
+    }
+}
+
+fn fig(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("fig", "reproduce the paper's Fig. 1")
+        .opt("panel", "all", "a|b|c|d|e|f|all")
+        .opt("markets", "192", "market count")
+        .opt("months", "3", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("seeds", "10", "runs per bar")
+        .opt("rate", "3", "forced revocations/day for the F arm")
+        .opt("out", "results", "output dir for CSVs")
+        .opt("width", "46", "bar width (chars)");
+    let a = spec.parse(raw)?;
+    let opts = Fig1Options {
+        markets: a.usize("markets")?,
+        months: a.f64("months")?,
+        world_seed: a.u64("seed")?,
+        seeds: a.u64("seeds")?,
+        ft_rate_per_day: a.f64("rate")?,
+        train_frac: 0.67,
+        workers: 0,
+    };
+    let runner = Fig1Runner::prepare(opts);
+    let width = a.usize("width")?;
+    let want = a.str("panel");
+    let panels = runner.run_all();
+    for (id, panel) in panels {
+        if want != "all" && !want.contains(id) {
+            continue;
+        }
+        println!("{}", panel.render(width));
+        let path = format!("{}/fig1{}.csv", a.str("out"), id);
+        csvio::write_file(&path, &panel.to_csv()).map_err(|e| format!("write {path}: {e}"))?;
+        println!("wrote {path}\n");
+    }
+    Ok(())
+}
+
+fn run_ablation(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("ablation", "ablation studies")
+        .opt("which", "all", "ckpt|repl|corr|greedy|all")
+        .opt("markets", "96", "market count")
+        .opt("months", "3", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("seeds", "8", "runs per point")
+        .opt("out", "results", "output dir");
+    let a = spec.parse(raw)?;
+    let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
+    let start = world.split_train(0.67);
+    let seeds = a.u64("seeds")?;
+    let which = a.str("which");
+
+    let emit = |name: &str, series: &ablation::Series| -> Result<(), String> {
+        println!("== {name} ==");
+        println!("{:<16} {:>12} {:>12} {:>8}", "x", "completion_h", "cost_usd", "revs");
+        let mut rows =
+            vec![siwoft::csv_row!["x", "completion_h", "cost_usd", "mean_revocations"]];
+        for (x, agg) in series {
+            println!(
+                "{:<16} {:>12.3} {:>12.4} {:>8.2}",
+                x,
+                agg.completion_h(),
+                agg.cost_usd(),
+                agg.mean_revocations
+            );
+            rows.push(siwoft::csv_row![x, agg.completion_h(), agg.cost_usd(), agg.mean_revocations]);
+        }
+        let path = format!("{}/ablation_{name}.csv", a.str("out"));
+        csvio::write_file(&path, &rows).map_err(|e| format!("write {path}: {e}"))?;
+        println!();
+        Ok(())
+    };
+
+    if which == "all" || which == "ckpt" {
+        emit("ckpt", &ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]))?;
+    }
+    if which == "all" || which == "repl" {
+        emit("repl", &ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]))?;
+    }
+    if which == "all" || which == "corr" {
+        emit("corr", &ablation::corr_filter_ablation(&world, start, seeds))?;
+    }
+    if which == "all" || which == "greedy" {
+        emit("greedy", &ablation::greedy_vs_psiwoft(&world, start, seeds))?;
+    }
+    if which == "all" || which == "baselines" {
+        emit("baselines", &ablation::analytics_baselines(&world, start, seeds))?;
+    }
+    Ok(())
+}
+
+fn sensitivity(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("sensitivity", "spot/on-demand price-ratio sweep")
+        .opt("ratios", "0.2,0.3,0.4,0.5,0.6,0.7", "comma-separated ratios")
+        .opt("markets", "96", "market count")
+        .opt("seed", "2020", "world seed")
+        .opt("seeds", "8", "runs per point")
+        .opt("rate", "8", "forced revocations/day for the F arm")
+        .opt("out", "results", "output dir");
+    let a = spec.parse(raw)?;
+    let ratios = a.f64_list("ratios")?;
+    let pts = siwoft::experiments::sensitivity::ratio_sweep(
+        &ratios,
+        a.usize("markets")?,
+        a.u64("seed")?,
+        a.u64("seeds")?,
+        a.f64("rate")?,
+    );
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "ratio", "P_cost", "F_cost", "O_cost", "F/O", "P/O"
+    );
+    let mut rows = vec![siwoft::csv_row!["ratio", "p_cost", "f_cost", "o_cost", "f_over_o", "p_over_o"]];
+    for p in &pts {
+        println!(
+            "{:<8} {:>10.4} {:>10.4} {:>10.4} {:>8.3} {:>8.3}",
+            p.ratio,
+            p.p.cost_usd(),
+            p.f.cost_usd(),
+            p.o.cost_usd(),
+            p.f_over_o(),
+            p.p_over_o()
+        );
+        rows.push(siwoft::csv_row![
+            p.ratio,
+            p.p.cost_usd(),
+            p.f.cost_usd(),
+            p.o.cost_usd(),
+            p.f_over_o(),
+            p.p_over_o()
+        ]);
+    }
+    match siwoft::experiments::sensitivity::crossover(&pts) {
+        Some(x) => println!("\nF ≥ O crossover at spot/od ratio {x}"),
+        None => println!("\nno F/O crossover in the swept range"),
+    }
+    let path = format!("{}/sensitivity.csv", a.str("out"));
+    csvio::write_file(&path, &rows).map_err(|e| format!("write {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cluster(raw: &[String]) -> Result<(), String> {
+    use siwoft::coordinator::{run_cluster, ClusterConfig};
+    use siwoft::market::MarketAnalytics;
+    let spec = CommandSpec::new("cluster", "rolling-epoch cluster simulation")
+        .opt("markets", "192", "market count")
+        .opt("months", "3", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("rate", "0.5", "job arrivals per hour")
+        .opt("horizon", "240", "simulated horizon (hours)")
+        .opt("refresh", "24", "analytics refresh cadence (hours)")
+        .opt("window", "720", "trailing analytics window (hours)")
+        .opt("policy", "p", "p | ft | ondemand | greedy")
+        .opt("artifacts", "artifacts", "AOT artifacts dir");
+    let a = spec.parse(raw)?;
+    let policy = PolicyKind::parse(a.str("policy")).ok_or("unknown --policy")?;
+    let months = a.f64("months")?;
+    let window = a.f64("window")?;
+    let horizon = a.f64("horizon")?;
+    let mut world = World::generate(a.usize("markets")?, months, a.u64("seed")?);
+    let engine = AnalyticsEngine::auto(a.str("artifacts"));
+    let cfg = ClusterConfig {
+        arrival_rate_per_h: a.f64("rate")?,
+        horizon_h: horizon,
+        refresh_every_h: a.f64("refresh")?,
+        window_h: window,
+        start_h: window,
+        seed: a.u64("seed")?,
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_cluster(
+        &mut world,
+        &cfg,
+        || policy.make(),
+        |w, h0, h1| {
+            let win = w.trace.window(h0, h1.max(h0 + 2));
+            engine
+                .compute(&win, &w.od)
+                .unwrap_or_else(|_| MarketAnalytics::compute(&win, &w.od))
+        },
+        |rng, id| Job::new(id, 1.0 + rng.f64() * 7.0, 16.0),
+    );
+    println!(
+        "cluster [{} backend]: {} jobs ({} completed) over {horizon}h, {} analytics epochs, wall {:?}",
+        engine.backend_name(),
+        report.jobs,
+        report.completed,
+        report.epochs,
+        t0.elapsed()
+    );
+    println!(
+        "mean completion {:.3} h (±{:.3}) | total cost ${:.2} | revocations {}",
+        report.completion.mean(),
+        report.completion.ci95(),
+        report.total_cost,
+        report.revocations
+    );
+    Ok(())
+}
+
+fn run_config(raw: &[String]) -> Result<(), String> {
+    use siwoft::util::config::Config;
+    let spec = CommandSpec::new("run", "run an experiment from a TOML config")
+        .req("config", "path to a TOML experiment config (see configs/)");
+    let a = spec.parse(raw)?;
+    let cfg = Config::load(a.str("config")).map_err(|e| format!("{e}"))?;
+    let kind = cfg.str("experiment.kind").map_err(|e| format!("{e}"))?.to_string();
+    // translate the config into the equivalent CLI invocation so every
+    // knob has exactly one implementation
+    let mut args: Vec<String> = Vec::new();
+    let mut push = |k: &str, v: String| {
+        args.push(format!("--{k}"));
+        args.push(v);
+    };
+    for key in cfg.keys() {
+        if let Some(opt) = key.strip_prefix(&format!("{kind}.")) {
+            let v = cfg.get(key).unwrap();
+            let s = match v {
+                siwoft::util::config::Value::Str(s) => s.clone(),
+                siwoft::util::config::Value::Int(i) => i.to_string(),
+                siwoft::util::config::Value::Float(f) => f.to_string(),
+                siwoft::util::config::Value::Bool(b) => b.to_string(),
+                siwoft::util::config::Value::Arr(xs) => xs
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f.to_string()).unwrap_or_default())
+                    .collect::<Vec<_>>()
+                    .join(","),
+            };
+            push(opt, s);
+        }
+    }
+    println!("[run] {kind} {}", args.join(" "));
+    match kind.as_str() {
+        "fig" => fig(&args),
+        "simulate" => simulate(&args),
+        "ablation" => run_ablation(&args),
+        "sensitivity" => sensitivity(&args),
+        "cluster" => cluster(&args),
+        "gen-traces" => gen_traces(&args),
+        other => Err(format!("unknown experiment.kind '{other}'")),
+    }
+}
+
+fn serve(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("serve", "start the TCP control plane")
+        .opt("addr", "127.0.0.1:7747", "bind address")
+        .opt("markets", "192", "market count")
+        .opt("months", "3", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("workers", "0", "worker threads (0 = cores)")
+        .opt("artifacts", "artifacts", "AOT artifacts dir");
+    let a = spec.parse(raw)?;
+    let world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
+    let engine = AnalyticsEngine::auto(a.str("artifacts"));
+    let coordinator = Coordinator::new(world, engine, a.usize("workers")?);
+    let server = Server::new(coordinator);
+    server
+        .serve(a.str("addr"), |addr| println!("listening on {addr} — JSON lines: submit/status/shutdown"))
+        .map_err(|e| format!("serve: {e:#}"))
+}

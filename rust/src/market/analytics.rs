@@ -1,0 +1,362 @@
+//! Native market analytics — the Rust mirror of the L1/L2 compute:
+//! MTTR, revocation events, above-fraction and the revocation-correlation
+//! matrix, computed from a [`PriceTrace`].
+//!
+//! The formulas are pinned by `python/compile/kernels/ref.py`; the PJRT
+//! path (`runtime::analytics_rt`) must agree with this module to f32
+//! tolerance (validated in `rust/tests/integration_runtime.rs`), and the
+//! policy layer consumes the results through this struct either way.
+
+use super::trace::PriceTrace;
+
+#[derive(Clone, Debug)]
+pub struct MarketAnalytics {
+    pub markets: usize,
+    /// window length the stats were computed over (hours)
+    pub window_hours: usize,
+    /// mean time to revocation per market (hours); = window when the
+    /// market never revoked inside it
+    pub mttr: Vec<f32>,
+    /// number of below→above transitions in the window
+    pub events: Vec<f32>,
+    /// fraction of hours spent above on-demand
+    pub frac_above: Vec<f32>,
+    /// row-major `[M*M]` Pearson correlation of hourly revocation indicators
+    pub corr: Vec<f32>,
+}
+
+impl MarketAnalytics {
+    /// Compute all statistics natively (f32 outputs matching the
+    /// artifact numerics to ≤1e-4 — validated in
+    /// `rust/tests/integration_runtime.rs`).
+    ///
+    /// Perf: the indicator matrix is *binary*, so rows are bit-packed
+    /// and the O(M²·H) correlation contraction becomes AND+popcount over
+    /// u64 words (64 hours per op).  For binary data the moments are
+    /// exact in closed form — σ² = μ(1−μ), cov = n₁₁/H − μᵢμⱼ — so no
+    /// float dot products are needed at all.  ≈25x over the f32
+    /// dot-product formulation at 192×2160 (EXPERIMENTS.md §Perf).
+    pub fn compute(trace: &PriceTrace, od_prices: &[f32]) -> MarketAnalytics {
+        assert_eq!(trace.markets, od_prices.len(), "od price vector misaligned");
+        let (m, h) = (trace.markets, trace.hours);
+        let hf = h as f32;
+        let words = h.div_ceil(64);
+
+        let mut bits = vec![0u64; m * words];
+        let mut mttr = vec![0.0f32; m];
+        let mut events = vec![0.0f32; m];
+        let mut frac_above = vec![0.0f32; m];
+        let mut mu = vec![0.0f32; m];
+        let mut sigma = vec![0.0f32; m];
+
+        // single pass per row: pack bits + events + above-count
+        for mi in 0..m {
+            let row = trace.row(mi);
+            let od = od_prices[mi];
+            let b = &mut bits[mi * words..(mi + 1) * words];
+            let mut ev = 0.0f32;
+            let mut above = 0u32;
+            let mut prev = false;
+            for (hi, &p) in row.iter().enumerate() {
+                let rev = p > od;
+                if rev {
+                    b[hi >> 6] |= 1u64 << (hi & 63);
+                    above += 1;
+                    if !prev {
+                        ev += 1.0;
+                    }
+                }
+                prev = rev;
+            }
+            events[mi] = ev;
+            let above_f = above as f32;
+            frac_above[mi] = above_f / hf;
+            let avail = hf - above_f;
+            mttr[mi] = if ev > 0.0 { avail / ev.max(1.0) } else { hf };
+            let mean = above_f / hf;
+            mu[mi] = mean;
+            sigma[mi] = (mean - mean * mean).max(0.0).sqrt();
+        }
+
+        // correlation via co-occurrence counts (symmetric)
+        let mut corr = vec![0.0f32; m * m];
+        for i in 0..m {
+            corr[i * m + i] = 1.0;
+            let bi = &bits[i * words..(i + 1) * words];
+            for j in (i + 1)..m {
+                let denom = sigma[i] * sigma[j];
+                let c = if denom > 0.0 {
+                    let bj = &bits[j * words..(j + 1) * words];
+                    let n11: u32 = bi.iter().zip(bj).map(|(a, b)| (a & b).count_ones()).sum();
+                    let cov = n11 as f32 / hf - mu[i] * mu[j];
+                    cov / denom
+                } else {
+                    0.0
+                };
+                corr[i * m + j] = c;
+                corr[j * m + i] = c;
+            }
+        }
+
+        MarketAnalytics { markets: m, window_hours: h, mttr, events, frac_above, corr }
+    }
+
+    #[inline]
+    pub fn corr_at(&self, i: usize, j: usize) -> f32 {
+        self.corr[i * self.markets + j]
+    }
+
+    /// Markets sorted by MTTR descending (ties broken by id for
+    /// determinism) restricted to `candidates`.
+    pub fn sort_by_lifetime_desc(&self, candidates: &[usize]) -> Vec<usize> {
+        let mut v: Vec<usize> = candidates.to_vec();
+        v.sort_by(|&a, &b| {
+            self.mttr[b]
+                .partial_cmp(&self.mttr[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        v
+    }
+
+    /// Paper §III-A: markets whose revocation correlation with `revoked`
+    /// is below `threshold` ("low revocation correlation set W").
+    pub fn low_correlation_set(&self, revoked: usize, threshold: f32) -> Vec<usize> {
+        (0..self.markets)
+            .filter(|&j| j != revoked && self.corr_at(revoked, j) < threshold)
+            .collect()
+    }
+}
+
+/// Empirical survival curves `S[M, T]` — the native mirror of the
+/// `survival` artifact (`python/compile/kernels/survival.py`):
+/// probability that an instance provisioned at a uniformly random
+/// *available* hour survives at least `t+1` hours (t = 0..T-1).
+///
+/// A never-revoked market decays linearly (right-censoring at the
+/// window edge); an always-revoked market is all-zero.
+#[derive(Clone, Debug)]
+pub struct SurvivalCurves {
+    pub markets: usize,
+    pub t_buckets: usize,
+    /// row-major [M * T]
+    pub s: Vec<f32>,
+}
+
+impl SurvivalCurves {
+    pub const DEFAULT_T: usize = 64;
+
+    pub fn compute(trace: &PriceTrace, od_prices: &[f32], t_buckets: usize) -> SurvivalCurves {
+        assert_eq!(trace.markets, od_prices.len());
+        let (m, h) = (trace.markets, trace.hours);
+        let mut s = vec![0.0f32; m * t_buckets];
+        // Perf: survivors(t) for all t in one pass — histogram the run
+        // lengths (clamped to T) and suffix-sum, O(H + T) per market
+        // instead of T scans over the runs array (EXPERIMENTS.md §Perf).
+        let mut counts = vec![0u32; t_buckets + 1];
+        for mi in 0..m {
+            let row = trace.row(mi);
+            let od = od_prices[mi];
+            counts.iter_mut().for_each(|c| *c = 0);
+            // reverse scan: consecutive available hours starting at hi
+            let mut run = 0u32;
+            for hi in (0..h).rev() {
+                run = if row[hi] > od { 0 } else { run + 1 };
+                if run >= 1 {
+                    counts[(run as usize).min(t_buckets)] += 1;
+                }
+            }
+            let out = &mut s[mi * t_buckets..(mi + 1) * t_buckets];
+            let mut suffix = 0u32;
+            for t in (1..=t_buckets).rev() {
+                suffix += counts[t];
+                out[t - 1] = suffix as f32;
+            }
+            let denom = out[0].max(1.0);
+            for o in out.iter_mut() {
+                *o /= denom;
+            }
+        }
+        SurvivalCurves { markets: m, t_buckets, s }
+    }
+
+    /// S[market, t] with `t` in hours (1-based); clamps to the grid.
+    #[inline]
+    pub fn at(&self, market: usize, t_hours: f64) -> f32 {
+        let ti = (t_hours.ceil() as usize).clamp(1, self.t_buckets) - 1;
+        self.s[market * self.t_buckets + ti]
+    }
+
+    /// Markets ranked by survival probability at horizon `t_hours`
+    /// (descending), restricted to `candidates`.
+    pub fn rank_by_survival(&self, candidates: &[usize], t_hours: f64) -> Vec<usize> {
+        let mut v = candidates.to_vec();
+        v.sort_by(|&a, &b| {
+            self.at(b, t_hours)
+                .partial_cmp(&self.at(a, t_hours))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built trace: 2 markets, 8 hours, od = 1.0.
+    /// m0: below,above,above,below,below,above,below,below → 2 events,
+    ///     5 avail hours → mttr 2.5
+    /// m1: always below → 0 events → mttr = 8
+    fn tiny() -> (PriceTrace, Vec<f32>) {
+        let rows = vec![
+            vec![0.5, 1.5, 1.5, 0.5, 0.5, 1.5, 0.5, 0.5],
+            vec![0.5; 8],
+        ];
+        (PriceTrace::from_rows(rows).unwrap(), vec![1.0, 1.0])
+    }
+
+    #[test]
+    fn mttr_and_events_match_hand_computation() {
+        let (t, od) = tiny();
+        let a = MarketAnalytics::compute(&t, &od);
+        assert_eq!(a.events[0], 2.0);
+        assert_eq!(a.mttr[0], 2.5);
+        assert_eq!(a.frac_above[0], 3.0 / 8.0);
+        assert_eq!(a.events[1], 0.0);
+        assert_eq!(a.mttr[1], 8.0);
+        assert_eq!(a.frac_above[1], 0.0);
+    }
+
+    #[test]
+    fn zero_variance_rows_uncorrelated() {
+        let (t, od) = tiny();
+        let a = MarketAnalytics::compute(&t, &od);
+        assert_eq!(a.corr_at(0, 1), 0.0);
+        assert_eq!(a.corr_at(0, 0), 1.0);
+        assert_eq!(a.corr_at(1, 1), 1.0);
+    }
+
+    #[test]
+    fn identical_markets_fully_correlated() {
+        let row = vec![0.5, 1.5, 0.5, 1.5, 1.5, 0.5];
+        let t = PriceTrace::from_rows(vec![row.clone(), row]).unwrap();
+        let a = MarketAnalytics::compute(&t, &[1.0, 1.0]);
+        assert!((a.corr_at(0, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn anti_correlated() {
+        let t = PriceTrace::from_rows(vec![
+            vec![0.5, 1.5, 0.5, 1.5],
+            vec![1.5, 0.5, 1.5, 0.5],
+        ])
+        .unwrap();
+        let a = MarketAnalytics::compute(&t, &[1.0, 1.0]);
+        assert!((a.corr_at(0, 1) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetry_and_bounds() {
+        use crate::market::{catalog::Catalog, tracegen};
+        let cat = Catalog::with_limit(24);
+        let cfg = tracegen::TraceGenConfig { months: 0.5, seed: 3, ..Default::default() };
+        let t = tracegen::generate(&cat, &cfg);
+        let a = MarketAnalytics::compute(&t, &cat.od_prices());
+        for i in 0..a.markets {
+            assert_eq!(a.corr_at(i, i), 1.0);
+            for j in 0..a.markets {
+                assert!((a.corr_at(i, j) - a.corr_at(j, i)).abs() < 1e-6);
+                assert!(a.corr_at(i, j) <= 1.0 + 1e-5 && a.corr_at(i, j) >= -1.0 - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn sort_by_lifetime() {
+        let (t, od) = tiny();
+        let a = MarketAnalytics::compute(&t, &od);
+        assert_eq!(a.sort_by_lifetime_desc(&[0, 1]), vec![1, 0]);
+        assert_eq!(a.sort_by_lifetime_desc(&[0]), vec![0]);
+    }
+
+    #[test]
+    fn low_correlation_set_filters() {
+        let row = vec![0.5, 1.5, 0.5, 1.5, 1.5, 0.5];
+        let anti: Vec<f32> = row.iter().map(|&p| if p > 1.0 { 0.5 } else { 1.5 }).collect();
+        let t = PriceTrace::from_rows(vec![row.clone(), row.clone(), anti]).unwrap();
+        let a = MarketAnalytics::compute(&t, &[1.0; 3]);
+        // market 1 is a clone of 0 (corr 1), market 2 is anti (corr -1)
+        let w = a.low_correlation_set(0, 0.5);
+        assert_eq!(w, vec![2]);
+    }
+
+    #[test]
+    fn survival_hand_example() {
+        // X: 0 0 1 0 1 1 0 0 → runs 2 1 0 1 0 0 2 1
+        // survivors(1) = 5, survivors(2) = 2 → S = [1.0, 0.4, 0, ...]
+        let prices = vec![0.5, 0.5, 1.5, 0.5, 1.5, 1.5, 0.5, 0.5];
+        let t = PriceTrace::from_rows(vec![prices]).unwrap();
+        let s = SurvivalCurves::compute(&t, &[1.0], 4);
+        assert_eq!(s.at(0, 1.0), 1.0);
+        assert!((s.at(0, 2.0) - 0.4).abs() < 1e-6);
+        assert_eq!(s.at(0, 3.0), 0.0);
+        assert_eq!(s.at(0, 4.0), 0.0);
+    }
+
+    #[test]
+    fn survival_monotone_and_bounded() {
+        use crate::market::{catalog::Catalog, tracegen};
+        let cat = Catalog::with_limit(16);
+        let cfg = tracegen::TraceGenConfig { months: 0.5, seed: 8, ..Default::default() };
+        let t = tracegen::generate(&cat, &cfg);
+        let s = SurvivalCurves::compute(&t, &cat.od_prices(), 32);
+        for m in 0..16 {
+            let mut prev = f32::INFINITY;
+            for ti in 1..=32 {
+                let v = s.at(m, ti as f64);
+                assert!((0.0..=1.0 + 1e-6).contains(&v));
+                assert!(v <= prev + 1e-6, "survival increased at t={ti}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn survival_never_revoked_censored_linear() {
+        let t = PriceTrace::from_rows(vec![vec![0.5; 32]]).unwrap();
+        let s = SurvivalCurves::compute(&t, &[1.0], 8);
+        for ti in 1..=8usize {
+            let want = (33 - ti) as f32 / 32.0;
+            assert!((s.at(0, ti as f64) - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn survival_ranking_prefers_stable() {
+        let stable = vec![0.5f32; 64];
+        let volatile: Vec<f32> = (0..64).map(|h| if h % 4 == 3 { 1.5 } else { 0.5 }).collect();
+        let t = PriceTrace::from_rows(vec![volatile, stable]).unwrap();
+        let s = SurvivalCurves::compute(&t, &[1.0, 1.0], 16);
+        assert_eq!(s.rank_by_survival(&[0, 1], 8.0), vec![1, 0]);
+    }
+
+    #[test]
+    fn survival_at_clamps_horizon() {
+        let t = PriceTrace::from_rows(vec![vec![0.5; 16]]).unwrap();
+        let s = SurvivalCurves::compute(&t, &[1.0], 4);
+        assert_eq!(s.at(0, 0.0), s.at(0, 1.0));
+        assert_eq!(s.at(0, 99.0), s.at(0, 4.0));
+    }
+
+    #[test]
+    fn alternating_full_window() {
+        // 0,1,0,1... over 12h: events 6, avail 6 → mttr 1
+        let prices: Vec<f32> = (0..12).map(|h| if h % 2 == 1 { 1.5 } else { 0.5 }).collect();
+        let t = PriceTrace::from_rows(vec![prices]).unwrap();
+        let a = MarketAnalytics::compute(&t, &[1.0]);
+        assert_eq!(a.events[0], 6.0);
+        assert_eq!(a.mttr[0], 1.0);
+    }
+}

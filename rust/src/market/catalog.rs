@@ -1,0 +1,267 @@
+//! EC2-like instance catalog: families, sizes, on-demand prices, and the
+//! cross-product with regions/AZs that forms the set of *spot markets*.
+//!
+//! Prices are the real 2020 us-east-1 Linux on-demand rates for the m5 /
+//! c5 / r5 families (the paper's testbed family, m5ad, included).  Only
+//! *relative* prices matter for the reproduction (see DESIGN.md §2); the
+//! per-region multipliers are stylized.
+
+/// A rentable instance type.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstanceType {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub vcpus: u32,
+    pub mem_gb: f64,
+    /// us-east-1 Linux on-demand $/h (2020)
+    pub od_price: f64,
+}
+
+/// One cloud spot market = (instance type, region, availability zone).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MarketSpec {
+    pub id: usize,
+    pub instance: InstanceType,
+    pub region: &'static str,
+    pub az: char,
+    /// on-demand price in this region ($/h)
+    pub od_price: f64,
+}
+
+impl MarketSpec {
+    pub fn label(&self) -> String {
+        format!("{}/{}{}", self.instance.name, self.region, self.az)
+    }
+}
+
+pub const REGIONS: &[(&str, f64)] = &[
+    // (region, on-demand price multiplier vs us-east-1)
+    ("us-east-1", 1.00),
+    ("us-west-2", 1.00),
+    ("eu-west-1", 1.11),
+    ("ap-southeast-1", 1.20),
+];
+
+pub const AZS: &[char] = &['a', 'b', 'c'];
+
+/// Base instance-type table (2020 us-east-1 Linux on-demand).
+pub fn instance_types() -> Vec<InstanceType> {
+    fn it(name: &'static str, family: &'static str, vcpus: u32, mem_gb: f64, od: f64) -> InstanceType {
+        InstanceType { name, family, vcpus, mem_gb, od_price: od }
+    }
+    vec![
+        // general purpose
+        it("m5.large", "m5", 2, 8.0, 0.096),
+        it("m5.xlarge", "m5", 4, 16.0, 0.192),
+        it("m5.2xlarge", "m5", 8, 32.0, 0.384),
+        it("m5.4xlarge", "m5", 16, 64.0, 0.768),
+        it("m5.8xlarge", "m5", 32, 128.0, 1.536),
+        it("m5.12xlarge", "m5", 48, 192.0, 2.304),
+        // the paper's testbed type
+        it("m5ad.12xlarge", "m5ad", 48, 192.0, 2.472),
+        // compute optimized
+        it("c5.large", "c5", 2, 4.0, 0.085),
+        it("c5.xlarge", "c5", 4, 8.0, 0.17),
+        it("c5.2xlarge", "c5", 8, 16.0, 0.34),
+        it("c5.4xlarge", "c5", 16, 32.0, 0.68),
+        it("c5.9xlarge", "c5", 36, 72.0, 1.53),
+        // memory optimized
+        it("r5.large", "r5", 2, 16.0, 0.126),
+        it("r5.xlarge", "r5", 4, 32.0, 0.252),
+        it("r5.2xlarge", "r5", 8, 64.0, 0.504),
+        it("r5.4xlarge", "r5", 16, 128.0, 1.008),
+    ]
+}
+
+/// Catalog: the full market universe plus lookup helpers.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    pub markets: Vec<MarketSpec>,
+}
+
+impl Catalog {
+    /// Full cross-product catalog: 16 types × 4 regions × 3 AZs = 192 markets.
+    pub fn full() -> Catalog {
+        Catalog::with_limit(usize::MAX)
+    }
+
+    /// Catalog truncated to at most `n` markets (round-robin across
+    /// types so every size class stays represented).
+    pub fn with_limit(n: usize) -> Catalog {
+        let types = instance_types();
+        let mut markets = Vec::new();
+        'outer: for (region, mult) in REGIONS {
+            for &az in AZS {
+                for ty in &types {
+                    if markets.len() >= n {
+                        break 'outer;
+                    }
+                    markets.push(MarketSpec {
+                        id: markets.len(),
+                        instance: ty.clone(),
+                        region,
+                        az,
+                        od_price: ty.od_price * mult,
+                    });
+                }
+            }
+        }
+        Catalog { markets }
+    }
+
+    pub fn len(&self) -> usize {
+        self.markets.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.markets.is_empty()
+    }
+
+    /// On-demand prices vector aligned with market ids.
+    pub fn od_prices(&self) -> Vec<f32> {
+        self.markets.iter().map(|m| m.od_price as f32).collect()
+    }
+
+    /// Step 2 of Algorithm 1 (`FindSuitableServers`): markets whose
+    /// instance type satisfies the job's memory requirement.  Following
+    /// the paper ("we use the memory size to determine suitable types"),
+    /// suitability is *best-fit type* matching: the cheapest instance
+    /// type at the smallest memory size that fits the job, across all of
+    /// its AZ/region markets.  (The paper's testbed ran exactly one type
+    /// — m5ad.12xlarge — across markets; a price-homogeneous candidate
+    /// set is what its cost comparisons rely on.  Mixing price tiers
+    /// inside the set lets "highest MTTR" silently buy a pricier type,
+    /// which is an interesting failure mode of Algorithm 1 but not the
+    /// paper's setup.)
+    pub fn suitable(&self, mem_gb: f64) -> Vec<usize> {
+        let best_mem = self
+            .markets
+            .iter()
+            .map(|m| m.instance.mem_gb)
+            .filter(|&g| g >= mem_gb)
+            .fold(f64::INFINITY, f64::min);
+        if !best_mem.is_finite() {
+            return Vec::new();
+        }
+        let best_type = self
+            .markets
+            .iter()
+            .filter(|m| m.instance.mem_gb == best_mem)
+            .min_by(|a, b| a.instance.od_price.partial_cmp(&b.instance.od_price).unwrap())
+            .map(|m| m.instance.name)
+            .unwrap();
+        self.markets
+            .iter()
+            .filter(|m| m.instance.name == best_type)
+            .map(|m| m.id)
+            .collect()
+    }
+
+    /// Cheapest suitable *on-demand* market for a job (baseline O).
+    pub fn cheapest_ondemand(&self, mem_gb: f64) -> Option<usize> {
+        self.suitable(mem_gb)
+            .into_iter()
+            .min_by(|&a, &b| self.markets[a].od_price.partial_cmp(&self.markets[b].od_price).unwrap())
+    }
+
+    /// Markets in the same AZ (used by the trace generator to correlate
+    /// revocation shocks within an AZ).
+    pub fn az_group(&self, id: usize) -> usize {
+        let m = &self.markets[id];
+        let region_idx = REGIONS.iter().position(|(r, _)| *r == m.region).unwrap_or(0);
+        let az_idx = AZS.iter().position(|&a| a == m.az).unwrap_or(0);
+        region_idx * AZS.len() + az_idx
+    }
+
+    pub fn az_group_count(&self) -> usize {
+        REGIONS.len() * AZS.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_catalog_size() {
+        let c = Catalog::full();
+        assert_eq!(c.len(), instance_types().len() * REGIONS.len() * AZS.len());
+        // ids are dense and ordered
+        for (i, m) in c.markets.iter().enumerate() {
+            assert_eq!(m.id, i);
+        }
+    }
+
+    #[test]
+    fn limit_respected() {
+        let c = Catalog::with_limit(64);
+        assert_eq!(c.len(), 64);
+    }
+
+    #[test]
+    fn regional_multiplier_applied() {
+        let c = Catalog::full();
+        let useast = c.markets.iter().find(|m| m.region == "us-east-1" && m.instance.name == "m5.large").unwrap();
+        let eu = c.markets.iter().find(|m| m.region == "eu-west-1" && m.instance.name == "m5.large").unwrap();
+        assert!((eu.od_price / useast.od_price - 1.11).abs() < 1e-9);
+    }
+
+    #[test]
+    fn suitable_is_best_fit_type() {
+        let c = Catalog::full();
+        let ids = c.suitable(16.0);
+        assert!(!ids.is_empty());
+        // every suitable market is the cheapest 16 GB type (r5.large),
+        // spanning AZ/region markets
+        for &id in &ids {
+            assert_eq!(c.markets[id].instance.name, "r5.large", "{}", c.markets[id].label());
+        }
+        assert_eq!(ids.len(), REGIONS.len() * AZS.len());
+        // a 12 GB job also lands in the 16 GB class (best fit ≥ request)
+        assert_eq!(c.suitable(12.0), ids);
+        // prices inside the set differ only by region multiplier (≤ 1.2x)
+        let prices: Vec<f64> = ids.iter().map(|&i| c.markets[i].od_price).collect();
+        let (lo, hi) = prices.iter().fold((f64::MAX, 0.0f64), |(l, h), &p| (l.min(p), h.max(p)));
+        assert!(hi / lo <= 1.25);
+    }
+
+    #[test]
+    fn suitable_huge_job_uses_top_class() {
+        let c = Catalog::full();
+        let ids = c.suitable(150.0);
+        assert!(!ids.is_empty());
+        // cheapest 192 GB type is m5.12xlarge
+        assert!(ids.iter().all(|&i| c.markets[i].instance.name == "m5.12xlarge"));
+        // nothing fits an impossible request
+        assert!(c.suitable(1000.0).is_empty());
+    }
+
+    #[test]
+    fn cheapest_ondemand_is_cheapest() {
+        let c = Catalog::full();
+        let best = c.cheapest_ondemand(8.0).unwrap();
+        for &id in &c.suitable(8.0) {
+            assert!(c.markets[best].od_price <= c.markets[id].od_price);
+        }
+    }
+
+    #[test]
+    fn az_groups_partition() {
+        let c = Catalog::full();
+        let g = c.az_group_count();
+        for m in &c.markets {
+            assert!(c.az_group(m.id) < g);
+        }
+        // markets in same region+az share a group
+        let a = c.markets.iter().find(|m| m.region == "us-east-1" && m.az == 'a').unwrap();
+        let b = c.markets.iter().rfind(|m| m.region == "us-east-1" && m.az == 'a').unwrap();
+        assert_eq!(c.az_group(a.id), c.az_group(b.id));
+    }
+
+    #[test]
+    fn od_prices_aligned() {
+        let c = Catalog::with_limit(10);
+        let od = c.od_prices();
+        assert_eq!(od.len(), 10);
+        assert!((od[3] as f64 - c.markets[3].od_price).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,276 @@
+//! Importer for real AWS spot price history.
+//!
+//! The paper collects its traces through "EC2's REST API ... for all
+//! spot instances across all markets for the past three months".  The
+//! equivalent offline artifact is the JSON printed by
+//!
+//! ```text
+//! aws ec2 describe-spot-price-history --start-time ... > history.json
+//! ```
+//!
+//! whose shape is `{"SpotPriceHistory": [{"AvailabilityZone": "us-east-1a",
+//! "InstanceType": "r5.large", "SpotPrice": "0.0354",
+//! "Timestamp": "2020-03-01T14:23:45.000Z", ...}, ...]}`.
+//!
+//! [`import`] buckets the samples into the hourly `[M, H]` grid the
+//! analytics layer consumes (last-observation-carried-forward within
+//! each market, matching EC2's step-function price semantics) and
+//! aligns rows with a [`Catalog`] by `(instance type, zone)`.
+
+use std::collections::BTreeMap;
+
+use super::catalog::Catalog;
+use super::trace::PriceTrace;
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ImportError {
+    #[error("history json: {0}")]
+    Json(String),
+    #[error("history contains no usable samples")]
+    Empty,
+    #[error("bad timestamp '{0}'")]
+    Timestamp(String),
+}
+
+/// One parsed price observation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub instance_type: String,
+    pub zone: String,
+    pub price: f32,
+    /// hours since the unix epoch
+    pub epoch_hour: i64,
+}
+
+/// Parse `YYYY-MM-DDTHH:MM:SS[.fff]Z` into hours since the unix epoch
+/// (days-from-civil; no leap seconds, which is AWS's convention too).
+pub fn parse_timestamp_hours(ts: &str) -> Result<i64, ImportError> {
+    let bad = || ImportError::Timestamp(ts.to_string());
+    let b = ts.as_bytes();
+    if b.len() < 13 || b[4] != b'-' || b[7] != b'-' || (b[10] != b'T' && b[10] != b' ') {
+        return Err(bad());
+    }
+    let num = |s: &str| s.parse::<i64>().map_err(|_| bad());
+    let year = num(&ts[0..4])?;
+    let month = num(&ts[5..7])?;
+    let day = num(&ts[8..10])?;
+    let hour = num(&ts[11..13])?;
+    if !(1..=12).contains(&month) || !(1..=31).contains(&day) || !(0..=23).contains(&hour) {
+        return Err(bad());
+    }
+    // Howard Hinnant's days-from-civil
+    let y = if month <= 2 { year - 1 } else { year };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = y - era * 400;
+    let mp = (month + 9) % 12;
+    let doy = (153 * mp + 2) / 5 + day - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    let days = era * 146_097 + doe - 719_468;
+    Ok(days * 24 + hour)
+}
+
+/// Parse the raw JSON into samples (unknown instance types/zones kept —
+/// filtering happens at grid time).
+pub fn parse_history(text: &str) -> Result<Vec<Sample>, ImportError> {
+    let j = Json::parse(text).map_err(|e| ImportError::Json(e.to_string()))?;
+    let arr = j
+        .get("SpotPriceHistory")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ImportError::Json("missing 'SpotPriceHistory' array".into()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let get = |k: &str| item.get(k).and_then(Json::as_str);
+        let (Some(ty), Some(zone), Some(price), Some(ts)) = (
+            get("InstanceType"),
+            get("AvailabilityZone"),
+            get("SpotPrice"),
+            get("Timestamp"),
+        ) else {
+            continue; // tolerate partial records, as the REST API can return them
+        };
+        let Ok(price) = price.parse::<f32>() else { continue };
+        out.push(Sample {
+            instance_type: ty.to_string(),
+            zone: zone.to_string(),
+            price,
+            epoch_hour: parse_timestamp_hours(ts)?,
+        });
+    }
+    if out.is_empty() {
+        return Err(ImportError::Empty);
+    }
+    Ok(out)
+}
+
+/// Build the hourly `[M, H]` trace for `catalog` from samples.
+///
+/// The grid spans `[min_hour, max_hour]` across all samples.  Prices are
+/// step functions: within a market, each hour takes the latest sample at
+/// or before it (LOCF); hours before the first sample backfill from it.
+/// Markets with no samples at all fall back to their on-demand price
+/// (never revoked — conservative).  Returns the trace and the number of
+/// markets that had data.
+pub fn to_trace(catalog: &Catalog, samples: &[Sample]) -> Result<(PriceTrace, usize), ImportError> {
+    if samples.is_empty() {
+        return Err(ImportError::Empty);
+    }
+    let lo = samples.iter().map(|s| s.epoch_hour).min().unwrap();
+    let hi = samples.iter().map(|s| s.epoch_hour).max().unwrap();
+    let hours = (hi - lo + 1) as usize;
+    let m = catalog.len();
+
+    // market key -> id
+    let key = |ty: &str, region_az: &str| format!("{ty}|{region_az}");
+    let mut ids: BTreeMap<String, usize> = BTreeMap::new();
+    for spec in &catalog.markets {
+        ids.insert(key(spec.instance.name, &format!("{}{}", spec.region, spec.az)), spec.id);
+    }
+
+    // per-market sparse samples, sorted by hour
+    let mut per_market: Vec<Vec<(i64, f32)>> = vec![Vec::new(); m];
+    for s in samples {
+        if let Some(&id) = ids.get(&key(&s.instance_type, &s.zone)) {
+            per_market[id].push((s.epoch_hour, s.price));
+        }
+    }
+
+    let mut trace = PriceTrace::new(m, hours);
+    let mut covered = 0usize;
+    for (id, spec) in catalog.markets.iter().enumerate() {
+        let mut obs = std::mem::take(&mut per_market[id]);
+        if obs.is_empty() {
+            // no data: flat at on-demand (never above ⇒ never revoked)
+            for hh in 0..hours {
+                trace.set(id, hh, spec.od_price as f32);
+            }
+            continue;
+        }
+        covered += 1;
+        obs.sort_by_key(|&(t, _)| t);
+        let mut cur = obs[0].1; // backfill before the first observation
+        let mut next = 0usize;
+        for hh in 0..hours {
+            let abs = lo + hh as i64;
+            while next < obs.len() && obs[next].0 <= abs {
+                cur = obs[next].1;
+                next += 1;
+            }
+            trace.set(id, hh, cur);
+        }
+    }
+    Ok((trace, covered))
+}
+
+/// Convenience: parse + grid in one call.
+pub fn import(catalog: &Catalog, text: &str) -> Result<(PriceTrace, usize), ImportError> {
+    let samples = parse_history(text)?;
+    to_trace(catalog, &samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timestamp_parsing() {
+        // 1970-01-01T00 = hour 0; 1970-01-02T03 = 27
+        assert_eq!(parse_timestamp_hours("1970-01-01T00:00:00.000Z").unwrap(), 0);
+        assert_eq!(parse_timestamp_hours("1970-01-02T03:15:00Z").unwrap(), 27);
+        // a known modern date: 2020-03-01T00Z = 18322 days * 24
+        assert_eq!(parse_timestamp_hours("2020-03-01T00:00:00.000Z").unwrap(), 18322 * 24);
+        assert!(parse_timestamp_hours("garbage").is_err());
+        assert!(parse_timestamp_hours("2020-13-01T00:00:00Z").is_err());
+    }
+
+    fn history_json() -> String {
+        // r5.large/us-east-1a is a real market in the catalog
+        r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:10:00.000Z",
+             "ProductDescription": "Linux/UNIX"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.04", "Timestamp": "2020-03-01T09:00:00.000Z"},
+            {"AvailabilityZone": "us-east-1b", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T02:00:00.000Z"},
+            {"AvailabilityZone": "zz-unknown-9z", "InstanceType": "x9.mega",
+             "SpotPrice": "1.0", "Timestamp": "2020-03-01T03:00:00.000Z"}
+        ]}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_history_tolerates_unknown_markets() {
+        let samples = parse_history(&history_json()).unwrap();
+        assert_eq!(samples.len(), 5);
+        assert_eq!(samples[0].price, 0.05);
+        assert_eq!(samples[0].instance_type, "r5.large");
+    }
+
+    #[test]
+    fn grid_locf_semantics() {
+        let catalog = Catalog::full();
+        let (trace, covered) = import(&catalog, &history_json()).unwrap();
+        assert_eq!(covered, 2); // two known markets had data
+        // grid spans hour 0 (T00) .. hour 9 (T09)
+        assert_eq!(trace.hours, 10);
+        let a = catalog
+            .markets
+            .iter()
+            .find(|s| s.instance.name == "r5.large" && s.region == "us-east-1" && s.az == 'a')
+            .unwrap()
+            .id;
+        // backfill before first obs, steps at 5h and 9h
+        assert_eq!(trace.price(a, 0), 0.05);
+        assert_eq!(trace.price(a, 4), 0.05);
+        assert_eq!(trace.price(a, 5), 0.20);
+        assert_eq!(trace.price(a, 8), 0.20);
+        assert_eq!(trace.price(a, 9), 0.04);
+    }
+
+    #[test]
+    fn uncovered_markets_flat_at_ondemand() {
+        let catalog = Catalog::full();
+        let (trace, _) = import(&catalog, &history_json()).unwrap();
+        let other = catalog
+            .markets
+            .iter()
+            .find(|s| s.instance.name == "m5.large" && s.region == "us-west-2")
+            .unwrap();
+        for hh in 0..trace.hours {
+            assert_eq!(trace.price(other.id, hh), other.od_price as f32);
+        }
+    }
+
+    #[test]
+    fn imported_trace_feeds_analytics() {
+        use crate::market::MarketAnalytics;
+        let catalog = Catalog::full();
+        let (trace, _) = import(&catalog, &history_json()).unwrap();
+        let a = MarketAnalytics::compute(&trace, &catalog.od_prices());
+        // the 0.20 spike is above r5.large's od (0.126): one revocation
+        let id = catalog
+            .markets
+            .iter()
+            .find(|s| s.instance.name == "r5.large" && s.region == "us-east-1" && s.az == 'a')
+            .unwrap()
+            .id;
+        assert_eq!(a.events[id], 1.0);
+        assert!(a.mttr[id] < trace.hours as f32);
+    }
+
+    #[test]
+    fn error_paths() {
+        let catalog = Catalog::full();
+        assert!(matches!(import(&catalog, "{}"), Err(ImportError::Json(_))));
+        assert!(matches!(
+            import(&catalog, r#"{"SpotPriceHistory": []}"#),
+            Err(ImportError::Empty)
+        ));
+        let bad_ts = r#"{"SpotPriceHistory": [{"AvailabilityZone": "us-east-1a",
+            "InstanceType": "r5.large", "SpotPrice": "0.05", "Timestamp": "NOPE"}]}"#;
+        assert!(matches!(import(&catalog, bad_ts), Err(ImportError::Timestamp(_))));
+    }
+}

@@ -1,0 +1,158 @@
+//! Live spot-market semantics over a price trace: revocation detection,
+//! the two-minute termination notice, and per-hour billing cycles.
+//!
+//! The billing model follows the paper's accounting: spot and on-demand
+//! instances bill in whole-hour cycles ("a single billing cycle in cloud
+//! platforms"); the unused tail of the last started hour is the
+//! *buffer cost* the paper's Fig. 1d–f break out as a first-class
+//! overhead category.
+
+use super::trace::PriceTrace;
+
+/// AWS sends spot termination notices two minutes before revocation.
+pub const TERMINATION_NOTICE_H: f64 = 2.0 / 60.0;
+
+/// Billing cycle length (hours).
+pub const BILLING_CYCLE_H: f64 = 1.0;
+
+/// A revocation check / schedule view over one market's trace row.
+#[derive(Clone, Copy, Debug)]
+pub struct SpotMarket<'a> {
+    pub id: usize,
+    pub od_price: f32,
+    trace: &'a PriceTrace,
+}
+
+impl<'a> SpotMarket<'a> {
+    pub fn new(trace: &'a PriceTrace, id: usize, od_price: f32) -> Self {
+        SpotMarket { id, od_price, trace }
+    }
+
+    /// Spot price at continuous sim-time `t` hours.
+    #[inline]
+    pub fn price_at(&self, t: f64) -> f32 {
+        self.trace.price_at(self.id, t)
+    }
+
+    /// Is the market in the revoked regime (price above on-demand) at `t`?
+    #[inline]
+    pub fn revoked_at(&self, t: f64) -> bool {
+        self.price_at(t) > self.od_price
+    }
+
+    /// First time strictly after `t` at which the market revokes, i.e.
+    /// the start of the next above-on-demand hour.  `None` if the trace
+    /// window ends first (treated by callers as "survives the window").
+    pub fn next_revocation_after(&self, t: f64) -> Option<f64> {
+        let start = if t < 0.0 { 0 } else { (t.floor() as usize).saturating_add(1) };
+        // if we're inside a revoked hour already, the revocation is "now"
+        if t >= 0.0 && (t as usize) < self.trace.hours && self.revoked_at(t) {
+            return Some(t);
+        }
+        for h in start..self.trace.hours {
+            if self.trace.price(self.id, h) > self.od_price {
+                return Some(h as f64);
+            }
+        }
+        None
+    }
+
+    /// Average spot price over [t0, t1) (hour-weighted), used for cost
+    /// estimation by price-aware baselines.
+    pub fn mean_price(&self, t0: f64, t1: f64) -> f32 {
+        if t1 <= t0 {
+            return self.price_at(t0);
+        }
+        let h0 = t0.max(0.0) as usize;
+        let h1 = (t1.ceil() as usize).min(self.trace.hours).max(h0 + 1);
+        let mut sum = 0.0f64;
+        for h in h0..h1 {
+            sum += self.trace.price(self.id, h) as f64;
+        }
+        (sum / (h1 - h0) as f64) as f32
+    }
+}
+
+/// Whole-hour billing: number of billing cycles charged for a session of
+/// `dur` hours (AWS bills every *started* cycle).
+#[inline]
+pub fn billed_cycles(dur: f64) -> f64 {
+    if dur <= 0.0 {
+        0.0
+    } else {
+        (dur / BILLING_CYCLE_H).ceil()
+    }
+}
+
+/// Cost of a session: (paid, buffer) where `paid = cycles × price` and
+/// `buffer` is the part of `paid` covering time not actually used.
+#[inline]
+pub fn session_cost(dur: f64, price_per_h: f64) -> (f64, f64) {
+    let cycles = billed_cycles(dur);
+    let paid = cycles * BILLING_CYCLE_H * price_per_h;
+    let buffer = (cycles * BILLING_CYCLE_H - dur.max(0.0)) * price_per_h;
+    (paid, buffer.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> PriceTrace {
+        // od 1.0; hours: 0:calm 1:calm 2:SPIKE 3:calm 4:SPIKE 5:SPIKE 6:calm 7:calm
+        PriceTrace::from_rows(vec![vec![0.3, 0.4, 1.5, 0.3, 1.2, 1.8, 0.25, 0.3]]).unwrap()
+    }
+
+    #[test]
+    fn revocation_regime_detection() {
+        let t = trace();
+        let m = SpotMarket::new(&t, 0, 1.0);
+        assert!(!m.revoked_at(0.5));
+        assert!(m.revoked_at(2.1));
+        assert!(m.revoked_at(5.99));
+        assert!(!m.revoked_at(6.0));
+    }
+
+    #[test]
+    fn next_revocation_scans_forward() {
+        let t = trace();
+        let m = SpotMarket::new(&t, 0, 1.0);
+        assert_eq!(m.next_revocation_after(0.0), Some(2.0));
+        assert_eq!(m.next_revocation_after(2.5), Some(2.5)); // already revoked
+        assert_eq!(m.next_revocation_after(3.0), Some(4.0));
+        assert_eq!(m.next_revocation_after(6.0), None); // calm to window end
+        assert_eq!(m.next_revocation_after(-5.0), Some(2.0));
+    }
+
+    #[test]
+    fn mean_price_window() {
+        let t = trace();
+        let m = SpotMarket::new(&t, 0, 1.0);
+        let mp = m.mean_price(0.0, 2.0);
+        assert!((mp - 0.35).abs() < 1e-6);
+    }
+
+    #[test]
+    fn billing_rounds_up() {
+        assert_eq!(billed_cycles(0.0), 0.0);
+        assert_eq!(billed_cycles(0.1), 1.0);
+        assert_eq!(billed_cycles(1.0), 1.0);
+        assert_eq!(billed_cycles(1.0001), 2.0);
+        assert_eq!(billed_cycles(7.5), 8.0);
+    }
+
+    #[test]
+    fn session_cost_buffer() {
+        let (paid, buffer) = session_cost(2.5, 0.4);
+        assert!((paid - 1.2).abs() < 1e-12); // 3 cycles * 0.4
+        assert!((buffer - 0.2).abs() < 1e-12); // 0.5h unused * 0.4
+        let (paid, buffer) = session_cost(3.0, 1.0);
+        assert_eq!(paid, 3.0);
+        assert_eq!(buffer, 0.0);
+    }
+
+    #[test]
+    fn termination_notice_is_two_minutes() {
+        assert!((TERMINATION_NOTICE_H - 1.0 / 30.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Cloud spot-market substrate: instance catalog, price traces, the
+//! synthetic trace generator, live market semantics (revocations,
+//! billing) and native market analytics.
+
+pub mod analytics;
+pub mod catalog;
+pub mod importer;
+pub mod market;
+pub mod trace;
+pub mod tracegen;
+
+pub use analytics::MarketAnalytics;
+pub use catalog::{Catalog, InstanceType, MarketSpec};
+pub use market::{billed_cycles, session_cost, SpotMarket, BILLING_CYCLE_H, TERMINATION_NOTICE_H};
+pub use trace::PriceTrace;
+pub use tracegen::{generate as generate_traces, TraceGenConfig, VolClass};

@@ -1,0 +1,205 @@
+//! Price-trace container: the `[M, H]` hourly spot-price matrix the
+//! analytics layer consumes and the market simulator replays.
+//!
+//! Layout is row-major f32 (market-major), matching the L2 artifact's
+//! input literal byte-for-byte so the PJRT path needs no transform.
+
+use std::path::Path;
+
+use crate::csv_row;
+use crate::util::csvio;
+
+#[derive(Clone, Debug)]
+pub struct PriceTrace {
+    pub markets: usize,
+    pub hours: usize,
+    /// row-major [markets * hours]
+    pub prices: Vec<f32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TraceError {
+    #[error("trace csv: {0}")]
+    Csv(String),
+    #[error("trace shape mismatch: expected {expected} fields, got {got} (row {row})")]
+    Shape { expected: usize, got: usize, row: usize },
+    #[error("trace is empty")]
+    Empty,
+}
+
+impl PriceTrace {
+    pub fn new(markets: usize, hours: usize) -> Self {
+        PriceTrace { markets, hours, prices: vec![0.0; markets * hours] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Result<Self, TraceError> {
+        if rows.is_empty() {
+            return Err(TraceError::Empty);
+        }
+        let hours = rows[0].len();
+        let markets = rows.len();
+        let mut prices = Vec::with_capacity(markets * hours);
+        for (i, r) in rows.into_iter().enumerate() {
+            if r.len() != hours {
+                return Err(TraceError::Shape { expected: hours, got: r.len(), row: i });
+            }
+            prices.extend(r);
+        }
+        Ok(PriceTrace { markets, hours, prices })
+    }
+
+    #[inline]
+    pub fn price(&self, market: usize, hour: usize) -> f32 {
+        self.prices[market * self.hours + hour]
+    }
+
+    #[inline]
+    pub fn set(&mut self, market: usize, hour: usize, p: f32) {
+        self.prices[market * self.hours + hour] = p;
+    }
+
+    /// Piecewise-constant price at a continuous time `t` (hours).
+    #[inline]
+    pub fn price_at(&self, market: usize, t: f64) -> f32 {
+        let h = (t.max(0.0) as usize).min(self.hours - 1);
+        self.price(market, h)
+    }
+
+    pub fn row(&self, market: usize) -> &[f32] {
+        &self.prices[market * self.hours..(market + 1) * self.hours]
+    }
+
+    /// Duration of the trace in hours (f64 for sim-time math).
+    pub fn duration(&self) -> f64 {
+        self.hours as f64
+    }
+
+    /// Sub-window [h0, h1) of the trace (used to compute analytics on a
+    /// training prefix while simulating on the held-out suffix).
+    pub fn window(&self, h0: usize, h1: usize) -> PriceTrace {
+        assert!(h0 < h1 && h1 <= self.hours, "bad window [{h0}, {h1})");
+        let hours = h1 - h0;
+        let mut prices = Vec::with_capacity(self.markets * hours);
+        for m in 0..self.markets {
+            prices.extend_from_slice(&self.row(m)[h0..h1]);
+        }
+        PriceTrace { markets: self.markets, hours, prices }
+    }
+
+    // ---- persistence ---------------------------------------------------
+
+    /// CSV schema: header `market,h0,h1,...`; one row per market.
+    pub fn to_csv_rows(&self) -> Vec<Vec<String>> {
+        let mut header = vec!["market".to_string()];
+        header.extend((0..self.hours).map(|h| format!("h{h}")));
+        let mut rows = vec![header];
+        for m in 0..self.markets {
+            let mut row = csv_row![m];
+            row.extend(self.row(m).iter().map(|p| format!("{p}")));
+            rows.push(row);
+        }
+        rows
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        csvio::write_file(path, &self.to_csv_rows())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, TraceError> {
+        let rows = csvio::read_file(path).map_err(TraceError::Csv)?;
+        Self::from_csv_rows(rows)
+    }
+
+    pub fn from_csv_rows(rows: Vec<Vec<String>>) -> Result<Self, TraceError> {
+        if rows.len() < 2 {
+            return Err(TraceError::Empty);
+        }
+        let hours = rows[0].len() - 1;
+        let mut data = Vec::with_capacity(rows.len() - 1);
+        for (i, row) in rows.into_iter().skip(1).enumerate() {
+            if row.len() != hours + 1 {
+                return Err(TraceError::Shape { expected: hours + 1, got: row.len(), row: i + 1 });
+            }
+            let vals: Result<Vec<f32>, _> = row[1..].iter().map(|s| s.parse::<f32>()).collect();
+            data.push(vals.map_err(|e| TraceError::Csv(format!("row {}: {e}", i + 1)))?);
+        }
+        PriceTrace::from_rows(data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PriceTrace {
+        let mut t = PriceTrace::new(3, 4);
+        for m in 0..3 {
+            for h in 0..4 {
+                t.set(m, h, (m * 10 + h) as f32 * 0.25);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn indexing() {
+        let t = sample();
+        assert_eq!(t.price(2, 3), 5.75);
+        assert_eq!(t.row(1), &[2.5, 2.75, 3.0, 3.25]);
+    }
+
+    #[test]
+    fn price_at_piecewise_constant() {
+        let t = sample();
+        assert_eq!(t.price_at(0, 0.0), 0.0);
+        assert_eq!(t.price_at(0, 0.99), 0.0);
+        assert_eq!(t.price_at(0, 1.0), 0.25);
+        // clamps past the end and below zero
+        assert_eq!(t.price_at(0, 99.0), 0.75);
+        assert_eq!(t.price_at(0, -1.0), 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample();
+        let rows = t.to_csv_rows();
+        let t2 = PriceTrace::from_csv_rows(rows).unwrap();
+        assert_eq!(t2.markets, t.markets);
+        assert_eq!(t2.hours, t.hours);
+        assert_eq!(t2.prices, t.prices);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample();
+        let dir = std::env::temp_dir().join("siwoft_trace_test");
+        let path = dir.join("t.csv");
+        t.save(&path).unwrap();
+        let t2 = PriceTrace::load(&path).unwrap();
+        assert_eq!(t2.prices, t.prices);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn window_slices_rows() {
+        let t = sample();
+        let w = t.window(1, 3);
+        assert_eq!(w.markets, 3);
+        assert_eq!(w.hours, 2);
+        assert_eq!(w.row(0), &[0.25, 0.5]);
+        assert_eq!(w.row(2), &[5.25, 5.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad window")]
+    fn window_bounds_checked() {
+        sample().window(2, 9);
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(matches!(PriceTrace::from_rows(vec![]), Err(TraceError::Empty)));
+        let bad = PriceTrace::from_rows(vec![vec![1.0, 2.0], vec![1.0]]);
+        assert!(matches!(bad, Err(TraceError::Shape { row: 1, .. })));
+    }
+}

@@ -1,0 +1,85 @@
+//! Greedy-cheapest ablation policy: always chase the currently cheapest
+//! suitable spot price with *no* lifetime awareness and *no* correlation
+//! filtering, and no FT mechanism.  Isolates how much of P-SIWOFT's win
+//! comes from its market analytics rather than from merely "using spot
+//! without FT".
+
+use super::{Ctx, Decision, Policy};
+use crate::job::Job;
+
+#[derive(Clone, Debug, Default)]
+pub struct GreedyCheapest {
+    last_revoked: Option<usize>,
+}
+
+impl GreedyCheapest {
+    pub fn new() -> Self {
+        GreedyCheapest::default()
+    }
+}
+
+impl Policy for GreedyCheapest {
+    fn name(&self) -> &'static str {
+        "greedy-cheapest"
+    }
+
+    fn select(&mut self, job: &Job, ctx: &Ctx<'_>) -> Decision {
+        let w = ctx.world;
+        let mut best: Option<(usize, f32)> = None;
+        for id in w.catalog.suitable(job.mem_gb) {
+            if Some(id) == self.last_revoked {
+                continue; // only skip the market that just died
+            }
+            let p = w.market(id).price_at(ctx.now);
+            match best {
+                Some((_, bp)) if bp <= p => {}
+                _ => best = Some((id, p)),
+            }
+        }
+        match best {
+            Some((id, _)) => Decision::Spot { market: id },
+            None => Decision::Spot {
+                market: w.catalog.suitable(job.mem_gb)[0],
+            },
+        }
+    }
+
+    fn on_revocation(&mut self, _job: &Job, market: usize, _ctx: &Ctx<'_>) {
+        self.last_revoked = Some(market);
+    }
+
+    fn reset(&mut self) {
+        self.last_revoked = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::world::World;
+
+    #[test]
+    fn chases_spot_price() {
+        let w = World::generate(48, 0.25, 9);
+        let ctx = Ctx { world: &w, now: 12.0 };
+        let job = Job::new(1, 4.0, 8.0);
+        let mut p = GreedyCheapest::new();
+        let d = p.select(&job, &ctx);
+        assert!(d.is_spot());
+        let chosen = d.market();
+        for id in w.catalog.suitable(8.0) {
+            assert!(w.market(chosen).price_at(12.0) <= w.market(id).price_at(12.0) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn avoids_only_last_revoked() {
+        let w = World::generate(24, 0.25, 10);
+        let ctx = Ctx { world: &w, now: 0.0 };
+        let job = Job::new(1, 4.0, 8.0);
+        let mut p = GreedyCheapest::new();
+        let first = p.select(&job, &ctx).market();
+        p.on_revocation(&job, first, &ctx);
+        assert_ne!(p.select(&job, &ctx).market(), first);
+    }
+}

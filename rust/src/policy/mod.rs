@@ -1,0 +1,82 @@
+//! Provisioning policies: P-SIWOFT (Algorithm 1) and the baselines it is
+//! evaluated against (fault-tolerance spot policy, on-demand, and a
+//! lifetime-blind greedy ablation).
+//!
+//! A policy answers one question — *which market gets the next
+//! (re)provisioning of this job?* — given the world's analytics and the
+//! job's revocation history.  Policies are per-job stateful (`reset`
+//! clears the candidate-set state between jobs).
+
+pub mod ftpolicy;
+pub mod greedy;
+pub mod ondemand;
+pub mod predictive;
+pub mod psiwoft;
+
+pub use ftpolicy::FtSpotPolicy;
+pub use greedy::GreedyCheapest;
+pub use ondemand::OnDemandPolicy;
+pub use predictive::{PredictiveConfig, PredictivePolicy};
+pub use psiwoft::{PSiwoft, PSiwoftConfig};
+
+use crate::job::Job;
+use crate::sim::world::World;
+
+/// Provisioning decision for the next session.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// rent this spot market (paying its spot price)
+    Spot { market: usize },
+    /// rent an on-demand instance in this market (paying od price,
+    /// never revoked)
+    OnDemand { market: usize },
+}
+
+impl Decision {
+    pub fn market(&self) -> usize {
+        match *self {
+            Decision::Spot { market } | Decision::OnDemand { market } => market,
+        }
+    }
+    pub fn is_spot(&self) -> bool {
+        matches!(self, Decision::Spot { .. })
+    }
+}
+
+/// Context handed to a policy at decision time.
+pub struct Ctx<'a> {
+    pub world: &'a World,
+    /// current simulation time (hours into the trace window)
+    pub now: f64,
+}
+
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose where to (re)provision `job`.
+    fn select(&mut self, job: &Job, ctx: &Ctx<'_>) -> Decision;
+
+    /// Observe a revocation of `market` while running `job` (updates
+    /// candidate-set state; called before the next `select`).
+    fn on_revocation(&mut self, job: &Job, market: usize, ctx: &Ctx<'_>) {
+        let _ = (job, market, ctx);
+    }
+
+    /// Clear per-job state (called when a new job begins).
+    fn reset(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_accessors() {
+        let d = Decision::Spot { market: 3 };
+        assert_eq!(d.market(), 3);
+        assert!(d.is_spot());
+        let d = Decision::OnDemand { market: 5 };
+        assert_eq!(d.market(), 5);
+        assert!(!d.is_spot());
+    }
+}

@@ -1,0 +1,47 @@
+//! On-demand baseline ("O" in Fig. 1): cheapest suitable on-demand
+//! instance, never revoked, no FT overhead — the completion-time gold
+//! standard the paper normalizes against (and the cost ceiling spot
+//! provisioning tries to undercut).
+
+use super::{Ctx, Decision, Policy};
+use crate::job::Job;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnDemandPolicy;
+
+impl Policy for OnDemandPolicy {
+    fn name(&self) -> &'static str {
+        "on-demand"
+    }
+
+    fn select(&mut self, job: &Job, ctx: &Ctx<'_>) -> Decision {
+        let market = ctx
+            .world
+            .catalog
+            .cheapest_ondemand(job.mem_gb)
+            .expect("no market fits the job");
+        Decision::OnDemand { market }
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::world::World;
+
+    #[test]
+    fn always_ondemand_and_cheapest() {
+        let w = World::generate(48, 0.25, 8);
+        let ctx = Ctx { world: &w, now: 0.0 };
+        let job = Job::new(1, 8.0, 16.0);
+        let mut p = OnDemandPolicy;
+        let d = p.select(&job, &ctx);
+        assert!(!d.is_spot());
+        let chosen = d.market();
+        for id in w.catalog.suitable(16.0) {
+            assert!(w.od_price(chosen) <= w.od_price(id) + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Predictive provisioning baseline: survival-probability maximization.
+//!
+//! Implements the duration-probability approach of the paper's related
+//! work (ref.\[17\], Wolski et al.): instead of P-SIWOFT's point-estimate MTTR
+//! ordering, rank candidate markets by the *empirical probability of
+//! surviving the whole job* (`S[m, job_length]` from the survival
+//! artifact / native mirror), require it to clear a confidence floor,
+//! and break near-ties by price.  On revocation, drop the market (no
+//! correlation filter — that is P-SIWOFT's contribution).
+//!
+//! This gives the evaluation a second analytics-driven arm, isolating
+//! how much of P-SIWOFT's win is "use market statistics at all" versus
+//! its specific MTTR + correlation recipe.
+
+use super::{Ctx, Decision, Policy};
+use crate::job::Job;
+use crate::market::analytics::SurvivalCurves;
+
+#[derive(Clone, Debug)]
+pub struct PredictiveConfig {
+    /// minimum acceptable survival probability over the job length
+    pub confidence: f32,
+    /// near-tie band for the price tie-break
+    pub tie_band: f32,
+}
+
+impl Default for PredictiveConfig {
+    fn default() -> Self {
+        PredictiveConfig { confidence: 0.7, tie_band: 0.05 }
+    }
+}
+
+pub struct PredictivePolicy {
+    pub cfg: PredictiveConfig,
+    curves: SurvivalCurves,
+    banned: Vec<usize>,
+    pub ondemand_fallbacks: u64,
+}
+
+impl PredictivePolicy {
+    /// Build from precomputed survival curves (native or PJRT — the
+    /// policy is agnostic, mirroring how `PSiwoft` reads `World::analytics`).
+    pub fn new(curves: SurvivalCurves, cfg: PredictiveConfig) -> Self {
+        PredictivePolicy { cfg, curves, banned: Vec::new(), ondemand_fallbacks: 0 }
+    }
+
+    pub fn from_world(world: &crate::sim::World) -> Self {
+        let curves =
+            SurvivalCurves::compute(&world.trace, &world.od, SurvivalCurves::DEFAULT_T);
+        PredictivePolicy::new(curves, PredictiveConfig::default())
+    }
+
+    /// Survival curves computed on a training prefix of the world's trace.
+    pub fn from_world_trained(world: &crate::sim::World, train_hours: usize) -> Self {
+        let train = world.trace.window(0, train_hours);
+        let curves = SurvivalCurves::compute(&train, &world.od, SurvivalCurves::DEFAULT_T);
+        PredictivePolicy::new(curves, PredictiveConfig::default())
+    }
+}
+
+impl Policy for PredictivePolicy {
+    fn name(&self) -> &'static str {
+        "predictive-survival"
+    }
+
+    fn select(&mut self, job: &Job, ctx: &Ctx<'_>) -> Decision {
+        let horizon = job.exec_len_h;
+        let candidates: Vec<usize> = ctx
+            .world
+            .catalog
+            .suitable(job.mem_gb)
+            .into_iter()
+            .filter(|m| !self.banned.contains(m))
+            .collect();
+        let ranked = self.curves.rank_by_survival(&candidates, horizon);
+        if let Some(&best) = ranked.first() {
+            let s_best = self.curves.at(best, horizon);
+            if s_best >= self.cfg.confidence {
+                // near-tie band → cheapest by trailing-day mean price
+                let t0 = (ctx.now - 24.0).max(0.0);
+                let t1 = ctx.now.max(t0 + 1.0);
+                let chosen = ranked
+                    .iter()
+                    .copied()
+                    .take_while(|&m| self.curves.at(m, horizon) >= s_best - self.cfg.tie_band)
+                    .min_by(|&a, &b| {
+                        let pa = ctx.world.market(a).mean_price(t0, t1);
+                        let pb = ctx.world.market(b).mean_price(t0, t1);
+                        pa.partial_cmp(&pb).unwrap().then(a.cmp(&b))
+                    })
+                    .unwrap_or(best);
+                return Decision::Spot { market: chosen };
+            }
+        }
+        self.ondemand_fallbacks += 1;
+        let od = ctx
+            .world
+            .catalog
+            .cheapest_ondemand(job.mem_gb)
+            .expect("no market fits the job");
+        Decision::OnDemand { market: od }
+    }
+
+    fn on_revocation(&mut self, _job: &Job, market: usize, _ctx: &Ctx<'_>) {
+        if !self.banned.contains(&market) {
+            self.banned.push(market);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.banned.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::NoFt;
+    use crate::sim::{simulate_job, RevocationRule, RunConfig, World};
+
+    fn world() -> (World, f64) {
+        let mut w = World::generate(96, 2.0, 808);
+        let start = w.split_train(0.6);
+        (w, start)
+    }
+
+    #[test]
+    fn selects_high_survival_market() {
+        let (w, start) = world();
+        let job = Job::new(1, 8.0, 16.0);
+        let mut p = PredictivePolicy::from_world_trained(&w, start as usize);
+        let d = p.select(&job, &Ctx { world: &w, now: start });
+        if d.is_spot() {
+            let s = p.curves.at(d.market(), 8.0);
+            // chosen market clears the confidence floor
+            assert!(s >= p.cfg.confidence, "s = {s}");
+            // and no candidate beats it by more than the tie band
+            for m in w.catalog.suitable(16.0) {
+                assert!(p.curves.at(m, 8.0) <= s + p.cfg.tie_band + 1e-6);
+            }
+        } else {
+            assert_eq!(p.ondemand_fallbacks, 1);
+        }
+    }
+
+    #[test]
+    fn falls_back_when_confidence_unreachable() {
+        let (w, start) = world();
+        let job = Job::new(2, 8.0, 16.0);
+        let mut p = PredictivePolicy::from_world_trained(&w, start as usize);
+        p.cfg.confidence = 1.01; // impossible
+        let d = p.select(&job, &Ctx { world: &w, now: start });
+        assert!(!d.is_spot());
+    }
+
+    #[test]
+    fn revoked_markets_banned_until_reset() {
+        let (w, start) = world();
+        let job = Job::new(3, 4.0, 16.0);
+        let mut p = PredictivePolicy::from_world_trained(&w, start as usize);
+        let ctx = Ctx { world: &w, now: start };
+        let first = p.select(&job, &ctx);
+        if first.is_spot() {
+            p.on_revocation(&job, first.market(), &ctx);
+            let second = p.select(&job, &ctx);
+            if second.is_spot() {
+                assert_ne!(second.market(), first.market());
+            }
+            p.reset();
+            assert!(p.banned.is_empty());
+        }
+    }
+
+    #[test]
+    fn completes_jobs_end_to_end() {
+        let (w, start) = world();
+        let job = Job::new(4, 8.0, 16.0);
+        let mut p = PredictivePolicy::from_world_trained(&w, start as usize);
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 3);
+        assert!(r.completed);
+        assert!(r.completion_h() >= 8.0);
+    }
+}

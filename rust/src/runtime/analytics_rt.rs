@@ -1,0 +1,229 @@
+//! Market-analytics engine: the bridge between the price traces and the
+//! per-market statistics P-SIWOFT consumes.
+//!
+//! Two interchangeable backends:
+//!   * **Pjrt** — executes the AOT artifact
+//!     (`artifacts/market_analytics_{M}x{H}.hlo.txt`, selected via
+//!     `manifest.json`); this is the production path: the L1/L2 compute
+//!     lowered once at build time and run from Rust with no Python.
+//!   * **Native** — the bit-compatible Rust mirror
+//!     ([`crate::market::analytics`]); used when no artifact matches the
+//!     trace shape, and as the correctness oracle in tests.
+//!
+//! The engine is called once per *analytics epoch* (trace refresh), never
+//! per provisioning decision.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{HloExecutable, PjrtRuntime};
+use crate::market::analytics::SurvivalCurves;
+use crate::market::{MarketAnalytics, PriceTrace};
+use crate::util::json::Json;
+
+/// One artifact entry from `manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub markets: usize,
+    pub hours: usize,
+}
+
+/// Parse `artifacts/manifest.json` into artifact entries.
+pub fn read_manifest(dir: impl AsRef<Path>) -> Result<Vec<ArtifactInfo>> {
+    let dir = dir.as_ref();
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("read {}/manifest.json", dir.display()))?;
+    let j = Json::parse(&text).context("parse manifest.json")?;
+    let arts = j
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .context("manifest missing 'artifacts'")?;
+    let mut out = Vec::new();
+    for a in arts {
+        let name = a
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("market_analytics")
+            .to_string();
+        let file = a.get("file").and_then(Json::as_str).context("artifact missing 'file'")?;
+        let markets = a.get("markets").and_then(Json::as_usize).context("missing 'markets'")?;
+        let hours = a.get("hours").and_then(Json::as_usize).context("missing 'hours'")?;
+        out.push(ArtifactInfo { name, file: dir.join(file), markets, hours });
+    }
+    Ok(out)
+}
+
+enum Backend {
+    Native,
+    Pjrt { runtime: PjrtRuntime, artifacts: Vec<ArtifactInfo> },
+}
+
+/// The analytics engine (see module docs).
+pub struct AnalyticsEngine {
+    backend: Backend,
+}
+
+impl AnalyticsEngine {
+    /// Pure-native engine (no PJRT).
+    pub fn native() -> AnalyticsEngine {
+        AnalyticsEngine { backend: Backend::Native }
+    }
+
+    /// PJRT engine over an artifacts directory.
+    pub fn pjrt(artifacts_dir: impl AsRef<Path>) -> Result<AnalyticsEngine> {
+        let artifacts = read_manifest(&artifacts_dir)?;
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        let runtime = PjrtRuntime::cpu()?;
+        Ok(AnalyticsEngine { backend: Backend::Pjrt { runtime, artifacts } })
+    }
+
+    /// Best-effort: PJRT if the artifacts directory is usable, else
+    /// native (logged).
+    pub fn auto(artifacts_dir: impl AsRef<Path>) -> AnalyticsEngine {
+        match Self::pjrt(&artifacts_dir) {
+            Ok(e) => e,
+            Err(err) => {
+                crate::log_warn!(
+                    "analytics: PJRT unavailable ({err:#}); falling back to native"
+                );
+                AnalyticsEngine::native()
+            }
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Native => "native",
+            Backend::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Does a compiled `market_analytics` artifact exist for this shape?
+    pub fn has_artifact_for(&self, markets: usize, hours: usize) -> bool {
+        self.find("market_analytics", markets, hours).is_some()
+    }
+
+    fn find(&self, name: &str, markets: usize, hours: usize) -> Option<&ArtifactInfo> {
+        match &self.backend {
+            Backend::Native => None,
+            Backend::Pjrt { artifacts, .. } => artifacts
+                .iter()
+                .find(|a| a.name == name && a.markets == markets && a.hours == hours),
+        }
+    }
+
+    /// Compute analytics for a trace window.  PJRT is used when an
+    /// artifact matches the (M, H) shape exactly; otherwise the native
+    /// mirror runs (same numbers).
+    pub fn compute(&self, trace: &PriceTrace, od: &[f32]) -> Result<MarketAnalytics> {
+        match (&self.backend, self.find("market_analytics", trace.markets, trace.hours)) {
+            (Backend::Pjrt { runtime, .. }, Some(info)) => {
+                let exe = runtime.load(&info.file)?;
+                execute_artifact(&exe, trace, od)
+            }
+            _ => {
+                if matches!(self.backend, Backend::Pjrt { .. }) {
+                    crate::log_debug!(
+                        "no artifact for {}x{}; using native analytics",
+                        trace.markets,
+                        trace.hours
+                    );
+                }
+                Ok(MarketAnalytics::compute(trace, od))
+            }
+        }
+    }
+
+    /// Compute survival curves (`S[M, 64]`) — PJRT `survival` artifact
+    /// when the shape matches, native mirror otherwise.
+    pub fn compute_survival(&self, trace: &PriceTrace, od: &[f32]) -> Result<SurvivalCurves> {
+        const T: usize = SurvivalCurves::DEFAULT_T;
+        match (&self.backend, self.find("survival", trace.markets, trace.hours)) {
+            (Backend::Pjrt { runtime, .. }, Some(info)) => {
+                let exe = runtime.load(&info.file)?;
+                let (m, h) = (trace.markets, trace.hours);
+                let outs = exe.run_f32(&[
+                    (&trace.prices, &[m as i64, h as i64]),
+                    (od, &[m as i64]),
+                ])?;
+                let s = outs.into_iter().next().context("survival artifact empty output")?;
+                if s.len() != m * T {
+                    bail!("survival output len {} != {}", s.len(), m * T);
+                }
+                Ok(SurvivalCurves { markets: m, t_buckets: T, s })
+            }
+            _ => Ok(SurvivalCurves::compute(trace, od, T)),
+        }
+    }
+}
+
+/// Run the market-analytics artifact on a trace.
+fn execute_artifact(
+    exe: &Arc<HloExecutable>,
+    trace: &PriceTrace,
+    od: &[f32],
+) -> Result<MarketAnalytics> {
+    let (m, h) = (trace.markets, trace.hours);
+    let outs = exe.run_f32(&[
+        (&trace.prices, &[m as i64, h as i64]),
+        (od, &[m as i64]),
+    ])?;
+    if outs.len() != 4 {
+        bail!("artifact returned {} outputs, expected 4", outs.len());
+    }
+    let [mttr, events, frac_above, corr]: [Vec<f32>; 4] =
+        outs.try_into().map_err(|_| anyhow::anyhow!("output arity"))?;
+    if mttr.len() != m || corr.len() != m * m {
+        bail!("artifact output shapes mismatch (m={m}): {} / {}", mttr.len(), corr.len());
+    }
+    Ok(MarketAnalytics { markets: m, window_hours: h, mttr, events, frac_above, corr })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_matches_direct() {
+        let w = crate::sim::World::generate(8, 0.25, 5);
+        let e = AnalyticsEngine::native();
+        let a = e.compute(&w.trace, &w.od).unwrap();
+        assert_eq!(a.mttr, w.analytics.mttr);
+        assert_eq!(a.corr, w.analytics.corr);
+        assert_eq!(e.backend_name(), "native");
+        assert!(!e.has_artifact_for(8, 180));
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("siwoft_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[{"name":"market_analytics","file":"a.hlo.txt","markets":64,"hours":2160,"inputs":[],"outputs":[]}]}"#,
+        )
+        .unwrap();
+        let arts = read_manifest(&dir).unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(arts[0].markets, 64);
+        assert_eq!(arts[0].hours, 2160);
+        assert!(arts[0].file.ends_with("a.hlo.txt"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_error_and_auto_falls_back() {
+        let dir = std::env::temp_dir().join("siwoft_no_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(AnalyticsEngine::pjrt(&dir).is_err());
+        let e = AnalyticsEngine::auto(&dir);
+        assert_eq!(e.backend_name(), "native");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT client wrapper and the analytics engine that
+//! executes the AOT artifacts (with a native fallback).  This is the
+//! only module that touches XLA; everything above consumes
+//! [`crate::market::MarketAnalytics`].
+
+pub mod analytics_rt;
+pub mod client;
+
+pub use analytics_rt::{read_manifest, AnalyticsEngine, ArtifactInfo};
+pub use client::{HloExecutable, PjrtRuntime};

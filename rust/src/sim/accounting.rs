@@ -1,0 +1,203 @@
+//! Time/cost ledgers split by overhead category — the data behind every
+//! stacked bar in Fig. 1.
+//!
+//! Categories follow the paper's breakdown exactly:
+//!   * `useful`     — productive execution (the job's own length),
+//!   * `checkpoint` — writing checkpoints (F only),
+//!   * `recovery`   — restoring state after a revocation (F only),
+//!   * `reexec`     — re-executing lost work,
+//!   * `startup`    — instance boot + container start,
+//!   * `migration`  — live-migration transfers (F-migration only),
+//!   * `buffer`     — cost-only: the unused tail of billed hours
+//!                    ("buffer costs of billing cycles").
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    Useful,
+    Checkpoint,
+    Recovery,
+    Reexec,
+    Startup,
+    Migration,
+    Buffer,
+}
+
+pub const CATEGORIES: &[Category] = &[
+    Category::Useful,
+    Category::Checkpoint,
+    Category::Recovery,
+    Category::Reexec,
+    Category::Startup,
+    Category::Migration,
+    Category::Buffer,
+];
+
+impl Category {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Category::Useful => "useful",
+            Category::Checkpoint => "checkpoint",
+            Category::Recovery => "recovery",
+            Category::Reexec => "reexec",
+            Category::Startup => "startup",
+            Category::Migration => "migration",
+            Category::Buffer => "buffer",
+        }
+    }
+    fn index(self) -> usize {
+        CATEGORIES.iter().position(|&c| c == self).unwrap()
+    }
+}
+
+impl fmt::Display for Category {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A per-category accumulator (one for time, one for cost).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    vals: [f64; 7],
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Breakdown::default()
+    }
+
+    pub fn add(&mut self, cat: Category, amount: f64) {
+        debug_assert!(amount >= -1e-9, "negative {cat} amount {amount}");
+        self.vals[cat.index()] += amount.max(0.0);
+    }
+
+    pub fn get(&self, cat: Category) -> f64 {
+        self.vals[cat.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.vals.iter().sum()
+    }
+
+    /// Everything except `useful` — the overhead the paper plots.
+    pub fn overhead(&self) -> f64 {
+        self.total() - self.get(Category::Useful)
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (a, b) in self.vals.iter_mut().zip(other.vals.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> Breakdown {
+        let mut out = self.clone();
+        for v in out.vals.iter_mut() {
+            *v *= k;
+        }
+        out
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Category, f64)> + '_ {
+        CATEGORIES.iter().map(move |&c| (c, self.get(c)))
+    }
+}
+
+/// Full ledger for one job execution: wall-clock time and dollar cost,
+/// both categorized.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Ledger {
+    pub time: Breakdown,
+    pub cost: Breakdown,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Ledger::default()
+    }
+
+    /// Record an activity span: `dur` hours in category `cat`, costed at
+    /// `price_per_h` (cost accrues to the same category; billing-cycle
+    /// rounding is handled separately at session close).
+    pub fn span(&mut self, cat: Category, dur: f64, price_per_h: f64) {
+        self.time.add(cat, dur);
+        self.cost.add(cat, dur * price_per_h);
+    }
+
+    /// Record the billing-cycle buffer for a closed instance session.
+    pub fn buffer_cost(&mut self, amount: f64) {
+        self.cost.add(Category::Buffer, amount);
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        self.time.merge(&other.time);
+        self.cost.merge(&other.cost);
+    }
+
+    /// completion time (hours)
+    pub fn completion_h(&self) -> f64 {
+        self.time.total()
+    }
+    /// deployment cost ($)
+    pub fn cost_usd(&self) -> f64 {
+        self.cost.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories_sum_to_total() {
+        let mut b = Breakdown::new();
+        b.add(Category::Useful, 8.0);
+        b.add(Category::Reexec, 2.0);
+        b.add(Category::Startup, 0.1);
+        let by_iter: f64 = b.iter().map(|(_, v)| v).sum();
+        assert!((b.total() - 10.1).abs() < 1e-12);
+        assert!((by_iter - b.total()).abs() < 1e-12);
+        assert!((b.overhead() - 2.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Breakdown::new();
+        a.add(Category::Useful, 1.0);
+        let mut b = Breakdown::new();
+        b.add(Category::Useful, 2.0);
+        b.add(Category::Buffer, 0.5);
+        a.merge(&b);
+        assert_eq!(a.get(Category::Useful), 3.0);
+        assert_eq!(a.get(Category::Buffer), 0.5);
+    }
+
+    #[test]
+    fn scale() {
+        let mut a = Breakdown::new();
+        a.add(Category::Recovery, 2.0);
+        let s = a.scale(0.5);
+        assert_eq!(s.get(Category::Recovery), 1.0);
+        assert_eq!(a.get(Category::Recovery), 2.0); // original untouched
+    }
+
+    #[test]
+    fn ledger_span_records_both() {
+        let mut l = Ledger::new();
+        l.span(Category::Useful, 4.0, 0.25);
+        l.span(Category::Checkpoint, 0.5, 0.25);
+        l.buffer_cost(0.1);
+        assert!((l.completion_h() - 4.5).abs() < 1e-12);
+        assert!((l.cost_usd() - (1.0 + 0.125 + 0.1)).abs() < 1e-12);
+        assert_eq!(l.time.get(Category::Buffer), 0.0); // buffer is cost-only
+    }
+
+    #[test]
+    fn negative_amounts_clamped_in_release() {
+        let mut b = Breakdown::new();
+        b.add(Category::Useful, 5.0);
+        assert_eq!(b.get(Category::Useful), 5.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Discrete-event simulation engine: a time-ordered event queue with a
+//! stable tie-break, the substrate under the coordinator-level
+//! simulations (multi-job runs, hourly analytics epochs, price ticks).
+//!
+//! Events are a typed enum (not boxed closures) so runs are cheap,
+//! inspectable and deterministic; handlers live in the consumers
+//! (`sim::run`, `coordinator::leader`).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation time in hours.
+pub type SimTime = f64;
+
+/// The event taxonomy of the provisioning simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// a job arrives in the queue
+    JobArrival { job_id: u64 },
+    /// an instance finished booting; execution may begin
+    InstanceReady { job_id: u64, market: usize },
+    /// the market issued a 2-minute termination notice
+    RevocationNotice { job_id: u64, market: usize },
+    /// the instance is revoked
+    InstanceRevoked { job_id: u64, market: usize },
+    /// periodic checkpoint completes
+    CheckpointDone { job_id: u64 },
+    /// job finished
+    JobCompleted { job_id: u64 },
+    /// hourly analytics epoch (recompute market stats)
+    AnalyticsEpoch { epoch: u64 },
+    /// generic timer for extensions
+    Timer { tag: u64 },
+}
+
+#[derive(Clone, Debug)]
+struct Scheduled {
+    t: SimTime,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on (t, seq): earlier time first; FIFO among ties
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue + clock.
+#[derive(Debug, Default)]
+pub struct Engine {
+    queue: BinaryHeap<Scheduled>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine::default()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule `event` at absolute time `t` (clamped to now).
+    pub fn schedule_at(&mut self, t: SimTime, event: Event) {
+        let t = if t < self.now { self.now } else { t };
+        self.seq += 1;
+        self.queue.push(Scheduled { t, seq: self.seq, event });
+    }
+
+    /// Schedule `event` after a delay.
+    pub fn schedule_in(&mut self, delay: SimTime, event: Event) {
+        debug_assert!(delay >= 0.0);
+        self.schedule_at(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn next(&mut self) -> Option<(SimTime, Event)> {
+        let s = self.queue.pop()?;
+        debug_assert!(s.t >= self.now, "time went backwards");
+        self.now = s.t;
+        self.processed += 1;
+        Some((s.t, s.event))
+    }
+
+    /// Drain events up to (and including) time `horizon` through `f`;
+    /// the handler may schedule more events.  The clock ends at
+    /// `max(now, horizon)`.
+    pub fn run_until(&mut self, horizon: SimTime, mut f: impl FnMut(&mut Engine, SimTime, Event)) {
+        while let Some(s) = self.queue.peek() {
+            if s.t > horizon {
+                break;
+            }
+            let (t, e) = self.next().unwrap();
+            f(self, t, e);
+        }
+        self.now = self.now.max(horizon);
+    }
+
+    /// Drain the whole queue.
+    pub fn run(&mut self, mut f: impl FnMut(&mut Engine, SimTime, Event)) {
+        while let Some((t, e)) = self.next() {
+            f(self, t, e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time() {
+        let mut e = Engine::new();
+        e.schedule_at(3.0, Event::Timer { tag: 3 });
+        e.schedule_at(1.0, Event::Timer { tag: 1 });
+        e.schedule_at(2.0, Event::Timer { tag: 2 });
+        let mut seen = Vec::new();
+        e.run(|_, t, ev| {
+            if let Event::Timer { tag } = ev {
+                seen.push((t, tag));
+            }
+        });
+        assert_eq!(seen, vec![(1.0, 1), (2.0, 2), (3.0, 3)]);
+        assert_eq!(e.processed(), 3);
+    }
+
+    #[test]
+    fn fifo_among_ties() {
+        let mut e = Engine::new();
+        for tag in 0..10 {
+            e.schedule_at(5.0, Event::Timer { tag });
+        }
+        let mut seen = Vec::new();
+        e.run(|_, _, ev| {
+            if let Event::Timer { tag } = ev {
+                seen.push(tag);
+            }
+        });
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_schedule() {
+        let mut e = Engine::new();
+        e.schedule_at(0.0, Event::Timer { tag: 0 });
+        let mut count = 0u64;
+        e.run(|eng, _, ev| {
+            if let Event::Timer { tag } = ev {
+                count += 1;
+                if tag < 4 {
+                    eng.schedule_in(1.0, Event::Timer { tag: tag + 1 });
+                }
+            }
+        });
+        assert_eq!(count, 5);
+        assert_eq!(e.now(), 4.0);
+    }
+
+    #[test]
+    fn run_until_respects_horizon() {
+        let mut e = Engine::new();
+        e.schedule_at(1.0, Event::Timer { tag: 1 });
+        e.schedule_at(10.0, Event::Timer { tag: 10 });
+        let mut seen = Vec::new();
+        e.run_until(5.0, |_, _, ev| {
+            if let Event::Timer { tag } = ev {
+                seen.push(tag);
+            }
+        });
+        assert_eq!(seen, vec![1]);
+        assert_eq!(e.pending(), 1);
+    }
+
+    #[test]
+    fn past_schedule_clamped_to_now() {
+        let mut e = Engine::new();
+        e.schedule_at(2.0, Event::Timer { tag: 0 });
+        e.next();
+        assert_eq!(e.now(), 2.0);
+        e.schedule_at(1.0, Event::Timer { tag: 1 }); // in the past
+        let (t, _) = e.next().unwrap();
+        assert_eq!(t, 2.0);
+    }
+}

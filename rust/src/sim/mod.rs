@@ -1,0 +1,15 @@
+//! Simulation layer: discrete-event engine, the session simulator that
+//! plays jobs against markets, the overhead-categorized ledgers, and
+//! result aggregation.
+
+pub mod accounting;
+pub mod engine;
+pub mod result;
+pub mod run;
+pub mod world;
+
+pub use accounting::{Breakdown, Category, Ledger, CATEGORIES};
+pub use engine::{Engine, Event, SimTime};
+pub use result::AggregateResult;
+pub use run::{simulate_job, JobResult, RevocationRule, RunConfig};
+pub use world::World;

@@ -1,0 +1,135 @@
+//! Result aggregation: averaging job results across seeds into the
+//! per-bar data of a figure panel.
+
+use super::accounting::{Breakdown, Category, CATEGORIES};
+use super::run::JobResult;
+
+/// Mean breakdowns over a set of runs (one figure bar).
+#[derive(Clone, Debug, Default)]
+pub struct AggregateResult {
+    pub n: usize,
+    pub time: Breakdown,
+    pub cost: Breakdown,
+    pub mean_revocations: f64,
+    pub completion_rate: f64,
+}
+
+impl AggregateResult {
+    pub fn from_runs(runs: &[JobResult]) -> AggregateResult {
+        if runs.is_empty() {
+            return AggregateResult::default();
+        }
+        let n = runs.len();
+        let mut time = Breakdown::new();
+        let mut cost = Breakdown::new();
+        let mut revs = 0.0;
+        let mut completed = 0usize;
+        for r in runs {
+            time.merge(&r.ledger.time);
+            cost.merge(&r.ledger.cost);
+            revs += r.revocations as f64;
+            completed += r.completed as usize;
+        }
+        AggregateResult {
+            n,
+            time: time.scale(1.0 / n as f64),
+            cost: cost.scale(1.0 / n as f64),
+            mean_revocations: revs / n as f64,
+            completion_rate: completed as f64 / n as f64,
+        }
+    }
+
+    pub fn completion_h(&self) -> f64 {
+        self.time.total()
+    }
+    pub fn cost_usd(&self) -> f64 {
+        self.cost.total()
+    }
+
+    /// CSV row fragment: every category for time then cost.
+    pub fn csv_fields(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(CATEGORIES.len() * 2 + 2);
+        out.push(format!("{:.6}", self.completion_h()));
+        out.push(format!("{:.6}", self.cost_usd()));
+        for &c in CATEGORIES {
+            out.push(format!("{:.6}", self.time.get(c)));
+        }
+        for &c in CATEGORIES {
+            out.push(format!("{:.6}", self.cost.get(c)));
+        }
+        out
+    }
+
+    pub fn csv_header() -> Vec<String> {
+        let mut out = vec!["completion_h".to_string(), "cost_usd".to_string()];
+        for &c in CATEGORIES {
+            out.push(format!("time_{c}"));
+        }
+        for &c in CATEGORIES {
+            out.push(format!("cost_{c}"));
+        }
+        out
+    }
+
+    pub fn overhead_time(&self) -> f64 {
+        self.time.overhead()
+    }
+    pub fn useful_time(&self) -> f64 {
+        self.time.get(Category::Useful)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Job;
+    use crate::sim::accounting::Ledger;
+
+    fn fake_run(useful: f64, cost_useful: f64, revs: u32, completed: bool) -> JobResult {
+        let mut ledger = Ledger::new();
+        ledger.time.add(Category::Useful, useful);
+        ledger.cost.add(Category::Useful, cost_useful);
+        JobResult {
+            job: Job::new(1, useful.max(0.1), 8.0),
+            policy: "x".into(),
+            ft: "none".into(),
+            ledger,
+            revocations: revs,
+            sessions: 1,
+            ondemand_sessions: 0,
+            completed,
+            makespan_h: useful,
+        }
+    }
+
+    #[test]
+    fn averages() {
+        let runs = vec![fake_run(4.0, 1.0, 2, true), fake_run(8.0, 3.0, 0, true)];
+        let a = AggregateResult::from_runs(&runs);
+        assert_eq!(a.n, 2);
+        assert!((a.completion_h() - 6.0).abs() < 1e-12);
+        assert!((a.cost_usd() - 2.0).abs() < 1e-12);
+        assert!((a.mean_revocations - 1.0).abs() < 1e-12);
+        assert_eq!(a.completion_rate, 1.0);
+    }
+
+    #[test]
+    fn completion_rate_counts_failures() {
+        let runs = vec![fake_run(4.0, 1.0, 0, true), fake_run(4.0, 1.0, 0, false)];
+        let a = AggregateResult::from_runs(&runs);
+        assert_eq!(a.completion_rate, 0.5);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let a = AggregateResult::from_runs(&[fake_run(1.0, 1.0, 0, true)]);
+        assert_eq!(a.csv_fields().len(), AggregateResult::csv_header().len());
+    }
+
+    #[test]
+    fn empty() {
+        let a = AggregateResult::from_runs(&[]);
+        assert_eq!(a.n, 0);
+        assert_eq!(a.completion_h(), 0.0);
+    }
+}

@@ -1,0 +1,745 @@
+//! The job-lifecycle session simulator — the measurement core behind
+//! every Fig. 1 bar.
+//!
+//! `simulate_job` plays one job under a (policy, FT mechanism) pair over
+//! the world's price traces, producing a categorized [`Ledger`] of
+//! completion time and deployment cost.
+//!
+//! Revocation models (paper §IV-B methodology):
+//!   * [`RevocationRule::Trace`]       — revocations happen when the
+//!     provisioned market's price rises above on-demand in the trace
+//!     (used for P-SIWOFT and the greedy ablation);
+//!   * [`RevocationRule::ForcedRate`]  — "a fixed number of revocations
+//!     per day of the job's execution length" at random times (the
+//!     paper's rule for the FT approach, after SpotOn);
+//!   * [`RevocationRule::ForcedCount`] — exactly N revocations during
+//!     the job (the Fig. 1c/1f x-axis), placed at sorted-uniform
+//!     fractions of the job's *new-work frontier* so each fires once.
+//!
+//! Work classification uses the frontier rule: executing work the job
+//! has already reached before (and lost) counts as `reexec`; work beyond
+//! the historical frontier counts as `useful`, so `useful` sums to
+//! exactly the job length on completion.
+
+use super::accounting::{Category, Ledger};
+use super::world::World;
+use crate::ft::{FtMechanism, Recovery};
+use crate::job::{Job, JobProgress};
+use crate::market::session_cost;
+use crate::policy::{Ctx, Policy};
+use crate::util::rng::Rng;
+
+/// How revocations are generated for a run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RevocationRule {
+    /// price-trace driven (spot price > on-demand)
+    Trace,
+    /// Poisson arrivals at `per_day` revocations per day of wall time
+    ForcedRate { per_day: f64 },
+    /// exactly `total` revocations spread over the job's execution
+    ForcedCount { total: u32 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RunConfig {
+    pub rule: RevocationRule,
+    /// simulation start hour within the trace window
+    pub start_t: f64,
+    /// safety valve: abort after this many sessions (marks !completed)
+    pub max_sessions: u32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig { rule: RevocationRule::Trace, start_t: 0.0, max_sessions: 10_000 }
+    }
+}
+
+/// Result of one simulated job execution.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub job: Job,
+    pub policy: String,
+    pub ft: String,
+    pub ledger: Ledger,
+    pub revocations: u32,
+    pub sessions: u32,
+    pub ondemand_sessions: u32,
+    pub completed: bool,
+    /// wall-clock hours from submission to completion
+    pub makespan_h: f64,
+}
+
+impl JobResult {
+    pub fn completion_h(&self) -> f64 {
+        self.ledger.completion_h()
+    }
+    pub fn cost_usd(&self) -> f64 {
+        self.ledger.cost_usd()
+    }
+}
+
+/// Stateful revocation schedule for one run.
+enum Schedule {
+    Trace,
+    Rate { per_h: f64, next_abs: f64 },
+    Count { thresholds: Vec<f64>, idx: usize },
+}
+
+impl Schedule {
+    fn new(rule: RevocationRule, job: &Job, start_t: f64, rng: &mut Rng) -> Schedule {
+        match rule {
+            RevocationRule::Trace => Schedule::Trace,
+            RevocationRule::ForcedRate { per_day } => {
+                let per_h = (per_day / 24.0).max(1e-9);
+                Schedule::Rate { per_h, next_abs: start_t + rng.exp(per_h) }
+            }
+            RevocationRule::ForcedCount { total } => {
+                // Sorted-uniform fractions of the job length; capped below
+                // 0.98 so the final stretch always completes.
+                let mut fr: Vec<f64> = (0..total).map(|_| rng.f64() * 0.98).collect();
+                fr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                Schedule::Count {
+                    thresholds: fr.iter().map(|f| f * job.exec_len_h).collect(),
+                    idx: 0,
+                }
+            }
+        }
+    }
+
+    /// Wall-clock revocation time for the current spot session, given
+    /// the session start and the market (Trace/Rate only).
+    fn wall_revocation(&mut self, world: &World, market: usize, t: f64) -> Option<f64> {
+        match self {
+            Schedule::Trace => world.market(market).next_revocation_after(t),
+            Schedule::Rate { per_h: _, next_abs } => Some(*next_abs),
+            Schedule::Count { .. } => None, // handled via frontier
+        }
+    }
+
+    /// For Count mode: the frontier threshold that fires next, if any.
+    fn next_threshold(&self) -> Option<f64> {
+        match self {
+            Schedule::Count { thresholds, idx } => thresholds.get(*idx).copied(),
+            _ => None,
+        }
+    }
+
+    fn consume(&mut self, rng: &mut Rng, now: f64) {
+        match self {
+            Schedule::Trace => {}
+            Schedule::Rate { per_h, next_abs } => *next_abs = now + rng.exp(*per_h),
+            Schedule::Count { idx, .. } => *idx += 1,
+        }
+    }
+}
+
+/// Pending state carried into the next session after a revocation.
+#[derive(Clone, Copy, Debug, Default)]
+struct Carry {
+    recovery_h: f64,
+    migrate_h: f64,
+}
+
+/// Simulate one job under `policy` + `ft`.
+pub fn simulate_job(
+    world: &World,
+    policy: &mut dyn Policy,
+    ft: &dyn FtMechanism,
+    job: &Job,
+    cfg: &RunConfig,
+    seed: u64,
+) -> JobResult {
+    policy.reset();
+    if ft.degree() > 1 {
+        return replicated::simulate(world, policy, ft, job, cfg, seed);
+    }
+    let mut rng = Rng::with_stream(seed, job.id ^ 0x51307F7);
+    let mut schedule = Schedule::new(cfg.rule, job, cfg.start_t, &mut rng);
+
+    let mut ledger = Ledger::new();
+    let mut progress = JobProgress::new();
+    let mut frontier = 0.0f64; // max total progress ever reached
+    let mut t = cfg.start_t;
+    let mut sessions = 0u32;
+    let mut od_sessions = 0u32;
+    let mut carry = Carry::default();
+    let container = &world.container;
+
+    'job: while !progress.is_complete(job) {
+        if sessions >= cfg.max_sessions {
+            break;
+        }
+        sessions += 1;
+        let ctx = Ctx { world, now: t };
+        let decision = policy.select(job, &ctx);
+        let market = decision.market();
+        let is_spot = decision.is_spot();
+        let price = if is_spot {
+            world.market(market).price_at(t) as f64
+        } else {
+            world.od_price(market)
+        };
+        if !is_spot {
+            od_sessions += 1;
+        }
+
+        // Revocation wall-time for this session (spot only).
+        let mut rev_at = if is_spot {
+            schedule.wall_revocation(world, market, t)
+        } else {
+            None
+        };
+
+        let session_t0 = t;
+
+        // A span runs [t, t+dur); returns Some(interrupt_offset) if the
+        // revocation fires inside it.
+        macro_rules! span {
+            ($cat:expr, $dur:expr) => {{
+                let dur: f64 = $dur;
+                let end = t + dur;
+                match rev_at {
+                    Some(r) if r < end => {
+                        let done = (r - t).max(0.0);
+                        ledger.span($cat, done, price);
+                        t = r;
+                        true // interrupted
+                    }
+                    _ => {
+                        ledger.span($cat, dur, price);
+                        t = end;
+                        false
+                    }
+                }
+            }};
+        }
+
+        // helper to close the session's billing
+        macro_rules! close_session {
+            () => {{
+                let dur = t - session_t0;
+                let (_, buffer) = session_cost(dur, price);
+                ledger.buffer_cost(buffer);
+            }};
+        }
+
+        macro_rules! handle_revocation {
+            () => {{
+                let rec = ft.on_revocation(job, container, progress.durable_h > 0.0);
+                match rec {
+                    Recovery::Restart { recovery_time_h } => {
+                        progress.on_revocation();
+                        // progress falls back to the durable point; the
+                        // frontier remembers the high-water mark
+                        carry = Carry { recovery_h: recovery_time_h, migrate_h: 0.0 };
+                    }
+                    Recovery::Migrate { migrate_time_h } => {
+                        // progress preserved; only the transfer is paid
+                        progress.revocations += 1;
+                        carry = Carry { recovery_h: 0.0, migrate_h: migrate_time_h };
+                    }
+                }
+                schedule.consume(&mut rng, t);
+                close_session!();
+                policy.on_revocation(job, market, &Ctx { world, now: t });
+                continue 'job;
+            }};
+        }
+
+        // --- session prologue -----------------------------------------
+        let entering = std::mem::take(&mut carry);
+        if entering.migrate_h > 0.0 {
+            // live migration: transfer instead of boot+restore
+            if span!(Category::Migration, entering.migrate_h) {
+                handle_revocation!();
+            }
+        } else {
+            if span!(Category::Startup, container.startup_time()) {
+                handle_revocation!();
+            }
+            if entering.recovery_h > 0.0 && span!(Category::Recovery, entering.recovery_h) {
+                handle_revocation!();
+            }
+        }
+
+        // --- work / checkpoint loop ------------------------------------
+        let ckpt_interval = ft.checkpoint_interval(job);
+        let mut work_since_ckpt = 0.0f64;
+        while !progress.is_complete(job) {
+            let remaining = progress.remaining(job);
+            let until_ckpt = ckpt_interval
+                .map(|i| (i - work_since_ckpt).max(1e-6))
+                .unwrap_or(f64::INFINITY);
+            let mut chunk = remaining.min(until_ckpt);
+
+            // split the chunk into re-execution (below frontier) and new
+            // work (above frontier) for categorization and Count-mode
+            // threshold crossing
+            let p0 = progress.total_h();
+            let reexec_part = (frontier - p0).clamp(0.0, chunk);
+            let useful_part = chunk - reexec_part;
+
+            // Count-mode: does a threshold fire inside the new-work part?
+            if let Some(thr) = schedule.next_threshold() {
+                if is_spot && thr < frontier + useful_part {
+                    // revocation at the crossing point
+                    let new_before = (thr - frontier).max(0.0);
+                    chunk = reexec_part + new_before;
+                    rev_at = Some(t + chunk);
+                }
+            }
+
+            // run the re-execution portion
+            if reexec_part > 0.0 {
+                let before = t;
+                let interrupted = span!(Category::Reexec, reexec_part.min(chunk));
+                progress.volatile_h += t - before;
+                if interrupted {
+                    handle_revocation!();
+                }
+            }
+            // run the new-work portion
+            let new_part = chunk - reexec_part;
+            if new_part > 0.0 {
+                let before = t;
+                let interrupted = span!(Category::Useful, new_part);
+                let done = t - before;
+                progress.volatile_h += done;
+                frontier = frontier.max(progress.total_h());
+                if interrupted {
+                    handle_revocation!();
+                }
+                // exactly-at-threshold revocation (rev_at == span end)
+                if let Some(r) = rev_at {
+                    if (r - t).abs() < 1e-12 && is_spot {
+                        handle_revocation!();
+                    }
+                }
+            }
+            work_since_ckpt += chunk;
+
+            // checkpoint due?
+            if let Some(interval) = ckpt_interval {
+                if work_since_ckpt >= interval - 1e-9 && !progress.is_complete(job) {
+                    let cdur = ft.checkpoint_time(job, container);
+                    if span!(Category::Checkpoint, cdur) {
+                        // revoked mid-checkpoint: checkpoint not durable
+                        handle_revocation!();
+                    }
+                    progress.commit();
+                    work_since_ckpt = 0.0;
+                }
+            }
+        }
+
+        // completed within this session
+        close_session!();
+        break;
+    }
+
+    let completed = progress.is_complete(job);
+    JobResult {
+        job: job.clone(),
+        policy: policy.name().to_string(),
+        ft: ft.name().to_string(),
+        ledger,
+        revocations: progress.revocations,
+        sessions,
+        ondemand_sessions: od_sessions,
+        completed,
+        makespan_h: t - cfg.start_t,
+    }
+}
+
+/// Replication-mode simulation (degree k ≥ 2).
+///
+/// Model (documented in DESIGN.md): k replicas run the job in k distinct
+/// suitable markets.  A revocation kills one replica; a replacement
+/// boots for `startup` hours (costed, not on the critical path).  If a
+/// revocation fires while every other replica is already dead or
+/// booting, all progress is lost and the job restarts from scratch.
+/// Progress advances whenever ≥ 1 replica is healthy; cost accrues for
+/// every replica (healthy or booting) at its market's session price with
+/// per-session billing buffers.
+mod replicated {
+    use super::*;
+
+    pub fn simulate(
+        world: &World,
+        policy: &mut dyn Policy,
+        ft: &dyn FtMechanism,
+        job: &Job,
+        cfg: &RunConfig,
+        seed: u64,
+    ) -> JobResult {
+        let k = ft.degree() as usize;
+        let mut rng = Rng::with_stream(seed, job.id ^ 0x3EB71CA);
+        let mut schedule = Schedule::new(cfg.rule, job, cfg.start_t, &mut rng);
+        let container = &world.container;
+
+        // pick k distinct markets: the policy's choice + the next
+        // suitable ones by catalog order
+        let ctx = Ctx { world, now: cfg.start_t };
+        let primary = policy.select(job, &ctx).market();
+        let mut markets = vec![primary];
+        for id in world.catalog.suitable(job.mem_gb) {
+            if markets.len() >= k {
+                break;
+            }
+            if !markets.contains(&id) {
+                markets.push(id);
+            }
+        }
+        while markets.len() < k {
+            markets.push(primary); // degenerate catalogs
+        }
+
+        let mut ledger = Ledger::new();
+        let mut t = cfg.start_t;
+        let mut progress = JobProgress::new();
+        let mut frontier = 0.0f64;
+        let mut revocations = 0u32;
+        let mut sessions = 0u32;
+
+        // replica i healthy after boot at t + startup
+        let startup = container.startup_time();
+        // initial boot (critical path — nothing can run yet)
+        ledger.span(Category::Startup, startup, avg_price(world, &markets, t) * k as f64);
+        t += startup;
+        let mut session_start = vec![t; k];
+        let mut healthy: Vec<bool> = vec![true; k];
+        let mut boot_done: Vec<f64> = vec![0.0; k];
+
+        let max_events = cfg.max_sessions;
+        let mut events = 0u32;
+
+        while !progress.is_complete(job) && events < max_events {
+            events += 1;
+            sessions += 1;
+            let remaining = progress.remaining(job);
+            // next revocation event (wall clock)
+            let rev = match &mut schedule {
+                Schedule::Trace => markets
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| healthy[i])
+                    .filter_map(|(i, &m)| {
+                        world.market(m).next_revocation_after(t).map(|r| (r, i))
+                    })
+                    .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap()),
+                Schedule::Rate { next_abs, .. } => {
+                    let victim = pick_victim(&healthy, &mut rng);
+                    victim.map(|v| (*next_abs, v))
+                }
+                Schedule::Count { thresholds, idx } => {
+                    // threshold on the frontier: convert to wall time
+                    thresholds.get(*idx).and_then(|&thr| {
+                        if thr < frontier + remaining {
+                            let dt = (thr - frontier).max(0.0);
+                            pick_victim(&healthy, &mut rng).map(|v| (t + dt, v))
+                        } else {
+                            None
+                        }
+                    })
+                }
+            };
+
+            let finish_at = t + remaining;
+            match rev {
+                Some((rt, victim)) if rt < finish_at && healthy.iter().any(|&h| h) => {
+                    // progress up to rt (≥1 healthy throughout by loop invariant)
+                    let worked = (rt - t).max(0.0);
+                    let p0 = progress.total_h();
+                    let reexec = (frontier - p0).clamp(0.0, worked);
+                    let price_k = avg_price(world, &markets, t) * alive_count(&healthy, &boot_done, t);
+                    ledger.span(Category::Reexec, reexec, price_k);
+                    ledger.span(Category::Useful, worked - reexec, price_k);
+                    progress.volatile_h += worked;
+                    frontier = frontier.max(progress.total_h());
+                    t = rt;
+                    schedule.consume(&mut rng, t);
+                    revocations += 1;
+
+                    // bill the victim's session
+                    let dur = t - session_start[victim];
+                    let (_, buffer) = session_cost(dur, world.od_price(markets[victim]) * 0.4);
+                    ledger.buffer_cost(buffer);
+
+                    healthy[victim] = false;
+                    let others_alive = healthy.iter().any(|&h| h);
+                    if !others_alive && boot_done.iter().all(|&b| b <= t) {
+                        // total loss: restart from scratch
+                        progress.on_revocation();
+                        ledger.span(
+                            Category::Startup,
+                            startup,
+                            avg_price(world, &markets, t) * k as f64,
+                        );
+                        t += startup;
+                        for i in 0..k {
+                            healthy[i] = true;
+                            session_start[i] = t;
+                            boot_done[i] = 0.0;
+                        }
+                    } else {
+                        // replacement boots off the critical path
+                        boot_done[victim] = t + startup;
+                        session_start[victim] = t;
+                        // startup cost (cost-only: parallel to execution)
+                        ledger.cost.add(
+                            Category::Startup,
+                            startup * world.od_price(markets[victim]) * 0.4,
+                        );
+                    }
+                    // re-arm any finished boots
+                    for i in 0..k {
+                        if !healthy[i] && boot_done[i] > 0.0 && boot_done[i] <= t {
+                            healthy[i] = true;
+                            boot_done[i] = 0.0;
+                        }
+                    }
+                }
+                _ => {
+                    // run to completion
+                    let p0 = progress.total_h();
+                    let reexec = (frontier - p0).clamp(0.0, remaining);
+                    let price_k = avg_price(world, &markets, t) * alive_count(&healthy, &boot_done, t);
+                    ledger.span(Category::Reexec, reexec, price_k);
+                    ledger.span(Category::Useful, remaining - reexec, price_k);
+                    progress.volatile_h += remaining;
+                    frontier = frontier.max(progress.total_h());
+                    t = finish_at;
+                }
+            }
+        }
+
+        // close all replica sessions
+        for i in 0..k {
+            let dur = t - session_start[i];
+            let (_, buffer) = session_cost(dur, world.od_price(markets[i]) * 0.4);
+            ledger.buffer_cost(buffer);
+        }
+
+        JobResult {
+            job: job.clone(),
+            policy: policy.name().to_string(),
+            ft: ft.name().to_string(),
+            ledger,
+            revocations,
+            sessions,
+            ondemand_sessions: 0,
+            completed: progress.is_complete(job),
+            makespan_h: t - cfg.start_t,
+        }
+    }
+
+    fn avg_price(world: &World, markets: &[usize], t: f64) -> f64 {
+        let s: f64 = markets.iter().map(|&m| world.market(m).price_at(t) as f64).sum();
+        s / markets.len() as f64
+    }
+
+    fn alive_count(healthy: &[bool], boot_done: &[f64], t: f64) -> f64 {
+        healthy
+            .iter()
+            .zip(boot_done)
+            .filter(|(&h, &b)| h || (b > 0.0 && b > t))
+            .count()
+            .max(1) as f64
+    }
+
+    fn pick_victim(healthy: &[bool], rng: &mut Rng) -> Option<usize> {
+        let alive: Vec<usize> =
+            healthy.iter().enumerate().filter(|(_, &h)| h).map(|(i, _)| i).collect();
+        if alive.is_empty() {
+            None
+        } else {
+            Some(alive[rng.below(alive.len())])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::{Checkpointing, Migration, NoFt, Replication};
+    use crate::policy::{FtSpotPolicy, OnDemandPolicy, PSiwoft};
+
+    fn world() -> World {
+        World::generate(64, 1.0, 77)
+    }
+
+    #[test]
+    fn ondemand_has_no_overhead_but_startup() {
+        let w = world();
+        let job = Job::new(1, 8.0, 16.0);
+        let mut p = OnDemandPolicy;
+        let r = simulate_job(&w, &mut p, &NoFt, &job, &RunConfig::default(), 1);
+        assert!(r.completed);
+        assert_eq!(r.revocations, 0);
+        assert_eq!(r.sessions, 1);
+        let t = &r.ledger.time;
+        assert!((t.get(Category::Useful) - 8.0).abs() < 1e-9);
+        assert_eq!(t.get(Category::Checkpoint), 0.0);
+        assert_eq!(t.get(Category::Reexec), 0.0);
+        assert!(t.get(Category::Startup) > 0.0);
+        // cost: 8h + startup at od price of a ≥16GB instance, rounded up
+        assert!(r.cost_usd() > 0.0);
+    }
+
+    #[test]
+    fn useful_time_equals_job_length_always() {
+        let w = world();
+        let job = Job::new(2, 6.0, 16.0);
+        for seed in 0..5 {
+            let mut p = FtSpotPolicy::new();
+            let cfg = RunConfig {
+                rule: RevocationRule::ForcedRate { per_day: 6.0 },
+                ..Default::default()
+            };
+            let r = simulate_job(&w, &mut p, &Checkpointing::new(6), &job, &cfg, seed);
+            assert!(r.completed, "seed {seed}");
+            assert!(
+                (r.ledger.time.get(Category::Useful) - 6.0).abs() < 1e-6,
+                "useful {} != 6 (seed {seed})",
+                r.ledger.time.get(Category::Useful)
+            );
+        }
+    }
+
+    #[test]
+    fn forced_count_fires_exactly_n() {
+        let w = world();
+        let job = Job::new(3, 8.0, 16.0);
+        for &n in &[1u32, 2, 4, 8] {
+            let mut p = FtSpotPolicy::new();
+            let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: n }, ..Default::default() };
+            let r = simulate_job(&w, &mut p, &Checkpointing::new(8), &job, &cfg, 9);
+            assert!(r.completed);
+            assert_eq!(r.revocations, n, "expected exactly {n} revocations");
+        }
+    }
+
+    #[test]
+    fn checkpointing_bounds_reexec() {
+        let w = world();
+        let job = Job::new(4, 8.0, 16.0);
+        let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 4 }, ..Default::default() };
+        // many checkpoints → re-exec bounded by interval per revocation
+        let mut p = FtSpotPolicy::new();
+        let r = simulate_job(&w, &mut p, &Checkpointing::new(16), &job, &cfg, 5);
+        let interval: f64 = 8.0 / 16.0;
+        assert!(r.ledger.time.get(Category::Reexec) <= 4.0 * (interval + 1e-6) + 1e-6);
+        assert!(r.ledger.time.get(Category::Checkpoint) > 0.0);
+        assert!(r.ledger.time.get(Category::Recovery) > 0.0);
+    }
+
+    #[test]
+    fn no_ft_reexecutes_from_scratch() {
+        let w = world();
+        let job = Job::new(5, 4.0, 16.0);
+        let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 2 }, ..Default::default() };
+        let mut p = FtSpotPolicy::new();
+        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 3);
+        assert!(r.completed);
+        assert_eq!(r.revocations, 2);
+        // lost work re-executed, no checkpoints, no recovery
+        assert!(r.ledger.time.get(Category::Reexec) > 0.0);
+        assert_eq!(r.ledger.time.get(Category::Checkpoint), 0.0);
+        assert_eq!(r.ledger.time.get(Category::Recovery), 0.0);
+        // completion = useful + reexec + startups
+        assert!(r.completion_h() >= 4.0);
+    }
+
+    #[test]
+    fn migration_preserves_progress() {
+        let w = world();
+        let job = Job::new(6, 6.0, 2.0); // small footprint → migratable
+        let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 3 }, ..Default::default() };
+        let mut p = FtSpotPolicy::new();
+        let r = simulate_job(&w, &mut p, &Migration, &job, &cfg, 4);
+        assert!(r.completed);
+        assert_eq!(r.revocations, 3);
+        assert_eq!(r.ledger.time.get(Category::Reexec), 0.0, "migration loses no work");
+        assert!(r.ledger.time.get(Category::Migration) > 0.0);
+        // near-zero overhead: completion ≈ len + startup + migrations
+        assert!(r.completion_h() < 6.0 + 0.2);
+    }
+
+    #[test]
+    fn psiwoft_picks_stable_market_and_avoids_revocations() {
+        let mut w = world();
+        let start = w.split_train(0.5);
+        let job = Job::new(7, 8.0, 16.0);
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        let mut p = PSiwoft::default();
+        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 6);
+        assert!(r.completed);
+        // high-MTTR market on a 1-month suffix: revocations should be rare
+        assert!(r.revocations <= 1, "revocations {}", r.revocations);
+        assert!(r.completion_h() < 8.0 + 1.0);
+    }
+
+    #[test]
+    fn buffer_cost_positive_for_fractional_sessions() {
+        let w = world();
+        let job = Job::new(8, 2.5, 16.0); // 2.5h + startup → fractional hour
+        let mut p = OnDemandPolicy;
+        let r = simulate_job(&w, &mut p, &NoFt, &job, &RunConfig::default(), 1);
+        assert!(r.ledger.cost.get(Category::Buffer) > 0.0);
+    }
+
+    #[test]
+    fn replication_costs_multiply() {
+        let w = world();
+        let job = Job::new(9, 4.0, 16.0);
+        let cfg = RunConfig { rule: RevocationRule::ForcedRate { per_day: 2.0 }, ..Default::default() };
+        let mut p1 = FtSpotPolicy::new();
+        let r1 = simulate_job(&w, &mut p1, &NoFt, &job, &cfg, 11);
+        let mut p3 = FtSpotPolicy::new();
+        let r3 = simulate_job(&w, &mut p3, &Replication::new(3), &job, &cfg, 11);
+        assert!(r3.completed);
+        assert!(
+            r3.cost_usd() > r1.cost_usd() * 1.5,
+            "replication cost {} vs single {}",
+            r3.cost_usd(),
+            r1.cost_usd()
+        );
+        // but completion time stays near the job length (absorbed deaths)
+        assert!(r3.completion_h() < 4.0 + 1.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = world();
+        let job = Job::new(10, 8.0, 16.0);
+        let cfg = RunConfig { rule: RevocationRule::ForcedRate { per_day: 4.0 }, ..Default::default() };
+        let run = |seed| {
+            let mut p = FtSpotPolicy::new();
+            simulate_job(&w, &mut p, &Checkpointing::new(8), &job, &cfg, seed)
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a.ledger, b.ledger);
+        assert_eq!(a.revocations, b.revocations);
+        let c = run(43);
+        assert!(a.ledger != c.ledger || a.revocations != c.revocations);
+    }
+
+    #[test]
+    fn completion_time_at_least_job_length() {
+        let w = world();
+        for seed in 0..8 {
+            let job = Job::new(seed, 3.0 + seed as f64, 16.0);
+            let mut p = FtSpotPolicy::new();
+            let cfg = RunConfig {
+                rule: RevocationRule::ForcedRate { per_day: 3.0 },
+                ..Default::default()
+            };
+            let r = simulate_job(&w, &mut p, &Checkpointing::new(4), &job, &cfg, seed);
+            assert!(r.completed);
+            assert!(r.completion_h() >= job.exec_len_h - 1e-9);
+            assert!(r.makespan_h >= r.completion_h() - 1e-9);
+        }
+    }
+}

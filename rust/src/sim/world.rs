@@ -1,0 +1,113 @@
+//! The simulation world: catalog + price trace + analytics + cost model,
+//! bundled for the policy and session layers.
+//!
+//! Analytics can come from the native implementation or be injected from
+//! the PJRT artifact path (`runtime::analytics_rt`) — the rest of the
+//! system is agnostic.
+
+use crate::job::ContainerModel;
+use crate::market::{Catalog, MarketAnalytics, PriceTrace, SpotMarket, TraceGenConfig};
+
+#[derive(Clone, Debug)]
+pub struct World {
+    pub catalog: Catalog,
+    pub trace: PriceTrace,
+    pub od: Vec<f32>,
+    pub analytics: MarketAnalytics,
+    pub container: ContainerModel,
+}
+
+impl World {
+    /// Build a world from parts (analytics computed natively).
+    pub fn new(catalog: Catalog, trace: PriceTrace) -> World {
+        let od = catalog.od_prices();
+        let analytics = MarketAnalytics::compute(&trace, &od);
+        World { catalog, trace, od, analytics, container: ContainerModel::default() }
+    }
+
+    /// Convenience: generate a synthetic world with `n` markets and a
+    /// trace of `months` months.
+    pub fn generate(n_markets: usize, months: f64, seed: u64) -> World {
+        let catalog = Catalog::with_limit(n_markets);
+        let cfg = TraceGenConfig { months, seed, ..Default::default() };
+        let trace = crate::market::generate_traces(&catalog, &cfg);
+        World::new(catalog, trace)
+    }
+
+    /// Honest train/test methodology: compute analytics only on the
+    /// first `train_frac` of the trace and return the first hour of the
+    /// held-out suffix, where simulations should start.  (The paper
+    /// provisions from "the past three months" of history; this mirrors
+    /// that separation inside one generated window.)
+    pub fn split_train(&mut self, train_frac: f64) -> f64 {
+        let train_h = ((self.trace.hours as f64 * train_frac) as usize)
+            .clamp(2, self.trace.hours - 1);
+        let train = self.trace.window(0, train_h);
+        self.analytics = MarketAnalytics::compute(&train, &self.od);
+        train_h as f64
+    }
+
+    /// Replace the analytics (e.g. with the PJRT-computed version).
+    pub fn with_analytics(mut self, analytics: MarketAnalytics) -> World {
+        assert_eq!(analytics.markets, self.catalog.len(), "analytics misaligned");
+        self.analytics = analytics;
+        self
+    }
+
+    pub fn market(&self, id: usize) -> SpotMarket<'_> {
+        SpotMarket::new(&self.trace, id, self.od[id])
+    }
+
+    pub fn n_markets(&self) -> usize {
+        self.catalog.len()
+    }
+
+    /// On-demand hourly price for a market's instance type in its region.
+    pub fn od_price(&self, id: usize) -> f64 {
+        self.od[id] as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_consistent() {
+        let w = World::generate(24, 0.5, 9);
+        assert_eq!(w.n_markets(), 24);
+        assert_eq!(w.trace.markets, 24);
+        assert_eq!(w.analytics.markets, 24);
+        assert_eq!(w.od.len(), 24);
+        assert_eq!(w.trace.hours, 360);
+    }
+
+    #[test]
+    fn market_view_aligned() {
+        let w = World::generate(8, 0.25, 3);
+        let m = w.market(5);
+        assert_eq!(m.id, 5);
+        assert!((m.od_price as f64 - w.od_price(5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_train_uses_prefix_only() {
+        let mut w = World::generate(16, 1.0, 4);
+        let full_mttr = w.analytics.mttr.clone();
+        let start = w.split_train(0.67);
+        assert!((start - (720.0f64 * 0.67).floor()).abs() <= 1.0);
+        assert_eq!(w.analytics.window_hours, start as usize);
+        // analytics changed (different window)
+        assert_ne!(full_mttr, w.analytics.mttr);
+        // trace itself untouched
+        assert_eq!(w.trace.hours, 720);
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn with_analytics_checks_shape() {
+        let w = World::generate(8, 0.25, 3);
+        let w2 = World::generate(4, 0.25, 3);
+        let _ = w.with_analytics(w2.analytics);
+    }
+}

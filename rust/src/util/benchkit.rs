@@ -1,0 +1,228 @@
+//! Benchmark harness (criterion substitute).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, timed iterations with adaptive batch sizing, robust summary
+//! statistics (mean / p50 / p99), and aligned table output.  Results can
+//! also be dumped as CSV for EXPERIMENTS.md.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub std_ns: f64,
+    /// optional throughput unit count per iteration (e.g. events)
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.mean_ns * 1e-9))
+    }
+}
+
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_samples: 5,
+        }
+    }
+
+    pub fn with_times(warmup_ms: u64, measure_ms: u64) -> Self {
+        Bench {
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
+            min_samples: 5,
+        }
+    }
+
+    /// Measure `f`, returning summary stats. `f`'s return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // warmup + estimate cost
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+        // batch so each sample is ≳ 100 µs (amortize timer overhead)
+        let batch = ((100_000.0 / est_ns).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let measure_start = Instant::now();
+        while measure_start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let std = (samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n).sqrt();
+        BenchResult {
+            name: name.to_string(),
+            iters: batch * samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: percentile(&samples, 50.0),
+            p99_ns: percentile(&samples, 99.0),
+            std_ns: std,
+            units_per_iter: None,
+        }
+    }
+
+    /// Like `run`, but tags each iteration as processing `units` items so
+    /// the report can show throughput (items/s).
+    pub fn run_with_units<T>(
+        &self,
+        name: &str,
+        units: f64,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.units_per_iter = Some(units);
+        r
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} /s")
+    }
+}
+
+/// Collects results and prints an aligned report.
+#[derive(Default)]
+pub struct Suite {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        Suite { title: title.to_string(), results: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        println!(
+            "  {:<44} {:>12} {:>12} {:>12}{}",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns),
+            r.throughput().map(|t| format!("  {:>12}", fmt_rate(t))).unwrap_or_default()
+        );
+        self.results.push(r);
+    }
+
+    pub fn header(&self) {
+        println!("\n== {} ==", self.title);
+        println!(
+            "  {:<44} {:>12} {:>12} {:>12} {:>13}",
+            "benchmark", "mean", "p50", "p99", "throughput"
+        );
+    }
+
+    pub fn to_csv(&self) -> Vec<Vec<String>> {
+        let mut rows = vec![crate::csv_row!["name", "mean_ns", "p50_ns", "p99_ns", "std_ns", "iters", "throughput_per_s"]];
+        for r in &self.results {
+            rows.push(crate::csv_row![
+                r.name,
+                r.mean_ns,
+                r.p50_ns,
+                r.p99_ns,
+                r.std_ns,
+                r.iters,
+                r.throughput().unwrap_or(f64::NAN)
+            ]);
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.p50_ns <= r.p99_ns * 1.001);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bench::quick();
+        let r = b.run_with_units("units", 1000.0, || 42);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert!(fmt_ns(1.5e4).contains("µs"));
+        assert!(fmt_ns(2.5e7).contains("ms"));
+        assert!(fmt_ns(3.0e9).contains(" s"));
+        assert!(fmt_rate(5e6).contains("M/s"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Command-line argument parsing (the clap substitute).
+//!
+//! Model: a binary has subcommands; each subcommand declares typed
+//! options (`--name <value>`), boolean flags, and generates its own
+//! `--help`.  Kept intentionally small: exactly what `siwoft`'s CLI and
+//! the examples need.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        CommandSpec { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n\noptions:", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "".to_string() } else { " <value>".to_string() };
+            let def = match o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{}{kind}\n        {}{def}", o.name, o.help);
+        }
+        s
+    }
+
+    /// Parse raw args (everything after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.to_string(), false);
+            } else if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected argument '{a}'\n\n{}", self.usage()))?;
+            // support --name=value
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let spec = self
+                .opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| format!("unknown option '--{name}'\n\n{}", self.usage()))?;
+            if spec.is_flag {
+                if inline.is_some() {
+                    return Err(format!("flag '--{name}' takes no value"));
+                }
+                flags.insert(name.to_string(), true);
+            } else {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        raw.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("option '--{name}' needs a value"))?
+                    }
+                };
+                values.insert(name.to_string(), v);
+            }
+            i += 1;
+        }
+        // required check
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                return Err(format!("missing required option '--{}'\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(Args { values, flags })
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(String::as_str).unwrap_or("")
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name).parse().map_err(|_| format!("--{name} must be an integer"))
+    }
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.str(name).parse().map_err(|_| format!("--{name} must be an integer"))
+    }
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name).parse().map_err(|_| format!("--{name} must be a number"))
+    }
+    /// Comma-separated f64 list.
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().parse().map_err(|_| format!("--{name}: bad number '{s}'")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("test", "a test command")
+            .opt("seed", "42", "rng seed")
+            .opt("out", "results", "output dir")
+            .req("traces", "trace dir")
+            .flag("verbose", "chatty")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&s(&["--traces", "t"])).unwrap();
+        assert_eq!(a.str("seed"), "42");
+        assert_eq!(a.u64("seed").unwrap(), 42);
+        assert_eq!(a.str("traces"), "t");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = spec()
+            .parse(&s(&["--seed", "7", "--traces", "x", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.u64("seed").unwrap(), 7);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = spec().parse(&s(&["--traces=foo", "--seed=9"])).unwrap();
+        assert_eq!(a.str("traces"), "foo");
+        assert_eq!(a.u64("seed").unwrap(), 9);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&s(&["--seed", "7"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&s(&["--traces", "t", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(spec().parse(&s(&["--traces", "t", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let err = spec().parse(&s(&["--help"])).unwrap_err();
+        assert!(err.contains("--seed"));
+        assert!(err.contains("a test command"));
+    }
+
+    #[test]
+    fn f64_list() {
+        let sp = CommandSpec::new("x", "").opt("xs", "1,2.5,3", "numbers");
+        let a = sp.parse(&[]).unwrap();
+        assert_eq!(a.f64_list("xs").unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+}

@@ -1,0 +1,299 @@
+//! TOML-subset configuration parser (the config-system substrate).
+//!
+//! Supports the subset the project's config files use:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = value` with string / integer / float / bool values
+//!   * flat arrays of scalars: `lengths = [2, 4, 8]`
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat `BTreeMap<String, Value>` keyed by the dotted
+//! path (`"sweep.lengths"`), with typed getters and helpful errors.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config parse error on line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("missing config key '{0}'")]
+    Missing(String),
+    #[error("config key '{key}' has wrong type (expected {expected})")]
+    Type { key: String, expected: &'static str },
+    #[error("io error reading config: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError::Parse { line: lineno + 1, msg: msg.to_string() };
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(err("unterminated section header"));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(&m))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config, ConfigError> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str, ConfigError> {
+        self.req(key)?.as_str().ok_or(ConfigError::Type { key: key.into(), expected: "string" })
+    }
+    pub fn i64(&self, key: &str) -> Result<i64, ConfigError> {
+        self.req(key)?.as_i64().ok_or(ConfigError::Type { key: key.into(), expected: "integer" })
+    }
+    pub fn f64(&self, key: &str) -> Result<f64, ConfigError> {
+        self.req(key)?.as_f64().ok_or(ConfigError::Type { key: key.into(), expected: "float" })
+    }
+    pub fn bool(&self, key: &str) -> Result<bool, ConfigError> {
+        self.req(key)?.as_bool().ok_or(ConfigError::Type { key: key.into(), expected: "bool" })
+    }
+    pub fn f64_arr(&self, key: &str) -> Result<Vec<f64>, ConfigError> {
+        let arr = self
+            .req(key)?
+            .as_arr()
+            .ok_or(ConfigError::Type { key: key.into(), expected: "array" })?;
+        arr.iter()
+            .map(|v| v.as_f64().ok_or(ConfigError::Type { key: key.into(), expected: "float array" }))
+            .collect()
+    }
+
+    // with-default variants
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    fn req(&self, key: &str) -> Result<&Value, ConfigError> {
+        self.get(key).ok_or_else(|| ConfigError::Missing(key.to_string()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err("unterminated string".into());
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err("unterminated array".into());
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        return inner
+            .split(',')
+            .map(|part| parse_value(part.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Value::Arr);
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig1a"          # panel id
+seeds = 5
+
+[market]
+count = 256
+months = 3.0
+volatile = true
+families = ["m5", "c5"]
+
+[sweep]
+lengths = [2, 4, 8, 16, 32]
+mem_gb = 16.0
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name").unwrap(), "fig1a");
+        assert_eq!(c.i64("seeds").unwrap(), 5);
+        assert_eq!(c.i64("market.count").unwrap(), 256);
+        assert_eq!(c.f64("market.months").unwrap(), 3.0);
+        assert!(c.bool("market.volatile").unwrap());
+        assert_eq!(c.f64("sweep.mem_gb").unwrap(), 16.0);
+        assert_eq!(c.f64_arr("sweep.lengths").unwrap(), vec![2.0, 4.0, 8.0, 16.0, 32.0]);
+    }
+
+    #[test]
+    fn string_array() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let fams = c.get("market.families").unwrap().as_arr().unwrap();
+        assert_eq!(fams[0].as_str(), Some("m5"));
+        assert_eq!(fams[1].as_str(), Some("c5"));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.f64("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.i64_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "d"), "d");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn missing_and_type_errors() {
+        let c = Config::parse("x = 1").unwrap();
+        assert!(matches!(c.str("y"), Err(ConfigError::Missing(_))));
+        assert!(matches!(c.str("x"), Err(ConfigError::Type { .. })));
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse(r##"k = "a#b" # trailing"##).unwrap();
+        assert_eq!(c.str("k").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn parse_errors_have_line_numbers() {
+        let err = Config::parse("a = 1\nbad line\n").unwrap_err();
+        match err {
+            ConfigError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("xs = []").unwrap();
+        assert_eq!(c.get("xs").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Small CSV reader/writer for price traces and result tables.
+//!
+//! Handles quoting of fields containing commas/quotes/newlines; that is
+//! all the project's interchange needs (no streaming, no Serde).
+
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Serialize rows to CSV text.
+pub fn to_string(rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        for (i, field) in row.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&escape(field));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write rows to a file, creating parent directories.
+pub fn write_file(path: impl AsRef<Path>, rows: &[Vec<String>]) -> io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_string(rows).as_bytes())
+}
+
+/// Parse CSV text into rows of fields.
+pub fn parse(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    if !field.is_empty() {
+                        return Err("quote in unquoted field".into());
+                    }
+                    in_quotes = true;
+                }
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field".into());
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Read and parse a CSV file.
+pub fn read_file(path: impl AsRef<Path>) -> Result<Vec<Vec<String>>, String> {
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Convenience: render a row of display-ables.
+#[macro_export]
+macro_rules! csv_row {
+    ($($x:expr),* $(,)?) => {
+        vec![$(format!("{}", $x)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let rows = vec![
+            vec!["a".to_string(), "b".to_string()],
+            vec!["1".to_string(), "2.5".to_string()],
+        ];
+        let parsed = parse(&to_string(&rows)).unwrap();
+        assert_eq!(parsed, rows);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let rows = vec![vec!["x,y".to_string(), "he said \"hi\"".to_string(), "a\nb".to_string()]];
+        let parsed = parse(&to_string(&rows)).unwrap();
+        assert_eq!(parsed, rows);
+    }
+
+    #[test]
+    fn empty_fields() {
+        let parsed = parse("a,,c\n,,\n").unwrap();
+        assert_eq!(parsed[0], vec!["a", "", "c"]);
+        assert_eq!(parsed[1], vec!["", "", ""]);
+    }
+
+    #[test]
+    fn crlf() {
+        let parsed = parse("a,b\r\nc,d\r\n").unwrap();
+        assert_eq!(parsed, vec![vec!["a", "b"], vec!["c", "d"]]);
+    }
+
+    #[test]
+    fn no_trailing_newline() {
+        let parsed = parse("a,b\nc,d").unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[1], vec!["c", "d"]);
+    }
+
+    #[test]
+    fn rejects_bad_quotes() {
+        assert!(parse("a\"b,c\n").is_err());
+        assert!(parse("\"open\n").is_err());
+    }
+
+    #[test]
+    fn csv_row_macro() {
+        let row = csv_row!["a", 1, 2.5];
+        assert_eq!(row, vec!["a", "1", "2.5"]);
+    }
+}

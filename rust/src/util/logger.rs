@@ -1,0 +1,120 @@
+//! Leveled stderr logger (log-crate substitute).
+//!
+//! Level comes from `SIWOFT_LOG` (`error|warn|info|debug|trace`,
+//! default `info`) or [`set_level`].  Macros `log_info!` etc. are
+//! exported at the crate root.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("SIWOFT_LOG")
+        .ok()
+        .and_then(|s| Level::from_str(&s))
+        .unwrap_or(Level::Info) as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == u8::MAX { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+fn start_instant() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Log a preformatted message (used by the macros).
+pub fn log(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = start_instant().elapsed();
+    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), l.as_str(), module, args);
+}
+
+#[macro_export]
+macro_rules! log_error { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::from_str("debug"), Some(Level::Debug));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("nope"), None);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrates: everything a crates.io-equipped project would pull
+//! from `rand`, `serde_json`, `toml`, `clap`, `log`, `proptest` and
+//! `criterion`, built in-tree because the build environment is offline.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod csvio;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;

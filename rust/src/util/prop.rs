@@ -1,0 +1,165 @@
+//! Mini property-based testing harness (proptest substitute).
+//!
+//! `check(cases, seed, gen, prop)` draws `cases` inputs from `gen` and
+//! asserts `prop` on each; a failure reports the failing case (Debug)
+//! and the exact sub-seed so it can be replayed with `replay`.  A naive
+//! halving shrinker is provided for `Vec` inputs via [`check_shrink`].
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` generated inputs; panics with a replayable
+/// report on the first failure.
+pub fn check<T, G, P>(cases: usize, seed: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let sub = root.next_u64();
+        let mut rng = Rng::new(sub);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case}/{cases} (seed {seed}, sub-seed {sub}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by sub-seed.
+pub fn replay<T, G, P>(sub_seed: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(sub_seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("replayed failure (sub-seed {sub_seed}):\n  input: {input:?}\n  reason: {msg}");
+    }
+}
+
+/// Vector property with halving shrink: on failure, repeatedly tries
+/// dropping the first/second half of the vector while the property
+/// still fails, then reports the minimal found counterexample.
+pub fn check_shrink<T, G, P>(cases: usize, seed: u64, mut gen: G, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> Vec<T>,
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let sub = root.next_u64();
+        let mut rng = Rng::new(sub);
+        let input = gen(&mut rng);
+        if prop(&input).is_ok() {
+            continue;
+        }
+        // shrink
+        let mut best = input;
+        loop {
+            let n = best.len();
+            if n <= 1 {
+                break;
+            }
+            let halves = [best[..n / 2].to_vec(), best[n / 2..].to_vec()];
+            match halves.into_iter().find(|h| prop(h).is_err()) {
+                Some(smaller) => best = smaller,
+                None => break,
+            }
+        }
+        let msg = prop(&best).unwrap_err();
+        panic!(
+            "property failed on case {case}/{cases} (seed {seed}, sub-seed {sub}):\n  \
+             shrunk input ({} elems): {best:?}\n  reason: {msg}",
+            best.len()
+        );
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::Rng;
+
+    pub fn f64_in(lo: f64, hi: f64) -> impl FnMut(&mut Rng) -> f64 {
+        move |r| r.range(lo, hi)
+    }
+
+    pub fn vec_f64(len: std::ops::Range<usize>, lo: f64, hi: f64) -> impl FnMut(&mut Rng) -> Vec<f64> {
+        move |r| {
+            let n = len.start + r.below((len.end - len.start).max(1));
+            (0..n).map(|_| r.range(lo, hi)).collect()
+        }
+    }
+
+    pub fn usize_in(lo: usize, hi: usize) -> impl FnMut(&mut Rng) -> usize {
+        move |r| lo + r.below((hi - lo).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(200, 1, |r| r.range(0.0, 10.0), |x| {
+            if *x >= 0.0 && *x < 10.0 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(100, 2, |r| r.below(10), |x| {
+            if *x < 9 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn shrinker_minimizes() {
+        // property: no element exceeds 0.95 — shrinker should cut the
+        // vector down around the offending element.
+        check_shrink(
+            50,
+            3,
+            gens::vec_f64(1..64, 0.0, 1.0),
+            |xs| {
+                if xs.iter().all(|&x| x < 0.95) {
+                    Ok(())
+                } else {
+                    Err("element >= 0.95".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seen1 = Vec::new();
+        check(10, 7, |r| r.next_u64(), |x| {
+            seen1.push(*x);
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check(10, 7, |r| r.next_u64(), |x| {
+            seen2.push(*x);
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

@@ -1,0 +1,217 @@
+//! Integration: drive the `siwoft` binary end-to-end as a user would
+//! (gen-traces → analyze → simulate → fig → ablation), checking outputs
+//! and exit codes.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target dir layout: target/{debug|release}/siwoft; integration
+    // tests live in target/<profile>/deps
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // profile/
+    p.push("siwoft");
+    p
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .env("SIWOFT_LOG", "error")
+        .output()
+        .expect("spawn siwoft binary");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("siwoft_cli_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_and_version() {
+    let (out, _, ok) = run(&["help"]);
+    assert!(ok);
+    assert!(out.contains("gen-traces") && out.contains("simulate"));
+    let (out, _, ok) = run(&["version"]);
+    assert!(ok);
+    assert!(out.contains("siwoft"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (_, err, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(err.contains("unknown command"));
+}
+
+#[test]
+fn gen_traces_then_analyze_roundtrip() {
+    let dir = tmpdir("gen");
+    let trace_path = dir.join("t.csv");
+    let trace_str = trace_path.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "gen-traces", "--markets", "24", "--months", "0.5", "--seed", "7", "--out", trace_str,
+    ]);
+    assert!(ok, "gen-traces failed: {err}");
+    assert!(out.contains("24 markets x 360 hours"));
+    assert!(trace_path.exists());
+
+    let (out, err, ok) = run(&["analyze", "--traces", trace_str, "--native", "--top", "3"]);
+    assert!(ok, "analyze failed: {err}");
+    assert!(out.contains("backend=native"));
+    assert!(out.contains("top markets by lifetime"));
+    assert!(out.contains("revocation correlation"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn analyze_uses_pjrt_when_artifacts_present() {
+    if !std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (out, err, ok) =
+        run(&["analyze", "--markets", "64", "--months", "3", "--seed", "5", "--top", "2"]);
+    assert!(ok, "analyze failed: {err}");
+    assert!(out.contains("backend=pjrt"), "expected pjrt backend: {out}");
+}
+
+#[test]
+fn simulate_all_policies() {
+    for (policy, ft, rule) in [
+        ("p", "none", "trace"),
+        ("ft", "checkpoint", "rate:3"),
+        ("ft", "ckpt:4", "count:2"),
+        ("ft", "repl:2", "rate:2"),
+        ("ondemand", "none", "trace"),
+        ("greedy", "none", "trace"),
+    ] {
+        let (out, err, ok) = run(&[
+            "simulate", "--policy", policy, "--ft", ft, "--rule", rule, "--markets", "48",
+            "--months", "1", "--seeds", "2", "--len", "4", "--mem", "16",
+        ]);
+        assert!(ok, "simulate {policy}/{ft} failed: {err}");
+        assert!(out.contains("completion"), "missing output for {policy}/{ft}: {out}");
+        assert!(out.contains("completion-rate 1.00"), "{policy}/{ft} did not complete: {out}");
+    }
+}
+
+#[test]
+fn simulate_rejects_bad_args() {
+    let (_, err, ok) = run(&["simulate", "--policy", "nope"]);
+    assert!(!ok);
+    assert!(err.contains("unknown --policy"));
+    let (_, err, ok) = run(&["simulate", "--rule", "sometimes"]);
+    assert!(!ok);
+    assert!(err.contains("unknown --rule"));
+}
+
+#[test]
+fn fig_writes_csvs() {
+    let dir = tmpdir("fig");
+    let out_dir = dir.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "fig", "--panel", "a", "--markets", "48", "--months", "1", "--seeds", "2", "--out", out_dir,
+    ]);
+    assert!(ok, "fig failed: {err}");
+    assert!(out.contains("Fig 1a"));
+    let csv = dir.join("fig1a.csv");
+    assert!(csv.exists());
+    let rows = siwoft::util::csvio::read_file(&csv).unwrap();
+    assert_eq!(rows.len(), 1 + 15); // header + 5 lens × 3 arms
+    assert_eq!(rows[0][0], "x");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sensitivity_subcommand_runs() {
+    let dir = tmpdir("sens");
+    let out_dir = dir.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "sensitivity", "--ratios", "0.3,0.6", "--markets", "48", "--seeds", "2", "--out", out_dir,
+    ]);
+    assert!(ok, "sensitivity failed: {err}");
+    assert!(out.contains("F/O"));
+    assert!(dir.join("sensitivity.csv").exists());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cluster_subcommand_runs() {
+    let (out, err, ok) = run(&[
+        "cluster", "--markets", "48", "--months", "2", "--horizon", "48", "--window", "600",
+        "--rate", "0.5",
+    ]);
+    assert!(ok, "cluster failed: {err}");
+    assert!(out.contains("jobs"));
+    assert!(out.contains("analytics epochs"));
+}
+
+#[test]
+fn run_config_drives_experiments() {
+    let dir = tmpdir("runcfg");
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            "[experiment]\nkind = \"fig\"\n\n[fig]\npanel = \"a\"\nmarkets = 48\nmonths = 1\n\
+             seed = 7\nseeds = 2\nrate = 3\nout = \"{}\"\nwidth = 30\n",
+            dir.display()
+        ),
+    )
+    .unwrap();
+    let (out, err, ok) = run(&["run", "--config", cfg_path.to_str().unwrap()]);
+    assert!(ok, "run --config failed: {err}");
+    assert!(out.contains("Fig 1a"));
+    assert!(dir.join("fig1a.csv").exists());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn run_config_rejects_unknown_kind() {
+    let dir = tmpdir("runbad");
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(&cfg_path, "[experiment]\nkind = \"teleport\"\n").unwrap();
+    let (_, err, ok) = run(&["run", "--config", cfg_path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("unknown experiment.kind"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn shipped_configs_parse() {
+    let configs = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut n = 0;
+    for entry in std::fs::read_dir(configs).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "toml").unwrap_or(false) {
+            let c = siwoft::util::config::Config::load(&p)
+                .unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+            assert!(c.str("experiment.kind").is_ok(), "{} missing kind", p.display());
+            n += 1;
+        }
+    }
+    assert!(n >= 5, "expected ≥5 shipped configs, found {n}");
+}
+
+#[test]
+fn ablation_subcommand_runs() {
+    let dir = tmpdir("abl");
+    let out_dir = dir.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "ablation", "--which", "corr", "--markets", "48", "--months", "1", "--seeds", "2",
+        "--out", out_dir,
+    ]);
+    assert!(ok, "ablation failed: {err}");
+    assert!(out.contains("corr-filter=on"));
+    assert!(dir.join("ablation_corr.csv").exists());
+    std::fs::remove_dir_all(dir).ok();
+}

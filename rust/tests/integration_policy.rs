@@ -1,0 +1,153 @@
+//! Integration: Algorithm 1's behaviour over realistic generated worlds
+//! (not the hand-rigged unit fixtures) — lifetime ordering, fallbacks,
+//! correlation filtering under AZ-correlated shocks, and the P/F/O
+//! relationships the paper's conclusions rest on.
+
+use siwoft::policy::Ctx;
+use siwoft::prelude::*;
+
+fn world(seed: u64) -> (World, f64) {
+    let mut w = World::generate(192, 3.0, seed);
+    let start = w.split_train(0.67);
+    (w, start)
+}
+
+#[test]
+fn psiwoft_choice_maximizes_training_mttr_among_suitable() {
+    let (w, start) = world(21);
+    let job = Job::new(1, 8.0, 16.0);
+    let mut p = PSiwoft::default();
+    let d = p.select(&job, &Ctx { world: &w, now: start });
+    assert!(d.is_spot());
+    let chosen = d.market();
+    let suitable = w.catalog.suitable(16.0);
+    assert!(suitable.contains(&chosen));
+    let top = suitable.iter().map(|&m| w.analytics.mttr[m]).fold(0.0f32, f32::max);
+    // within the near-tie band of the top lifetime
+    assert!(
+        w.analytics.mttr[chosen] >= top - (top * 0.02).max(24.0),
+        "chosen mttr {} vs top {top}",
+        w.analytics.mttr[chosen]
+    );
+}
+
+#[test]
+fn psiwoft_falls_back_to_ondemand_for_giant_jobs() {
+    let (w, start) = world(22);
+    // 300h job: nothing has MTTR ≥ 600h in a 1447h training window? some
+    // stable markets do (mttr == window). Use a job longer than half the
+    // window to force the fallback.
+    let job = Job::new(2, 800.0, 16.0);
+    let mut p = PSiwoft::default();
+    let d = p.select(&job, &Ctx { world: &w, now: start });
+    assert!(!d.is_spot(), "800h job must fall back to on-demand");
+    assert_eq!(p.ondemand_fallbacks, 1);
+}
+
+#[test]
+fn corr_filter_removes_az_siblings_after_revocation() {
+    let (w, start) = world(23);
+    let job = Job::new(3, 8.0, 16.0);
+    let suitable = w.catalog.suitable(16.0);
+    // find a suitable market with at least one high-corr sibling
+    let mut victim = None;
+    'outer: for &a in &suitable {
+        for &b in &suitable {
+            if a != b && w.analytics.corr_at(a, b) > 0.5 {
+                victim = Some((a, b));
+                break 'outer;
+            }
+        }
+    }
+    let Some((a, b)) = victim else {
+        eprintln!("SKIP: no correlated sibling pair in this seed");
+        return;
+    };
+    let mut p = PSiwoft::default();
+    let ctx = Ctx { world: &w, now: start };
+    let _ = p.select(&job, &ctx);
+    p.on_revocation(&job, a, &ctx);
+    // after revoking a, neither a nor its correlated sibling b may be
+    // chosen again for this job
+    for _ in 0..suitable.len() {
+        let d = p.select(&job, &ctx);
+        if !d.is_spot() {
+            break;
+        }
+        assert_ne!(d.market(), a, "revoked market re-chosen");
+        assert_ne!(d.market(), b, "correlated sibling chosen");
+        p.on_revocation(&job, d.market(), &ctx);
+    }
+}
+
+#[test]
+fn psiwoft_suffers_fewer_trace_revocations_than_greedy_across_worlds() {
+    // aggregate across several generated worlds so the claim is about
+    // the policy, not one lucky trace
+    let mut p_revs = 0u32;
+    let mut g_revs = 0u32;
+    for ws in [31u64, 32, 33, 34] {
+        let (w, start) = world(ws);
+        let job = Job::new(4, 16.0, 16.0);
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        for seed in 0..4 {
+            let mut p = PSiwoft::default();
+            p_revs += simulate_job(&w, &mut p, &NoFt, &job, &cfg, seed).revocations;
+            let mut g = GreedyCheapest::new();
+            g_revs += simulate_job(&w, &mut g, &NoFt, &job, &cfg, seed).revocations;
+        }
+    }
+    assert!(
+        p_revs <= g_revs,
+        "P-SIWOFT had {p_revs} revocations vs greedy {g_revs} across worlds"
+    );
+}
+
+#[test]
+fn paper_headline_holds_across_world_seeds() {
+    // the paper's conclusion: P cheaper than O, P near O in time, F
+    // slower than P — checked across 3 independent worlds
+    for ws in [41u64, 42, 43] {
+        let (w, start) = world(ws);
+        let job = Job::new(5, 8.0, 16.0);
+        let mut sums = [0.0f64; 6]; // p_t, p_c, f_t, f_c, o_t, o_c
+        for seed in 0..10 {
+            let trace_cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+            let rate_cfg = RunConfig {
+                rule: RevocationRule::ForcedRate { per_day: 3.0 },
+                start_t: start,
+                ..Default::default()
+            };
+            let mut p = PSiwoft::default();
+            let rp = simulate_job(&w, &mut p, &NoFt, &job, &trace_cfg, seed);
+            let mut f = FtSpotPolicy::new();
+            let rf = simulate_job(&w, &mut f, &Checkpointing::hourly(8.0), &job, &rate_cfg, seed);
+            let mut o = OnDemandPolicy;
+            let ro = simulate_job(&w, &mut o, &NoFt, &job, &trace_cfg, seed);
+            sums[0] += rp.completion_h();
+            sums[1] += rp.cost_usd();
+            sums[2] += rf.completion_h();
+            sums[3] += rf.cost_usd();
+            sums[4] += ro.completion_h();
+            sums[5] += ro.cost_usd();
+        }
+        let [pt, pc, ft, fc, ot, oc] = sums;
+        assert!(pc < oc, "world {ws}: P cost {pc} ≥ O cost {oc}");
+        assert!(pt <= ft * 1.05, "world {ws}: P time {pt} above F {ft}");
+        assert!(pt <= ot * 1.25, "world {ws}: P time {pt} far from O {ot}");
+        // single-world-seed cost noise is real (one unlucky trace
+        // revocation on an 8h job ≈ +10%); the tight check runs at full
+        // scale in fig1_e2e
+        assert!(pc <= fc * 1.20, "world {ws}: P cost {pc} above F {fc}");
+    }
+}
+
+#[test]
+fn revocation_probability_metric_reported() {
+    let (w, start) = world(51);
+    let job = Job::new(6, 8.0, 16.0);
+    let mut p = PSiwoft::default();
+    let d = p.select(&job, &Ctx { world: &w, now: start });
+    assert!(d.is_spot());
+    assert!(p.last_revocation_prob > 0.0 && p.last_revocation_prob <= 0.5);
+}

@@ -1,0 +1,131 @@
+//! Integration: the AOT artifact path.  Loads `artifacts/` (built by
+//! `make artifacts`), executes the market-analytics HLO through PJRT,
+//! and checks it agrees with the native mirror to f32 tolerance.
+//!
+//! These tests are skipped (not failed) when artifacts are absent so
+//! `cargo test` works on a fresh checkout; `make test` always builds
+//! artifacts first.
+
+use siwoft::market::{Catalog, MarketAnalytics, TraceGenConfig};
+use siwoft::runtime::AnalyticsEngine;
+use siwoft::sim::World;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine_or_skip() -> Option<AnalyticsEngine> {
+    match AnalyticsEngine::pjrt(artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP: artifacts not available ({err:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// Build a world whose trace shape matches a lowered artifact.
+fn world_16x168(seed: u64) -> World {
+    let catalog = Catalog::with_limit(16);
+    let cfg = TraceGenConfig {
+        months: 168.0 / 720.0, // exactly 168 hours
+        seed,
+        ..Default::default()
+    };
+    let trace = siwoft::market::generate_traces(&catalog, &cfg);
+    assert_eq!((trace.markets, trace.hours), (16, 168));
+    World::new(catalog, trace)
+}
+
+#[test]
+fn pjrt_matches_native_analytics() {
+    let Some(engine) = engine_or_skip() else { return };
+    assert!(engine.has_artifact_for(16, 168), "16x168 artifact missing from manifest");
+    for seed in [1u64, 2, 3] {
+        let w = world_16x168(seed);
+        let pjrt = engine.compute(&w.trace, &w.od).expect("pjrt compute");
+        let native = MarketAnalytics::compute(&w.trace, &w.od);
+        assert_eq!(pjrt.markets, native.markets);
+        for m in 0..16 {
+            assert!(
+                (pjrt.mttr[m] - native.mttr[m]).abs() < 1e-3,
+                "seed {seed} market {m}: mttr pjrt {} native {}",
+                pjrt.mttr[m],
+                native.mttr[m]
+            );
+            assert!((pjrt.events[m] - native.events[m]).abs() < 1e-3);
+            assert!((pjrt.frac_above[m] - native.frac_above[m]).abs() < 1e-5);
+        }
+        for i in 0..16 * 16 {
+            assert!(
+                (pjrt.corr[i] - native.corr[i]).abs() < 1e-4,
+                "seed {seed} corr[{i}]: pjrt {} native {}",
+                pjrt.corr[i],
+                native.corr[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_analytics_drive_policy_identically() {
+    let Some(engine) = engine_or_skip() else { return };
+    use siwoft::prelude::*;
+    let w_native = world_16x168(9);
+    let pjrt_analytics = engine.compute(&w_native.trace, &w_native.od).unwrap();
+    let w_pjrt = world_16x168(9).with_analytics(pjrt_analytics);
+
+    let job = Job::new(1, 4.0, 16.0);
+    let cfg = RunConfig::default();
+    let mut p1 = PSiwoft::default();
+    let mut p2 = PSiwoft::default();
+    let r_native = simulate_job(&w_native, &mut p1, &NoFt, &job, &cfg, 5);
+    let r_pjrt = simulate_job(&w_pjrt, &mut p2, &NoFt, &job, &cfg, 5);
+    // identical analytics → identical decisions → identical ledgers
+    assert_eq!(r_native.ledger, r_pjrt.ledger);
+    assert_eq!(r_native.revocations, r_pjrt.revocations);
+}
+
+#[test]
+fn pjrt_survival_matches_native() {
+    let Some(engine) = engine_or_skip() else { return };
+    use siwoft::market::analytics::SurvivalCurves;
+    for seed in [4u64, 5] {
+        let w = world_16x168(seed);
+        let pjrt = engine.compute_survival(&w.trace, &w.od).expect("pjrt survival");
+        let native = SurvivalCurves::compute(&w.trace, &w.od, SurvivalCurves::DEFAULT_T);
+        assert_eq!(pjrt.markets, native.markets);
+        assert_eq!(pjrt.t_buckets, native.t_buckets);
+        for i in 0..pjrt.s.len() {
+            assert!(
+                (pjrt.s[i] - native.s[i]).abs() < 1e-5,
+                "seed {seed} s[{i}]: pjrt {} native {}",
+                pjrt.s[i],
+                native.s[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn unmatched_shape_falls_back_to_native() {
+    let Some(engine) = engine_or_skip() else { return };
+    let w = World::generate(10, 0.1, 4); // 10x72: no artifact
+    assert!(!engine.has_artifact_for(10, 72));
+    let a = engine.compute(&w.trace, &w.od).expect("fallback compute");
+    assert_eq!(a.mttr, w.analytics.mttr);
+}
+
+#[test]
+fn manifest_lists_default_shapes() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no manifest");
+        return;
+    }
+    let arts = siwoft::runtime::read_manifest(&dir).unwrap();
+    let shapes: Vec<(usize, usize)> = arts.iter().map(|a| (a.markets, a.hours)).collect();
+    assert!(shapes.contains(&(16, 168)));
+    assert!(shapes.contains(&(64, 2160)));
+    assert!(shapes.contains(&(256, 2160)));
+}

@@ -1,0 +1,255 @@
+//! Integration: whole-simulation behaviour across modules — determinism,
+//! accounting consistency, policy-vs-policy dominance on controlled
+//! worlds, replication semantics, and trace persistence round-trips.
+
+use siwoft::prelude::*;
+use siwoft::market::{Catalog, PriceTrace};
+
+fn world(seed: u64) -> (World, f64) {
+    let mut w = World::generate(96, 2.0, seed);
+    let start = w.split_train(0.6);
+    (w, start)
+}
+
+#[test]
+fn full_run_deterministic_across_processes_shape() {
+    // same seed → identical ledgers; different world seed → different world
+    let (w1, s1) = world(5);
+    let (w2, s2) = world(5);
+    assert_eq!(s1, s2);
+    assert_eq!(w1.trace.prices, w2.trace.prices);
+    assert_eq!(w1.analytics.mttr, w2.analytics.mttr);
+    let job = Job::new(1, 8.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: s1, ..Default::default() };
+    let mut p1 = PSiwoft::default();
+    let mut p2 = PSiwoft::default();
+    let r1 = simulate_job(&w1, &mut p1, &NoFt, &job, &cfg, 3);
+    let r2 = simulate_job(&w2, &mut p2, &NoFt, &job, &cfg, 3);
+    assert_eq!(r1.ledger, r2.ledger);
+}
+
+#[test]
+fn accounting_time_categories_sum_to_completion() {
+    let (w, start) = world(6);
+    let job = Job::new(2, 8.0, 16.0);
+    for (rule, nseeds) in [
+        (RevocationRule::Trace, 4u64),
+        (RevocationRule::ForcedRate { per_day: 6.0 }, 6),
+        (RevocationRule::ForcedCount { total: 5 }, 4),
+    ] {
+        for seed in 0..nseeds {
+            let cfg = RunConfig { rule, start_t: start, ..Default::default() };
+            let mut p = FtSpotPolicy::new();
+            let r = simulate_job(&w, &mut p, &Checkpointing::new(8), &job, &cfg, seed);
+            assert!(r.completed);
+            // completion = sum of time categories (definitionally)
+            let sum: f64 = r.ledger.time.iter().map(|(_, v)| v).sum();
+            assert!((sum - r.completion_h()).abs() < 1e-9);
+            // useful == job length exactly
+            assert!((r.ledger.time.get(Category::Useful) - 8.0).abs() < 1e-6);
+            // cost categories are all non-negative and sum to total
+            let csum: f64 = r.ledger.cost.iter().map(|(_, v)| v).sum();
+            assert!((csum - r.cost_usd()).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn ondemand_never_revoked_under_any_rule() {
+    let (w, start) = world(7);
+    let job = Job::new(3, 6.0, 32.0);
+    for rule in [
+        RevocationRule::Trace,
+        RevocationRule::ForcedRate { per_day: 24.0 },
+        RevocationRule::ForcedCount { total: 16 },
+    ] {
+        let cfg = RunConfig { rule, start_t: start, ..Default::default() };
+        let mut p = OnDemandPolicy;
+        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 1);
+        assert!(r.completed);
+        assert_eq!(r.revocations, 0, "on-demand revoked under {rule:?}");
+        assert_eq!(r.sessions, 1);
+    }
+}
+
+#[test]
+fn checkpointing_dominates_noft_under_heavy_revocations() {
+    let (w, start) = world(8);
+    let job = Job::new(4, 12.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 8 }, start_t: start, ..Default::default() };
+    let mut total_ckpt = 0.0;
+    let mut total_noft = 0.0;
+    for seed in 0..6 {
+        let mut p1 = FtSpotPolicy::new();
+        let rc = simulate_job(&w, &mut p1, &Checkpointing::new(12), &job, &cfg, seed);
+        let mut p2 = FtSpotPolicy::new();
+        let rn = simulate_job(&w, &mut p2, &NoFt, &job, &cfg, seed);
+        assert!(rc.completed && rn.completed);
+        total_ckpt += rc.completion_h();
+        total_noft += rn.completion_h();
+    }
+    // with 8 revocations on a 12h job, losing everything each time is
+    // far worse than checkpoint overhead — FT must win its home game
+    assert!(
+        total_ckpt < total_noft,
+        "checkpointing {total_ckpt} should beat no-ft {total_noft} at 8 revocations"
+    );
+}
+
+#[test]
+fn migration_beats_checkpoint_for_small_footprints() {
+    let (w, start) = world(9);
+    let job = Job::new(5, 8.0, 2.0); // migratable
+    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 4 }, start_t: start, ..Default::default() };
+    let mut t_mig = 0.0;
+    let mut t_ck = 0.0;
+    for seed in 0..5 {
+        let mut p1 = FtSpotPolicy::new();
+        t_mig += simulate_job(&w, &mut p1, &Migration, &job, &cfg, seed).completion_h();
+        let mut p2 = FtSpotPolicy::new();
+        t_ck += simulate_job(&w, &mut p2, &Checkpointing::new(8), &job, &cfg, seed).completion_h();
+    }
+    assert!(t_mig < t_ck, "migration {t_mig} vs checkpointing {t_ck}");
+}
+
+#[test]
+fn replication_survives_what_kills_noft() {
+    let (w, start) = world(10);
+    let job = Job::new(6, 8.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 6 }, start_t: start, ..Default::default() };
+    let mut p1 = FtSpotPolicy::new();
+    let r3 = simulate_job(&w, &mut p1, &Replication::new(3), &job, &cfg, 2);
+    let mut p2 = FtSpotPolicy::new();
+    let r1 = simulate_job(&w, &mut p2, &NoFt, &job, &cfg, 2);
+    assert!(r3.completed && r1.completed);
+    // replicas absorb the revocations: better completion...
+    assert!(r3.completion_h() <= r1.completion_h() + 1e-9);
+    // ...at a redundancy premium vs an *unrevoked* single instance
+    // (NoFt under 6 revocations can cost even more than 3 replicas —
+    // that's the paper's point — so compare against the calm baseline)
+    let calm = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+    let mut p3 = FtSpotPolicy::new();
+    let r_calm = simulate_job(&w, &mut p3, &NoFt, &job, &calm, 2);
+    assert!(
+        r3.cost_usd() > r_calm.cost_usd() * 2.0,
+        "3-replica cost {} not a redundancy premium over calm single {}",
+        r3.cost_usd(),
+        r_calm.cost_usd()
+    );
+}
+
+#[test]
+fn trace_roundtrip_preserves_simulation() {
+    let (w, start) = world(11);
+    let dir = std::env::temp_dir().join("siwoft_integration_trace");
+    let path = dir.join("trace.csv");
+    w.trace.save(&path).unwrap();
+    let loaded = PriceTrace::load(&path).unwrap();
+    let catalog = Catalog::with_limit(loaded.markets);
+    let mut w2 = World::new(catalog, loaded);
+    let s2 = w2.split_train(0.6);
+    assert_eq!(start, s2);
+
+    let job = Job::new(7, 4.0, 8.0);
+    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+    let mut p1 = PSiwoft::default();
+    let mut p2 = PSiwoft::default();
+    let r1 = simulate_job(&w, &mut p1, &NoFt, &job, &cfg, 1);
+    let r2 = simulate_job(&w2, &mut p2, &NoFt, &job, &cfg, 1);
+    // f32 CSV round-trip is exact (we print full precision)
+    assert_eq!(r1.ledger, r2.ledger);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn tiny_jobs_and_fractional_lengths_complete() {
+    let (w, start) = world(13);
+    for len in [0.05, 0.49, 1.0, 1.000001, 23.97] {
+        let job = Job::new(1, len, 16.0);
+        let mut p = PSiwoft::default();
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 1);
+        assert!(r.completed, "len {len} did not complete");
+        assert!((r.ledger.time.get(Category::Useful) - len).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn checkpoint_exactly_at_completion_is_skipped() {
+    // n checkpoints with interval = len/n: the final boundary coincides
+    // with completion and must not add a checkpoint span
+    let (w, start) = world(14);
+    let job = Job::new(1, 8.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+    let mut p = FtSpotPolicy::new();
+    let r = simulate_job(&w, &mut p, &Checkpointing::new(4), &job, &cfg, 1);
+    assert!(r.completed);
+    if r.revocations == 0 {
+        // 3 interior checkpoints, not 4
+        let ckpt_time = r.ledger.time.get(Category::Checkpoint);
+        let one = siwoft::job::ContainerModel::default().checkpoint_time(16.0);
+        assert!(
+            (ckpt_time - 3.0 * one).abs() < 1e-9,
+            "expected 3 checkpoints ({}), got {}",
+            3.0 * one,
+            ckpt_time
+        );
+    }
+}
+
+#[test]
+fn heavy_forced_rate_still_terminates() {
+    // stress: 48 revocations/day on a 4h job with no FT — must still
+    // finish (frontier progresses between revocations eventually) or
+    // hit the session cap without hanging
+    let (w, start) = world(15);
+    let job = Job::new(1, 4.0, 16.0);
+    let cfg = RunConfig {
+        rule: RevocationRule::ForcedRate { per_day: 48.0 },
+        start_t: start,
+        max_sessions: 5_000,
+        ..Default::default()
+    };
+    let mut p = FtSpotPolicy::new();
+    let r = simulate_job(&w, &mut p, &Checkpointing::new(16), &job, &cfg, 3);
+    assert!(r.sessions <= 5_000);
+    assert!(r.completed, "checkpointed job should grind through heavy revocations");
+}
+
+#[test]
+fn zero_forced_count_means_no_revocations() {
+    let (w, start) = world(16);
+    let job = Job::new(1, 6.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 0 }, start_t: start, ..Default::default() };
+    let mut p = FtSpotPolicy::new();
+    let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 1);
+    assert!(r.completed);
+    assert_eq!(r.revocations, 0);
+    assert_eq!(r.sessions, 1);
+}
+
+#[test]
+fn makespan_equals_completion_for_single_arrival() {
+    let (w, start) = world(17);
+    let job = Job::new(1, 5.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 3 }, start_t: start, ..Default::default() };
+    let mut p = FtSpotPolicy::new();
+    let r = simulate_job(&w, &mut p, &Checkpointing::new(5), &job, &cfg, 2);
+    assert!((r.makespan_h - r.completion_h()).abs() < 1e-9);
+}
+
+#[test]
+fn coordinator_batch_is_deterministic_and_parallel_safe() {
+    use siwoft::coordinator::{paper_arms, Coordinator};
+    let (w, start) = world(12);
+    let c = Coordinator::new_without_epoch(w);
+    let jobs: Vec<Job> = (0..12).map(|i| Job::new(i, 2.0 + (i % 5) as f64 * 2.0, 16.0)).collect();
+    let arm = &paper_arms()[0];
+    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+    let a = c.run_batch(&jobs, arm, &cfg, 3);
+    let b = c.run_batch(&jobs, arm, &cfg, 3);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.ledger, y.ledger);
+    }
+}

@@ -1,0 +1,224 @@
+//! Property-based tests (via the in-tree `util::prop` harness) on the
+//! coordinator-layer invariants DESIGN.md §6 lists.
+
+use siwoft::market::{billed_cycles, session_cost, Catalog, MarketAnalytics, PriceTrace};
+use siwoft::prelude::*;
+use siwoft::util::prop::{check, gens};
+use siwoft::util::rng::Rng;
+
+// ---- billing ----------------------------------------------------------
+
+#[test]
+fn prop_billing_rounds_up_and_is_monotone() {
+    check(500, 1, gens::f64_in(0.0, 100.0), |&dur| {
+        let c = billed_cycles(dur);
+        if c < dur {
+            return Err(format!("cycles {c} < duration {dur}"));
+        }
+        if dur > 0.0 && c > dur + 1.0 {
+            return Err(format!("cycles {c} over-round {dur}"));
+        }
+        let c2 = billed_cycles(dur + 0.5);
+        if c2 < c {
+            return Err("billing not monotone".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_session_cost_buffer_bounded_by_one_cycle() {
+    check(500, 2, |r: &mut Rng| (r.range(0.0, 50.0), r.range(0.01, 5.0)), |&(dur, price)| {
+        let (paid, buffer) = session_cost(dur, price);
+        if buffer < -1e-12 {
+            return Err("negative buffer".into());
+        }
+        if buffer > price + 1e-9 {
+            return Err(format!("buffer {buffer} exceeds one cycle at price {price}"));
+        }
+        let used = paid - buffer;
+        if (used - dur.max(0.0) * price).abs() > 1e-9 {
+            return Err("paid - buffer != used-time cost".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- analytics --------------------------------------------------------
+
+fn random_trace(r: &mut Rng) -> (PriceTrace, Vec<f32>) {
+    let m = 2 + r.below(10);
+    let h = 8 + r.below(120);
+    let od: Vec<f32> = (0..m).map(|_| r.range(0.1, 3.0) as f32).collect();
+    let mut rows = Vec::new();
+    for mi in 0..m {
+        rows.push(
+            (0..h)
+                .map(|_| {
+                    let spike = r.chance(0.2);
+                    if spike {
+                        od[mi] * r.range(1.05, 3.0) as f32
+                    } else {
+                        od[mi] * r.range(0.1, 0.95) as f32
+                    }
+                })
+                .collect(),
+        );
+    }
+    (PriceTrace::from_rows(rows).unwrap(), od)
+}
+
+#[test]
+fn prop_analytics_invariants() {
+    check(60, 3, random_trace, |(trace, od)| {
+        let a = MarketAnalytics::compute(trace, od);
+        let h = trace.hours as f32;
+        for m in 0..a.markets {
+            if !(a.mttr[m] >= 0.0 && a.mttr[m] <= h) {
+                return Err(format!("mttr[{m}] = {} outside [0, {h}]", a.mttr[m]));
+            }
+            if !(a.frac_above[m] >= 0.0 && a.frac_above[m] <= 1.0) {
+                return Err("frac_above outside [0,1]".into());
+            }
+            // events can't exceed ceil(h/2)+1 (alternation bound)
+            if a.events[m] > (h / 2.0).ceil() + 1.0 {
+                return Err("too many events".into());
+            }
+        }
+        for i in 0..a.markets {
+            if (a.corr_at(i, i) - 1.0).abs() > 1e-6 {
+                return Err("diagonal not 1".into());
+            }
+            for j in 0..a.markets {
+                let c = a.corr_at(i, j);
+                if (c - a.corr_at(j, i)).abs() > 1e-5 {
+                    return Err("corr not symmetric".into());
+                }
+                if !(-1.0 - 1e-4..=1.0 + 1e-4).contains(&c) {
+                    return Err(format!("corr {c} outside [-1,1]"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_low_correlation_set_excludes_self_and_respects_threshold() {
+    check(40, 4, random_trace, |(trace, od)| {
+        let a = MarketAnalytics::compute(trace, od);
+        for revoked in 0..a.markets {
+            let w = a.low_correlation_set(revoked, 0.3);
+            if w.contains(&revoked) {
+                return Err("revoked market in its own low-corr set".into());
+            }
+            for &m in &w {
+                if a.corr_at(revoked, m) >= 0.3 {
+                    return Err("set member above threshold".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- simulation invariants --------------------------------------------
+
+#[test]
+fn prop_simulation_conservation_laws() {
+    // across random jobs / rules / seeds: useful == job length,
+    // completion ≥ length, categories sum to totals, session count sane
+    let mut world = World::generate(64, 1.5, 404);
+    let start = world.split_train(0.6);
+    check(
+        40,
+        5,
+        |r: &mut Rng| {
+            let len = r.range(1.0, 24.0);
+            let mem = [4.0, 8.0, 16.0, 32.0, 64.0][r.below(5)];
+            let rule = match r.below(3) {
+                0 => RevocationRule::Trace,
+                1 => RevocationRule::ForcedRate { per_day: r.range(0.5, 8.0) },
+                _ => RevocationRule::ForcedCount { total: 1 + r.below(8) as u32 },
+            };
+            (len, mem, rule, r.next_u64())
+        },
+        |&(len, mem, rule, seed)| {
+            let job = Job::new(1, len, mem);
+            let cfg = RunConfig { rule, start_t: start, ..Default::default() };
+            let mut p = FtSpotPolicy::new();
+            let ft = Checkpointing::hourly(len);
+            let r = simulate_job(&world, &mut p, &ft, &job, &cfg, seed);
+            if !r.completed {
+                return Err("job did not complete".into());
+            }
+            let useful = r.ledger.time.get(Category::Useful);
+            if (useful - len).abs() > 1e-6 {
+                return Err(format!("useful {useful} != len {len}"));
+            }
+            if r.completion_h() < len - 1e-9 {
+                return Err("completion below job length".into());
+            }
+            if r.sessions < r.revocations {
+                return Err("fewer sessions than revocations".into());
+            }
+            if let RevocationRule::ForcedCount { total } = rule {
+                if r.revocations != total {
+                    return Err(format!("expected {total} revocations, got {}", r.revocations));
+                }
+            }
+            if r.cost_usd() <= 0.0 {
+                return Err("non-positive cost".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_psiwoft_candidates_shrink_monotonically() {
+    use siwoft::policy::Ctx;
+    let mut world = World::generate(96, 1.5, 505);
+    let start = world.split_train(0.6);
+    check(
+        30,
+        6,
+        |r: &mut Rng| (r.range(1.0, 12.0), r.next_u64()),
+        |&(len, _seed)| {
+            let job = Job::new(1, len, 16.0);
+            let mut p = PSiwoft::default();
+            let ctx = Ctx { world: &world, now: start };
+            let mut last_markets: Vec<usize> = Vec::new();
+            for _ in 0..6 {
+                let d = p.select(&job, &ctx);
+                if !d.is_spot() {
+                    break; // exhausted → fallback, fine
+                }
+                let m = d.market();
+                if last_markets.contains(&m) {
+                    return Err(format!("market {m} re-chosen after revocation"));
+                }
+                last_markets.push(m);
+                p.on_revocation(&job, m, &ctx);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tracegen_deterministic_and_positive() {
+    check(20, 7, |r: &mut Rng| r.next_u64(), |&seed| {
+        let catalog = Catalog::with_limit(24);
+        let cfg = siwoft::market::TraceGenConfig { months: 0.5, seed, ..Default::default() };
+        let a = siwoft::market::generate_traces(&catalog, &cfg);
+        let b = siwoft::market::generate_traces(&catalog, &cfg);
+        if a.prices != b.prices {
+            return Err("tracegen not deterministic".into());
+        }
+        if !a.prices.iter().all(|&p| p > 0.0 && p.is_finite()) {
+            return Err("non-positive price".into());
+        }
+        Ok(())
+    });
+}

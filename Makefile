@@ -1,0 +1,35 @@
+# Convenience targets; everything also works as plain cargo/pytest
+# invocations (see README.md).
+
+.PHONY: build test test-rust test-python artifacts fig1 docs fmt lint
+
+build:
+	cd rust && cargo build --release
+
+# `make test` lowers the AOT artifacts first (needs JAX).  Note the
+# PJRT integration tests still skip unless the crate is built with
+# `--features pjrt` + vendored xla bindings (DESIGN.md §5) — the
+# artifacts alone are not enough.  Use `make test-rust` on a
+# Python-less host.
+test: artifacts test-rust test-python
+
+test-rust:
+	cd rust && cargo test -q
+
+test-python:
+	python -m pytest python/tests -q
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+fig1:
+	cd rust && cargo run --release -- fig1 --seed 2020 --format csv
+
+docs:
+	cd rust && cargo doc --no-deps
+
+fmt:
+	cd rust && cargo fmt
+
+lint:
+	cd rust && cargo clippy --all-targets -- -D warnings

@@ -7,8 +7,6 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
-
 use super::metrics::Metrics;
 use super::pool::Pool;
 use crate::ft::{Checkpointing, FtMechanism, Migration, NoFt, Replication};
@@ -16,6 +14,7 @@ use crate::job::Job;
 use crate::policy::{FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy};
 use crate::runtime::AnalyticsEngine;
 use crate::sim::{simulate_job, AggregateResult, JobResult, RunConfig, World};
+use crate::util::error::Result;
 
 /// Declarative policy selection (so configs/CLI/benches can name them).
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -15,11 +15,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use super::leader::{Arm, Coordinator, FtKind, PolicyKind};
+use crate::err;
 use crate::job::Job;
 use crate::sim::{JobResult, RunConfig};
+use crate::util::error::Result;
 use crate::util::json::Json;
 
 pub struct Server {
@@ -108,7 +108,7 @@ fn handle_request(
     shutdown: &AtomicBool,
     next_id: &mut u64,
 ) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let req = Json::parse(line).map_err(|e| err!("bad json: {e}"))?;
     let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("");
     match cmd {
         "submit" => {
@@ -118,8 +118,8 @@ fn handle_request(
             let ft = req.get("ft").and_then(Json::as_str).unwrap_or("none");
             let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
             let policy =
-                PolicyKind::parse(policy).ok_or_else(|| anyhow::anyhow!("unknown policy '{policy}'"))?;
-            let ft = FtKind::parse(ft).ok_or_else(|| anyhow::anyhow!("unknown ft '{ft}'"))?;
+                PolicyKind::parse(policy).ok_or_else(|| err!("unknown policy '{policy}'"))?;
+            let ft = FtKind::parse(ft).ok_or_else(|| err!("unknown ft '{ft}'"))?;
             *next_id += 1;
             let job = Job::new(*next_id, len, mem);
             let arm = Arm { label: "api", policy, ft };
@@ -136,7 +136,7 @@ fn handle_request(
             shutdown.store(true, Ordering::SeqCst);
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
-        other => Err(anyhow::anyhow!("unknown cmd '{other}'")),
+        other => Err(err!("unknown cmd '{other}'")),
     }
 }
 

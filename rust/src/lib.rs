@@ -19,8 +19,9 @@
 //! the bit-compatible native implementation ([`market::analytics`]) when
 //! artifacts are absent.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `DESIGN.md` (repository root) for the system inventory and
+//! `EXPERIMENTS.md` for the paper-vs-measured record; `README.md` holds
+//! the CLI reference for the `siwoft` binary.
 
 pub mod coordinator;
 pub mod experiments;

@@ -4,15 +4,22 @@
 //!   gen-traces   generate synthetic EC2-style spot price traces
 //!   analyze      run market analytics (PJRT artifact or native) on traces
 //!   simulate     run one job under a (policy, ft) pair
-//!   fig          reproduce Fig. 1 panels (a–f) of the paper
+//!   fig1         reproduce Fig. 1 panels (a–f) of the paper
 //!   ablation     run the ablation studies (ckpt count, replication, corr)
+//!   sensitivity  spot/on-demand price-ratio sweep
+//!   tables       P/F/O summary table at the paper's fixed job point
+//!   cluster      rolling-epoch cluster simulation
+//!   bench        quick in-binary micro-benchmarks
+//!   run          run an experiment described by a TOML config
 //!   serve        start the TCP control plane
 //!
+//! The experiment-table subcommands (fig1, ablation, sensitivity,
+//! tables, bench) all take `--seed`, `--out` and `--format {csv,json}`;
 //! `siwoft <cmd> --help` prints per-command options.
 
 use std::process::ExitCode;
 
-use siwoft::coordinator::{Arm, Coordinator, FtKind, PolicyKind, Server};
+use siwoft::coordinator::{paper_arms, Arm, Coordinator, FtKind, PolicyKind, Server};
 use siwoft::experiments::{ablation, Fig1Options, Fig1Runner};
 use siwoft::job::Job;
 use siwoft::market::{Catalog, MarketAnalytics, PriceTrace, TraceGenConfig};
@@ -20,6 +27,7 @@ use siwoft::runtime::AnalyticsEngine;
 use siwoft::sim::{RevocationRule, RunConfig, World};
 use siwoft::util::cli::CommandSpec;
 use siwoft::util::csvio;
+use siwoft::util::json::Json;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -29,10 +37,12 @@ fn main() -> ExitCode {
         "gen-traces" => gen_traces(rest),
         "analyze" => analyze(rest),
         "simulate" => simulate(rest),
-        "fig" => fig(rest),
+        "fig1" | "fig" => fig1(rest),
         "ablation" => run_ablation(rest),
         "sensitivity" => sensitivity(rest),
+        "tables" => tables(rest),
         "cluster" => cluster(rest),
+        "bench" => bench_quick(rest),
         "run" => run_config(rest),
         "serve" => serve(rest),
         "help" | "--help" | "-h" => {
@@ -59,14 +69,54 @@ fn help_text() -> String {
      gen-traces   generate synthetic spot price traces (CSV)\n  \
      analyze      market analytics: MTTR table + correlation summary\n  \
      simulate     run one job under a policy/ft pair\n  \
-     fig          reproduce the paper's Fig. 1 panels\n  \
+     fig1         reproduce the paper's Fig. 1 panels (alias: fig)\n  \
      ablation     checkpoint/replication/correlation ablations\n  \
      sensitivity  spot/on-demand price-ratio sweep (F/O crossover)\n  \
+     tables       P/F/O summary table at the paper's fixed job point\n  \
      cluster      rolling-epoch cluster simulation (Poisson arrivals)\n  \
+     bench        quick in-binary micro-benchmarks\n  \
      run          run an experiment described by a TOML config\n  \
      serve        start the TCP control plane\n  \
      version      print version\n\nsee `siwoft <command> --help`"
         .to_string()
+}
+
+/// Write a header+rows table to `<out>/<name>.{csv,json}`.
+fn emit(out_dir: &str, name: &str, rows: &[Vec<String>], format: &str) -> Result<String, String> {
+    match format {
+        "csv" => {
+            let path = format!("{out_dir}/{name}.csv");
+            csvio::write_file(&path, rows).map_err(|e| format!("write {path}: {e}"))?;
+            Ok(path)
+        }
+        "json" => {
+            let path = format!("{out_dir}/{name}.json");
+            let header = rows.first().cloned().unwrap_or_default();
+            let items: Vec<Json> = rows
+                .iter()
+                .skip(1)
+                .map(|row| {
+                    Json::Obj(
+                        header
+                            .iter()
+                            .cloned()
+                            .zip(row.iter().map(|v| match v.parse::<f64>() {
+                                Ok(x) if x.is_finite() => Json::num(x),
+                                _ => Json::str(v.clone()),
+                            }))
+                            .collect(),
+                    )
+                })
+                .collect();
+            if let Some(parent) = std::path::Path::new(&path).parent() {
+                std::fs::create_dir_all(parent).map_err(|e| format!("mkdir {out_dir}: {e}"))?;
+            }
+            std::fs::write(&path, format!("{}\n", Json::arr(items)))
+                .map_err(|e| format!("write {path}: {e}"))?;
+            Ok(path)
+        }
+        other => Err(format!("unknown --format '{other}' (expected csv or json)")),
+    }
 }
 
 fn print_help() {
@@ -257,15 +307,16 @@ fn parse_rule(s: &str) -> Result<RevocationRule, String> {
     }
 }
 
-fn fig(raw: &[String]) -> Result<(), String> {
-    let spec = CommandSpec::new("fig", "reproduce the paper's Fig. 1")
+fn fig1(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("fig1", "reproduce the paper's Fig. 1")
         .opt("panel", "all", "a|b|c|d|e|f|all")
         .opt("markets", "192", "market count")
         .opt("months", "3", "trace months")
         .opt("seed", "2020", "world seed")
         .opt("seeds", "10", "runs per bar")
         .opt("rate", "3", "forced revocations/day for the F arm")
-        .opt("out", "results", "output dir for CSVs")
+        .opt("out", "results", "output dir")
+        .opt("format", "csv", "output format: csv | json")
         .opt("width", "46", "bar width (chars)");
     let a = spec.parse(raw)?;
     let opts = Fig1Options {
@@ -286,8 +337,7 @@ fn fig(raw: &[String]) -> Result<(), String> {
             continue;
         }
         println!("{}", panel.render(width));
-        let path = format!("{}/fig1{}.csv", a.str("out"), id);
-        csvio::write_file(&path, &panel.to_csv()).map_err(|e| format!("write {path}: {e}"))?;
+        let path = emit(a.str("out"), &format!("fig1{id}"), &panel.to_csv(), a.str("format"))?;
         println!("wrote {path}\n");
     }
     Ok(())
@@ -300,14 +350,15 @@ fn run_ablation(raw: &[String]) -> Result<(), String> {
         .opt("months", "3", "trace months")
         .opt("seed", "2020", "world seed")
         .opt("seeds", "8", "runs per point")
-        .opt("out", "results", "output dir");
+        .opt("out", "results", "output dir")
+        .opt("format", "csv", "output format: csv | json");
     let a = spec.parse(raw)?;
     let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
     let start = world.split_train(0.67);
     let seeds = a.u64("seeds")?;
     let which = a.str("which");
 
-    let emit = |name: &str, series: &ablation::Series| -> Result<(), String> {
+    let emit_series = |name: &str, series: &ablation::Series| -> Result<(), String> {
         println!("== {name} ==");
         println!("{:<16} {:>12} {:>12} {:>8}", "x", "completion_h", "cost_usd", "revs");
         let mut rows =
@@ -322,26 +373,25 @@ fn run_ablation(raw: &[String]) -> Result<(), String> {
             );
             rows.push(siwoft::csv_row![x, agg.completion_h(), agg.cost_usd(), agg.mean_revocations]);
         }
-        let path = format!("{}/ablation_{name}.csv", a.str("out"));
-        csvio::write_file(&path, &rows).map_err(|e| format!("write {path}: {e}"))?;
+        emit(a.str("out"), &format!("ablation_{name}"), &rows, a.str("format"))?;
         println!();
         Ok(())
     };
 
     if which == "all" || which == "ckpt" {
-        emit("ckpt", &ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]))?;
+        emit_series("ckpt", &ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]))?;
     }
     if which == "all" || which == "repl" {
-        emit("repl", &ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]))?;
+        emit_series("repl", &ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]))?;
     }
     if which == "all" || which == "corr" {
-        emit("corr", &ablation::corr_filter_ablation(&world, start, seeds))?;
+        emit_series("corr", &ablation::corr_filter_ablation(&world, start, seeds))?;
     }
     if which == "all" || which == "greedy" {
-        emit("greedy", &ablation::greedy_vs_psiwoft(&world, start, seeds))?;
+        emit_series("greedy", &ablation::greedy_vs_psiwoft(&world, start, seeds))?;
     }
     if which == "all" || which == "baselines" {
-        emit("baselines", &ablation::analytics_baselines(&world, start, seeds))?;
+        emit_series("baselines", &ablation::analytics_baselines(&world, start, seeds))?;
     }
     Ok(())
 }
@@ -353,7 +403,8 @@ fn sensitivity(raw: &[String]) -> Result<(), String> {
         .opt("seed", "2020", "world seed")
         .opt("seeds", "8", "runs per point")
         .opt("rate", "8", "forced revocations/day for the F arm")
-        .opt("out", "results", "output dir");
+        .opt("out", "results", "output dir")
+        .opt("format", "csv", "output format: csv | json");
     let a = spec.parse(raw)?;
     let ratios = a.f64_list("ratios")?;
     let pts = siwoft::experiments::sensitivity::ratio_sweep(
@@ -391,8 +442,114 @@ fn sensitivity(raw: &[String]) -> Result<(), String> {
         Some(x) => println!("\nF ≥ O crossover at spot/od ratio {x}"),
         None => println!("\nno F/O crossover in the swept range"),
     }
-    let path = format!("{}/sensitivity.csv", a.str("out"));
-    csvio::write_file(&path, &rows).map_err(|e| format!("write {path}: {e}"))?;
+    let path = emit(a.str("out"), "sensitivity", &rows, a.str("format"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn tables(raw: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("tables", "P/F/O summary table at one job point")
+        .opt("len", "8", "job execution length (hours)")
+        .opt("mem", "16", "job memory footprint (GB)")
+        .opt("markets", "192", "market count")
+        .opt("months", "3", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("seeds", "10", "runs per arm")
+        .opt("rate", "3", "forced revocations/day for the F arm")
+        .opt("out", "results", "output dir")
+        .opt("format", "csv", "output format: csv | json");
+    let a = spec.parse(raw)?;
+    let rate = a.f64("rate")?;
+    let opts = Fig1Options {
+        markets: a.usize("markets")?,
+        months: a.f64("months")?,
+        world_seed: a.u64("seed")?,
+        seeds: a.u64("seeds")?,
+        ft_rate_per_day: rate,
+        train_frac: 0.67,
+        workers: 0,
+    };
+    let runner = Fig1Runner::prepare(opts);
+    let job = Job::new(0, a.f64("len")?, a.f64("mem")?);
+    println!(
+        "P/F/O at {}h / {}GB over {} seeds:\n",
+        job.exec_len_h, job.mem_gb, opts.seeds
+    );
+    println!(
+        "{:<4} {:>13} {:>10} {:>6} {:>6}",
+        "arm", "completion_h", "cost_usd", "revs", "done"
+    );
+    let mut header = vec!["arm".to_string()];
+    header.extend(siwoft::sim::AggregateResult::csv_header());
+    header.push("mean_revocations".to_string());
+    header.push("completion_rate".to_string());
+    let mut rows = vec![header];
+    for arm in paper_arms() {
+        let rule = if arm.label == "F" {
+            RevocationRule::ForcedRate { per_day: rate }
+        } else {
+            RevocationRule::Trace
+        };
+        let agg = runner.bar(&job, &arm, rule);
+        println!(
+            "{:<4} {:>13.3} {:>10.4} {:>6.2} {:>6.2}",
+            arm.label,
+            agg.completion_h(),
+            agg.cost_usd(),
+            agg.mean_revocations,
+            agg.completion_rate
+        );
+        let mut row = vec![arm.label.to_string()];
+        row.extend(agg.csv_fields());
+        row.push(format!("{:.4}", agg.mean_revocations));
+        row.push(format!("{:.4}", agg.completion_rate));
+        rows.push(row);
+    }
+    let path = emit(a.str("out"), "tables", &rows, a.str("format"))?;
+    println!("\nwrote {path}");
+    Ok(())
+}
+
+fn bench_quick(raw: &[String]) -> Result<(), String> {
+    use siwoft::ft::NoFt;
+    use siwoft::policy::{Ctx, FtSpotPolicy, PSiwoft, Policy};
+    use siwoft::sim::simulate_job;
+    use siwoft::util::benchkit::{Bench, Suite};
+    let spec = CommandSpec::new("bench", "quick in-binary micro-benchmarks")
+        .opt("markets", "96", "market count")
+        .opt("months", "2", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("warmup-ms", "100", "warmup per benchmark (ms)")
+        .opt("measure-ms", "400", "measured window per benchmark (ms)")
+        .opt("out", "results", "output dir")
+        .opt("format", "csv", "output format: csv | json");
+    let a = spec.parse(raw)?;
+    let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
+    let start = world.split_train(0.67);
+    let (m, h) = (world.trace.markets, world.trace.hours);
+    let job = Job::new(1, 8.0, 16.0);
+    let bench = Bench::with_times(a.u64("warmup-ms")?, a.u64("measure-ms")?);
+    let mut suite = Suite::new("siwoft quick benchmarks (see `cargo bench` for the full suites)");
+    suite.header();
+    suite.push(bench.run_with_units(
+        &format!("analytics epoch {m}x{h} (native)"),
+        (m * m * h) as f64,
+        || MarketAnalytics::compute(&world.trace, &world.od).corr.len(),
+    ));
+    suite.push(bench.run("p-siwoft: cold select", || {
+        let mut p = PSiwoft::default();
+        p.select(&job, &Ctx { world: &world, now: start }).market()
+    }));
+    suite.push(bench.run("ft-spot: select (24h mean-price scan)", || {
+        let mut p = FtSpotPolicy::new();
+        p.select(&job, &Ctx { world: &world, now: start }).market()
+    }));
+    suite.push(bench.run("simulate: P + no-ft, 8h/16GB job (trace)", || {
+        let mut p = PSiwoft::default();
+        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        simulate_job(&world, &mut p, &NoFt, &job, &cfg, 1)
+    }));
+    let path = emit(a.str("out"), "bench_quick", &suite.to_csv(), a.str("format"))?;
     println!("wrote {path}");
     Ok(())
 }
@@ -489,11 +646,13 @@ fn run_config(raw: &[String]) -> Result<(), String> {
     }
     println!("[run] {kind} {}", args.join(" "));
     match kind.as_str() {
-        "fig" => fig(&args),
+        "fig" | "fig1" => fig1(&args),
         "simulate" => simulate(&args),
         "ablation" => run_ablation(&args),
         "sensitivity" => sensitivity(&args),
+        "tables" => tables(&args),
         "cluster" => cluster(&args),
+        "bench" => bench_quick(&args),
         "gen-traces" => gen_traces(&args),
         other => Err(format!("unknown experiment.kind '{other}'")),
     }

@@ -23,15 +23,24 @@ use super::catalog::Catalog;
 use super::trace::PriceTrace;
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ImportError {
-    #[error("history json: {0}")]
     Json(String),
-    #[error("history contains no usable samples")]
     Empty,
-    #[error("bad timestamp '{0}'")]
     Timestamp(String),
 }
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ImportError::Json(msg) => write!(f, "history json: {msg}"),
+            ImportError::Empty => write!(f, "history contains no usable samples"),
+            ImportError::Timestamp(ts) => write!(f, "bad timestamp '{ts}'"),
+        }
+    }
+}
+
+impl std::error::Error for ImportError {}
 
 /// One parsed price observation.
 #[derive(Clone, Debug, PartialEq)]

@@ -17,15 +17,27 @@ pub struct PriceTrace {
     pub prices: Vec<f32>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TraceError {
-    #[error("trace csv: {0}")]
     Csv(String),
-    #[error("trace shape mismatch: expected {expected} fields, got {got} (row {row})")]
     Shape { expected: usize, got: usize, row: usize },
-    #[error("trace is empty")]
     Empty,
 }
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Csv(msg) => write!(f, "trace csv: {msg}"),
+            TraceError::Shape { expected, got, row } => write!(
+                f,
+                "trace shape mismatch: expected {expected} fields, got {got} (row {row})"
+            ),
+            TraceError::Empty => write!(f, "trace is empty"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
 
 impl PriceTrace {
     pub fn new(markets: usize, hours: usize) -> Self {

@@ -16,12 +16,12 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
 use super::client::{HloExecutable, PjrtRuntime};
 use crate::market::analytics::SurvivalCurves;
 use crate::market::{MarketAnalytics, PriceTrace};
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{bail, err};
 
 /// One artifact entry from `manifest.json`.
 #[derive(Clone, Debug, PartialEq)]
@@ -178,7 +178,7 @@ fn execute_artifact(
         bail!("artifact returned {} outputs, expected 4", outs.len());
     }
     let [mttr, events, frac_above, corr]: [Vec<f32>; 4] =
-        outs.try_into().map_err(|_| anyhow::anyhow!("output arity"))?;
+        outs.try_into().map_err(|_| err!("output arity"))?;
     if mttr.len() != m || corr.len() != m * m {
         bail!("artifact output shapes mismatch (m={m}): {} / {}", mttr.len(), corr.len());
     }

@@ -5,81 +5,139 @@
 //! Interchange is HLO *text* (see `python/compile/aot.py`): jax ≥ 0.5
 //! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The real implementation needs the vendored `xla` bindings, which the
+//! offline build image does not ship, so it is gated behind the `pjrt`
+//! cargo feature.  Without the feature a stub compiles instead:
+//! [`PjrtRuntime::cpu`] returns an error, so
+//! [`AnalyticsEngine::auto`](super::AnalyticsEngine::auto) falls back to
+//! the bit-compatible native analytics — every caller keeps working,
+//! just without the artifact path.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+    use crate::util::error::{Context, Result};
 
-/// A compiled HLO module ready to execute.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub source: PathBuf,
-}
+    /// A compiled HLO module ready to execute.
+    pub struct HloExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        pub source: PathBuf,
+    }
 
-impl HloExecutable {
-    /// Execute with f32 inputs, each given as (data, dims).  Returns the
-    /// flattened f32 contents of every tuple element of the result (the
-    /// artifacts are lowered with `return_tuple=True`).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data)
-                .reshape(dims)
-                .with_context(|| format!("reshape input to {dims:?}"))?;
-            literals.push(lit);
+    impl HloExecutable {
+        /// Execute with f32 inputs, each given as (data, dims).  Returns the
+        /// flattened f32 contents of every tuple element of the result (the
+        /// artifacts are lowered with `return_tuple=True`).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .with_context(|| format!("reshape input to {dims:?}"))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .context("pjrt execute")?[0][0]
+                .to_literal_sync()
+                .context("fetch result literal")?;
+            let parts = result.to_tuple().context("decompose result tuple")?;
+            parts
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().context("read f32 output"))
+                .collect()
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("pjrt execute")?[0][0]
-            .to_literal_sync()
-            .context("fetch result literal")?;
-        let parts = result.to_tuple().context("decompose result tuple")?;
-        parts
-            .into_iter()
-            .map(|lit| lit.to_vec::<f32>().context("read f32 output"))
-            .collect()
-    }
-}
-
-/// PJRT client + executable cache, keyed by artifact path.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<HloExecutable>>>,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT client + executable cache, keyed by artifact path.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<PathBuf, std::sync::Arc<HloExecutable>>>,
     }
 
-    /// Load + compile an HLO-text artifact (cached per path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<HloExecutable>> {
-        let path = path.as_ref().to_path_buf();
-        if let Some(e) = self.cache.lock().unwrap().get(&path) {
-            return Ok(e.clone());
+    impl PjrtRuntime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
         }
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        let entry = std::sync::Arc::new(HloExecutable { exe, source: path.clone() });
-        self.cache.lock().unwrap().insert(path, entry.clone());
-        Ok(entry)
-    }
 
-    pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact (cached per path).
+        pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<HloExecutable>> {
+            let path = path.as_ref().to_path_buf();
+            if let Some(e) = self.cache.lock().unwrap().get(&path) {
+                return Ok(e.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            let entry = std::sync::Arc::new(HloExecutable { exe, source: path.clone() });
+            self.cache.lock().unwrap().insert(path, entry.clone());
+            Ok(entry)
+        }
+
+        pub fn cached_count(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::{Path, PathBuf};
+
+    use crate::bail;
+    use crate::util::error::Result;
+
+    /// Stub executable — never constructed without the `pjrt` feature.
+    pub struct HloExecutable {
+        pub source: PathBuf,
+    }
+
+    impl HloExecutable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            bail!("PJRT backend not compiled in (enable the `pjrt` feature)")
+        }
+    }
+
+    /// Stub runtime: construction always fails, so callers fall back to
+    /// the native analytics path.
+    pub struct PjrtRuntime {}
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            bail!(
+                "PJRT backend not compiled in (build with `--features pjrt` \
+                 and vendored xla bindings)"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<HloExecutable>> {
+            let _ = path;
+            bail!("PJRT backend not compiled in (enable the `pjrt` feature)")
+        }
+
+        pub fn cached_count(&self) -> usize {
+            0
+        }
+    }
+}
+
+pub use imp::{HloExecutable, PjrtRuntime};

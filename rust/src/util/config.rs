@@ -55,16 +55,42 @@ impl Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config parse error on line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("missing config key '{0}'")]
     Missing(String),
-    #[error("config key '{key}' has wrong type (expected {expected})")]
     Type { key: String, expected: &'static str },
-    #[error("io error reading config: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse { line, msg } => {
+                write!(f, "config parse error on line {line}: {msg}")
+            }
+            ConfigError::Missing(key) => write!(f, "missing config key '{key}'"),
+            ConfigError::Type { key, expected } => {
+                write!(f, "config key '{key}' has wrong type (expected {expected})")
+            }
+            ConfigError::Io(e) => write!(f, "io error reading config: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> ConfigError {
+        ConfigError::Io(e)
+    }
 }
 
 #[derive(Clone, Debug, Default)]

@@ -1,0 +1,139 @@
+//! Minimal error-context substrate (the anyhow substitute).
+//!
+//! Offline build: no crates.io, so the few modules that want
+//! anyhow-style ergonomics (`runtime`, `coordinator::server`) use this
+//! instead.  [`Error`] is a flattened message chain; [`Context`] adds a
+//! prefix the way `anyhow::Context` does, and works on both `Result`
+//! and `Option`.  The [`err!`](crate::err) / [`bail!`](crate::bail)
+//! macros mirror `anyhow!` / `bail!`.
+
+use std::fmt;
+
+/// A flattened error: the full context chain rendered into one string.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Prefix the chain with one more layer of context.
+    pub fn wrap(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (anyhow's whole-chain form) and `{}` both print the
+        // flattened chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Crate-standard result type (error defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_on_result_prefixes() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("open artifact").unwrap_err();
+        assert_eq!(e.to_string(), "open artifact: gone");
+        assert_eq!(format!("{e:#}"), "open artifact: gone");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        let v = Some(7u32);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::err!("bad shape {}x{}", 2, 3);
+        assert_eq!(e.to_string(), "bad shape 2x3");
+        fn f() -> Result<()> {
+            crate::bail!("nope {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn wrap_chains() {
+        let e = Error::msg("root cause").wrap("layer");
+        assert_eq!(e.to_string(), "layer: root cause");
+    }
+}

@@ -6,6 +6,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod csvio;
+pub mod error;
 pub mod json;
 pub mod logger;
 pub mod prop;

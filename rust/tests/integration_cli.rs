@@ -74,6 +74,10 @@ fn gen_traces_then_analyze_roundtrip() {
 
 #[test]
 fn analyze_uses_pjrt_when_artifacts_present() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: pjrt feature not compiled in");
+        return;
+    }
     if !std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists() {
         eprintln!("SKIP: no artifacts");
         return;

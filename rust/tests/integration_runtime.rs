@@ -18,7 +18,10 @@ fn engine_or_skip() -> Option<AnalyticsEngine> {
     match AnalyticsEngine::pjrt(artifacts_dir()) {
         Ok(e) => Some(e),
         Err(err) => {
-            eprintln!("SKIP: artifacts not available ({err:#}); run `make artifacts`");
+            eprintln!(
+                "SKIP: PJRT path unavailable ({err:#}); needs `make artifacts` \
+                 and a build with `--features pjrt` (vendored xla bindings)"
+            );
             None
         }
     }

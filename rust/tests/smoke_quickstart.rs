@@ -1,0 +1,57 @@
+//! Smoke: the README quickstart path.  Generates a world, runs one job
+//! under `PSiwoft` + `NoFt` on the held-out trace suffix, and asserts
+//! the frontier work-classification invariant documented in `sim/run.rs`:
+//! `useful` time equals the job length exactly on completion.
+
+use siwoft::prelude::*;
+
+#[test]
+fn quickstart_psiwoft_noft_useful_equals_job_length() {
+    let mut world = World::generate(64, 1.0, 42);
+    let start = world.split_train(0.67);
+    let job = Job::new(1, 6.0, 16.0);
+    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+    let mut policy = PSiwoft::default();
+    let r = simulate_job(&world, &mut policy, &NoFt, &job, &cfg, 7);
+
+    assert!(r.completed, "quickstart job did not complete");
+    assert!(
+        (r.ledger.time.get(Category::Useful) - job.exec_len_h).abs() < 1e-9,
+        "useful {} != job length {}",
+        r.ledger.time.get(Category::Useful),
+        job.exec_len_h
+    );
+    // NoFt never checkpoints, recovers or migrates — only startup,
+    // re-execution and useful work can appear in the time ledger.
+    assert_eq!(r.ledger.time.get(Category::Checkpoint), 0.0);
+    assert_eq!(r.ledger.time.get(Category::Recovery), 0.0);
+    assert_eq!(r.ledger.time.get(Category::Migration), 0.0);
+    assert!(r.completion_h() >= job.exec_len_h);
+    assert!(r.cost_usd() > 0.0);
+}
+
+#[test]
+fn quickstart_invariant_survives_forced_revocations() {
+    let mut world = World::generate(64, 1.0, 43);
+    let start = world.split_train(0.67);
+    let job = Job::new(2, 6.0, 16.0);
+    for seed in 0..4 {
+        let cfg = RunConfig {
+            rule: RevocationRule::ForcedCount { total: 3 },
+            start_t: start,
+            ..Default::default()
+        };
+        let mut policy = PSiwoft::default();
+        let r = simulate_job(&world, &mut policy, &NoFt, &job, &cfg, seed);
+        assert!(r.completed, "seed {seed}");
+        assert_eq!(r.revocations, 3, "seed {seed}");
+        assert!(
+            (r.ledger.time.get(Category::Useful) - job.exec_len_h).abs() < 1e-6,
+            "seed {seed}: useful {} != {}",
+            r.ledger.time.get(Category::Useful),
+            job.exec_len_h
+        );
+        // lost work shows up as re-execution, never as extra useful time
+        assert!(r.ledger.time.get(Category::Reexec) > 0.0, "seed {seed}");
+    }
+}

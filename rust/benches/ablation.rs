@@ -13,23 +13,23 @@ fn main() {
     let seeds = 10;
 
     println!("== abl-ckpt: checkpoint count ==");
-    for (x, a) in ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]) {
+    for (x, a) in ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64], 0) {
         println!("  n={x:<4} completion {:.3} h  cost ${:.4}", a.completion_h(), a.cost_usd());
     }
     println!("== abl-repl: replication degree ==");
-    for (x, a) in ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]) {
+    for (x, a) in ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5], 0) {
         println!("  {x:<5} completion {:.3} h  cost ${:.4}", a.completion_h(), a.cost_usd());
     }
     println!("== abl-corr: correlation filter ==");
-    for (x, a) in ablation::corr_filter_ablation(&world, start, seeds) {
+    for (x, a) in ablation::corr_filter_ablation(&world, start, seeds, 0) {
         println!("  {x:<16} completion {:.3} h  revs {:.2}", a.completion_h(), a.mean_revocations);
     }
     println!("== abl-greedy: analytics value ==");
-    for (x, a) in ablation::greedy_vs_psiwoft(&world, start, seeds) {
+    for (x, a) in ablation::greedy_vs_psiwoft(&world, start, seeds, 0) {
         println!("  {x:<10} completion {:.3} h  cost ${:.4}  revs {:.2}", a.completion_h(), a.cost_usd(), a.mean_revocations);
     }
     println!("== abl-baselines: MTTR vs survival vs Daly ==");
-    for (x, a) in ablation::analytics_baselines(&world, start, seeds) {
+    for (x, a) in ablation::analytics_baselines(&world, start, seeds, 0) {
         println!("  {x:<12} completion {:.3} h  cost ${:.4}", a.completion_h(), a.cost_usd());
     }
 
@@ -37,13 +37,13 @@ fn main() {
     let mut suite = Suite::new("ablation regeneration cost");
     suite.header();
     suite.push(bench.run("checkpoint sweep (7 points x 10 seeds)", || {
-        ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]).len()
+        ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64], 0).len()
     }));
     suite.push(bench.run("replication sweep (5 degrees x 10 seeds)", || {
-        ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]).len()
+        ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5], 0).len()
     }));
     suite.push(bench.run("corr filter ablation (2 x 10 seeds)", || {
-        ablation::corr_filter_ablation(&world, start, seeds).len()
+        ablation::corr_filter_ablation(&world, start, seeds, 0).len()
     }));
     siwoft::util::csvio::write_file("results/bench_ablation.csv", &suite.to_csv()).ok();
 }

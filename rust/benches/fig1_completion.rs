@@ -3,7 +3,7 @@
 //!
 //!     cargo bench --bench fig1_completion
 
-use siwoft::experiments::fig1::{Fig1Options, Fig1Runner, Sweep};
+use siwoft::experiments::fig1::{Axis, Fig1Options, Fig1Runner};
 use siwoft::util::benchkit::{Bench, Suite};
 
 fn main() {
@@ -19,7 +19,7 @@ fn main() {
     let runner = Fig1Runner::prepare(opts);
 
     // the data itself (the reproduction)
-    for (sweep, id) in [(Sweep::Length, 'a'), (Sweep::Memory, 'b'), (Sweep::Revocations, 'c')] {
+    for (sweep, id) in [(Axis::Length, 'a'), (Axis::Memory, 'b'), (Axis::Revocations, 'c')] {
         let rows = runner.sweep(sweep);
         let panel = runner.panel(&rows, id, false);
         println!("{}", panel.render(46));
@@ -30,13 +30,13 @@ fn main() {
     let mut suite = Suite::new("fig1 completion-time panels (end-to-end regeneration)");
     suite.header();
     suite.push(bench.run_with_units("panel 1a (5 lens x 3 arms x 10 seeds)", 150.0, || {
-        runner.sweep(Sweep::Length).len()
+        runner.sweep(Axis::Length).len()
     }));
     suite.push(bench.run_with_units("panel 1b (5 mems x 3 arms x 10 seeds)", 150.0, || {
-        runner.sweep(Sweep::Memory).len()
+        runner.sweep(Axis::Memory).len()
     }));
     suite.push(bench.run_with_units("panel 1c (5 revs x 3 arms x 10 seeds)", 150.0, || {
-        runner.sweep(Sweep::Revocations).len()
+        runner.sweep(Axis::Revocations).len()
     }));
     siwoft::util::csvio::write_file("results/bench_fig1_completion.csv", &suite.to_csv()).ok();
 }

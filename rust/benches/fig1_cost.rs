@@ -4,7 +4,7 @@
 //!
 //!     cargo bench --bench fig1_cost
 
-use siwoft::experiments::fig1::{Fig1Options, Fig1Runner, Sweep};
+use siwoft::experiments::fig1::{Axis, Fig1Options, Fig1Runner};
 use siwoft::prelude::*;
 use siwoft::util::benchkit::{Bench, Suite};
 
@@ -20,7 +20,7 @@ fn main() {
     };
     let runner = Fig1Runner::prepare(opts);
 
-    for (sweep, id) in [(Sweep::Length, 'd'), (Sweep::Memory, 'e'), (Sweep::Revocations, 'f')] {
+    for (sweep, id) in [(Axis::Length, 'd'), (Axis::Memory, 'e'), (Axis::Revocations, 'f')] {
         let rows = runner.sweep(sweep);
         let panel = runner.panel(&rows, id, true);
         println!("{}", panel.render(46));
@@ -34,38 +34,32 @@ fn main() {
     let mut suite = Suite::new("single-run simulation latency (8h/16GB job)");
     suite.header();
 
+    let base = Scenario::on(world).job(job).start_t(start);
+    let rate = RevocationRule::ForcedRate { per_day: 3.0 };
     let mut seed = 0u64;
     suite.push(bench.run("P: p-siwoft + no-ft (trace)", || {
         seed += 1;
-        let mut p = PSiwoft::default();
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-        simulate_job(world, &mut p, &NoFt, &job, &cfg, seed)
+        base.clone().run_seeded(seed)
     }));
     suite.push(bench.run("F: ft-spot + hourly ckpt (rate 3/day)", || {
         seed += 1;
-        let mut p = FtSpotPolicy::new();
-        let cfg = RunConfig {
-            rule: RevocationRule::ForcedRate { per_day: 3.0 },
-            start_t: start,
-            ..Default::default()
-        };
-        simulate_job(world, &mut p, &Checkpointing::hourly(8.0), &job, &cfg, seed)
+        base.clone()
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::CheckpointHourly)
+            .rule(rate)
+            .run_seeded(seed)
     }));
     suite.push(bench.run("O: on-demand", || {
         seed += 1;
-        let mut p = OnDemandPolicy;
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-        simulate_job(world, &mut p, &NoFt, &job, &cfg, seed)
+        base.clone().policy(PolicyKind::OnDemand).run_seeded(seed)
     }));
     suite.push(bench.run("R: ft-spot + 3-replica (rate 3/day)", || {
         seed += 1;
-        let mut p = FtSpotPolicy::new();
-        let cfg = RunConfig {
-            rule: RevocationRule::ForcedRate { per_day: 3.0 },
-            start_t: start,
-            ..Default::default()
-        };
-        simulate_job(world, &mut p, &Replication::new(3), &job, &cfg, seed)
+        base.clone()
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Replication { k: 3 })
+            .rule(rate)
+            .run_seeded(seed)
     }));
     siwoft::util::csvio::write_file("results/bench_fig1_cost.csv", &suite.to_csv()).ok();
 }

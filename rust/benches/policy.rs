@@ -50,11 +50,8 @@ fn main() {
     }));
 
     // full session simulation (what one control-plane `submit` costs)
-    suite.push(bench.run("end-to-end submit: P trace-driven 8h job", || {
-        let mut p = PSiwoft::default();
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-        simulate_job(&world, &mut p, &NoFt, &job, &cfg, 1)
-    }));
+    let scen = Scenario::on(&world).job(job.clone()).start_t(start).seed(1);
+    suite.push(bench.run("end-to-end submit: P trace-driven 8h job", || scen.run()));
 
     siwoft::util::csvio::write_file("results/bench_policy.csv", &suite.to_csv()).ok();
 }

@@ -13,7 +13,7 @@
 //!
 //!     make artifacts && cargo run --release --example fig1_e2e
 
-use siwoft::experiments::fig1::{find, Fig1Options, Fig1Runner, Sweep};
+use siwoft::experiments::fig1::{find, Axis, Fig1Options, Fig1Runner};
 use siwoft::market::{Catalog, TraceGenConfig};
 use siwoft::runtime::AnalyticsEngine;
 use siwoft::sim::Category;
@@ -67,9 +67,9 @@ fn main() {
         opts.markets, opts.months, opts.seeds
     );
     let runner = Fig1Runner::prepare(opts);
-    let lens = runner.sweep(Sweep::Length);
-    let mems = runner.sweep(Sweep::Memory);
-    let revs = runner.sweep(Sweep::Revocations);
+    let lens = runner.sweep(Axis::Length);
+    let mems = runner.sweep(Axis::Memory);
+    let revs = runner.sweep(Axis::Revocations);
 
     for (id, rows, is_cost) in [
         ('a', &lens, false),

@@ -45,7 +45,7 @@ fn main() {
     let start = world.split_train(0.67);
     let seeds = 10;
 
-    let ckpt = ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]);
+    let ckpt = ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64], 0);
     print_series(
         "checkpoint count (8h/16GB job, 4 forced revocations)",
         &ckpt,
@@ -58,16 +58,16 @@ fn main() {
         .unwrap();
     println!("fastest checkpoint setting: n={} ({:.3} h)\n", best.0, best.1.completion_h());
 
-    let repl = ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]);
+    let repl = ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5], 0);
     print_series("replication degree (8h/16GB job, 3 revocations/day)", &repl, false);
 
-    let corr = ablation::corr_filter_ablation(&world, start, seeds);
+    let corr = ablation::corr_filter_ablation(&world, start, seeds, 0);
     print_series("P-SIWOFT correlation filter (trace revocations)", &corr, false);
 
-    let greedy = ablation::greedy_vs_psiwoft(&world, start, seeds);
+    let greedy = ablation::greedy_vs_psiwoft(&world, start, seeds, 0);
     print_series("market-analytics value: P-SIWOFT vs lifetime-blind greedy", &greedy, false);
 
-    let baselines = ablation::analytics_baselines(&world, start, seeds);
+    let baselines = ablation::analytics_baselines(&world, start, seeds, 0);
     print_series(
         "analytics baselines: MTTR (P-SIWOFT) vs survival [17] vs Daly-tuned FT",
         &baselines,

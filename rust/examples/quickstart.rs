@@ -2,8 +2,8 @@
 //!
 //! Generates a synthetic 3-month spot-market world, runs one batch job
 //! under the three provisioning arms of the paper (P-SIWOFT, the
-//! fault-tolerance approach, on-demand), and prints the completion-time
-//! and deployment-cost comparison.
+//! fault-tolerance approach, on-demand) through the `Scenario` builder,
+//! and prints the completion-time and deployment-cost comparison.
 //!
 //!     cargo run --release --example quickstart
 
@@ -28,31 +28,27 @@ fn main() {
         "arm", "completion_h", "cost_usd", "revocations", "sessions"
     );
 
-    // 4. The three arms of Fig. 1.
-    let arms: Vec<(&str, Box<dyn Policy>, Box<dyn FtMechanism>, RevocationRule)> = vec![
-        (
-            "P  (p-siwoft, no FT)",
-            Box::new(PSiwoft::default()),
-            Box::new(NoFt),
-            RevocationRule::Trace,
-        ),
+    // 4. The three arms of Fig. 1, as (policy, ft, rule) scenario kinds.
+    let arms: Vec<(&str, PolicyKind, FtKind, RevocationRule)> = vec![
+        ("P  (p-siwoft, no FT)", PolicyKind::default(), FtKind::None, RevocationRule::Trace),
         (
             "F  (cheapest + ckpt)",
-            Box::new(FtSpotPolicy::new()),
-            Box::new(Checkpointing::hourly(job.exec_len_h)),
+            PolicyKind::FtSpot,
+            FtKind::CheckpointHourly,
             RevocationRule::ForcedRate { per_day: 3.0 },
         ),
-        (
-            "O  (on-demand)",
-            Box::new(OnDemandPolicy),
-            Box::new(NoFt),
-            RevocationRule::Trace,
-        ),
+        ("O  (on-demand)", PolicyKind::OnDemand, FtKind::None, RevocationRule::Trace),
     ];
 
-    for (label, mut policy, ft, rule) in arms {
-        let cfg = RunConfig { rule, start_t: sim_start, ..Default::default() };
-        let r = simulate_job(&world, policy.as_mut(), ft.as_ref(), &job, &cfg, 7);
+    for (label, policy, ft, rule) in arms {
+        let r = Scenario::on(&world)
+            .job(job.clone())
+            .policy(policy)
+            .ft(ft)
+            .rule(rule)
+            .start_t(sim_start)
+            .seed(7)
+            .run();
         assert!(r.completed);
         println!(
             "{:<22} {:>12.3} {:>10.4} {:>12} {:>9}",
@@ -65,9 +61,7 @@ fn main() {
     }
 
     println!("\ntime/cost overhead categories are broken down per run:");
-    let mut p = PSiwoft::default();
-    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: sim_start, ..Default::default() };
-    let r = simulate_job(&world, &mut p, &NoFt, &job, &cfg, 7);
+    let r = Scenario::on(&world).job(job.clone()).start_t(sim_start).seed(7).run();
     for (cat, v) in r.ledger.time.iter() {
         if v > 0.0 {
             println!("  time.{:<10} {:.4} h", cat.as_str(), v);
@@ -78,4 +72,21 @@ fn main() {
             println!("  cost.{:<10} ${:.5}", cat.as_str(), v);
         }
     }
+
+    // 5. The same comparison as one Sweep: the cartesian axes fan out
+    //    over the worker pool (seeds × arms), aggregated per point.
+    let rows = Sweep::on(&world)
+        .job(job)
+        .policies([PolicyKind::default(), PolicyKind::OnDemand])
+        .rules([RevocationRule::Trace])
+        .seeds(5)
+        .start_t(sim_start)
+        .run();
+    let (p, o) = (&rows[0].agg, &rows[1].agg);
+    println!(
+        "\nover 5 seeds, P-SIWOFT costs {:.1}% of on-demand (${:.4} vs ${:.4})",
+        100.0 * p.cost_usd() / o.cost_usd(),
+        p.cost_usd(),
+        o.cost_usd()
+    );
 }

@@ -15,9 +15,9 @@
 
 use crate::job::Job;
 use crate::market::MarketAnalytics;
-use crate::policy::Policy;
+use crate::scenario::{PolicyKind, Scenario};
 use crate::sim::engine::{Engine, Event};
-use crate::sim::{simulate_job, JobResult, RevocationRule, RunConfig, World};
+use crate::sim::{JobResult, RevocationRule, World};
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 
@@ -61,16 +61,24 @@ pub struct ClusterReport {
     pub results: Vec<JobResult>,
 }
 
-/// Run the rolling-epoch cluster simulation for one policy factory.
+/// Run the rolling-epoch cluster simulation for one policy kind.
 ///
-/// `make_policy` builds a fresh per-job policy (policies are per-job
+/// `policy` names the per-job policy through the scenario registry (a
+/// fresh instance is built per arrival — policies are per-job
 /// stateful); `analytics_for` recomputes the statistics for a trailing
 /// window — in production this is the PJRT engine, in tests the native
 /// mirror.
+///
+/// NOTE: `PolicyKind::Predictive` retrains its survival curves from
+/// the trace prefix on *every* arrival (O(markets × t) per job), which
+/// duplicates work the `analytics_for` refresh cadence already bounds
+/// for MTTR.  Fine for short horizons; a curve cache keyed on the
+/// refresh epoch is the optimization if long predictive cluster runs
+/// become a workload (see ROADMAP).
 pub fn run_cluster(
     world: &mut World,
     cfg: &ClusterConfig,
-    mut make_policy: impl FnMut() -> Box<dyn Policy>,
+    policy: PolicyKind,
     mut analytics_for: impl FnMut(&World, usize, usize) -> MarketAnalytics,
     mut sample_job: impl FnMut(&mut Rng, u64) -> Job,
 ) -> ClusterReport {
@@ -112,14 +120,13 @@ pub fn run_cluster(
             }
             Event::JobArrival { job_id } => {
                 let job = sample_job(&mut rng, job_id);
-                let mut policy = make_policy();
-                let run_cfg = RunConfig {
-                    rule: RevocationRule::Trace,
-                    start_t: t,
-                    ..Default::default()
-                };
-                let ft = crate::ft::NoFt;
-                let r = simulate_job(world, policy.as_mut(), &ft, &job, &run_cfg, cfg.seed ^ job_id);
+                let r = Scenario::on(world)
+                    .job(job)
+                    .policy(policy)
+                    .rule(RevocationRule::Trace)
+                    .start_t(t)
+                    .seed(cfg.seed ^ job_id)
+                    .run();
                 report.jobs += 1;
                 report.completed += r.completed as usize;
                 report.total_cost += r.cost_usd();
@@ -142,7 +149,6 @@ pub fn run_cluster(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::policy::PSiwoft;
 
     fn native_refresh(world: &World, h0: usize, h1: usize) -> MarketAnalytics {
         let win = world.trace.window(h0, h1.max(h0 + 2));
@@ -168,7 +174,7 @@ mod tests {
         let report = run_cluster(
             &mut world,
             &cfg,
-            || Box::new(PSiwoft::default()),
+            PolicyKind::default(),
             native_refresh,
             small_job,
         );
@@ -195,7 +201,7 @@ mod tests {
             run_cluster(
                 &mut world,
                 &cfg,
-                || Box::new(PSiwoft::default()),
+                PolicyKind::default(),
                 native_refresh,
                 small_job,
             )
@@ -216,7 +222,7 @@ mod tests {
         run_cluster(
             &mut world,
             &cfg,
-            || Box::new(PSiwoft::default()),
+            PolicyKind::default(),
             native_refresh,
             small_job,
         );
@@ -237,7 +243,7 @@ mod tests {
         let _ = run_cluster(
             &mut world,
             &cfg,
-            || Box::new(PSiwoft::default()),
+            PolicyKind::default(),
             native_refresh,
             small_job,
         );

@@ -9,84 +9,17 @@ use std::time::Instant;
 
 use super::metrics::Metrics;
 use super::pool::Pool;
-use crate::ft::{Checkpointing, FtMechanism, Migration, NoFt, Replication};
 use crate::job::Job;
-use crate::policy::{FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy};
+use crate::policy::PSiwoftConfig;
 use crate::runtime::AnalyticsEngine;
-use crate::sim::{simulate_job, AggregateResult, JobResult, RunConfig, World};
+use crate::scenario::Scenario;
+use crate::sim::{AggregateResult, JobResult, RunConfig, World};
 use crate::util::error::Result;
 
-/// Declarative policy selection (so configs/CLI/benches can name them).
-#[derive(Clone, Copy, Debug, PartialEq)]
-#[allow(clippy::derive_partial_eq_without_eq)]
-pub enum PolicyKind {
-    PSiwoft(PSiwoftConfig),
-    FtSpot,
-    OnDemand,
-    Greedy,
-}
-
-impl PolicyKind {
-    pub fn make(&self) -> Box<dyn Policy> {
-        match *self {
-            PolicyKind::PSiwoft(cfg) => Box::new(PSiwoft::new(cfg)),
-            PolicyKind::FtSpot => Box::new(FtSpotPolicy::new()),
-            PolicyKind::OnDemand => Box::new(OnDemandPolicy),
-            PolicyKind::Greedy => Box::new(GreedyCheapest::new()),
-        }
-    }
-
-    pub fn parse(name: &str) -> Option<PolicyKind> {
-        match name {
-            "p-siwoft" | "psiwoft" | "p" => Some(PolicyKind::PSiwoft(PSiwoftConfig::default())),
-            "ft-spot" | "ft" | "f" => Some(PolicyKind::FtSpot),
-            "on-demand" | "ondemand" | "o" => Some(PolicyKind::OnDemand),
-            "greedy" | "g" => Some(PolicyKind::Greedy),
-            _ => None,
-        }
-    }
-}
-
-/// Declarative FT-mechanism selection.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum FtKind {
-    None,
-    Checkpoint { n: u32 },
-    /// SpotOn-style hourly checkpoints scaled to the job length
-    CheckpointHourly,
-    Migration,
-    Replication { k: u32 },
-}
-
-impl FtKind {
-    pub fn make(&self, job: &Job) -> Box<dyn FtMechanism> {
-        match *self {
-            FtKind::None => Box::new(NoFt),
-            FtKind::Checkpoint { n } => Box::new(Checkpointing::new(n)),
-            FtKind::CheckpointHourly => Box::new(Checkpointing::hourly(job.exec_len_h)),
-            FtKind::Migration => Box::new(Migration),
-            FtKind::Replication { k } => Box::new(Replication::new(k)),
-        }
-    }
-
-    pub fn parse(name: &str) -> Option<FtKind> {
-        match name {
-            "none" => Some(FtKind::None),
-            "checkpoint" | "ckpt" => Some(FtKind::CheckpointHourly),
-            "migration" | "migrate" => Some(FtKind::Migration),
-            "replication" | "repl" => Some(FtKind::Replication { k: 2 }),
-            _ => {
-                if let Some(n) = name.strip_prefix("ckpt:") {
-                    n.parse().ok().map(|n| FtKind::Checkpoint { n })
-                } else if let Some(k) = name.strip_prefix("repl:") {
-                    k.parse().ok().map(|k| FtKind::Replication { k })
-                } else {
-                    None
-                }
-            }
-        }
-    }
-}
+// The declarative policy/FT registries live in `scenario::registry`;
+// re-exported here because the coordinator's wire protocol and the
+// leader's `Arm` speak in kinds.
+pub use crate::scenario::{FtKind, PolicyKind};
 
 /// One experiment arm: a named (policy, ft) pairing.
 #[derive(Clone, Copy, Debug)]
@@ -171,12 +104,13 @@ impl Coordinator {
         self.backend
     }
 
-    /// Run one (job, arm) simulation.
-    pub fn run_one(&self, job: &Job, arm: &Arm, cfg: &RunConfig, seed: u64) -> JobResult {
-        let mut policy = arm.policy.make();
-        let ft = arm.ft.make(job);
-        let t0 = Instant::now();
-        let r = simulate_job(&self.world, policy.as_mut(), ft.as_ref(), job, cfg, seed);
+    /// Build the scenario for one (job, arm) pairing.
+    fn scenario(&self, job: &Job, arm: &Arm, cfg: &RunConfig) -> Scenario<'_> {
+        Scenario::on(&self.world).job(job.clone()).policy(arm.policy).ft(arm.ft).config(*cfg)
+    }
+
+    /// Record one finished run in the coordinator metrics.
+    fn record(&self, r: &JobResult, t0: Instant) {
         Metrics::add(&self.metrics.decision_us, t0.elapsed().as_micros() as u64);
         Metrics::add(&self.metrics.decisions, r.sessions as u64);
         Metrics::add(&self.metrics.revocations, r.revocations as u64);
@@ -186,14 +120,28 @@ impl Coordinator {
         } else {
             Metrics::inc(&self.metrics.jobs_failed);
         }
+    }
+
+    /// Run one (job, arm) simulation.
+    pub fn run_one(&self, job: &Job, arm: &Arm, cfg: &RunConfig, seed: u64) -> JobResult {
+        let t0 = Instant::now();
+        let r = self.scenario(job, arm, cfg).seed(seed).run();
+        self.record(&r, t0);
         r
     }
 
-    /// Run a job under an arm across `seeds` seeds, aggregated (one bar).
+    /// Run a job under an arm across `seeds` seeds, aggregated (one
+    /// bar).  One scenario is shared across the seeds, so per-point
+    /// state (e.g. a `Predictive` arm's survival-curve fit) is trained
+    /// once, not once per seed.
     pub fn run_seeds(&self, job: &Job, arm: &Arm, cfg: &RunConfig, seeds: u64) -> AggregateResult {
-        let runs: Vec<JobResult> = self
-            .pool
-            .map((0..seeds).collect(), |_, seed| self.run_one(job, arm, cfg, seed));
+        let scen = self.scenario(job, arm, cfg);
+        let runs: Vec<JobResult> = self.pool.map((0..seeds).collect(), |_, seed| {
+            let t0 = Instant::now();
+            let r = scen.run_seeded(seed);
+            self.record(&r, t0);
+            r
+        });
         AggregateResult::from_runs(&runs)
     }
 
@@ -211,18 +159,6 @@ mod tests {
     fn coordinator() -> Coordinator {
         let world = World::generate(48, 1.0, 21);
         Coordinator::new(world, AnalyticsEngine::native(), 2)
-    }
-
-    #[test]
-    fn kinds_parse() {
-        assert_eq!(PolicyKind::parse("p"), Some(PolicyKind::PSiwoft(PSiwoftConfig::default())));
-        assert_eq!(PolicyKind::parse("ft"), Some(PolicyKind::FtSpot));
-        assert_eq!(PolicyKind::parse("ondemand"), Some(PolicyKind::OnDemand));
-        assert_eq!(PolicyKind::parse("nope"), None);
-        assert_eq!(FtKind::parse("ckpt:12"), Some(FtKind::Checkpoint { n: 12 }));
-        assert_eq!(FtKind::parse("repl:3"), Some(FtKind::Replication { k: 3 }));
-        assert_eq!(FtKind::parse("none"), Some(FtKind::None));
-        assert_eq!(FtKind::parse("zzz"), None);
     }
 
     #[test]

@@ -9,110 +9,104 @@
 //!     off in a correlated-failure world.
 //!   * **abl-greedy** — lifetime-blind greedy spot vs P-SIWOFT: isolates
 //!     the value of the MTTR analysis.
+//!
+//! Every series is a [`Sweep`] (one varying axis) or a set of
+//! [`Scenario`] replicates; nothing here touches policy or FT
+//! constructors directly.
 
 use crate::coordinator::Pool;
-use crate::ft::{Checkpointing, NoFt, Replication};
 use crate::job::Job;
-use crate::policy::{FtSpotPolicy, GreedyCheapest, PSiwoft, PSiwoftConfig};
-use crate::sim::{simulate_job, AggregateResult, JobResult, RevocationRule, RunConfig, World};
+use crate::policy::{PSiwoftConfig, PredictiveConfig};
+use crate::scenario::{FtKind, PolicyKind, Scenario, Sweep};
+use crate::sim::{AggregateResult, RevocationRule, World};
 
 /// A simple (x, aggregate) series.
 pub type Series = Vec<(String, AggregateResult)>;
 
-fn agg_over_seeds(pool: &Pool, seeds: u64, f: impl Fn(u64) -> JobResult + Sync) -> AggregateResult {
-    let runs = pool.map((0..seeds).collect(), |_, s| f(s));
-    AggregateResult::from_runs(&runs)
+/// The fixed job point every ablation runs at (the paper's 8 h / 16 GB).
+fn point_job() -> Job {
+    Job::new(0, 8.0, 16.0)
 }
 
 /// Checkpoint-count sweep under forced revocations.
-pub fn checkpoint_sweep(world: &World, start_t: f64, seeds: u64, counts: &[u32]) -> Series {
-    let pool = Pool::new(0);
-    let job = Job::new(0, 8.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 4 }, start_t, ..Default::default() };
-    counts
-        .iter()
-        .map(|&n| {
-            let agg = agg_over_seeds(&pool, seeds, |s| {
-                let mut p = FtSpotPolicy::new();
-                simulate_job(world, &mut p, &Checkpointing::new(n), &job, &cfg, s)
-            });
-            (format!("{n}"), agg)
-        })
-        .collect()
+pub fn checkpoint_sweep(
+    world: &World,
+    start_t: f64,
+    seeds: u64,
+    counts: &[u32],
+    workers: usize,
+) -> Series {
+    let rows = Sweep::on(world)
+        .job(point_job())
+        .policies([PolicyKind::FtSpot])
+        .fts(counts.iter().map(|&n| FtKind::Checkpoint { n }))
+        .rules([RevocationRule::ForcedCount { total: 4 }])
+        .seeds(seeds)
+        .start_t(start_t)
+        .workers(workers)
+        .run();
+    counts.iter().zip(rows).map(|(&n, row)| (format!("{n}"), row.agg)).collect()
 }
 
 /// Replication-degree sweep.
-pub fn replication_sweep(world: &World, start_t: f64, seeds: u64, degrees: &[u32]) -> Series {
-    let pool = Pool::new(0);
-    let job = Job::new(0, 8.0, 16.0);
-    let cfg = RunConfig {
-        rule: RevocationRule::ForcedRate { per_day: 3.0 },
-        start_t,
-        ..Default::default()
-    };
-    degrees
-        .iter()
-        .map(|&k| {
-            let agg = agg_over_seeds(&pool, seeds, |s| {
-                let mut p = FtSpotPolicy::new();
-                if k <= 1 {
-                    simulate_job(world, &mut p, &NoFt, &job, &cfg, s)
-                } else {
-                    simulate_job(world, &mut p, &Replication::new(k), &job, &cfg, s)
-                }
-            });
-            (format!("k={k}"), agg)
-        })
-        .collect()
+pub fn replication_sweep(
+    world: &World,
+    start_t: f64,
+    seeds: u64,
+    degrees: &[u32],
+    workers: usize,
+) -> Series {
+    let rows = Sweep::on(world)
+        .job(point_job())
+        .policies([PolicyKind::FtSpot])
+        .fts(degrees.iter().map(|&k| {
+            if k <= 1 {
+                FtKind::None
+            } else {
+                FtKind::Replication { k }
+            }
+        }))
+        .rules([RevocationRule::ForcedRate { per_day: 3.0 }])
+        .seeds(seeds)
+        .start_t(start_t)
+        .workers(workers)
+        .run();
+    degrees.iter().zip(rows).map(|(&k, row)| (format!("k={k}"), row.agg)).collect()
 }
 
 /// Correlation-filter on/off for P-SIWOFT.
-pub fn corr_filter_ablation(world: &World, start_t: f64, seeds: u64) -> Series {
-    let pool = Pool::new(0);
-    let job = Job::new(0, 8.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::Trace, start_t, ..Default::default() };
-    [("corr-filter=on", true), ("corr-filter=off", false)]
-        .into_iter()
-        .map(|(label, on)| {
-            let agg = agg_over_seeds(&pool, seeds, |s| {
-                let mut p = PSiwoft::new(PSiwoftConfig { use_corr_filter: on, ..Default::default() });
-                simulate_job(world, &mut p, &NoFt, &job, &cfg, s)
-            });
-            (label.to_string(), agg)
-        })
-        .collect()
+pub fn corr_filter_ablation(world: &World, start_t: f64, seeds: u64, workers: usize) -> Series {
+    let arms = [("corr-filter=on", true), ("corr-filter=off", false)];
+    let rows = Sweep::on(world)
+        .job(point_job())
+        .policies(arms.iter().map(|&(_, on)| {
+            PolicyKind::PSiwoft(PSiwoftConfig { use_corr_filter: on, ..Default::default() })
+        }))
+        .seeds(seeds)
+        .start_t(start_t)
+        .workers(workers)
+        .run();
+    arms.iter().zip(rows).map(|(&(label, _), row)| (label.to_string(), row.agg)).collect()
 }
 
 /// Analytics-baseline shoot-out: P-SIWOFT's MTTR recipe vs the
 /// survival-probability policy (ref.\[17\]-style) vs a Daly-tuned FT arm.
 /// Isolates how much of the win is "use market statistics" vs the
 /// specific statistic used vs well-tuned fault tolerance.
-pub fn analytics_baselines(world: &World, start_t: f64, seeds: u64) -> Series {
-    use crate::ft::DalyCheckpointing;
-    use crate::policy::PredictivePolicy;
-    let pool = Pool::new(0);
-    let job = Job::new(0, 8.0, 16.0);
-    let trace_cfg = RunConfig { rule: RevocationRule::Trace, start_t, ..Default::default() };
-    let rate_cfg = RunConfig {
-        rule: RevocationRule::ForcedRate { per_day: 3.0 },
-        start_t,
-        ..Default::default()
-    };
-
-    let psiwoft = agg_over_seeds(&pool, seeds, |s| {
-        let mut p = PSiwoft::default();
-        simulate_job(world, &mut p, &NoFt, &job, &trace_cfg, s)
-    });
-    let predictive = agg_over_seeds(&pool, seeds, |s| {
-        let mut p = PredictivePolicy::from_world_trained(world, start_t as usize);
-        simulate_job(world, &mut p, &NoFt, &job, &trace_cfg, s)
-    });
-    let daly = agg_over_seeds(&pool, seeds, |s| {
-        let mut p = FtSpotPolicy::new();
-        // Daly interval tuned to the forced revocation rate (MTTR = 8h)
-        let ft = DalyCheckpointing::new(24.0 / 3.0);
-        simulate_job(world, &mut p, &ft, &job, &rate_cfg, s)
-    });
+pub fn analytics_baselines(world: &World, start_t: f64, seeds: u64, workers: usize) -> Series {
+    let pool = Pool::new(workers);
+    let base = Scenario::on(world).job(point_job()).start_t(start_t);
+    let psiwoft = base.clone().replicate_on(&pool, seeds);
+    let predictive = base
+        .clone()
+        .policy(PolicyKind::Predictive(PredictiveConfig::default()))
+        .replicate_on(&pool, seeds);
+    // Daly interval tuned to the forced revocation rate (MTTR = 8h)
+    let daly = base
+        .policy(PolicyKind::FtSpot)
+        .ft(FtKind::Daly { expected_mttr_h: 24.0 / 3.0 })
+        .rule(RevocationRule::ForcedRate { per_day: 3.0 })
+        .replicate_on(&pool, seeds);
     vec![
         ("p-siwoft".to_string(), psiwoft),
         ("predictive".to_string(), predictive),
@@ -121,19 +115,16 @@ pub fn analytics_baselines(world: &World, start_t: f64, seeds: u64) -> Series {
 }
 
 /// P-SIWOFT vs lifetime-blind greedy (both no-FT, trace revocations).
-pub fn greedy_vs_psiwoft(world: &World, start_t: f64, seeds: u64) -> Series {
-    let pool = Pool::new(0);
-    let job = Job::new(0, 8.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::Trace, start_t, ..Default::default() };
-    let p_agg = agg_over_seeds(&pool, seeds, |s| {
-        let mut p = PSiwoft::default();
-        simulate_job(world, &mut p, &NoFt, &job, &cfg, s)
-    });
-    let g_agg = agg_over_seeds(&pool, seeds, |s| {
-        let mut g = GreedyCheapest::new();
-        simulate_job(world, &mut g, &NoFt, &job, &cfg, s)
-    });
-    vec![("p-siwoft".to_string(), p_agg), ("greedy".to_string(), g_agg)]
+pub fn greedy_vs_psiwoft(world: &World, start_t: f64, seeds: u64, workers: usize) -> Series {
+    let arms = [("p-siwoft", PolicyKind::default()), ("greedy", PolicyKind::Greedy)];
+    let rows = Sweep::on(world)
+        .job(point_job())
+        .policies(arms.iter().map(|&(_, p)| p))
+        .seeds(seeds)
+        .start_t(start_t)
+        .workers(workers)
+        .run();
+    arms.iter().zip(rows).map(|(&(label, _), row)| (label.to_string(), row.agg)).collect()
 }
 
 #[cfg(test)]
@@ -150,7 +141,7 @@ mod tests {
     #[test]
     fn checkpoint_tradeoff_shape() {
         let (w, start) = world();
-        let series = checkpoint_sweep(&w, start, 4, &[1, 8, 64]);
+        let series = checkpoint_sweep(&w, start, 4, &[1, 8, 64], 2);
         let t = |i: usize, c: Category| series[i].1.time.get(c);
         // few checkpoints → more re-execution than many checkpoints
         assert!(t(0, Category::Reexec) > t(2, Category::Reexec));
@@ -161,7 +152,7 @@ mod tests {
     #[test]
     fn replication_cost_grows_with_degree() {
         let (w, start) = world();
-        let series = replication_sweep(&w, start, 4, &[1, 3]);
+        let series = replication_sweep(&w, start, 4, &[1, 3], 2);
         assert!(series[1].1.cost_usd() > series[0].1.cost_usd() * 1.5);
         // completion stays near the job length with replicas absorbing
         assert!(series[1].1.completion_h() < 10.0);
@@ -170,7 +161,7 @@ mod tests {
     #[test]
     fn greedy_loses_to_psiwoft() {
         let (w, start) = world();
-        let series = greedy_vs_psiwoft(&w, start, 6);
+        let series = greedy_vs_psiwoft(&w, start, 6, 2);
         let p = &series[0].1;
         let g = &series[1].1;
         // greedy chases cheap-but-volatile markets → more revocations
@@ -185,7 +176,7 @@ mod tests {
     #[test]
     fn analytics_baselines_complete_and_compare() {
         let (w, start) = world();
-        let series = analytics_baselines(&w, start, 4);
+        let series = analytics_baselines(&w, start, 4, 2);
         assert_eq!(series.len(), 3);
         for (label, a) in &series {
             assert_eq!(a.completion_rate, 1.0, "{label} failed runs");
@@ -198,7 +189,7 @@ mod tests {
     #[test]
     fn corr_ablation_runs() {
         let (w, start) = world();
-        let series = corr_filter_ablation(&w, start, 3);
+        let series = corr_filter_ablation(&w, start, 3, 2);
         assert_eq!(series.len(), 2);
         assert!(series.iter().all(|(_, a)| a.completion_rate > 0.0));
     }

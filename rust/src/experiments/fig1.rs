@@ -17,11 +17,11 @@
 //!     choice is what the paper evaluates);
 //!   * O never gets revoked.
 
-use crate::coordinator::{Arm, FtKind, PolicyKind};
-use crate::coordinator::Pool;
+use crate::coordinator::{Arm, FtKind, PolicyKind, Pool};
 use crate::job::{workload::paper, Job};
 use crate::policy::PSiwoftConfig;
-use crate::sim::{simulate_job, AggregateResult, JobResult, RevocationRule, RunConfig, World};
+use crate::scenario::Scenario;
+use crate::sim::{AggregateResult, JobResult, RevocationRule, World};
 use crate::util::rng::Rng;
 
 use super::tables::Panel;
@@ -53,9 +53,9 @@ impl Default for Fig1Options {
     }
 }
 
-/// Which x-axis a sweep varies.
+/// Which x-axis a Fig. 1 sweep varies.
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Sweep {
+pub enum Axis {
     /// Fig. 1a/1d — job execution length, fixed 16 GB
     Length,
     /// Fig. 1b/1e — memory footprint, fixed 8 h
@@ -106,27 +106,28 @@ impl Fig1Runner {
         self.sim_start + r.f64() * span
     }
 
-    /// Run one bar: (job, arm, rule) × seeds.
+    /// Run one bar: (job, arm, rule) × seeds.  Each seed gets its own
+    /// start offset in the held-out window, so the bar is a
+    /// seed-replicated [`Scenario`] rather than one `replicate` call.
     pub fn bar(&self, job: &Job, arm: &Arm, rule: RevocationRule) -> AggregateResult {
+        let base = Scenario::on(&self.world)
+            .job(job.clone())
+            .policy(arm.policy)
+            .ft(arm.ft)
+            .rule(rule);
         let seeds: Vec<u64> = (0..self.opts.seeds).collect();
         let runs: Vec<JobResult> = self.pool.map(seeds, |_, seed| {
-            let cfg = RunConfig {
-                rule,
-                start_t: self.start_for(seed, job.exec_len_h),
-                ..Default::default()
-            };
-            let mut policy = arm.policy.make();
-            let ft = arm.ft.make(job);
-            simulate_job(&self.world, policy.as_mut(), ft.as_ref(), job, &cfg, seed)
+            base.clone().start_t(self.start_for(seed, job.exec_len_h)).seed(seed).run()
         });
         AggregateResult::from_runs(&runs)
     }
 
-    /// Run a full sweep; returns (x-label, arm-label, aggregate) rows.
-    pub fn sweep(&self, sweep: Sweep) -> Vec<(String, String, AggregateResult)> {
+    /// Run a full sweep along one axis; returns (x-label, arm-label,
+    /// aggregate) rows.
+    pub fn sweep(&self, axis: Axis) -> Vec<(String, String, AggregateResult)> {
         let mut out = Vec::new();
-        match sweep {
-            Sweep::Length => {
+        match axis {
+            Axis::Length => {
                 for &len in paper::LENGTHS_H {
                     let job = Job::new(0, len, paper::FIXED_MEM_GB);
                     for (arm, forced) in arms() {
@@ -139,7 +140,7 @@ impl Fig1Runner {
                     }
                 }
             }
-            Sweep::Memory => {
+            Axis::Memory => {
                 for &mem in paper::MEMS_GB {
                     let job = Job::new(0, paper::FIXED_LEN_H, mem);
                     for (arm, forced) in arms() {
@@ -156,7 +157,7 @@ impl Fig1Runner {
                     }
                 }
             }
-            Sweep::Revocations => {
+            Axis::Revocations => {
                 let job = Job::new(0, paper::FIXED_LEN_H, paper::FIXED_MEM_GB);
                 for &n in paper::REVOCATIONS {
                     for (arm, forced) in arms() {
@@ -198,9 +199,9 @@ impl Fig1Runner {
 
     /// Run every panel of Fig. 1, returning (panel-id, Panel).
     pub fn run_all(&self) -> Vec<(char, Panel)> {
-        let lens = self.sweep(Sweep::Length);
-        let mems = self.sweep(Sweep::Memory);
-        let revs = self.sweep(Sweep::Revocations);
+        let lens = self.sweep(Axis::Length);
+        let mems = self.sweep(Axis::Memory);
+        let revs = self.sweep(Axis::Revocations);
         vec![
             ('a', self.panel(&lens, 'a', false)),
             ('b', self.panel(&mems, 'b', false)),
@@ -249,7 +250,7 @@ mod tests {
     #[test]
     fn length_sweep_shapes_hold() {
         let r = Fig1Runner::prepare(small_opts());
-        let rows = r.sweep(Sweep::Length);
+        let rows = r.sweep(Axis::Length);
         assert_eq!(rows.len(), 5 * 3);
         for &len in paper::LENGTHS_H {
             let x = format!("{len}h");
@@ -284,7 +285,7 @@ mod tests {
     #[test]
     fn revocation_sweep_exact_counts() {
         let r = Fig1Runner::prepare(small_opts());
-        let rows = r.sweep(Sweep::Revocations);
+        let rows = r.sweep(Axis::Revocations);
         for &n in paper::REVOCATIONS {
             let f = find(&rows, &format!("{n}"), "F");
             assert!(
@@ -305,7 +306,7 @@ mod tests {
     #[test]
     fn panels_render() {
         let r = Fig1Runner::prepare(Fig1Options { seeds: 2, markets: 48, months: 1.0, ..small_opts() });
-        let rows = r.sweep(Sweep::Length);
+        let rows = r.sweep(Axis::Length);
         let p = r.panel(&rows, 'a', false);
         let txt = p.render(40);
         assert!(txt.contains("Fig 1a"));

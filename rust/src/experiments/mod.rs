@@ -6,5 +6,5 @@ pub mod fig1;
 pub mod sensitivity;
 pub mod tables;
 
-pub use fig1::{Fig1Options, Fig1Runner, Sweep};
+pub use fig1::{Axis, Fig1Options, Fig1Runner};
 pub use tables::Panel;

@@ -11,11 +11,10 @@
 //! strongest.
 
 use crate::coordinator::Pool;
-use crate::ft::{Checkpointing, NoFt};
 use crate::job::Job;
 use crate::market::{Catalog, TraceGenConfig};
-use crate::policy::{FtSpotPolicy, OnDemandPolicy, PSiwoft};
-use crate::sim::{simulate_job, AggregateResult, RevocationRule, RunConfig, World};
+use crate::scenario::{FtKind, PolicyKind, Scenario};
+use crate::sim::{AggregateResult, RevocationRule, World};
 
 #[derive(Clone, Debug)]
 pub struct RatioPoint {
@@ -42,8 +41,9 @@ pub fn ratio_sweep(
     seed: u64,
     seeds: u64,
     ft_rate_per_day: f64,
+    workers: usize,
 ) -> Vec<RatioPoint> {
-    let pool = Pool::new(0);
+    let pool = Pool::new(workers);
     let job = Job::new(0, 8.0, 16.0);
     ratios
         .iter()
@@ -54,28 +54,16 @@ pub fn ratio_sweep(
             let mut world = World::new(catalog, trace);
             let start = world.split_train(0.67);
 
-            let run = |arm: char, s: u64| {
-                let (rule, ft): (_, Box<dyn crate::ft::FtMechanism>) = match arm {
-                    'F' => (
-                        RevocationRule::ForcedRate { per_day: ft_rate_per_day },
-                        Box::new(Checkpointing::hourly(job.exec_len_h)),
-                    ),
-                    _ => (RevocationRule::Trace, Box::new(NoFt)),
-                };
-                let cfg = RunConfig { rule, start_t: start, ..Default::default() };
-                let mut policy: Box<dyn crate::policy::Policy> = match arm {
-                    'P' => Box::new(PSiwoft::default()),
-                    'F' => Box::new(FtSpotPolicy::new()),
-                    _ => Box::new(OnDemandPolicy),
-                };
-                simulate_job(&world, policy.as_mut(), ft.as_ref(), &job, &cfg, s)
-            };
-            let agg = |arm: char| {
-                AggregateResult::from_runs(
-                    &pool.map((0..seeds).collect(), |_, s| run(arm, s)),
-                )
-            };
-            RatioPoint { ratio, p: agg('P'), f: agg('F'), o: agg('O') }
+            let base = Scenario::on(&world).job(job.clone()).start_t(start);
+            let p = base.clone().replicate_on(&pool, seeds);
+            let f = base
+                .clone()
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::CheckpointHourly)
+                .rule(RevocationRule::ForcedRate { per_day: ft_rate_per_day })
+                .replicate_on(&pool, seeds);
+            let o = base.policy(PolicyKind::OnDemand).replicate_on(&pool, seeds);
+            RatioPoint { ratio, p, f, o }
         })
         .collect()
 }
@@ -91,7 +79,7 @@ mod tests {
 
     #[test]
     fn ratios_order_costs() {
-        let pts = ratio_sweep(&[0.2, 0.6], 64, 31, 4, 3.0);
+        let pts = ratio_sweep(&[0.2, 0.6], 64, 31, 4, 3.0, 2);
         assert_eq!(pts.len(), 2);
         // deeper discount → cheaper P in absolute terms
         assert!(pts[0].p.cost_usd() < pts[1].p.cost_usd());
@@ -106,7 +94,7 @@ mod tests {
     #[test]
     fn crossover_found_at_high_ratios_under_heavy_revocation() {
         // the Fig. 1f regime: high revocation pressure on the F arm
-        let pts = ratio_sweep(&[0.3, 0.5, 0.7], 64, 32, 4, 8.0);
+        let pts = ratio_sweep(&[0.3, 0.5, 0.7], 64, 32, 4, 8.0, 2);
         let x = crossover(&pts);
         assert!(x.is_some(), "no F/O crossover found up to 0.7: {:?}",
                 pts.iter().map(|p| (p.ratio, p.f_over_o())).collect::<Vec<_>>());

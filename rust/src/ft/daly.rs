@@ -56,9 +56,8 @@ impl FtMechanism for DalyCheckpointing {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ft::Checkpointing;
-    use crate::policy::FtSpotPolicy;
-    use crate::sim::{simulate_job, RevocationRule, RunConfig, World};
+    use crate::scenario::{FtKind, PolicyKind, Scenario};
+    use crate::sim::{RevocationRule, World};
 
     #[test]
     fn interval_follows_youngs_formula() {
@@ -93,19 +92,22 @@ mod tests {
         // schedule loses big chunks; Daly picks a much shorter interval.
         let mut world = World::generate(96, 2.0, 313);
         let start = world.split_train(0.6);
-        let job = Job::new(1, 8.0, 16.0);
-        let cfg = RunConfig {
-            rule: RevocationRule::ForcedRate { per_day: 12.0 }, // MTTR ≈ 2h
-            start_t: start,
-            ..Default::default()
-        };
+        let base = Scenario::on(&world)
+            .job(Job::new(1, 8.0, 16.0))
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedRate { per_day: 12.0 }) // MTTR ≈ 2h
+            .start_t(start);
         let (mut t_daly, mut t_fixed) = (0.0, 0.0);
         for seed in 0..8 {
-            let mut p1 = FtSpotPolicy::new();
-            let daly = DalyCheckpointing::new(2.0);
-            t_daly += simulate_job(&world, &mut p1, &daly, &job, &cfg, seed).completion_h();
-            let mut p2 = FtSpotPolicy::new();
-            t_fixed += simulate_job(&world, &mut p2, &Checkpointing::new(1), &job, &cfg, seed)
+            t_daly += base
+                .clone()
+                .ft(FtKind::Daly { expected_mttr_h: 2.0 })
+                .run_seeded(seed)
+                .completion_h();
+            t_fixed += base
+                .clone()
+                .ft(FtKind::Checkpoint { n: 1 })
+                .run_seeded(seed)
                 .completion_h();
         }
         assert!(

@@ -30,13 +30,14 @@ pub mod job;
 pub mod market;
 pub mod policy;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 
 /// Convenience prelude for examples and benches.
 pub mod prelude {
-    pub use crate::coordinator::{paper_arms, Arm, Coordinator, FtKind, Pool, PolicyKind};
-    pub use crate::experiments::{Fig1Options, Fig1Runner, Panel, Sweep};
+    pub use crate::coordinator::{paper_arms, Arm, Coordinator, Pool};
+    pub use crate::experiments::{Axis, Fig1Options, Fig1Runner, Panel};
     pub use crate::ft::{Checkpointing, FtMechanism, Migration, NoFt, Replication};
     pub use crate::job::{Job, JobProgress};
     pub use crate::market::{Catalog, MarketAnalytics, PriceTrace, TraceGenConfig};
@@ -44,7 +45,8 @@ pub mod prelude {
         Decision, FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy,
     };
     pub use crate::runtime::AnalyticsEngine;
-    pub use crate::sim::{
-        simulate_job, AggregateResult, Category, JobResult, RevocationRule, RunConfig, World,
-    };
+    pub use crate::scenario::{FtKind, PolicyKind, Scenario, Sweep, SweepPoint, SweepRow};
+    #[allow(deprecated)] // legacy shim kept importable for external migrators
+    pub use crate::sim::simulate_job;
+    pub use crate::sim::{AggregateResult, Category, JobResult, RevocationRule, RunConfig, World};
 }

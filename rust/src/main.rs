@@ -19,12 +19,13 @@
 
 use std::process::ExitCode;
 
-use siwoft::coordinator::{paper_arms, Arm, Coordinator, FtKind, PolicyKind, Server};
+use siwoft::coordinator::{paper_arms, Coordinator, Pool, Server};
 use siwoft::experiments::{ablation, Fig1Options, Fig1Runner};
 use siwoft::job::Job;
 use siwoft::market::{Catalog, MarketAnalytics, PriceTrace, TraceGenConfig};
 use siwoft::runtime::AnalyticsEngine;
-use siwoft::sim::{RevocationRule, RunConfig, World};
+use siwoft::scenario::{FtKind, PolicyKind, Scenario};
+use siwoft::sim::{RevocationRule, World};
 use siwoft::util::cli::CommandSpec;
 use siwoft::util::csvio;
 use siwoft::util::json::Json;
@@ -237,19 +238,20 @@ fn simulate(raw: &[String]) -> Result<(), String> {
     let spec = CommandSpec::new("simulate", "run one job under a policy/ft pair")
         .opt("len", "8", "job execution length (hours)")
         .opt("mem", "16", "job memory footprint (GB)")
-        .opt("policy", "p", "p | ft | ondemand | greedy")
-        .opt("ft", "none", "none | checkpoint | ckpt:<n> | migration | repl:<k>")
+        .opt("policy", "p", "p | ft | ondemand | greedy | predictive")
+        .opt("ft", "none", "none | checkpoint | ckpt:<n> | migration | repl:<k> | daly[:<mttr_h>]")
         .opt("rule", "trace", "trace | rate:<per_day> | count:<n>")
         .opt("markets", "192", "market count")
         .opt("months", "3", "trace months")
         .opt("seed", "2020", "world seed")
         .opt("seeds", "5", "runs to average")
         .opt("train-frac", "0.67", "fraction of trace used for analytics")
-        .opt("artifacts", "artifacts", "AOT artifacts dir");
+        .opt("artifacts", "artifacts", "AOT artifacts dir")
+        .workers_opt();
     let a = spec.parse(raw)?;
     let policy = PolicyKind::parse(a.str("policy")).ok_or("unknown --policy")?;
     let ft = FtKind::parse(a.str("ft")).ok_or("unknown --ft")?;
-    let rule = parse_rule(a.str("rule"))?;
+    let rule = RevocationRule::parse(a.str("rule"))?;
 
     let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
     let start = world.split_train(a.f64("train-frac")?);
@@ -259,11 +261,15 @@ fn simulate(raw: &[String]) -> Result<(), String> {
     if let Ok(ana) = engine.compute(&train, &world.od) {
         world.analytics = ana;
     }
-    let coordinator = Coordinator::new_without_epoch(world);
     let job = Job::new(1, a.f64("len")?, a.f64("mem")?);
-    let arm = Arm { label: "cli", policy, ft };
-    let cfg = RunConfig { rule, start_t: start, ..Default::default() };
-    let agg = coordinator.run_seeds(&job, &arm, &cfg, a.u64("seeds")?);
+    let pool = Pool::new(a.workers()?);
+    let agg = Scenario::on(&world)
+        .job(job.clone())
+        .policy(policy)
+        .ft(ft)
+        .rule(rule)
+        .start_t(start)
+        .replicate_on(&pool, a.u64("seeds")?);
     println!(
         "policy={} ft={} job(len={}h mem={}GB) over {} seeds [{} backend]",
         a.str("policy"),
@@ -295,18 +301,6 @@ fn simulate(raw: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn parse_rule(s: &str) -> Result<RevocationRule, String> {
-    if s == "trace" {
-        Ok(RevocationRule::Trace)
-    } else if let Some(r) = s.strip_prefix("rate:") {
-        Ok(RevocationRule::ForcedRate { per_day: r.parse().map_err(|_| "bad rate")? })
-    } else if let Some(n) = s.strip_prefix("count:") {
-        Ok(RevocationRule::ForcedCount { total: n.parse().map_err(|_| "bad count")? })
-    } else {
-        Err(format!("unknown --rule '{s}'"))
-    }
-}
-
 fn fig1(raw: &[String]) -> Result<(), String> {
     let spec = CommandSpec::new("fig1", "reproduce the paper's Fig. 1")
         .opt("panel", "all", "a|b|c|d|e|f|all")
@@ -317,7 +311,8 @@ fn fig1(raw: &[String]) -> Result<(), String> {
         .opt("rate", "3", "forced revocations/day for the F arm")
         .opt("out", "results", "output dir")
         .opt("format", "csv", "output format: csv | json")
-        .opt("width", "46", "bar width (chars)");
+        .opt("width", "46", "bar width (chars)")
+        .workers_opt();
     let a = spec.parse(raw)?;
     let opts = Fig1Options {
         markets: a.usize("markets")?,
@@ -326,7 +321,7 @@ fn fig1(raw: &[String]) -> Result<(), String> {
         seeds: a.u64("seeds")?,
         ft_rate_per_day: a.f64("rate")?,
         train_frac: 0.67,
-        workers: 0,
+        workers: a.workers()?,
     };
     let runner = Fig1Runner::prepare(opts);
     let width = a.usize("width")?;
@@ -351,11 +346,13 @@ fn run_ablation(raw: &[String]) -> Result<(), String> {
         .opt("seed", "2020", "world seed")
         .opt("seeds", "8", "runs per point")
         .opt("out", "results", "output dir")
-        .opt("format", "csv", "output format: csv | json");
+        .opt("format", "csv", "output format: csv | json")
+        .workers_opt();
     let a = spec.parse(raw)?;
     let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
     let start = world.split_train(0.67);
     let seeds = a.u64("seeds")?;
+    let workers = a.workers()?;
     let which = a.str("which");
 
     let emit_series = |name: &str, series: &ablation::Series| -> Result<(), String> {
@@ -379,19 +376,22 @@ fn run_ablation(raw: &[String]) -> Result<(), String> {
     };
 
     if which == "all" || which == "ckpt" {
-        emit_series("ckpt", &ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64]))?;
+        emit_series(
+            "ckpt",
+            &ablation::checkpoint_sweep(&world, start, seeds, &[1, 2, 4, 8, 16, 32, 64], workers),
+        )?;
     }
     if which == "all" || which == "repl" {
-        emit_series("repl", &ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5]))?;
+        emit_series("repl", &ablation::replication_sweep(&world, start, seeds, &[1, 2, 3, 4, 5], workers))?;
     }
     if which == "all" || which == "corr" {
-        emit_series("corr", &ablation::corr_filter_ablation(&world, start, seeds))?;
+        emit_series("corr", &ablation::corr_filter_ablation(&world, start, seeds, workers))?;
     }
     if which == "all" || which == "greedy" {
-        emit_series("greedy", &ablation::greedy_vs_psiwoft(&world, start, seeds))?;
+        emit_series("greedy", &ablation::greedy_vs_psiwoft(&world, start, seeds, workers))?;
     }
     if which == "all" || which == "baselines" {
-        emit_series("baselines", &ablation::analytics_baselines(&world, start, seeds))?;
+        emit_series("baselines", &ablation::analytics_baselines(&world, start, seeds, workers))?;
     }
     Ok(())
 }
@@ -404,7 +404,8 @@ fn sensitivity(raw: &[String]) -> Result<(), String> {
         .opt("seeds", "8", "runs per point")
         .opt("rate", "8", "forced revocations/day for the F arm")
         .opt("out", "results", "output dir")
-        .opt("format", "csv", "output format: csv | json");
+        .opt("format", "csv", "output format: csv | json")
+        .workers_opt();
     let a = spec.parse(raw)?;
     let ratios = a.f64_list("ratios")?;
     let pts = siwoft::experiments::sensitivity::ratio_sweep(
@@ -413,6 +414,7 @@ fn sensitivity(raw: &[String]) -> Result<(), String> {
         a.u64("seed")?,
         a.u64("seeds")?,
         a.f64("rate")?,
+        a.workers()?,
     );
     println!(
         "{:<8} {:>10} {:>10} {:>10} {:>8} {:>8}",
@@ -457,7 +459,8 @@ fn tables(raw: &[String]) -> Result<(), String> {
         .opt("seeds", "10", "runs per arm")
         .opt("rate", "3", "forced revocations/day for the F arm")
         .opt("out", "results", "output dir")
-        .opt("format", "csv", "output format: csv | json");
+        .opt("format", "csv", "output format: csv | json")
+        .workers_opt();
     let a = spec.parse(raw)?;
     let rate = a.f64("rate")?;
     let opts = Fig1Options {
@@ -467,7 +470,7 @@ fn tables(raw: &[String]) -> Result<(), String> {
         seeds: a.u64("seeds")?,
         ft_rate_per_day: rate,
         train_frac: 0.67,
-        workers: 0,
+        workers: a.workers()?,
     };
     let runner = Fig1Runner::prepare(opts);
     let job = Job::new(0, a.f64("len")?, a.f64("mem")?);
@@ -511,9 +514,7 @@ fn tables(raw: &[String]) -> Result<(), String> {
 }
 
 fn bench_quick(raw: &[String]) -> Result<(), String> {
-    use siwoft::ft::NoFt;
     use siwoft::policy::{Ctx, FtSpotPolicy, PSiwoft, Policy};
-    use siwoft::sim::simulate_job;
     use siwoft::util::benchkit::{Bench, Suite};
     let spec = CommandSpec::new("bench", "quick in-binary micro-benchmarks")
         .opt("markets", "96", "market count")
@@ -544,11 +545,8 @@ fn bench_quick(raw: &[String]) -> Result<(), String> {
         let mut p = FtSpotPolicy::new();
         p.select(&job, &Ctx { world: &world, now: start }).market()
     }));
-    suite.push(bench.run("simulate: P + no-ft, 8h/16GB job (trace)", || {
-        let mut p = PSiwoft::default();
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-        simulate_job(&world, &mut p, &NoFt, &job, &cfg, 1)
-    }));
+    let scen = Scenario::on(&world).job(job.clone()).start_t(start).seed(1);
+    suite.push(bench.run("simulate: P + no-ft, 8h/16GB job (trace)", || scen.run()));
     let path = emit(a.str("out"), "bench_quick", &suite.to_csv(), a.str("format"))?;
     println!("wrote {path}");
     Ok(())
@@ -565,7 +563,7 @@ fn cluster(raw: &[String]) -> Result<(), String> {
         .opt("horizon", "240", "simulated horizon (hours)")
         .opt("refresh", "24", "analytics refresh cadence (hours)")
         .opt("window", "720", "trailing analytics window (hours)")
-        .opt("policy", "p", "p | ft | ondemand | greedy")
+        .opt("policy", "p", "p | ft | ondemand | greedy | predictive")
         .opt("artifacts", "artifacts", "AOT artifacts dir");
     let a = spec.parse(raw)?;
     let policy = PolicyKind::parse(a.str("policy")).ok_or("unknown --policy")?;
@@ -586,7 +584,7 @@ fn cluster(raw: &[String]) -> Result<(), String> {
     let report = run_cluster(
         &mut world,
         &cfg,
-        || policy.make(),
+        policy,
         |w, h0, h1| {
             let win = w.trace.window(h0, h1.max(h0 + 2));
             engine
@@ -664,12 +662,12 @@ fn serve(raw: &[String]) -> Result<(), String> {
         .opt("markets", "192", "market count")
         .opt("months", "3", "trace months")
         .opt("seed", "2020", "world seed")
-        .opt("workers", "0", "worker threads (0 = cores)")
-        .opt("artifacts", "artifacts", "AOT artifacts dir");
+        .opt("artifacts", "artifacts", "AOT artifacts dir")
+        .workers_opt();
     let a = spec.parse(raw)?;
     let world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
     let engine = AnalyticsEngine::auto(a.str("artifacts"));
-    let coordinator = Coordinator::new(world, engine, a.usize("workers")?);
+    let coordinator = Coordinator::new(world, engine, a.workers()?);
     let server = Server::new(coordinator);
     server
         .serve(a.str("addr"), |addr| println!("listening on {addr} — JSON lines: submit/status/shutdown"))

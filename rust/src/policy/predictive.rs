@@ -16,7 +16,7 @@ use super::{Ctx, Decision, Policy};
 use crate::job::Job;
 use crate::market::analytics::SurvivalCurves;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PredictiveConfig {
     /// minimum acceptable survival probability over the job length
     pub confidence: f32,
@@ -115,8 +115,8 @@ impl Policy for PredictivePolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ft::NoFt;
-    use crate::sim::{simulate_job, RevocationRule, RunConfig, World};
+    use crate::scenario::{PolicyKind, Scenario};
+    use crate::sim::World;
 
     fn world() -> (World, f64) {
         let mut w = World::generate(96, 2.0, 808);
@@ -175,9 +175,12 @@ mod tests {
     fn completes_jobs_end_to_end() {
         let (w, start) = world();
         let job = Job::new(4, 8.0, 16.0);
-        let mut p = PredictivePolicy::from_world_trained(&w, start as usize);
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 3);
+        let r = Scenario::on(&w)
+            .job(job)
+            .policy(PolicyKind::Predictive(PredictiveConfig::default()))
+            .start_t(start)
+            .seed(3)
+            .run();
         assert!(r.completed);
         assert!(r.completion_h() >= 8.0);
     }

@@ -1,0 +1,230 @@
+//! The `Scenario` builder: one fully-specified simulation point.
+//!
+//! A scenario is the unit every experiment in the paper is made of —
+//! *this* job, under *this* policy and FT mechanism, revoked by *this*
+//! rule, starting at *this* trace offset, with *this* seed.  The
+//! builder owns the construction that call sites used to hand-roll
+//! (policy/FT instantiation, `RunConfig` literals, seed-replication
+//! loops) and funnels everything into the one session-simulator engine
+//! in `sim::run`.
+
+use std::sync::OnceLock;
+
+use super::registry::{FtKind, PolicyKind};
+use crate::coordinator::Pool;
+use crate::job::Job;
+use crate::market::analytics::SurvivalCurves;
+use crate::policy::{Policy, PredictivePolicy};
+use crate::sim::run::execute;
+use crate::sim::{AggregateResult, JobResult, RevocationRule, RunConfig, World};
+
+/// A fully-specified simulation point, ready to run or replicate.
+///
+/// Defaults: the paper's fixed job point (8 h / 16 GB), P-SIWOFT with
+/// no FT mechanism, trace-driven revocations, trace start 0, seed 0.
+#[derive(Clone, Debug)]
+pub struct Scenario<'w> {
+    world: &'w World,
+    job: Job,
+    policy: PolicyKind,
+    ft: FtKind,
+    cfg: RunConfig,
+    seed: u64,
+    /// `Predictive` training is a pure function of (world, start_t), so
+    /// replicates share one fit instead of retraining per seed; the
+    /// `start_t`/`config` setters invalidate it.
+    curves: OnceLock<SurvivalCurves>,
+}
+
+impl<'w> Scenario<'w> {
+    /// Start building a scenario against `world`.
+    pub fn on(world: &'w World) -> Scenario<'w> {
+        Scenario {
+            world,
+            job: Job::new(0, 8.0, 16.0),
+            policy: PolicyKind::default(),
+            ft: FtKind::default(),
+            cfg: RunConfig::default(),
+            seed: 0,
+            curves: OnceLock::new(),
+        }
+    }
+
+    pub fn job(mut self, job: Job) -> Self {
+        self.job = job;
+        self
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn ft(mut self, ft: FtKind) -> Self {
+        self.ft = ft;
+        self
+    }
+
+    pub fn rule(mut self, rule: RevocationRule) -> Self {
+        self.cfg.rule = rule;
+        self
+    }
+
+    /// Simulation start hour within the trace window.
+    pub fn start_t(mut self, start_t: f64) -> Self {
+        if self.cfg.start_t != start_t {
+            self.curves = OnceLock::new();
+        }
+        self.cfg.start_t = start_t;
+        self
+    }
+
+    /// Safety valve: abort after this many sessions (marks `!completed`).
+    pub fn max_sessions(mut self, max_sessions: u32) -> Self {
+        self.cfg.max_sessions = max_sessions;
+        self
+    }
+
+    /// Replace the whole run configuration at once (rule + start +
+    /// session cap).
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        if self.cfg.start_t != cfg.start_t {
+            self.curves = OnceLock::new();
+        }
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Pre-seed the survival-curve cache with an already-trained fit
+    /// (used by `Sweep` to share one fit across every point of a
+    /// sweep — they all see the same world and start).  No-op if the
+    /// cache is already populated.
+    pub(crate) fn with_curves(self, curves: SurvivalCurves) -> Self {
+        let _ = self.curves.set(curves);
+        self
+    }
+
+    // -- accessors (used by sweeps and result labelling) ---------------
+
+    pub fn world(&self) -> &'w World {
+        self.world
+    }
+    pub fn job_ref(&self) -> &Job {
+        &self.job
+    }
+    pub fn policy_kind(&self) -> PolicyKind {
+        self.policy
+    }
+    pub fn ft_kind(&self) -> FtKind {
+        self.ft
+    }
+    pub fn run_config(&self) -> RunConfig {
+        self.cfg
+    }
+
+    /// Run the scenario once with its configured seed.
+    pub fn run(&self) -> JobResult {
+        self.run_seeded(self.seed)
+    }
+
+    /// Run the scenario once with an explicit seed (the configured seed
+    /// is ignored; everything else is reused).
+    pub fn run_seeded(&self, seed: u64) -> JobResult {
+        let mut policy: Box<dyn Policy> = match self.policy {
+            // share one survival-curve fit across every seed of this
+            // point (the fit ignores the seed); `get_or_init` also
+            // makes concurrent pool workers wait for one training run
+            PolicyKind::Predictive(cfg) => {
+                let curves = self.curves.get_or_init(|| {
+                    PolicyKind::train_survival_curves(self.world, self.cfg.start_t)
+                });
+                Box::new(PredictivePolicy::new(curves.clone(), cfg))
+            }
+            kind => kind.build(self.world, self.cfg.start_t),
+        };
+        let ft = self.ft.build(&self.job);
+        execute(self.world, policy.as_mut(), ft.as_ref(), &self.job, &self.cfg, seed)
+    }
+
+    /// Run `n_seeds` replicates (seeds `seed .. seed + n_seeds`),
+    /// serially, aggregated into one figure bar.
+    pub fn replicate(&self, n_seeds: u64) -> AggregateResult {
+        let runs: Vec<JobResult> = (0..n_seeds).map(|i| self.run_seeded(self.seed + i)).collect();
+        AggregateResult::from_runs(&runs)
+    }
+
+    /// Like [`Scenario::replicate`] but fanned out over `pool`.
+    /// `Pool::map` preserves submission order and each run is a pure
+    /// function of its seed, so the aggregate is identical for any
+    /// worker count.
+    pub fn replicate_on(&self, pool: &Pool, n_seeds: u64) -> AggregateResult {
+        let runs: Vec<JobResult> =
+            pool.map((0..n_seeds).collect(), |_, i| self.run_seeded(self.seed + i));
+        AggregateResult::from_runs(&runs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Category;
+
+    fn world() -> World {
+        World::generate(48, 1.0, 11)
+    }
+
+    #[test]
+    fn run_defaults_complete() {
+        let w = world();
+        let r = Scenario::on(&w).job(Job::new(1, 4.0, 16.0)).seed(2).run();
+        assert!(r.completed);
+        assert!((r.ledger.time.get(Category::Useful) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replicate_matches_manual_seed_loop() {
+        let w = world();
+        let scen = Scenario::on(&w)
+            .job(Job::new(2, 3.0, 16.0))
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Checkpoint { n: 3 })
+            .rule(RevocationRule::ForcedRate { per_day: 4.0 })
+            .seed(5);
+        let agg = scen.replicate(4);
+        assert_eq!(agg.n, 4);
+        let manual: Vec<JobResult> = (5..9).map(|s| scen.run_seeded(s)).collect();
+        let manual_agg = AggregateResult::from_runs(&manual);
+        assert_eq!(agg, manual_agg);
+    }
+
+    #[test]
+    fn replicate_on_pool_matches_serial() {
+        let w = world();
+        let scen = Scenario::on(&w)
+            .job(Job::new(3, 3.0, 16.0))
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::CheckpointHourly)
+            .rule(RevocationRule::ForcedCount { total: 2 });
+        let serial = scen.replicate(6);
+        let pooled = scen.replicate_on(&Pool::new(4), 6);
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn config_setters_land_in_run_config() {
+        let w = world();
+        let scen = Scenario::on(&w)
+            .rule(RevocationRule::ForcedCount { total: 3 })
+            .start_t(12.5)
+            .max_sessions(77);
+        let cfg = scen.run_config();
+        assert_eq!(cfg.rule, RevocationRule::ForcedCount { total: 3 });
+        assert_eq!(cfg.start_t, 12.5);
+        assert_eq!(cfg.max_sessions, 77);
+    }
+}

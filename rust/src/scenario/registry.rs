@@ -1,0 +1,248 @@
+//! Declarative policy / FT-mechanism registries.
+//!
+//! `PolicyKind` and `FtKind` are the *names* of the pluggable pieces: a
+//! kind can be parsed from a CLI/TOML string (`parse`) and instantiated
+//! into the trait object the simulator consumes (`build`).  Every layer
+//! that used to hand-match strings to constructors — the `siwoft`
+//! subcommands, the TOML configs under `rust/configs/`, the experiment
+//! drivers, the TCP control plane — goes through these two enums, so a
+//! new policy or mechanism is registered in exactly one place.
+
+use crate::ft::{
+    Checkpointing, DalyCheckpointing, FtMechanism, Migration, NoFt, Replication,
+};
+use crate::job::Job;
+use crate::market::analytics::SurvivalCurves;
+use crate::policy::{
+    FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy,
+    PredictiveConfig, PredictivePolicy,
+};
+use crate::sim::World;
+
+/// Declarative policy selection (so configs/CLI/benches can name them).
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[allow(clippy::derive_partial_eq_without_eq)]
+pub enum PolicyKind {
+    PSiwoft(PSiwoftConfig),
+    FtSpot,
+    OnDemand,
+    Greedy,
+    /// survival-probability baseline (ref. \[17\]); trains its curves on
+    /// the trace prefix `[0, start_t)` of the scenario it runs in
+    Predictive(PredictiveConfig),
+}
+
+impl Default for PolicyKind {
+    /// The paper's protagonist: P-SIWOFT with its default configuration.
+    fn default() -> Self {
+        PolicyKind::PSiwoft(PSiwoftConfig::default())
+    }
+}
+
+impl PolicyKind {
+    /// Instantiate the policy for a run starting at `start_t` in
+    /// `world`.  Most kinds ignore the context; `Predictive` uses it to
+    /// train its survival curves on the pre-`start_t` trace prefix
+    /// (mirroring `PredictivePolicy::from_world_trained`).
+    pub fn build(&self, world: &World, start_t: f64) -> Box<dyn Policy> {
+        match *self {
+            PolicyKind::PSiwoft(cfg) => Box::new(PSiwoft::new(cfg)),
+            PolicyKind::FtSpot => Box::new(FtSpotPolicy::new()),
+            PolicyKind::OnDemand => Box::new(OnDemandPolicy),
+            PolicyKind::Greedy => Box::new(GreedyCheapest::new()),
+            PolicyKind::Predictive(cfg) => {
+                let curves = PolicyKind::train_survival_curves(world, start_t);
+                Box::new(PredictivePolicy::new(curves, cfg))
+            }
+        }
+    }
+
+    /// The one training recipe behind every `Predictive` instantiation
+    /// (`build` and the `Scenario` per-point cache): survival curves
+    /// fitted on the trace prefix `[0, start_t)`, clamped into
+    /// `[min(2, hours), hours]` so short traces never produce an
+    /// invalid window (a zero-hour trace is degenerate everywhere in
+    /// the crate and still asserts inside `PriceTrace::window`).
+    pub(crate) fn train_survival_curves(world: &World, start_t: f64) -> SurvivalCurves {
+        let hours = world.trace.hours.max(1);
+        let train_h = (start_t as usize).clamp(2.min(hours), hours);
+        if (start_t as usize) < train_h {
+            crate::log_warn!(
+                "predictive training window floored to [0, {train_h}) but the scenario starts \
+                 at t={start_t}: the fit overlaps the evaluated hours (train/eval leakage); \
+                 give the scenario a start_t past the training prefix"
+            );
+        }
+        let train = world.trace.window(0, train_h);
+        SurvivalCurves::compute(&train, &world.od, SurvivalCurves::DEFAULT_T)
+    }
+
+    pub fn parse(name: &str) -> Option<PolicyKind> {
+        match name {
+            "p-siwoft" | "psiwoft" | "p" => Some(PolicyKind::PSiwoft(PSiwoftConfig::default())),
+            "ft-spot" | "ft" | "f" => Some(PolicyKind::FtSpot),
+            "on-demand" | "ondemand" | "o" => Some(PolicyKind::OnDemand),
+            "greedy" | "g" => Some(PolicyKind::Greedy),
+            "predictive" | "pred" => Some(PolicyKind::Predictive(PredictiveConfig::default())),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI/TOML name (the first alias `parse` accepts).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::PSiwoft(_) => "p-siwoft",
+            PolicyKind::FtSpot => "ft-spot",
+            PolicyKind::OnDemand => "on-demand",
+            PolicyKind::Greedy => "greedy",
+            PolicyKind::Predictive(_) => "predictive",
+        }
+    }
+
+    /// Every registered kind at its default configuration — the grid
+    /// axis used by the equivalence and round-trip suites.
+    pub fn all() -> Vec<PolicyKind> {
+        vec![
+            PolicyKind::PSiwoft(PSiwoftConfig::default()),
+            PolicyKind::FtSpot,
+            PolicyKind::OnDemand,
+            PolicyKind::Greedy,
+            PolicyKind::Predictive(PredictiveConfig::default()),
+        ]
+    }
+}
+
+/// Declarative FT-mechanism selection.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum FtKind {
+    /// P-SIWOFT's pairing: restart from scratch on revocation
+    #[default]
+    None,
+    Checkpoint {
+        n: u32,
+    },
+    /// SpotOn-style hourly checkpoints scaled to the job length
+    CheckpointHourly,
+    Migration,
+    Replication {
+        k: u32,
+    },
+    /// Young/Daly-optimal checkpoint interval for an expected MTTR
+    Daly {
+        expected_mttr_h: f64,
+    },
+}
+
+impl FtKind {
+    pub fn build(&self, job: &Job) -> Box<dyn FtMechanism> {
+        match *self {
+            FtKind::None => Box::new(NoFt),
+            FtKind::Checkpoint { n } => Box::new(Checkpointing::new(n)),
+            FtKind::CheckpointHourly => Box::new(Checkpointing::hourly(job.exec_len_h)),
+            FtKind::Migration => Box::new(Migration),
+            FtKind::Replication { k } => Box::new(Replication::new(k)),
+            FtKind::Daly { expected_mttr_h } => Box::new(DalyCheckpointing::new(expected_mttr_h)),
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<FtKind> {
+        match name {
+            "none" => Some(FtKind::None),
+            "checkpoint" | "ckpt" => Some(FtKind::CheckpointHourly),
+            "migration" | "migrate" => Some(FtKind::Migration),
+            "replication" | "repl" => Some(FtKind::Replication { k: 2 }),
+            "daly" => Some(FtKind::Daly { expected_mttr_h: 8.0 }),
+            _ => {
+                if let Some(n) = name.strip_prefix("ckpt:") {
+                    n.parse().ok().map(|n| FtKind::Checkpoint { n })
+                } else if let Some(k) = name.strip_prefix("repl:") {
+                    k.parse().ok().map(|k| FtKind::Replication { k })
+                } else if let Some(m) = name.strip_prefix("daly:") {
+                    m.parse().ok().map(|expected_mttr_h| FtKind::Daly { expected_mttr_h })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Canonical CLI/TOML name.
+    pub fn label(&self) -> String {
+        match *self {
+            FtKind::None => "none".to_string(),
+            FtKind::Checkpoint { n } => format!("ckpt:{n}"),
+            FtKind::CheckpointHourly => "checkpoint".to_string(),
+            FtKind::Migration => "migration".to_string(),
+            FtKind::Replication { k } => format!("repl:{k}"),
+            FtKind::Daly { expected_mttr_h } => format!("daly:{expected_mttr_h}"),
+        }
+    }
+
+    /// Every registered kind at a representative setting — the grid
+    /// axis used by the equivalence and round-trip suites.
+    pub fn all() -> Vec<FtKind> {
+        vec![
+            FtKind::None,
+            FtKind::Checkpoint { n: 4 },
+            FtKind::CheckpointHourly,
+            FtKind::Migration,
+            FtKind::Replication { k: 2 },
+            FtKind::Daly { expected_mttr_h: 8.0 },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_parse() {
+        assert_eq!(PolicyKind::parse("p"), Some(PolicyKind::PSiwoft(PSiwoftConfig::default())));
+        assert_eq!(PolicyKind::parse("ft"), Some(PolicyKind::FtSpot));
+        assert_eq!(PolicyKind::parse("ondemand"), Some(PolicyKind::OnDemand));
+        assert_eq!(
+            PolicyKind::parse("predictive"),
+            Some(PolicyKind::Predictive(PredictiveConfig::default()))
+        );
+        assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(FtKind::parse("ckpt:12"), Some(FtKind::Checkpoint { n: 12 }));
+        assert_eq!(FtKind::parse("repl:3"), Some(FtKind::Replication { k: 3 }));
+        assert_eq!(FtKind::parse("daly:2.5"), Some(FtKind::Daly { expected_mttr_h: 2.5 }));
+        assert_eq!(FtKind::parse("none"), Some(FtKind::None));
+        assert_eq!(FtKind::parse("zzz"), None);
+    }
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        for p in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(p.label()), Some(p), "policy label {}", p.label());
+        }
+        for f in FtKind::all() {
+            assert_eq!(FtKind::parse(&f.label()), Some(f), "ft label {}", f.label());
+        }
+    }
+
+    #[test]
+    fn defaults_are_the_paper_pairing() {
+        assert_eq!(PolicyKind::default(), PolicyKind::PSiwoft(PSiwoftConfig::default()));
+        assert_eq!(FtKind::default(), FtKind::None);
+    }
+
+    #[test]
+    fn build_produces_named_instances() {
+        let world = World::generate(24, 0.5, 3);
+        let job = Job::new(1, 4.0, 16.0);
+        for kind in PolicyKind::all() {
+            let p = kind.build(&world, 100.0);
+            assert!(!p.name().is_empty());
+        }
+        for kind in FtKind::all() {
+            let f = kind.build(&job);
+            assert!(!f.name().is_empty());
+        }
+        // degree flows through the registry
+        assert_eq!(FtKind::Replication { k: 3 }.build(&job).degree(), 3);
+        assert_eq!(FtKind::None.build(&job).degree(), 1);
+    }
+}

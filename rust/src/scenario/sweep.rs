@@ -1,0 +1,291 @@
+//! The `Sweep` type: a cartesian product of scenario axes fanned out
+//! over the worker pool.
+//!
+//! A sweep is what every figure panel and ablation series really is —
+//! (jobs × policies × fts × rules), each point replicated over `seeds`
+//! randomized runs.  Points are enumerated in a fixed order (jobs
+//! outermost, rules innermost) and executed at (point × seed)
+//! granularity through [`Pool::map`], which preserves submission order;
+//! results are therefore identical for any `workers` setting.
+
+use super::builder::Scenario;
+use super::registry::{FtKind, PolicyKind};
+use crate::coordinator::Pool;
+use crate::job::Job;
+use crate::sim::{AggregateResult, JobResult, RevocationRule, World};
+
+/// One point of the cartesian product.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPoint {
+    pub job: Job,
+    pub policy: PolicyKind,
+    pub ft: FtKind,
+    pub rule: RevocationRule,
+}
+
+/// One executed point: the aggregate bar plus the per-seed runs behind
+/// it (seed `i` of the row is `base_seed + i`).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub point: SweepPoint,
+    pub agg: AggregateResult,
+    pub runs: Vec<JobResult>,
+}
+
+/// Axes of a scenario sweep.
+///
+/// Defaults: no jobs (the one axis with no sensible default), P-SIWOFT
+/// only, no FT, trace-driven revocations, 1 seed, trace start 0,
+/// `workers = 0` (one per CPU core).
+#[derive(Clone, Debug)]
+pub struct Sweep<'w> {
+    world: &'w World,
+    jobs: Vec<Job>,
+    policies: Vec<PolicyKind>,
+    fts: Vec<FtKind>,
+    rules: Vec<RevocationRule>,
+    seeds: u64,
+    base_seed: u64,
+    start_t: f64,
+    max_sessions: u32,
+    workers: usize,
+}
+
+impl<'w> Sweep<'w> {
+    pub fn on(world: &'w World) -> Sweep<'w> {
+        Sweep {
+            world,
+            jobs: Vec::new(),
+            policies: vec![PolicyKind::default()],
+            fts: vec![FtKind::default()],
+            rules: vec![RevocationRule::Trace],
+            seeds: 1,
+            base_seed: 0,
+            start_t: 0.0,
+            max_sessions: crate::sim::RunConfig::default().max_sessions,
+            workers: 0,
+        }
+    }
+
+    /// Add one job to the job axis.
+    pub fn job(mut self, job: Job) -> Self {
+        self.jobs.push(job);
+        self
+    }
+
+    /// Replace the job axis.
+    pub fn jobs(mut self, jobs: impl IntoIterator<Item = Job>) -> Self {
+        self.jobs = jobs.into_iter().collect();
+        self
+    }
+
+    pub fn policies(mut self, policies: impl IntoIterator<Item = PolicyKind>) -> Self {
+        self.policies = policies.into_iter().collect();
+        self
+    }
+
+    pub fn fts(mut self, fts: impl IntoIterator<Item = FtKind>) -> Self {
+        self.fts = fts.into_iter().collect();
+        self
+    }
+
+    pub fn rules(mut self, rules: impl IntoIterator<Item = RevocationRule>) -> Self {
+        self.rules = rules.into_iter().collect();
+        self
+    }
+
+    /// Randomized replicates per point (seeds `base_seed .. base_seed + n`).
+    pub fn seeds(mut self, n: u64) -> Self {
+        self.seeds = n.max(1);
+        self
+    }
+
+    pub fn base_seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    pub fn start_t(mut self, start_t: f64) -> Self {
+        self.start_t = start_t;
+        self
+    }
+
+    pub fn max_sessions(mut self, max_sessions: u32) -> Self {
+        self.max_sessions = max_sessions;
+        self
+    }
+
+    /// Worker threads for the fan-out (0 = one per available CPU).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// The cartesian product, in execution order: jobs × policies × fts
+    /// × rules (rules vary fastest).
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let mut out =
+            Vec::with_capacity(self.jobs.len() * self.policies.len() * self.fts.len() * self.rules.len());
+        for job in &self.jobs {
+            for &policy in &self.policies {
+                for &ft in &self.fts {
+                    for &rule in &self.rules {
+                        out.push(SweepPoint { job: job.clone(), policy, ft, rule });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of sweep points — the rows [`Sweep::run`] returns.
+    pub fn len(&self) -> usize {
+        self.jobs.len() * self.policies.len() * self.fts.len() * self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total simulated runs: points × seeds.
+    pub fn total_runs(&self) -> usize {
+        self.len() * self.seeds as usize
+    }
+
+    /// Execute the sweep: every (point, seed) pair fanned out over the
+    /// pool, grouped back into one aggregated row per point.
+    pub fn run(&self) -> Vec<SweepRow> {
+        let points = self.points();
+        if points.is_empty() {
+            return Vec::new();
+        }
+        let seeds = self.seeds;
+        // The Predictive fit depends only on (world, start_t) — both
+        // sweep-wide constants — so train at most once and share the
+        // result across every point that needs it.
+        let shared_curves = self
+            .policies
+            .iter()
+            .any(|p| matches!(p, PolicyKind::Predictive(_)))
+            .then(|| PolicyKind::train_survival_curves(self.world, self.start_t));
+        // one Scenario per point, shared across its seeds, so per-point
+        // state (the pre-seeded curve cache) is never recomputed
+        let scenarios: Vec<Scenario<'_>> = points
+            .iter()
+            .map(|point| {
+                let scen = Scenario::on(self.world)
+                    .job(point.job.clone())
+                    .policy(point.policy)
+                    .ft(point.ft)
+                    .rule(point.rule)
+                    .start_t(self.start_t)
+                    .max_sessions(self.max_sessions);
+                match (&point.policy, &shared_curves) {
+                    (PolicyKind::Predictive(_), Some(curves)) => scen.with_curves(curves.clone()),
+                    _ => scen,
+                }
+            })
+            .collect();
+        let items: Vec<(usize, u64)> = (0..points.len())
+            .flat_map(|p| (0..seeds).map(move |s| (p, s)))
+            .collect();
+        let pool = Pool::new(self.workers);
+        let runs: Vec<JobResult> =
+            pool.map(items, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
+        runs.chunks(seeds as usize)
+            .zip(points)
+            .map(|(chunk, point)| SweepRow {
+                point,
+                agg: AggregateResult::from_runs(chunk),
+                runs: chunk.to_vec(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PSiwoftConfig;
+
+    fn world() -> (World, f64) {
+        let mut w = World::generate(48, 1.0, 19);
+        let start = w.split_train(0.6);
+        (w, start)
+    }
+
+    #[test]
+    fn cartesian_order_is_rules_fastest() {
+        let (w, start) = world();
+        let sweep = Sweep::on(&w)
+            .jobs([Job::new(1, 2.0, 16.0), Job::new(2, 3.0, 16.0)])
+            .policies([PolicyKind::PSiwoft(PSiwoftConfig::default()), PolicyKind::OnDemand])
+            .fts([FtKind::None])
+            .rules([RevocationRule::Trace, RevocationRule::ForcedCount { total: 1 }])
+            .start_t(start);
+        let pts = sweep.points();
+        assert_eq!(pts.len(), 8);
+        assert_eq!(sweep.len(), 8);
+        assert_eq!(sweep.total_runs(), 8); // seeds defaults to 1
+        assert_eq!(sweep.clone().seeds(3).total_runs(), 24);
+        assert_eq!(sweep.clone().seeds(3).len(), 8, "len() counts rows, not runs");
+        assert_eq!(pts[0].job.id, 1);
+        assert_eq!(pts[0].rule, RevocationRule::Trace);
+        assert_eq!(pts[1].rule, RevocationRule::ForcedCount { total: 1 });
+        assert_eq!(pts[2].policy, PolicyKind::OnDemand);
+        assert_eq!(pts[4].job.id, 2);
+    }
+
+    #[test]
+    fn empty_job_axis_runs_nothing() {
+        let (w, _) = world();
+        assert!(Sweep::on(&w).is_empty());
+        assert!(Sweep::on(&w).run().is_empty());
+    }
+
+    #[test]
+    fn rows_carry_seeds_runs_and_aggregate() {
+        let (w, start) = world();
+        let rows = Sweep::on(&w)
+            .job(Job::new(1, 2.0, 16.0))
+            .policies([PolicyKind::FtSpot])
+            .fts([FtKind::Checkpoint { n: 2 }])
+            .rules([RevocationRule::ForcedCount { total: 1 }])
+            .seeds(3)
+            .start_t(start)
+            .workers(1)
+            .run();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.runs.len(), 3);
+        assert_eq!(row.agg.n, 3);
+        assert_eq!(row.agg, AggregateResult::from_runs(&row.runs));
+        assert_eq!(row.agg.mean_revocations, 1.0);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let (w, start) = world();
+        let base = |workers| {
+            Sweep::on(&w)
+                .jobs([Job::new(1, 2.0, 16.0), Job::new(2, 4.0, 16.0)])
+                .policies([PolicyKind::default(), PolicyKind::FtSpot])
+                .fts([FtKind::None, FtKind::CheckpointHourly])
+                .rules([RevocationRule::Trace, RevocationRule::ForcedRate { per_day: 6.0 }])
+                .seeds(2)
+                .start_t(start)
+                .workers(workers)
+                .run()
+        };
+        let serial = base(1);
+        let parallel = base(4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.agg, b.agg);
+            for (x, y) in a.runs.iter().zip(&b.runs) {
+                assert_eq!(x.ledger, y.ledger);
+            }
+        }
+    }
+}

@@ -11,5 +11,7 @@ pub mod world;
 pub use accounting::{Breakdown, Category, Ledger, CATEGORIES};
 pub use engine::{Engine, Event, SimTime};
 pub use result::AggregateResult;
-pub use run::{simulate_job, JobResult, RevocationRule, RunConfig};
+#[allow(deprecated)] // legacy shim re-exported for external migrators
+pub use run::simulate_job;
+pub use run::{JobResult, RevocationRule, RunConfig};
 pub use world::World;

@@ -5,7 +5,7 @@ use super::accounting::{Breakdown, Category, CATEGORIES};
 use super::run::JobResult;
 
 /// Mean breakdowns over a set of runs (one figure bar).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct AggregateResult {
     pub n: usize,
     pub time: Breakdown,

@@ -40,7 +40,36 @@ pub enum RevocationRule {
     ForcedCount { total: u32 },
 }
 
-#[derive(Clone, Copy, Debug)]
+impl RevocationRule {
+    /// Parse the CLI/TOML spelling: `trace` | `rate:<per_day>` |
+    /// `count:<n>`.
+    pub fn parse(s: &str) -> Result<RevocationRule, String> {
+        if s == "trace" {
+            Ok(RevocationRule::Trace)
+        } else if let Some(r) = s.strip_prefix("rate:") {
+            Ok(RevocationRule::ForcedRate {
+                per_day: r.parse().map_err(|_| format!("bad rate '{r}'"))?,
+            })
+        } else if let Some(n) = s.strip_prefix("count:") {
+            Ok(RevocationRule::ForcedCount {
+                total: n.parse().map_err(|_| format!("bad count '{n}'"))?,
+            })
+        } else {
+            Err(format!("unknown --rule '{s}' (expected trace | rate:<per_day> | count:<n>)"))
+        }
+    }
+
+    /// Canonical CLI/TOML name (round-trips through [`RevocationRule::parse`]).
+    pub fn label(&self) -> String {
+        match *self {
+            RevocationRule::Trace => "trace".to_string(),
+            RevocationRule::ForcedRate { per_day } => format!("rate:{per_day}"),
+            RevocationRule::ForcedCount { total } => format!("count:{total}"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RunConfig {
     pub rule: RevocationRule,
     /// simulation start hour within the trace window
@@ -142,7 +171,28 @@ struct Carry {
 }
 
 /// Simulate one job under `policy` + `ft`.
+///
+/// Legacy free-function entry point, kept as a thin shim so external
+/// code migrates gracefully; `tests/scenario_equivalence.rs` pins it
+/// bit-identical to the builder path.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct runs with `siwoft::scenario::Scenario` (or fan out with `scenario::Sweep`) instead"
+)]
 pub fn simulate_job(
+    world: &World,
+    policy: &mut dyn Policy,
+    ft: &dyn FtMechanism,
+    job: &Job,
+    cfg: &RunConfig,
+    seed: u64,
+) -> JobResult {
+    execute(world, policy, ft, job, cfg, seed)
+}
+
+/// The session-simulator engine behind both [`simulate_job`] and the
+/// `scenario` layer.
+pub(crate) fn execute(
     world: &World,
     policy: &mut dyn Policy,
     ft: &dyn FtMechanism,
@@ -562,8 +612,7 @@ mod replicated {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ft::{Checkpointing, Migration, NoFt, Replication};
-    use crate::policy::{FtSpotPolicy, OnDemandPolicy, PSiwoft};
+    use crate::scenario::{FtKind, PolicyKind, Scenario};
 
     fn world() -> World {
         World::generate(64, 1.0, 77)
@@ -573,8 +622,7 @@ mod tests {
     fn ondemand_has_no_overhead_but_startup() {
         let w = world();
         let job = Job::new(1, 8.0, 16.0);
-        let mut p = OnDemandPolicy;
-        let r = simulate_job(&w, &mut p, &NoFt, &job, &RunConfig::default(), 1);
+        let r = Scenario::on(&w).job(job).policy(PolicyKind::OnDemand).seed(1).run();
         assert!(r.completed);
         assert_eq!(r.revocations, 0);
         assert_eq!(r.sessions, 1);
@@ -592,12 +640,13 @@ mod tests {
         let w = world();
         let job = Job::new(2, 6.0, 16.0);
         for seed in 0..5 {
-            let mut p = FtSpotPolicy::new();
-            let cfg = RunConfig {
-                rule: RevocationRule::ForcedRate { per_day: 6.0 },
-                ..Default::default()
-            };
-            let r = simulate_job(&w, &mut p, &Checkpointing::new(6), &job, &cfg, seed);
+            let r = Scenario::on(&w)
+                .job(job.clone())
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::Checkpoint { n: 6 })
+                .rule(RevocationRule::ForcedRate { per_day: 6.0 })
+                .seed(seed)
+                .run();
             assert!(r.completed, "seed {seed}");
             assert!(
                 (r.ledger.time.get(Category::Useful) - 6.0).abs() < 1e-6,
@@ -612,9 +661,13 @@ mod tests {
         let w = world();
         let job = Job::new(3, 8.0, 16.0);
         for &n in &[1u32, 2, 4, 8] {
-            let mut p = FtSpotPolicy::new();
-            let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: n }, ..Default::default() };
-            let r = simulate_job(&w, &mut p, &Checkpointing::new(8), &job, &cfg, 9);
+            let r = Scenario::on(&w)
+                .job(job.clone())
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::Checkpoint { n: 8 })
+                .rule(RevocationRule::ForcedCount { total: n })
+                .seed(9)
+                .run();
             assert!(r.completed);
             assert_eq!(r.revocations, n, "expected exactly {n} revocations");
         }
@@ -624,10 +677,14 @@ mod tests {
     fn checkpointing_bounds_reexec() {
         let w = world();
         let job = Job::new(4, 8.0, 16.0);
-        let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 4 }, ..Default::default() };
         // many checkpoints → re-exec bounded by interval per revocation
-        let mut p = FtSpotPolicy::new();
-        let r = simulate_job(&w, &mut p, &Checkpointing::new(16), &job, &cfg, 5);
+        let r = Scenario::on(&w)
+            .job(job)
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Checkpoint { n: 16 })
+            .rule(RevocationRule::ForcedCount { total: 4 })
+            .seed(5)
+            .run();
         let interval: f64 = 8.0 / 16.0;
         assert!(r.ledger.time.get(Category::Reexec) <= 4.0 * (interval + 1e-6) + 1e-6);
         assert!(r.ledger.time.get(Category::Checkpoint) > 0.0);
@@ -638,9 +695,12 @@ mod tests {
     fn no_ft_reexecutes_from_scratch() {
         let w = world();
         let job = Job::new(5, 4.0, 16.0);
-        let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 2 }, ..Default::default() };
-        let mut p = FtSpotPolicy::new();
-        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 3);
+        let r = Scenario::on(&w)
+            .job(job)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedCount { total: 2 })
+            .seed(3)
+            .run();
         assert!(r.completed);
         assert_eq!(r.revocations, 2);
         // lost work re-executed, no checkpoints, no recovery
@@ -655,9 +715,13 @@ mod tests {
     fn migration_preserves_progress() {
         let w = world();
         let job = Job::new(6, 6.0, 2.0); // small footprint → migratable
-        let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 3 }, ..Default::default() };
-        let mut p = FtSpotPolicy::new();
-        let r = simulate_job(&w, &mut p, &Migration, &job, &cfg, 4);
+        let r = Scenario::on(&w)
+            .job(job)
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Migration)
+            .rule(RevocationRule::ForcedCount { total: 3 })
+            .seed(4)
+            .run();
         assert!(r.completed);
         assert_eq!(r.revocations, 3);
         assert_eq!(r.ledger.time.get(Category::Reexec), 0.0, "migration loses no work");
@@ -671,9 +735,7 @@ mod tests {
         let mut w = world();
         let start = w.split_train(0.5);
         let job = Job::new(7, 8.0, 16.0);
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-        let mut p = PSiwoft::default();
-        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 6);
+        let r = Scenario::on(&w).job(job).start_t(start).seed(6).run();
         assert!(r.completed);
         // high-MTTR market on a 1-month suffix: revocations should be rare
         assert!(r.revocations <= 1, "revocations {}", r.revocations);
@@ -684,8 +746,7 @@ mod tests {
     fn buffer_cost_positive_for_fractional_sessions() {
         let w = world();
         let job = Job::new(8, 2.5, 16.0); // 2.5h + startup → fractional hour
-        let mut p = OnDemandPolicy;
-        let r = simulate_job(&w, &mut p, &NoFt, &job, &RunConfig::default(), 1);
+        let r = Scenario::on(&w).job(job).policy(PolicyKind::OnDemand).seed(1).run();
         assert!(r.ledger.cost.get(Category::Buffer) > 0.0);
     }
 
@@ -693,11 +754,13 @@ mod tests {
     fn replication_costs_multiply() {
         let w = world();
         let job = Job::new(9, 4.0, 16.0);
-        let cfg = RunConfig { rule: RevocationRule::ForcedRate { per_day: 2.0 }, ..Default::default() };
-        let mut p1 = FtSpotPolicy::new();
-        let r1 = simulate_job(&w, &mut p1, &NoFt, &job, &cfg, 11);
-        let mut p3 = FtSpotPolicy::new();
-        let r3 = simulate_job(&w, &mut p3, &Replication::new(3), &job, &cfg, 11);
+        let base = Scenario::on(&w)
+            .job(job)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedRate { per_day: 2.0 })
+            .seed(11);
+        let r1 = base.clone().run();
+        let r3 = base.ft(FtKind::Replication { k: 3 }).run();
         assert!(r3.completed);
         assert!(
             r3.cost_usd() > r1.cost_usd() * 1.5,
@@ -713,11 +776,12 @@ mod tests {
     fn deterministic_per_seed() {
         let w = world();
         let job = Job::new(10, 8.0, 16.0);
-        let cfg = RunConfig { rule: RevocationRule::ForcedRate { per_day: 4.0 }, ..Default::default() };
-        let run = |seed| {
-            let mut p = FtSpotPolicy::new();
-            simulate_job(&w, &mut p, &Checkpointing::new(8), &job, &cfg, seed)
-        };
+        let scen = Scenario::on(&w)
+            .job(job)
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Checkpoint { n: 8 })
+            .rule(RevocationRule::ForcedRate { per_day: 4.0 });
+        let run = |seed| scen.run_seeded(seed);
         let a = run(42);
         let b = run(42);
         assert_eq!(a.ledger, b.ledger);
@@ -731,12 +795,13 @@ mod tests {
         let w = world();
         for seed in 0..8 {
             let job = Job::new(seed, 3.0 + seed as f64, 16.0);
-            let mut p = FtSpotPolicy::new();
-            let cfg = RunConfig {
-                rule: RevocationRule::ForcedRate { per_day: 3.0 },
-                ..Default::default()
-            };
-            let r = simulate_job(&w, &mut p, &Checkpointing::new(4), &job, &cfg, seed);
+            let r = Scenario::on(&w)
+                .job(job.clone())
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::Checkpoint { n: 4 })
+                .rule(RevocationRule::ForcedRate { per_day: 3.0 })
+                .seed(seed)
+                .run();
             assert!(r.completed);
             assert!(r.completion_h() >= job.exec_len_h - 1e-9);
             assert!(r.makespan_h >= r.completion_h() - 1e-9);

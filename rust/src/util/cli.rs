@@ -43,6 +43,14 @@ impl CommandSpec {
         self
     }
 
+    /// Register the global `--workers` option shared by every
+    /// subcommand that fans work out over `coordinator::Pool`.  The
+    /// default `0` resolves to one worker per available CPU
+    /// (`std::thread::available_parallelism`) inside `Pool::new`.
+    pub fn workers_opt(self) -> Self {
+        self.opt("workers", "0", "worker threads for parallel fan-out (0 = one per CPU core)")
+    }
+
     pub fn usage(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}\n\noptions:", self.name, self.about);
@@ -135,6 +143,10 @@ impl Args {
     pub fn usize(&self, name: &str) -> Result<usize, String> {
         self.str(name).parse().map_err(|_| format!("--{name} must be an integer"))
     }
+    /// The `--workers` value registered via [`CommandSpec::workers_opt`].
+    pub fn workers(&self) -> Result<usize, String> {
+        self.usize("workers")
+    }
     pub fn f64(&self, name: &str) -> Result<f64, String> {
         self.str(name).parse().map_err(|_| format!("--{name} must be a number"))
     }
@@ -216,5 +228,15 @@ mod tests {
         let sp = CommandSpec::new("x", "").opt("xs", "1,2.5,3", "numbers");
         let a = sp.parse(&[]).unwrap();
         assert_eq!(a.f64_list("xs").unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn workers_opt_defaults_to_auto() {
+        let sp = CommandSpec::new("x", "").workers_opt();
+        let a = sp.parse(&[]).unwrap();
+        assert_eq!(a.workers().unwrap(), 0);
+        let a = sp.parse(&s(&["--workers", "3"])).unwrap();
+        assert_eq!(a.workers().unwrap(), 3);
+        assert!(sp.usage().contains("--workers"));
     }
 }

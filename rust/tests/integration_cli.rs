@@ -97,10 +97,12 @@ fn simulate_all_policies() {
         ("ft", "repl:2", "rate:2"),
         ("ondemand", "none", "trace"),
         ("greedy", "none", "trace"),
+        ("predictive", "none", "trace"),
+        ("ft", "daly:4", "rate:3"),
     ] {
         let (out, err, ok) = run(&[
             "simulate", "--policy", policy, "--ft", ft, "--rule", rule, "--markets", "48",
-            "--months", "1", "--seeds", "2", "--len", "4", "--mem", "16",
+            "--months", "1", "--seeds", "2", "--len", "4", "--mem", "16", "--workers", "2",
         ]);
         assert!(ok, "simulate {policy}/{ft} failed: {err}");
         assert!(out.contains("completion"), "missing output for {policy}/{ft}: {out}");
@@ -124,6 +126,7 @@ fn fig_writes_csvs() {
     let out_dir = dir.to_str().unwrap();
     let (out, err, ok) = run(&[
         "fig", "--panel", "a", "--markets", "48", "--months", "1", "--seeds", "2", "--out", out_dir,
+        "--workers", "2",
     ]);
     assert!(ok, "fig failed: {err}");
     assert!(out.contains("Fig 1a"));

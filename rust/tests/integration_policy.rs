@@ -89,12 +89,10 @@ fn psiwoft_suffers_fewer_trace_revocations_than_greedy_across_worlds() {
     for ws in [31u64, 32, 33, 34] {
         let (w, start) = world(ws);
         let job = Job::new(4, 16.0, 16.0);
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
+        let base = Scenario::on(&w).job(job).start_t(start);
         for seed in 0..4 {
-            let mut p = PSiwoft::default();
-            p_revs += simulate_job(&w, &mut p, &NoFt, &job, &cfg, seed).revocations;
-            let mut g = GreedyCheapest::new();
-            g_revs += simulate_job(&w, &mut g, &NoFt, &job, &cfg, seed).revocations;
+            p_revs += base.clone().run_seeded(seed).revocations;
+            g_revs += base.clone().policy(PolicyKind::Greedy).run_seeded(seed).revocations;
         }
     }
     assert!(
@@ -110,20 +108,17 @@ fn paper_headline_holds_across_world_seeds() {
     for ws in [41u64, 42, 43] {
         let (w, start) = world(ws);
         let job = Job::new(5, 8.0, 16.0);
+        let base = Scenario::on(&w).job(job).start_t(start);
         let mut sums = [0.0f64; 6]; // p_t, p_c, f_t, f_c, o_t, o_c
         for seed in 0..10 {
-            let trace_cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-            let rate_cfg = RunConfig {
-                rule: RevocationRule::ForcedRate { per_day: 3.0 },
-                start_t: start,
-                ..Default::default()
-            };
-            let mut p = PSiwoft::default();
-            let rp = simulate_job(&w, &mut p, &NoFt, &job, &trace_cfg, seed);
-            let mut f = FtSpotPolicy::new();
-            let rf = simulate_job(&w, &mut f, &Checkpointing::hourly(8.0), &job, &rate_cfg, seed);
-            let mut o = OnDemandPolicy;
-            let ro = simulate_job(&w, &mut o, &NoFt, &job, &trace_cfg, seed);
+            let rp = base.clone().run_seeded(seed);
+            let rf = base
+                .clone()
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::CheckpointHourly)
+                .rule(RevocationRule::ForcedRate { per_day: 3.0 })
+                .run_seeded(seed);
+            let ro = base.clone().policy(PolicyKind::OnDemand).run_seeded(seed);
             sums[0] += rp.completion_h();
             sums[1] += rp.cost_usd();
             sums[2] += rf.completion_h();

@@ -79,11 +79,8 @@ fn pjrt_analytics_drive_policy_identically() {
     let w_pjrt = world_16x168(9).with_analytics(pjrt_analytics);
 
     let job = Job::new(1, 4.0, 16.0);
-    let cfg = RunConfig::default();
-    let mut p1 = PSiwoft::default();
-    let mut p2 = PSiwoft::default();
-    let r_native = simulate_job(&w_native, &mut p1, &NoFt, &job, &cfg, 5);
-    let r_pjrt = simulate_job(&w_pjrt, &mut p2, &NoFt, &job, &cfg, 5);
+    let r_native = Scenario::on(&w_native).job(job.clone()).seed(5).run();
+    let r_pjrt = Scenario::on(&w_pjrt).job(job).seed(5).run();
     // identical analytics → identical decisions → identical ledgers
     assert_eq!(r_native.ledger, r_pjrt.ledger);
     assert_eq!(r_native.revocations, r_pjrt.revocations);

@@ -20,11 +20,8 @@ fn full_run_deterministic_across_processes_shape() {
     assert_eq!(w1.trace.prices, w2.trace.prices);
     assert_eq!(w1.analytics.mttr, w2.analytics.mttr);
     let job = Job::new(1, 8.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: s1, ..Default::default() };
-    let mut p1 = PSiwoft::default();
-    let mut p2 = PSiwoft::default();
-    let r1 = simulate_job(&w1, &mut p1, &NoFt, &job, &cfg, 3);
-    let r2 = simulate_job(&w2, &mut p2, &NoFt, &job, &cfg, 3);
+    let r1 = Scenario::on(&w1).job(job.clone()).start_t(s1).seed(3).run();
+    let r2 = Scenario::on(&w2).job(job).start_t(s1).seed(3).run();
     assert_eq!(r1.ledger, r2.ledger);
 }
 
@@ -38,9 +35,14 @@ fn accounting_time_categories_sum_to_completion() {
         (RevocationRule::ForcedCount { total: 5 }, 4),
     ] {
         for seed in 0..nseeds {
-            let cfg = RunConfig { rule, start_t: start, ..Default::default() };
-            let mut p = FtSpotPolicy::new();
-            let r = simulate_job(&w, &mut p, &Checkpointing::new(8), &job, &cfg, seed);
+            let r = Scenario::on(&w)
+                .job(job.clone())
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::Checkpoint { n: 8 })
+                .rule(rule)
+                .start_t(start)
+                .seed(seed)
+                .run();
             assert!(r.completed);
             // completion = sum of time categories (definitionally)
             let sum: f64 = r.ledger.time.iter().map(|(_, v)| v).sum();
@@ -63,9 +65,13 @@ fn ondemand_never_revoked_under_any_rule() {
         RevocationRule::ForcedRate { per_day: 24.0 },
         RevocationRule::ForcedCount { total: 16 },
     ] {
-        let cfg = RunConfig { rule, start_t: start, ..Default::default() };
-        let mut p = OnDemandPolicy;
-        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 1);
+        let r = Scenario::on(&w)
+            .job(job.clone())
+            .policy(PolicyKind::OnDemand)
+            .rule(rule)
+            .start_t(start)
+            .seed(1)
+            .run();
         assert!(r.completed);
         assert_eq!(r.revocations, 0, "on-demand revoked under {rule:?}");
         assert_eq!(r.sessions, 1);
@@ -76,14 +82,16 @@ fn ondemand_never_revoked_under_any_rule() {
 fn checkpointing_dominates_noft_under_heavy_revocations() {
     let (w, start) = world(8);
     let job = Job::new(4, 12.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 8 }, start_t: start, ..Default::default() };
+    let base = Scenario::on(&w)
+        .job(job)
+        .policy(PolicyKind::FtSpot)
+        .rule(RevocationRule::ForcedCount { total: 8 })
+        .start_t(start);
     let mut total_ckpt = 0.0;
     let mut total_noft = 0.0;
     for seed in 0..6 {
-        let mut p1 = FtSpotPolicy::new();
-        let rc = simulate_job(&w, &mut p1, &Checkpointing::new(12), &job, &cfg, seed);
-        let mut p2 = FtSpotPolicy::new();
-        let rn = simulate_job(&w, &mut p2, &NoFt, &job, &cfg, seed);
+        let rc = base.clone().ft(FtKind::Checkpoint { n: 12 }).run_seeded(seed);
+        let rn = base.clone().run_seeded(seed);
         assert!(rc.completed && rn.completed);
         total_ckpt += rc.completion_h();
         total_noft += rn.completion_h();
@@ -100,14 +108,16 @@ fn checkpointing_dominates_noft_under_heavy_revocations() {
 fn migration_beats_checkpoint_for_small_footprints() {
     let (w, start) = world(9);
     let job = Job::new(5, 8.0, 2.0); // migratable
-    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 4 }, start_t: start, ..Default::default() };
+    let base = Scenario::on(&w)
+        .job(job)
+        .policy(PolicyKind::FtSpot)
+        .rule(RevocationRule::ForcedCount { total: 4 })
+        .start_t(start);
     let mut t_mig = 0.0;
     let mut t_ck = 0.0;
     for seed in 0..5 {
-        let mut p1 = FtSpotPolicy::new();
-        t_mig += simulate_job(&w, &mut p1, &Migration, &job, &cfg, seed).completion_h();
-        let mut p2 = FtSpotPolicy::new();
-        t_ck += simulate_job(&w, &mut p2, &Checkpointing::new(8), &job, &cfg, seed).completion_h();
+        t_mig += base.clone().ft(FtKind::Migration).run_seeded(seed).completion_h();
+        t_ck += base.clone().ft(FtKind::Checkpoint { n: 8 }).run_seeded(seed).completion_h();
     }
     assert!(t_mig < t_ck, "migration {t_mig} vs checkpointing {t_ck}");
 }
@@ -116,20 +126,21 @@ fn migration_beats_checkpoint_for_small_footprints() {
 fn replication_survives_what_kills_noft() {
     let (w, start) = world(10);
     let job = Job::new(6, 8.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 6 }, start_t: start, ..Default::default() };
-    let mut p1 = FtSpotPolicy::new();
-    let r3 = simulate_job(&w, &mut p1, &Replication::new(3), &job, &cfg, 2);
-    let mut p2 = FtSpotPolicy::new();
-    let r1 = simulate_job(&w, &mut p2, &NoFt, &job, &cfg, 2);
+    let base = Scenario::on(&w)
+        .job(job)
+        .policy(PolicyKind::FtSpot)
+        .rule(RevocationRule::ForcedCount { total: 6 })
+        .start_t(start)
+        .seed(2);
+    let r3 = base.clone().ft(FtKind::Replication { k: 3 }).run();
+    let r1 = base.clone().run();
     assert!(r3.completed && r1.completed);
     // replicas absorb the revocations: better completion...
     assert!(r3.completion_h() <= r1.completion_h() + 1e-9);
     // ...at a redundancy premium vs an *unrevoked* single instance
     // (NoFt under 6 revocations can cost even more than 3 replicas —
     // that's the paper's point — so compare against the calm baseline)
-    let calm = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-    let mut p3 = FtSpotPolicy::new();
-    let r_calm = simulate_job(&w, &mut p3, &NoFt, &job, &calm, 2);
+    let r_calm = base.rule(RevocationRule::Trace).run();
     assert!(
         r3.cost_usd() > r_calm.cost_usd() * 2.0,
         "3-replica cost {} not a redundancy premium over calm single {}",
@@ -151,11 +162,8 @@ fn trace_roundtrip_preserves_simulation() {
     assert_eq!(start, s2);
 
     let job = Job::new(7, 4.0, 8.0);
-    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-    let mut p1 = PSiwoft::default();
-    let mut p2 = PSiwoft::default();
-    let r1 = simulate_job(&w, &mut p1, &NoFt, &job, &cfg, 1);
-    let r2 = simulate_job(&w2, &mut p2, &NoFt, &job, &cfg, 1);
+    let r1 = Scenario::on(&w).job(job.clone()).start_t(start).seed(1).run();
+    let r2 = Scenario::on(&w2).job(job).start_t(start).seed(1).run();
     // f32 CSV round-trip is exact (we print full precision)
     assert_eq!(r1.ledger, r2.ledger);
     std::fs::remove_dir_all(dir).ok();
@@ -166,9 +174,7 @@ fn tiny_jobs_and_fractional_lengths_complete() {
     let (w, start) = world(13);
     for len in [0.05, 0.49, 1.0, 1.000001, 23.97] {
         let job = Job::new(1, len, 16.0);
-        let mut p = PSiwoft::default();
-        let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-        let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 1);
+        let r = Scenario::on(&w).job(job).start_t(start).seed(1).run();
         assert!(r.completed, "len {len} did not complete");
         assert!((r.ledger.time.get(Category::Useful) - len).abs() < 1e-9);
     }
@@ -180,9 +186,13 @@ fn checkpoint_exactly_at_completion_is_skipped() {
     // with completion and must not add a checkpoint span
     let (w, start) = world(14);
     let job = Job::new(1, 8.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-    let mut p = FtSpotPolicy::new();
-    let r = simulate_job(&w, &mut p, &Checkpointing::new(4), &job, &cfg, 1);
+    let r = Scenario::on(&w)
+        .job(job)
+        .policy(PolicyKind::FtSpot)
+        .ft(FtKind::Checkpoint { n: 4 })
+        .start_t(start)
+        .seed(1)
+        .run();
     assert!(r.completed);
     if r.revocations == 0 {
         // 3 interior checkpoints, not 4
@@ -204,14 +214,15 @@ fn heavy_forced_rate_still_terminates() {
     // hit the session cap without hanging
     let (w, start) = world(15);
     let job = Job::new(1, 4.0, 16.0);
-    let cfg = RunConfig {
-        rule: RevocationRule::ForcedRate { per_day: 48.0 },
-        start_t: start,
-        max_sessions: 5_000,
-        ..Default::default()
-    };
-    let mut p = FtSpotPolicy::new();
-    let r = simulate_job(&w, &mut p, &Checkpointing::new(16), &job, &cfg, 3);
+    let r = Scenario::on(&w)
+        .job(job)
+        .policy(PolicyKind::FtSpot)
+        .ft(FtKind::Checkpoint { n: 16 })
+        .rule(RevocationRule::ForcedRate { per_day: 48.0 })
+        .start_t(start)
+        .max_sessions(5_000)
+        .seed(3)
+        .run();
     assert!(r.sessions <= 5_000);
     assert!(r.completed, "checkpointed job should grind through heavy revocations");
 }
@@ -220,9 +231,13 @@ fn heavy_forced_rate_still_terminates() {
 fn zero_forced_count_means_no_revocations() {
     let (w, start) = world(16);
     let job = Job::new(1, 6.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 0 }, start_t: start, ..Default::default() };
-    let mut p = FtSpotPolicy::new();
-    let r = simulate_job(&w, &mut p, &NoFt, &job, &cfg, 1);
+    let r = Scenario::on(&w)
+        .job(job)
+        .policy(PolicyKind::FtSpot)
+        .rule(RevocationRule::ForcedCount { total: 0 })
+        .start_t(start)
+        .seed(1)
+        .run();
     assert!(r.completed);
     assert_eq!(r.revocations, 0);
     assert_eq!(r.sessions, 1);
@@ -232,9 +247,14 @@ fn zero_forced_count_means_no_revocations() {
 fn makespan_equals_completion_for_single_arrival() {
     let (w, start) = world(17);
     let job = Job::new(1, 5.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::ForcedCount { total: 3 }, start_t: start, ..Default::default() };
-    let mut p = FtSpotPolicy::new();
-    let r = simulate_job(&w, &mut p, &Checkpointing::new(5), &job, &cfg, 2);
+    let r = Scenario::on(&w)
+        .job(job)
+        .policy(PolicyKind::FtSpot)
+        .ft(FtKind::Checkpoint { n: 5 })
+        .rule(RevocationRule::ForcedCount { total: 3 })
+        .start_t(start)
+        .seed(2)
+        .run();
     assert!((r.makespan_h - r.completion_h()).abs() < 1e-9);
 }
 

@@ -145,10 +145,14 @@ fn prop_simulation_conservation_laws() {
         },
         |&(len, mem, rule, seed)| {
             let job = Job::new(1, len, mem);
-            let cfg = RunConfig { rule, start_t: start, ..Default::default() };
-            let mut p = FtSpotPolicy::new();
-            let ft = Checkpointing::hourly(len);
-            let r = simulate_job(&world, &mut p, &ft, &job, &cfg, seed);
+            let r = Scenario::on(&world)
+                .job(job)
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::CheckpointHourly)
+                .rule(rule)
+                .start_t(start)
+                .seed(seed)
+                .run();
             if !r.completed {
                 return Err("job did not complete".into());
             }

@@ -1,0 +1,173 @@
+//! The scenario-API equivalence suite.
+//!
+//! Proves two things about the `siwoft::scenario` redesign:
+//!
+//! 1. **Shim equivalence** — `Scenario::…​.run()` is bit-identical
+//!    (ledger categories for both time and cost, revocations, sessions,
+//!    completion, makespan) to the legacy `sim::simulate_job` free
+//!    function across the full (policy × ft × rule) registry grid at 3
+//!    seeds.  This file is the one sanctioned caller of the deprecated
+//!    shim; everything else in the tree goes through the builder.
+//! 2. **Sweep determinism** — two identical `Sweep`s executed with
+//!    `workers = 1` and `workers = 4` produce identical aggregates and
+//!    per-run ledgers (the pool preserves submission order and every
+//!    run is a pure function of its seed).
+
+use siwoft::prelude::*;
+
+fn world() -> (World, f64) {
+    let mut w = World::generate(48, 1.0, 4242);
+    let start = w.split_train(0.6);
+    (w, start)
+}
+
+fn rules() -> Vec<RevocationRule> {
+    vec![
+        RevocationRule::Trace,
+        RevocationRule::ForcedRate { per_day: 3.0 },
+        RevocationRule::ForcedCount { total: 2 },
+    ]
+}
+
+#[test]
+#[allow(deprecated)] // the sanctioned caller of the `simulate_job` shim
+fn builder_is_bit_identical_to_simulate_job_across_the_grid() {
+    let (w, start) = world();
+    let job = Job::new(1, 6.0, 16.0);
+    let mut grid_points = 0u32;
+    for policy in PolicyKind::all() {
+        for ft in FtKind::all() {
+            for rule in rules() {
+                for seed in 0..3u64 {
+                    let new = Scenario::on(&w)
+                        .job(job.clone())
+                        .policy(policy)
+                        .ft(ft)
+                        .rule(rule)
+                        .start_t(start)
+                        .seed(seed)
+                        .run();
+
+                    // Legacy path: the same registry instantiation fed
+                    // through the deprecated free-function shim.
+                    let cfg = RunConfig { rule, start_t: start, ..Default::default() };
+                    let mut legacy_policy = policy.build(&w, start);
+                    let legacy_ft = ft.build(&job);
+                    let old = simulate_job(
+                        &w,
+                        legacy_policy.as_mut(),
+                        legacy_ft.as_ref(),
+                        &job,
+                        &cfg,
+                        seed,
+                    );
+
+                    let tag = format!(
+                        "policy={} ft={} rule={} seed={seed}",
+                        policy.label(),
+                        ft.label(),
+                        rule.label()
+                    );
+                    assert_eq!(new.ledger, old.ledger, "{tag}: ledger diverged");
+                    assert_eq!(new.revocations, old.revocations, "{tag}: revocations");
+                    assert_eq!(new.sessions, old.sessions, "{tag}: sessions");
+                    assert_eq!(new.ondemand_sessions, old.ondemand_sessions, "{tag}: od sessions");
+                    assert_eq!(new.completed, old.completed, "{tag}: completed");
+                    assert_eq!(new.makespan_h, old.makespan_h, "{tag}: makespan");
+                    assert_eq!(new.policy, old.policy, "{tag}: policy name");
+                    assert_eq!(new.ft, old.ft, "{tag}: ft name");
+                    // the category breakdowns behind the headline numbers
+                    for &c in siwoft::sim::CATEGORIES {
+                        assert_eq!(new.ledger.time.get(c), old.ledger.time.get(c), "{tag}: time {c}");
+                        assert_eq!(new.ledger.cost.get(c), old.ledger.cost.get(c), "{tag}: cost {c}");
+                    }
+                    grid_points += 1;
+                }
+            }
+        }
+    }
+    // 5 policies × 6 fts × 3 rules × 3 seeds
+    assert_eq!(grid_points, 270, "grid coverage shrank");
+}
+
+#[test]
+#[allow(deprecated)] // the sanctioned caller of the `simulate_job` shim
+fn replicate_equals_legacy_seed_loop() {
+    let (w, start) = world();
+    let scen = Scenario::on(&w)
+        .job(Job::new(2, 5.0, 16.0))
+        .policy(PolicyKind::FtSpot)
+        .ft(FtKind::Checkpoint { n: 5 })
+        .rule(RevocationRule::ForcedRate { per_day: 4.0 })
+        .start_t(start);
+    let agg = scen.replicate(5);
+
+    let cfg = RunConfig {
+        rule: RevocationRule::ForcedRate { per_day: 4.0 },
+        start_t: start,
+        ..Default::default()
+    };
+    let job = Job::new(2, 5.0, 16.0);
+    let runs: Vec<JobResult> = (0..5)
+        .map(|seed| {
+            let mut p = PolicyKind::FtSpot.build(&w, start);
+            let ft = FtKind::Checkpoint { n: 5 }.build(&job);
+            simulate_job(&w, p.as_mut(), ft.as_ref(), &job, &cfg, seed)
+        })
+        .collect();
+    assert_eq!(agg, AggregateResult::from_runs(&runs));
+}
+
+#[test]
+fn sweep_aggregates_identical_for_1_and_4_workers() {
+    let (w, start) = world();
+    let build = |workers: usize| {
+        Sweep::on(&w)
+            .jobs([Job::new(1, 3.0, 16.0), Job::new(2, 6.0, 16.0)])
+            .policies(PolicyKind::all())
+            .fts([FtKind::None, FtKind::CheckpointHourly])
+            .rules(rules())
+            .seeds(3)
+            .start_t(start)
+            .workers(workers)
+            .run()
+    };
+    let serial = build(1);
+    let parallel = build(4);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * PolicyKind::all().len() * 2 * 3);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.point, b.point, "point order diverged");
+        assert_eq!(a.agg, b.agg, "aggregate diverged at {:?}", a.point);
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.ledger, y.ledger, "run ledger diverged at {:?}", a.point);
+            assert_eq!(x.revocations, y.revocations);
+        }
+    }
+}
+
+#[test]
+fn sweep_rows_match_standalone_scenarios() {
+    let (w, start) = world();
+    let rows = Sweep::on(&w)
+        .job(Job::new(3, 4.0, 16.0))
+        .policies([PolicyKind::default(), PolicyKind::OnDemand])
+        .rules([RevocationRule::Trace])
+        .seeds(2)
+        .base_seed(11)
+        .start_t(start)
+        .run();
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        let standalone = Scenario::on(&w)
+            .job(row.point.job.clone())
+            .policy(row.point.policy)
+            .ft(row.point.ft)
+            .rule(row.point.rule)
+            .start_t(start)
+            .seed(11)
+            .replicate(2);
+        assert_eq!(row.agg, standalone, "sweep row != standalone replicate");
+    }
+}

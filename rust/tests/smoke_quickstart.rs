@@ -1,5 +1,6 @@
 //! Smoke: the README quickstart path.  Generates a world, runs one job
-//! under `PSiwoft` + `NoFt` on the held-out trace suffix, and asserts
+//! through the `Scenario` builder (P-SIWOFT + no FT, the defaults) on
+//! the held-out trace suffix, and asserts
 //! the frontier work-classification invariant documented in `sim/run.rs`:
 //! `useful` time equals the job length exactly on completion.
 
@@ -10,9 +11,7 @@ fn quickstart_psiwoft_noft_useful_equals_job_length() {
     let mut world = World::generate(64, 1.0, 42);
     let start = world.split_train(0.67);
     let job = Job::new(1, 6.0, 16.0);
-    let cfg = RunConfig { rule: RevocationRule::Trace, start_t: start, ..Default::default() };
-    let mut policy = PSiwoft::default();
-    let r = simulate_job(&world, &mut policy, &NoFt, &job, &cfg, 7);
+    let r = Scenario::on(&world).job(job.clone()).start_t(start).seed(7).run();
 
     assert!(r.completed, "quickstart job did not complete");
     assert!(
@@ -36,13 +35,12 @@ fn quickstart_invariant_survives_forced_revocations() {
     let start = world.split_train(0.67);
     let job = Job::new(2, 6.0, 16.0);
     for seed in 0..4 {
-        let cfg = RunConfig {
-            rule: RevocationRule::ForcedCount { total: 3 },
-            start_t: start,
-            ..Default::default()
-        };
-        let mut policy = PSiwoft::default();
-        let r = simulate_job(&world, &mut policy, &NoFt, &job, &cfg, seed);
+        let r = Scenario::on(&world)
+            .job(job.clone())
+            .rule(RevocationRule::ForcedCount { total: 3 })
+            .start_t(start)
+            .seed(seed)
+            .run();
         assert!(r.completed, "seed {seed}");
         assert_eq!(r.revocations, 3, "seed {seed}");
         assert!(

@@ -44,15 +44,37 @@ fn main() {
         n
     }));
 
-    // thread pool fan-out over cpu-bound items
+    // thread pool fan-out over cpu-bound items: worker-count scaling of
+    // the work-stealing scheduler (the §Perf sweep-throughput rows) —
+    // 1 worker is the sequential fast path, 0 = one per CPU
+    for workers in [1usize, 4, 0] {
+        let pool = Pool::new(workers);
+        suite.push(bench.run_with_units(
+            &format!("pool: map 256 items x 100us ({} workers)", pool.workers()),
+            256.0,
+            || {
+                pool.map((0..256u64).collect(), |_, x| {
+                    let mut s = x;
+                    for i in 0..25_000u64 {
+                        s = s.wrapping_mul(6364136223846793005).wrapping_add(i);
+                    }
+                    s
+                })
+            },
+        ));
+    }
+
+    // skewed items (sweep-like cost profile) under chunk hint 1: every
+    // item independently stealable, the setting scenario::Sweep uses
     let pool = Pool::new(0);
+    let skewed: Vec<u64> = (0..256u64).map(|i| if i % 16 == 0 { 400_000 } else { 5_000 }).collect();
     suite.push(bench.run_with_units(
-        &format!("pool: map 256 items x 100us ({} workers)", pool.workers()),
+        &format!("pool: map_chunked(1) 256 skewed ({} workers)", pool.workers()),
         256.0,
         || {
-            pool.map((0..256u64).collect(), |_, x| {
-                let mut s = x;
-                for i in 0..25_000u64 {
+            pool.map_chunked(skewed.clone(), 1, |_, n| {
+                let mut s = n;
+                for i in 0..n {
                     s = s.wrapping_mul(6364136223846793005).wrapping_add(i);
                 }
                 s

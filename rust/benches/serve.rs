@@ -1,0 +1,81 @@
+//! Bench: control-plane load test — N concurrent connections × M
+//! submits against an in-process `siwoft serve`, plus the sequential
+//! accept-latency probe.  These are the §Perf numbers for the serving
+//! path (EXPERIMENTS.md).
+//!
+//!     cargo bench --bench serve
+
+use std::sync::Arc;
+
+use siwoft::coordinator::{loadgen, Coordinator, Server};
+use siwoft::runtime::AnalyticsEngine;
+use siwoft::sim::World;
+use siwoft::util::benchkit::fmt_rate;
+use siwoft::util::stats::percentile;
+
+fn main() {
+    let world = World::generate(48, 1.0, 7);
+    let server = Arc::new(Server::new(Coordinator::new(world, AnalyticsEngine::native(), 0)));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let s2 = server.clone();
+    let serve_thread = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    println!("\n== control-plane load ({addr}) ==");
+    println!(
+        "  {:<32} {:>12} {:>12} {:>12} {:>13}",
+        "scenario", "submit p50", "submit p99", "first-reply p50", "throughput"
+    );
+    let mut rows = vec![vec![
+        "conns".to_string(),
+        "submits_per_conn".to_string(),
+        "submit_p50_ms".to_string(),
+        "submit_p99_ms".to_string(),
+        "first_reply_p50_ms".to_string(),
+        "first_reply_p99_ms".to_string(),
+        "throughput_per_s".to_string(),
+    ]];
+    for (conns, submits) in [(1usize, 400usize), (4, 200), (16, 100), (64, 25)] {
+        let r = loadgen::run_load(addr, conns, submits).expect("load run failed");
+        println!(
+            "  {:<32} {:>9.3} ms {:>9.3} ms {:>12.3} ms  {:>12}",
+            format!("{conns} conns x {submits} submits"),
+            r.submit_p50_ms(),
+            r.submit_p99_ms(),
+            r.first_reply_p50_ms(),
+            fmt_rate(r.throughput_per_s())
+        );
+        rows.push(vec![
+            conns.to_string(),
+            submits.to_string(),
+            format!("{:.4}", r.submit_p50_ms()),
+            format!("{:.4}", r.submit_p99_ms()),
+            format!("{:.4}", r.first_reply_p50_ms()),
+            format!("{:.4}", r.first_reply_p99_ms()),
+            format!("{:.1}", r.throughput_per_s()),
+        ]);
+    }
+
+    let probes = loadgen::probe_accept_latency(addr, 200).expect("accept probe failed");
+    println!(
+        "  {:<32} {:>9.3} ms {:>9.3} ms   (old poll floor: ~5 ms p50 / 10 ms p99)",
+        "accept: sequential fresh conns",
+        percentile(&probes, 50.0),
+        percentile(&probes, 99.0)
+    );
+    rows.push(vec![
+        "accept_probe".to_string(),
+        probes.len().to_string(),
+        format!("{:.4}", percentile(&probes, 50.0)),
+        format!("{:.4}", percentile(&probes, 99.0)),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+
+    server.request_shutdown();
+    serve_thread.join().unwrap();
+    siwoft::util::csvio::write_file("results/bench_serve.csv", &rows).ok();
+}

@@ -12,6 +12,12 @@
 //! This module is driven by the discrete-event [`Engine`] — arrivals and
 //! epochs interleave on one clock — and exercises the full
 //! leader-side loop: epoch → decide → simulate → account.
+//!
+//! The loop is deliberately sequential: each arrival is simulated
+//! against the analytics snapshot the preceding epoch installed, so
+//! event causality pins the order.  Throughput-style parallelism lives
+//! one level up — many cluster runs (or sweep points) fanned out over
+//! the work-stealing [`Pool`](super::Pool), see DESIGN.md §8.
 
 use crate::job::Job;
 use crate::market::MarketAnalytics;

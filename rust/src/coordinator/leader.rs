@@ -136,7 +136,7 @@ impl Coordinator {
     /// once, not once per seed.
     pub fn run_seeds(&self, job: &Job, arm: &Arm, cfg: &RunConfig, seeds: u64) -> AggregateResult {
         let scen = self.scenario(job, arm, cfg);
-        let runs: Vec<JobResult> = self.pool.map((0..seeds).collect(), |_, seed| {
+        let runs: Vec<JobResult> = self.pool.map_chunked((0..seeds).collect(), 1, |_, seed| {
             let t0 = Instant::now();
             let r = scen.run_seeded(seed);
             self.record(&r, t0);
@@ -147,7 +147,8 @@ impl Coordinator {
 
     /// Fan a whole batch of jobs out across the pool under one arm.
     pub fn run_batch(&self, jobs: &[Job], arm: &Arm, cfg: &RunConfig, seed: u64) -> Vec<JobResult> {
-        self.pool.map(jobs.to_vec(), |i, job| self.run_one(&job, arm, cfg, seed ^ (i as u64) << 17))
+        self.pool
+            .map_chunked(jobs.to_vec(), 1, |i, job| self.run_one(&job, arm, cfg, seed ^ (i as u64) << 17))
     }
 }
 

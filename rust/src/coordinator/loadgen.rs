@@ -1,0 +1,177 @@
+//! Load-test driver for the TCP control plane (`siwoft serve`): N
+//! concurrent connections × M submits each, with per-request latency
+//! percentiles, plus a sequential accept-latency probe that detects any
+//! polling floor in the accept loop (the old implementation slept 10 ms
+//! between `accept` attempts, putting a ~5 ms median / 10 ms worst case
+//! under every fresh connection).
+//!
+//! Used by `benches/serve.rs` at full scale and, at small N, by
+//! `tests/integration_cli.rs` against the real binary.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::err;
+use crate::util::error::Result;
+use crate::util::stats::percentile;
+
+/// A trivial-but-real submit: runs an actual (fast) on-demand
+/// simulation on the server, so latencies cover parse → simulate →
+/// reply, not just the socket echo path.
+pub const TRIVIAL_SUBMIT: &str =
+    r#"{"cmd":"submit","len_h":1,"mem_gb":8,"policy":"ondemand","ft":"none"}"#;
+
+/// Aggregate of one load run.  Latency vectors are sorted ascending
+/// (ready for [`percentile`]).
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub conns: usize,
+    pub submits_per_conn: usize,
+    pub wall_s: f64,
+    /// steady-state submit round-trips (ms), sorted
+    pub submit_ms: Vec<f64>,
+    /// connect → first-reply per connection (ms), sorted — the metric a
+    /// polling accept loop inflates
+    pub first_reply_ms: Vec<f64>,
+}
+
+impl LoadReport {
+    pub fn total_requests(&self) -> usize {
+        self.conns * self.submits_per_conn
+    }
+    pub fn throughput_per_s(&self) -> f64 {
+        self.total_requests() as f64 / self.wall_s
+    }
+    pub fn submit_p50_ms(&self) -> f64 {
+        percentile(&self.submit_ms, 50.0)
+    }
+    pub fn submit_p99_ms(&self) -> f64 {
+        percentile(&self.submit_ms, 99.0)
+    }
+    pub fn first_reply_p50_ms(&self) -> f64 {
+        percentile(&self.first_reply_ms, 50.0)
+    }
+    pub fn first_reply_p99_ms(&self) -> f64 {
+        percentile(&self.first_reply_ms, 99.0)
+    }
+}
+
+fn round_trip(writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Result<()> {
+    writeln!(writer, "{line}")?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    if !reply.contains("\"ok\":true") {
+        return Err(err!("request failed: {}", reply.trim()));
+    }
+    Ok(())
+}
+
+/// Drive `conns` concurrent connections, each performing
+/// `submits_per_conn` submits, against a running control plane.
+pub fn run_load(addr: SocketAddr, conns: usize, submits_per_conn: usize) -> Result<LoadReport> {
+    assert!(conns >= 1 && submits_per_conn >= 1);
+    let t0 = Instant::now();
+    let mut threads = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        threads.push(std::thread::spawn(move || -> Result<(f64, Vec<f64>)> {
+            let t_conn = Instant::now();
+            let mut writer = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
+            writer.set_nodelay(true).ok();
+            let mut reader = BufReader::new(writer.try_clone()?);
+            round_trip(&mut writer, &mut reader, TRIVIAL_SUBMIT)?;
+            let first = t_conn.elapsed().as_secs_f64() * 1e3;
+            let mut lats = Vec::with_capacity(submits_per_conn - 1);
+            for _ in 1..submits_per_conn {
+                let t = Instant::now();
+                round_trip(&mut writer, &mut reader, TRIVIAL_SUBMIT)?;
+                lats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok((first, lats))
+        }));
+    }
+    let mut submit_ms = Vec::new();
+    let mut first_reply_ms = Vec::with_capacity(conns);
+    for t in threads {
+        let (first, lats) = t.join().map_err(|_| err!("load connection panicked"))??;
+        first_reply_ms.push(first);
+        submit_ms.extend(lats);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    submit_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    first_reply_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(LoadReport { conns, submits_per_conn, wall_s, submit_ms, first_reply_ms })
+}
+
+/// Sequential fresh-connection probe: each sample opens a new
+/// connection against an otherwise idle server and times connect →
+/// first `status` reply, so the measurement is dominated by accept
+/// readiness.  A 10 ms polling accept loop shows up here as a ~5 ms
+/// median; a blocking accept is sub-millisecond.  Returns the sorted
+/// samples (ms).
+pub fn probe_accept_latency(addr: SocketAddr, probes: usize) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(probes);
+    for _ in 0..probes {
+        let t = Instant::now();
+        let mut writer = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
+        writer.set_nodelay(true).ok();
+        let mut reader = BufReader::new(writer.try_clone()?);
+        round_trip(&mut writer, &mut reader, r#"{"cmd":"status"}"#)?;
+        out.push(t.elapsed().as_secs_f64() * 1e3);
+        drop(reader);
+        drop(writer);
+        // let the server fully return to a blocked accept before the
+        // next probe, so a polling loop can't hide inside back-to-back
+        // connects
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, Server};
+    use crate::runtime::AnalyticsEngine;
+    use crate::sim::World;
+    use std::sync::Arc;
+
+    fn spawn_server() -> (Arc<Server>, SocketAddr, std::thread::JoinHandle<()>) {
+        let world = World::generate(16, 0.5, 99);
+        let server = Arc::new(Server::new(Coordinator::new(world, AnalyticsEngine::native(), 2)));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s2 = server.clone();
+        let t = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        (server, addr, t)
+    }
+
+    #[test]
+    fn load_run_collects_all_latencies() {
+        let (server, addr, t) = spawn_server();
+        let report = run_load(addr, 3, 5).unwrap();
+        assert_eq!(report.conns, 3);
+        assert_eq!(report.total_requests(), 15);
+        assert_eq!(report.first_reply_ms.len(), 3);
+        assert_eq!(report.submit_ms.len(), 3 * 4);
+        assert!(report.submit_p50_ms() > 0.0);
+        assert!(report.submit_p50_ms() <= report.submit_p99_ms() * 1.001);
+        assert!(report.throughput_per_s() > 0.0);
+        server.request_shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn accept_probe_is_sorted_and_positive() {
+        let (server, addr, t) = spawn_server();
+        let probes = probe_accept_latency(addr, 8).unwrap();
+        assert_eq!(probes.len(), 8);
+        assert!(probes.windows(2).all(|w| w[0] <= w[1]));
+        assert!(probes[0] > 0.0);
+        server.request_shutdown();
+        t.join().unwrap();
+    }
+}

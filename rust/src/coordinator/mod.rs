@@ -4,6 +4,7 @@
 
 pub mod epoch;
 pub mod leader;
+pub mod loadgen;
 pub mod metrics;
 pub mod pool;
 pub mod server;

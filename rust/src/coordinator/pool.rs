@@ -1,22 +1,183 @@
-//! Worker thread pool — the async-runtime substitute for this workload
-//! (tokio is unavailable offline; the coordinator's fan-out is
-//! embarrassingly parallel simulation work, a perfect fit for scoped
-//! threads + channels).
+//! Worker thread pool — a work-stealing scheduler built on scoped
+//! threads (the offline tokio/rayon substitute; see DESIGN.md §8).
+//!
+//! The previous implementation handed every item through two shared
+//! mutexes (a cursor plus the item vector), which serializes hand-off
+//! exactly when a sweep grid wants to saturate a many-core host.  This
+//! version is lock-free on the hot path:
+//!
+//! * the input is pre-split into contiguous index chunks; an **injector**
+//!   (a single atomic fetch-add over chunk numbers) hands each chunk to
+//!   the first worker that asks;
+//! * each worker owns a **deque** — its claimed index range packed
+//!   `(lo, hi)` into one `AtomicU64` — popping from the back (LIFO) via
+//!   CAS while idle workers **steal** the front half (FIFO) of a
+//!   victim's range via CAS on the same word;
+//! * results are collected by item index, so output order is the input
+//!   order no matter which worker ran which item.
+//!
+//! The protocol is ABA-free: every item index is claimed exactly once
+//! globally, so the ranges a given deque word ever holds are pairwise
+//! disjoint and a stale compare-exchange can never succeed against a
+//! recycled bit pattern.
 
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 
-/// Fixed-size pool executing boxed jobs; results are collected in
-/// submission order by [`Pool::map`].
+/// How many injector chunks each worker gets under automatic splitting
+/// (`chunk_hint = 0`): enough slack for stealing to balance skewed item
+/// costs without per-item injector traffic on cheap items.
+const AUTO_CHUNKS_PER_WORKER: usize = 8;
+
+#[inline]
+const fn pack(lo: u32, hi: u32) -> u64 {
+    ((lo as u64) << 32) | hi as u64
+}
+
+#[inline]
+const fn unpack(v: u64) -> (u32, u32) {
+    ((v >> 32) as u32, v as u32)
+}
+
+/// Item storage.  Every slot is claimed by exactly one worker (via the
+/// injector/steal protocol below) before being taken, which is what
+/// makes the unsynchronized interior mutability sound.
+struct Slots<T> {
+    slots: Box<[UnsafeCell<Option<T>>]>,
+}
+
+// SAFETY: slots are filled before the worker threads spawn (the spawn
+// synchronizes) and each index is taken at most once, by the unique
+// worker that claimed it through an atomic CAS/fetch-add hand-off.
+unsafe impl<T: Send> Sync for Slots<T> {}
+
+impl<T> Slots<T> {
+    fn new(items: Vec<T>) -> Slots<T> {
+        Slots { slots: items.into_iter().map(|t| UnsafeCell::new(Some(t))).collect() }
+    }
+
+    /// Take the item at `idx`.
+    ///
+    /// SAFETY: the caller must hold the exclusive claim to `idx` (a
+    /// successful injector claim or deque pop/steal covering it).
+    unsafe fn take(&self, idx: usize) -> T {
+        (*self.slots[idx].get()).take().expect("item claimed twice")
+    }
+}
+
+/// The injector: pre-split chunk hand-out by atomic fetch-add.
+struct Injector {
+    next: AtomicUsize,
+    n_chunks: usize,
+    chunk: usize,
+    n: usize,
+}
+
+impl Injector {
+    fn new(n: usize, chunk: usize) -> Injector {
+        Injector { next: AtomicUsize::new(0), n_chunks: n.div_ceil(chunk), chunk, n }
+    }
+
+    /// Claim the next unclaimed chunk as a `(lo, hi)` index range.
+    fn claim(&self) -> Option<(u32, u32)> {
+        let c = self.next.fetch_add(1, Ordering::Relaxed);
+        if c >= self.n_chunks {
+            return None;
+        }
+        let lo = c * self.chunk;
+        let hi = ((c + 1) * self.chunk).min(self.n);
+        Some((lo as u32, hi as u32))
+    }
+}
+
+/// One worker's claimed index range, `(lo, hi)` packed into a single
+/// atomic word.  Owner pops from the back (LIFO), thieves split off the
+/// front half (FIFO); both sides move by compare-exchange, so the
+/// hand-off never blocks.
+struct Deque {
+    range: AtomicU64,
+}
+
+impl Deque {
+    fn new() -> Deque {
+        Deque { range: AtomicU64::new(pack(0, 0)) }
+    }
+
+    /// Install a freshly claimed (injected or stolen) range.  Only the
+    /// owning worker writes here, and only while the word is empty —
+    /// thieves can shrink a non-empty range but never refill one, so a
+    /// plain store cannot race with a successful steal.
+    fn install(&self, lo: u32, hi: u32) {
+        self.range.store(pack(lo, hi), Ordering::Release);
+    }
+
+    /// Owner: pop one index off the back.
+    fn pop(&self) -> Option<usize> {
+        let mut cur = self.range.load(Ordering::Acquire);
+        loop {
+            let (lo, hi) = unpack(cur);
+            if lo >= hi {
+                return None;
+            }
+            match self.range.compare_exchange_weak(
+                cur,
+                pack(lo, hi - 1),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some((hi - 1) as usize),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Thief: split off the front half of the victim's range.
+    fn steal(&self) -> Option<(u32, u32)> {
+        let mut cur = self.range.load(Ordering::Acquire);
+        loop {
+            let (lo, hi) = unpack(cur);
+            if lo >= hi {
+                return None;
+            }
+            let take = (hi - lo).div_ceil(2);
+            match self.range.compare_exchange_weak(
+                cur,
+                pack(lo + take, hi),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some((lo, lo + take)),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        let (lo, hi) = unpack(self.range.load(Ordering::Acquire));
+        lo >= hi
+    }
+}
+
+/// Fixed-size pool executing parallel maps; results are collected in
+/// submission order by [`Pool::map`] / [`Pool::map_chunked`].
 pub struct Pool {
     workers: usize,
 }
 
 impl Pool {
-    /// `workers = 0` → one per available CPU.
+    /// `workers = 0` → the `SIWOFT_WORKERS` environment variable (how
+    /// the CI test matrix pins every auto-sized pool process-wide),
+    /// else one per available CPU.
     pub fn new(workers: usize) -> Pool {
         let workers = if workers == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            std::env::var("SIWOFT_WORKERS")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .filter(|&w| w > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+                })
         } else {
             workers
         };
@@ -28,10 +189,28 @@ impl Pool {
     }
 
     /// Parallel map preserving input order.  `f` must be `Sync` (it is
-    /// shared across workers); items are handed out through a shared
-    /// cursor so the load balances even when item costs vary wildly
-    /// (long jobs next to short ones).
+    /// shared across workers); chunking is automatic — for per-item
+    /// control (e.g. expensive, skewed simulation items) use
+    /// [`Pool::map_chunked`] with a hint of `1`.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        self.map_chunked(items, 0, f)
+    }
+
+    /// [`Pool::map`] with an explicit injector chunk size.
+    ///
+    /// `chunk_hint = 0` picks automatically (≈8 chunks per worker —
+    /// right for large batches of cheap items);
+    /// `chunk_hint = 1` makes every item independently stealable, which
+    /// is what simulation-grade items (milliseconds each, wildly skewed
+    /// costs) want; larger hints trade steal granularity for less
+    /// injector traffic.  Results are identical for every
+    /// (workers, chunk_hint) combination — only the schedule changes.
+    pub fn map_chunked<T, R, F>(&self, items: Vec<T>, chunk_hint: usize, f: F) -> Vec<R>
     where
         T: Send,
         R: Send,
@@ -43,34 +222,56 @@ impl Pool {
         }
         let threads = self.workers.min(n);
         if threads <= 1 {
+            // Bit-identical to a plain sequential map (pinned by the
+            // scheduler property suite): no threads, no reordering.
             return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
         }
-        let work: Arc<Mutex<Vec<Option<T>>>> =
-            Arc::new(Mutex::new(items.into_iter().map(Some).collect()));
-        let cursor = Arc::new(Mutex::new(0usize));
+        assert!(n <= u32::MAX as usize, "Pool::map is limited to u32::MAX items");
+        let chunk = if chunk_hint == 0 {
+            n.div_ceil(threads * AUTO_CHUNKS_PER_WORKER).max(1)
+        } else {
+            chunk_hint
+        };
+
+        let slots = Slots::new(items);
+        let injector = Injector::new(n, chunk);
+        let deques: Vec<Deque> = (0..threads).map(|_| Deque::new()).collect();
         let (tx, rx) = mpsc::channel::<(usize, R)>();
 
         std::thread::scope(|scope| {
-            for _ in 0..threads {
-                let work = work.clone();
-                let cursor = cursor.clone();
+            for me in 0..threads {
                 let tx = tx.clone();
-                let f = &f;
+                let (slots, injector, deques, f) = (&slots, &injector, &deques, &f);
                 scope.spawn(move || loop {
-                    let idx = {
-                        let mut c = cursor.lock().unwrap();
-                        if *c >= n {
+                    // 1. local LIFO pop
+                    if let Some(idx) = deques[me].pop() {
+                        // SAFETY: the pop gave us the exclusive claim.
+                        let item = unsafe { slots.take(idx) };
+                        if tx.send((idx, f(idx, item))).is_err() {
                             break;
                         }
-                        let i = *c;
-                        *c += 1;
-                        i
-                    };
-                    let item = work.lock().unwrap()[idx].take().expect("item taken twice");
-                    let r = f(idx, item);
-                    if tx.send((idx, r)).is_err() {
+                        continue;
+                    }
+                    // 2. refill from the injector
+                    if let Some((lo, hi)) = injector.claim() {
+                        deques[me].install(lo, hi);
+                        continue;
+                    }
+                    // 3. steal the front half of someone else's range
+                    let stolen = (1..threads).find_map(|off| deques[(me + off) % threads].steal());
+                    if let Some((lo, hi)) = stolen {
+                        deques[me].install(lo, hi);
+                        continue;
+                    }
+                    // 4. injector drained and every visible deque empty
+                    //    → done.  (A range stolen-but-not-yet-installed
+                    //    is invisible here, but its thief still holds it
+                    //    and will run it — exiting early only trims the
+                    //    tail of the schedule, never loses items.)
+                    if deques.iter().all(Deque::is_empty) {
                         break;
                     }
+                    std::thread::yield_now();
                 });
             }
             drop(tx);
@@ -131,5 +332,47 @@ mod tests {
     fn zero_means_cpu_count() {
         let pool = Pool::new(0);
         assert!(pool.workers() >= 1);
+    }
+
+    #[test]
+    fn every_chunk_hint_gives_identical_results() {
+        let pool = Pool::new(4);
+        let expected: Vec<u64> = (0..257u64).map(|x| x * x + 1).collect();
+        for hint in [0, 1, 3, 64, 1000] {
+            let out = pool.map_chunked((0..257u64).collect(), hint, |_, x| x * x + 1);
+            assert_eq!(out, expected, "chunk_hint={hint} diverged");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let pool = Pool::new(16);
+        let out = pool.map_chunked(vec![10u64, 20, 30], 1, |i, x| x + i as u64);
+        assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn deque_pop_and_steal_protocol() {
+        let d = Deque::new();
+        assert!(d.is_empty());
+        d.install(4, 10);
+        assert_eq!(d.pop(), Some(9)); // LIFO: back first
+        assert_eq!(d.steal(), Some((4, 7))); // FIFO: front half
+        assert_eq!(d.pop(), Some(9 - 1)); // remaining [7, 9)
+        assert_eq!(d.pop(), Some(7));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.steal(), None);
+    }
+
+    #[test]
+    fn injector_covers_all_items_exactly_once() {
+        let inj = Injector::new(103, 10);
+        let mut seen = vec![0u32; 103];
+        while let Some((lo, hi)) = inj.claim() {
+            for i in lo..hi {
+                seen[i as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "injector dropped or duplicated an index");
     }
 }

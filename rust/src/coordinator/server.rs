@@ -9,11 +9,20 @@
 //!   ← {"ok":true,"metrics":{…},"markets":…}
 //!   → {"cmd":"shutdown"}
 //!   ← {"ok":true}
+//!
+//! The accept loop blocks in `accept(2)` — no polling, no latency
+//! floor.  Shutdown still works because the trigger both sets the
+//! latch and opens a throwaway connection to the listener (the
+//! self-pipe trick, TCP edition), which wakes the blocked acceptor so
+//! it can observe the flag.  Finished connection threads are reaped on
+//! every accept, so a long-lived server holds handles only for
+//! currently-live connections rather than growing without bound.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use super::leader::{Arm, Coordinator, FtKind, PolicyKind};
 use crate::err;
@@ -22,47 +31,94 @@ use crate::sim::{JobResult, RunConfig};
 use crate::util::error::Result;
 use crate::util::json::Json;
 
+/// Shutdown latch plus acceptor wakeup.  Setting a flag alone cannot
+/// unpark a thread blocked in `accept(2)`; the trigger therefore also
+/// connects to the bound address so the acceptor returns and re-checks
+/// the flag.
+struct Shutdown {
+    flag: AtomicBool,
+    addr: Mutex<Option<SocketAddr>>,
+}
+
+impl Shutdown {
+    fn new() -> Shutdown {
+        Shutdown { flag: AtomicBool::new(false), addr: Mutex::new(None) }
+    }
+
+    fn is_set(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    fn trigger(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        // Wake the acceptor.  Errors are fine: the listener may not be
+        // bound yet (flag alone suffices) or may already be gone.
+        if let Some(addr) = *self.addr.lock().unwrap() {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+        }
+    }
+}
+
 pub struct Server {
     coordinator: Arc<Coordinator>,
-    shutdown: Arc<AtomicBool>,
+    shutdown: Arc<Shutdown>,
     next_job_id: AtomicU64,
+    /// connection threads joined by the in-loop reaper (not at shutdown)
+    reaped: AtomicU64,
+    /// high-water mark of live (unreaped) connection-thread handles
+    peak_live: AtomicUsize,
 }
 
 impl Server {
     pub fn new(coordinator: Coordinator) -> Server {
         Server {
             coordinator: Arc::new(coordinator),
-            shutdown: Arc::new(AtomicBool::new(false)),
+            shutdown: Arc::new(Shutdown::new()),
             next_job_id: AtomicU64::new(1),
+            reaped: AtomicU64::new(0),
+            peak_live: AtomicUsize::new(0),
         }
     }
 
     /// Bind and serve until a `shutdown` command arrives.  Returns the
     /// bound address through `on_ready` (useful for tests with port 0).
-    pub fn serve(&self, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    pub fn serve(&self, addr: &str, on_ready: impl FnOnce(SocketAddr)) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
-        listener.set_nonblocking(true)?;
-        on_ready(listener.local_addr()?);
-        crate::log_info!("control plane listening on {}", listener.local_addr()?);
+        let local = listener.local_addr()?;
+        *self.shutdown.addr.lock().unwrap() = Some(local);
+        on_ready(local);
+        crate::log_info!("control plane listening on {local}");
         let mut handles = Vec::new();
-        while !self.shutdown.load(Ordering::SeqCst) {
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    crate::log_debug!("connection from {peer}");
-                    let coordinator = self.coordinator.clone();
-                    let shutdown = self.shutdown.clone();
-                    let id = self.next_job_id.fetch_add(1_000_000, Ordering::SeqCst);
-                    handles.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, &coordinator, &shutdown, id) {
-                            crate::log_warn!("connection error: {e:#}");
-                        }
-                    }));
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(10));
-                }
+        while !self.shutdown.is_set() {
+            let (stream, peer) = match listener.accept() {
+                Ok(accepted) => accepted,
                 Err(e) => return Err(e.into()),
+            };
+            if self.shutdown.is_set() {
+                // the wakeup connection (or a client racing shutdown)
+                break;
             }
+            crate::log_debug!("connection from {peer}");
+            let coordinator = self.coordinator.clone();
+            let shutdown = self.shutdown.clone();
+            let id = self.next_job_id.fetch_add(1_000_000, Ordering::SeqCst);
+            handles.push(std::thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, &coordinator, &shutdown, id) {
+                    crate::log_warn!("connection error: {e:#}");
+                }
+            }));
+            // Reap finished connection threads so `handles` holds only
+            // live connections (a long-running server must not grow it
+            // unboundedly — pinned by `reaps_finished_conn_threads`).
+            for h in std::mem::take(&mut handles) {
+                if h.is_finished() {
+                    let _ = h.join();
+                    self.reaped.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    handles.push(h);
+                }
+            }
+            self.peak_live.fetch_max(handles.len(), Ordering::Relaxed);
         }
         for h in handles {
             let _ = h.join();
@@ -71,17 +127,27 @@ impl Server {
     }
 
     pub fn request_shutdown(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        self.shutdown.trigger();
+    }
+
+    /// Connection threads joined by the in-loop reaper (excludes the
+    /// final drain at shutdown).
+    pub fn reaped_conn_threads(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of simultaneously-held connection handles.
+    pub fn peak_live_conn_threads(&self) -> usize {
+        self.peak_live.load(Ordering::Relaxed)
     }
 }
 
 fn handle_conn(
     stream: TcpStream,
     coordinator: &Coordinator,
-    shutdown: &AtomicBool,
+    shutdown: &Shutdown,
     id_base: u64,
 ) -> Result<()> {
-    stream.set_nonblocking(false)?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     let mut next_id = id_base;
@@ -95,7 +161,7 @@ fn handle_conn(
             Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(format!("{e:#}")))]),
         };
         writeln!(writer, "{reply}")?;
-        if shutdown.load(Ordering::SeqCst) {
+        if shutdown.is_set() {
             break;
         }
     }
@@ -105,7 +171,7 @@ fn handle_conn(
 fn handle_request(
     line: &str,
     c: &Coordinator,
-    shutdown: &AtomicBool,
+    shutdown: &Shutdown,
     next_id: &mut u64,
 ) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| err!("bad json: {e}"))?;
@@ -133,7 +199,7 @@ fn handle_request(
             ("backend", Json::str(c.analytics_backend())),
         ])),
         "shutdown" => {
-            shutdown.store(true, Ordering::SeqCst);
+            shutdown.trigger();
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
         other => Err(err!("unknown cmd '{other}'")),
@@ -161,7 +227,7 @@ mod tests {
     use crate::sim::World;
     use std::io::{BufRead, BufReader, Write};
 
-    fn request(addr: std::net::SocketAddr, line: &str) -> Json {
+    fn request(addr: SocketAddr, line: &str) -> Json {
         let mut s = TcpStream::connect(addr).unwrap();
         writeln!(s, "{line}").unwrap();
         let mut reader = BufReader::new(s.try_clone().unwrap());
@@ -170,16 +236,22 @@ mod tests {
         Json::parse(&reply).unwrap()
     }
 
-    #[test]
-    fn submit_status_shutdown_roundtrip() {
+    fn spawn_server(workers: usize) -> (Arc<Server>, SocketAddr, std::thread::JoinHandle<()>) {
         let world = World::generate(24, 0.5, 33);
-        let server = Arc::new(Server::new(Coordinator::new(world, AnalyticsEngine::native(), 2)));
+        let server =
+            Arc::new(Server::new(Coordinator::new(world, AnalyticsEngine::native(), workers)));
         let (tx, rx) = std::sync::mpsc::channel();
         let s2 = server.clone();
         let t = std::thread::spawn(move || {
             s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
         });
         let addr = rx.recv().unwrap();
+        (server, addr, t)
+    }
+
+    #[test]
+    fn submit_status_shutdown_roundtrip() {
+        let (_server, addr, t) = spawn_server(2);
 
         let reply = request(addr, r#"{"cmd":"submit","len_h":2,"mem_gb":8,"policy":"o","ft":"none"}"#);
         assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
@@ -196,5 +268,37 @@ mod tests {
         let reply = request(addr, r#"{"cmd":"shutdown"}"#);
         assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
         t.join().unwrap();
+    }
+
+    #[test]
+    fn request_shutdown_wakes_blocked_acceptor() {
+        // With a blocking accept loop this only terminates if the
+        // trigger's self-connect wakeup actually fires.
+        let (server, _addr, t) = spawn_server(1);
+        server.request_shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn reaps_finished_conn_threads() {
+        let (server, addr, t) = spawn_server(1);
+        const CONNS: usize = 24;
+        for _ in 0..CONNS {
+            let reply = request(addr, r#"{"cmd":"status"}"#);
+            assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+            // give the just-closed connection's thread a moment to exit
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        request(addr, r#"{"cmd":"shutdown"}"#);
+        t.join().unwrap();
+        assert!(
+            server.reaped_conn_threads() >= 1,
+            "no connection thread was reaped before shutdown"
+        );
+        assert!(
+            server.peak_live_conn_threads() < CONNS,
+            "handle vector grew with every connection (peak {} for {CONNS} conns)",
+            server.peak_live_conn_threads()
+        );
     }
 }

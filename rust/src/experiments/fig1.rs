@@ -116,7 +116,7 @@ impl Fig1Runner {
             .ft(arm.ft)
             .rule(rule);
         let seeds: Vec<u64> = (0..self.opts.seeds).collect();
-        let runs: Vec<JobResult> = self.pool.map(seeds, |_, seed| {
+        let runs: Vec<JobResult> = self.pool.map_chunked(seeds, 1, |_, seed| {
             base.clone().start_t(self.start_for(seed, job.exec_len_h)).seed(seed).run()
         });
         AggregateResult::from_runs(&runs)

@@ -670,6 +670,12 @@ fn serve(raw: &[String]) -> Result<(), String> {
     let coordinator = Coordinator::new(world, engine, a.workers()?);
     let server = Server::new(coordinator);
     server
-        .serve(a.str("addr"), |addr| println!("listening on {addr} — JSON lines: submit/status/shutdown"))
+        .serve(a.str("addr"), |addr| {
+            println!("listening on {addr} — JSON lines: submit/status/shutdown");
+            // stdout is block-buffered when piped; harnesses parsing the
+            // bound address (tests/integration_cli.rs) need it now
+            use std::io::Write as _;
+            let _ = std::io::stdout().flush();
+        })
         .map_err(|e| format!("serve: {e:#}"))
 }

@@ -164,7 +164,7 @@ impl<'w> Scenario<'w> {
     /// worker count.
     pub fn replicate_on(&self, pool: &Pool, n_seeds: u64) -> AggregateResult {
         let runs: Vec<JobResult> =
-            pool.map((0..n_seeds).collect(), |_, i| self.run_seeded(self.seed + i));
+            pool.map_chunked((0..n_seeds).collect(), 1, |_, i| self.run_seeded(self.seed + i));
         AggregateResult::from_runs(&runs)
     }
 }

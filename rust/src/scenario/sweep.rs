@@ -190,8 +190,11 @@ impl<'w> Sweep<'w> {
             .flat_map(|p| (0..seeds).map(move |s| (p, s)))
             .collect();
         let pool = Pool::new(self.workers);
+        // chunk hint 1: every (point, seed) run is milliseconds-scale
+        // with wildly skewed costs, so each must be independently
+        // stealable for nested grids to saturate many-core hosts
         let runs: Vec<JobResult> =
-            pool.map(items, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
+            pool.map_chunked(items, 1, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
         runs.chunks(seeds as usize)
             .zip(points)
             .map(|(chunk, point)| SweepRow {

@@ -45,10 +45,15 @@ impl CommandSpec {
 
     /// Register the global `--workers` option shared by every
     /// subcommand that fans work out over `coordinator::Pool`.  The
-    /// default `0` resolves to one worker per available CPU
+    /// default `0` resolves through the `SIWOFT_WORKERS` environment
+    /// variable, then to one worker per available CPU
     /// (`std::thread::available_parallelism`) inside `Pool::new`.
     pub fn workers_opt(self) -> Self {
-        self.opt("workers", "0", "worker threads for parallel fan-out (0 = one per CPU core)")
+        self.opt(
+            "workers",
+            "0",
+            "worker threads for parallel fan-out (0 = $SIWOFT_WORKERS, else one per CPU core)",
+        )
     }
 
     pub fn usage(&self) -> String {
@@ -144,6 +149,10 @@ impl Args {
         self.str(name).parse().map_err(|_| format!("--{name} must be an integer"))
     }
     /// The `--workers` value registered via [`CommandSpec::workers_opt`].
+    /// The auto default (`0`) resolves inside `Pool::new`: first the
+    /// `SIWOFT_WORKERS` environment variable (how the CI test matrix
+    /// pins every auto-sized pool, CLI or library), then one worker per
+    /// available CPU.
     pub fn workers(&self) -> Result<usize, String> {
         self.usize("workers")
     }
@@ -232,6 +241,9 @@ mod tests {
 
     #[test]
     fn workers_opt_defaults_to_auto() {
+        // no env set/remove here: SIWOFT_WORKERS is read (not mutated)
+        // by Pool::new on the 0 path, and mutating process env from a
+        // parallel test thread races glibc getenv
         let sp = CommandSpec::new("x", "").workers_opt();
         let a = sp.parse(&[]).unwrap();
         assert_eq!(a.workers().unwrap(), 0);

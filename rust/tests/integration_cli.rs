@@ -210,6 +210,58 @@ fn shipped_configs_parse() {
 }
 
 #[test]
+fn serve_load_small_n_beats_the_poll_floor() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::process::Stdio;
+
+    // tiny world so the startup analytics epoch is instant
+    let mut child = Command::new(bin())
+        .args(["serve", "--addr", "127.0.0.1:0", "--markets", "16", "--months", "0.5"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .env("SIWOFT_LOG", "error")
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn siwoft serve");
+    let mut ready = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut ready).unwrap();
+    // "listening on 127.0.0.1:<port> — JSON lines: …"
+    let addr: SocketAddr = ready
+        .split("listening on ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in banner: {ready:?}"))
+        .parse()
+        .unwrap();
+
+    // small-N concurrent load: 4 connections × 25 submits
+    let report = siwoft::coordinator::loadgen::run_load(addr, 4, 25).unwrap();
+    assert_eq!(report.total_requests(), 100);
+    let (p50, p99) = (report.submit_p50_ms(), report.submit_p99_ms());
+    println!("serve load: submit p50 {p50:.3} ms, p99 {p99:.3} ms");
+    assert!(p50 < 10.0, "submit p50 {p50:.3} ms — the serve path regressed to polling scale");
+
+    // sequential fresh-connection probe: the old accept loop slept
+    // 10 ms between polls, putting a ~5 ms *median* under every fresh
+    // connect.  Blocking accept is sub-millisecond; assert the median
+    // (robust to scheduler-noise outliers on shared CI runners) stays
+    // clearly below the old floor while leaving ~1 ms of margin above
+    // a loaded runner's baseline.
+    let probes = siwoft::coordinator::loadgen::probe_accept_latency(addr, 40).unwrap();
+    let accept_p50 = siwoft::util::stats::percentile(&probes, 50.0);
+    println!("serve load: accept p50 {accept_p50:.3} ms over {} probes", probes.len());
+    assert!(
+        accept_p50 < 4.0,
+        "accept p50 {accept_p50:.3} ms — the 10 ms poll floor is back"
+    );
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited with {status:?}");
+}
+
+#[test]
 fn ablation_subcommand_runs() {
     let dir = tmpdir("abl");
     let out_dir = dir.to_str().unwrap();

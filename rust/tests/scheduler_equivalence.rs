@@ -1,0 +1,110 @@
+//! Scheduler equivalence: the full `Sweep` registry grid, byte-identical
+//! across worker counts on the work-stealing pool.
+//!
+//! Extends the pattern of `tests/scenario_equivalence.rs` from a
+//! two-point worker check to the acceptance grid this PR's scheduler
+//! must hold: (all policies × all fts × all rules) × 3 seeds, with
+//! workers ∈ {1, 2, 8} (plus `SIWOFT_TEST_WORKERS` when the CI matrix
+//! pins one).  `workers = 1` takes the pool's sequential fast path, so
+//! it doubles as the oracle: every parallel schedule must reproduce its
+//! ledgers bit-for-bit (every run is a pure function of its seed and
+//! the collector orders results by submission index).
+
+use siwoft::prelude::*;
+
+fn world() -> (World, f64) {
+    let mut w = World::generate(48, 1.0, 7331);
+    let start = w.split_train(0.6);
+    (w, start)
+}
+
+fn rules() -> Vec<RevocationRule> {
+    vec![
+        RevocationRule::Trace,
+        RevocationRule::ForcedRate { per_day: 3.0 },
+        RevocationRule::ForcedCount { total: 2 },
+    ]
+}
+
+fn worker_matrix() -> Vec<usize> {
+    let mut m = vec![1, 2, 8];
+    if let Some(w) =
+        std::env::var("SIWOFT_TEST_WORKERS").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        if !m.contains(&w) && w > 0 {
+            m.push(w);
+        }
+    }
+    m
+}
+
+#[test]
+fn full_grid_is_identical_across_worker_counts() {
+    let (w, start) = world();
+    let run = |workers: usize| {
+        Sweep::on(&w)
+            .job(Job::new(1, 5.0, 16.0))
+            .policies(PolicyKind::all())
+            .fts(FtKind::all())
+            .rules(rules())
+            .seeds(3)
+            .start_t(start)
+            .workers(workers)
+            .run()
+    };
+    let reference = run(1);
+    assert_eq!(
+        reference.len(),
+        PolicyKind::all().len() * FtKind::all().len() * rules().len(),
+        "grid coverage shrank"
+    );
+    for workers in worker_matrix() {
+        if workers == 1 {
+            continue;
+        }
+        let alt = run(workers);
+        assert_eq!(reference.len(), alt.len(), "row count diverged at workers={workers}");
+        for (a, b) in reference.iter().zip(&alt) {
+            let tag = format!(
+                "workers={workers} policy={} ft={} rule={}",
+                a.point.policy.label(),
+                a.point.ft.label(),
+                a.point.rule.label()
+            );
+            assert_eq!(a.point, b.point, "{tag}: point order diverged");
+            assert_eq!(a.agg, b.agg, "{tag}: aggregate diverged");
+            assert_eq!(a.runs.len(), b.runs.len(), "{tag}: run count");
+            for (x, y) in a.runs.iter().zip(&b.runs) {
+                assert_eq!(x.ledger, y.ledger, "{tag}: per-run ledger diverged");
+                assert_eq!(x.revocations, y.revocations, "{tag}: revocations");
+                assert_eq!(x.sessions, y.sessions, "{tag}: sessions");
+                assert_eq!(x.completed, y.completed, "{tag}: completed");
+                assert_eq!(x.makespan_h, y.makespan_h, "{tag}: makespan");
+                for &c in siwoft::sim::CATEGORIES {
+                    assert_eq!(x.ledger.time.get(c), y.ledger.time.get(c), "{tag}: time {c}");
+                    assert_eq!(x.ledger.cost.get(c), y.ledger.cost.get(c), "{tag}: cost {c}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nested_replication_is_identical_across_worker_counts() {
+    // the nested shape the chunk-hint work targets: a sweep point's
+    // seed replication driven through Scenario::replicate_on with the
+    // same pool sizes the grid test uses
+    let (w, start) = world();
+    let scen = Scenario::on(&w)
+        .job(Job::new(9, 4.0, 16.0))
+        .policy(PolicyKind::FtSpot)
+        .ft(FtKind::CheckpointHourly)
+        .rule(RevocationRule::ForcedRate { per_day: 4.0 })
+        .start_t(start)
+        .seed(3);
+    let reference = scen.replicate(12);
+    for workers in worker_matrix() {
+        let agg = scen.replicate_on(&Pool::new(workers), 12);
+        assert_eq!(reference, agg, "replicate_on(workers={workers}) != serial replicate");
+    }
+}

@@ -1,0 +1,145 @@
+//! Property tests (via `util::prop::check`) for the work-stealing
+//! `coordinator::Pool` scheduler: the whole point of the redesign is to
+//! be a *drop-in* for a sequential map, so these pin
+//!
+//! 1. result-order preservation against the sequential oracle under
+//!    random (n_items, n_workers, chunk hint, cost skew);
+//! 2. no item dropped or executed twice;
+//! 3. `workers = 1` bit-identical to a plain sequential map (f64 bits);
+//!
+//! all replayable by sub-seed.  `SIWOFT_PROP_STRESS=k` multiplies the
+//! case counts (the CI stress job runs 10×);  `SIWOFT_TEST_WORKERS`
+//! pins the worker count instead of randomizing it (the CI matrix).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use siwoft::coordinator::Pool;
+use siwoft::util::prop::check;
+use siwoft::util::rng::Rng;
+
+/// Case-count multiplier for the CI stress job.
+fn stress(cases: usize) -> usize {
+    match std::env::var("SIWOFT_PROP_STRESS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(k) if k > 1 => cases * k,
+        _ => cases,
+    }
+}
+
+/// Worker count: the CI matrix pins it via `SIWOFT_TEST_WORKERS`;
+/// otherwise use whatever the generator drew.
+fn workers_or_env(drawn: usize) -> usize {
+    std::env::var("SIWOFT_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(drawn)
+}
+
+/// A deterministic, cost-skewed unit of work: cheap for most items,
+/// ~100× heavier for a random subset, so steals actually happen.
+fn busy(i: usize, cost: u64) -> u64 {
+    let mut s = cost ^ ((i as u64) << 21) ^ 0x9E37_79B9_7F4A_7C15;
+    for k in 0..cost {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(k);
+    }
+    s
+}
+
+fn gen_case(r: &mut Rng) -> (usize, usize, Vec<u64>) {
+    let n = r.below(400);
+    let workers = workers_or_env(1 + r.below(8));
+    let chunk = r.below(5); // 0 = auto, 1..4 explicit hints
+    let costs: Vec<u64> =
+        (0..n).map(|_| if r.chance(0.15) { 5_000 + r.below(20_000) as u64 } else { r.below(64) as u64 }).collect();
+    (workers, chunk, costs)
+}
+
+#[test]
+fn prop_scheduler_matches_the_sequential_oracle() {
+    check(stress(60), 11, gen_case, |(workers, chunk, costs)| {
+        let expected: Vec<u64> =
+            costs.iter().enumerate().map(|(i, &c)| busy(i, c)).collect();
+        let pool = Pool::new(*workers);
+        let out = pool.map_chunked(costs.clone(), *chunk, |i, c| busy(i, c));
+        if out.len() != expected.len() {
+            return Err(format!("length {} != {}", out.len(), expected.len()));
+        }
+        if out != expected {
+            let bad = out.iter().zip(&expected).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "order not preserved: index {bad} (workers={workers}, chunk={chunk}, n={})",
+                costs.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_item_dropped_or_duplicated() {
+    check(stress(40), 12, gen_case, |(workers, chunk, costs)| {
+        let n = costs.len();
+        let touched: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let pool = Pool::new(*workers);
+        let out = pool.map_chunked((0..n).collect::<Vec<usize>>(), *chunk, |i, item| {
+            touched[item].fetch_add(1, Ordering::Relaxed);
+            // the index the scheduler claims must be the item's own
+            (i, item)
+        });
+        for (idx, &(i, item)) in out.iter().enumerate() {
+            if i != idx || item != idx {
+                return Err(format!("slot {idx} holds (i={i}, item={item})"));
+            }
+        }
+        for (idx, t) in touched.iter().enumerate() {
+            match t.load(Ordering::Relaxed) {
+                1 => {}
+                0 => return Err(format!("item {idx} never executed (n={n}, workers={workers})")),
+                k => return Err(format!("item {idx} executed {k} times (n={n}, workers={workers})")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_worker_is_bitwise_sequential() {
+    check(
+        stress(40),
+        13,
+        |r: &mut Rng| {
+            let n = r.below(200);
+            (0..n).map(|_| r.range(-1e6, 1e6)).collect::<Vec<f64>>()
+        },
+        |xs| {
+            // an order-sensitive f64 computation: any reordering or
+            // re-association would change result bits
+            let f = |i: usize, x: f64| (x * 1.000_000_1).sin() + (i as f64).sqrt() * 1e-3;
+            let pool = Pool::new(1);
+            let out = pool.map(xs.clone(), f);
+            let seq: Vec<f64> = xs.iter().enumerate().map(|(i, &x)| f(i, x)).collect();
+            for (i, (a, b)) in out.iter().zip(&seq).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("bit divergence at {i}: {a:?} vs {b:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_equals_single_worker_for_any_chunking() {
+    // cross-worker determinism on the same deterministic workload:
+    // workers ∈ {2, 8} (or the CI-pinned count) must reproduce the
+    // workers=1 output exactly, for every chunk hint drawn
+    check(stress(30), 14, gen_case, |(workers, chunk, costs)| {
+        let reference = Pool::new(1).map(costs.clone(), |i, c| busy(i, c));
+        for w in [2, 8, *workers] {
+            let out = Pool::new(w).map_chunked(costs.clone(), *chunk, |i, c| busy(i, c));
+            if out != reference {
+                return Err(format!("workers={w}, chunk={chunk}: diverged from workers=1"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,90 @@
+//! Bench: DAG throughput — packed DAG execution vs. the equivalent
+//! batch of independent jobs, plus the packer and spec-validation hot
+//! paths.  These are the §Perf numbers for the `dag::` subsystem
+//! (EXPERIMENTS.md).
+//!
+//!     cargo bench --bench dag
+
+use siwoft::dag::{DagSpec, Packer};
+use siwoft::prelude::*;
+use siwoft::util::benchkit::{Bench, Suite};
+use siwoft::util::stats::p50_p99;
+
+fn pipeline() -> DagSpec {
+    DagSpec::new("pipeline")
+        .stage("a-ingest", 2.0, 8.0, &[])
+        .stage("b-clean", 3.0, 16.0, &["a-ingest"])
+        .stage("c-features-a", 2.0, 16.0, &["b-clean"])
+        .stage("c-features-b", 2.0, 8.0, &["b-clean"])
+        .stage("d-train", 6.0, 32.0, &["c-features-a", "c-features-b"])
+        .stage("e-report", 1.0, 4.0, &["d-train"])
+}
+
+fn main() {
+    let mut world = World::generate(96, 2.0, 7);
+    let start = world.split_train(0.6);
+    let spec = pipeline();
+    let n_stages = spec.len() as f64;
+
+    let bench = Bench::with_times(300, 1200);
+    let mut suite = Suite::new("DAG workloads: packing + runner throughput");
+    suite.header();
+
+    // the DAG path: 6 stages, packed, precedence-ordered
+    for (label, rule) in [
+        ("trace revocations", RevocationRule::Trace),
+        ("rate:6 revocations", RevocationRule::ForcedRate { per_day: 6.0 }),
+    ] {
+        let scen = Scenario::on(&world).start_t(start).rule(rule).dag(spec.clone());
+        let mut seed = 0u64;
+        suite.push(bench.run_with_units(
+            &format!("dag: 6-stage pipeline ({label})"),
+            n_stages,
+            || {
+                seed = seed.wrapping_add(1);
+                scen.run_seeded(seed).makespan_h
+            },
+        ));
+    }
+
+    // the equivalent independent-job batch: same six (len, mem) points
+    // through the single-job session simulator, no packing, no edges
+    let jobs: Vec<Job> = spec
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Job::new(i as u64, s.exec_len_h, s.mem_gb))
+        .collect();
+    let mut seed = 0u64;
+    suite.push(bench.run_with_units("batch: 6 independent jobs (trace)", n_stages, || {
+        seed = seed.wrapping_add(1);
+        jobs.iter()
+            .map(|j| {
+                Scenario::on(&world).job(j.clone()).start_t(start).run_seeded(seed).makespan_h
+            })
+            .sum::<f64>()
+    }));
+
+    // packer hot path: 256 mixed footprints, FFD onto 64 GB instances
+    let packer = Packer::new(64.0);
+    let items: Vec<(usize, f64)> =
+        (0..256).map(|i| (i, [4.0, 8.0, 16.0, 32.0][i % 4])).collect();
+    suite.push(bench.run_with_units("packer: FFD 256 stages @ 64 GB", 256.0, || {
+        packer.pack(&items).len()
+    }));
+
+    // spec parse + validate (the CLI's --spec path)
+    let toml = std::fs::read_to_string("configs/dag_pipeline.toml")
+        .expect("run from rust/ (cargo bench)");
+    suite.push(bench.run("spec: parse + validate dag_pipeline.toml", || {
+        DagSpec::parse(&toml).unwrap().validate().unwrap().len()
+    }));
+
+    // makespan distribution sanity for the report (not a timing metric)
+    let scen = Scenario::on(&world).start_t(start).dag(spec);
+    let makespans: Vec<f64> = (0..32).map(|s| scen.run_seeded(s).makespan_h).collect();
+    let (p50, p99) = p50_p99(&makespans);
+    println!("\n  dag makespan over 32 seeds: p50 {p50:.3} h  p99 {p99:.3} h");
+
+    siwoft::util::csvio::write_file("results/bench_dag.csv", &suite.to_csv()).ok();
+}

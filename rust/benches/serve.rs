@@ -11,7 +11,7 @@ use siwoft::coordinator::{loadgen, Coordinator, Server};
 use siwoft::runtime::AnalyticsEngine;
 use siwoft::sim::World;
 use siwoft::util::benchkit::fmt_rate;
-use siwoft::util::stats::percentile;
+use siwoft::util::stats::p50_p99;
 
 fn main() {
     let world = World::generate(48, 1.0, 7);
@@ -59,17 +59,16 @@ fn main() {
     }
 
     let probes = loadgen::probe_accept_latency(addr, 200).expect("accept probe failed");
+    let (accept_p50, accept_p99) = p50_p99(&probes);
     println!(
         "  {:<32} {:>9.3} ms {:>9.3} ms   (old poll floor: ~5 ms p50 / 10 ms p99)",
-        "accept: sequential fresh conns",
-        percentile(&probes, 50.0),
-        percentile(&probes, 99.0)
+        "accept: sequential fresh conns", accept_p50, accept_p99
     );
     rows.push(vec![
         "accept_probe".to_string(),
         probes.len().to_string(),
-        format!("{:.4}", percentile(&probes, 50.0)),
-        format!("{:.4}", percentile(&probes, 99.0)),
+        format!("{:.4}", accept_p50),
+        format!("{:.4}", accept_p99),
         String::new(),
         String::new(),
         String::new(),

@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::err;
 use crate::util::error::Result;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, sort_samples};
 
 /// A trivial-but-real submit: runs an actual (fast) on-demand
 /// simulation on the server, so latencies cover parse → simulate →
@@ -98,8 +98,8 @@ pub fn run_load(addr: SocketAddr, conns: usize, submits_per_conn: usize) -> Resu
         submit_ms.extend(lats);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    submit_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    first_reply_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_samples(&mut submit_ms);
+    sort_samples(&mut first_reply_ms);
     Ok(LoadReport { conns, submits_per_conn, wall_s, submit_ms, first_reply_ms })
 }
 
@@ -125,7 +125,7 @@ pub fn probe_accept_latency(addr: SocketAddr, probes: usize) -> Result<Vec<f64>>
         // connects
         std::thread::sleep(Duration::from_millis(2));
     }
-    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_samples(&mut out);
     Ok(out)
 }
 

@@ -1,0 +1,30 @@
+//! DAG workloads with multi-job packing — the scenario class the paper
+//! leaves open (single independent jobs) and the ROADMAP names: stages
+//! with precedence edges, several containers packed per instance, and
+//! revocations that wipe whole subtrees of in-flight work.
+//!
+//! Three pieces (DESIGN.md §9):
+//!
+//! * [`spec`]   — the [`DagSpec`]/[`StageSpec`] model: jobs + precedence
+//!   edges, validated acyclic, parsed from TOML
+//!   (`rust/configs/dag_*.toml`) or built in code;
+//! * [`packer`] — [`Packer`]: first-fit-decreasing bin packing of ready
+//!   stages onto instances by memory footprint, with a per-instance
+//!   capacity from the catalog;
+//! * [`runner`] — [`DagRunner`]: drives the `sim::Engine` event loop so
+//!   a revocation kills every stage packed on the instance and
+//!   re-enqueues them per the active policy/FT pairing, with
+//!   `sim::accounting` attributing lost / restart / idle-slot time per
+//!   stage.
+//!
+//! Entry points: `Scenario::on(&world).….dag(spec).run()` for one DAG,
+//! [`Sweep::run_dags`](crate::scenario::Sweep::run_dags) for grids, and
+//! `siwoft dag --spec <toml>` on the CLI.
+
+pub mod packer;
+pub mod runner;
+pub mod spec;
+
+pub use packer::{Bin, Packer};
+pub use runner::{DagAggregate, DagResult, DagRunner, DagScenario, StageAgg, StageResult};
+pub use spec::{DagSpec, StageSpec};

@@ -1,0 +1,1180 @@
+//! The DAG session runner: plays a [`DagSpec`] against the world by
+//! driving the [`sim::Engine`](crate::sim::Engine) event loop.
+//!
+//! Model (DESIGN.md §9):
+//!
+//! * Ready stages (all deps completed) are bin-packed onto instances by
+//!   the FFD [`Packer`]; every packed instance ("bin") gets its market
+//!   from the policy — the bin is presented to the policy as one job
+//!   whose length is the longest remaining stage and whose footprint is
+//!   the packed memory, so suitability/lifetime rules apply unchanged.
+//! * Stages on a bin run concurrently in their own containers: a shared
+//!   startup span, a per-stage recovery/migration prologue, then the
+//!   work/checkpoint timeline of the stage's FT mechanism.  Stage
+//!   outputs are durably uploaded at stage completion, so a later
+//!   revocation of the same instance re-runs only the stages still
+//!   executing on it — and *all* of them.
+//! * A revocation (trace-driven, Poisson [`RevocationRule::ForcedRate`]
+//!   arrivals revoking the lowest-id active spot bin, or
+//!   [`RevocationRule::ForcedCount`] thresholds on the DAG's global
+//!   new-work frontier) kills every in-flight stage on the bin; each
+//!   consults its FT mechanism (restart / restore / migrate) and
+//!   re-enters the ready set, where the packer immediately re-packs it.
+//! * Accounting: each stage owns a [`Ledger`]; wall-clock categories
+//!   follow its own timeline, costs are the stage's memory share of the
+//!   instance price.  Two cost-only categories close the loop:
+//!   [`Category::Buffer`] (billing-cycle tail, split by share) and
+//!   [`Category::Idle`] (a finished stage's share of instance time
+//!   while co-packed stages kept it running).
+//!
+//! Determinism: one `Rng` stream per (seed), `BTreeMap` bin storage,
+//! and the engine's FIFO tie-break make runs a pure function of
+//! (world, spec, policy, ft, rule, seed) — `tests/properties.rs` pins
+//! worker-count independence for DAG sweeps on top of this.
+
+use std::collections::BTreeMap;
+
+use super::packer::Packer;
+use super::spec::DagSpec;
+use crate::coordinator::Pool;
+use crate::ft::{FtMechanism, Recovery};
+use crate::job::{Job, JobProgress};
+use crate::market::session_cost;
+use crate::policy::{Ctx, Policy};
+use crate::scenario::{FtKind, Scenario};
+use crate::sim::accounting::{Breakdown, Category, Ledger};
+use crate::sim::engine::{Engine, Event};
+use crate::sim::{RevocationRule, RunConfig, World};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// results
+
+/// Outcome of one stage across the whole DAG run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageResult {
+    pub name: String,
+    pub ledger: Ledger,
+    pub revocations: u32,
+    pub sessions: u32,
+    pub completed: bool,
+    /// first session start (absolute sim hours); −1 if never started
+    pub started_at_h: f64,
+    /// completion time (absolute sim hours); −1 if not completed
+    pub completed_at_h: f64,
+    /// instance time this stage idled after finishing while co-packed
+    /// stages kept the bin running (its cost lands in `Category::Idle`)
+    pub idle_h: f64,
+}
+
+/// Outcome of one DAG execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DagResult {
+    pub dag: String,
+    pub policy: String,
+    pub ft: String,
+    pub stages: Vec<StageResult>,
+    /// wall-clock hours from submission to the last stage completion
+    pub makespan_h: f64,
+    /// instance revocation events (each kills a whole bin)
+    pub revocations: u32,
+    /// instance sessions launched (packed bins)
+    pub bins: u32,
+    pub completed: bool,
+}
+
+impl DagResult {
+    /// Total deployment cost across stages ($).
+    pub fn cost_usd(&self) -> f64 {
+        self.stages.iter().map(|s| s.ledger.cost_usd()).sum()
+    }
+
+    /// All stage ledgers merged (per-category totals).
+    pub fn ledger(&self) -> Ledger {
+        let mut out = Ledger::new();
+        for s in &self.stages {
+            out.merge(&s.ledger);
+        }
+        out
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&StageResult> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+}
+
+/// Per-stage means over a set of DAG runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StageAgg {
+    pub name: String,
+    pub time: Breakdown,
+    pub cost: Breakdown,
+    pub mean_revocations: f64,
+    pub mean_sessions: f64,
+    pub mean_idle_h: f64,
+    pub completion_rate: f64,
+}
+
+/// Mean DAG outcome over seeds (one "bar" of a DAG sweep).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DagAggregate {
+    pub n: usize,
+    pub mean_makespan_h: f64,
+    pub mean_cost_usd: f64,
+    pub mean_revocations: f64,
+    pub mean_bins: f64,
+    pub completion_rate: f64,
+    pub stages: Vec<StageAgg>,
+}
+
+impl DagAggregate {
+    pub fn from_runs(runs: &[DagResult]) -> DagAggregate {
+        if runs.is_empty() {
+            return DagAggregate::default();
+        }
+        let n = runs.len();
+        let nf = n as f64;
+        let n_stages = runs[0].stages.len();
+        let mut stages = Vec::with_capacity(n_stages);
+        for si in 0..n_stages {
+            let mut agg = StageAgg { name: runs[0].stages[si].name.clone(), ..Default::default() };
+            for r in runs {
+                let s = &r.stages[si];
+                agg.time.merge(&s.ledger.time);
+                agg.cost.merge(&s.ledger.cost);
+                agg.mean_revocations += s.revocations as f64;
+                agg.mean_sessions += s.sessions as f64;
+                agg.mean_idle_h += s.idle_h;
+                agg.completion_rate += s.completed as usize as f64;
+            }
+            agg.time = agg.time.scale(1.0 / nf);
+            agg.cost = agg.cost.scale(1.0 / nf);
+            agg.mean_revocations /= nf;
+            agg.mean_sessions /= nf;
+            agg.mean_idle_h /= nf;
+            agg.completion_rate /= nf;
+            stages.push(agg);
+        }
+        DagAggregate {
+            n,
+            mean_makespan_h: runs.iter().map(|r| r.makespan_h).sum::<f64>() / nf,
+            mean_cost_usd: runs.iter().map(|r| r.cost_usd()).sum::<f64>() / nf,
+            mean_revocations: runs.iter().map(|r| r.revocations as f64).sum::<f64>() / nf,
+            mean_bins: runs.iter().map(|r| r.bins as f64).sum::<f64>() / nf,
+            completion_rate: runs.iter().filter(|r| r.completed).count() as f64 / nf,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// scenario bridge
+
+/// A [`Scenario`] with a DAG attached: the builder's policy / FT / rule /
+/// start / seed settings drive [`DagRunner`] over the spec.
+#[derive(Clone, Debug)]
+pub struct DagScenario<'w> {
+    scen: Scenario<'w>,
+    spec: DagSpec,
+}
+
+impl<'w> DagScenario<'w> {
+    /// Build from an already-configured scenario.  Panics on an invalid
+    /// spec (load TOML specs through [`DagSpec::load`] to get a
+    /// `Result` instead).
+    pub fn from_scenario(scen: Scenario<'w>, spec: DagSpec) -> DagScenario<'w> {
+        if let Err(e) = spec.validate() {
+            panic!("invalid DAG spec: {e}");
+        }
+        DagScenario { scen, spec }
+    }
+
+    pub fn spec(&self) -> &DagSpec {
+        &self.spec
+    }
+
+    /// Run once with the scenario's configured seed.
+    pub fn run(&self) -> DagResult {
+        self.run_seeded(self.scen.seed_value())
+    }
+
+    /// Run once with an explicit seed.
+    pub fn run_seeded(&self, seed: u64) -> DagResult {
+        let policy = self.scen.build_policy();
+        let mut runner = DagRunner::with_policy(
+            self.scen.world(),
+            &self.spec,
+            policy,
+            self.scen.ft_kind(),
+            self.scen.run_config(),
+        );
+        runner.run(seed)
+    }
+
+    /// `n_seeds` replicates (seeds `seed .. seed + n`), serially.
+    pub fn replicate(&self, n_seeds: u64) -> DagAggregate {
+        let base = self.scen.seed_value();
+        let runs: Vec<DagResult> = (0..n_seeds).map(|i| self.run_seeded(base + i)).collect();
+        DagAggregate::from_runs(&runs)
+    }
+
+    /// Like [`DagScenario::replicate`] but fanned out over `pool` at
+    /// per-seed steal granularity; identical for any worker count.
+    pub fn replicate_on(&self, pool: &Pool, n_seeds: u64) -> DagAggregate {
+        let base = self.scen.seed_value();
+        let runs: Vec<DagResult> =
+            pool.map_chunked((0..n_seeds).collect(), 1, |_, i| self.run_seeded(base + i));
+        DagAggregate::from_runs(&runs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// runner
+
+/// Drives one DAG execution.  Prefer the [`Scenario::dag`] /
+/// [`Sweep`](crate::scenario::Sweep) entry points; this type is the
+/// engine room they share.
+pub struct DagRunner<'a> {
+    world: &'a World,
+    spec: &'a DagSpec,
+    policy: Box<dyn Policy>,
+    ft: FtKind,
+    cfg: RunConfig,
+}
+
+impl<'a> DagRunner<'a> {
+    pub fn with_policy(
+        world: &'a World,
+        spec: &'a DagSpec,
+        policy: Box<dyn Policy>,
+        ft: FtKind,
+        cfg: RunConfig,
+    ) -> DagRunner<'a> {
+        // k-way replication of packed bins is out of model scope: the
+        // replica markets would have to be chosen per bin against the
+        // same packing, which DESIGN.md §9 leaves to future work
+        let ft = if ft.build(&Job::new(0, 1.0, 1.0)).degree() > 1 {
+            crate::log_warn!("replication FT is not supported for DAG runs; using no-FT");
+            FtKind::None
+        } else {
+            ft
+        };
+        DagRunner { world, spec, policy, ft, cfg }
+    }
+
+    /// Execute the DAG once; a pure function of the constructor inputs
+    /// plus `seed`.
+    pub fn run(&mut self, seed: u64) -> DagResult {
+        self.spec.validate().expect("invalid DAG spec");
+        let n = self.spec.len();
+        let jobs: Vec<Job> = self
+            .spec
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Job::new(i as u64, s.exec_len_h, s.mem_gb).named(s.name.clone()))
+            .collect();
+        let fts: Vec<Box<dyn FtMechanism>> = jobs.iter().map(|j| self.ft.build(j)).collect();
+        // fail fast: spec validation can't see the catalog-derived cap
+        // (the CLI surfaces the same check as a friendly error)
+        let capacity = self
+            .spec
+            .effective_capacity(&self.world.catalog)
+            .unwrap_or_else(|e| panic!("{e}"));
+        let mut rng = Rng::with_stream(seed, 0xDA6_C0DE);
+        let t0 = self.cfg.start_t;
+        let schedule = match self.cfg.rule {
+            RevocationRule::Trace => DagSchedule::Trace,
+            RevocationRule::ForcedRate { per_day } => {
+                DagSchedule::Rate { per_h: (per_day / 24.0).max(1e-9) }
+            }
+            RevocationRule::ForcedCount { total } => {
+                // sorted-uniform fractions of the DAG's total work,
+                // capped below 0.98 so the final stretch completes
+                let mut fr: Vec<f64> = (0..total).map(|_| rng.f64() * 0.98).collect();
+                fr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let total_work = self.spec.total_work_h();
+                DagSchedule::Count {
+                    thresholds: fr.iter().map(|f| f * total_work).collect(),
+                    idx: 0,
+                }
+            }
+        };
+
+        self.policy.reset();
+        let policy_name = self.policy.name().to_string();
+        let mut sim = Sim {
+            world: self.world,
+            policy: self.policy.as_mut(),
+            cfg: &self.cfg,
+            packer: Packer::new(capacity),
+            rng,
+            schedule,
+            deps: self.spec.deps_idx(),
+            state: vec![StageState::Pending; n],
+            progress: vec![JobProgress::new(); n],
+            frontier: vec![0.0; n],
+            carry: vec![Carry::Fresh; n],
+            ledgers: vec![Ledger::new(); n],
+            sessions: vec![0; n],
+            started_at: vec![-1.0; n],
+            completed_at: vec![-1.0; n],
+            idle_h: vec![0.0; n],
+            stage_gen: vec![0; n],
+            stage_bin: vec![0; n],
+            jobs,
+            fts,
+            active: BTreeMap::new(),
+            next_bin: 0,
+            bins_launched: 0,
+            bin_revocations: 0,
+            aborted: false,
+            revoked_markets: Vec::new(),
+            w_closed: 0.0,
+            count_gen: 0,
+        };
+
+        let mut engine = Engine::new();
+        if let DagSchedule::Rate { per_h } = sim.schedule {
+            let first = t0 + sim.rng.exp(per_h);
+            engine.schedule_at(first, Event::Timer { tag: tag(K_RATE, 0, 0) });
+        }
+        sim.promote_ready();
+        sim.launch_ready(&mut engine, t0);
+        sim.resched_count(&mut engine, t0);
+
+        while let Some((t, ev)) = engine.next() {
+            if let Event::Timer { tag } = ev {
+                let (kind, gen, id) = untag(tag);
+                match kind {
+                    K_STAGE_DONE => sim.on_stage_done(&mut engine, t, gen, id as usize),
+                    K_BIN_REVOKE => sim.revoke_bin(&mut engine, t, id),
+                    K_RATE => sim.on_rate(&mut engine, t),
+                    K_COUNT => sim.on_count(&mut engine, t, gen),
+                    _ => {}
+                }
+            }
+        }
+
+        let completed = sim.state.iter().all(|s| *s == StageState::Done);
+        let end = if completed {
+            sim.completed_at.iter().fold(t0, |a, &b| a.max(b))
+        } else {
+            engine.now().max(t0)
+        };
+        let stages = (0..n)
+            .map(|i| StageResult {
+                name: self.spec.stages[i].name.clone(),
+                ledger: std::mem::take(&mut sim.ledgers[i]),
+                revocations: sim.progress[i].revocations,
+                sessions: sim.sessions[i],
+                completed: sim.state[i] == StageState::Done,
+                started_at_h: sim.started_at[i],
+                completed_at_h: sim.completed_at[i],
+                idle_h: sim.idle_h[i],
+            })
+            .collect();
+        DagResult {
+            dag: self.spec.name.clone(),
+            policy: policy_name,
+            ft: self.ft.label(),
+            stages,
+            makespan_h: end - t0,
+            revocations: sim.bin_revocations,
+            bins: sim.bins_launched,
+            completed,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// internal machinery
+
+/// Engine timer-tag layout: `kind << 56 | (gen & 0xFF_FFFF) << 32 | id`.
+/// Generations invalidate events that outlive the session (or crossing
+/// schedule) that created them.
+const K_STAGE_DONE: u64 = 1;
+const K_BIN_REVOKE: u64 = 2;
+const K_RATE: u64 = 3;
+const K_COUNT: u64 = 4;
+
+#[inline]
+fn tag(kind: u64, gen: u64, id: u64) -> u64 {
+    (kind << 56) | ((gen & 0xFF_FFFF) << 32) | (id & 0xFFFF_FFFF)
+}
+
+#[inline]
+fn untag(t: u64) -> (u64, u64, u64) {
+    (t >> 56, (t >> 32) & 0xFF_FFFF, t & 0xFFFF_FFFF)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum StageState {
+    Pending,
+    Ready,
+    Running,
+    Done,
+}
+
+/// State carried into a stage's next session after a revocation.
+#[derive(Clone, Copy, Debug)]
+enum Carry {
+    Fresh,
+    /// restart: boot + restore `recovery_h` of durable state
+    Recover(f64),
+    /// live migration: transfer instead of boot (progress preserved)
+    Migrate(f64),
+}
+
+/// One activity span of a stage's session timeline.
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    cat: Category,
+    dur: f64,
+    /// work beyond the stage's historical frontier (advances the DAG's
+    /// global new-work frontier — the Count rule's clock)
+    advances: bool,
+    /// a completed checkpoint: volatile progress becomes durable
+    commits: bool,
+}
+
+/// A stage's planned timeline within one session: prologue (startup /
+/// recovery or migration), then work chunks interleaved with
+/// checkpoints, exactly mirroring `sim::run`'s inner loop.
+fn build_segments(
+    job: &Job,
+    ft: &dyn FtMechanism,
+    container: &crate::job::ContainerModel,
+    p0: f64,
+    frontier: f64,
+    carry: Carry,
+) -> Vec<Segment> {
+    let mut segs = Vec::new();
+    let seg = |cat, dur| Segment { cat, dur, advances: false, commits: false };
+    match carry {
+        Carry::Migrate(m) => segs.push(seg(Category::Migration, m)),
+        Carry::Fresh => segs.push(seg(Category::Startup, container.startup_time())),
+        Carry::Recover(r) => {
+            segs.push(seg(Category::Startup, container.startup_time()));
+            if r > 0.0 {
+                segs.push(seg(Category::Recovery, r));
+            }
+        }
+    }
+    let interval = ft.checkpoint_interval(job);
+    let ckpt_dur = ft.checkpoint_time(job, container);
+    let len = job.exec_len_h;
+    let mut pos = p0;
+    let mut since_ckpt = 0.0f64;
+    while pos < len - 1e-9 {
+        let until_ckpt = interval.map(|i| (i - since_ckpt).max(1e-6)).unwrap_or(f64::INFINITY);
+        let chunk = (len - pos).min(until_ckpt);
+        let reexec = (frontier - pos).clamp(0.0, chunk);
+        if reexec > 0.0 {
+            segs.push(seg(Category::Reexec, reexec));
+        }
+        let useful = chunk - reexec;
+        if useful > 0.0 {
+            segs.push(Segment {
+                cat: Category::Useful,
+                dur: useful,
+                advances: true,
+                commits: false,
+            });
+        }
+        pos += chunk;
+        since_ckpt += chunk;
+        if let Some(i) = interval {
+            if since_ckpt >= i - 1e-9 && pos < len - 1e-9 {
+                segs.push(Segment {
+                    cat: Category::Checkpoint,
+                    dur: ckpt_dur,
+                    advances: false,
+                    commits: true,
+                });
+                since_ckpt = 0.0;
+            }
+        }
+    }
+    segs
+}
+
+/// Record spans up to offset `upto` into `ledger` at the stage's price
+/// share; returns `(work, useful, committed)` — executed work hours,
+/// the frontier-advancing part, and the checkpoint-committed part.
+fn record_spans(
+    ledger: &mut Ledger,
+    segs: &[Segment],
+    upto: f64,
+    price_share: f64,
+) -> (f64, f64, f64) {
+    let mut off = 0.0f64;
+    let (mut work, mut useful, mut committed, mut pending) = (0.0, 0.0, 0.0, 0.0);
+    for s in segs {
+        if off >= upto - 1e-12 {
+            break;
+        }
+        let run = s.dur.min(upto - off);
+        ledger.span(s.cat, run, price_share);
+        if matches!(s.cat, Category::Reexec | Category::Useful) {
+            work += run;
+            pending += run;
+            if s.advances {
+                useful += run;
+            }
+        }
+        if s.commits && run >= s.dur - 1e-12 {
+            committed += pending;
+            pending = 0.0;
+        }
+        off += s.dur;
+    }
+    (work, useful, committed)
+}
+
+/// Frontier-advancing work a segment timeline has executed by offset `d`.
+fn useful_done_at(segs: &[Segment], d: f64) -> f64 {
+    let mut off = 0.0f64;
+    let mut u = 0.0f64;
+    for s in segs {
+        if off >= d - 1e-12 {
+            break;
+        }
+        if s.advances {
+            u += s.dur.min(d - off);
+        }
+        off += s.dur;
+    }
+    u
+}
+
+#[derive(Debug)]
+enum DagSchedule {
+    Trace,
+    Rate { per_h: f64 },
+    Count { thresholds: Vec<f64>, idx: usize },
+}
+
+struct BinStage {
+    idx: usize,
+    /// memory share of the instance price this stage pays
+    share: f64,
+    segments: Vec<Segment>,
+    /// completion offset within the session
+    d_complete: f64,
+    done: bool,
+}
+
+struct ActiveBin {
+    t0: f64,
+    end_t: f64,
+    market: usize,
+    is_spot: bool,
+    /// instance $/h, fixed at session start (as in `sim::run`)
+    price: f64,
+    stages: Vec<BinStage>,
+    live: usize,
+}
+
+struct Sim<'a> {
+    world: &'a World,
+    policy: &'a mut dyn Policy,
+    cfg: &'a RunConfig,
+    packer: Packer,
+    rng: Rng,
+    schedule: DagSchedule,
+    jobs: Vec<Job>,
+    fts: Vec<Box<dyn FtMechanism>>,
+    deps: Vec<Vec<usize>>,
+    state: Vec<StageState>,
+    progress: Vec<JobProgress>,
+    frontier: Vec<f64>,
+    carry: Vec<Carry>,
+    ledgers: Vec<Ledger>,
+    sessions: Vec<u32>,
+    started_at: Vec<f64>,
+    completed_at: Vec<f64>,
+    idle_h: Vec<f64>,
+    stage_gen: Vec<u64>,
+    stage_bin: Vec<u64>,
+    active: BTreeMap<u64, ActiveBin>,
+    next_bin: u64,
+    bins_launched: u32,
+    bin_revocations: u32,
+    aborted: bool,
+    /// markets whose revocations the policy is re-taught at every bin
+    /// launch (policies are reset per bin because each bin is a
+    /// different "job"; this replay keeps Algorithm 1's shrinking
+    /// candidate set across the whole DAG)
+    revoked_markets: Vec<usize>,
+    /// frontier work banked by finalized / killed sessions (Count rule)
+    w_closed: f64,
+    count_gen: u64,
+}
+
+impl Sim<'_> {
+    fn all_done(&self) -> bool {
+        self.state.iter().all(|s| *s == StageState::Done)
+    }
+
+    fn promote_ready(&mut self) {
+        for i in 0..self.jobs.len() {
+            if self.state[i] == StageState::Pending
+                && self.deps[i].iter().all(|&d| self.state[d] == StageState::Done)
+            {
+                self.state[i] = StageState::Ready;
+            }
+        }
+    }
+
+    /// Pack every ready stage into bins and launch them at `t`.
+    fn launch_ready(&mut self, eng: &mut Engine, t: f64) {
+        let ready: Vec<(usize, f64)> = (0..self.jobs.len())
+            .filter(|&i| self.state[i] == StageState::Ready)
+            .map(|i| (i, self.jobs[i].mem_gb))
+            .collect();
+        if ready.is_empty() {
+            return;
+        }
+        for bin in self.packer.pack(&ready) {
+            if self.bins_launched >= self.cfg.max_sessions {
+                // safety valve: stages stay Ready, run reports !completed
+                self.aborted = true;
+                return;
+            }
+            self.bins_launched += 1;
+            let bin_id = self.next_bin;
+            self.next_bin += 1;
+            let max_rem = bin
+                .stages
+                .iter()
+                .map(|&i| self.progress[i].remaining(&self.jobs[i]))
+                .fold(0.0f64, f64::max);
+            let bin_job =
+                Job::new(bin_id, max_rem.max(1e-6), bin.used_gb).named(format!("bin-{bin_id}"));
+            let ctx = Ctx { world: self.world, now: t };
+            self.policy.reset();
+            for &m in &self.revoked_markets {
+                self.policy.on_revocation(&bin_job, m, &ctx);
+            }
+            let decision = self.policy.select(&bin_job, &ctx);
+            let market = decision.market();
+            let is_spot = decision.is_spot();
+            let price = if is_spot {
+                self.world.market(market).price_at(t) as f64
+            } else {
+                self.world.od_price(market)
+            };
+            let container = &self.world.container;
+            let mut stages = Vec::with_capacity(bin.stages.len());
+            let mut end_d = 0.0f64;
+            for &i in &bin.stages {
+                let p0 = self.progress[i].total_h();
+                let segments = build_segments(
+                    &self.jobs[i],
+                    self.fts[i].as_ref(),
+                    container,
+                    p0,
+                    self.frontier[i],
+                    self.carry[i],
+                );
+                let d: f64 = segments.iter().map(|s| s.dur).sum();
+                end_d = end_d.max(d);
+                self.state[i] = StageState::Running;
+                self.stage_gen[i] += 1;
+                self.stage_bin[i] = bin_id;
+                self.sessions[i] += 1;
+                if self.started_at[i] < 0.0 {
+                    self.started_at[i] = t;
+                }
+                self.carry[i] = Carry::Fresh; // consumed by this session
+                eng.schedule_at(
+                    t + d,
+                    Event::Timer { tag: tag(K_STAGE_DONE, self.stage_gen[i], i as u64) },
+                );
+                stages.push(BinStage {
+                    idx: i,
+                    share: self.jobs[i].mem_gb / bin.used_gb,
+                    segments,
+                    d_complete: d,
+                    done: false,
+                });
+            }
+            let end_t = t + end_d;
+            if is_spot {
+                if let DagSchedule::Trace = self.schedule {
+                    if let Some(rev) = self.world.market(market).next_revocation_after(t) {
+                        if rev < end_t - 1e-12 {
+                            let revoke = Event::Timer { tag: tag(K_BIN_REVOKE, 0, bin_id) };
+                            eng.schedule_at(rev, revoke);
+                        }
+                    }
+                }
+            }
+            let live = stages.len();
+            self.active
+                .insert(bin_id, ActiveBin { t0: t, end_t, market, is_spot, price, stages, live });
+        }
+    }
+
+    fn on_stage_done(&mut self, eng: &mut Engine, t: f64, gen: u64, i: usize) {
+        if self.state[i] != StageState::Running || (self.stage_gen[i] & 0xFF_FFFF) != gen {
+            return; // stale event from a killed session
+        }
+        let bin_id = self.stage_bin[i];
+        let live_after = {
+            let bin = self.active.get_mut(&bin_id).expect("running stage without active bin");
+            let pos = bin.stages.iter().position(|b| b.idx == i).unwrap();
+            let price = bin.price;
+            let (work, useful, committed) = {
+                let bs = &bin.stages[pos];
+                record_spans(&mut self.ledgers[i], &bs.segments, bs.d_complete, price * bs.share)
+            };
+            self.progress[i].volatile_h += work;
+            self.progress[i].durable_h += committed;
+            self.progress[i].volatile_h -= committed;
+            self.frontier[i] = self.frontier[i].max(self.progress[i].total_h());
+            self.w_closed += useful;
+            debug_assert!(self.progress[i].is_complete(&self.jobs[i]));
+            bin.stages[pos].done = true;
+            bin.live -= 1;
+            bin.live
+        };
+        self.state[i] = StageState::Done;
+        self.completed_at[i] = t;
+        if live_after == 0 {
+            self.close_bin(bin_id, t);
+        }
+        self.promote_ready();
+        self.launch_ready(eng, t);
+        self.resched_count(eng, t);
+    }
+
+    /// Natural close: bill the billing-cycle buffer and the idle-slot
+    /// tails of stages that finished before the bin did.
+    fn close_bin(&mut self, bin_id: u64, end: f64) {
+        let bin = self.active.remove(&bin_id).expect("closing unknown bin");
+        // natural close happens at the last stage's completion event
+        debug_assert!((end - bin.end_t).abs() < 1e-6, "bin closed off-schedule");
+        let (_, buffer) = session_cost(end - bin.t0, bin.price);
+        for bs in &bin.stages {
+            let i = bs.idx;
+            self.ledgers[i].buffer_cost(buffer * bs.share);
+            let idle = (end - (bin.t0 + bs.d_complete)).max(0.0);
+            if idle > 0.0 {
+                self.ledgers[i].cost.add(Category::Idle, idle * bin.price * bs.share);
+                self.idle_h[i] += idle;
+            }
+        }
+    }
+
+    /// A revocation at `t` kills every in-flight stage on the bin and
+    /// re-enqueues them per each stage's FT mechanism.
+    fn revoke_bin(&mut self, eng: &mut Engine, t: f64, bin_id: u64) {
+        let Some(bin) = self.active.remove(&bin_id) else {
+            return; // closed at the same timestamp before the notice
+        };
+        self.bin_revocations += 1;
+        let d = (t - bin.t0).max(0.0);
+        let (_, buffer) = session_cost(d, bin.price);
+        for bs in &bin.stages {
+            let i = bs.idx;
+            self.ledgers[i].buffer_cost(buffer * bs.share);
+            if bs.done {
+                // outputs were durably uploaded at completion; the stage
+                // only idled from its finish to the revocation
+                let idle = (t - (bin.t0 + bs.d_complete)).max(0.0);
+                if idle > 0.0 {
+                    self.ledgers[i].cost.add(Category::Idle, idle * bin.price * bs.share);
+                    self.idle_h[i] += idle;
+                }
+                continue;
+            }
+            let (work, useful, committed) =
+                record_spans(&mut self.ledgers[i], &bs.segments, d, bin.price * bs.share);
+            self.progress[i].volatile_h += work;
+            self.progress[i].durable_h += committed;
+            self.progress[i].volatile_h -= committed;
+            self.frontier[i] = self.frontier[i].max(self.progress[i].total_h());
+            self.w_closed += useful;
+            let rec = self.fts[i].on_revocation(
+                &self.jobs[i],
+                &self.world.container,
+                self.progress[i].durable_h > 0.0,
+            );
+            match rec {
+                Recovery::Restart { recovery_time_h } => {
+                    self.progress[i].on_revocation();
+                    self.carry[i] = Carry::Recover(recovery_time_h);
+                }
+                Recovery::Migrate { migrate_time_h } => {
+                    self.progress[i].revocations += 1;
+                    self.carry[i] = Carry::Migrate(migrate_time_h);
+                }
+            }
+            self.state[i] = StageState::Ready;
+            self.stage_gen[i] += 1; // invalidate the pending completion
+        }
+        self.revoked_markets.push(bin.market);
+        self.launch_ready(eng, t);
+        self.resched_count(eng, t);
+    }
+
+    /// Poisson arrival (ForcedRate): revoke the lowest-id active spot
+    /// bin, then re-arm the chain while work remains.
+    fn on_rate(&mut self, eng: &mut Engine, t: f64) {
+        let per_h = match self.schedule {
+            DagSchedule::Rate { per_h } => per_h,
+            _ => return,
+        };
+        if self.all_done() || self.aborted {
+            return; // let the chain die out
+        }
+        let next = t + self.rng.exp(per_h);
+        eng.schedule_at(next, Event::Timer { tag: tag(K_RATE, 0, 0) });
+        let victim = self.active.iter().find(|(_, b)| b.is_spot).map(|(&id, _)| id);
+        if let Some(id) = victim {
+            self.revoke_bin(eng, t, id);
+        }
+    }
+
+    /// (Re)schedule the next ForcedCount crossing: find the wall time at
+    /// which the DAG's global new-work frontier reaches the pending
+    /// threshold, given the known piecewise timelines of every active
+    /// bin.  Called after every structural event; a generation counter
+    /// invalidates superseded timers.
+    fn resched_count(&mut self, eng: &mut Engine, now: f64) {
+        let thr = match &self.schedule {
+            DagSchedule::Count { thresholds, idx } => match thresholds.get(*idx) {
+                Some(&thr) => thr,
+                None => return,
+            },
+            _ => return,
+        };
+        let mut w_now = self.w_closed;
+        for b in self.active.values() {
+            let d = now - b.t0;
+            for bs in b.stages.iter().filter(|bs| !bs.done) {
+                w_now += useful_done_at(&bs.segments, d);
+            }
+        }
+        let mut need = thr - w_now;
+        let t_cross = if need <= 1e-12 {
+            // threshold already passed (e.g. while only on-demand bins
+            // ran): fire as soon as possible
+            Some(now)
+        } else {
+            // sweep the future frontier-advancing segments of all
+            // active bins; between boundaries the frontier rate is the
+            // number of concurrently-advancing segments
+            let mut segs: Vec<(f64, f64)> = Vec::new();
+            for b in self.active.values() {
+                for bs in b.stages.iter().filter(|bs| !bs.done) {
+                    let mut off = b.t0;
+                    for s in &bs.segments {
+                        let (s0, s1) = (off, off + s.dur);
+                        off = s1;
+                        if s.advances && s1 > now + 1e-12 {
+                            segs.push((s0.max(now), s1));
+                        }
+                    }
+                }
+            }
+            let mut bounds: Vec<f64> = segs.iter().flat_map(|&(a, b)| [a, b]).collect();
+            bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+            let mut found = None;
+            for w in bounds.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                let rate =
+                    segs.iter().filter(|&&(a, b)| a <= lo + 1e-12 && b >= hi - 1e-12).count();
+                if rate == 0 {
+                    continue;
+                }
+                let cap = rate as f64 * (hi - lo);
+                if need <= cap + 1e-12 {
+                    found = Some(lo + need / rate as f64);
+                    break;
+                }
+                need -= cap;
+            }
+            found
+        };
+        // bump the generation either way: a crossing reschedules, and a
+        // no-crossing result means any pending timer was computed from a
+        // timeline that no longer exists (retry at the next structural
+        // event — new bins extend the frontier timeline)
+        self.count_gen += 1;
+        if let Some(tc) = t_cross {
+            eng.schedule_at(tc, Event::Timer { tag: tag(K_COUNT, self.count_gen, 0) });
+        }
+    }
+
+    fn on_count(&mut self, eng: &mut Engine, t: f64, gen: u64) {
+        if (self.count_gen & 0xFF_FFFF) != gen {
+            return; // superseded by a reschedule
+        }
+        // victim: prefer a spot bin actively advancing the frontier at
+        // `t`; fall back to the lowest-id active spot bin
+        let advancing = self
+            .active
+            .iter()
+            .filter(|(_, b)| b.is_spot)
+            .find(|(_, b)| {
+                let d = t - b.t0;
+                b.stages.iter().any(|bs| {
+                    !bs.done && {
+                        let mut off = 0.0;
+                        bs.segments.iter().any(|s| {
+                            let hit = s.advances && d >= off - 1e-9 && d <= off + s.dur + 1e-9;
+                            off += s.dur;
+                            hit
+                        })
+                    }
+                })
+            })
+            .map(|(&id, _)| id);
+        let victim =
+            advancing.or_else(|| self.active.iter().find(|(_, b)| b.is_spot).map(|(&id, _)| id));
+        let Some(id) = victim else {
+            return; // nothing revocable right now; resched will retry
+        };
+        if let DagSchedule::Count { idx, .. } = &mut self.schedule {
+            *idx += 1;
+        }
+        self.revoke_bin(eng, t, id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::PolicyKind;
+
+    fn world() -> (World, f64) {
+        let mut w = World::generate(64, 1.0, 77);
+        let start = w.split_train(0.6);
+        (w, start)
+    }
+
+    fn diamond() -> DagSpec {
+        DagSpec::new("diamond")
+            .stage("a", 2.0, 8.0, &[])
+            .stage("b", 3.0, 16.0, &["a"])
+            .stage("c", 1.0, 4.0, &["a"])
+            .stage("d", 2.0, 8.0, &["b", "c"])
+    }
+
+    #[test]
+    fn diamond_completes_in_topo_order() {
+        let (w, start) = world();
+        let r = Scenario::on(&w).start_t(start).seed(3).dag(diamond()).run();
+        assert!(r.completed, "diamond did not complete: {r:?}");
+        assert_eq!(r.stages.len(), 4);
+        for s in &r.stages {
+            assert!(s.completed);
+            assert!(s.started_at_h >= start);
+            assert!(s.completed_at_h > s.started_at_h);
+        }
+        let at = |n: &str| r.stage(n).unwrap();
+        assert!(at("b").started_at_h >= at("a").completed_at_h - 1e-9);
+        assert!(at("c").started_at_h >= at("a").completed_at_h - 1e-9);
+        assert!(at("d").started_at_h >= at("b").completed_at_h - 1e-9);
+        assert!(at("d").started_at_h >= at("c").completed_at_h - 1e-9);
+        // useful time per stage equals the stage length
+        for (s, spec) in r.stages.iter().zip(&diamond().stages) {
+            assert!(
+                (s.ledger.time.get(Category::Useful) - spec.exec_len_h).abs() < 1e-6,
+                "stage {} useful {}",
+                s.name,
+                s.ledger.time.get(Category::Useful)
+            );
+        }
+        assert!(r.makespan_h >= 2.0 + 3.0 + 2.0, "critical path is a→b→d");
+        assert!(r.cost_usd() > 0.0);
+    }
+
+    #[test]
+    fn forced_count_revocation_reruns_all_packed_stages() {
+        let (w, start) = world();
+        let spec = DagSpec::new("pair")
+            .stage("x", 4.0, 16.0, &[])
+            .stage("y", 4.0, 16.0, &[]);
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedCount { total: 1 })
+            .start_t(start)
+            .seed(9)
+            .dag(spec)
+            .run();
+        assert!(r.completed);
+        assert_eq!(r.revocations, 1, "exactly one bin revocation");
+        // both stages were in flight on the packed instance → both re-ran
+        for s in &r.stages {
+            assert_eq!(s.revocations, 1, "stage {} must be revoked once", s.name);
+            assert_eq!(s.sessions, 2, "stage {} must re-run", s.name);
+            assert!((s.ledger.time.get(Category::Useful) - 4.0).abs() < 1e-6);
+        }
+        // no FT → the lost work is re-executed
+        let total = r.ledger();
+        assert!(total.time.get(Category::Reexec) > 0.0);
+        assert!(r.bins >= 2);
+    }
+
+    #[test]
+    fn forced_count_fires_exactly_n() {
+        let (w, start) = world();
+        let spec = diamond();
+        for &n in &[1u32, 2, 4] {
+            let r = Scenario::on(&w)
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::Checkpoint { n: 8 })
+                .rule(RevocationRule::ForcedCount { total: n })
+                .start_t(start)
+                .seed(5)
+                .dag(spec.clone())
+                .run();
+            assert!(r.completed, "count:{n}");
+            assert_eq!(r.revocations, n, "expected exactly {n} bin revocations");
+        }
+    }
+
+    #[test]
+    fn checkpointing_bounds_rework() {
+        let (w, start) = world();
+        let spec = DagSpec::new("long").stage("x", 8.0, 16.0, &[]);
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Checkpoint { n: 16 })
+            .rule(RevocationRule::ForcedCount { total: 3 })
+            .start_t(start)
+            .seed(7)
+            .dag(spec)
+            .run();
+        assert!(r.completed);
+        let t = &r.stages[0].ledger.time;
+        let interval = 8.0 / 16.0;
+        assert!(t.get(Category::Reexec) <= 3.0 * (interval + 1e-6) + 1e-6);
+        assert!(t.get(Category::Checkpoint) > 0.0);
+        assert!(t.get(Category::Recovery) > 0.0);
+    }
+
+    #[test]
+    fn ondemand_bins_are_never_revoked() {
+        let (w, start) = world();
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::OnDemand)
+            .rule(RevocationRule::ForcedRate { per_day: 48.0 })
+            .start_t(start)
+            .seed(2)
+            .dag(diamond())
+            .run();
+        assert!(r.completed);
+        assert_eq!(r.revocations, 0);
+        for s in &r.stages {
+            assert_eq!(s.sessions, 1);
+        }
+    }
+
+    #[test]
+    fn idle_slots_are_cost_only() {
+        let (w, start) = world();
+        let spec = DagSpec::new("skew")
+            .stage("short", 2.0, 8.0, &[])
+            .stage("long", 6.0, 8.0, &[]);
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::OnDemand)
+            .start_t(start)
+            .seed(1)
+            .dag(spec)
+            .run();
+        assert!(r.completed);
+        let short = r.stage("short").unwrap();
+        let long = r.stage("long").unwrap();
+        // packed together: the short stage idles until the long one ends
+        assert!((short.idle_h - 4.0).abs() < 1e-6, "idle {}", short.idle_h);
+        assert_eq!(long.idle_h, 0.0);
+        assert!(short.ledger.cost.get(Category::Idle) > 0.0);
+        // idle is cost-only: it never inflates the time breakdown
+        assert_eq!(short.ledger.time.get(Category::Idle), 0.0);
+        assert_eq!(r.bins, 1, "both stages share one instance");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (w, start) = world();
+        let scen = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::CheckpointHourly)
+            .rule(RevocationRule::ForcedRate { per_day: 6.0 })
+            .start_t(start)
+            .dag(diamond());
+        let a = scen.run_seeded(42);
+        let b = scen.run_seeded(42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn replicate_matches_manual_loop_and_pool() {
+        let (w, start) = world();
+        let scen = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedCount { total: 1 })
+            .start_t(start)
+            .seed(11)
+            .dag(diamond());
+        let agg = scen.replicate(3);
+        assert_eq!(agg.n, 3);
+        let manual: Vec<DagResult> = (11..14).map(|s| scen.run_seeded(s)).collect();
+        assert_eq!(agg, DagAggregate::from_runs(&manual));
+        let pooled = scen.replicate_on(&Pool::new(4), 3);
+        assert_eq!(agg, pooled);
+        assert!(agg.completion_rate > 0.99);
+        assert_eq!(agg.stages.len(), 4);
+    }
+
+    #[test]
+    fn replication_ft_falls_back_to_none() {
+        let (w, start) = world();
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Replication { k: 3 })
+            .start_t(start)
+            .dag(diamond())
+            .run();
+        assert_eq!(r.ft, "none");
+        assert!(r.completed);
+    }
+
+    #[test]
+    fn spec_capacity_clamped_to_catalog() {
+        let (w, start) = world();
+        // a fantasy 10 TB capacity must clamp to the largest catalog
+        // type (192 GB), so four 64 GB stages split across two bins any
+        // market can actually host
+        let spec = DagSpec::new("big")
+            .capacity(10_000.0)
+            .stage("s1", 2.0, 64.0, &[])
+            .stage("s2", 2.0, 64.0, &[])
+            .stage("s3", 2.0, 64.0, &[])
+            .stage("s4", 2.0, 64.0, &[]);
+        let r = Scenario::on(&w).policy(PolicyKind::OnDemand).start_t(start).dag(spec).run();
+        assert!(r.completed);
+        assert_eq!(r.bins, 2, "3×64 GB pack a 192 GB bin, the fourth spills");
+    }
+
+    #[test]
+    fn makespan_beats_serial_execution() {
+        let (w, start) = world();
+        // four independent equal stages pack onto one instance and run
+        // concurrently: the DAG makespan must be far below serial
+        let spec = DagSpec::new("wide")
+            .stage("p", 4.0, 8.0, &[])
+            .stage("q", 4.0, 8.0, &[])
+            .stage("r", 4.0, 8.0, &[])
+            .stage("s", 4.0, 8.0, &[]);
+        let r = Scenario::on(&w).policy(PolicyKind::OnDemand).start_t(start).dag(spec).run();
+        assert!(r.completed);
+        assert!(r.makespan_h < 8.0, "packed stages must run concurrently");
+        assert_eq!(r.bins, 1);
+    }
+}

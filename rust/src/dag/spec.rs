@@ -1,0 +1,368 @@
+//! The DAG workload model: named stages with execution length, memory
+//! footprint and precedence edges, validated acyclic.
+//!
+//! Specs are buildable in code (`DagSpec::new("etl").stage(...)`) or
+//! parsed from the TOML subset `util::config` understands:
+//!
+//! ```toml
+//! [dag]
+//! name = "pipeline"
+//! capacity_gb = 64          # optional per-instance packing capacity
+//!
+//! [stage.extract]
+//! len_h = 2.0
+//! mem_gb = 8.0
+//!
+//! [stage.train]
+//! len_h = 6.0
+//! mem_gb = 16.0
+//! deps = ["extract"]
+//! ```
+//!
+//! Stage order is the declaration order in code and the (deterministic)
+//! sorted-by-name order from TOML; `validate` returns a stable
+//! topological order with ready stages processed in index order.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::market::Catalog;
+use crate::util::config::Config;
+
+/// One stage of a DAG: a batch job plus the names of the stages whose
+/// outputs it consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    pub name: String,
+    /// pure compute time on a dedicated slot (hours)
+    pub exec_len_h: f64,
+    /// memory footprint (GB) — drives packing and FT overheads
+    pub mem_gb: f64,
+    /// names of prerequisite stages
+    pub deps: Vec<String>,
+}
+
+/// A validated-on-use DAG of stages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DagSpec {
+    pub name: String,
+    /// per-instance packing capacity override (GB); `None` = the
+    /// largest instance type in the catalog
+    pub capacity_gb: Option<f64>,
+    pub stages: Vec<StageSpec>,
+}
+
+impl DagSpec {
+    pub fn new(name: impl Into<String>) -> DagSpec {
+        DagSpec { name: name.into(), capacity_gb: None, stages: Vec::new() }
+    }
+
+    /// Append a stage (builder style).
+    pub fn stage(
+        mut self,
+        name: impl Into<String>,
+        exec_len_h: f64,
+        mem_gb: f64,
+        deps: &[&str],
+    ) -> DagSpec {
+        self.stages.push(StageSpec {
+            name: name.into(),
+            exec_len_h,
+            mem_gb,
+            deps: deps.iter().map(|d| d.to_string()).collect(),
+        });
+        self
+    }
+
+    /// Set the per-instance packing capacity (GB).
+    pub fn capacity(mut self, capacity_gb: f64) -> DagSpec {
+        self.capacity_gb = Some(capacity_gb);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Sum of all stage lengths (the serial-work equivalent).
+    pub fn total_work_h(&self) -> f64 {
+        self.stages.iter().map(|s| s.exec_len_h).sum()
+    }
+
+    pub fn max_mem_gb(&self) -> f64 {
+        self.stages.iter().map(|s| s.mem_gb).fold(0.0, f64::max)
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.stages.iter().position(|s| s.name == name)
+    }
+
+    /// The packing capacity this spec gets against `catalog`: its
+    /// `capacity_gb` (or the catalog default) clamped to the largest
+    /// instance type — a larger value would pack bins no market can
+    /// host.  Errors when a single stage exceeds the result; the one
+    /// capacity rule shared by `DagRunner` and the `siwoft dag` CLI.
+    pub fn effective_capacity(&self, catalog: &Catalog) -> Result<f64, String> {
+        let cat_cap = catalog.markets.iter().map(|m| m.instance.mem_gb).fold(0.0f64, f64::max);
+        let cap = self.capacity_gb.unwrap_or(cat_cap).min(cat_cap);
+        if self.max_mem_gb() > cap {
+            return Err(format!(
+                "dag '{}': stage footprint {} GB exceeds the instance capacity {} GB \
+                 (largest type in a {}-market catalog)",
+                self.name,
+                self.max_mem_gb(),
+                cap,
+                catalog.len()
+            ));
+        }
+        Ok(cap)
+    }
+
+    /// Dependency edges as stage indices, aligned with `stages`.
+    /// Callers should `validate()` first; unknown names panic here.
+    pub fn deps_idx(&self) -> Vec<Vec<usize>> {
+        self.stages
+            .iter()
+            .map(|s| {
+                s.deps
+                    .iter()
+                    .map(|d| self.index_of(d).unwrap_or_else(|| panic!("unknown dep '{d}'")))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Validate the spec (non-empty, positive stage parameters, unique
+    /// names, known non-self deps, acyclic) and return a deterministic
+    /// topological order of stage indices (Kahn's algorithm, ready set
+    /// processed in index order).
+    pub fn validate(&self) -> Result<Vec<usize>, String> {
+        if self.stages.is_empty() {
+            return Err(format!("dag '{}' has no stages", self.name));
+        }
+        let mut seen = BTreeSet::new();
+        for s in &self.stages {
+            if s.exec_len_h <= 0.0 {
+                return Err(format!("stage '{}': len_h must be positive", s.name));
+            }
+            if s.mem_gb <= 0.0 {
+                return Err(format!("stage '{}': mem_gb must be positive", s.name));
+            }
+            if !seen.insert(s.name.as_str()) {
+                return Err(format!("duplicate stage name '{}'", s.name));
+            }
+        }
+        if let Some(cap) = self.capacity_gb {
+            if self.max_mem_gb() > cap {
+                return Err(format!(
+                    "dag '{}': stage footprint {} GB exceeds capacity_gb {}",
+                    self.name,
+                    self.max_mem_gb(),
+                    cap
+                ));
+            }
+        }
+        let mut indeg = vec![0usize; self.stages.len()];
+        let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); self.stages.len()];
+        for (i, s) in self.stages.iter().enumerate() {
+            for d in &s.deps {
+                let j = self
+                    .index_of(d)
+                    .ok_or_else(|| format!("stage '{}': unknown dep '{d}'", s.name))?;
+                if j == i {
+                    return Err(format!("stage '{}' depends on itself", s.name));
+                }
+                indeg[i] += 1;
+                out_edges[j].push(i);
+            }
+        }
+        // Kahn with an index-ordered ready set for a stable order
+        let mut ready: BTreeSet<usize> =
+            indeg.iter().enumerate().filter(|(_, &d)| d == 0).map(|(i, _)| i).collect();
+        let mut order = Vec::with_capacity(self.stages.len());
+        while let Some(&i) = ready.iter().next() {
+            ready.remove(&i);
+            order.push(i);
+            for &k in &out_edges[i] {
+                indeg[k] -= 1;
+                if indeg[k] == 0 {
+                    ready.insert(k);
+                }
+            }
+        }
+        if order.len() != self.stages.len() {
+            return Err(format!("dag '{}' contains a cycle", self.name));
+        }
+        Ok(order)
+    }
+
+    /// Parse a spec from the `[dag]` + `[stage.<name>]` TOML layout.
+    pub fn from_config(cfg: &Config) -> Result<DagSpec, String> {
+        let name = cfg.str_or("dag.name", "dag").to_string();
+        let capacity_gb = cfg.get("dag.capacity_gb").and_then(|v| v.as_f64());
+        // enumerate stage names from the key space (BTreeMap keys are
+        // sorted, so TOML stage order is sorted-by-name — deterministic)
+        let mut names: Vec<String> = Vec::new();
+        for key in cfg.keys() {
+            if let Some(rest) = key.strip_prefix("stage.") {
+                if let Some((stage, _field)) = rest.split_once('.') {
+                    if names.last().map(String::as_str) != Some(stage) {
+                        names.push(stage.to_string());
+                    }
+                }
+            }
+        }
+        names.dedup();
+        if names.is_empty() {
+            return Err(format!("dag '{name}': no [stage.<name>] sections found"));
+        }
+        let mut stages = Vec::with_capacity(names.len());
+        for s in &names {
+            let len = cfg.f64(&format!("stage.{s}.len_h")).map_err(|e| e.to_string())?;
+            let mem = cfg.f64(&format!("stage.{s}.mem_gb")).map_err(|e| e.to_string())?;
+            let deps = match cfg.get(&format!("stage.{s}.deps")) {
+                None => Vec::new(),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| format!("stage '{s}': deps must be an array"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| format!("stage '{s}': deps must be strings"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+            };
+            stages.push(StageSpec { name: s.clone(), exec_len_h: len, mem_gb: mem, deps });
+        }
+        let spec = DagSpec { name, capacity_gb, stages };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from TOML text.
+    pub fn parse(text: &str) -> Result<DagSpec, String> {
+        DagSpec::from_config(&Config::parse(text).map_err(|e| e.to_string())?)
+    }
+
+    /// Load a spec from a TOML file.
+    pub fn load(path: impl AsRef<Path>) -> Result<DagSpec, String> {
+        let path = path.as_ref();
+        let cfg = Config::load(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        DagSpec::from_config(&cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> DagSpec {
+        DagSpec::new("diamond")
+            .stage("a", 2.0, 8.0, &[])
+            .stage("b", 3.0, 16.0, &["a"])
+            .stage("c", 1.0, 4.0, &["a"])
+            .stage("d", 2.0, 8.0, &["b", "c"])
+    }
+
+    #[test]
+    fn builder_and_validate() {
+        let d = diamond();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.total_work_h(), 8.0);
+        assert_eq!(d.max_mem_gb(), 16.0);
+        let order = d.validate().unwrap();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        let pos = |n: &str| order.iter().position(|&i| i == d.index_of(n).unwrap()).unwrap();
+        assert!(pos("a") < pos("b") && pos("a") < pos("c") && pos("c") < pos("d"));
+    }
+
+    #[test]
+    fn rejects_cycles_and_bad_refs() {
+        let cyc = DagSpec::new("c").stage("x", 1.0, 4.0, &["y"]).stage("y", 1.0, 4.0, &["x"]);
+        assert!(cyc.validate().unwrap_err().contains("cycle"));
+        let bad = DagSpec::new("b").stage("x", 1.0, 4.0, &["nope"]);
+        assert!(bad.validate().unwrap_err().contains("unknown dep"));
+        let selfd = DagSpec::new("s").stage("x", 1.0, 4.0, &["x"]);
+        assert!(selfd.validate().unwrap_err().contains("itself"));
+        let dup = DagSpec::new("d").stage("x", 1.0, 4.0, &[]).stage("x", 1.0, 4.0, &[]);
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+        let zero = DagSpec::new("z").stage("x", 0.0, 4.0, &[]);
+        assert!(zero.validate().is_err());
+        assert!(DagSpec::new("e").validate().unwrap_err().contains("no stages"));
+    }
+
+    #[test]
+    fn capacity_checked_against_footprints() {
+        let d = diamond().capacity(8.0);
+        assert!(d.validate().unwrap_err().contains("exceeds capacity"));
+        assert!(diamond().capacity(16.0).validate().is_ok());
+    }
+
+    #[test]
+    fn effective_capacity_clamps_to_catalog_and_rejects_misfits() {
+        let cat = Catalog::full(); // largest type: 192 GB
+        assert_eq!(diamond().effective_capacity(&cat).unwrap(), 192.0);
+        assert_eq!(diamond().capacity(32.0).effective_capacity(&cat).unwrap(), 32.0);
+        // a fantasy capacity clamps down to what markets can host
+        assert_eq!(diamond().capacity(10_000.0).effective_capacity(&cat).unwrap(), 192.0);
+        // a truncated catalog can top out below a stage footprint
+        let tiny = Catalog::with_limit(1); // m5.large only: 8 GB
+        assert!(diamond().effective_capacity(&tiny).unwrap_err().contains("exceeds"));
+    }
+
+    const TOML: &str = r#"
+[dag]
+name = "pipeline"
+capacity_gb = 64
+
+[stage.extract]
+len_h = 2.0
+mem_gb = 8.0
+
+[stage.train]
+len_h = 6.0
+mem_gb = 16.0
+deps = ["extract"]
+
+[stage.report]
+len_h = 1.0
+mem_gb = 4.0
+deps = ["train"]
+"#;
+
+    #[test]
+    fn parses_toml_layout() {
+        let d = DagSpec::parse(TOML).unwrap();
+        assert_eq!(d.name, "pipeline");
+        assert_eq!(d.capacity_gb, Some(64.0));
+        assert_eq!(d.len(), 3);
+        // sorted-by-name order from the config key space
+        assert_eq!(d.stages[0].name, "extract");
+        assert_eq!(d.index_of("train").map(|i| d.stages[i].deps.clone()), Some(vec![
+            "extract".to_string()
+        ]));
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn toml_errors_are_friendly() {
+        assert!(DagSpec::parse("[dag]\nname = \"x\"\n").unwrap_err().contains("no [stage"));
+        let missing = "[stage.a]\nmem_gb = 4.0\n";
+        assert!(DagSpec::parse(missing).unwrap_err().contains("len_h"));
+        let badcycle = "[stage.a]\nlen_h = 1.0\nmem_gb = 4.0\ndeps = [\"b\"]\n\n[stage.b]\nlen_h = 1.0\nmem_gb = 4.0\ndeps = [\"a\"]\n";
+        assert!(DagSpec::parse(badcycle).unwrap_err().contains("cycle"));
+    }
+
+    #[test]
+    fn deps_idx_aligned() {
+        let d = diamond();
+        let deps = d.deps_idx();
+        assert_eq!(deps[0], Vec::<usize>::new());
+        assert_eq!(deps[3], vec![1, 2]);
+    }
+}

@@ -13,6 +13,7 @@ fn glyph(c: Category) -> char {
         Category::Startup => '·',
         Category::Migration => 'm',
         Category::Buffer => '$',
+        Category::Idle => 'i',
     }
 }
 

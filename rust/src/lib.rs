@@ -24,6 +24,7 @@
 //! the CLI reference for the `siwoft` binary.
 
 pub mod coordinator;
+pub mod dag;
 pub mod experiments;
 pub mod ft;
 pub mod job;
@@ -37,6 +38,7 @@ pub mod util;
 /// Convenience prelude for examples and benches.
 pub mod prelude {
     pub use crate::coordinator::{paper_arms, Arm, Coordinator, Pool};
+    pub use crate::dag::{DagAggregate, DagResult, DagRunner, DagScenario, DagSpec, Packer};
     pub use crate::experiments::{Axis, Fig1Options, Fig1Runner, Panel};
     pub use crate::ft::{Checkpointing, FtMechanism, Migration, NoFt, Replication};
     pub use crate::job::{Job, JobProgress};
@@ -45,7 +47,9 @@ pub mod prelude {
         Decision, FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy,
     };
     pub use crate::runtime::AnalyticsEngine;
-    pub use crate::scenario::{FtKind, PolicyKind, Scenario, Sweep, SweepPoint, SweepRow};
+    pub use crate::scenario::{
+        DagSweepRow, FtKind, PolicyKind, Scenario, Sweep, SweepPoint, SweepRow,
+    };
     #[allow(deprecated)] // legacy shim kept importable for external migrators
     pub use crate::sim::simulate_job;
     pub use crate::sim::{AggregateResult, Category, JobResult, RevocationRule, RunConfig, World};

@@ -4,6 +4,7 @@
 //!   gen-traces   generate synthetic EC2-style spot price traces
 //!   analyze      run market analytics (PJRT artifact or native) on traces
 //!   simulate     run one job under a (policy, ft) pair
+//!   dag          run a DAG workload with multi-job packing
 //!   fig1         reproduce Fig. 1 panels (a–f) of the paper
 //!   ablation     run the ablation studies (ckpt count, replication, corr)
 //!   sensitivity  spot/on-demand price-ratio sweep
@@ -38,6 +39,7 @@ fn main() -> ExitCode {
         "gen-traces" => gen_traces(rest),
         "analyze" => analyze(rest),
         "simulate" => simulate(rest),
+        "dag" => dag_cmd(rest),
         "fig1" | "fig" => fig1(rest),
         "ablation" => run_ablation(rest),
         "sensitivity" => sensitivity(rest),
@@ -70,6 +72,7 @@ fn help_text() -> String {
      gen-traces   generate synthetic spot price traces (CSV)\n  \
      analyze      market analytics: MTTR table + correlation summary\n  \
      simulate     run one job under a policy/ft pair\n  \
+     dag          run a DAG workload with multi-job packing (--spec <toml>)\n  \
      fig1         reproduce the paper's Fig. 1 panels (alias: fig)\n  \
      ablation     checkpoint/replication/correlation ablations\n  \
      sensitivity  spot/on-demand price-ratio sweep (F/O crossover)\n  \
@@ -166,7 +169,12 @@ fn load_or_generate_world(traces: &str, markets: usize, months: f64, seed: u64) 
 fn analyze(raw: &[String]) -> Result<(), String> {
     let spec = CommandSpec::new("analyze", "market analytics over price traces")
         .opt("traces", "", "trace CSV (empty = generate synthetically)")
-        .opt("history", "", "real AWS describe-spot-price-history JSON")
+        .opt(
+            "history",
+            "",
+            "real AWS describe-spot-price-history JSON; comma-separate NextToken-paginated \
+             page files to stitch them",
+        )
         .opt("markets", "64", "synthetic market count")
         .opt("months", "3", "synthetic months")
         .opt("seed", "2020", "synthetic seed")
@@ -175,12 +183,23 @@ fn analyze(raw: &[String]) -> Result<(), String> {
         .flag("native", "force the native backend (skip PJRT)");
     let a = spec.parse(raw)?;
     let world = if !a.str("history").is_empty() {
-        let text = std::fs::read_to_string(a.str("history"))
-            .map_err(|e| format!("read {}: {e}", a.str("history")))?;
+        let paths: Vec<&str> =
+            a.str("history").split(',').map(str::trim).filter(|p| !p.is_empty()).collect();
+        let mut pages = Vec::with_capacity(paths.len());
+        for p in &paths {
+            pages.push(std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?);
+        }
         let catalog = Catalog::full();
+        // import_pages also covers the single-file case, and rejects a
+        // lone page whose dangling NextToken marks a truncated capture
         let (trace, covered) =
-            siwoft::market::importer::import(&catalog, &text).map_err(|e| format!("{e}"))?;
-        println!("imported real price history: {covered} markets covered, {} hours", trace.hours);
+            siwoft::market::importer::import_pages(&catalog, &pages).map_err(|e| format!("{e}"))?;
+        println!(
+            "imported real price history ({} page{}): {covered} markets covered, {} hours",
+            pages.len(),
+            if pages.len() == 1 { "" } else { "s" },
+            trace.hours
+        );
         World::new(catalog, trace)
     } else {
         load_or_generate_world(a.str("traces"), a.usize("markets")?, a.f64("months")?, a.u64("seed")?)?
@@ -215,14 +234,14 @@ fn analyze(raw: &[String]) -> Result<(), String> {
     }
     // correlation summary
     let m = ana.markets;
-    let mut offdiag: Vec<f32> = Vec::with_capacity(m * (m - 1) / 2);
+    let mut offdiag: Vec<f64> = Vec::with_capacity(m * (m - 1) / 2);
     for i in 0..m {
         for j in (i + 1)..m {
-            offdiag.push(ana.corr_at(i, j));
+            offdiag.push(ana.corr_at(i, j) as f64);
         }
     }
-    offdiag.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let q = |f: f64| offdiag[((offdiag.len() - 1) as f64 * f) as usize];
+    siwoft::util::stats::sort_samples(&mut offdiag);
+    let q = |f: f64| siwoft::util::stats::percentile(&offdiag, f * 100.0);
     println!(
         "\nrevocation correlation (off-diagonal): min {:.3}  p25 {:.3}  median {:.3}  p75 {:.3}  max {:.3}",
         q(0.0),
@@ -298,6 +317,137 @@ fn simulate(raw: &[String]) -> Result<(), String> {
             println!("  {:<12} {:.5}", c.as_str(), v);
         }
     }
+    Ok(())
+}
+
+fn dag_cmd(raw: &[String]) -> Result<(), String> {
+    use siwoft::dag::DagSpec;
+    use siwoft::scenario::Sweep;
+    let spec_cli = CommandSpec::new("dag", "run a DAG workload with multi-job packing")
+        .req("spec", "DAG spec TOML: [dag] + [stage.<name>] sections (see configs/dag_*.toml)")
+        .opt(
+            "arms",
+            "p:none,ft:checkpoint",
+            "comma-separated policy:ft arms (policy and ft names as in `simulate`)",
+        )
+        .opt("rules", "trace,rate:3", "comma-separated rules: trace | rate:<per_day> | count:<n>")
+        .opt("markets", "96", "market count")
+        .opt("months", "2", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("seeds", "5", "runs per (arm, rule)")
+        .opt("train-frac", "0.67", "fraction of trace used for analytics")
+        .opt("out", "results", "output dir")
+        .opt("format", "csv", "output format: csv | json")
+        .workers_opt();
+    let a = spec_cli.parse(raw)?;
+    let dag = DagSpec::load(a.str("spec")).map_err(|e| format!("--spec: {e}"))?;
+    let mut arms: Vec<(PolicyKind, FtKind)> = Vec::new();
+    for part in a.str("arms").split(',').filter(|s| !s.trim().is_empty()) {
+        let (p, f) = part.trim().split_once(':').unwrap_or((part.trim(), "none"));
+        let policy =
+            PolicyKind::parse(p).ok_or_else(|| format!("unknown policy '{p}' in --arms"))?;
+        let ft = FtKind::parse(f).ok_or_else(|| format!("unknown ft '{f}' in --arms"))?;
+        arms.push((policy, ft));
+    }
+    let mut rules: Vec<RevocationRule> = Vec::new();
+    for r in a.str("rules").split(',').filter(|s| !s.trim().is_empty()) {
+        rules.push(RevocationRule::parse(r.trim())?);
+    }
+    if arms.is_empty() || rules.is_empty() {
+        return Err("--arms and --rules must be non-empty".into());
+    }
+    let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
+    let start = world.split_train(a.f64("train-frac")?);
+    let capacity = dag
+        .effective_capacity(&world.catalog)
+        .map_err(|e| format!("{e}; raise --markets or shrink the stage"))?;
+    println!(
+        "dag '{}': {} stages, {:.1} h total work, instance capacity {} GB, {} seeds\n",
+        dag.name,
+        dag.len(),
+        dag.total_work_h(),
+        capacity,
+        a.u64("seeds")?
+    );
+    let mut rows = vec![siwoft::csv_row![
+        "policy",
+        "ft",
+        "rule",
+        "stage",
+        "completion_h",
+        "cost_usd",
+        "revocations",
+        "sessions",
+        "idle_h",
+        "completion_rate"
+    ]];
+    for (policy, ft) in &arms {
+        let sweep_rows = Sweep::on(&world)
+            .dag(dag.clone())
+            .policies([*policy])
+            .fts([*ft])
+            .rules(rules.iter().copied())
+            .seeds(a.u64("seeds")?)
+            .start_t(start)
+            .workers(a.workers()?)
+            .run_dags();
+        for row in sweep_rows {
+            let (p, f, r) = (row.policy.label(), row.ft.label(), row.rule.label());
+            println!("== {p} + {f} | rule {r} ==");
+            println!(
+                "{:<14} {:>12} {:>10} {:>6} {:>9} {:>8} {:>6}",
+                "stage", "completion_h", "cost_usd", "revs", "sessions", "idle_h", "done"
+            );
+            for s in &row.agg.stages {
+                println!(
+                    "{:<14} {:>12.3} {:>10.4} {:>6.2} {:>9.2} {:>8.3} {:>6.2}",
+                    s.name,
+                    s.time.total(),
+                    s.cost.total(),
+                    s.mean_revocations,
+                    s.mean_sessions,
+                    s.mean_idle_h,
+                    s.completion_rate
+                );
+                rows.push(siwoft::csv_row![
+                    p,
+                    f,
+                    r,
+                    s.name,
+                    format!("{:.6}", s.time.total()),
+                    format!("{:.6}", s.cost.total()),
+                    format!("{:.4}", s.mean_revocations),
+                    format!("{:.4}", s.mean_sessions),
+                    format!("{:.6}", s.mean_idle_h),
+                    format!("{:.4}", s.completion_rate)
+                ]);
+            }
+            println!(
+                "{:<14} {:>12.3} {:>10.4} {:>6.2} {:>9.2} {:>8} {:>6.2}   (makespan; revs/sessions are per-instance)\n",
+                "TOTAL",
+                row.agg.mean_makespan_h,
+                row.agg.mean_cost_usd,
+                row.agg.mean_revocations,
+                row.agg.mean_bins,
+                "-",
+                row.agg.completion_rate
+            );
+            rows.push(siwoft::csv_row![
+                p,
+                f,
+                r,
+                "TOTAL",
+                format!("{:.6}", row.agg.mean_makespan_h),
+                format!("{:.6}", row.agg.mean_cost_usd),
+                format!("{:.4}", row.agg.mean_revocations),
+                format!("{:.4}", row.agg.mean_bins),
+                "",
+                format!("{:.4}", row.agg.completion_rate)
+            ]);
+        }
+    }
+    let path = emit(a.str("out"), "dag", &rows, a.str("format"))?;
+    println!("wrote {path}");
     Ok(())
 }
 
@@ -646,6 +796,7 @@ fn run_config(raw: &[String]) -> Result<(), String> {
     match kind.as_str() {
         "fig" | "fig1" => fig1(&args),
         "simulate" => simulate(&args),
+        "dag" => dag_cmd(&args),
         "ablation" => run_ablation(&args),
         "sensitivity" => sensitivity(&args),
         "tables" => tables(&args),

@@ -7,6 +7,7 @@
 //! tolerance (validated in `rust/tests/integration_runtime.rs`), and the
 //! policy layer consumes the results through this struct either way.
 
+use super::catalog::Catalog;
 use super::trace::PriceTrace;
 
 #[derive(Clone, Debug)]
@@ -125,6 +126,71 @@ impl MarketAnalytics {
         (0..self.markets)
             .filter(|&j| j != revoked && self.corr_at(revoked, j) < threshold)
             .collect()
+    }
+
+    /// Placement scores over `horizon_h` — the third analytics signal
+    /// (next to MTTR ordering and survival curves): the
+    /// revocation-adjusted *packing value* of provisioning each market
+    /// for a multi-container workload.
+    ///
+    /// `score[m] = stability(m) · density(m) / max_density`, where
+    /// `stability = mttr / (mttr + horizon)` (a hazard-style discount:
+    /// → 1 for markets whose mean time to revocation dwarfs the
+    /// placement horizon, → 0 for flappy ones) and
+    /// `density = mem_gb / od_price` (GB·hours of packing capacity per
+    /// dollar).  Normalizing by the catalog-wide best density keeps
+    /// scores in `(0, 1]`, so policies can blend them with other
+    /// normalized signals.
+    pub fn placement_scores(&self, catalog: &Catalog, horizon_h: f64) -> PlacementScores {
+        assert_eq!(catalog.len(), self.markets, "catalog misaligned with analytics");
+        let max_density = catalog
+            .markets
+            .iter()
+            .map(|m| m.instance.mem_gb / m.od_price)
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        let horizon = horizon_h.max(1e-9);
+        let score = catalog
+            .markets
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let mttr = self.mttr[i] as f64;
+                let stability = mttr / (mttr + horizon);
+                let density = m.instance.mem_gb / m.od_price;
+                (stability * density / max_density) as f32
+            })
+            .collect();
+        PlacementScores { markets: self.markets, horizon_h, score }
+    }
+}
+
+/// Per-market placement scores (see
+/// [`MarketAnalytics::placement_scores`]): the revocation-adjusted
+/// packing value the DAG/packing workloads and the `placement_weight`
+/// knobs of `PSiwoft` / `PredictivePolicy` consume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementScores {
+    pub markets: usize,
+    /// placement horizon the stability discount was computed for (hours)
+    pub horizon_h: f64,
+    /// score per market id, in `(0, 1]`
+    pub score: Vec<f32>,
+}
+
+impl PlacementScores {
+    #[inline]
+    pub fn at(&self, market: usize) -> f32 {
+        self.score[market]
+    }
+
+    /// `candidates` ranked by score descending (ties broken by id).
+    pub fn rank(&self, candidates: &[usize]) -> Vec<usize> {
+        let mut v = candidates.to_vec();
+        v.sort_by(|&a, &b| {
+            self.score[b].partial_cmp(&self.score[a]).unwrap().then(a.cmp(&b))
+        });
+        v
     }
 }
 
@@ -348,6 +414,42 @@ mod tests {
         let s = SurvivalCurves::compute(&t, &[1.0], 4);
         assert_eq!(s.at(0, 0.0), s.at(0, 1.0));
         assert_eq!(s.at(0, 99.0), s.at(0, 4.0));
+    }
+
+    #[test]
+    fn placement_scores_bounded_and_ranked() {
+        use crate::market::{catalog::Catalog, tracegen};
+        let cat = Catalog::with_limit(24);
+        let cfg = tracegen::TraceGenConfig { months: 0.5, seed: 11, ..Default::default() };
+        let t = tracegen::generate(&cat, &cfg);
+        let a = MarketAnalytics::compute(&t, &cat.od_prices());
+        let ps = a.placement_scores(&cat, 8.0);
+        assert_eq!(ps.markets, 24);
+        assert!(ps.score.iter().all(|&s| s > 0.0 && s <= 1.0 + 1e-6));
+        let ranked = ps.rank(&(0..24).collect::<Vec<_>>());
+        for w in ranked.windows(2) {
+            assert!(ps.at(w[0]) >= ps.at(w[1]), "rank not descending");
+        }
+    }
+
+    #[test]
+    fn placement_score_rewards_stability_and_decays_with_horizon() {
+        use crate::market::catalog::Catalog;
+        // two markets of equal capacity-per-dollar (m5.large / m5.xlarge
+        // price linearly in memory); market 0 never revokes, market 1
+        // flaps every other hour
+        let cat = Catalog::with_limit(2);
+        let od = cat.od_prices();
+        let rows = vec![
+            vec![od[0] * 0.5; 24],
+            (0..24).map(|h| if h % 2 == 1 { od[1] * 1.5 } else { od[1] * 0.5 }).collect(),
+        ];
+        let t = PriceTrace::from_rows(rows).unwrap();
+        let a = MarketAnalytics::compute(&t, &od);
+        let ps = a.placement_scores(&cat, 8.0);
+        assert!(ps.at(0) > ps.at(1), "stable market must outscore the flappy one");
+        let ps_long = a.placement_scores(&cat, 64.0);
+        assert!(ps_long.at(0) < ps.at(0), "longer horizons discount harder");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! each market, matching EC2's step-function price semantics) and
 //! aligns rows with a [`Catalog`] by `(instance type, zone)`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::catalog::Catalog;
 use super::trace::PriceTrace;
@@ -28,6 +28,8 @@ pub enum ImportError {
     Json(String),
     Empty,
     Timestamp(String),
+    /// pagination stitching failed (missing or dangling `NextToken`)
+    Pagination(String),
 }
 
 impl std::fmt::Display for ImportError {
@@ -36,6 +38,7 @@ impl std::fmt::Display for ImportError {
             ImportError::Json(msg) => write!(f, "history json: {msg}"),
             ImportError::Empty => write!(f, "history contains no usable samples"),
             ImportError::Timestamp(ts) => write!(f, "bad timestamp '{ts}'"),
+            ImportError::Pagination(msg) => write!(f, "history pagination: {msg}"),
         }
     }
 }
@@ -79,9 +82,9 @@ pub fn parse_timestamp_hours(ts: &str) -> Result<i64, ImportError> {
     Ok(days * 24 + hour)
 }
 
-/// Parse the raw JSON into samples (unknown instance types/zones kept —
-/// filtering happens at grid time).
-pub fn parse_history(text: &str) -> Result<Vec<Sample>, ImportError> {
+/// Parse one response page: the samples plus the `NextToken`
+/// continuation (absent or empty = final page).
+fn parse_page(text: &str) -> Result<(Vec<Sample>, Option<String>), ImportError> {
     let j = Json::parse(text).map_err(|e| ImportError::Json(e.to_string()))?;
     let arr = j
         .get("SpotPriceHistory")
@@ -105,6 +108,68 @@ pub fn parse_history(text: &str) -> Result<Vec<Sample>, ImportError> {
             price,
             epoch_hour: parse_timestamp_hours(ts)?,
         });
+    }
+    let token = j
+        .get("NextToken")
+        .and_then(Json::as_str)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string);
+    Ok((out, token))
+}
+
+/// Parse the raw JSON into samples (unknown instance types/zones kept —
+/// filtering happens at grid time).
+pub fn parse_history(text: &str) -> Result<Vec<Sample>, ImportError> {
+    let (out, _token) = parse_page(text)?;
+    if out.is_empty() {
+        return Err(ImportError::Empty);
+    }
+    Ok(out)
+}
+
+/// Stitch a `NextToken`-paginated capture (the page-per-file output of
+/// repeated `describe-spot-price-history` calls, in fetch order) into
+/// one sample stream.
+///
+/// Validation mirrors the REST contract: every page but the last must
+/// carry a non-empty `NextToken` (a missing one means pages were
+/// dropped or re-ordered), and the last page must not (a dangling token
+/// means the capture is truncated).  Records repeated across page
+/// boundaries — the API re-sends the boundary record — are deduplicated
+/// exactly.
+pub fn parse_history_pages<S: AsRef<str>>(pages: &[S]) -> Result<Vec<Sample>, ImportError> {
+    if pages.is_empty() {
+        return Err(ImportError::Empty);
+    }
+    let mut out: Vec<Sample> = Vec::new();
+    let mut seen: BTreeSet<(String, String, i64, u32)> = BTreeSet::new();
+    let last = pages.len() - 1;
+    for (i, page) in pages.iter().enumerate() {
+        let (samples, token) = parse_page(page.as_ref())
+            .map_err(|e| ImportError::Pagination(format!("page {} of {}: {e}", i + 1, last + 1)))?;
+        match (&token, i == last) {
+            (None, false) => {
+                return Err(ImportError::Pagination(format!(
+                    "page {} of {} has no NextToken but more pages follow \
+                     (dropped or re-ordered pages?)",
+                    i + 1,
+                    last + 1
+                )));
+            }
+            (Some(t), true) => {
+                return Err(ImportError::Pagination(format!(
+                    "last page still carries NextToken '{t}': the capture is truncated — \
+                     fetch the remaining pages"
+                )));
+            }
+            _ => {}
+        }
+        for s in samples {
+            let key = (s.instance_type.clone(), s.zone.clone(), s.epoch_hour, s.price.to_bits());
+            if seen.insert(key) {
+                out.push(s);
+            }
+        }
     }
     if out.is_empty() {
         return Err(ImportError::Empty);
@@ -174,6 +239,15 @@ pub fn to_trace(catalog: &Catalog, samples: &[Sample]) -> Result<(PriceTrace, us
 /// Convenience: parse + grid in one call.
 pub fn import(catalog: &Catalog, text: &str) -> Result<(PriceTrace, usize), ImportError> {
     let samples = parse_history(text)?;
+    to_trace(catalog, &samples)
+}
+
+/// Convenience: stitch paginated pages + grid in one call.
+pub fn import_pages<S: AsRef<str>>(
+    catalog: &Catalog,
+    pages: &[S],
+) -> Result<(PriceTrace, usize), ImportError> {
+    let samples = parse_history_pages(pages)?;
     to_trace(catalog, &samples)
 }
 
@@ -268,6 +342,62 @@ mod tests {
             .id;
         assert_eq!(a.events[id], 1.0);
         assert!(a.mttr[id] < trace.hours as f32);
+    }
+
+    /// The same history as [`history_json`] but captured as two
+    /// `NextToken`-linked pages, with the boundary record repeated on
+    /// both pages (as the REST API does).
+    fn history_pages() -> (String, String) {
+        let page1 = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:10:00.000Z",
+             "ProductDescription": "Linux/UNIX"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"}
+        ], "NextToken": "page-2-token"}"#;
+        let page2 = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.04", "Timestamp": "2020-03-01T09:00:00.000Z"},
+            {"AvailabilityZone": "us-east-1b", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T02:00:00.000Z"},
+            {"AvailabilityZone": "zz-unknown-9z", "InstanceType": "x9.mega",
+             "SpotPrice": "1.0", "Timestamp": "2020-03-01T03:00:00.000Z"}
+        ]}"#;
+        (page1.to_string(), page2.to_string())
+    }
+
+    #[test]
+    fn two_page_fixture_round_trips_to_the_single_file_trace() {
+        let catalog = Catalog::full();
+        let (p1, p2) = history_pages();
+        // boundary duplicate removed: same 5 samples as the one-file form
+        let stitched = parse_history_pages(&[p1.clone(), p2.clone()]).unwrap();
+        assert_eq!(stitched.len(), 5);
+        assert_eq!(stitched, parse_history(&history_json()).unwrap());
+        let (trace, covered) = import_pages(&catalog, &[p1, p2]).unwrap();
+        let (single, covered1) = import(&catalog, &history_json()).unwrap();
+        assert_eq!(covered, covered1);
+        assert_eq!(trace.hours, single.hours);
+        assert_eq!(trace.prices, single.prices, "stitched grid must be byte-identical");
+    }
+
+    #[test]
+    fn pagination_contract_enforced() {
+        let (p1, p2) = history_pages();
+        // missing continuation in the middle
+        let err = parse_history_pages(&[p2.clone(), p1.clone()]).unwrap_err();
+        assert!(matches!(err, ImportError::Pagination(_)), "{err}");
+        assert!(err.to_string().contains("no NextToken"));
+        // dangling token on the last page = truncated capture
+        let err = parse_history_pages(&[p1]).unwrap_err();
+        assert!(matches!(err, ImportError::Pagination(_)), "{err}");
+        assert!(err.to_string().contains("truncated"));
+        // a single final page is fine
+        assert_eq!(parse_history_pages(&[p2]).unwrap().len(), 4);
+        // no pages at all
+        assert!(matches!(parse_history_pages::<String>(&[]), Err(ImportError::Empty)));
     }
 
     #[test]

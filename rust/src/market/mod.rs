@@ -9,7 +9,7 @@ pub mod market;
 pub mod trace;
 pub mod tracegen;
 
-pub use analytics::MarketAnalytics;
+pub use analytics::{MarketAnalytics, PlacementScores};
 pub use catalog::{Catalog, InstanceType, MarketSpec};
 pub use market::{billed_cycles, session_cost, SpotMarket, BILLING_CYCLE_H, TERMINATION_NOTICE_H};
 pub use trace::PriceTrace;

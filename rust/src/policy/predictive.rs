@@ -15,6 +15,7 @@
 use super::{Ctx, Decision, Policy};
 use crate::job::Job;
 use crate::market::analytics::SurvivalCurves;
+use crate::market::PlacementScores;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PredictiveConfig {
@@ -22,11 +23,18 @@ pub struct PredictiveConfig {
     pub confidence: f32,
     /// near-tie band for the price tie-break
     pub tie_band: f32,
+    /// Weight of the placement-score signal
+    /// ([`MarketAnalytics::placement_scores`](crate::market::MarketAnalytics::placement_scores))
+    /// in the near-tie selection.  `0.0` (the default) keeps the pure
+    /// cheapest-price tie-break; `w > 0` maximizes
+    /// `w·score − (1−w)·price/od` among the tie-band candidates.
+    /// Clamped to `[0, 1]` at decision time.
+    pub placement_weight: f32,
 }
 
 impl Default for PredictiveConfig {
     fn default() -> Self {
-        PredictiveConfig { confidence: 0.7, tie_band: 0.05 }
+        PredictiveConfig { confidence: 0.7, tie_band: 0.05, placement_weight: 0.0 }
     }
 }
 
@@ -35,13 +43,23 @@ pub struct PredictivePolicy {
     curves: SurvivalCurves,
     banned: Vec<usize>,
     pub ondemand_fallbacks: u64,
+    /// placement scores cached per job (pure function of analytics ×
+    /// catalog × horizon; recomputing per select would rebuild an
+    /// O(markets) vector every session)
+    placement: Option<PlacementScores>,
 }
 
 impl PredictivePolicy {
     /// Build from precomputed survival curves (native or PJRT — the
     /// policy is agnostic, mirroring how `PSiwoft` reads `World::analytics`).
     pub fn new(curves: SurvivalCurves, cfg: PredictiveConfig) -> Self {
-        PredictivePolicy { cfg, curves, banned: Vec::new(), ondemand_fallbacks: 0 }
+        PredictivePolicy {
+            cfg,
+            curves,
+            banned: Vec::new(),
+            ondemand_fallbacks: 0,
+            placement: None,
+        }
     }
 
     pub fn from_world(world: &crate::sim::World) -> Self {
@@ -76,19 +94,41 @@ impl Policy for PredictivePolicy {
         if let Some(&best) = ranked.first() {
             let s_best = self.curves.at(best, horizon);
             if s_best >= self.cfg.confidence {
-                // near-tie band → cheapest by trailing-day mean price
+                // near-tie band → cheapest by trailing-day mean price,
+                // or the blended placement-score key when enabled
                 let t0 = (ctx.now - 24.0).max(0.0);
                 let t1 = ctx.now.max(t0 + 1.0);
-                let chosen = ranked
+                // clamp: w > 1 would flip the price term into a
+                // preference for expensive markets
+                let weight = (self.cfg.placement_weight as f64).clamp(0.0, 1.0);
+                // collected so the curves borrow ends before the
+                // placement cache (also `&mut self`) is touched below
+                let tied: Vec<usize> = ranked
                     .iter()
                     .copied()
                     .take_while(|&m| self.curves.at(m, horizon) >= s_best - self.cfg.tie_band)
-                    .min_by(|&a, &b| {
-                        let pa = ctx.world.market(a).mean_price(t0, t1);
-                        let pb = ctx.world.market(b).mean_price(t0, t1);
-                        pa.partial_cmp(&pb).unwrap().then(a.cmp(&b))
-                    })
-                    .unwrap_or(best);
+                    .collect();
+                let chosen = if weight > 0.0 {
+                    let scores = self.placement.get_or_insert_with(|| {
+                        ctx.world.analytics.placement_scores(&ctx.world.catalog, horizon)
+                    });
+                    let key = |m: usize| {
+                        let rel = ctx.world.market(m).mean_price(t0, t1) as f64
+                            / ctx.world.od_price(m);
+                        weight * scores.at(m) as f64 - (1.0 - weight) * rel
+                    };
+                    tied.into_iter()
+                        .max_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap().then(b.cmp(&a)))
+                        .unwrap_or(best)
+                } else {
+                    tied.into_iter()
+                        .min_by(|&a, &b| {
+                            let pa = ctx.world.market(a).mean_price(t0, t1);
+                            let pb = ctx.world.market(b).mean_price(t0, t1);
+                            pa.partial_cmp(&pb).unwrap().then(a.cmp(&b))
+                        })
+                        .unwrap_or(best)
+                };
                 return Decision::Spot { market: chosen };
             }
         }
@@ -109,6 +149,7 @@ impl Policy for PredictivePolicy {
 
     fn reset(&mut self) {
         self.banned.clear();
+        self.placement = None;
     }
 }
 
@@ -140,6 +181,23 @@ mod tests {
             }
         } else {
             assert_eq!(p.ondemand_fallbacks, 1);
+        }
+    }
+
+    #[test]
+    fn placement_weight_path_is_deterministic_and_stays_in_band() {
+        let (w, start) = world();
+        let job = Job::new(5, 8.0, 16.0);
+        let mut a = PredictivePolicy::from_world_trained(&w, start as usize);
+        a.cfg.placement_weight = 0.7;
+        let mut b = PredictivePolicy::from_world_trained(&w, start as usize);
+        b.cfg.placement_weight = 0.7;
+        let ctx = Ctx { world: &w, now: start };
+        let da = a.select(&job, &ctx);
+        assert_eq!(da, b.select(&job, &ctx));
+        if da.is_spot() {
+            // still a confident candidate: the score only re-ranks the band
+            assert!(a.curves.at(da.market(), 8.0) >= a.cfg.confidence - a.cfg.tie_band);
         }
     }
 

@@ -24,6 +24,7 @@
 
 use super::{Ctx, Decision, Policy};
 use crate::job::Job;
+use crate::market::PlacementScores;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PSiwoftConfig {
@@ -34,11 +35,25 @@ pub struct PSiwoftConfig {
     /// Ablation switch: disable the correlation filter (Step 13/14
     /// degenerate to just removing the revoked market).
     pub use_corr_filter: bool,
+    /// Weight of the placement-score signal
+    /// ([`MarketAnalytics::placement_scores`](crate::market::MarketAnalytics::placement_scores))
+    /// in the tie-break among statistically-tied top-lifetime
+    /// candidates.  `0.0` (the default) preserves the paper's pure
+    /// lowest-price tie-break bit-for-bit; `w > 0` maximizes
+    /// `w·score − (1−w)·price/od` instead, preferring markets whose
+    /// revocation-adjusted packing value is high — the knob DAG/packing
+    /// workloads turn on.  Clamped to `[0, 1]` at decision time.
+    pub placement_weight: f64,
 }
 
 impl Default for PSiwoftConfig {
     fn default() -> Self {
-        PSiwoftConfig { lifetime_factor: 2.0, corr_threshold: 0.2, use_corr_filter: true }
+        PSiwoftConfig {
+            lifetime_factor: 2.0,
+            corr_threshold: 0.2,
+            use_corr_filter: true,
+            placement_weight: 0.0,
+        }
     }
 }
 
@@ -52,11 +67,21 @@ pub struct PSiwoft {
     pub last_revocation_prob: f64,
     /// decisions that fell back to on-demand
     pub ondemand_fallbacks: u64,
+    /// placement scores cached per job (like `candidates`): the fit is a
+    /// pure function of (analytics, catalog, job length), so one compute
+    /// serves every session of the job
+    placement: Option<PlacementScores>,
 }
 
 impl PSiwoft {
     pub fn new(cfg: PSiwoftConfig) -> Self {
-        PSiwoft { cfg, candidates: None, last_revocation_prob: 0.0, ondemand_fallbacks: 0 }
+        PSiwoft {
+            cfg,
+            candidates: None,
+            last_revocation_prob: 0.0,
+            ondemand_fallbacks: 0,
+            placement: None,
+        }
     }
 
     /// Step 9: revocation probability of provisioning `market` for `job`.
@@ -92,6 +117,9 @@ impl Policy for PSiwoft {
 
     fn select(&mut self, job: &Job, ctx: &Ctx<'_>) -> Decision {
         let factor = self.cfg.lifetime_factor;
+        // clamp: w > 1 would flip the price term into a preference for
+        // expensive markets
+        let weight = self.cfg.placement_weight.clamp(0.0, 1.0);
         let analytics = &ctx.world.analytics;
         let candidates = self.init_candidates(job, ctx);
 
@@ -102,23 +130,42 @@ impl Policy for PSiwoft {
         // and are statistically indistinguishable (a window with ≤ 1
         // revocation event pins the estimate).  We treat candidates
         // within a day (or 2 %) of the top lifetime as tied and break
-        // the tie economically: lowest current spot price.
+        // the tie economically: lowest current spot price — or, with
+        // `placement_weight > 0`, by the blended placement-score key
+        // (revocation-adjusted packing value vs. normalized price).
         if let Some(&first) = candidates.first() {
             let top_mttr = analytics.mttr[first];
             let cutoff = top_mttr - (top_mttr * 0.02).max(24.0);
-            let best = candidates
-                .iter()
-                .copied()
-                .take_while(|&m| analytics.mttr[m] >= cutoff)
-                .min_by(|&a, &b| {
-                    // trailing-day mean price: robust to single-hour noise
-                    let t0 = (ctx.now - 24.0).max(0.0);
-                    let t1 = ctx.now.max(t0 + 1.0);
-                    let pa = ctx.world.market(a).mean_price(t0, t1);
-                    let pb = ctx.world.market(b).mean_price(t0, t1);
-                    pa.partial_cmp(&pb).unwrap().then(a.cmp(&b))
-                })
-                .unwrap_or(first);
+            let t0 = (ctx.now - 24.0).max(0.0);
+            let t1 = ctx.now.max(t0 + 1.0);
+            // collected so the candidate borrow ends before the
+            // placement cache (also `&mut self`) is touched below
+            let tied: Vec<usize> =
+                candidates.iter().copied().take_while(|&m| analytics.mttr[m] >= cutoff).collect();
+            let best = if weight > 0.0 {
+                let scores = self.placement.get_or_insert_with(|| {
+                    analytics.placement_scores(&ctx.world.catalog, job.exec_len_h)
+                });
+                let key = |m: usize| {
+                    // trailing-day mean price normalized by od so it
+                    // blends with the (0,1]-scaled placement score
+                    let rel =
+                        ctx.world.market(m).mean_price(t0, t1) as f64 / ctx.world.od_price(m);
+                    weight * scores.at(m) as f64 - (1.0 - weight) * rel
+                };
+                tied.into_iter()
+                    .max_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap().then(b.cmp(&a)))
+                    .unwrap_or(first)
+            } else {
+                tied.into_iter()
+                    .min_by(|&a, &b| {
+                        // trailing-day mean price: robust to single-hour noise
+                        let pa = ctx.world.market(a).mean_price(t0, t1);
+                        let pb = ctx.world.market(b).mean_price(t0, t1);
+                        pa.partial_cmp(&pb).unwrap().then(a.cmp(&b))
+                    })
+                    .unwrap_or(first)
+            };
             let mttr = analytics.mttr[best] as f64;
             // Step 8: lifetime must comfortably exceed the job.
             if mttr >= factor * job.exec_len_h {
@@ -150,6 +197,7 @@ impl Policy for PSiwoft {
 
     fn reset(&mut self) {
         self.candidates = None;
+        self.placement = None;
         self.last_revocation_prob = 0.0;
     }
 }
@@ -245,6 +293,21 @@ mod tests {
         let cands = p.candidates.clone().unwrap();
         assert!(!cands.contains(&TWIN_A));
         assert!(cands.contains(&TWIN_B), "without the filter, the twin stays");
+    }
+
+    #[test]
+    fn placement_weight_tiebreak_stays_on_top_lifetime_candidates() {
+        let w = rigged_world();
+        let ctx = Ctx { world: &w, now: 0.0 };
+        let job = Job::new(1, 8.0, 16.0);
+        let mut p = PSiwoft::new(PSiwoftConfig { placement_weight: 0.8, ..Default::default() });
+        let d = p.select(&job, &ctx);
+        assert!(d.is_spot());
+        // the two never-revoking r5.large markets are score-tied (same
+        // type, price, MTTR); the deterministic lowest-id tie-break must
+        // keep the selection inside the top-lifetime set
+        assert_eq!(d.market(), STABLE);
+        assert_eq!(w.analytics.mttr[d.market()], 64.0);
     }
 
     #[test]

@@ -127,6 +127,34 @@ impl<'w> Scenario<'w> {
         self.cfg
     }
 
+    pub fn seed_value(&self) -> u64 {
+        self.seed
+    }
+
+    /// Attach a DAG workload: the scenario's policy/FT/rule/start/seed
+    /// settings drive a [`DagRunner`](crate::dag::DagRunner) over `spec`
+    /// instead of the single-job session simulator.  Panics if `spec`
+    /// fails [`DagSpec::validate`](crate::dag::DagSpec::validate).
+    pub fn dag(self, spec: crate::dag::DagSpec) -> crate::dag::DagScenario<'w> {
+        crate::dag::DagScenario::from_scenario(self, spec)
+    }
+
+    /// Instantiate the policy for one run.  `Predictive` shares one
+    /// survival-curve fit across every seed of this point (the fit
+    /// ignores the seed); `get_or_init` also makes concurrent pool
+    /// workers wait for one training run.
+    pub(crate) fn build_policy(&self) -> Box<dyn Policy> {
+        match self.policy {
+            PolicyKind::Predictive(cfg) => {
+                let curves = self.curves.get_or_init(|| {
+                    PolicyKind::train_survival_curves(self.world, self.cfg.start_t)
+                });
+                Box::new(PredictivePolicy::new(curves.clone(), cfg))
+            }
+            kind => kind.build(self.world, self.cfg.start_t),
+        }
+    }
+
     /// Run the scenario once with its configured seed.
     pub fn run(&self) -> JobResult {
         self.run_seeded(self.seed)
@@ -135,18 +163,7 @@ impl<'w> Scenario<'w> {
     /// Run the scenario once with an explicit seed (the configured seed
     /// is ignored; everything else is reused).
     pub fn run_seeded(&self, seed: u64) -> JobResult {
-        let mut policy: Box<dyn Policy> = match self.policy {
-            // share one survival-curve fit across every seed of this
-            // point (the fit ignores the seed); `get_or_init` also
-            // makes concurrent pool workers wait for one training run
-            PolicyKind::Predictive(cfg) => {
-                let curves = self.curves.get_or_init(|| {
-                    PolicyKind::train_survival_curves(self.world, self.cfg.start_t)
-                });
-                Box::new(PredictivePolicy::new(curves.clone(), cfg))
-            }
-            kind => kind.build(self.world, self.cfg.start_t),
-        };
+        let mut policy = self.build_policy();
         let ft = self.ft.build(&self.job);
         execute(self.world, policy.as_mut(), ft.as_ref(), &self.job, &self.cfg, seed)
     }

@@ -11,6 +11,7 @@
 use super::builder::Scenario;
 use super::registry::{FtKind, PolicyKind};
 use crate::coordinator::Pool;
+use crate::dag::{DagAggregate, DagResult, DagScenario, DagSpec};
 use crate::job::Job;
 use crate::sim::{AggregateResult, JobResult, RevocationRule, World};
 
@@ -41,6 +42,7 @@ pub struct SweepRow {
 pub struct Sweep<'w> {
     world: &'w World,
     jobs: Vec<Job>,
+    dags: Vec<DagSpec>,
     policies: Vec<PolicyKind>,
     fts: Vec<FtKind>,
     rules: Vec<RevocationRule>,
@@ -56,6 +58,7 @@ impl<'w> Sweep<'w> {
         Sweep {
             world,
             jobs: Vec::new(),
+            dags: Vec::new(),
             policies: vec![PolicyKind::default()],
             fts: vec![FtKind::default()],
             rules: vec![RevocationRule::Trace],
@@ -76,6 +79,18 @@ impl<'w> Sweep<'w> {
     /// Replace the job axis.
     pub fn jobs(mut self, jobs: impl IntoIterator<Item = Job>) -> Self {
         self.jobs = jobs.into_iter().collect();
+        self
+    }
+
+    /// Add one DAG to the DAG axis (consumed by [`Sweep::run_dags`]).
+    pub fn dag(mut self, spec: DagSpec) -> Self {
+        self.dags.push(spec);
+        self
+    }
+
+    /// Replace the DAG axis.
+    pub fn dags(mut self, specs: impl IntoIterator<Item = DagSpec>) -> Self {
+        self.dags = specs.into_iter().collect();
         self
     }
 
@@ -204,6 +219,78 @@ impl<'w> Sweep<'w> {
             })
             .collect()
     }
+
+    /// Execute the DAG axis: (dags × policies × fts × rules) × seeds,
+    /// fanned out over the pool at per-run steal granularity via
+    /// `map_chunked` (DAG runs are the most skewed items the scheduler
+    /// sees — a revocation-heavy run costs many times a clean one).
+    /// Rows follow the same fixed enumeration as [`Sweep::run`] (dags
+    /// outermost, rules innermost), so results are identical for any
+    /// `workers` setting.
+    pub fn run_dags(&self) -> Vec<DagSweepRow> {
+        if self.dags.is_empty() {
+            return Vec::new();
+        }
+        let seeds = self.seeds;
+        let shared_curves = self
+            .policies
+            .iter()
+            .any(|p| matches!(p, PolicyKind::Predictive(_)))
+            .then(|| PolicyKind::train_survival_curves(self.world, self.start_t));
+        let mut labels = Vec::new();
+        let mut scenarios: Vec<DagScenario<'_>> = Vec::new();
+        for spec in &self.dags {
+            for &policy in &self.policies {
+                for &ft in &self.fts {
+                    for &rule in &self.rules {
+                        let scen = Scenario::on(self.world)
+                            .policy(policy)
+                            .ft(ft)
+                            .rule(rule)
+                            .start_t(self.start_t)
+                            .max_sessions(self.max_sessions);
+                        let scen = match (&policy, &shared_curves) {
+                            (PolicyKind::Predictive(_), Some(curves)) => {
+                                scen.with_curves(curves.clone())
+                            }
+                            _ => scen,
+                        };
+                        labels.push((spec.name.clone(), policy, ft, rule));
+                        scenarios.push(scen.dag(spec.clone()));
+                    }
+                }
+            }
+        }
+        let items: Vec<(usize, u64)> = (0..scenarios.len())
+            .flat_map(|p| (0..seeds).map(move |s| (p, s)))
+            .collect();
+        let pool = Pool::new(self.workers);
+        let runs: Vec<DagResult> =
+            pool.map_chunked(items, 1, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
+        runs.chunks(seeds as usize)
+            .zip(labels)
+            .map(|(chunk, (dag, policy, ft, rule))| DagSweepRow {
+                dag,
+                policy,
+                ft,
+                rule,
+                agg: DagAggregate::from_runs(chunk),
+                runs: chunk.to_vec(),
+            })
+            .collect()
+    }
+}
+
+/// One executed point of the DAG axis: the aggregate plus the per-seed
+/// runs behind it (seed `i` of the row is `base_seed + i`).
+#[derive(Clone, Debug)]
+pub struct DagSweepRow {
+    pub dag: String,
+    pub policy: PolicyKind,
+    pub ft: FtKind,
+    pub rule: RevocationRule,
+    pub agg: DagAggregate,
+    pub runs: Vec<DagResult>,
 }
 
 #[cfg(test)]
@@ -264,6 +351,38 @@ mod tests {
         assert_eq!(row.agg.n, 3);
         assert_eq!(row.agg, AggregateResult::from_runs(&row.runs));
         assert_eq!(row.agg.mean_revocations, 1.0);
+    }
+
+    #[test]
+    fn dag_axis_enumerates_and_aggregates() {
+        let (w, start) = world();
+        let spec = DagSpec::new("two")
+            .stage("a", 2.0, 8.0, &[])
+            .stage("b", 1.0, 8.0, &["a"]);
+        let rows = Sweep::on(&w)
+            .dag(spec)
+            .policies([PolicyKind::default(), PolicyKind::FtSpot])
+            .fts([FtKind::None])
+            .rules([RevocationRule::Trace, RevocationRule::ForcedCount { total: 1 }])
+            .seeds(2)
+            .start_t(start)
+            .workers(1)
+            .run_dags();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].dag, "two");
+        assert_eq!(rows[0].rule, RevocationRule::Trace);
+        assert_eq!(rows[1].rule, RevocationRule::ForcedCount { total: 1 });
+        assert_eq!(rows[2].policy, PolicyKind::FtSpot);
+        for row in &rows {
+            assert_eq!(row.runs.len(), 2);
+            assert_eq!(row.agg.n, 2);
+            assert_eq!(row.agg.stages.len(), 2);
+            assert!(row.agg.completion_rate > 0.99, "{:?} did not complete", row.rule);
+        }
+        // the forced-count rows demonstrably revoked
+        assert!(rows[1].agg.mean_revocations >= 1.0 - 1e-9);
+        // a DAG-less sweep runs nothing
+        assert!(Sweep::on(&w).run_dags().is_empty());
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //!   * `startup`    — instance boot + container start,
 //!   * `migration`  — live-migration transfers (F-migration only),
 //!   * `buffer`     — cost-only: the unused tail of billed hours
-//!                    ("buffer costs of billing cycles").
+//!                    ("buffer costs of billing cycles"),
+//!   * `idle`       — cost-only: a packed stage's share of instance time
+//!                    after it finished while co-packed stages kept the
+//!                    instance running (DAG multi-job packing, `dag::`).
 
 use std::fmt;
 
@@ -22,6 +25,7 @@ pub enum Category {
     Startup,
     Migration,
     Buffer,
+    Idle,
 }
 
 pub const CATEGORIES: &[Category] = &[
@@ -32,6 +36,7 @@ pub const CATEGORIES: &[Category] = &[
     Category::Startup,
     Category::Migration,
     Category::Buffer,
+    Category::Idle,
 ];
 
 impl Category {
@@ -44,6 +49,7 @@ impl Category {
             Category::Startup => "startup",
             Category::Migration => "migration",
             Category::Buffer => "buffer",
+            Category::Idle => "idle",
         }
     }
     fn index(self) -> usize {
@@ -60,7 +66,7 @@ impl fmt::Display for Category {
 /// A per-category accumulator (one for time, one for cost).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Breakdown {
-    vals: [f64; 7],
+    vals: [f64; 8],
 }
 
 impl Breakdown {

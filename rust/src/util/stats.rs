@@ -88,8 +88,24 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// Sort a copy and return (p50, p90, p99).
 pub fn percentiles(xs: &[f64]) -> (f64, f64, f64) {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_samples(&mut v);
     (percentile(&v, 50.0), percentile(&v, 90.0), percentile(&v, 99.0))
+}
+
+/// Sort samples ascending in place — the preparation [`percentile`]
+/// expects.  One home for the `partial_cmp` sort every latency
+/// collector used to hand-roll (NaN-free inputs assumed, as
+/// everywhere in the crate).
+pub fn sort_samples(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+/// (p50, p99) of a sample in any order — the latency-report pair
+/// `coordinator::loadgen` and the serve/DAG benches print.
+pub fn p50_p99(xs: &[f64]) -> (f64, f64) {
+    let mut v = xs.to_vec();
+    sort_samples(&mut v);
+    (percentile(&v, 50.0), percentile(&v, 99.0))
 }
 
 /// Fixed-width histogram.
@@ -196,6 +212,18 @@ mod tests {
     fn percentile_single() {
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn p50_p99_matches_sorted_percentile() {
+        let xs = [5.0, 1.0, 9.0, 3.0, 7.0];
+        let (p50, p99) = p50_p99(&xs);
+        let mut sorted = xs.to_vec();
+        sort_samples(&mut sorted);
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(p50, percentile(&sorted, 50.0));
+        assert_eq!(p99, percentile(&sorted, 99.0));
+        assert_eq!(p50, 5.0);
     }
 
     #[test]

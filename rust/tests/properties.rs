@@ -210,6 +210,150 @@ fn prop_psiwoft_candidates_shrink_monotonically() {
     );
 }
 
+// ---- dag invariants ---------------------------------------------------
+
+/// Random DAG with edges only to earlier stages (acyclic by
+/// construction — `validate` re-checks anyway).
+fn random_dag(r: &mut Rng) -> DagSpec {
+    let n = 2 + r.below(6);
+    let names: Vec<String> = (0..n).map(|i| format!("s{i}")).collect();
+    let mut spec = DagSpec::new("rand");
+    for i in 0..n {
+        let len = r.range(0.5, 6.0);
+        let mem = [4.0, 8.0, 16.0, 32.0][r.below(4)];
+        let mut deps: Vec<&str> = Vec::new();
+        for name in names.iter().take(i) {
+            if r.chance(0.35) {
+                deps.push(name);
+            }
+        }
+        spec = spec.stage(&names[i], len, mem, &deps);
+    }
+    spec
+}
+
+#[test]
+fn prop_random_dags_execute_in_topological_order() {
+    let mut world = World::generate(48, 1.0, 606);
+    let start = world.split_train(0.6);
+    check(
+        25,
+        8,
+        |r: &mut Rng| {
+            let rule = match r.below(3) {
+                0 => RevocationRule::Trace,
+                1 => RevocationRule::ForcedRate { per_day: r.range(0.5, 6.0) },
+                _ => RevocationRule::ForcedCount { total: 1 + r.below(4) as u32 },
+            };
+            (random_dag(r), rule, r.next_u64())
+        },
+        |(spec, rule, seed)| {
+            let r = Scenario::on(&world)
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::CheckpointHourly)
+                .rule(*rule)
+                .start_t(start)
+                .seed(*seed)
+                .dag(spec.clone())
+                .run();
+            if !r.completed {
+                return Err("dag did not complete".into());
+            }
+            for (si, stage) in spec.stages.iter().enumerate() {
+                let sr = &r.stages[si];
+                let useful = sr.ledger.time.get(Category::Useful);
+                if (useful - stage.exec_len_h).abs() > 1e-6 {
+                    let want = stage.exec_len_h;
+                    return Err(format!("stage {}: useful {useful} != {want}", sr.name));
+                }
+                for dep in &stage.deps {
+                    let dr = r.stage(dep).unwrap();
+                    if sr.started_at_h < dr.completed_at_h - 1e-9 {
+                        return Err(format!(
+                            "stage {} started at {} before dep {} completed at {}",
+                            sr.name, sr.started_at_h, dep, dr.completed_at_h
+                        ));
+                    }
+                }
+            }
+            if let RevocationRule::ForcedCount { total } = rule {
+                if r.revocations != *total {
+                    return Err(format!("expected {total} revocations, got {}", r.revocations));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_bins_never_exceed_capacity() {
+    check(
+        200,
+        9,
+        |r: &mut Rng| {
+            let cap = [16.0, 32.0, 64.0, 192.0][r.below(4)];
+            let items: Vec<(usize, f64)> = (0..1 + r.below(40))
+                .map(|i| (i, [4.0, 8.0, 16.0][r.below(3)].min(cap)))
+                .collect();
+            (cap, items)
+        },
+        |(cap, items)| {
+            let bins = Packer::new(*cap).pack(items);
+            let mut seen = std::collections::BTreeSet::new();
+            for b in &bins {
+                let sum: f64 = b.stages.iter().map(|&i| items[i].1).sum();
+                if sum > cap + 1e-9 || b.used_gb > cap + 1e-9 {
+                    return Err(format!("bin over capacity: {} > {cap}", b.used_gb));
+                }
+                if (sum - b.used_gb).abs() > 1e-9 {
+                    return Err("used_gb out of sync with contents".into());
+                }
+                for &i in &b.stages {
+                    if !seen.insert(i) {
+                        return Err(format!("stage {i} packed twice"));
+                    }
+                }
+            }
+            if seen.len() != items.len() {
+                return Err("packer dropped stages".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dag_sweep_worker_count_equivalence() {
+    let mut world = World::generate(48, 1.0, 707);
+    let start = world.split_train(0.6);
+    let mut r = Rng::new(41);
+    let specs = vec![random_dag(&mut r), random_dag(&mut r)];
+    let run = |workers: usize| {
+        siwoft::scenario::Sweep::on(&world)
+            .dags(specs.clone())
+            .policies([PolicyKind::default(), PolicyKind::FtSpot])
+            .fts([FtKind::None, FtKind::CheckpointHourly])
+            .rules([RevocationRule::Trace, RevocationRule::ForcedCount { total: 1 }])
+            .seeds(2)
+            .start_t(start)
+            .workers(workers)
+            .run_dags()
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * 2 * 2 * 2);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.dag, b.dag);
+        assert_eq!(a.policy, b.policy);
+        assert_eq!(a.ft, b.ft);
+        assert_eq!(a.rule, b.rule);
+        assert_eq!(a.agg, b.agg, "aggregate differs for {}/{:?}", a.dag, a.rule);
+        assert_eq!(a.runs, b.runs, "per-seed runs differ for {}/{:?}", a.dag, a.rule);
+    }
+}
+
 #[test]
 fn prop_tracegen_deterministic_and_positive() {
     check(20, 7, |r: &mut Rng| r.next_u64(), |&seed| {

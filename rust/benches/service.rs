@@ -1,0 +1,94 @@
+//! Bench: fleet-maintenance throughput — steady-state service runs
+//! across fleet size × revocation rate, plus the grouped-packer and
+//! re-pack hot paths.  These are the §Perf numbers for the `service::`
+//! subsystem (EXPERIMENTS.md).
+//!
+//!     cargo bench --bench service
+
+use siwoft::pack::Packer;
+use siwoft::prelude::*;
+use siwoft::util::benchkit::{Bench, Suite};
+use siwoft::util::stats::p50_p99;
+
+fn fleet(replicas: u32) -> ServiceSpec {
+    ServiceSpec::new(format!("fleet-{replicas}"))
+        .horizon(48.0)
+        .capacity(64.0)
+        .tier(TierSpec::open("web", replicas, 8.0).slack(0.2))
+        .tier(TierSpec::open("api", (replicas / 2).max(1), 16.0).slack(0.2))
+}
+
+fn main() {
+    let mut world = World::generate(96, 2.0, 7);
+    let start = world.split_train(0.6);
+
+    let bench = Bench::with_times(300, 1200);
+    let mut suite = Suite::new("service fleets: maintenance + re-pack throughput");
+    suite.header();
+
+    // fleet size × revocation rate: the replica-hours maintained per
+    // second of wall clock is the subsystem's throughput metric
+    for replicas in [2u32, 8, 24] {
+        for (label, rule) in [
+            ("trace", RevocationRule::Trace),
+            ("rate:6", RevocationRule::ForcedRate { per_day: 6.0 }),
+            ("rate:24", RevocationRule::ForcedRate { per_day: 24.0 }),
+        ] {
+            let spec = fleet(replicas);
+            let units = spec.total_replicas() as f64 * spec.horizon_h;
+            let scen = Scenario::on(&world).start_t(start).rule(rule).service(spec);
+            let mut seed = 0u64;
+            suite.push(bench.run_with_units(
+                &format!("fleet {replicas}+{} replicas ({label})", (replicas / 2).max(1)),
+                units,
+                || {
+                    seed = seed.wrapping_add(1);
+                    scen.run_seeded(seed).bins
+                },
+            ));
+        }
+    }
+
+    // re-pack on vs. off at a hot revocation rate: the consolidation
+    // overhead the ROADMAP asked to measure
+    for (label, repack) in [("re-pack on", true), ("re-pack off", false)] {
+        let spec = fleet(8).repack(repack);
+        let scen = Scenario::on(&world)
+            .start_t(start)
+            .rule(RevocationRule::ForcedRate { per_day: 24.0 })
+            .service(spec);
+        let mut seed = 0u64;
+        suite.push(bench.run(&format!("fleet 8+4 @ rate:24 ({label})"), || {
+            seed = seed.wrapping_add(1);
+            scen.run_seeded(seed).repacks
+        }));
+    }
+
+    // grouped-packer hot path: 256 copies in 128 anti-affine pairs
+    let packer = Packer::new(64.0);
+    let grouped: Vec<(usize, f64, u64)> =
+        (0..256).map(|i| (i, [4.0, 8.0, 16.0][i % 3], (i / 2) as u64)).collect();
+    suite.push(bench.run_with_units("packer: grouped FFD 256 copies @ 64 GB", 256.0, || {
+        packer.pack_grouped(&grouped).len()
+    }));
+
+    // spec parse + validate (the CLI's --spec path)
+    let toml = std::fs::read_to_string("configs/service_web.toml")
+        .expect("run from rust/ (cargo bench)");
+    suite.push(bench.run("spec: parse + validate service_web.toml", || {
+        ServiceSpec::parse(&toml).unwrap().len()
+    }));
+
+    // SLO distribution sanity for the report (not a timing metric)
+    let scen = Scenario::on(&world)
+        .start_t(start)
+        .rule(RevocationRule::ForcedRate { per_day: 12.0 })
+        .service(fleet(8));
+    let slo: Vec<f64> = (0..32)
+        .map(|s| scen.run_seeded(s).tiers.iter().map(|t| t.slo_violation_h).sum::<f64>())
+        .collect();
+    let (p50, p99) = p50_p99(&slo);
+    println!("\n  fleet 8+4 slo-violation over 32 seeds: p50 {p50:.3} h  p99 {p99:.3} h");
+
+    siwoft::util::csvio::write_file("results/bench_service.csv", &suite.to_csv()).ok();
+}

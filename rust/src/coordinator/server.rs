@@ -59,6 +59,10 @@ impl Shutdown {
     }
 }
 
+/// Default connection cap: thread-per-connection needs a ceiling to
+/// survive multi-tenant traffic (`--max-conns` on the CLI).
+pub const DEFAULT_MAX_CONNS: usize = 256;
+
 pub struct Server {
     coordinator: Arc<Coordinator>,
     shutdown: Arc<Shutdown>,
@@ -67,6 +71,11 @@ pub struct Server {
     reaped: AtomicU64,
     /// high-water mark of live (unreaped) connection-thread handles
     peak_live: AtomicUsize,
+    /// accept-time backpressure: connections beyond this many live ones
+    /// are rejected with a JSON error line instead of spawning a thread
+    max_conns: usize,
+    /// connections rejected at accept time by the cap
+    rejected: AtomicU64,
 }
 
 impl Server {
@@ -77,7 +86,17 @@ impl Server {
             next_job_id: AtomicU64::new(1),
             reaped: AtomicU64::new(0),
             peak_live: AtomicUsize::new(0),
+            max_conns: DEFAULT_MAX_CONNS,
+            rejected: AtomicU64::new(0),
         }
+    }
+
+    /// Set the live-connection cap (builder style; 0 is clamped to 1 —
+    /// a server that can accept nothing cannot even be shut down over
+    /// the wire).
+    pub fn max_conns(mut self, n: usize) -> Server {
+        self.max_conns = n.max(1);
+        self
     }
 
     /// Bind and serve until a `shutdown` command arrives.  Returns the
@@ -99,17 +118,10 @@ impl Server {
                 break;
             }
             crate::log_debug!("connection from {peer}");
-            let coordinator = self.coordinator.clone();
-            let shutdown = self.shutdown.clone();
-            let id = self.next_job_id.fetch_add(1_000_000, Ordering::SeqCst);
-            handles.push(std::thread::spawn(move || {
-                if let Err(e) = handle_conn(stream, &coordinator, &shutdown, id) {
-                    crate::log_warn!("connection error: {e:#}");
-                }
-            }));
             // Reap finished connection threads so `handles` holds only
             // live connections (a long-running server must not grow it
-            // unboundedly — pinned by `reaps_finished_conn_threads`).
+            // unboundedly — pinned by `reaps_finished_conn_threads`),
+            // and so the cap below counts only live ones.
             for h in std::mem::take(&mut handles) {
                 if h.is_finished() {
                     let _ = h.join();
@@ -118,6 +130,38 @@ impl Server {
                     handles.push(h);
                 }
             }
+            if handles.len() >= self.max_conns {
+                // accept-time backpressure: tell the client why and
+                // close instead of spawning an unbounded thread
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "rejecting connection from {peer}: {} live connections (cap {})",
+                    handles.len(),
+                    self.max_conns
+                );
+                let reply = Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    (
+                        "error",
+                        Json::str(format!(
+                            "server at capacity ({} connections); retry later",
+                            self.max_conns
+                        )),
+                    ),
+                ]);
+                let mut stream = stream;
+                let _ = writeln!(stream, "{reply}");
+                drop(stream);
+                continue;
+            }
+            let coordinator = self.coordinator.clone();
+            let shutdown = self.shutdown.clone();
+            let id = self.next_job_id.fetch_add(1_000_000, Ordering::SeqCst);
+            handles.push(std::thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, &coordinator, &shutdown, id) {
+                    crate::log_warn!("connection error: {e:#}");
+                }
+            }));
             self.peak_live.fetch_max(handles.len(), Ordering::Relaxed);
         }
         for h in handles {
@@ -139,6 +183,11 @@ impl Server {
     /// High-water mark of simultaneously-held connection handles.
     pub fn peak_live_conn_threads(&self) -> usize {
         self.peak_live.load(Ordering::Relaxed)
+    }
+
+    /// Connections rejected at accept time by the `max_conns` cap.
+    pub fn rejected_conns(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
     }
 }
 
@@ -276,6 +325,49 @@ mod tests {
         // trigger's self-connect wakeup actually fires.
         let (server, _addr, t) = spawn_server(1);
         server.request_shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connection_cap_rejects_excess_conns() {
+        let world = World::generate(24, 0.5, 33);
+        let server = Arc::new(
+            Server::new(Coordinator::new(world, AnalyticsEngine::native(), 1)).max_conns(1),
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s2 = server.clone();
+        let t = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+
+        // hold one connection open (it occupies the single slot)...
+        let mut held = TcpStream::connect(addr).unwrap();
+        writeln!(held, r#"{{"cmd":"status"}}"#).unwrap();
+        let mut reader = BufReader::new(held.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(Json::parse(&reply).unwrap().get("ok").unwrap().as_bool(), Some(true));
+
+        // ...so the next one is rejected at accept time with a reason
+        let over = TcpStream::connect(addr).unwrap();
+        let mut over_reader = BufReader::new(over);
+        let mut rejection = String::new();
+        over_reader.read_line(&mut rejection).unwrap();
+        let rejection = Json::parse(&rejection).unwrap();
+        assert_eq!(rejection.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            rejection.get("error").unwrap().as_str().unwrap().contains("capacity"),
+            "{rejection}"
+        );
+        assert_eq!(server.rejected_conns(), 1);
+
+        // the held connection still works, and can shut the server down
+        writeln!(held, r#"{{"cmd":"shutdown"}}"#).unwrap();
+        let mut bye = String::new();
+        reader.read_line(&mut bye).unwrap();
+        assert_eq!(Json::parse(&bye).unwrap().get("ok").unwrap().as_bool(), Some(true));
+        drop(held);
         t.join().unwrap();
     }
 

@@ -10,7 +10,8 @@
 //!   (`rust/configs/dag_*.toml`) or built in code;
 //! * [`packer`] — [`Packer`]: first-fit-decreasing bin packing of ready
 //!   stages onto instances by memory footprint, with a per-instance
-//!   capacity from the catalog;
+//!   capacity from the catalog (shared with `service::` as
+//!   [`crate::pack`]; this path re-exports it);
 //! * [`runner`] — [`DagRunner`]: drives the `sim::Engine` event loop so
 //!   a revocation kills every stage packed on the instance and
 //!   re-enqueues them per the active policy/FT pairing, with

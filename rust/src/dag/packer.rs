@@ -1,123 +1,7 @@
-//! Multi-job packing: first-fit-decreasing bin packing of ready stages
-//! onto instances by memory footprint.
-//!
-//! The packer answers "which ready stages share an instance?"; market
-//! selection for each packed instance stays with the policy layer.  The
-//! per-instance capacity comes from the catalog (the largest instance
-//! type) unless the DAG spec pins a smaller `capacity_gb`.
-//!
-//! FFD is deterministic: stages sort by footprint descending (ties by
-//! stage index ascending), and each lands in the first open bin with
-//! room.  Classic result: FFD uses at most `11/9·OPT + 6/9` bins.
+//! Multi-job packing for DAG stages — now a re-export of the shared
+//! [`crate::pack`] module, which `dag` and `service` both drive (the
+//! service subsystem added grouped anti-affinity packing for replicated
+//! replicas).  The old paths `dag::packer::{Bin, Packer}` and
+//! `dag::{Bin, Packer}` keep compiling unchanged.
 
-use crate::market::Catalog;
-
-/// One packed instance-worth of stages.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Bin {
-    /// stage indices, in placement order
-    pub stages: Vec<usize>,
-    /// memory claimed by the packed stages (GB)
-    pub used_gb: f64,
-}
-
-/// First-fit-decreasing packer with a fixed per-instance capacity.
-#[derive(Clone, Copy, Debug)]
-pub struct Packer {
-    capacity_gb: f64,
-}
-
-impl Packer {
-    pub fn new(capacity_gb: f64) -> Packer {
-        assert!(capacity_gb > 0.0, "packer capacity must be positive");
-        Packer { capacity_gb }
-    }
-
-    /// Capacity of the largest instance type in the catalog.
-    pub fn from_catalog(catalog: &Catalog) -> Packer {
-        let cap = catalog
-            .markets
-            .iter()
-            .map(|m| m.instance.mem_gb)
-            .fold(0.0f64, f64::max);
-        Packer::new(cap)
-    }
-
-    pub fn capacity_gb(&self) -> f64 {
-        self.capacity_gb
-    }
-
-    /// Pack `(stage index, mem_gb)` items into bins, first-fit over the
-    /// footprint-descending order.  Panics if any single item exceeds
-    /// the capacity (specs are validated against this upstream).
-    pub fn pack(&self, items: &[(usize, f64)]) -> Vec<Bin> {
-        let mut sorted: Vec<(usize, f64)> = items.to_vec();
-        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        let mut bins: Vec<Bin> = Vec::new();
-        for &(idx, mem) in &sorted {
-            assert!(
-                mem <= self.capacity_gb + 1e-9,
-                "stage {idx} ({mem} GB) exceeds instance capacity {} GB",
-                self.capacity_gb
-            );
-            match bins.iter_mut().find(|b| b.used_gb + mem <= self.capacity_gb + 1e-9) {
-                Some(b) => {
-                    b.stages.push(idx);
-                    b.used_gb += mem;
-                }
-                None => bins.push(Bin { stages: vec![idx], used_gb: mem }),
-            }
-        }
-        bins
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn ffd_packs_tightly() {
-        let p = Packer::new(32.0);
-        // 16+16, 8+8+8 → two bins under FFD
-        let bins = p.pack(&[(0, 8.0), (1, 16.0), (2, 8.0), (3, 16.0), (4, 8.0)]);
-        assert_eq!(bins.len(), 2);
-        assert!(bins.iter().all(|b| b.used_gb <= 32.0));
-        let total: usize = bins.iter().map(|b| b.stages.len()).sum();
-        assert_eq!(total, 5);
-    }
-
-    #[test]
-    fn deterministic_on_ties() {
-        let p = Packer::new(16.0);
-        let a = p.pack(&[(0, 8.0), (1, 8.0), (2, 8.0)]);
-        let b = p.pack(&[(2, 8.0), (0, 8.0), (1, 8.0)]);
-        assert_eq!(a, b);
-        assert_eq!(a[0].stages, vec![0, 1]);
-        assert_eq!(a[1].stages, vec![2]);
-    }
-
-    #[test]
-    fn capacity_never_exceeded() {
-        let p = Packer::new(24.0);
-        let items: Vec<(usize, f64)> =
-            (0..12).map(|i| (i, [4.0, 8.0, 16.0, 12.0][i % 4])).collect();
-        for b in p.pack(&items) {
-            assert!(b.used_gb <= 24.0 + 1e-9);
-            let sum: f64 = b.stages.iter().map(|&i| [4.0, 8.0, 16.0, 12.0][i % 4]).sum();
-            assert!((sum - b.used_gb).abs() < 1e-9);
-        }
-    }
-
-    #[test]
-    #[should_panic(expected = "exceeds instance capacity")]
-    fn oversized_item_panics() {
-        Packer::new(8.0).pack(&[(0, 9.0)]);
-    }
-
-    #[test]
-    fn from_catalog_uses_largest_type() {
-        let p = Packer::from_catalog(&Catalog::full());
-        assert_eq!(p.capacity_gb(), 192.0);
-    }
-}
+pub use crate::pack::{Bin, Packer};

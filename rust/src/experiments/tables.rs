@@ -14,6 +14,8 @@ fn glyph(c: Category) -> char {
         Category::Migration => 'm',
         Category::Buffer => '$',
         Category::Idle => 'i',
+        Category::Repack => 'r',
+        Category::Slo => '!',
     }
 }
 

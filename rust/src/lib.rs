@@ -29,9 +29,11 @@ pub mod experiments;
 pub mod ft;
 pub mod job;
 pub mod market;
+pub mod pack;
 pub mod policy;
 pub mod runtime;
 pub mod scenario;
+pub mod service;
 pub mod sim;
 pub mod util;
 
@@ -48,7 +50,11 @@ pub mod prelude {
     };
     pub use crate::runtime::AnalyticsEngine;
     pub use crate::scenario::{
-        DagSweepRow, FtKind, PolicyKind, Scenario, Sweep, SweepPoint, SweepRow,
+        DagSweepRow, FtKind, PolicyKind, Scenario, ServiceSweepRow, Sweep, SweepPoint, SweepRow,
+    };
+    pub use crate::service::{
+        FleetRunner, ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec, TierResult,
+        TierSpec,
     };
     #[allow(deprecated)] // legacy shim kept importable for external migrators
     pub use crate::sim::simulate_job;

@@ -5,6 +5,7 @@
 //!   analyze      run market analytics (PJRT artifact or native) on traces
 //!   simulate     run one job under a (policy, ft) pair
 //!   dag          run a DAG workload with multi-job packing
+//!   service      maintain a long-running service fleet (SLO + re-pack)
 //!   fig1         reproduce Fig. 1 panels (a–f) of the paper
 //!   ablation     run the ablation studies (ckpt count, replication, corr)
 //!   sensitivity  spot/on-demand price-ratio sweep
@@ -40,6 +41,7 @@ fn main() -> ExitCode {
         "analyze" => analyze(rest),
         "simulate" => simulate(rest),
         "dag" => dag_cmd(rest),
+        "service" => service_cmd(rest),
         "fig1" | "fig" => fig1(rest),
         "ablation" => run_ablation(rest),
         "sensitivity" => sensitivity(rest),
@@ -73,6 +75,7 @@ fn help_text() -> String {
      analyze      market analytics: MTTR table + correlation summary\n  \
      simulate     run one job under a policy/ft pair\n  \
      dag          run a DAG workload with multi-job packing (--spec <toml>)\n  \
+     service      maintain a long-running service fleet (--spec <toml>)\n  \
      fig1         reproduce the paper's Fig. 1 panels (alias: fig)\n  \
      ablation     checkpoint/replication/correlation ablations\n  \
      sensitivity  spot/on-demand price-ratio sweep (F/O crossover)\n  \
@@ -180,9 +183,14 @@ fn analyze(raw: &[String]) -> Result<(), String> {
         .opt("seed", "2020", "synthetic seed")
         .opt("artifacts", "artifacts", "AOT artifacts dir")
         .opt("top", "10", "rows to print")
-        .flag("native", "force the native backend (skip PJRT)");
+        .flag("native", "force the native backend (skip PJRT)")
+        .flag(
+            "coverage",
+            "with --history: per-market first/last timestamp, record count and largest gap",
+        );
     let a = spec.parse(raw)?;
     let world = if !a.str("history").is_empty() {
+        use siwoft::market::importer;
         let paths: Vec<&str> =
             a.str("history").split(',').map(str::trim).filter(|p| !p.is_empty()).collect();
         let mut pages = Vec::with_capacity(paths.len());
@@ -190,16 +198,37 @@ fn analyze(raw: &[String]) -> Result<(), String> {
             pages.push(std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?);
         }
         let catalog = Catalog::full();
-        // import_pages also covers the single-file case, and rejects a
-        // lone page whose dangling NextToken marks a truncated capture
+        // parse_history_pages also covers the single-file case, and
+        // rejects a lone page whose dangling NextToken marks a
+        // truncated capture
+        let samples = importer::parse_history_pages(&pages).map_err(|e| format!("{e}"))?;
         let (trace, covered) =
-            siwoft::market::importer::import_pages(&catalog, &pages).map_err(|e| format!("{e}"))?;
+            importer::to_trace(&catalog, &samples).map_err(|e| format!("{e}"))?;
         println!(
             "imported real price history ({} page{}): {covered} markets covered, {} hours",
             pages.len(),
             if pages.len() == 1 { "" } else { "s" },
             trace.hours
         );
+        if a.flag("coverage") {
+            let cov = importer::coverage(&catalog, &samples);
+            println!("\nper-market coverage ({} of {} markets):", cov.len(), catalog.len());
+            println!(
+                "{:<28} {:>8} {:>18} {:>18} {:>12}",
+                "market", "records", "first", "last", "largest_gap"
+            );
+            for c in &cov {
+                println!(
+                    "{:<28} {:>8} {:>18} {:>18} {:>10} h",
+                    catalog.markets[c.market].label(),
+                    c.records,
+                    importer::format_epoch_hours(c.first_hour),
+                    importer::format_epoch_hours(c.last_hour),
+                    c.largest_gap_h
+                );
+            }
+            println!();
+        }
         World::new(catalog, trace)
     } else {
         load_or_generate_world(a.str("traces"), a.usize("markets")?, a.f64("months")?, a.u64("seed")?)?
@@ -447,6 +476,172 @@ fn dag_cmd(raw: &[String]) -> Result<(), String> {
         }
     }
     let path = emit(a.str("out"), "dag", &rows, a.str("format"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn service_cmd(raw: &[String]) -> Result<(), String> {
+    use siwoft::scenario::Sweep;
+    use siwoft::service::ServiceSpec;
+    let spec_cli = CommandSpec::new("service", "maintain a long-running service fleet")
+        .req(
+            "spec",
+            "service spec TOML: [service] + [tier.<name>] sections (see configs/service_*.toml)",
+        )
+        .opt(
+            "arms",
+            "p:none,ft:replication",
+            "comma-separated policy:ft arms (policy and ft names as in `simulate`)",
+        )
+        .opt("rules", "trace,rate:3", "comma-separated rules: trace | rate:<per_day> | count:<n>")
+        .opt("markets", "96", "market count")
+        .opt("months", "2", "trace months")
+        .opt("seed", "2020", "world seed")
+        .opt("seeds", "5", "runs per (arm, rule)")
+        .opt("train-frac", "0.67", "fraction of trace used for analytics")
+        .opt("out", "results", "output dir")
+        .opt("format", "csv", "output format: csv | json")
+        .workers_opt();
+    let a = spec_cli.parse(raw)?;
+    let svc = ServiceSpec::load(a.str("spec")).map_err(|e| format!("--spec: {e}"))?;
+    let mut arms: Vec<(PolicyKind, FtKind)> = Vec::new();
+    for part in a.str("arms").split(',').filter(|s| !s.trim().is_empty()) {
+        let (p, f) = part.trim().split_once(':').unwrap_or((part.trim(), "none"));
+        let policy =
+            PolicyKind::parse(p).ok_or_else(|| format!("unknown policy '{p}' in --arms"))?;
+        let ft = FtKind::parse(f).ok_or_else(|| format!("unknown ft '{f}' in --arms"))?;
+        arms.push((policy, ft));
+    }
+    let mut rules: Vec<RevocationRule> = Vec::new();
+    for r in a.str("rules").split(',').filter(|s| !s.trim().is_empty()) {
+        rules.push(RevocationRule::parse(r.trim())?);
+    }
+    if arms.is_empty() || rules.is_empty() {
+        return Err("--arms and --rules must be non-empty".into());
+    }
+    let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
+    let start = world.split_train(a.f64("train-frac")?);
+    let capacity = svc
+        .effective_capacity(&world.catalog)
+        .map_err(|e| format!("{e}; raise --markets or shrink the replica"))?;
+    if start + svc.horizon_h > world.trace.hours as f64 {
+        return Err(format!(
+            "service '{}': horizon {} h overruns the trace ({} h after the training split); \
+             raise --months or shrink horizon_h",
+            svc.name,
+            svc.horizon_h,
+            world.trace.hours as f64 - start
+        ));
+    }
+    println!(
+        "service '{}': {} tiers, {} replicas, {:.1} h horizon, instance capacity {} GB, \
+         re-pack {}, {} seeds\n",
+        svc.name,
+        svc.len(),
+        svc.total_replicas(),
+        svc.horizon_h,
+        capacity,
+        if svc.repack { "on" } else { "off" },
+        a.u64("seeds")?
+    );
+    let mut rows = vec![siwoft::csv_row![
+        "policy",
+        "ft",
+        "rule",
+        "tier",
+        "up_h",
+        "slo_violation_h",
+        "slo_met_rate",
+        "repack_cost_usd",
+        "cost_usd",
+        "revocations",
+        "sessions",
+        "completion_rate",
+        "makespan_h"
+    ]];
+    for (policy, ft) in &arms {
+        let sweep_rows = Sweep::on(&world)
+            .service(svc.clone())
+            .policies([*policy])
+            .fts([*ft])
+            .rules(rules.iter().copied())
+            .seeds(a.u64("seeds")?)
+            .start_t(start)
+            .workers(a.workers()?)
+            .run_services();
+        for row in sweep_rows {
+            let (p, f, r) = (row.policy.label(), row.ft.label(), row.rule.label());
+            println!("== {p} + {f} | rule {r} ==");
+            println!(
+                "{:<14} {:>9} {:>8} {:>8} {:>10} {:>10} {:>6} {:>9} {:>6}",
+                "tier", "up_h", "slo_h", "slo_ok", "repack_$", "cost_usd", "revs", "sessions",
+                "done"
+            );
+            for t in &row.agg.tiers {
+                use siwoft::sim::Category;
+                println!(
+                    "{:<14} {:>9.2} {:>8.3} {:>8.2} {:>10.5} {:>10.4} {:>6.2} {:>9.2} {:>6.2}",
+                    t.name,
+                    t.mean_up_h,
+                    t.mean_slo_violation_h,
+                    t.slo_met_rate,
+                    t.cost.get(Category::Repack),
+                    t.cost.total(),
+                    t.mean_revocations,
+                    t.mean_sessions,
+                    t.completion_rate
+                );
+                rows.push(siwoft::csv_row![
+                    p,
+                    f,
+                    r,
+                    t.name,
+                    format!("{:.6}", t.mean_up_h),
+                    format!("{:.6}", t.mean_slo_violation_h),
+                    format!("{:.4}", t.slo_met_rate),
+                    format!("{:.6}", t.cost.get(Category::Repack)),
+                    format!("{:.6}", t.cost.total()),
+                    format!("{:.4}", t.mean_revocations),
+                    format!("{:.4}", t.mean_sessions),
+                    format!("{:.4}", t.completion_rate),
+                    ""
+                ]);
+            }
+            println!(
+                "{:<14} {:>9.2} {:>8} {:>8.2} {:>10} {:>10.4} {:>6.2} {:>9.2} {:>6.2}   \
+                 (fleet; revs/sessions are per-instance, {:.1} re-packs/run)\n",
+                "TOTAL",
+                row.agg.mean_makespan_h,
+                "-",
+                row.agg.slo_met_rate,
+                "-",
+                row.agg.mean_cost_usd,
+                row.agg.mean_revocations,
+                row.agg.mean_bins,
+                row.agg.completion_rate,
+                row.agg.mean_repacks
+            );
+            // fleet-level quantities only where their units match the
+            // column; per-instance revs/bins and the makespan get their
+            // own cells, up_h/slo/repack stay per-tier-only
+            rows.push(siwoft::csv_row![
+                p,
+                f,
+                r,
+                "TOTAL",
+                "",
+                "",
+                format!("{:.4}", row.agg.slo_met_rate),
+                "",
+                format!("{:.6}", row.agg.mean_cost_usd),
+                format!("{:.4}", row.agg.mean_revocations),
+                format!("{:.4}", row.agg.mean_bins),
+                format!("{:.4}", row.agg.completion_rate),
+                format!("{:.6}", row.agg.mean_makespan_h)
+            ]);
+        }
+    }
+    let path = emit(a.str("out"), "service", &rows, a.str("format"))?;
     println!("wrote {path}");
     Ok(())
 }
@@ -797,6 +992,7 @@ fn run_config(raw: &[String]) -> Result<(), String> {
         "fig" | "fig1" => fig1(&args),
         "simulate" => simulate(&args),
         "dag" => dag_cmd(&args),
+        "service" => service_cmd(&args),
         "ablation" => run_ablation(&args),
         "sensitivity" => sensitivity(&args),
         "tables" => tables(&args),
@@ -814,12 +1010,13 @@ fn serve(raw: &[String]) -> Result<(), String> {
         .opt("months", "3", "trace months")
         .opt("seed", "2020", "world seed")
         .opt("artifacts", "artifacts", "AOT artifacts dir")
+        .opt("max-conns", "256", "live-connection cap (excess conns rejected at accept)")
         .workers_opt();
     let a = spec.parse(raw)?;
     let world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
     let engine = AnalyticsEngine::auto(a.str("artifacts"));
     let coordinator = Coordinator::new(world, engine, a.workers()?);
-    let server = Server::new(coordinator);
+    let server = Server::new(coordinator).max_conns(a.usize("max-conns")?);
     server
         .serve(a.str("addr"), |addr| {
             println!("listening on {addr} — JSON lines: submit/status/shutdown");

@@ -194,17 +194,11 @@ pub fn to_trace(catalog: &Catalog, samples: &[Sample]) -> Result<(PriceTrace, us
     let hours = (hi - lo + 1) as usize;
     let m = catalog.len();
 
-    // market key -> id
-    let key = |ty: &str, region_az: &str| format!("{ty}|{region_az}");
-    let mut ids: BTreeMap<String, usize> = BTreeMap::new();
-    for spec in &catalog.markets {
-        ids.insert(key(spec.instance.name, &format!("{}{}", spec.region, spec.az)), spec.id);
-    }
-
+    let ids = market_ids(catalog);
     // per-market sparse samples, sorted by hour
     let mut per_market: Vec<Vec<(i64, f32)>> = vec![Vec::new(); m];
     for s in samples {
-        if let Some(&id) = ids.get(&key(&s.instance_type, &s.zone)) {
+        if let Some(&id) = ids.get(&sample_key(s)) {
             per_market[id].push((s.epoch_hour, s.price));
         }
     }
@@ -234,6 +228,90 @@ pub fn to_trace(catalog: &Catalog, samples: &[Sample]) -> Result<(PriceTrace, us
         }
     }
     Ok((trace, covered))
+}
+
+/// Per-market audit row for an imported history capture: how much of
+/// the market the samples actually cover.  Stitched multi-page imports
+/// are only trustworthy when every market's record count, time span and
+/// largest inter-sample gap look sane — `siwoft analyze --history …
+/// --coverage` prints exactly this table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MarketCoverage {
+    /// catalog market id
+    pub market: usize,
+    /// usable records mapped to this market
+    pub records: usize,
+    /// first observation (hours since the unix epoch)
+    pub first_hour: i64,
+    /// last observation (hours since the unix epoch)
+    pub last_hour: i64,
+    /// largest gap between consecutive observations (hours; 0 with
+    /// fewer than two records) — LOCF freewheels across this span
+    pub largest_gap_h: i64,
+}
+
+/// The `(instance type, zone)` key both the gridder and the coverage
+/// audit map samples through — one implementation so they can never
+/// attribute the same sample to different markets.
+fn market_ids(catalog: &Catalog) -> BTreeMap<String, usize> {
+    catalog
+        .markets
+        .iter()
+        .map(|spec| (format!("{}|{}{}", spec.instance.name, spec.region, spec.az), spec.id))
+        .collect()
+}
+
+fn sample_key(s: &Sample) -> String {
+    format!("{}|{}", s.instance_type, s.zone)
+}
+
+/// Audit an imported sample stream against `catalog`: one row per
+/// market that has data, in catalog-id order.  Markets without samples
+/// are absent (the grid backfills them flat at on-demand; the caller
+/// reports them as uncovered).
+pub fn coverage(catalog: &Catalog, samples: &[Sample]) -> Vec<MarketCoverage> {
+    let ids = market_ids(catalog);
+    let mut hours: BTreeMap<usize, Vec<i64>> = BTreeMap::new();
+    for s in samples {
+        if let Some(&id) = ids.get(&sample_key(s)) {
+            hours.entry(id).or_default().push(s.epoch_hour);
+        }
+    }
+    hours
+        .into_iter()
+        .map(|(market, mut hs)| {
+            hs.sort_unstable();
+            let largest_gap_h =
+                hs.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
+            MarketCoverage {
+                market,
+                records: hs.len(),
+                first_hour: hs[0],
+                last_hour: *hs.last().unwrap(),
+                largest_gap_h,
+            }
+        })
+        .collect()
+}
+
+/// Format hours since the unix epoch back into the capture's timestamp
+/// spelling (`YYYY-MM-DDTHH:00Z`) — the inverse of
+/// [`parse_timestamp_hours`], for coverage reports.
+pub fn format_epoch_hours(epoch_hour: i64) -> String {
+    let days = epoch_hour.div_euclid(24);
+    let hour = epoch_hour.rem_euclid(24);
+    // Howard Hinnant's civil-from-days
+    let z = days + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let year = if m <= 2 { y + 1 } else { y };
+    format!("{year:04}-{m:02}-{d:02}T{hour:02}:00Z")
 }
 
 /// Convenience: parse + grid in one call.
@@ -398,6 +476,42 @@ mod tests {
         assert_eq!(parse_history_pages(&[p2]).unwrap().len(), 4);
         // no pages at all
         assert!(matches!(parse_history_pages::<String>(&[]), Err(ImportError::Empty)));
+    }
+
+    #[test]
+    fn coverage_reports_span_counts_and_gaps() {
+        let catalog = Catalog::full();
+        let samples = parse_history(&history_json()).unwrap();
+        let cov = coverage(&catalog, &samples);
+        // two known markets have data; the unknown one is dropped
+        assert_eq!(cov.len(), 2);
+        let a = catalog
+            .markets
+            .iter()
+            .find(|s| s.instance.name == "r5.large" && s.region == "us-east-1" && s.az == 'a')
+            .unwrap()
+            .id;
+        let row = cov.iter().find(|c| c.market == a).unwrap();
+        assert_eq!(row.records, 3);
+        // observations at T00, T05, T09 → span 0..9, largest gap 5→9
+        assert_eq!(row.last_hour - row.first_hour, 9);
+        assert_eq!(row.largest_gap_h, 5);
+        let b = cov.iter().find(|c| c.market != a).unwrap();
+        assert_eq!(b.records, 1);
+        assert_eq!(b.largest_gap_h, 0, "single-record market has no gap");
+        // ids come out sorted
+        assert!(cov.windows(2).all(|w| w[0].market < w[1].market));
+    }
+
+    #[test]
+    fn epoch_hour_formatting_round_trips() {
+        for ts in ["1970-01-01T00:00Z", "2020-03-01T14:00Z", "1999-12-31T23:00Z"] {
+            let h = parse_timestamp_hours(ts).unwrap();
+            assert_eq!(format_epoch_hours(h), ts, "{ts}");
+            assert_eq!(parse_timestamp_hours(&format_epoch_hours(h)).unwrap(), h);
+        }
+        assert_eq!(format_epoch_hours(0), "1970-01-01T00:00Z");
+        assert_eq!(format_epoch_hours(27), "1970-01-02T03:00Z");
     }
 
     #[test]

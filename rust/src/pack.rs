@@ -1,0 +1,195 @@
+//! Bin packing shared by the workload subsystems: first-fit-decreasing
+//! packing of runnable items (DAG stages, service replicas) onto
+//! instances by memory footprint.
+//!
+//! The packer answers "which ready items share an instance?"; market
+//! selection for each packed instance stays with the policy layer.  The
+//! per-instance capacity comes from the catalog (the largest instance
+//! type) unless the workload spec pins a smaller `capacity_gb`.
+//!
+//! FFD is deterministic: items sort by footprint descending (ties by
+//! item index ascending), and each lands in the first open bin with
+//! room.  Classic result: FFD uses at most `11/9·OPT + 6/9` bins.
+//!
+//! [`Packer::pack_grouped`] adds the anti-affinity constraint the
+//! service subsystem's packed-bin replication needs: items carrying the
+//! same group key (the k copies of one replicated service replica)
+//! never share a bin, so a single instance revocation can never take
+//! out every copy at once (DESIGN.md §10).
+//!
+//! Extracted from `dag::packer` (which keeps a `pub use` re-export) so
+//! `dag` and `service` share one implementation.
+
+use crate::market::Catalog;
+
+/// One packed instance-worth of items.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bin {
+    /// item indices, in placement order
+    pub stages: Vec<usize>,
+    /// memory claimed by the packed items (GB)
+    pub used_gb: f64,
+}
+
+/// First-fit-decreasing packer with a fixed per-instance capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct Packer {
+    capacity_gb: f64,
+}
+
+/// Group key that never collides with a real one: plain [`Packer::pack`]
+/// items get unique keys so the grouped core applies no constraint.
+const NO_GROUP: u64 = u64::MAX;
+
+impl Packer {
+    pub fn new(capacity_gb: f64) -> Packer {
+        assert!(capacity_gb > 0.0, "packer capacity must be positive");
+        Packer { capacity_gb }
+    }
+
+    /// Capacity of the largest instance type in the catalog.
+    pub fn from_catalog(catalog: &Catalog) -> Packer {
+        let cap = catalog
+            .markets
+            .iter()
+            .map(|m| m.instance.mem_gb)
+            .fold(0.0f64, f64::max);
+        Packer::new(cap)
+    }
+
+    pub fn capacity_gb(&self) -> f64 {
+        self.capacity_gb
+    }
+
+    /// Pack `(item index, mem_gb)` items into bins, first-fit over the
+    /// footprint-descending order.  Panics if any single item exceeds
+    /// the capacity (specs are validated against this upstream).
+    pub fn pack(&self, items: &[(usize, f64)]) -> Vec<Bin> {
+        let tagged: Vec<(usize, f64, u64)> =
+            items.iter().map(|&(idx, mem)| (idx, mem, NO_GROUP)).collect();
+        self.pack_grouped(&tagged)
+    }
+
+    /// Like [`Packer::pack`], but items share a third element — a group
+    /// key — and two items with the same key (other than the sentinel
+    /// used by `pack`) are never placed in the same bin.  The k copies
+    /// of a replicated service replica carry their replica id here, so
+    /// replication survives any single-instance revocation.
+    ///
+    /// Still FFD: footprint descending, ties by item index; each item
+    /// lands in the first open bin with room that holds no member of
+    /// its group, else opens a new bin.
+    pub fn pack_grouped(&self, items: &[(usize, f64, u64)]) -> Vec<Bin> {
+        let mut sorted: Vec<(usize, f64, u64)> = items.to_vec();
+        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let mut bins: Vec<Bin> = Vec::new();
+        // groups alongside `bins`, index-aligned (not part of the
+        // public Bin type)
+        let mut groups: Vec<Vec<u64>> = Vec::new();
+        for &(idx, mem, group) in &sorted {
+            assert!(
+                mem <= self.capacity_gb + 1e-9,
+                "item {idx} ({mem} GB) exceeds instance capacity {} GB",
+                self.capacity_gb
+            );
+            let slot = bins.iter().enumerate().position(|(bi, b)| {
+                b.used_gb + mem <= self.capacity_gb + 1e-9
+                    && (group == NO_GROUP || !groups[bi].contains(&group))
+            });
+            match slot {
+                Some(bi) => {
+                    bins[bi].stages.push(idx);
+                    bins[bi].used_gb += mem;
+                    groups[bi].push(group);
+                }
+                None => {
+                    bins.push(Bin { stages: vec![idx], used_gb: mem });
+                    groups.push(vec![group]);
+                }
+            }
+        }
+        bins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffd_packs_tightly() {
+        let p = Packer::new(32.0);
+        // 16+16, 8+8+8 → two bins under FFD
+        let bins = p.pack(&[(0, 8.0), (1, 16.0), (2, 8.0), (3, 16.0), (4, 8.0)]);
+        assert_eq!(bins.len(), 2);
+        assert!(bins.iter().all(|b| b.used_gb <= 32.0));
+        let total: usize = bins.iter().map(|b| b.stages.len()).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn deterministic_on_ties() {
+        let p = Packer::new(16.0);
+        let a = p.pack(&[(0, 8.0), (1, 8.0), (2, 8.0)]);
+        let b = p.pack(&[(2, 8.0), (0, 8.0), (1, 8.0)]);
+        assert_eq!(a, b);
+        assert_eq!(a[0].stages, vec![0, 1]);
+        assert_eq!(a[1].stages, vec![2]);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let p = Packer::new(24.0);
+        let items: Vec<(usize, f64)> =
+            (0..12).map(|i| (i, [4.0, 8.0, 16.0, 12.0][i % 4])).collect();
+        for b in p.pack(&items) {
+            assert!(b.used_gb <= 24.0 + 1e-9);
+            let sum: f64 = b.stages.iter().map(|&i| [4.0, 8.0, 16.0, 12.0][i % 4]).sum();
+            assert!((sum - b.used_gb).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds instance capacity")]
+    fn oversized_item_panics() {
+        Packer::new(8.0).pack(&[(0, 9.0)]);
+    }
+
+    #[test]
+    fn from_catalog_uses_largest_type() {
+        let p = Packer::from_catalog(&Catalog::full());
+        assert_eq!(p.capacity_gb(), 192.0);
+    }
+
+    #[test]
+    fn grouped_never_copacks_a_group() {
+        let p = Packer::new(64.0);
+        // three replicas × 2 copies, all would fit in one 64 GB bin by
+        // footprint — the group constraint forces copies apart
+        let items: Vec<(usize, f64, u64)> =
+            (0..6).map(|i| (i, 8.0, (i / 2) as u64)).collect();
+        let bins = p.pack_grouped(&items);
+        assert!(bins.len() >= 2);
+        for b in &bins {
+            for (x, &i) in b.stages.iter().enumerate() {
+                for &j in &b.stages[x + 1..] {
+                    assert_ne!(i / 2, j / 2, "copies of replica {} co-packed", i / 2);
+                }
+            }
+        }
+        let total: usize = bins.iter().map(|b| b.stages.len()).sum();
+        assert_eq!(total, 6, "anti-affinity must not drop items");
+    }
+
+    #[test]
+    fn grouped_with_unique_groups_matches_plain_ffd() {
+        let p = Packer::new(32.0);
+        let plain = p.pack(&[(0, 8.0), (1, 16.0), (2, 8.0), (3, 16.0), (4, 8.0)]);
+        let tagged: Vec<(usize, f64, u64)> =
+            [(0, 8.0), (1, 16.0), (2, 8.0), (3, 16.0), (4, 8.0)]
+                .iter()
+                .map(|&(i, m)| (i, m, 100 + i as u64))
+                .collect();
+        assert_eq!(plain, p.pack_grouped(&tagged));
+    }
+}

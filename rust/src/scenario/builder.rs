@@ -139,6 +139,15 @@ impl<'w> Scenario<'w> {
         crate::dag::DagScenario::from_scenario(self, spec)
     }
 
+    /// Attach a service fleet: the scenario's policy/FT/rule/start/seed
+    /// settings drive a [`FleetRunner`](crate::service::FleetRunner)
+    /// over `spec` in a horizon-bounded steady-state loop.  Panics if
+    /// `spec` fails
+    /// [`ServiceSpec::validate`](crate::service::ServiceSpec::validate).
+    pub fn service(self, spec: crate::service::ServiceSpec) -> crate::service::ServiceScenario<'w> {
+        crate::service::ServiceScenario::from_scenario(self, spec)
+    }
+
     /// Instantiate the policy for one run.  `Predictive` shares one
     /// survival-curve fit across every seed of this point (the fit
     /// ignores the seed); `get_or_init` also makes concurrent pool

@@ -43,4 +43,4 @@ pub mod sweep;
 
 pub use builder::Scenario;
 pub use registry::{FtKind, PolicyKind};
-pub use sweep::{DagSweepRow, Sweep, SweepPoint, SweepRow};
+pub use sweep::{DagSweepRow, ServiceSweepRow, Sweep, SweepPoint, SweepRow};

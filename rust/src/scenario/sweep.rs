@@ -13,6 +13,7 @@ use super::registry::{FtKind, PolicyKind};
 use crate::coordinator::Pool;
 use crate::dag::{DagAggregate, DagResult, DagScenario, DagSpec};
 use crate::job::Job;
+use crate::service::{ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec};
 use crate::sim::{AggregateResult, JobResult, RevocationRule, World};
 
 /// One point of the cartesian product.
@@ -43,6 +44,7 @@ pub struct Sweep<'w> {
     world: &'w World,
     jobs: Vec<Job>,
     dags: Vec<DagSpec>,
+    services: Vec<ServiceSpec>,
     policies: Vec<PolicyKind>,
     fts: Vec<FtKind>,
     rules: Vec<RevocationRule>,
@@ -59,6 +61,7 @@ impl<'w> Sweep<'w> {
             world,
             jobs: Vec::new(),
             dags: Vec::new(),
+            services: Vec::new(),
             policies: vec![PolicyKind::default()],
             fts: vec![FtKind::default()],
             rules: vec![RevocationRule::Trace],
@@ -91,6 +94,19 @@ impl<'w> Sweep<'w> {
     /// Replace the DAG axis.
     pub fn dags(mut self, specs: impl IntoIterator<Item = DagSpec>) -> Self {
         self.dags = specs.into_iter().collect();
+        self
+    }
+
+    /// Add one service fleet to the service axis (consumed by
+    /// [`Sweep::run_services`]).
+    pub fn service(mut self, spec: ServiceSpec) -> Self {
+        self.services.push(spec);
+        self
+    }
+
+    /// Replace the service axis.
+    pub fn services(mut self, specs: impl IntoIterator<Item = ServiceSpec>) -> Self {
+        self.services = specs.into_iter().collect();
         self
     }
 
@@ -279,6 +295,77 @@ impl<'w> Sweep<'w> {
             })
             .collect()
     }
+
+    /// Execute the service axis: (services × policies × fts × rules) ×
+    /// seeds, fanned out over the pool at per-run steal granularity via
+    /// `map_chunked` (a revocation-heavy fleet run costs many times a
+    /// clean one).  Rows follow the same fixed enumeration as
+    /// [`Sweep::run`] (services outermost, rules innermost), so results
+    /// are identical for any `workers` setting.
+    pub fn run_services(&self) -> Vec<ServiceSweepRow> {
+        if self.services.is_empty() {
+            return Vec::new();
+        }
+        let seeds = self.seeds;
+        let shared_curves = self
+            .policies
+            .iter()
+            .any(|p| matches!(p, PolicyKind::Predictive(_)))
+            .then(|| PolicyKind::train_survival_curves(self.world, self.start_t));
+        let mut labels = Vec::new();
+        let mut scenarios: Vec<ServiceScenario<'_>> = Vec::new();
+        for spec in &self.services {
+            for &policy in &self.policies {
+                for &ft in &self.fts {
+                    for &rule in &self.rules {
+                        let scen = Scenario::on(self.world)
+                            .policy(policy)
+                            .ft(ft)
+                            .rule(rule)
+                            .start_t(self.start_t)
+                            .max_sessions(self.max_sessions);
+                        let scen = match (&policy, &shared_curves) {
+                            (PolicyKind::Predictive(_), Some(curves)) => {
+                                scen.with_curves(curves.clone())
+                            }
+                            _ => scen,
+                        };
+                        labels.push((spec.name.clone(), policy, ft, rule));
+                        scenarios.push(scen.service(spec.clone()));
+                    }
+                }
+            }
+        }
+        let items: Vec<(usize, u64)> = (0..scenarios.len())
+            .flat_map(|p| (0..seeds).map(move |s| (p, s)))
+            .collect();
+        let pool = Pool::new(self.workers);
+        let runs: Vec<ServiceResult> =
+            pool.map_chunked(items, 1, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
+        runs.chunks(seeds as usize)
+            .zip(labels)
+            .map(|(chunk, (service, policy, ft, rule))| ServiceSweepRow {
+                service,
+                policy,
+                ft,
+                rule,
+                agg: ServiceAggregate::from_runs(chunk),
+                runs: chunk.to_vec(),
+            })
+            .collect()
+    }
+}
+
+/// One executed point of the service axis: the aggregate plus the
+/// per-seed runs behind it (seed `i` of the row is `base_seed + i`).
+#[derive(Clone, Debug)]
+pub struct ServiceSweepRow {
+    pub service: String,
+    pub policy: PolicyKind,
+    pub ft: FtKind,
+    pub rule: RevocationRule,
+    pub agg: ServiceAggregate,
+    pub runs: Vec<ServiceResult>,
 }
 
 /// One executed point of the DAG axis: the aggregate plus the per-seed
@@ -383,6 +470,42 @@ mod tests {
         assert!(rows[1].agg.mean_revocations >= 1.0 - 1e-9);
         // a DAG-less sweep runs nothing
         assert!(Sweep::on(&w).run_dags().is_empty());
+    }
+
+    #[test]
+    fn service_axis_enumerates_and_aggregates() {
+        use crate::service::{ServiceSpec, TierSpec};
+        let (w, start) = world();
+        let spec = ServiceSpec::new("mini")
+            .horizon(12.0)
+            .capacity(64.0)
+            .tier(TierSpec::open("web", 2, 8.0).slack(0.25));
+        let rows = Sweep::on(&w)
+            .service(spec)
+            .policies([PolicyKind::default(), PolicyKind::OnDemand])
+            .fts([FtKind::None])
+            .rules([RevocationRule::Trace, RevocationRule::ForcedCount { total: 1 }])
+            .seeds(2)
+            .start_t(start)
+            .workers(1)
+            .run_services();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].service, "mini");
+        assert_eq!(rows[0].rule, RevocationRule::Trace);
+        assert_eq!(rows[1].rule, RevocationRule::ForcedCount { total: 1 });
+        assert_eq!(rows[2].policy, PolicyKind::OnDemand);
+        for row in &rows {
+            assert_eq!(row.runs.len(), 2);
+            assert_eq!(row.agg.n, 2);
+            assert_eq!(row.agg.tiers.len(), 1);
+            assert!(row.agg.mean_cost_usd > 0.0);
+        }
+        // the forced-count spot rows demonstrably revoked; on-demand
+        // bins are never revocable
+        assert!(rows[1].agg.mean_revocations >= 1.0 - 1e-9);
+        assert_eq!(rows[3].agg.mean_revocations, 0.0);
+        // a service-less sweep runs nothing
+        assert!(Sweep::on(&w).run_services().is_empty());
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Fleet bookkeeping for service runs: per-tier results, uptime
+//! interval algebra, the deadline-slack SLO integral, and the
+//! seed-aggregation types the sweep layer consumes.
+//!
+//! The SLO model (DESIGN.md §10): a tier is *under target* at time `t`
+//! when fewer logical replicas are up than `target(t)` demands (the
+//! base target, raised inside burst windows).  A replica is up while it
+//! is placed on an active instance and past its session prologue
+//! (startup / recovery / re-pack transfer); with packed-bin
+//! replication, a logical replica is up while *any* of its copies is.
+//! The SLO-violation time is the integral of under-target wall-clock
+//! over the tier's observation window, and the tier meets its SLO when
+//! that integral stays within `slack × window`.
+
+use crate::sim::accounting::{Breakdown, Category, Ledger};
+
+use super::spec::TierSpec;
+
+// ---------------------------------------------------------------------
+// interval algebra
+
+/// Merge possibly-overlapping `(start, end)` intervals into a sorted
+/// disjoint union (used to collapse the k copies of a replicated
+/// replica into one logical uptime timeline).
+pub(crate) fn union_intervals(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.retain(|&(a, b)| b > a);
+    iv.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap().then(x.1.partial_cmp(&y.1).unwrap()));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some((_, e)) if a <= *e + 1e-12 => *e = e.max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Piecewise-constant target of `tier` over `[start, end)`: a sorted
+/// list of `(time, target)` steps starting at `start`.  Burst windows
+/// open at `start + k·every_h` for `k = 1, 2, …` (the first burst comes
+/// one full period in, so a fresh fleet boots against the base target).
+pub(crate) fn target_steps(tier: &TierSpec, start: f64, end: f64) -> Vec<(f64, u32)> {
+    let mut steps = vec![(start, tier.replicas)];
+    if let Some(b) = tier.burst {
+        let mut k = 1u32;
+        loop {
+            let w0 = start + k as f64 * b.every_h;
+            if w0 >= end {
+                break;
+            }
+            steps.push((w0, b.replicas));
+            let w1 = w0 + b.len_h;
+            if w1 < end {
+                steps.push((w1, tier.replicas));
+            }
+            k += 1;
+        }
+    }
+    steps
+}
+
+/// Integral of under-target wall-clock over `[w0, w1)`: per-replica
+/// uptime unions vs. the target steps, by midpoint sampling between
+/// consecutive boundaries (robust to boundary coincidences; the
+/// interval counts are small — sessions × replicas).
+pub(crate) fn violation_time(
+    replica_ups: &[Vec<(f64, f64)>],
+    steps: &[(f64, u32)],
+    w0: f64,
+    w1: f64,
+) -> f64 {
+    if w1 <= w0 {
+        return 0.0;
+    }
+    let mut bounds: Vec<f64> = vec![w0, w1];
+    for ups in replica_ups {
+        for &(a, b) in ups {
+            if b > w0 && a < w1 {
+                bounds.push(a.max(w0));
+                bounds.push(b.min(w1));
+            }
+        }
+    }
+    for &(t, _) in steps {
+        if t > w0 && t < w1 {
+            bounds.push(t);
+        }
+    }
+    bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    let mut viol = 0.0f64;
+    for w in bounds.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let m = 0.5 * (a + b);
+        let up = replica_ups
+            .iter()
+            .filter(|ups| ups.iter().any(|&(s, e)| s <= m && m < e))
+            .count() as u32;
+        let target = steps
+            .iter()
+            .rev()
+            .find(|&&(t, _)| t <= m)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        if up < target {
+            viol += b - a;
+        }
+    }
+    viol
+}
+
+// ---------------------------------------------------------------------
+// results
+
+/// Outcome of one tier across a whole service run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierResult {
+    pub name: String,
+    /// merged replica ledgers; the time breakdown carries the tier's
+    /// SLO-violation integral as the time-only [`Category::Slo`] row
+    pub ledger: Ledger,
+    /// wall-clock the tier spent under its target replica count
+    pub slo_violation_h: f64,
+    /// `slo_violation_h / window_h` — compared against the spec slack
+    pub slo_frac: f64,
+    /// the deadline-slack SLO held: `slo_frac <= slack`
+    pub slo_met: bool,
+    /// base target replica count
+    pub target: u32,
+    /// replica-hours of uptime accumulated over the window
+    pub up_h: f64,
+    /// observation window (horizon, or completion for batch tiers)
+    pub window_h: f64,
+    pub revocations: u32,
+    pub sessions: u32,
+    /// re-pack moves of this tier's replicas (survivor migrations)
+    pub repacks: u32,
+    /// batch tiers: every replica finished its budget; open tiers: true
+    pub completed: bool,
+}
+
+/// Outcome of one service fleet run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceResult {
+    pub service: String,
+    pub policy: String,
+    pub ft: String,
+    pub tiers: Vec<TierResult>,
+    /// wall-clock hours from start to fleet shutdown (the horizon, or
+    /// earlier when every tier is batch and complete)
+    pub makespan_h: f64,
+    pub horizon_h: f64,
+    /// instance revocation events (each kills a whole bin)
+    pub revocations: u32,
+    /// instance sessions launched (packed bins)
+    pub bins: u32,
+    /// fleet re-pack events (revocations / burst boundaries that
+    /// triggered survivor consolidation)
+    pub repacks: u32,
+    pub completed: bool,
+    /// diagnostics pinned by `tests/properties.rs`
+    pub capacity_gb: f64,
+    pub peak_bin_used_gb: f64,
+    /// replicated copies that ended up co-packed (must stay 0 — the
+    /// grouped packer forbids it)
+    pub copack_conflicts: u32,
+}
+
+impl ServiceResult {
+    /// Total deployment cost across tiers ($).
+    pub fn cost_usd(&self) -> f64 {
+        self.tiers.iter().map(|t| t.ledger.cost_usd()).sum()
+    }
+
+    /// All tier ledgers merged (per-category totals).
+    pub fn ledger(&self) -> Ledger {
+        let mut out = Ledger::new();
+        for t in &self.tiers {
+            out.merge(&t.ledger);
+        }
+        out
+    }
+
+    pub fn tier(&self, name: &str) -> Option<&TierResult> {
+        self.tiers.iter().find(|t| t.name == name)
+    }
+
+    /// Every tier held its deadline-slack SLO.
+    pub fn slo_met(&self) -> bool {
+        self.tiers.iter().all(|t| t.slo_met)
+    }
+
+    /// Total re-pack transfer cost across tiers ($).
+    pub fn repack_cost_usd(&self) -> f64 {
+        self.tiers.iter().map(|t| t.ledger.cost.get(Category::Repack)).sum()
+    }
+}
+
+/// Per-tier means over a set of service runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TierAgg {
+    pub name: String,
+    pub time: Breakdown,
+    pub cost: Breakdown,
+    pub mean_slo_violation_h: f64,
+    pub mean_up_h: f64,
+    pub slo_met_rate: f64,
+    pub mean_revocations: f64,
+    pub mean_sessions: f64,
+    pub mean_repacks: f64,
+    pub completion_rate: f64,
+}
+
+/// Mean fleet outcome over seeds (one "bar" of a service sweep).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceAggregate {
+    pub n: usize,
+    pub mean_makespan_h: f64,
+    pub mean_cost_usd: f64,
+    pub mean_revocations: f64,
+    pub mean_bins: f64,
+    pub mean_repacks: f64,
+    /// fraction of runs where every tier held its SLO
+    pub slo_met_rate: f64,
+    pub completion_rate: f64,
+    pub tiers: Vec<TierAgg>,
+}
+
+impl ServiceAggregate {
+    pub fn from_runs(runs: &[ServiceResult]) -> ServiceAggregate {
+        if runs.is_empty() {
+            return ServiceAggregate::default();
+        }
+        let n = runs.len();
+        let nf = n as f64;
+        let n_tiers = runs[0].tiers.len();
+        let mut tiers = Vec::with_capacity(n_tiers);
+        for ti in 0..n_tiers {
+            let mut agg = TierAgg { name: runs[0].tiers[ti].name.clone(), ..Default::default() };
+            for r in runs {
+                let t = &r.tiers[ti];
+                agg.time.merge(&t.ledger.time);
+                agg.cost.merge(&t.ledger.cost);
+                agg.mean_slo_violation_h += t.slo_violation_h;
+                agg.mean_up_h += t.up_h;
+                agg.slo_met_rate += t.slo_met as usize as f64;
+                agg.mean_revocations += t.revocations as f64;
+                agg.mean_sessions += t.sessions as f64;
+                agg.mean_repacks += t.repacks as f64;
+                agg.completion_rate += t.completed as usize as f64;
+            }
+            agg.time = agg.time.scale(1.0 / nf);
+            agg.cost = agg.cost.scale(1.0 / nf);
+            agg.mean_slo_violation_h /= nf;
+            agg.mean_up_h /= nf;
+            agg.slo_met_rate /= nf;
+            agg.mean_revocations /= nf;
+            agg.mean_sessions /= nf;
+            agg.mean_repacks /= nf;
+            agg.completion_rate /= nf;
+            tiers.push(agg);
+        }
+        ServiceAggregate {
+            n,
+            mean_makespan_h: runs.iter().map(|r| r.makespan_h).sum::<f64>() / nf,
+            mean_cost_usd: runs.iter().map(|r| r.cost_usd()).sum::<f64>() / nf,
+            mean_revocations: runs.iter().map(|r| r.revocations as f64).sum::<f64>() / nf,
+            mean_bins: runs.iter().map(|r| r.bins as f64).sum::<f64>() / nf,
+            mean_repacks: runs.iter().map(|r| r.repacks as f64).sum::<f64>() / nf,
+            slo_met_rate: runs.iter().filter(|r| r.slo_met()).count() as f64 / nf,
+            completion_rate: runs.iter().filter(|r| r.completed).count() as f64 / nf,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::spec::TierSpec;
+
+    #[test]
+    fn union_merges_overlaps() {
+        let u = union_intervals(vec![(3.0, 4.0), (0.0, 1.0), (0.5, 2.0), (4.0, 5.0)]);
+        assert_eq!(u, vec![(0.0, 2.0), (3.0, 5.0)]);
+        assert!(union_intervals(vec![(1.0, 1.0)]).is_empty());
+        assert!(union_intervals(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn target_steps_open_periodic_windows() {
+        let t = TierSpec::open("t", 2, 4.0).burst(10.0, 2.0, 5);
+        let steps = target_steps(&t, 100.0, 125.0);
+        assert_eq!(steps, vec![
+            (100.0, 2),
+            (110.0, 5),
+            (112.0, 2),
+            (120.0, 5),
+            (122.0, 2),
+        ]);
+        // burstless tier: one flat step
+        let flat = TierSpec::open("f", 3, 4.0);
+        assert_eq!(target_steps(&flat, 0.0, 50.0), vec![(0.0, 3)]);
+    }
+
+    #[test]
+    fn violation_integral_counts_under_target_time() {
+        // two replicas, target 2 over [0, 10): replica 0 up [1, 10),
+        // replica 1 up [1, 4) and [6, 10) → under target on [0,1) and [4,6)
+        let ups = vec![vec![(1.0, 10.0)], vec![(1.0, 4.0), (6.0, 10.0)]];
+        let steps = vec![(0.0, 2u32)];
+        let v = violation_time(&ups, &steps, 0.0, 10.0);
+        assert!((v - 3.0).abs() < 1e-9, "violation {v}");
+        // dropping the target to 1 leaves only the boot hour
+        let v1 = violation_time(&ups, &[(0.0, 1)], 0.0, 10.0);
+        assert!((v1 - 1.0).abs() < 1e-9);
+        // a burst the fleet ignores is pure violation
+        let v2 = violation_time(&ups, &[(0.0, 2), (4.0, 3), (6.0, 2)], 0.0, 10.0);
+        assert!((v2 - 5.0).abs() < 1e-9, "violation {v2}");
+    }
+
+    #[test]
+    fn aggregate_over_empty_is_default() {
+        assert_eq!(ServiceAggregate::from_runs(&[]), ServiceAggregate::default());
+    }
+}

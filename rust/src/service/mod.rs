@@ -1,0 +1,32 @@
+//! Long-running interruptible service fleets — the open-ended workload
+//! class the ROADMAP left open after DAG batches: tiers that must keep
+//! a target replica count online across revocations, measured by a
+//! deadline-slack SLO instead of a completion time.
+//!
+//! Three pieces (DESIGN.md §10):
+//!
+//! * [`spec`]   — the [`ServiceSpec`]/[`TierSpec`] model: open-ended and
+//!   batch tiers with target replica counts, footprints, SLO slack and
+//!   periodic burst schedules, parsed from TOML
+//!   (`rust/configs/service_*.toml`) or built in code;
+//! * [`fleet`]  — uptime interval algebra, the SLO-violation integral,
+//!   and the per-tier result/aggregate types;
+//! * [`runner`] — [`FleetRunner`]: a horizon-bounded steady-state loop
+//!   over the `sim::Engine` event queue that FFD-packs replicas onto
+//!   bins (shared [`pack::Packer`](crate::pack::Packer)), *re-packs the
+//!   surviving fleet* after every revocation or burst boundary
+//!   ([`Category::Repack`](crate::sim::Category) transfer accounting),
+//!   and spreads replicated copies across bins so no single revocation
+//!   can take a replica out (packed-bin replication).
+//!
+//! Entry points: `Scenario::on(&world).….service(spec).run()` for one
+//! fleet, [`Sweep::run_services`](crate::scenario::Sweep::run_services)
+//! for grids, and `siwoft service --spec <toml>` on the CLI.
+
+pub mod fleet;
+pub mod runner;
+pub mod spec;
+
+pub use fleet::{ServiceAggregate, ServiceResult, TierAgg, TierResult};
+pub use runner::{FleetRunner, ServiceScenario};
+pub use spec::{BurstSpec, ServiceSpec, TierSpec};

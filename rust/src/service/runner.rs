@@ -1,0 +1,1664 @@
+//! The fleet runner: maintains a [`ServiceSpec`]'s tiers against the
+//! world by driving the [`sim::Engine`](crate::sim::Engine) event loop
+//! in a horizon-bounded steady-state loop — the first open-ended
+//! workload in the crate (DESIGN.md §10).
+//!
+//! Model:
+//!
+//! * Ready replicas (fresh launches, revocation victims, re-pack
+//!   migrants, burst scale-ups) are FFD-packed onto instances by the
+//!   shared [`Packer`](crate::pack::Packer); each packed instance
+//!   ("bin") gets its market from the policy — the bin is presented as
+//!   one job whose length is the longest nominal replica session and
+//!   whose footprint is the packed memory, so suitability/lifetime
+//!   rules apply unchanged.  With k-way replication the k copies of a
+//!   logical replica carry their replica id as a packing group, so the
+//!   grouped packer never co-locates them (packed-bin replication).
+//! * Open-ended tiers serve until the horizon: a replica session is a
+//!   prologue (startup / recovery / re-pack transfer) followed by one
+//!   serving span; "useful work" is uptime.  Batch tiers ride along
+//!   with the DAG-style work/checkpoint timeline and finish early.
+//! * A revocation kills every replica on the bin; each consults its FT
+//!   mechanism.  With `repack = true` (the default) every *surviving*
+//!   bin is also drained: its replicas pay a [`Category::Repack`]
+//!   state-transfer prologue and the whole fleet is re-packed onto a
+//!   fresh FFD packing — mid-session survivor re-packing.  Burst
+//!   boundaries (autoscaling) trigger the same consolidation.
+//! * The deadline-slack SLO integral per tier (time under target) is
+//!   assembled from per-copy uptime intervals (`service::fleet`) and
+//!   lands in the tier ledger as the time-only [`Category::Slo`] row.
+//!
+//! Determinism: one `Rng` stream per seed, `BTreeMap` bin storage and
+//! the engine's FIFO tie-break make runs a pure function of (world,
+//! spec, policy, ft, rule, seed) — `tests/properties.rs` pins
+//! worker-count independence for service sweeps on top of this.
+//!
+//! Equivalence anchor: the revocation-schedule rng uses stream
+//! `0x51307F7` — exactly the stream `sim::run::execute` derives for a
+//! job with id 0 — and session spans are replayed with the same
+//! absolute-time arithmetic, so a single-tier, single-replica batch
+//! service with re-packing disabled reproduces the corresponding
+//! single-job `Scenario` run cost bit-for-bit
+//! (`tests/service_equivalence.rs`).
+
+use std::collections::BTreeMap;
+
+use super::fleet::{
+    target_steps, union_intervals, violation_time, ServiceAggregate, ServiceResult, TierResult,
+};
+use super::spec::ServiceSpec;
+use crate::coordinator::Pool;
+use crate::ft::{FtMechanism, Recovery};
+use crate::job::{ContainerModel, Job, JobProgress};
+use crate::market::session_cost;
+use crate::pack::Packer;
+use crate::policy::{Ctx, Policy};
+use crate::scenario::{FtKind, Scenario};
+use crate::sim::accounting::{Category, Ledger};
+use crate::sim::engine::{Engine, Event};
+use crate::sim::{RevocationRule, RunConfig, World};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// scenario bridge
+
+/// A [`Scenario`] with a service fleet attached: the builder's policy /
+/// FT / rule / start / seed settings drive [`FleetRunner`] over the
+/// spec.
+#[derive(Clone, Debug)]
+pub struct ServiceScenario<'w> {
+    scen: Scenario<'w>,
+    spec: ServiceSpec,
+}
+
+impl<'w> ServiceScenario<'w> {
+    /// Build from an already-configured scenario.  Panics on an invalid
+    /// spec (load TOML specs through [`ServiceSpec::load`] to get a
+    /// `Result` instead).
+    pub fn from_scenario(scen: Scenario<'w>, spec: ServiceSpec) -> ServiceScenario<'w> {
+        if let Err(e) = spec.validate() {
+            panic!("invalid service spec: {e}");
+        }
+        ServiceScenario { scen, spec }
+    }
+
+    pub fn spec(&self) -> &ServiceSpec {
+        &self.spec
+    }
+
+    /// Run once with the scenario's configured seed.
+    pub fn run(&self) -> ServiceResult {
+        self.run_seeded(self.scen.seed_value())
+    }
+
+    /// Run once with an explicit seed.
+    pub fn run_seeded(&self, seed: u64) -> ServiceResult {
+        let policy = self.scen.build_policy();
+        let mut runner = FleetRunner::with_policy(
+            self.scen.world(),
+            &self.spec,
+            policy,
+            self.scen.ft_kind(),
+            self.scen.run_config(),
+        );
+        runner.run(seed)
+    }
+
+    /// `n_seeds` replicates (seeds `seed .. seed + n`), serially.
+    pub fn replicate(&self, n_seeds: u64) -> ServiceAggregate {
+        let base = self.scen.seed_value();
+        let runs: Vec<ServiceResult> = (0..n_seeds).map(|i| self.run_seeded(base + i)).collect();
+        ServiceAggregate::from_runs(&runs)
+    }
+
+    /// Like [`ServiceScenario::replicate`] but fanned out over `pool`
+    /// at per-seed steal granularity; identical for any worker count.
+    pub fn replicate_on(&self, pool: &Pool, n_seeds: u64) -> ServiceAggregate {
+        let base = self.scen.seed_value();
+        let runs: Vec<ServiceResult> =
+            pool.map_chunked((0..n_seeds).collect(), 1, |_, i| self.run_seeded(base + i));
+        ServiceAggregate::from_runs(&runs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// runner
+
+/// Drives one service fleet execution.  Prefer the
+/// [`Scenario::service`] / [`Sweep`](crate::scenario::Sweep) entry
+/// points; this type is the engine room they share.
+pub struct FleetRunner<'a> {
+    world: &'a World,
+    spec: &'a ServiceSpec,
+    policy: Box<dyn Policy>,
+    ft: FtKind,
+    cfg: RunConfig,
+}
+
+impl<'a> FleetRunner<'a> {
+    pub fn with_policy(
+        world: &'a World,
+        spec: &'a ServiceSpec,
+        policy: Box<dyn Policy>,
+        ft: FtKind,
+        cfg: RunConfig,
+    ) -> FleetRunner<'a> {
+        FleetRunner { world, spec, policy, ft, cfg }
+    }
+
+    /// Execute the fleet once; a pure function of the constructor
+    /// inputs plus `seed`.
+    pub fn run(&mut self, seed: u64) -> ServiceResult {
+        self.spec.validate().unwrap_or_else(|e| panic!("invalid service spec: {e}"));
+        let capacity = self
+            .spec
+            .effective_capacity(&self.world.catalog)
+            .unwrap_or_else(|e| panic!("{e}"));
+        let t0 = self.cfg.start_t;
+        let horizon_end = t0 + self.spec.horizon_h;
+
+        // replication degree (packed-bin mode): k copies per logical
+        // replica, spread across bins by the grouped packer
+        let probe = Job::new(0, 1.0, 1.0);
+        let degree = self.ft.build(&probe).degree().max(1);
+
+        // logical replicas for the base targets, in tier order
+        let mut replicas: Vec<Replica> = Vec::new();
+        for (ti, tier) in self.spec.tiers.iter().enumerate() {
+            for ri in 0..tier.replicas {
+                replicas.push(Replica::new(self.spec, ti, ri, replicas.len() as u64, &self.ft));
+            }
+        }
+        let mut copies: Vec<ReplicaCopy> = Vec::new();
+        for (li, r) in replicas.iter().enumerate() {
+            for ci in 0..degree {
+                copies.push(ReplicaCopy::new(li, ci, r.tier));
+            }
+        }
+
+        // The schedule rng uses the same stream `sim::run::execute`
+        // derives for job id 0, so the degenerate single-replica fleet
+        // consumes revocation draws in lockstep with the single-job
+        // engine (the bit-for-bit equivalence anchor).
+        let mut rng = Rng::with_stream(seed, 0x51307F7);
+        let schedule = match self.cfg.rule {
+            RevocationRule::Trace => FleetSchedule::Trace,
+            RevocationRule::ForcedRate { per_day } => {
+                let per_h = (per_day / 24.0).max(1e-9);
+                FleetSchedule::Rate { per_h, next_abs: t0 + rng.exp(per_h) }
+            }
+            RevocationRule::ForcedCount { total } => {
+                // sorted-uniform fractions of the fleet's expected work,
+                // capped below 0.98 (the single-job rule, fleet-wide)
+                let mut fr: Vec<f64> = (0..total).map(|_| rng.f64() * 0.98).collect();
+                fr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let total_work = self.spec.total_work_h();
+                FleetSchedule::Count {
+                    thresholds: fr.iter().map(|f| f * total_work).collect(),
+                    idx: 0,
+                }
+            }
+        };
+
+        self.policy.reset();
+        let policy_name = self.policy.name().to_string();
+        let mut sim = Sim {
+            world: self.world,
+            spec: self.spec,
+            policy: self.policy.as_mut(),
+            cfg: &self.cfg,
+            packer: Packer::new(capacity),
+            rng,
+            schedule,
+            ft_kind: self.ft,
+            degree,
+            t_start: t0,
+            horizon_end,
+            replicas,
+            copies,
+            active: BTreeMap::new(),
+            next_bin: 0,
+            bins_launched: 0,
+            bin_revocations: 0,
+            fleet_repacks: 0,
+            aborted: false,
+            ended: false,
+            revoked_markets: Vec::new(),
+            w_closed: 0.0,
+            count_gen: 0,
+            rate_armed: false,
+            rate_gen: 0,
+            burst_events: Vec::new(),
+            peak_bin_used_gb: 0.0,
+            copack_conflicts: 0,
+        };
+
+        let mut engine = Engine::new();
+        // horizon close for the steady-state loop (batch-only fleets
+        // may drain the queue earlier; the handler then no-ops)
+        engine.schedule_at(horizon_end, Event::Timer { tag: tag(K_HORIZON, 0, 0) });
+        // burst boundaries, precomputed from the periodic windows
+        for (ti, tier) in self.spec.tiers.iter().enumerate() {
+            if tier.burst.is_none() {
+                continue;
+            }
+            for &(bt, target) in target_steps(tier, t0, horizon_end).iter().skip(1) {
+                let id = sim.burst_events.len() as u64;
+                sim.burst_events.push((bt, ti, target));
+                engine.schedule_at(bt, Event::Timer { tag: tag(K_BURST, 0, id) });
+            }
+        }
+        sim.launch_ready(&mut engine, t0);
+        sim.arm_rate(&mut engine);
+        sim.resched_count(&mut engine, t0);
+
+        while let Some((t, ev)) = engine.next() {
+            if let Event::Timer { tag } = ev {
+                let (kind, gen, id) = untag(tag);
+                match kind {
+                    K_COPY_DONE => sim.on_copy_done(&mut engine, t, gen, id as usize),
+                    K_BIN_REVOKE => sim.on_trace_revoke(&mut engine, t, id),
+                    K_RATE => sim.on_rate(&mut engine, t, gen),
+                    K_COUNT => sim.on_count(&mut engine, t, gen),
+                    K_HORIZON => sim.on_horizon(&mut engine, t),
+                    K_BURST => sim.on_burst(&mut engine, t, id as usize),
+                    _ => {}
+                }
+            }
+        }
+
+        sim.finish(policy_name, self.ft.label(), capacity)
+    }
+}
+
+// ---------------------------------------------------------------------
+// internal machinery
+
+/// Engine timer-tag layout: `kind << 56 | (gen & 0xFF_FFFF) << 32 | id`
+/// (the DAG runner's scheme).  Generations invalidate events that
+/// outlive the session (or arming) that created them.
+const K_COPY_DONE: u64 = 1;
+const K_BIN_REVOKE: u64 = 2;
+const K_RATE: u64 = 3;
+const K_COUNT: u64 = 4;
+const K_HORIZON: u64 = 5;
+const K_BURST: u64 = 6;
+
+#[inline]
+fn tag(kind: u64, gen: u64, id: u64) -> u64 {
+    (kind << 56) | ((gen & 0xFF_FFFF) << 32) | (id & 0xFFFF_FFFF)
+}
+
+#[inline]
+fn untag(t: u64) -> (u64, u64, u64) {
+    (t >> 56, (t >> 32) & 0xFF_FFFF, t & 0xFFFF_FFFF)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum CState {
+    Ready,
+    Running,
+    Done,
+    Retired,
+}
+
+/// State carried into a copy's next session.
+#[derive(Clone, Copy, Debug)]
+enum Carry {
+    Fresh,
+    /// restart: boot + restore `recovery_h` of durable state
+    Recover(f64),
+    /// live migration within the notice: transfer instead of boot
+    Migrate(f64),
+    /// planned fleet re-pack: state transfer, progress preserved
+    Repack(f64),
+}
+
+/// One activity span of a session timeline (the DAG runner's shape).
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    cat: Category,
+    dur: f64,
+    /// work beyond the replica's historical frontier (advances the
+    /// fleet's global new-work frontier — the Count rule's clock)
+    advances: bool,
+    /// a completed checkpoint: volatile progress becomes durable
+    commits: bool,
+}
+
+/// A batch replica's planned timeline within one session — prologue,
+/// then work chunks interleaved with checkpoints, mirroring
+/// `sim::run`'s inner loop arithmetic exactly.
+fn build_batch_segments(
+    job: &Job,
+    ft: &dyn FtMechanism,
+    container: &ContainerModel,
+    p0: f64,
+    frontier: f64,
+    carry: Carry,
+) -> Vec<Segment> {
+    let mut segs = Vec::new();
+    let seg = |cat, dur| Segment { cat, dur, advances: false, commits: false };
+    push_prologue(&mut segs, container, carry);
+    let interval = ft.checkpoint_interval(job);
+    let ckpt_dur = ft.checkpoint_time(job, container);
+    let len = job.exec_len_h;
+    let mut pos = p0;
+    let mut since_ckpt = 0.0f64;
+    while pos < len - 1e-9 {
+        let until_ckpt = interval.map(|i| (i - since_ckpt).max(1e-6)).unwrap_or(f64::INFINITY);
+        let chunk = (len - pos).min(until_ckpt);
+        let reexec = (frontier - pos).clamp(0.0, chunk);
+        if reexec > 0.0 {
+            segs.push(seg(Category::Reexec, reexec));
+        }
+        let useful = chunk - reexec;
+        if useful > 0.0 {
+            segs.push(Segment {
+                cat: Category::Useful,
+                dur: useful,
+                advances: true,
+                commits: false,
+            });
+        }
+        pos += chunk;
+        since_ckpt += chunk;
+        if let Some(i) = interval {
+            if since_ckpt >= i - 1e-9 && pos < len - 1e-9 {
+                segs.push(Segment {
+                    cat: Category::Checkpoint,
+                    dur: ckpt_dur,
+                    advances: false,
+                    commits: true,
+                });
+                since_ckpt = 0.0;
+            }
+        }
+    }
+    segs
+}
+
+/// An open-ended replica's session: prologue, then one serving span to
+/// the horizon.  Uptime has no work target to protect, so no
+/// checkpoint spans — an FT mechanism shows up as the recovery
+/// prologue it charges after a revocation.
+fn build_open_segments(
+    container: &ContainerModel,
+    carry: Carry,
+    t0: f64,
+    horizon_end: f64,
+) -> Vec<Segment> {
+    let mut segs = Vec::new();
+    push_prologue(&mut segs, container, carry);
+    // absolute accumulation, matching the span replay
+    let mut tt = t0;
+    for s in &segs {
+        tt += s.dur;
+    }
+    let serve = horizon_end - tt;
+    if serve > 0.0 {
+        segs.push(Segment { cat: Category::Useful, dur: serve, advances: true, commits: false });
+    }
+    segs
+}
+
+fn push_prologue(segs: &mut Vec<Segment>, container: &ContainerModel, carry: Carry) {
+    let seg = |cat, dur| Segment { cat, dur, advances: false, commits: false };
+    match carry {
+        Carry::Migrate(m) => segs.push(seg(Category::Migration, m)),
+        Carry::Repack(r) => segs.push(seg(Category::Repack, r)),
+        Carry::Fresh => segs.push(seg(Category::Startup, container.startup_time())),
+        Carry::Recover(r) => {
+            segs.push(seg(Category::Startup, container.startup_time()));
+            if r > 0.0 {
+                segs.push(seg(Category::Recovery, r));
+            }
+        }
+    }
+}
+
+/// Replay a session's spans up to the absolute cutoff `upto`, mutating
+/// the ledger (and, for lead batch stages, the replica's progress and
+/// frontier) with exactly `sim::run::execute`'s per-span arithmetic:
+/// spans walk an absolutely-accumulated clock, work spans add to
+/// volatile progress one at a time, and a checkpoint commits only when
+/// it completes.  Standby copies record their runtime as cost-only
+/// [`Category::Idle`] (hot-standby capacity).  Returns the
+/// frontier-advancing work executed (the Count rule's clock).
+#[allow(clippy::too_many_arguments)]
+fn replay_spans(
+    ledger: &mut Ledger,
+    progress: Option<(&mut JobProgress, &mut f64)>,
+    segs: &[Segment],
+    t0: f64,
+    upto: f64,
+    price: f64,
+    standby: bool,
+) -> f64 {
+    let mut off = t0;
+    let mut useful = 0.0f64;
+    let mut prog = progress;
+    for s in segs {
+        let cut = upto < off + s.dur;
+        let run = if cut { (upto - off).max(0.0) } else { s.dur };
+        if standby {
+            ledger.cost.add(Category::Idle, run * price);
+        } else {
+            ledger.span(s.cat, run, price);
+            if matches!(s.cat, Category::Reexec | Category::Useful) {
+                if let Some((p, frontier)) = prog.as_mut() {
+                    p.volatile_h += run;
+                    if s.advances {
+                        **frontier = frontier.max(p.total_h());
+                    }
+                }
+                if s.advances {
+                    useful += run;
+                }
+            }
+            if s.commits && run >= s.dur {
+                if let Some((p, _)) = prog.as_mut() {
+                    p.commit();
+                }
+            }
+        }
+        if cut {
+            break;
+        }
+        off += s.dur;
+    }
+    useful
+}
+
+/// Frontier-advancing work a segment timeline has executed by the
+/// absolute time `at` (session started at `t0`).
+fn useful_done_at(segs: &[Segment], t0: f64, at: f64) -> f64 {
+    let mut off = t0;
+    let mut u = 0.0f64;
+    for s in segs {
+        if off >= at - 1e-12 {
+            break;
+        }
+        if s.advances {
+            u += s.dur.min(at - off);
+        }
+        off += s.dur;
+    }
+    u
+}
+
+#[derive(Debug)]
+enum FleetSchedule {
+    Trace,
+    Rate { per_h: f64, next_abs: f64 },
+    Count { thresholds: Vec<f64>, idx: usize },
+}
+
+/// One logical replica of a tier.
+struct Replica {
+    tier: usize,
+    job: Job,
+    ft: Box<dyn FtMechanism>,
+    batch: bool,
+    progress: JobProgress,
+    frontier: f64,
+    ledger: Ledger,
+    /// per-copy uptime intervals (unioned for the SLO integral)
+    ups: Vec<Vec<(f64, f64)>>,
+    done: bool,
+    retired: bool,
+    /// allocated by a burst scale-up (retired first at scale-down)
+    burst_extra: bool,
+    repacks: u32,
+    completed_at: f64,
+}
+
+impl Replica {
+    fn new(spec: &ServiceSpec, ti: usize, ri: u32, id: u64, ft: &FtKind) -> Replica {
+        let tier = &spec.tiers[ti];
+        let len = tier.run_h.unwrap_or(spec.horizon_h);
+        let job = Job::new(id, len, tier.mem_gb).named(format!("{}-{ri}", tier.name));
+        let mech = ft.build(&job);
+        Replica {
+            tier: ti,
+            job,
+            ft: mech,
+            batch: tier.is_batch(),
+            progress: JobProgress::new(),
+            frontier: 0.0,
+            ledger: Ledger::new(),
+            ups: Vec::new(),
+            done: false,
+            retired: false,
+            burst_extra: false,
+            repacks: 0,
+            completed_at: -1.0,
+        }
+    }
+}
+
+/// One physical placement slot: copy `copy_idx` of a logical replica
+/// (`copy_idx == 0` is the lead; standbys exist under replication).
+struct ReplicaCopy {
+    replica: usize,
+    copy_idx: u32,
+    tier: usize,
+    state: CState,
+    carry: Carry,
+    gen: u64,
+    bin: u64,
+    sessions: u32,
+}
+
+impl ReplicaCopy {
+    fn new(replica: usize, copy_idx: u32, tier: usize) -> ReplicaCopy {
+        ReplicaCopy {
+            replica,
+            copy_idx,
+            tier,
+            state: CState::Ready,
+            carry: Carry::Fresh,
+            gen: 0,
+            bin: 0,
+            sessions: 0,
+        }
+    }
+}
+
+struct BinStage {
+    cid: usize,
+    /// memory share of the instance price this copy pays
+    share: f64,
+    standby: bool,
+    segments: Vec<Segment>,
+    /// natural session end (absolute hours, accumulated like the
+    /// single-job engine's clock)
+    end_abs: f64,
+    /// absolute time the copy comes up (prologue end); serving/work
+    /// time and the SLO integral start here
+    up_from_abs: f64,
+    done: bool,
+    /// when `done`: the absolute time the copy stopped (its natural
+    /// end, an early stop, or a retirement) — idle share accrues from
+    /// here to the bin close
+    closed_abs: f64,
+}
+
+struct ActiveBin {
+    t0: f64,
+    end_t: f64,
+    market: usize,
+    is_spot: bool,
+    /// instance $/h, fixed at session start (as in `sim::run`)
+    price: f64,
+    stages: Vec<BinStage>,
+    live: usize,
+}
+
+struct Sim<'a> {
+    world: &'a World,
+    spec: &'a ServiceSpec,
+    policy: &'a mut dyn Policy,
+    cfg: &'a RunConfig,
+    packer: Packer,
+    rng: Rng,
+    schedule: FleetSchedule,
+    ft_kind: FtKind,
+    degree: u32,
+    t_start: f64,
+    horizon_end: f64,
+    replicas: Vec<Replica>,
+    copies: Vec<ReplicaCopy>,
+    active: BTreeMap<u64, ActiveBin>,
+    next_bin: u64,
+    bins_launched: u32,
+    bin_revocations: u32,
+    fleet_repacks: u32,
+    aborted: bool,
+    ended: bool,
+    /// markets whose revocations the policy is re-taught at every bin
+    /// launch (per-bin policies are reset because each bin is a
+    /// different "job"; the replay keeps the shrinking candidate set
+    /// across the whole fleet, as in the DAG runner)
+    revoked_markets: Vec<usize>,
+    /// frontier work banked by finalized / killed sessions (Count rule)
+    w_closed: f64,
+    count_gen: u64,
+    rate_armed: bool,
+    rate_gen: u64,
+    burst_events: Vec<(f64, usize, u32)>,
+    peak_bin_used_gb: f64,
+    copack_conflicts: u32,
+}
+
+impl Sim<'_> {
+    fn all_batch_done(&self) -> bool {
+        self.replicas.iter().all(|r| !r.batch || r.done || r.retired)
+    }
+
+    fn fleet_finished(&self) -> bool {
+        self.ended || (self.spec.is_batch_only() && self.all_batch_done())
+    }
+
+    /// Pack every ready copy into bins and launch them at `t`.
+    fn launch_ready(&mut self, eng: &mut Engine, t: f64) {
+        if self.ended || self.aborted || t >= self.horizon_end {
+            return;
+        }
+        let grouped = self.degree > 1;
+        let ready: Vec<(usize, f64, u64)> = (0..self.copies.len())
+            .filter(|&c| {
+                let cp = &self.copies[c];
+                let r = &self.replicas[cp.replica];
+                cp.state == CState::Ready && !r.done && !r.retired
+            })
+            .map(|c| {
+                let cp = &self.copies[c];
+                let group =
+                    if grouped { cp.replica as u64 } else { u64::MAX - 1 - c as u64 };
+                (c, self.replicas[cp.replica].job.mem_gb, group)
+            })
+            .collect();
+        if ready.is_empty() {
+            return;
+        }
+        let container = &self.world.container;
+        for bin in self.packer.pack_grouped(&ready) {
+            if self.bins_launched >= self.cfg.max_sessions {
+                // safety valve: copies stay Ready, run reports !completed
+                self.aborted = true;
+                return;
+            }
+            self.bins_launched += 1;
+            self.peak_bin_used_gb = self.peak_bin_used_gb.max(bin.used_gb);
+            // belt-and-braces: the grouped packer must never co-pack
+            // two copies of one logical replica
+            if grouped {
+                for (i, &a) in bin.stages.iter().enumerate() {
+                    for &b in &bin.stages[i + 1..] {
+                        if self.copies[a].replica == self.copies[b].replica {
+                            self.copack_conflicts += 1;
+                        }
+                    }
+                }
+            }
+            let bin_id = self.next_bin;
+            self.next_bin += 1;
+            // nominal length: the longest full replica session packed
+            // (batch budget, or horizon remainder for open tiers), so
+            // the policy's suitability/lifetime rules see the job the
+            // fleet actually runs — and, for the degenerate case, the
+            // same length the single-job engine passes
+            let nominal = bin
+                .stages
+                .iter()
+                .map(|&c| {
+                    let r = &self.replicas[self.copies[c].replica];
+                    if r.batch { r.job.exec_len_h } else { (self.horizon_end - t).max(1e-6) }
+                })
+                .fold(0.0f64, f64::max);
+            let bin_job =
+                Job::new(bin_id, nominal.max(1e-6), bin.used_gb).named(format!("svc-bin-{bin_id}"));
+            let ctx = Ctx { world: self.world, now: t };
+            self.policy.reset();
+            for &m in &self.revoked_markets {
+                self.policy.on_revocation(&bin_job, m, &ctx);
+            }
+            let decision = self.policy.select(&bin_job, &ctx);
+            let market = decision.market();
+            let is_spot = decision.is_spot();
+            let price = if is_spot {
+                self.world.market(market).price_at(t) as f64
+            } else {
+                self.world.od_price(market)
+            };
+            let mut stages = Vec::with_capacity(bin.stages.len());
+            let mut end_t = t;
+            for &c in &bin.stages {
+                let cp = &mut self.copies[c];
+                let r = &self.replicas[cp.replica];
+                let standby = cp.copy_idx != 0;
+                let segments = if r.batch {
+                    build_batch_segments(
+                        &r.job,
+                        r.ft.as_ref(),
+                        container,
+                        r.progress.total_h(),
+                        r.frontier,
+                        cp.carry,
+                    )
+                } else {
+                    build_open_segments(container, cp.carry, t, self.horizon_end)
+                };
+                // the session clock accumulates absolutely, one span at
+                // a time — the single-job engine's arithmetic
+                let mut tt = t;
+                let mut up_from = t;
+                let mut in_prologue = true;
+                for s in &segments {
+                    if in_prologue
+                        && !matches!(
+                            s.cat,
+                            Category::Startup
+                                | Category::Recovery
+                                | Category::Migration
+                                | Category::Repack
+                        )
+                    {
+                        up_from = tt;
+                        in_prologue = false;
+                    }
+                    tt += s.dur;
+                }
+                if in_prologue {
+                    up_from = tt; // prologue swallowed the session
+                }
+                let end_abs = if r.batch { tt } else { self.horizon_end };
+                end_t = end_t.max(end_abs);
+                cp.state = CState::Running;
+                cp.gen += 1;
+                cp.bin = bin_id;
+                cp.sessions += 1;
+                cp.carry = Carry::Fresh; // consumed by this session
+                if r.batch {
+                    eng.schedule_at(
+                        end_abs,
+                        Event::Timer { tag: tag(K_COPY_DONE, cp.gen, c as u64) },
+                    );
+                }
+                stages.push(BinStage {
+                    cid: c,
+                    share: r.job.mem_gb / bin.used_gb,
+                    standby,
+                    segments,
+                    end_abs,
+                    up_from_abs: up_from,
+                    done: false,
+                    closed_abs: end_abs,
+                });
+            }
+            if is_spot {
+                if let FleetSchedule::Trace = self.schedule {
+                    if let Some(rev) = self.world.market(market).next_revocation_after(t) {
+                        if rev < end_t {
+                            let revoke = Event::Timer { tag: tag(K_BIN_REVOKE, 0, bin_id) };
+                            eng.schedule_at(rev, revoke);
+                        }
+                    }
+                }
+            }
+            let live = stages.len();
+            self.active
+                .insert(bin_id, ActiveBin { t0: t, end_t, market, is_spot, price, stages, live });
+        }
+    }
+
+    /// Record a copy's up interval `[up_from, until)` if non-empty.
+    fn record_up(&mut self, cid: usize, up_from: f64, until: f64) {
+        let cp = &self.copies[cid];
+        let r = &mut self.replicas[cp.replica];
+        while r.ups.len() <= cp.copy_idx as usize {
+            r.ups.push(Vec::new());
+        }
+        if until > up_from {
+            r.ups[cp.copy_idx as usize].push((up_from, until));
+        }
+    }
+
+    fn on_copy_done(&mut self, eng: &mut Engine, t: f64, gen: u64, cid: usize) {
+        if self.ended || self.copies[cid].state != CState::Running {
+            return;
+        }
+        if (self.copies[cid].gen & 0xFF_FFFF) != gen {
+            return; // stale event from a killed session
+        }
+        let bin_id = self.copies[cid].bin;
+        let li = self.copies[cid].replica;
+        let (live_after, up_from) = {
+            let bin = self.active.get_mut(&bin_id).expect("running copy without active bin");
+            let pos = bin.stages.iter().position(|b| b.cid == cid).unwrap();
+            let price = bin.price;
+            let (t0, share, standby, up_from) = {
+                let bs = &bin.stages[pos];
+                (bin.t0, bs.share, bs.standby, bs.up_from_abs)
+            };
+            let r = &mut self.replicas[li];
+            let useful = {
+                let bs = &bin.stages[pos];
+                replay_spans(
+                    &mut r.ledger,
+                    (!standby).then_some((&mut r.progress, &mut r.frontier)),
+                    &bs.segments,
+                    t0,
+                    bs.end_abs,
+                    price * share,
+                    standby,
+                )
+            };
+            self.w_closed += useful;
+            if !standby {
+                debug_assert!(r.progress.is_complete(&r.job));
+                r.done = true;
+                r.completed_at = t;
+            }
+            bin.stages[pos].done = true;
+            bin.stages[pos].closed_abs = t;
+            bin.live -= 1;
+            (bin.live, up_from)
+        };
+        self.record_up(cid, up_from, t);
+        self.copies[cid].state = CState::Done;
+        if self.replicas[li].done {
+            // the lead finished: stop the standbys still mirroring it
+            self.stop_replica_copies(eng, t, li, CState::Done);
+        }
+        if live_after == 0 {
+            self.close_bin(bin_id, t);
+        }
+        self.launch_ready(eng, t);
+        self.arm_rate(eng);
+        self.resched_count(eng, t);
+    }
+
+    /// Stop every still-running copy of logical replica `li` at `t`
+    /// (lead completed, or the replica was retired): record spans and
+    /// uptime up to `t`, convert the slot to an idle share, close bins
+    /// that empty out.
+    fn stop_replica_copies(&mut self, _eng: &mut Engine, t: f64, li: usize, to: CState) {
+        let cids: Vec<usize> = (0..self.copies.len())
+            .filter(|&c| self.copies[c].replica == li && self.copies[c].state == CState::Running)
+            .collect();
+        for cid in cids {
+            let bin_id = self.copies[cid].bin;
+            let (up_from, emptied) = {
+                let bin = self.active.get_mut(&bin_id).expect("running copy without bin");
+                let pos = bin.stages.iter().position(|b| b.cid == cid).unwrap();
+                let price = bin.price;
+                let (t0, share, standby, up_from) = {
+                    let bs = &bin.stages[pos];
+                    (bin.t0, bs.share, bs.standby, bs.up_from_abs)
+                };
+                let r = &mut self.replicas[li];
+                let useful = {
+                    let bs = &bin.stages[pos];
+                    replay_spans(
+                        &mut r.ledger,
+                        (!standby).then_some((&mut r.progress, &mut r.frontier)),
+                        &bs.segments,
+                        t0,
+                        t,
+                        price * share,
+                        standby,
+                    )
+                };
+                self.w_closed += useful;
+                bin.stages[pos].done = true;
+                bin.stages[pos].closed_abs = t;
+                bin.live -= 1;
+                (up_from, bin.live == 0)
+            };
+            self.record_up(cid, up_from, t);
+            self.copies[cid].state = to;
+            self.copies[cid].gen += 1; // invalidate any pending K_COPY_DONE
+            if emptied {
+                self.close_bin(bin_id, t);
+            }
+        }
+        // ready (unplaced) copies of the replica just change state
+        for c in &mut self.copies {
+            if c.replica == li && c.state == CState::Ready {
+                c.state = to;
+            }
+        }
+    }
+
+    /// Natural close: bill the billing-cycle buffer and the idle-slot
+    /// tails of copies that stopped before the bin did.
+    fn close_bin(&mut self, bin_id: u64, end: f64) {
+        let bin = self.active.remove(&bin_id).expect("closing unknown bin");
+        let (_, buffer) = session_cost(end - bin.t0, bin.price);
+        for bs in &bin.stages {
+            let li = self.copies[bs.cid].replica;
+            let ledger = &mut self.replicas[li].ledger;
+            ledger.buffer_cost(buffer * bs.share);
+            let idle = (end - bs.closed_abs).max(0.0);
+            if idle > 0.0 {
+                ledger.cost.add(Category::Idle, idle * bin.price * bs.share);
+            }
+        }
+    }
+
+    /// A revocation at `t_eff` kills every copy on the bin; each
+    /// consults its FT mechanism (a running sibling copy absorbs the
+    /// loss under replication), then — with `repack` enabled — the
+    /// whole surviving fleet is drained and re-packed.
+    fn revoke_bin(&mut self, eng: &mut Engine, t_eff: f64, bin_id: u64) {
+        let Some(bin) = self.active.remove(&bin_id) else {
+            return; // closed at the same timestamp before the notice
+        };
+        self.bin_revocations += 1;
+        let (_, buffer) = session_cost(t_eff - bin.t0, bin.price);
+        for bs in &bin.stages {
+            let cid = bs.cid;
+            let li = self.copies[cid].replica;
+            self.replicas[li].ledger.buffer_cost(buffer * bs.share);
+            if bs.done {
+                // the copy had already stopped; it only idled from its
+                // stop to the revocation
+                let idle = (t_eff - bs.closed_abs).max(0.0);
+                if idle > 0.0 {
+                    self.replicas[li]
+                        .ledger
+                        .cost
+                        .add(Category::Idle, idle * bin.price * bs.share);
+                }
+                continue;
+            }
+            let r = &mut self.replicas[li];
+            let useful = replay_spans(
+                &mut r.ledger,
+                (!bs.standby).then_some((&mut r.progress, &mut r.frontier)),
+                &bs.segments,
+                bin.t0,
+                t_eff,
+                bin.price * bs.share,
+                bs.standby,
+            );
+            self.w_closed += useful;
+            self.record_up(cid, bs.up_from_abs, t_eff.min(bs.end_abs).max(bs.up_from_abs));
+            // a running sibling copy absorbs the loss (replication):
+            // state lives in replica memory, the victim re-syncs on its
+            // next boot
+            let sibling_alive = self.copies.iter().enumerate().any(|(oc, c)| {
+                oc != cid
+                    && c.replica == li
+                    && c.state == CState::Running
+                    && !bin.stages.iter().any(|o| o.cid == oc)
+            });
+            let r = &mut self.replicas[li];
+            if sibling_alive {
+                r.progress.revocations += 1;
+                self.copies[cid].carry = Carry::Fresh;
+            } else {
+                let rec = r.ft.on_revocation(
+                    &r.job,
+                    &self.world.container,
+                    r.progress.durable_h > 0.0,
+                );
+                match rec {
+                    Recovery::Restart { recovery_time_h } => {
+                        r.progress.on_revocation();
+                        self.copies[cid].carry = Carry::Recover(recovery_time_h);
+                    }
+                    Recovery::Migrate { migrate_time_h } => {
+                        r.progress.revocations += 1;
+                        self.copies[cid].carry = Carry::Migrate(migrate_time_h);
+                    }
+                }
+            }
+            self.copies[cid].state = CState::Ready;
+            self.copies[cid].gen += 1; // invalidate the pending completion
+        }
+        self.revoked_markets.push(bin.market);
+        if self.spec.repack {
+            self.fleet_repack(eng, t_eff.max(self.t_start));
+        }
+    }
+
+    /// Mid-session survivor re-packing: drain every active bin at `t`,
+    /// charge each in-flight copy a state-transfer prologue
+    /// ([`Category::Repack`], progress preserved), and return the whole
+    /// fleet to the packer for a fresh FFD consolidation.
+    fn fleet_repack(&mut self, _eng: &mut Engine, t: f64) {
+        // a consolidation event even when no surviving bin needs
+        // draining (the fresh packing then starts from scratch)
+        self.fleet_repacks += 1;
+        let bins: Vec<u64> = self.active.keys().copied().collect();
+        for bin_id in bins {
+            let bin = self.active.remove(&bin_id).expect("repacking unknown bin");
+            let (_, buffer) = session_cost(t - bin.t0, bin.price);
+            for bs in &bin.stages {
+                let cid = bs.cid;
+                let li = self.copies[cid].replica;
+                self.replicas[li].ledger.buffer_cost(buffer * bs.share);
+                if bs.done {
+                    let idle = (t - bs.closed_abs).max(0.0);
+                    if idle > 0.0 {
+                        self.replicas[li]
+                            .ledger
+                            .cost
+                            .add(Category::Idle, idle * bin.price * bs.share);
+                    }
+                    continue;
+                }
+                let r = &mut self.replicas[li];
+                let useful = replay_spans(
+                    &mut r.ledger,
+                    (!bs.standby).then_some((&mut r.progress, &mut r.frontier)),
+                    &bs.segments,
+                    bin.t0,
+                    t,
+                    bin.price * bs.share,
+                    bs.standby,
+                );
+                self.w_closed += useful;
+                self.record_up(cid, bs.up_from_abs, t.max(bs.up_from_abs));
+                // planned move: progress survives, only the transfer is
+                // paid on the next session's prologue
+                let transfer = self.world.container.restore_time(r.job.mem_gb);
+                r.repacks += 1;
+                self.copies[cid].carry = Carry::Repack(transfer);
+                self.copies[cid].state = CState::Ready;
+                self.copies[cid].gen += 1;
+            }
+        }
+    }
+
+    fn on_trace_revoke(&mut self, eng: &mut Engine, t: f64, bin_id: u64) {
+        if self.ended {
+            return;
+        }
+        self.revoke_bin(eng, t, bin_id);
+        self.launch_ready(eng, t);
+        self.arm_rate(eng);
+        self.resched_count(eng, t);
+    }
+
+    /// (Re)arm the ForcedRate chain: one pending timer at
+    /// `max(now, next_abs)`, re-armed after every launch if it died out
+    /// with no revocable bin.
+    fn arm_rate(&mut self, eng: &mut Engine) {
+        let next = match self.schedule {
+            FleetSchedule::Rate { next_abs, .. } => next_abs,
+            _ => return,
+        };
+        if self.rate_armed || self.ended || self.aborted || self.fleet_finished() {
+            return;
+        }
+        self.rate_armed = true;
+        self.rate_gen += 1;
+        eng.schedule_at(next, Event::Timer { tag: tag(K_RATE, self.rate_gen, 0) });
+    }
+
+    /// ForcedRate arrival: revoke the lowest-id active spot bin still
+    /// short of its natural end, then redraw the chain — the
+    /// single-job engine's schedule, fleet-wide.  The *effective*
+    /// revocation time is the drawn arrival (it can precede the bin
+    /// launch after an on-demand stretch, exactly like the single-job
+    /// engine's stale `next_abs`).
+    fn on_rate(&mut self, eng: &mut Engine, _t: f64, gen: u64) {
+        if (self.rate_gen & 0xFF_FFFF) != gen || self.ended {
+            return;
+        }
+        self.rate_armed = false;
+        let (per_h, t_eff) = match self.schedule {
+            FleetSchedule::Rate { per_h, next_abs } => (per_h, next_abs),
+            _ => return,
+        };
+        if self.fleet_finished() || self.aborted {
+            return; // let the chain die out
+        }
+        let victim = self
+            .active
+            .iter()
+            .find(|(_, b)| b.is_spot && t_eff < b.end_t)
+            .map(|(&id, _)| id);
+        let Some(id) = victim else {
+            return; // nothing revocable; the next launch re-arms
+        };
+        self.revoke_bin(eng, t_eff, id);
+        let redraw = t_eff + self.rng.exp(per_h);
+        if let FleetSchedule::Rate { next_abs, .. } = &mut self.schedule {
+            *next_abs = redraw;
+        }
+        let now = eng.now();
+        self.launch_ready(eng, now.max(t_eff));
+        self.arm_rate(eng);
+        self.resched_count(eng, now);
+    }
+
+    /// (Re)schedule the next ForcedCount crossing: the wall time at
+    /// which the fleet's global new-work frontier reaches the pending
+    /// threshold, given the piecewise timelines of every active bin
+    /// (the DAG runner's sweep, skipping standby mirrors).
+    fn resched_count(&mut self, eng: &mut Engine, now: f64) {
+        let thr = match &self.schedule {
+            FleetSchedule::Count { thresholds, idx } => match thresholds.get(*idx) {
+                Some(&thr) => thr,
+                None => return,
+            },
+            _ => return,
+        };
+        if self.ended {
+            return;
+        }
+        let mut w_now = self.w_closed;
+        for b in self.active.values() {
+            for bs in b.stages.iter().filter(|bs| !bs.done && !bs.standby) {
+                w_now += useful_done_at(&bs.segments, b.t0, now);
+            }
+        }
+        let mut need = thr - w_now;
+        let t_cross = if need <= 1e-12 {
+            Some(now)
+        } else {
+            let mut segs: Vec<(f64, f64)> = Vec::new();
+            for b in self.active.values() {
+                for bs in b.stages.iter().filter(|bs| !bs.done && !bs.standby) {
+                    let mut off = b.t0;
+                    for s in &bs.segments {
+                        let (s0, s1) = (off, off + s.dur);
+                        off = s1;
+                        if s.advances && s1 > now + 1e-12 {
+                            segs.push((s0.max(now), s1));
+                        }
+                    }
+                }
+            }
+            let mut bounds: Vec<f64> = segs.iter().flat_map(|&(a, b)| [a, b]).collect();
+            bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+            let mut found = None;
+            for w in bounds.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                let rate =
+                    segs.iter().filter(|&&(a, b)| a <= lo + 1e-12 && b >= hi - 1e-12).count();
+                if rate == 0 {
+                    continue;
+                }
+                let cap = rate as f64 * (hi - lo);
+                if need <= cap + 1e-12 {
+                    found = Some(lo + need / rate as f64);
+                    break;
+                }
+                need -= cap;
+            }
+            found
+        };
+        self.count_gen += 1;
+        if let Some(tc) = t_cross {
+            eng.schedule_at(tc, Event::Timer { tag: tag(K_COUNT, self.count_gen, 0) });
+        }
+    }
+
+    fn on_count(&mut self, eng: &mut Engine, t: f64, gen: u64) {
+        if (self.count_gen & 0xFF_FFFF) != gen || self.ended {
+            return; // superseded by a reschedule
+        }
+        // victim: prefer a spot bin actively advancing the frontier at
+        // `t`; fall back to the lowest-id active spot bin
+        let advancing = self
+            .active
+            .iter()
+            .filter(|(_, b)| b.is_spot)
+            .find(|(_, b)| {
+                b.stages.iter().any(|bs| {
+                    !bs.done && !bs.standby && {
+                        let mut off = b.t0;
+                        bs.segments.iter().any(|s| {
+                            let hit = s.advances && t >= off - 1e-9 && t <= off + s.dur + 1e-9;
+                            off += s.dur;
+                            hit
+                        })
+                    }
+                })
+            })
+            .map(|(&id, _)| id);
+        let victim =
+            advancing.or_else(|| self.active.iter().find(|(_, b)| b.is_spot).map(|(&id, _)| id));
+        let Some(id) = victim else {
+            return; // nothing revocable right now; resched will retry
+        };
+        if let FleetSchedule::Count { idx, .. } = &mut self.schedule {
+            *idx += 1;
+        }
+        self.revoke_bin(eng, t, id);
+        self.launch_ready(eng, t);
+        self.resched_count(eng, t);
+    }
+
+    /// Burst boundary: raise the tier's live replica set to the new
+    /// target (allocating burst replicas) or retire the extras, then
+    /// consolidate the fleet if re-packing is on.
+    fn on_burst(&mut self, eng: &mut Engine, t: f64, ev: usize) {
+        if self.ended || self.aborted {
+            return;
+        }
+        let (_, ti, target) = self.burst_events[ev];
+        let live: Vec<usize> = (0..self.replicas.len())
+            .filter(|&li| {
+                let r = &self.replicas[li];
+                r.tier == ti && !r.retired && !r.done
+            })
+            .collect();
+        let n = live.len() as u32;
+        match target.cmp(&n) {
+            std::cmp::Ordering::Greater => {
+                for _ in 0..(target - n) {
+                    let id = self.replicas.len() as u64;
+                    let mut r = Replica::new(self.spec, ti, id as u32, id, &self.ft_kind);
+                    r.burst_extra = true;
+                    let li = self.replicas.len();
+                    self.replicas.push(r);
+                    for ci in 0..self.degree {
+                        self.copies.push(ReplicaCopy::new(li, ci, ti));
+                    }
+                }
+            }
+            std::cmp::Ordering::Less => {
+                // retire burst extras first, newest first
+                let mut excess = n - target;
+                for &li in live.iter().rev() {
+                    if excess == 0 {
+                        break;
+                    }
+                    if self.replicas[li].burst_extra {
+                        self.replicas[li].retired = true;
+                        self.stop_replica_copies(eng, t, li, CState::Retired);
+                        excess -= 1;
+                    }
+                }
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        if self.spec.repack {
+            self.fleet_repack(eng, t);
+        }
+        self.launch_ready(eng, t);
+        self.arm_rate(eng);
+        self.resched_count(eng, t);
+    }
+
+    /// Horizon close: drain every active bin at the window end; the
+    /// steady-state loop is over.
+    fn on_horizon(&mut self, _eng: &mut Engine, t: f64) {
+        if self.ended {
+            return;
+        }
+        self.ended = true;
+        let bins: Vec<u64> = self.active.keys().copied().collect();
+        for bin_id in bins {
+            let bin = self.active.remove(&bin_id).expect("closing unknown bin");
+            for bs in &bin.stages {
+                if bs.done {
+                    continue;
+                }
+                let cid = bs.cid;
+                let li = self.copies[cid].replica;
+                let r = &mut self.replicas[li];
+                let useful = replay_spans(
+                    &mut r.ledger,
+                    (!bs.standby).then_some((&mut r.progress, &mut r.frontier)),
+                    &bs.segments,
+                    bin.t0,
+                    t,
+                    bin.price * bs.share,
+                    bs.standby,
+                );
+                self.w_closed += useful;
+                self.record_up(cid, bs.up_from_abs, t.max(bs.up_from_abs));
+                self.copies[cid].state = CState::Done;
+                self.copies[cid].gen += 1;
+            }
+            let (_, buffer) = session_cost(t - bin.t0, bin.price);
+            for bs in &bin.stages {
+                let li = self.copies[bs.cid].replica;
+                self.replicas[li].ledger.buffer_cost(buffer * bs.share);
+                if bs.done {
+                    let idle = (t - bs.closed_abs).max(0.0);
+                    if idle > 0.0 {
+                        self.replicas[li]
+                            .ledger
+                            .cost
+                            .add(Category::Idle, idle * bin.price * bs.share);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Assemble the per-tier results: merged ledgers, the SLO integral
+    /// (recorded as the time-only `slo` row), uptime, counters.
+    fn finish(mut self, policy: String, ft: String, capacity: f64) -> ServiceResult {
+        let horizon_end = self.horizon_end;
+        let t_start = self.t_start;
+        let mut tiers = Vec::with_capacity(self.spec.tiers.len());
+        for (ti, tier) in self.spec.tiers.iter().enumerate() {
+            let mut ledger = Ledger::new();
+            let mut revocations = 0u32;
+            let mut sessions = 0u32;
+            let mut repacks = 0u32;
+            let mut completed = true;
+            let mut up_h = 0.0f64;
+            // first pass: the tier's observation window (batch tiers
+            // are observed until their last replica completes)
+            let mut window_end = if tier.is_batch() { t_start } else { horizon_end };
+            for r in &self.replicas {
+                if r.tier == ti && r.batch && !r.retired {
+                    completed &= r.done;
+                    window_end = window_end.max(if r.done { r.completed_at } else { horizon_end });
+                }
+            }
+            let mut replica_ups: Vec<Vec<(f64, f64)>> = Vec::new();
+            for r in &mut self.replicas {
+                if r.tier != ti {
+                    continue;
+                }
+                ledger.merge(&std::mem::take(&mut r.ledger));
+                revocations += r.progress.revocations;
+                repacks += r.repacks;
+                let raw = union_intervals(r.ups.concat());
+                up_h += raw.iter().map(|&(a, b)| b - a).sum::<f64>();
+                let mut ups = raw;
+                if r.batch && r.done && r.completed_at >= 0.0 {
+                    // a completed batch replica has satisfied its
+                    // demand: count it as up through the tier window so
+                    // staggered completions never score as violations
+                    ups.push((r.completed_at, window_end));
+                }
+                replica_ups.push(union_intervals(ups));
+            }
+            for cp in &self.copies {
+                if cp.tier == ti {
+                    sessions += cp.sessions;
+                }
+            }
+            let steps = target_steps(tier, t_start, horizon_end);
+            let viol = violation_time(&replica_ups, &steps, t_start, window_end);
+            let window_h = (window_end - t_start).max(0.0);
+            ledger.time.add(Category::Slo, viol);
+            let slo_frac = if window_h > 0.0 { viol / window_h } else { 0.0 };
+            tiers.push(TierResult {
+                name: tier.name.clone(),
+                ledger,
+                slo_violation_h: viol,
+                slo_frac,
+                slo_met: slo_frac <= tier.slack + 1e-12,
+                target: tier.replicas,
+                up_h,
+                window_h,
+                revocations,
+                sessions,
+                repacks,
+                completed: completed && !self.aborted,
+            });
+        }
+        let makespan_h = if self.spec.is_batch_only() && self.all_batch_done() {
+            self.replicas
+                .iter()
+                .filter(|r| r.done)
+                .map(|r| r.completed_at)
+                .fold(t_start, f64::max)
+                - t_start
+        } else {
+            self.spec.horizon_h
+        };
+        let completed = tiers.iter().all(|t| t.completed) && !self.aborted;
+        ServiceResult {
+            service: self.spec.name.clone(),
+            policy,
+            ft,
+            tiers,
+            makespan_h,
+            horizon_h: self.spec.horizon_h,
+            revocations: self.bin_revocations,
+            bins: self.bins_launched,
+            repacks: self.fleet_repacks,
+            completed,
+            capacity_gb: capacity,
+            peak_bin_used_gb: self.peak_bin_used_gb,
+            copack_conflicts: self.copack_conflicts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::PolicyKind;
+    use crate::service::spec::TierSpec;
+
+    fn world() -> (World, f64) {
+        let mut w = World::generate(64, 1.0, 77);
+        let start = w.split_train(0.6);
+        (w, start)
+    }
+
+    fn web(horizon: f64) -> ServiceSpec {
+        ServiceSpec::new("web")
+            .horizon(horizon)
+            .capacity(64.0)
+            .tier(TierSpec::open("frontend", 3, 8.0).slack(0.2))
+            .tier(TierSpec::open("api", 2, 16.0).slack(0.2))
+    }
+
+    #[test]
+    fn steady_state_fleet_serves_to_horizon() {
+        let (w, start) = world();
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::OnDemand)
+            .start_t(start)
+            .seed(3)
+            .service(web(24.0))
+            .run();
+        assert!(r.completed, "{r:?}");
+        assert_eq!(r.revocations, 0, "on-demand bins are never revoked");
+        assert_eq!(r.tiers.len(), 2);
+        assert!((r.makespan_h - 24.0).abs() < 1e-9);
+        for t in &r.tiers {
+            // uptime ≈ replicas × (horizon − boot)
+            assert!(t.up_h > 0.9 * t.target as f64 * 23.0, "{}: up {}", t.name, t.up_h);
+            // only the boot is under target
+            assert!(t.slo_violation_h < 0.5, "{}: slo {}", t.name, t.slo_violation_h);
+            assert!(t.slo_met);
+            assert!(t.ledger.time.get(Category::Useful) > 0.0);
+        }
+        assert!(r.cost_usd() > 0.0);
+        assert!(r.peak_bin_used_gb <= r.capacity_gb + 1e-9);
+    }
+
+    #[test]
+    fn batch_only_fleet_ends_early() {
+        let (w, start) = world();
+        let spec = ServiceSpec::new("batch")
+            .horizon(100.0)
+            .tier(TierSpec::batch("work", 2, 16.0, 4.0));
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::OnDemand)
+            .start_t(start)
+            .seed(1)
+            .service(spec)
+            .run();
+        assert!(r.completed);
+        assert!(r.makespan_h < 10.0, "batch fleet must not wait for the horizon");
+        let t = &r.tiers[0];
+        assert!((t.ledger.time.get(Category::Useful) - 8.0).abs() < 1e-6);
+        assert!(t.completed);
+    }
+
+    #[test]
+    fn staggered_batch_completions_are_not_slo_violations() {
+        let (w, start) = world();
+        // one replica gets revoked and finishes late; the other's early
+        // completion must not count the stagger as under-target time
+        let spec = ServiceSpec::new("stagger")
+            .horizon(200.0)
+            .repack(false)
+            .tier(TierSpec::batch("work", 2, 16.0, 6.0).slack(0.05));
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedCount { total: 1 })
+            .start_t(start)
+            .seed(6)
+            .service(spec)
+            .run();
+        assert!(r.completed, "{r:?}");
+        assert_eq!(r.revocations, 1);
+        let t = &r.tiers[0];
+        // only boots and the post-revocation gap may be under target
+        assert!(
+            t.slo_violation_h < 1.0,
+            "stagger counted as violation: {} h over a {} h window",
+            t.slo_violation_h,
+            t.window_h
+        );
+    }
+
+    #[test]
+    fn revocations_trigger_fleet_repack() {
+        let (w, start) = world();
+        let spec = web(24.0); // repack defaults on
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedRate { per_day: 12.0 })
+            .start_t(start)
+            .seed(5)
+            .service(spec)
+            .run();
+        assert!(r.revocations > 0, "forced rate must revoke");
+        assert_eq!(r.repacks, r.revocations, "every revocation consolidates the fleet");
+        let total = r.ledger();
+        assert!(total.time.get(Category::Repack) > 0.0, "survivors pay the transfer");
+        assert!(total.cost.get(Category::Repack) > 0.0);
+        // the fleet recovers: SLO damage is bounded by the prologue
+        for t in &r.tiers {
+            assert!(t.slo_violation_h < r.horizon_h * 0.5, "{}: {}", t.name, t.slo_violation_h);
+        }
+    }
+
+    #[test]
+    fn repack_disabled_leaves_survivors_alone() {
+        let (w, start) = world();
+        let spec = web(24.0).repack(false);
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedCount { total: 2 })
+            .start_t(start)
+            .seed(7)
+            .service(spec)
+            .run();
+        assert_eq!(r.revocations, 2);
+        assert_eq!(r.repacks, 0);
+        assert_eq!(r.ledger().time.get(Category::Repack), 0.0);
+    }
+
+    #[test]
+    fn forced_count_fires_exactly_n() {
+        let (w, start) = world();
+        for &n in &[1u32, 2, 4] {
+            let r = Scenario::on(&w)
+                .policy(PolicyKind::FtSpot)
+                .rule(RevocationRule::ForcedCount { total: n })
+                .start_t(start)
+                .seed(9)
+                .service(web(24.0))
+                .run();
+            assert_eq!(r.revocations, n, "expected exactly {n} bin revocations");
+        }
+    }
+
+    #[test]
+    fn replication_copies_never_copacked_and_absorb_revocations() {
+        let (w, start) = world();
+        let spec = ServiceSpec::new("ha")
+            .horizon(24.0)
+            .capacity(64.0)
+            .tier(TierSpec::open("core", 2, 8.0).slack(0.2));
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .ft(FtKind::Replication { k: 2 })
+            .rule(RevocationRule::ForcedRate { per_day: 8.0 })
+            .start_t(start)
+            .seed(11)
+            .service(spec)
+            .run();
+        assert_eq!(r.copack_conflicts, 0, "grouped packing must separate copies");
+        assert!(r.bins >= 2, "two copies need at least two bins");
+        let t = &r.tiers[0];
+        // standby capacity shows up as cost-only idle
+        assert!(t.ledger.cost.get(Category::Idle) > 0.0);
+        assert_eq!(t.ledger.time.get(Category::Idle), 0.0);
+        if r.revocations > 0 {
+            // absorbed: no recovery spans while a sibling lives
+            assert!(t.slo_met, "replicated tier must hold its SLO: {t:?}");
+        }
+    }
+
+    #[test]
+    fn burst_schedule_scales_up_and_down() {
+        let (w, start) = world();
+        let spec = ServiceSpec::new("bursty")
+            .horizon(40.0)
+            .capacity(64.0)
+            .repack(false)
+            .tier(TierSpec::open("api", 2, 8.0).slack(0.2).burst(24.0, 6.0, 4));
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::OnDemand)
+            .start_t(start)
+            .seed(2)
+            .service(spec)
+            .run();
+        assert!(r.completed);
+        let t = &r.tiers[0];
+        // one burst window [start+24, start+30): 2 base replicas serve
+        // ~40 h each, 2 burst extras ~6 h each, minus boots
+        assert!(t.up_h > 2.0 * 38.0 + 2.0 * 4.0, "burst capacity missing: up {}", t.up_h);
+        assert!(
+            t.up_h < 2.0 * 40.0 + 2.0 * 6.5,
+            "extras must retire at the window end: up {}",
+            t.up_h
+        );
+        assert!(t.slo_met, "on-demand bursts should hold the SLO: {t:?}");
+        assert!(r.bins > 1, "scale-ups launch fresh bins");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (w, start) = world();
+        let scen = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedRate { per_day: 6.0 })
+            .start_t(start)
+            .service(web(24.0));
+        let a = scen.run_seeded(42);
+        let b = scen.run_seeded(42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn replicate_matches_manual_loop_and_pool() {
+        let (w, start) = world();
+        let scen = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedCount { total: 1 })
+            .start_t(start)
+            .seed(11)
+            .service(web(12.0));
+        let agg = scen.replicate(3);
+        assert_eq!(agg.n, 3);
+        let manual: Vec<ServiceResult> = (11..14).map(|s| scen.run_seeded(s)).collect();
+        assert_eq!(agg, ServiceAggregate::from_runs(&manual));
+        let pooled = scen.replicate_on(&Pool::new(4), 3);
+        assert_eq!(agg, pooled);
+        assert_eq!(agg.tiers.len(), 2);
+    }
+
+    #[test]
+    fn slo_violation_recorded_as_time_only_row() {
+        let (w, start) = world();
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedRate { per_day: 24.0 })
+            .start_t(start)
+            .seed(4)
+            .service(web(24.0))
+            .run();
+        for t in &r.tiers {
+            assert!(
+                (t.ledger.time.get(Category::Slo) - t.slo_violation_h).abs() < 1e-9,
+                "slo row must mirror the integral"
+            );
+            assert_eq!(t.ledger.cost.get(Category::Slo), 0.0, "slo is never costed");
+        }
+    }
+}

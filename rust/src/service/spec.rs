@@ -1,0 +1,503 @@
+//! The service workload model: long-running tiers that must keep a
+//! target replica count online across revocations, with a deadline-slack
+//! SLO instead of a completion deadline.
+//!
+//! Specs are buildable in code (`ServiceSpec::new("web").tier(...)`) or
+//! parsed from the TOML subset `util::config` understands:
+//!
+//! ```toml
+//! [service]
+//! name = "web"
+//! horizon_h = 72.0          # steady-state window simulated
+//! capacity_gb = 64          # optional per-instance packing capacity
+//! repack = true             # re-pack survivors on fleet events
+//!
+//! [tier.frontend]
+//! replicas = 4              # target replica count
+//! mem_gb = 4.0
+//! slack = 0.05              # SLO: fraction of the horizon the tier may
+//!                           # run under target before the run violates
+//! burst_every_h = 24.0      # optional periodic burst window ...
+//! burst_len_h = 6.0         #   ... lasting this long ...
+//! burst_replicas = 8        #   ... raising the target to this
+//!
+//! [tier.batch-reindex]
+//! replicas = 2
+//! mem_gb = 16.0
+//! run_h = 6.0               # > 0 = batch tier: each replica owes this
+//!                           # much work, then the tier is done
+//! ```
+//!
+//! A tier without `run_h` is *open-ended*: its replicas serve until the
+//! horizon and "useful work" is uptime.  A tier with `run_h` is a
+//! *batch* tier riding in the same fleet; the whole run ends early when
+//! every tier is batch and complete.  Tier order is declaration order
+//! in code and sorted-by-name from TOML (deterministic, like
+//! [`DagSpec`](crate::dag::DagSpec)).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::market::Catalog;
+use crate::util::config::Config;
+
+/// Periodic burst window raising a tier's target replica count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BurstSpec {
+    /// window period (hours): bursts start at `start + k·every_h`
+    pub every_h: f64,
+    /// window length (hours), strictly less than the period
+    pub len_h: f64,
+    /// target replica count inside the window (> the base target)
+    pub replicas: u32,
+}
+
+/// One tier of a service fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierSpec {
+    pub name: String,
+    /// target replica count outside burst windows
+    pub replicas: u32,
+    /// per-replica memory footprint (GB) — drives packing and shares
+    pub mem_gb: f64,
+    /// deadline-slack SLO: fraction of the tier's wall-clock it may run
+    /// under target before the run counts as violated
+    pub slack: f64,
+    /// per-replica work budget (hours); `None` = open-ended service
+    pub run_h: Option<f64>,
+    /// optional periodic burst schedule (open-ended tiers only)
+    pub burst: Option<BurstSpec>,
+}
+
+impl TierSpec {
+    /// An open-ended tier (replicas serve until the horizon).
+    pub fn open(name: impl Into<String>, replicas: u32, mem_gb: f64) -> TierSpec {
+        TierSpec {
+            name: name.into(),
+            replicas,
+            mem_gb,
+            slack: 0.05,
+            run_h: None,
+            burst: None,
+        }
+    }
+
+    /// A batch tier: each replica owes `run_h` hours of work.
+    pub fn batch(name: impl Into<String>, replicas: u32, mem_gb: f64, run_h: f64) -> TierSpec {
+        TierSpec { run_h: Some(run_h), ..TierSpec::open(name, replicas, mem_gb) }
+    }
+
+    /// Set the deadline-slack SLO fraction (builder style).
+    pub fn slack(mut self, frac: f64) -> TierSpec {
+        self.slack = frac;
+        self
+    }
+
+    /// Attach a periodic burst window (builder style).
+    pub fn burst(mut self, every_h: f64, len_h: f64, replicas: u32) -> TierSpec {
+        self.burst = Some(BurstSpec { every_h, len_h, replicas });
+        self
+    }
+
+    pub fn is_batch(&self) -> bool {
+        self.run_h.is_some()
+    }
+
+    /// Peak target replica count (burst window included).
+    pub fn peak_replicas(&self) -> u32 {
+        self.burst.map(|b| b.replicas).unwrap_or(0).max(self.replicas)
+    }
+}
+
+/// A validated-on-use service fleet of tiers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceSpec {
+    pub name: String,
+    /// steady-state window simulated (hours past the scenario start)
+    pub horizon_h: f64,
+    /// per-instance packing capacity override (GB); `None` = the
+    /// largest instance type in the catalog
+    pub capacity_gb: Option<f64>,
+    /// re-pack surviving replicas onto a fresh FFD packing at every
+    /// fleet event (revocation, burst boundary); `false` = only the
+    /// revoked bin's replicas move (the DAG-style minimal response)
+    pub repack: bool,
+    pub tiers: Vec<TierSpec>,
+}
+
+impl ServiceSpec {
+    pub fn new(name: impl Into<String>) -> ServiceSpec {
+        ServiceSpec {
+            name: name.into(),
+            horizon_h: 72.0,
+            capacity_gb: None,
+            repack: true,
+            tiers: Vec::new(),
+        }
+    }
+
+    /// Append a tier (builder style).
+    pub fn tier(mut self, tier: TierSpec) -> ServiceSpec {
+        self.tiers.push(tier);
+        self
+    }
+
+    /// Set the simulated horizon (hours).
+    pub fn horizon(mut self, horizon_h: f64) -> ServiceSpec {
+        self.horizon_h = horizon_h;
+        self
+    }
+
+    /// Set the per-instance packing capacity (GB).
+    pub fn capacity(mut self, capacity_gb: f64) -> ServiceSpec {
+        self.capacity_gb = Some(capacity_gb);
+        self
+    }
+
+    /// Enable/disable mid-session survivor re-packing.
+    pub fn repack(mut self, on: bool) -> ServiceSpec {
+        self.repack = on;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tiers.is_empty()
+    }
+
+    pub fn tier_index(&self, name: &str) -> Option<usize> {
+        self.tiers.iter().position(|t| t.name == name)
+    }
+
+    /// Base-target replica count across tiers (bursts excluded).
+    pub fn total_replicas(&self) -> u32 {
+        self.tiers.iter().map(|t| t.replicas).sum()
+    }
+
+    pub fn max_mem_gb(&self) -> f64 {
+        self.tiers.iter().map(|t| t.mem_gb).fold(0.0, f64::max)
+    }
+
+    /// Every tier is a batch tier (the run can end before the horizon).
+    pub fn is_batch_only(&self) -> bool {
+        self.tiers.iter().all(TierSpec::is_batch)
+    }
+
+    /// Expected useful work over the horizon: batch tiers owe
+    /// `replicas × run_h`, open-ended tiers serve `replicas × horizon`.
+    /// The ForcedCount revocation rule spreads its thresholds over this
+    /// total, mirroring the single-job rule over the job length.
+    pub fn total_work_h(&self) -> f64 {
+        self.tiers
+            .iter()
+            .map(|t| t.replicas as f64 * t.run_h.unwrap_or(self.horizon_h))
+            .sum()
+    }
+
+    /// The packing capacity this spec gets against `catalog`: its
+    /// `capacity_gb` (or the catalog default) clamped to the largest
+    /// instance type.  Errors when a single replica exceeds the result;
+    /// the one capacity rule shared by `FleetRunner` and the
+    /// `siwoft service` CLI (same contract as
+    /// [`DagSpec::effective_capacity`](crate::dag::DagSpec::effective_capacity)).
+    pub fn effective_capacity(&self, catalog: &Catalog) -> Result<f64, String> {
+        let cat_cap = catalog.markets.iter().map(|m| m.instance.mem_gb).fold(0.0f64, f64::max);
+        let cap = self.capacity_gb.unwrap_or(cat_cap).min(cat_cap);
+        if self.max_mem_gb() > cap {
+            return Err(format!(
+                "service '{}': replica footprint {} GB exceeds the instance capacity {} GB \
+                 (largest type in a {}-market catalog)",
+                self.name,
+                self.max_mem_gb(),
+                cap,
+                catalog.len()
+            ));
+        }
+        Ok(cap)
+    }
+
+    /// Validate the spec: non-empty, positive horizon, unique tier
+    /// names, positive replica counts and footprints, sane SLO slack,
+    /// positive batch budgets, and burst windows that fit their period,
+    /// raise the target, and only decorate open-ended tiers.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tiers.is_empty() {
+            return Err(format!("service '{}' has no tiers", self.name));
+        }
+        if !self.horizon_h.is_finite() || self.horizon_h <= 0.0 {
+            return Err(format!("service '{}': horizon_h must be positive", self.name));
+        }
+        let mut seen = BTreeSet::new();
+        for t in &self.tiers {
+            if t.replicas == 0 {
+                return Err(format!("tier '{}': replicas must be >= 1", t.name));
+            }
+            if t.mem_gb <= 0.0 {
+                return Err(format!("tier '{}': mem_gb must be positive", t.name));
+            }
+            if !(0.0..=1.0).contains(&t.slack) {
+                return Err(format!("tier '{}': slack must be in [0, 1]", t.name));
+            }
+            if let Some(r) = t.run_h {
+                if r <= 0.0 {
+                    return Err(format!("tier '{}': run_h must be positive", t.name));
+                }
+            }
+            if !seen.insert(t.name.as_str()) {
+                return Err(format!("duplicate tier name '{}'", t.name));
+            }
+            if let Some(b) = t.burst {
+                if t.is_batch() {
+                    return Err(format!(
+                        "tier '{}': burst schedules apply to open-ended tiers only",
+                        t.name
+                    ));
+                }
+                if b.every_h <= 0.0 || b.len_h <= 0.0 || b.len_h >= b.every_h {
+                    return Err(format!(
+                        "tier '{}': burst window needs 0 < burst_len_h < burst_every_h",
+                        t.name
+                    ));
+                }
+                if b.replicas <= t.replicas {
+                    return Err(format!(
+                        "tier '{}': burst_replicas ({}) must exceed the base target ({})",
+                        t.name, b.replicas, t.replicas
+                    ));
+                }
+            }
+        }
+        if let Some(cap) = self.capacity_gb {
+            if self.max_mem_gb() > cap {
+                return Err(format!(
+                    "service '{}': replica footprint {} GB exceeds capacity_gb {}",
+                    self.name,
+                    self.max_mem_gb(),
+                    cap
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a spec from the `[service]` + `[tier.<name>]` TOML layout.
+    pub fn from_config(cfg: &Config) -> Result<ServiceSpec, String> {
+        let name = cfg.str_or("service.name", "service").to_string();
+        let horizon_h = cfg.f64_or("service.horizon_h", 72.0);
+        let capacity_gb = cfg.get("service.capacity_gb").and_then(|v| v.as_f64());
+        let repack = cfg.bool_or("service.repack", true);
+        // enumerate tier names from the key space (BTreeMap keys are
+        // sorted, so TOML tier order is sorted-by-name — deterministic)
+        let mut names: Vec<String> = Vec::new();
+        for key in cfg.keys() {
+            if let Some(rest) = key.strip_prefix("tier.") {
+                if let Some((tier, _field)) = rest.split_once('.') {
+                    if names.last().map(String::as_str) != Some(tier) {
+                        names.push(tier.to_string());
+                    }
+                }
+            }
+        }
+        names.dedup();
+        if names.is_empty() {
+            return Err(format!("service '{name}': no [tier.<name>] sections found"));
+        }
+        let mut tiers = Vec::with_capacity(names.len());
+        for t in &names {
+            let replicas = cfg.i64(&format!("tier.{t}.replicas")).map_err(|e| e.to_string())?;
+            if replicas < 1 {
+                return Err(format!("tier '{t}': replicas must be >= 1"));
+            }
+            let mem = cfg.f64(&format!("tier.{t}.mem_gb")).map_err(|e| e.to_string())?;
+            let slack = cfg.f64_or(&format!("tier.{t}.slack"), 0.05);
+            let run_h = match cfg.get(&format!("tier.{t}.run_h")) {
+                None => None,
+                Some(v) => {
+                    let r = v
+                        .as_f64()
+                        .ok_or_else(|| format!("tier '{t}': run_h must be a number"))?;
+                    if r <= 0.0 {
+                        // match the builder path's validate() instead of
+                        // silently demoting the tier to open-ended
+                        return Err(format!("tier '{t}': run_h must be positive"));
+                    }
+                    Some(r)
+                }
+            };
+            let burst = match cfg.get(&format!("tier.{t}.burst_every_h")) {
+                None => None,
+                Some(v) => {
+                    let every_h = v
+                        .as_f64()
+                        .ok_or_else(|| format!("tier '{t}': burst_every_h must be a number"))?;
+                    let len_h =
+                        cfg.f64(&format!("tier.{t}.burst_len_h")).map_err(|e| e.to_string())?;
+                    let replicas =
+                        cfg.i64(&format!("tier.{t}.burst_replicas")).map_err(|e| e.to_string())?;
+                    Some(BurstSpec { every_h, len_h, replicas: replicas.max(0) as u32 })
+                }
+            };
+            tiers.push(TierSpec {
+                name: t.clone(),
+                replicas: replicas as u32,
+                mem_gb: mem,
+                slack,
+                run_h,
+                burst,
+            });
+        }
+        let spec = ServiceSpec { name, horizon_h, capacity_gb, repack, tiers };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from TOML text.
+    pub fn parse(text: &str) -> Result<ServiceSpec, String> {
+        ServiceSpec::from_config(&Config::parse(text).map_err(|e| e.to_string())?)
+    }
+
+    /// Load a spec from a TOML file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ServiceSpec, String> {
+        let path = path.as_ref();
+        let cfg = Config::load(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        ServiceSpec::from_config(&cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn web() -> ServiceSpec {
+        ServiceSpec::new("web")
+            .horizon(48.0)
+            .capacity(64.0)
+            .tier(TierSpec::open("frontend", 4, 4.0).slack(0.1))
+            .tier(TierSpec::open("api", 2, 8.0).burst(24.0, 6.0, 4))
+            .tier(TierSpec::batch("reindex", 1, 16.0, 6.0))
+    }
+
+    #[test]
+    fn builder_and_validate() {
+        let s = web();
+        assert!(s.validate().is_ok());
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.total_replicas(), 7);
+        assert_eq!(s.max_mem_gb(), 16.0);
+        assert!(!s.is_batch_only());
+        // open tiers owe replicas × horizon; the batch tier its budget
+        assert!((s.total_work_h() - (4.0 * 48.0 + 2.0 * 48.0 + 6.0)).abs() < 1e-9);
+        assert_eq!(s.tier_index("api"), Some(1));
+        assert_eq!(s.tiers[1].peak_replicas(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(ServiceSpec::new("e").validate().unwrap_err().contains("no tiers"));
+        let zero = ServiceSpec::new("z").tier(TierSpec::open("t", 0, 4.0));
+        assert!(zero.validate().unwrap_err().contains("replicas"));
+        let neg = ServiceSpec::new("n").tier(TierSpec::open("t", 1, -1.0));
+        assert!(neg.validate().unwrap_err().contains("mem_gb"));
+        let slack = ServiceSpec::new("s").tier(TierSpec::open("t", 1, 4.0).slack(1.5));
+        assert!(slack.validate().unwrap_err().contains("slack"));
+        let dup = ServiceSpec::new("d")
+            .tier(TierSpec::open("t", 1, 4.0))
+            .tier(TierSpec::open("t", 1, 4.0));
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+        let hz = ServiceSpec::new("h").horizon(0.0).tier(TierSpec::open("t", 1, 4.0));
+        assert!(hz.validate().unwrap_err().contains("horizon"));
+        let batch_burst = ServiceSpec::new("b")
+            .tier(TierSpec::batch("t", 1, 4.0, 2.0).burst(24.0, 6.0, 3));
+        assert!(batch_burst.validate().unwrap_err().contains("open-ended"));
+        let wide = ServiceSpec::new("w").tier(TierSpec::open("t", 2, 4.0).burst(6.0, 6.0, 4));
+        assert!(wide.validate().unwrap_err().contains("burst_len_h"));
+        let flat = ServiceSpec::new("f").tier(TierSpec::open("t", 2, 4.0).burst(24.0, 6.0, 2));
+        assert!(flat.validate().unwrap_err().contains("exceed"));
+        let cap = ServiceSpec::new("c").capacity(8.0).tier(TierSpec::open("t", 1, 16.0));
+        assert!(cap.validate().unwrap_err().contains("capacity_gb"));
+    }
+
+    #[test]
+    fn effective_capacity_clamps_to_catalog() {
+        let cat = Catalog::full(); // largest type: 192 GB
+        assert_eq!(web().effective_capacity(&cat).unwrap(), 64.0);
+        let uncapped = ServiceSpec::new("u").tier(TierSpec::open("t", 1, 8.0));
+        assert_eq!(uncapped.effective_capacity(&cat).unwrap(), 192.0);
+        let fantasy = ServiceSpec::new("x").capacity(10_000.0).tier(TierSpec::open("t", 1, 8.0));
+        assert_eq!(fantasy.effective_capacity(&cat).unwrap(), 192.0);
+        let tiny = Catalog::with_limit(1); // m5.large only: 8 GB
+        assert!(web().effective_capacity(&tiny).unwrap_err().contains("exceeds"));
+    }
+
+    const TOML: &str = r#"
+[service]
+name = "web"
+horizon_h = 48.0
+capacity_gb = 64
+repack = false
+
+[tier.api]
+replicas = 2
+mem_gb = 8.0
+burst_every_h = 24.0
+burst_len_h = 6.0
+burst_replicas = 4
+
+[tier.frontend]
+replicas = 4
+mem_gb = 4.0
+slack = 0.1
+
+[tier.reindex]
+replicas = 1
+mem_gb = 16.0
+run_h = 6.0
+"#;
+
+    #[test]
+    fn parses_toml_layout() {
+        let s = ServiceSpec::parse(TOML).unwrap();
+        assert_eq!(s.name, "web");
+        assert_eq!(s.horizon_h, 48.0);
+        assert_eq!(s.capacity_gb, Some(64.0));
+        assert!(!s.repack);
+        assert_eq!(s.len(), 3);
+        // sorted-by-name order from the config key space
+        assert_eq!(s.tiers[0].name, "api");
+        assert_eq!(s.tiers[0].burst, Some(BurstSpec { every_h: 24.0, len_h: 6.0, replicas: 4 }));
+        assert_eq!(s.tiers[1].name, "frontend");
+        assert_eq!(s.tiers[1].slack, 0.1);
+        assert_eq!(s.tiers[2].run_h, Some(6.0));
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn toml_errors_are_friendly() {
+        assert!(ServiceSpec::parse("[service]\nname = \"x\"\n")
+            .unwrap_err()
+            .contains("no [tier"));
+        let missing = "[tier.a]\nmem_gb = 4.0\n";
+        assert!(ServiceSpec::parse(missing).unwrap_err().contains("replicas"));
+        let half_burst = "[tier.a]\nreplicas = 2\nmem_gb = 4.0\nburst_every_h = 24.0\n";
+        assert!(ServiceSpec::parse(half_burst).unwrap_err().contains("burst_len_h"));
+        // a non-positive run_h errors like the builder path instead of
+        // silently becoming an open-ended tier
+        let zero_run = "[tier.a]\nreplicas = 1\nmem_gb = 4.0\nrun_h = 0.0\n";
+        assert!(ServiceSpec::parse(zero_run).unwrap_err().contains("run_h must be positive"));
+        let neg_run = "[tier.a]\nreplicas = 1\nmem_gb = 4.0\nrun_h = -2.0\n";
+        assert!(ServiceSpec::parse(neg_run).unwrap_err().contains("run_h must be positive"));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let s = ServiceSpec::parse("[tier.a]\nreplicas = 1\nmem_gb = 4.0\n").unwrap();
+        assert_eq!(s.name, "service");
+        assert_eq!(s.horizon_h, 72.0);
+        assert!(s.repack);
+        assert_eq!(s.tiers[0].slack, 0.05);
+        assert_eq!(s.tiers[0].run_h, None);
+    }
+}

@@ -12,7 +12,13 @@
 //!                    ("buffer costs of billing cycles"),
 //!   * `idle`       — cost-only: a packed stage's share of instance time
 //!                    after it finished while co-packed stages kept the
-//!                    instance running (DAG multi-job packing, `dag::`).
+//!                    instance running (DAG multi-job packing, `dag::`),
+//!   * `repack`     — state-transfer prologue when a fleet re-pack moves
+//!                    a surviving service replica onto a fresh bin
+//!                    (`service::`, DESIGN.md §10),
+//!   * `slo`        — time-only: wall-clock a service tier spent below
+//!                    its target replica count (the deadline-slack SLO
+//!                    integral; never costed — downtime bills nothing).
 
 use std::fmt;
 
@@ -26,6 +32,8 @@ pub enum Category {
     Migration,
     Buffer,
     Idle,
+    Repack,
+    Slo,
 }
 
 pub const CATEGORIES: &[Category] = &[
@@ -37,6 +45,8 @@ pub const CATEGORIES: &[Category] = &[
     Category::Migration,
     Category::Buffer,
     Category::Idle,
+    Category::Repack,
+    Category::Slo,
 ];
 
 impl Category {
@@ -50,6 +60,8 @@ impl Category {
             Category::Migration => "migration",
             Category::Buffer => "buffer",
             Category::Idle => "idle",
+            Category::Repack => "repack",
+            Category::Slo => "slo",
         }
     }
     fn index(self) -> usize {
@@ -66,7 +78,7 @@ impl fmt::Display for Category {
 /// A per-category accumulator (one for time, one for cost).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Breakdown {
-    vals: [f64; 8],
+    vals: [f64; 10],
 }
 
 impl Breakdown {

@@ -199,14 +199,99 @@ fn shipped_configs_parse() {
     let mut n = 0;
     for entry in std::fs::read_dir(configs).unwrap() {
         let p = entry.unwrap().path();
-        if p.extension().map(|e| e == "toml").unwrap_or(false) {
+        if !p.extension().map(|e| e == "toml").unwrap_or(false) {
+            continue;
+        }
+        let name = p.file_name().unwrap().to_string_lossy().to_string();
+        if name.starts_with("dag_") {
+            // workload spec files, consumed via `siwoft dag --spec`
+            siwoft::dag::DagSpec::load(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        } else if name.starts_with("service_") {
+            // workload spec files, consumed via `siwoft service --spec`
+            siwoft::service::ServiceSpec::load(&p)
+                .unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        } else {
             let c = siwoft::util::config::Config::load(&p)
                 .unwrap_or_else(|e| panic!("{}: {e}", p.display()));
             assert!(c.str("experiment.kind").is_ok(), "{} missing kind", p.display());
-            n += 1;
         }
+        n += 1;
     }
     assert!(n >= 5, "expected ≥5 shipped configs, found {n}");
+}
+
+#[test]
+fn service_subcommand_runs_every_arm_and_reports_slo_and_repack() {
+    // the ISSUE 5 acceptance command, at CI scale: every policy/FT
+    // pairing in --arms, per-tier SLO-violation time and re-pack cost
+    let dir = tmpdir("service");
+    let (out, err, ok) = run(&[
+        "service",
+        "--spec",
+        "configs/service_web.toml",
+        "--arms",
+        "p:none,ft:replication",
+        "--rules",
+        "trace,rate:6",
+        "--markets",
+        "48",
+        "--months",
+        "1",
+        "--seeds",
+        "2",
+        "--format",
+        "csv",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "service subcommand failed: {err}");
+    // both arms ran, with both rules
+    assert!(out.contains("p-siwoft + none"), "{out}");
+    assert!(out.contains("ft-spot + repl:2"), "{out}");
+    assert!(out.contains("rule trace") && out.contains("rule rate:6"), "{out}");
+    // per-tier rows + fleet TOTAL
+    assert!(out.contains("a-frontend") && out.contains("c-reindex"), "{out}");
+    assert!(out.contains("TOTAL"), "{out}");
+    let csv = std::fs::read_to_string(dir.join("service.csv")).expect("service.csv written");
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("slo_violation_h"), "{header}");
+    assert!(header.contains("repack_cost_usd"), "{header}");
+    assert!(csv.lines().count() > 4 * 4, "per-tier + TOTAL rows for every arm×rule");
+}
+
+#[test]
+fn analyze_history_coverage_report() {
+    let dir = tmpdir("coverage");
+    let hist = dir.join("history.json");
+    std::fs::write(
+        &hist,
+        r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:10:00.000Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T09:00:00.000Z"},
+            {"AvailabilityZone": "us-east-1b", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T02:00:00.000Z"}
+        ]}"#,
+    )
+    .unwrap();
+    let (out, err, ok) = run(&[
+        "analyze",
+        "--history",
+        hist.to_str().unwrap(),
+        "--coverage",
+        "--native",
+    ]);
+    assert!(ok, "analyze --coverage failed: {err}");
+    assert!(out.contains("per-market coverage"), "missing coverage table: {out}");
+    assert!(out.contains("2020-03-01T00:00Z"), "first timestamp missing: {out}");
+    assert!(out.contains("2020-03-01T09:00Z"), "last timestamp missing: {out}");
+    // the 0→9 observation pair leaves a 9 h largest gap
+    assert!(out.contains("largest_gap"), "{out}");
+    // without the flag the table is absent
+    let (out2, _, ok2) = run(&["analyze", "--history", hist.to_str().unwrap(), "--native"]);
+    assert!(ok2);
+    assert!(!out2.contains("per-market coverage"));
 }
 
 #[test]
@@ -257,6 +342,71 @@ fn serve_load_small_n_beats_the_poll_floor() {
 
     let mut s = TcpStream::connect(addr).unwrap();
     writeln!(s, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited with {status:?}");
+}
+
+#[test]
+fn serve_max_conns_rejects_excess_connections() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::process::Stdio;
+
+    let mut child = Command::new(bin())
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--markets",
+            "16",
+            "--months",
+            "0.5",
+            "--max-conns",
+            "2",
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .env("SIWOFT_LOG", "error")
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn siwoft serve");
+    let mut ready = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut ready).unwrap();
+    let addr: SocketAddr = ready
+        .split("listening on ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in banner: {ready:?}"))
+        .parse()
+        .unwrap();
+
+    // fill both slots with held connections (a status round-trip per
+    // connection guarantees the server has registered each thread)
+    let mut held: Vec<(TcpStream, BufReader<TcpStream>)> = Vec::new();
+    for _ in 0..2 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, r#"{{"cmd":"status"}}"#).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains(r#""ok": true"#) || reply.contains(r#""ok":true"#), "{reply}");
+        held.push((s, reader));
+    }
+
+    // the third connection must be rejected at accept time
+    let over = TcpStream::connect(addr).unwrap();
+    let mut rejection = String::new();
+    BufReader::new(over).read_line(&mut rejection).unwrap();
+    assert!(
+        rejection.contains("capacity") && !rejection.contains(r#""ok": true"#),
+        "expected an at-capacity rejection, got: {rejection:?}"
+    );
+
+    // held connections keep working and can shut the server down
+    let (s, reader) = &mut held[0];
+    writeln!(s, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    let mut bye = String::new();
+    reader.read_line(&mut bye).unwrap();
+    drop(held);
     let status = child.wait().unwrap();
     assert!(status.success(), "serve exited with {status:?}");
 }

@@ -354,6 +354,146 @@ fn prop_dag_sweep_worker_count_equivalence() {
     }
 }
 
+/// A small random service fleet: 1–2 tiers mixing open-ended and batch,
+/// sized so every footprint fits the sampled capacity.
+fn random_service(r: &mut Rng) -> ServiceSpec {
+    let cap = [32.0, 64.0][r.below(2)];
+    let horizon = 8.0 + r.f64() * 16.0;
+    let mut spec = ServiceSpec::new("prop-svc").horizon(horizon).capacity(cap);
+    let tiers = 1 + r.below(2);
+    for ti in 0..tiers {
+        let mem = [4.0, 8.0, 16.0][r.below(3)];
+        let replicas = 1 + r.below(3) as u32;
+        let tier = if r.below(3) == 0 {
+            TierSpec::batch(format!("t{ti}"), replicas, mem, 1.0 + r.f64() * 4.0)
+        } else {
+            TierSpec::open(format!("t{ti}"), replicas, mem)
+        };
+        spec = spec.tier(tier.slack(0.5));
+    }
+    spec
+}
+
+#[test]
+fn prop_fleet_never_exceeds_bin_capacity_after_repack() {
+    let mut world = World::generate(48, 1.0, 808);
+    let start = world.split_train(0.6);
+    check(
+        25,
+        10,
+        |r: &mut Rng| {
+            let rule = match r.below(2) {
+                0 => RevocationRule::ForcedRate { per_day: r.range(4.0, 24.0) },
+                _ => RevocationRule::ForcedCount { total: 1 + r.below(3) as u32 },
+            };
+            (random_service(r), rule, r.next_u64())
+        },
+        |(spec, rule, seed)| {
+            // repack defaults on: every revocation drains and re-packs
+            // the surviving fleet, so the packing invariant is
+            // re-established mid-session many times per run
+            let res = Scenario::on(&world)
+                .policy(PolicyKind::FtSpot)
+                .rule(*rule)
+                .start_t(start)
+                .seed(*seed)
+                .service(spec.clone())
+                .run();
+            if res.peak_bin_used_gb > res.capacity_gb + 1e-9 {
+                return Err(format!(
+                    "bin over capacity after re-pack: {} > {}",
+                    res.peak_bin_used_gb, res.capacity_gb
+                ));
+            }
+            if res.revocations > 0 && res.repacks != res.revocations {
+                return Err(format!(
+                    "{} revocations but {} fleet re-packs",
+                    res.revocations, res.repacks
+                ));
+            }
+            if let RevocationRule::ForcedCount { total } = rule {
+                if res.revocations > *total {
+                    return Err(format!(
+                        "count rule overfired: {} > {total}",
+                        res.revocations
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replicated_replicas_never_copacked() {
+    let mut world = World::generate(48, 1.0, 909);
+    let start = world.split_train(0.6);
+    check(
+        20,
+        11,
+        |r: &mut Rng| {
+            let k = 2 + r.below(2) as u32;
+            let rule = match r.below(2) {
+                0 => RevocationRule::Trace,
+                _ => RevocationRule::ForcedRate { per_day: r.range(2.0, 12.0) },
+            };
+            (random_service(r), k, rule, r.next_u64())
+        },
+        |(spec, k, rule, seed)| {
+            let res = Scenario::on(&world)
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::Replication { k: *k })
+                .rule(*rule)
+                .start_t(start)
+                .seed(*seed)
+                .service(spec.clone())
+                .run();
+            if res.copack_conflicts != 0 {
+                return Err(format!(
+                    "{} replicated copies co-packed on one bin (k={k})",
+                    res.copack_conflicts
+                ));
+            }
+            // k anti-affine copies of any replica need at least k bins
+            if res.bins < *k {
+                return Err(format!("{} bins cannot hold {k} spread copies", res.bins));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_service_sweep_worker_count_equivalence() {
+    let mut world = World::generate(48, 1.0, 1010);
+    let start = world.split_train(0.6);
+    let mut r = Rng::new(43);
+    let specs = vec![random_service(&mut r), random_service(&mut r)];
+    let run = |workers: usize| {
+        siwoft::scenario::Sweep::on(&world)
+            .services(specs.clone())
+            .policies([PolicyKind::default(), PolicyKind::FtSpot])
+            .fts([FtKind::None, FtKind::Replication { k: 2 }])
+            .rules([RevocationRule::Trace, RevocationRule::ForcedCount { total: 1 }])
+            .seeds(2)
+            .start_t(start)
+            .workers(workers)
+            .run_services()
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * 2 * 2 * 2);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.service, b.service);
+        assert_eq!(a.policy, b.policy);
+        assert_eq!(a.ft, b.ft);
+        assert_eq!(a.rule, b.rule);
+        assert_eq!(a.agg, b.agg, "aggregate differs for {}/{:?}", a.service, a.rule);
+        assert_eq!(a.runs, b.runs, "per-seed runs differ for {}/{:?}", a.service, a.rule);
+    }
+}
+
 #[test]
 fn prop_tracegen_deterministic_and_positive() {
     check(20, 7, |r: &mut Rng| r.next_u64(), |&seed| {

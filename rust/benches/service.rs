@@ -49,18 +49,39 @@ fn main() {
         }
     }
 
-    // re-pack on vs. off at a hot revocation rate: the consolidation
-    // overhead the ROADMAP asked to measure
-    for (label, repack) in [("re-pack on", true), ("re-pack off", false)] {
-        let spec = fleet(8).repack(repack);
+    // re-pack modes at a hot revocation rate: incremental warm-join
+    // (default) vs the full drain-and-repack oracle vs no consolidation
+    // — the overhead spread the ROADMAP asked to measure
+    for mode in [RepackMode::Off, RepackMode::Incremental, RepackMode::Full] {
+        let spec = fleet(8).repack_mode(mode);
         let scen = Scenario::on(&world)
             .start_t(start)
             .rule(RevocationRule::ForcedRate { per_day: 24.0 })
             .service(spec);
         let mut seed = 0u64;
-        suite.push(bench.run(&format!("fleet 8+4 @ rate:24 ({label})"), || {
+        suite.push(bench.run(&format!("fleet 8+4 @ rate:24 (repack {})", mode.as_str()), || {
             seed = seed.wrapping_add(1);
             scen.run_seeded(seed).repacks
+        }));
+    }
+
+    // per-worker scratch reuse: the sweep hot path after the arena
+    // refactor — reusing one Scratch across runs vs allocating fresh
+    {
+        let scen = Scenario::on(&world)
+            .start_t(start)
+            .rule(RevocationRule::ForcedRate { per_day: 12.0 })
+            .service(fleet(8));
+        let mut scratch = Scratch::new();
+        let mut seed = 0u64;
+        suite.push(bench.run("fleet 8+4 @ rate:12 (reused scratch)", || {
+            seed = seed.wrapping_add(1);
+            scen.run_seeded_in(&mut scratch, seed).bins
+        }));
+        let mut seed = 0u64;
+        suite.push(bench.run("fleet 8+4 @ rate:12 (fresh scratch)", || {
+            seed = seed.wrapping_add(1);
+            scen.run_seeded_in(&mut Scratch::new(), seed).bins
         }));
     }
 

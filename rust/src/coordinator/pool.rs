@@ -216,6 +216,33 @@ impl Pool {
         R: Send,
         F: Fn(usize, T) -> R + Sync,
     {
+        self.map_with(items, chunk_hint, || (), |(), i, t| f(i, t))
+    }
+
+    /// [`Pool::map_chunked`] with per-worker scratch state: every
+    /// worker constructs one `S` via `mk_scratch` when it spawns and
+    /// threads it through all the items it claims, so a sweep arm can
+    /// reuse segment arenas and sweep buffers instead of re-allocating
+    /// them per (point × seed).  The scheduling protocol is exactly
+    /// `map_chunked`'s — same injector, same deques, same steal order —
+    /// and the scratch must never leak into results: `f` is required to
+    /// produce the same `R` for any scratch state (pinned by
+    /// `tests/engine_equivalence.rs`).  On the sequential path
+    /// (`workers <= 1` or a single item) one scratch serves every item
+    /// in input order.
+    pub fn map_with<T, R, S, M, F>(
+        &self,
+        items: Vec<T>,
+        chunk_hint: usize,
+        mk_scratch: M,
+        f: F,
+    ) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        M: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, T) -> R + Sync,
+    {
         let n = items.len();
         if n == 0 {
             return Vec::new();
@@ -224,7 +251,8 @@ impl Pool {
         if threads <= 1 {
             // Bit-identical to a plain sequential map (pinned by the
             // scheduler property suite): no threads, no reordering.
-            return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+            let mut scratch = mk_scratch();
+            return items.into_iter().enumerate().map(|(i, t)| f(&mut scratch, i, t)).collect();
         }
         assert!(n <= u32::MAX as usize, "Pool::map is limited to u32::MAX items");
         let chunk = if chunk_hint == 0 {
@@ -242,36 +270,42 @@ impl Pool {
             for me in 0..threads {
                 let tx = tx.clone();
                 let (slots, injector, deques, f) = (&slots, &injector, &deques, &f);
-                scope.spawn(move || loop {
-                    // 1. local LIFO pop
-                    if let Some(idx) = deques[me].pop() {
-                        // SAFETY: the pop gave us the exclusive claim.
-                        let item = unsafe { slots.take(idx) };
-                        if tx.send((idx, f(idx, item))).is_err() {
+                let mk_scratch = &mk_scratch;
+                scope.spawn(move || {
+                    let mut scratch = mk_scratch();
+                    loop {
+                        // 1. local LIFO pop
+                        if let Some(idx) = deques[me].pop() {
+                            // SAFETY: the pop gave us the exclusive claim.
+                            let item = unsafe { slots.take(idx) };
+                            if tx.send((idx, f(&mut scratch, idx, item))).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                        // 2. refill from the injector
+                        if let Some((lo, hi)) = injector.claim() {
+                            deques[me].install(lo, hi);
+                            continue;
+                        }
+                        // 3. steal the front half of someone else's range
+                        let stolen =
+                            (1..threads).find_map(|off| deques[(me + off) % threads].steal());
+                        if let Some((lo, hi)) = stolen {
+                            deques[me].install(lo, hi);
+                            continue;
+                        }
+                        // 4. injector drained and every visible deque
+                        //    empty → done.  (A range stolen-but-not-yet-
+                        //    installed is invisible here, but its thief
+                        //    still holds it and will run it — exiting
+                        //    early only trims the tail of the schedule,
+                        //    never loses items.)
+                        if deques.iter().all(Deque::is_empty) {
                             break;
                         }
-                        continue;
+                        std::thread::yield_now();
                     }
-                    // 2. refill from the injector
-                    if let Some((lo, hi)) = injector.claim() {
-                        deques[me].install(lo, hi);
-                        continue;
-                    }
-                    // 3. steal the front half of someone else's range
-                    let stolen = (1..threads).find_map(|off| deques[(me + off) % threads].steal());
-                    if let Some((lo, hi)) = stolen {
-                        deques[me].install(lo, hi);
-                        continue;
-                    }
-                    // 4. injector drained and every visible deque empty
-                    //    → done.  (A range stolen-but-not-yet-installed
-                    //    is invisible here, but its thief still holds it
-                    //    and will run it — exiting early only trims the
-                    //    tail of the schedule, never loses items.)
-                    if deques.iter().all(Deque::is_empty) {
-                        break;
-                    }
-                    std::thread::yield_now();
                 });
             }
             drop(tx);
@@ -349,6 +383,52 @@ mod tests {
         let pool = Pool::new(16);
         let out = pool.map_chunked(vec![10u64, 20, 30], 1, |i, x| x + i as u64);
         assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn map_with_matches_map_chunked_for_any_worker_count() {
+        let expected: Vec<u64> = (0..257u64).map(|x| x * 3 + 1).collect();
+        for workers in [1, 2, 4, 16] {
+            let pool = Pool::new(workers);
+            let out = pool.map_with(
+                (0..257u64).collect(),
+                1,
+                Vec::<u64>::new,
+                |scratch, _, x| {
+                    // scratch is reused across items and must not leak
+                    scratch.push(x);
+                    x * 3 + 1
+                },
+            );
+            assert_eq!(out, expected, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn map_with_constructs_one_scratch_per_worker() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let built = AtomicUsize::new(0);
+        let pool = Pool::new(4);
+        let out = pool.map_with(
+            (0..64u64).collect(),
+            1,
+            || built.fetch_add(1, Ordering::Relaxed),
+            |_, _, x| x,
+        );
+        assert_eq!(out.len(), 64);
+        let n = built.load(Ordering::Relaxed);
+        assert!(n >= 1 && n <= 4, "scratch built {n} times for 4 workers");
+    }
+
+    #[test]
+    fn map_with_sequential_path_reuses_one_scratch() {
+        let pool = Pool::new(1);
+        let out = pool.map_with((0..5u64).collect(), 1, || 0u64, |acc, _, x| {
+            *acc += x;
+            *acc
+        });
+        // one scratch threaded in input order → running prefix sums
+        assert_eq!(out, vec![0, 1, 3, 6, 10]);
     }
 
     #[test]

@@ -31,6 +31,14 @@
 //! and the engine's FIFO tie-break make runs a pure function of
 //! (world, spec, policy, ft, rule, seed) — `tests/properties.rs` pins
 //! worker-count independence for DAG sweeps on top of this.
+//!
+//! Hot path: session timelines live in a struct-of-arrays
+//! [`SegArena`] (a stage holds a [`SegRange`], not an owning vector),
+//! and every run borrows its working memory from a caller-owned
+//! [`Scratch`] so sweep workers stop re-allocating per (point × seed)
+//! — see `sim::arena` and DESIGN.md §11.  The arena replay primitives
+//! are bit-identical ports of the loops that used to live here
+//! (pinned by `tests/engine_equivalence.rs`).
 
 use std::collections::BTreeMap;
 
@@ -43,6 +51,7 @@ use crate::market::session_cost;
 use crate::policy::{Ctx, Policy};
 use crate::scenario::{FtKind, Scenario};
 use crate::sim::accounting::{Breakdown, Category, Ledger};
+use crate::sim::arena::{record_spans, useful_done_rel, Scratch, SegArena, SegRange};
 use crate::sim::engine::{Engine, Event};
 use crate::sim::{RevocationRule, RunConfig, World};
 use crate::util::rng::Rng;
@@ -199,6 +208,13 @@ impl<'w> DagScenario<'w> {
 
     /// Run once with an explicit seed.
     pub fn run_seeded(&self, seed: u64) -> DagResult {
+        self.run_seeded_in(&mut Scratch::new(), seed)
+    }
+
+    /// [`DagScenario::run_seeded`] with caller-owned working memory
+    /// (segment arena + sweep buffers); identical results for any
+    /// scratch state.
+    pub fn run_seeded_in(&self, scratch: &mut Scratch, seed: u64) -> DagResult {
         let policy = self.scen.build_policy();
         let mut runner = DagRunner::with_policy(
             self.scen.world(),
@@ -207,13 +223,15 @@ impl<'w> DagScenario<'w> {
             self.scen.ft_kind(),
             self.scen.run_config(),
         );
-        runner.run(seed)
+        runner.run_in(scratch, seed)
     }
 
     /// `n_seeds` replicates (seeds `seed .. seed + n`), serially.
     pub fn replicate(&self, n_seeds: u64) -> DagAggregate {
         let base = self.scen.seed_value();
-        let runs: Vec<DagResult> = (0..n_seeds).map(|i| self.run_seeded(base + i)).collect();
+        let mut scratch = Scratch::new();
+        let runs: Vec<DagResult> =
+            (0..n_seeds).map(|i| self.run_seeded_in(&mut scratch, base + i)).collect();
         DagAggregate::from_runs(&runs)
     }
 
@@ -221,8 +239,12 @@ impl<'w> DagScenario<'w> {
     /// per-seed steal granularity; identical for any worker count.
     pub fn replicate_on(&self, pool: &Pool, n_seeds: u64) -> DagAggregate {
         let base = self.scen.seed_value();
-        let runs: Vec<DagResult> =
-            pool.map_chunked((0..n_seeds).collect(), 1, |_, i| self.run_seeded(base + i));
+        let runs: Vec<DagResult> = pool.map_with(
+            (0..n_seeds).collect(),
+            1,
+            Scratch::new,
+            |scratch, _, i| self.run_seeded_in(scratch, base + i),
+        );
         DagAggregate::from_runs(&runs)
     }
 }
@@ -264,7 +286,17 @@ impl<'a> DagRunner<'a> {
     /// Execute the DAG once; a pure function of the constructor inputs
     /// plus `seed`.
     pub fn run(&mut self, seed: u64) -> DagResult {
+        self.run_in(&mut Scratch::new(), seed)
+    }
+
+    /// [`DagRunner::run`] with caller-owned working memory: the
+    /// segment arena, Count-threshold buffer, and frontier-sweep
+    /// buffers are borrowed from `scratch` (cleared on entry, capacity
+    /// kept for the next run).  Identical results for any scratch
+    /// state.
+    pub fn run_in(&mut self, scratch: &mut Scratch, seed: u64) -> DagResult {
         self.spec.validate().expect("invalid DAG spec");
+        scratch.arena.clear();
         let n = self.spec.len();
         let jobs: Vec<Job> = self
             .spec
@@ -290,13 +322,18 @@ impl<'a> DagRunner<'a> {
             RevocationRule::ForcedCount { total } => {
                 // sorted-uniform fractions of the DAG's total work,
                 // capped below 0.98 so the final stretch completes
-                let mut fr: Vec<f64> = (0..total).map(|_| rng.f64() * 0.98).collect();
+                // (built into the scratch buffer: same draws, same
+                // sort, same values — the scratch only donates
+                // capacity)
+                let mut fr = std::mem::take(&mut scratch.thresholds);
+                fr.clear();
+                fr.extend((0..total).map(|_| rng.f64() * 0.98));
                 fr.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 let total_work = self.spec.total_work_h();
-                DagSchedule::Count {
-                    thresholds: fr.iter().map(|f| f * total_work).collect(),
-                    idx: 0,
+                for f in fr.iter_mut() {
+                    *f *= total_work;
                 }
+                DagSchedule::Count { thresholds: fr, idx: 0 }
             }
         };
 
@@ -306,6 +343,7 @@ impl<'a> DagRunner<'a> {
             world: self.world,
             policy: self.policy.as_mut(),
             cfg: &self.cfg,
+            scratch: &mut *scratch,
             packer: Packer::new(capacity),
             rng,
             schedule,
@@ -373,7 +411,7 @@ impl<'a> DagRunner<'a> {
                 idle_h: sim.idle_h[i],
             })
             .collect();
-        DagResult {
+        let result = DagResult {
             dag: self.spec.name.clone(),
             policy: policy_name,
             ft: self.ft.label(),
@@ -382,7 +420,14 @@ impl<'a> DagRunner<'a> {
             revocations: sim.bin_revocations,
             bins: sim.bins_launched,
             completed,
+        };
+        // hand the Count-threshold buffer back to the scratch for the
+        // next run (destructure first: `sim` holds the scratch borrow)
+        let Sim { schedule, .. } = sim;
+        if let DagSchedule::Count { thresholds, .. } = schedule {
+            scratch.thresholds = thresholds;
         }
+        result
     }
 }
 
@@ -425,38 +470,29 @@ enum Carry {
     Migrate(f64),
 }
 
-/// One activity span of a stage's session timeline.
-#[derive(Clone, Copy, Debug)]
-struct Segment {
-    cat: Category,
-    dur: f64,
-    /// work beyond the stage's historical frontier (advances the DAG's
-    /// global new-work frontier — the Count rule's clock)
-    advances: bool,
-    /// a completed checkpoint: volatile progress becomes durable
-    commits: bool,
-}
-
 /// A stage's planned timeline within one session: prologue (startup /
 /// recovery or migration), then work chunks interleaved with
-/// checkpoints, exactly mirroring `sim::run`'s inner loop.
+/// checkpoints, exactly mirroring `sim::run`'s inner loop.  Segments
+/// land in the run's [`SegArena`]; the returned [`SegRange`] is the
+/// stage's handle for replay via [`record_spans`] /
+/// [`useful_done_rel`].
 fn build_segments(
+    arena: &mut SegArena,
     job: &Job,
     ft: &dyn FtMechanism,
     container: &crate::job::ContainerModel,
     p0: f64,
     frontier: f64,
     carry: Carry,
-) -> Vec<Segment> {
-    let mut segs = Vec::new();
-    let seg = |cat, dur| Segment { cat, dur, advances: false, commits: false };
+) -> SegRange {
+    let lo = arena.start();
     match carry {
-        Carry::Migrate(m) => segs.push(seg(Category::Migration, m)),
-        Carry::Fresh => segs.push(seg(Category::Startup, container.startup_time())),
+        Carry::Migrate(m) => arena.push(Category::Migration, m, false, false),
+        Carry::Fresh => arena.push(Category::Startup, container.startup_time(), false, false),
         Carry::Recover(r) => {
-            segs.push(seg(Category::Startup, container.startup_time()));
+            arena.push(Category::Startup, container.startup_time(), false, false);
             if r > 0.0 {
-                segs.push(seg(Category::Recovery, r));
+                arena.push(Category::Recovery, r, false, false);
             }
         }
     }
@@ -470,81 +506,22 @@ fn build_segments(
         let chunk = (len - pos).min(until_ckpt);
         let reexec = (frontier - pos).clamp(0.0, chunk);
         if reexec > 0.0 {
-            segs.push(seg(Category::Reexec, reexec));
+            arena.push(Category::Reexec, reexec, false, false);
         }
         let useful = chunk - reexec;
         if useful > 0.0 {
-            segs.push(Segment {
-                cat: Category::Useful,
-                dur: useful,
-                advances: true,
-                commits: false,
-            });
+            arena.push(Category::Useful, useful, true, false);
         }
         pos += chunk;
         since_ckpt += chunk;
         if let Some(i) = interval {
             if since_ckpt >= i - 1e-9 && pos < len - 1e-9 {
-                segs.push(Segment {
-                    cat: Category::Checkpoint,
-                    dur: ckpt_dur,
-                    advances: false,
-                    commits: true,
-                });
+                arena.push(Category::Checkpoint, ckpt_dur, false, true);
                 since_ckpt = 0.0;
             }
         }
     }
-    segs
-}
-
-/// Record spans up to offset `upto` into `ledger` at the stage's price
-/// share; returns `(work, useful, committed)` — executed work hours,
-/// the frontier-advancing part, and the checkpoint-committed part.
-fn record_spans(
-    ledger: &mut Ledger,
-    segs: &[Segment],
-    upto: f64,
-    price_share: f64,
-) -> (f64, f64, f64) {
-    let mut off = 0.0f64;
-    let (mut work, mut useful, mut committed, mut pending) = (0.0, 0.0, 0.0, 0.0);
-    for s in segs {
-        if off >= upto - 1e-12 {
-            break;
-        }
-        let run = s.dur.min(upto - off);
-        ledger.span(s.cat, run, price_share);
-        if matches!(s.cat, Category::Reexec | Category::Useful) {
-            work += run;
-            pending += run;
-            if s.advances {
-                useful += run;
-            }
-        }
-        if s.commits && run >= s.dur - 1e-12 {
-            committed += pending;
-            pending = 0.0;
-        }
-        off += s.dur;
-    }
-    (work, useful, committed)
-}
-
-/// Frontier-advancing work a segment timeline has executed by offset `d`.
-fn useful_done_at(segs: &[Segment], d: f64) -> f64 {
-    let mut off = 0.0f64;
-    let mut u = 0.0f64;
-    for s in segs {
-        if off >= d - 1e-12 {
-            break;
-        }
-        if s.advances {
-            u += s.dur.min(d - off);
-        }
-        off += s.dur;
-    }
-    u
+    arena.finish(lo)
 }
 
 #[derive(Debug)]
@@ -558,7 +535,8 @@ struct BinStage {
     idx: usize,
     /// memory share of the instance price this stage pays
     share: f64,
-    segments: Vec<Segment>,
+    /// this session's timeline, as a range into the run's [`SegArena`]
+    segments: SegRange,
     /// completion offset within the session
     d_complete: f64,
     done: bool,
@@ -579,6 +557,9 @@ struct Sim<'a> {
     world: &'a World,
     policy: &'a mut dyn Policy,
     cfg: &'a RunConfig,
+    /// caller-owned working memory: the segment arena plus the
+    /// frontier-sweep buffers reused by [`Sim::resched_count`]
+    scratch: &'a mut Scratch,
     packer: Packer,
     rng: Rng,
     schedule: DagSchedule,
@@ -670,6 +651,7 @@ impl Sim<'_> {
             for &i in &bin.stages {
                 let p0 = self.progress[i].total_h();
                 let segments = build_segments(
+                    &mut self.scratch.arena,
                     &self.jobs[i],
                     self.fts[i].as_ref(),
                     container,
@@ -677,7 +659,7 @@ impl Sim<'_> {
                     self.frontier[i],
                     self.carry[i],
                 );
-                let d: f64 = segments.iter().map(|s| s.dur).sum();
+                let d = self.scratch.arena.total_dur(segments);
                 end_d = end_d.max(d);
                 self.state[i] = StageState::Running;
                 self.stage_gen[i] += 1;
@@ -727,7 +709,13 @@ impl Sim<'_> {
             let price = bin.price;
             let (work, useful, committed) = {
                 let bs = &bin.stages[pos];
-                record_spans(&mut self.ledgers[i], &bs.segments, bs.d_complete, price * bs.share)
+                record_spans(
+                    &mut self.ledgers[i],
+                    &self.scratch.arena,
+                    bs.segments,
+                    bs.d_complete,
+                    price * bs.share,
+                )
             };
             self.progress[i].volatile_h += work;
             self.progress[i].durable_h += committed;
@@ -789,8 +777,13 @@ impl Sim<'_> {
                 }
                 continue;
             }
-            let (work, useful, committed) =
-                record_spans(&mut self.ledgers[i], &bs.segments, d, bin.price * bs.share);
+            let (work, useful, committed) = record_spans(
+                &mut self.ledgers[i],
+                &self.scratch.arena,
+                bs.segments,
+                d,
+                bin.price * bs.share,
+            );
             self.progress[i].volatile_h += work;
             self.progress[i].durable_h += committed;
             self.progress[i].volatile_h -= committed;
@@ -850,11 +843,12 @@ impl Sim<'_> {
             },
             _ => return,
         };
+        let Scratch { arena, spans, bounds, .. } = &mut *self.scratch;
         let mut w_now = self.w_closed;
         for b in self.active.values() {
             let d = now - b.t0;
             for bs in b.stages.iter().filter(|bs| !bs.done) {
-                w_now += useful_done_at(&bs.segments, d);
+                w_now += useful_done_rel(arena, bs.segments, d);
             }
         }
         let mut need = thr - w_now;
@@ -865,28 +859,31 @@ impl Sim<'_> {
         } else {
             // sweep the future frontier-advancing segments of all
             // active bins; between boundaries the frontier rate is the
-            // number of concurrently-advancing segments
-            let mut segs: Vec<(f64, f64)> = Vec::new();
+            // number of concurrently-advancing segments (the span and
+            // bound buffers live in the scratch: cleared per call,
+            // capacity kept across calls and runs)
+            spans.clear();
             for b in self.active.values() {
                 for bs in b.stages.iter().filter(|bs| !bs.done) {
                     let mut off = b.t0;
-                    for s in &bs.segments {
+                    for s in arena.iter(bs.segments) {
                         let (s0, s1) = (off, off + s.dur);
                         off = s1;
                         if s.advances && s1 > now + 1e-12 {
-                            segs.push((s0.max(now), s1));
+                            spans.push((s0.max(now), s1));
                         }
                     }
                 }
             }
-            let mut bounds: Vec<f64> = segs.iter().flat_map(|&(a, b)| [a, b]).collect();
+            bounds.clear();
+            bounds.extend(spans.iter().flat_map(|&(a, b)| [a, b]));
             bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
             bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
             let mut found = None;
             for w in bounds.windows(2) {
                 let (lo, hi) = (w[0], w[1]);
                 let rate =
-                    segs.iter().filter(|&&(a, b)| a <= lo + 1e-12 && b >= hi - 1e-12).count();
+                    spans.iter().filter(|&&(a, b)| a <= lo + 1e-12 && b >= hi - 1e-12).count();
                 if rate == 0 {
                     continue;
                 }
@@ -915,6 +912,7 @@ impl Sim<'_> {
         }
         // victim: prefer a spot bin actively advancing the frontier at
         // `t`; fall back to the lowest-id active spot bin
+        let arena = &self.scratch.arena;
         let advancing = self
             .active
             .iter()
@@ -924,7 +922,7 @@ impl Sim<'_> {
                 b.stages.iter().any(|bs| {
                     !bs.done && {
                         let mut off = 0.0;
-                        bs.segments.iter().any(|s| {
+                        arena.iter(bs.segments).any(|s| {
                             let hit = s.advances && d >= off - 1e-9 && d <= off + s.dur + 1e-9;
                             off += s.dur;
                             hit

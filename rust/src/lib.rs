@@ -53,10 +53,12 @@ pub mod prelude {
         DagSweepRow, FtKind, PolicyKind, Scenario, ServiceSweepRow, Sweep, SweepPoint, SweepRow,
     };
     pub use crate::service::{
-        FleetRunner, ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec, TierResult,
-        TierSpec,
+        FleetRunner, RepackMode, ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec,
+        TierResult, TierSpec,
     };
     #[allow(deprecated)] // legacy shim kept importable for external migrators
     pub use crate::sim::simulate_job;
-    pub use crate::sim::{AggregateResult, Category, JobResult, RevocationRule, RunConfig, World};
+    pub use crate::sim::{
+        AggregateResult, Category, JobResult, RevocationRule, RunConfig, Scratch, World,
+    };
 }

@@ -81,7 +81,7 @@ fn help_text() -> String {
      sensitivity  spot/on-demand price-ratio sweep (F/O crossover)\n  \
      tables       P/F/O summary table at the paper's fixed job point\n  \
      cluster      rolling-epoch cluster simulation (Poisson arrivals)\n  \
-     bench        quick in-binary micro-benchmarks\n  \
+     bench        quick micro-benchmarks; --area {engine,service} emits BENCH_<area>.json\n  \
      run          run an experiment described by a TOML config\n  \
      serve        start the TCP control plane\n  \
      version      print version\n\nsee `siwoft <command> --help`"
@@ -541,7 +541,7 @@ fn service_cmd(raw: &[String]) -> Result<(), String> {
         svc.total_replicas(),
         svc.horizon_h,
         capacity,
-        if svc.repack { "on" } else { "off" },
+        svc.repack.as_str(),
         a.u64("seeds")?
     );
     let mut rows = vec![siwoft::csv_row![
@@ -862,14 +862,31 @@ fn bench_quick(raw: &[String]) -> Result<(), String> {
     use siwoft::policy::{Ctx, FtSpotPolicy, PSiwoft, Policy};
     use siwoft::util::benchkit::{Bench, Suite};
     let spec = CommandSpec::new("bench", "quick in-binary micro-benchmarks")
+        .opt(
+            "area",
+            "",
+            "structured bench area: engine | service — emits the BENCH_<area>.json \
+             schema tracked in EXPERIMENTS.md (empty = the legacy quick suite)",
+        )
         .opt("markets", "96", "market count")
         .opt("months", "2", "trace months")
         .opt("seed", "2020", "world seed")
         .opt("warmup-ms", "100", "warmup per benchmark (ms)")
         .opt("measure-ms", "400", "measured window per benchmark (ms)")
-        .opt("out", "results", "output dir")
-        .opt("format", "csv", "output format: csv | json");
+        .opt("out", "results", "output dir (--area also accepts '-' = JSON to stdout)")
+        .opt("format", "csv", "output format: csv | json (legacy suite only)");
     let a = spec.parse(raw)?;
+    if !a.str("area").is_empty() {
+        return bench_area(
+            a.str("area"),
+            a.usize("markets")?,
+            a.f64("months")?,
+            a.u64("seed")?,
+            a.u64("warmup-ms")?,
+            a.u64("measure-ms")?,
+            a.str("out"),
+        );
+    }
     let mut world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
     let start = world.split_train(0.67);
     let (m, h) = (world.trace.markets, world.trace.hours);
@@ -895,6 +912,138 @@ fn bench_quick(raw: &[String]) -> Result<(), String> {
     let path = emit(a.str("out"), "bench_quick", &suite.to_csv(), a.str("format"))?;
     println!("wrote {path}");
     Ok(())
+}
+
+/// `bench --area`: the structured hot-path benchmarks whose numbers are
+/// tracked release-over-release in `BENCH_<area>.json` (schema: `{area,
+/// rows: [{case, workers, items_per_sec, p50_us, p99_us}], seed,
+/// git_rev}`; see EXPERIMENTS.md §Perf).  `out = "-"` prints the JSON
+/// document alone to stdout (nothing else), so harnesses can pipe it.
+fn bench_area(
+    area: &str,
+    markets: usize,
+    months: f64,
+    seed: u64,
+    warmup_ms: u64,
+    measure_ms: u64,
+    out: &str,
+) -> Result<(), String> {
+    use siwoft::service::{RepackMode, ServiceSpec, TierSpec};
+    use siwoft::sim::Scratch;
+    use siwoft::util::benchkit::{Bench, BenchResult};
+
+    let mut world = World::generate(markets, months, seed);
+    let start = world.split_train(0.67);
+    let bench = Bench::with_times(warmup_ms, measure_ms);
+    let pool = Pool::new(0);
+    let n_workers = pool.workers();
+
+    let row = |case: &str, workers: usize, r: &BenchResult| {
+        Json::obj(vec![
+            ("case", Json::str(case)),
+            ("workers", Json::num(workers as f64)),
+            ("items_per_sec", Json::num(r.throughput().unwrap_or(0.0))),
+            ("p50_us", Json::num(r.p50_ns / 1e3)),
+            ("p99_us", Json::num(r.p99_ns / 1e3)),
+        ])
+    };
+
+    let rows: Vec<Json> = match area {
+        "engine" => {
+            let scen = Scenario::on(&world)
+                .job(Job::new(1, 8.0, 16.0))
+                .rule(RevocationRule::ForcedRate { per_day: 6.0 })
+                .start_t(start);
+            let mut scratch = Scratch::new();
+            let single =
+                bench.run_with_units("single_job", 1.0, || scen.run_seeded_in(&mut scratch, 1));
+            let serial = bench.run_with_units("replicate16", 16.0, || scen.replicate(16));
+            let pooled =
+                bench.run_with_units("replicate16", 16.0, || scen.replicate_on(&pool, 16));
+            let dag_spec = siwoft::dag::DagSpec::new("bench")
+                .stage("extract", 2.0, 8.0, &[])
+                .stage("train-a", 3.0, 16.0, &["extract"])
+                .stage("train-b", 3.0, 16.0, &["extract"])
+                .stage("merge", 1.0, 8.0, &["train-a", "train-b"]);
+            let dag = Scenario::on(&world)
+                .rule(RevocationRule::ForcedRate { per_day: 6.0 })
+                .start_t(start)
+                .dag(dag_spec);
+            let mut dscratch = Scratch::new();
+            let dag_r = bench.run_with_units("dag4", 1.0, || dag.run_seeded_in(&mut dscratch, 1));
+            vec![
+                row("single_job", 1, &single),
+                row("replicate16", 1, &serial),
+                row("replicate16", n_workers, &pooled),
+                row("dag4", 1, &dag_r),
+            ]
+        }
+        "service" => {
+            let spec = ServiceSpec::new("bench")
+                .horizon(24.0)
+                .capacity(64.0)
+                .tier(TierSpec::open("web", 4, 8.0).slack(0.25))
+                .tier(TierSpec::batch("reindex", 1, 16.0, 4.0));
+            let fleet = |mode: RepackMode| {
+                Scenario::on(&world)
+                    .rule(RevocationRule::ForcedRate { per_day: 6.0 })
+                    .start_t(start)
+                    .service(spec.clone().repack_mode(mode))
+            };
+            let mut out_rows = Vec::new();
+            for mode in [RepackMode::Off, RepackMode::Incremental, RepackMode::Full] {
+                let scen = fleet(mode);
+                let mut scratch = Scratch::new();
+                let case = format!("fleet_{}", mode.as_str());
+                let r = bench.run_with_units(&case, 1.0, || scen.run_seeded_in(&mut scratch, 1));
+                out_rows.push(row(&case, 1, &r));
+            }
+            let scen = fleet(RepackMode::Incremental);
+            let pooled =
+                bench.run_with_units("fleet_incremental", 8.0, || scen.replicate_on(&pool, 8));
+            out_rows.push(row("fleet_incremental", n_workers, &pooled));
+            out_rows
+        }
+        other => return Err(format!("unknown --area '{other}' (expected engine or service)")),
+    };
+
+    let doc = Json::obj(vec![
+        ("area", Json::str(area)),
+        ("rows", Json::arr(rows)),
+        ("seed", Json::num(seed as f64)),
+        ("git_rev", Json::str(git_rev())),
+    ]);
+    if out == "-" {
+        println!("{doc}");
+        return Ok(());
+    }
+    let path = format!("{out}/BENCH_{area}.json");
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(parent).map_err(|e| format!("mkdir {out}: {e}"))?;
+    }
+    std::fs::write(&path, format!("{doc}\n")).map_err(|e| format!("write {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Best-effort revision stamp for BENCH_*.json: `SIWOFT_GIT_REV` (CI
+/// sets it from the checkout) over `git rev-parse` over `"unknown"`.
+fn git_rev() -> String {
+    if let Ok(v) = std::env::var("SIWOFT_GIT_REV") {
+        let v = v.trim().to_string();
+        if !v.is_empty() {
+            return v;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 fn cluster(raw: &[String]) -> Result<(), String> {

@@ -15,8 +15,8 @@ use crate::coordinator::Pool;
 use crate::job::Job;
 use crate::market::analytics::SurvivalCurves;
 use crate::policy::{Policy, PredictivePolicy};
-use crate::sim::run::execute;
-use crate::sim::{AggregateResult, JobResult, RevocationRule, RunConfig, World};
+use crate::sim::run::execute_in;
+use crate::sim::{AggregateResult, JobResult, RevocationRule, RunConfig, Scratch, World};
 
 /// A fully-specified simulation point, ready to run or replicate.
 ///
@@ -172,9 +172,18 @@ impl<'w> Scenario<'w> {
     /// Run the scenario once with an explicit seed (the configured seed
     /// is ignored; everything else is reused).
     pub fn run_seeded(&self, seed: u64) -> JobResult {
+        self.run_seeded_in(&mut Scratch::new(), seed)
+    }
+
+    /// [`Scenario::run_seeded`] with caller-owned working memory: a
+    /// sweep worker passes its per-thread [`Scratch`] so consecutive
+    /// runs reuse buffer capacity instead of re-allocating.  Identical
+    /// results for any scratch state (pinned by
+    /// `tests/engine_equivalence.rs`).
+    pub fn run_seeded_in(&self, scratch: &mut Scratch, seed: u64) -> JobResult {
         let mut policy = self.build_policy();
         let ft = self.ft.build(&self.job);
-        execute(self.world, policy.as_mut(), ft.as_ref(), &self.job, &self.cfg, seed)
+        execute_in(self.world, policy.as_mut(), ft.as_ref(), &self.job, &self.cfg, seed, scratch)
     }
 
     /// Run `n_seeds` replicates (seeds `seed .. seed + n_seeds`),
@@ -189,8 +198,12 @@ impl<'w> Scenario<'w> {
     /// function of its seed, so the aggregate is identical for any
     /// worker count.
     pub fn replicate_on(&self, pool: &Pool, n_seeds: u64) -> AggregateResult {
-        let runs: Vec<JobResult> =
-            pool.map_chunked((0..n_seeds).collect(), 1, |_, i| self.run_seeded(self.seed + i));
+        let runs: Vec<JobResult> = pool.map_with(
+            (0..n_seeds).collect(),
+            1,
+            Scratch::new,
+            |scratch, _, i| self.run_seeded_in(scratch, self.seed + i),
+        );
         AggregateResult::from_runs(&runs)
     }
 }

@@ -14,7 +14,7 @@ use crate::coordinator::Pool;
 use crate::dag::{DagAggregate, DagResult, DagScenario, DagSpec};
 use crate::job::Job;
 use crate::service::{ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec};
-use crate::sim::{AggregateResult, JobResult, RevocationRule, World};
+use crate::sim::{AggregateResult, JobResult, RevocationRule, Scratch, World};
 
 /// One point of the cartesian product.
 #[derive(Clone, Debug, PartialEq)]
@@ -223,9 +223,12 @@ impl<'w> Sweep<'w> {
         let pool = Pool::new(self.workers);
         // chunk hint 1: every (point, seed) run is milliseconds-scale
         // with wildly skewed costs, so each must be independently
-        // stealable for nested grids to saturate many-core hosts
-        let runs: Vec<JobResult> =
-            pool.map_chunked(items, 1, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
+        // stealable for nested grids to saturate many-core hosts.
+        // Each worker reuses one Scratch across every run it steals,
+        // so segment timelines stop re-allocating per (point × seed).
+        let runs: Vec<JobResult> = pool.map_with(items, 1, Scratch::new, |scratch, _, (pi, s)| {
+            scenarios[pi].run_seeded_in(scratch, self.base_seed + s)
+        });
         runs.chunks(seeds as usize)
             .zip(points)
             .map(|(chunk, point)| SweepRow {
@@ -281,8 +284,10 @@ impl<'w> Sweep<'w> {
             .flat_map(|p| (0..seeds).map(move |s| (p, s)))
             .collect();
         let pool = Pool::new(self.workers);
-        let runs: Vec<DagResult> =
-            pool.map_chunked(items, 1, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
+        // per-worker Scratch: timelines reuse capacity across runs
+        let runs: Vec<DagResult> = pool.map_with(items, 1, Scratch::new, |scratch, _, (pi, s)| {
+            scenarios[pi].run_seeded_in(scratch, self.base_seed + s)
+        });
         runs.chunks(seeds as usize)
             .zip(labels)
             .map(|(chunk, (dag, policy, ft, rule))| DagSweepRow {
@@ -340,8 +345,11 @@ impl<'w> Sweep<'w> {
             .flat_map(|p| (0..seeds).map(move |s| (p, s)))
             .collect();
         let pool = Pool::new(self.workers);
+        // per-worker Scratch: timelines reuse capacity across runs
         let runs: Vec<ServiceResult> =
-            pool.map_chunked(items, 1, |_, (pi, s)| scenarios[pi].run_seeded(self.base_seed + s));
+            pool.map_with(items, 1, Scratch::new, |scratch, _, (pi, s)| {
+                scenarios[pi].run_seeded_in(scratch, self.base_seed + s)
+            });
         runs.chunks(seeds as usize)
             .zip(labels)
             .map(|(chunk, (service, policy, ft, rule))| ServiceSweepRow {

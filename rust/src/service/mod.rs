@@ -13,9 +13,10 @@
 //!   and the per-tier result/aggregate types;
 //! * [`runner`] — [`FleetRunner`]: a horizon-bounded steady-state loop
 //!   over the `sim::Engine` event queue that FFD-packs replicas onto
-//!   bins (shared [`pack::Packer`](crate::pack::Packer)), *re-packs the
-//!   surviving fleet* after every revocation or burst boundary
-//!   ([`Category::Repack`](crate::sim::Category) transfer accounting),
+//!   bins (shared [`pack::Packer`](crate::pack::Packer)), responds to
+//!   revocations per [`RepackMode`] (incremental warm-join by default;
+//!   the full drain-and-repack oracle charges
+//!   [`Category::Repack`](crate::sim::Category) transfer accounting),
 //!   and spreads replicated copies across bins so no single revocation
 //!   can take a replica out (packed-bin replication).
 //!
@@ -29,4 +30,4 @@ pub mod spec;
 
 pub use fleet::{ServiceAggregate, ServiceResult, TierAgg, TierResult};
 pub use runner::{FleetRunner, ServiceScenario};
-pub use spec::{BurstSpec, ServiceSpec, TierSpec};
+pub use spec::{BurstSpec, RepackMode, ServiceSpec, TierSpec};

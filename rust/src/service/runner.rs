@@ -19,11 +19,16 @@
 //!   serving span; "useful work" is uptime.  Batch tiers ride along
 //!   with the DAG-style work/checkpoint timeline and finish early.
 //! * A revocation kills every replica on the bin; each consults its FT
-//!   mechanism.  With `repack = true` (the default) every *surviving*
-//!   bin is also drained: its replicas pay a [`Category::Repack`]
-//!   state-transfer prologue and the whole fleet is re-packed onto a
-//!   fresh FFD packing — mid-session survivor re-packing.  Burst
-//!   boundaries (autoscaling) trigger the same consolidation.
+//!   mechanism.  What happens to the *survivors* is the
+//!   [`RepackMode`]: `Incremental` (the default) leaves surviving bins
+//!   untouched and instead lets the displaced copies warm-join their
+//!   residual headroom (first-fit over ascending bin id, respecting
+//!   capacity and replica anti-affinity) before the packer opens fresh
+//!   bins; `Full` — the oracle the incremental path is tested against —
+//!   drains every active bin, charges each in-flight copy a
+//!   [`Category::Repack`] state-transfer prologue, and re-packs the
+//!   whole fleet onto a fresh FFD packing; `Off` does neither.  Burst
+//!   boundaries (autoscaling) consolidate only under `Full`.
 //! * The deadline-slack SLO integral per tier (time under target) is
 //!   assembled from per-copy uptime intervals (`service::fleet`) and
 //!   lands in the tier ledger as the time-only [`Category::Slo`] row.
@@ -40,13 +45,20 @@
 //! service with re-packing disabled reproduces the corresponding
 //! single-job `Scenario` run cost bit-for-bit
 //! (`tests/service_equivalence.rs`).
+//!
+//! Hot path: session timelines live in a struct-of-arrays
+//! [`SegArena`] (a bin stage holds a [`SegRange`], not an owning
+//! vector), and every run borrows its working memory from a
+//! caller-owned [`Scratch`] — see `sim::arena` and DESIGN.md §11.  The
+//! arena replay primitives are bit-identical ports of the loops that
+//! used to live here (pinned by `tests/engine_equivalence.rs`).
 
 use std::collections::BTreeMap;
 
 use super::fleet::{
     target_steps, union_intervals, violation_time, ServiceAggregate, ServiceResult, TierResult,
 };
-use super::spec::ServiceSpec;
+use super::spec::{RepackMode, ServiceSpec};
 use crate::coordinator::Pool;
 use crate::ft::{FtMechanism, Recovery};
 use crate::job::{ContainerModel, Job, JobProgress};
@@ -55,6 +67,7 @@ use crate::pack::Packer;
 use crate::policy::{Ctx, Policy};
 use crate::scenario::{FtKind, Scenario};
 use crate::sim::accounting::{Category, Ledger};
+use crate::sim::arena::{replay_spans, useful_done_abs, Scratch, SegArena, SegRange};
 use crate::sim::engine::{Engine, Event};
 use crate::sim::{RevocationRule, RunConfig, World};
 use crate::util::rng::Rng;
@@ -93,6 +106,13 @@ impl<'w> ServiceScenario<'w> {
 
     /// Run once with an explicit seed.
     pub fn run_seeded(&self, seed: u64) -> ServiceResult {
+        self.run_seeded_in(&mut Scratch::new(), seed)
+    }
+
+    /// [`ServiceScenario::run_seeded`] with caller-owned working memory
+    /// (segment arena + sweep buffers); identical results for any
+    /// scratch state.
+    pub fn run_seeded_in(&self, scratch: &mut Scratch, seed: u64) -> ServiceResult {
         let policy = self.scen.build_policy();
         let mut runner = FleetRunner::with_policy(
             self.scen.world(),
@@ -101,13 +121,15 @@ impl<'w> ServiceScenario<'w> {
             self.scen.ft_kind(),
             self.scen.run_config(),
         );
-        runner.run(seed)
+        runner.run_in(scratch, seed)
     }
 
     /// `n_seeds` replicates (seeds `seed .. seed + n`), serially.
     pub fn replicate(&self, n_seeds: u64) -> ServiceAggregate {
         let base = self.scen.seed_value();
-        let runs: Vec<ServiceResult> = (0..n_seeds).map(|i| self.run_seeded(base + i)).collect();
+        let mut scratch = Scratch::new();
+        let runs: Vec<ServiceResult> =
+            (0..n_seeds).map(|i| self.run_seeded_in(&mut scratch, base + i)).collect();
         ServiceAggregate::from_runs(&runs)
     }
 
@@ -115,8 +137,12 @@ impl<'w> ServiceScenario<'w> {
     /// at per-seed steal granularity; identical for any worker count.
     pub fn replicate_on(&self, pool: &Pool, n_seeds: u64) -> ServiceAggregate {
         let base = self.scen.seed_value();
-        let runs: Vec<ServiceResult> =
-            pool.map_chunked((0..n_seeds).collect(), 1, |_, i| self.run_seeded(base + i));
+        let runs: Vec<ServiceResult> = pool.map_with(
+            (0..n_seeds).collect(),
+            1,
+            Scratch::new,
+            |scratch, _, i| self.run_seeded_in(scratch, base + i),
+        );
         ServiceAggregate::from_runs(&runs)
     }
 }
@@ -149,7 +175,17 @@ impl<'a> FleetRunner<'a> {
     /// Execute the fleet once; a pure function of the constructor
     /// inputs plus `seed`.
     pub fn run(&mut self, seed: u64) -> ServiceResult {
+        self.run_in(&mut Scratch::new(), seed)
+    }
+
+    /// [`FleetRunner::run`] with caller-owned working memory: the
+    /// segment arena, Count-threshold buffer, and frontier-sweep
+    /// buffers are borrowed from `scratch` (cleared on entry, capacity
+    /// kept for the next run).  Identical results for any scratch
+    /// state.
+    pub fn run_in(&mut self, scratch: &mut Scratch, seed: u64) -> ServiceResult {
         self.spec.validate().unwrap_or_else(|e| panic!("invalid service spec: {e}"));
+        scratch.arena.clear();
         let capacity = self
             .spec
             .effective_capacity(&self.world.catalog)
@@ -189,14 +225,18 @@ impl<'a> FleetRunner<'a> {
             }
             RevocationRule::ForcedCount { total } => {
                 // sorted-uniform fractions of the fleet's expected work,
-                // capped below 0.98 (the single-job rule, fleet-wide)
-                let mut fr: Vec<f64> = (0..total).map(|_| rng.f64() * 0.98).collect();
+                // capped below 0.98 (the single-job rule, fleet-wide;
+                // built into the scratch buffer — same draws, same sort,
+                // same values, the scratch only donates capacity)
+                let mut fr = std::mem::take(&mut scratch.thresholds);
+                fr.clear();
+                fr.extend((0..total).map(|_| rng.f64() * 0.98));
                 fr.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 let total_work = self.spec.total_work_h();
-                FleetSchedule::Count {
-                    thresholds: fr.iter().map(|f| f * total_work).collect(),
-                    idx: 0,
+                for f in fr.iter_mut() {
+                    *f *= total_work;
                 }
+                FleetSchedule::Count { thresholds: fr, idx: 0 }
             }
         };
 
@@ -207,6 +247,7 @@ impl<'a> FleetRunner<'a> {
             spec: self.spec,
             policy: self.policy.as_mut(),
             cfg: &self.cfg,
+            scratch: &mut *scratch,
             packer: Packer::new(capacity),
             rng,
             schedule,
@@ -267,7 +308,14 @@ impl<'a> FleetRunner<'a> {
             }
         }
 
-        sim.finish(policy_name, self.ft.label(), capacity)
+        let result = sim.finish(policy_name, self.ft.label(), capacity);
+        // hand the Count-threshold buffer back to the scratch for the
+        // next run (destructure first: `sim` holds the scratch borrow)
+        let Sim { schedule, .. } = sim;
+        if let FleetSchedule::Count { thresholds, .. } = schedule {
+            scratch.thresholds = thresholds;
+        }
+        result
     }
 }
 
@@ -314,32 +362,22 @@ enum Carry {
     Repack(f64),
 }
 
-/// One activity span of a session timeline (the DAG runner's shape).
-#[derive(Clone, Copy, Debug)]
-struct Segment {
-    cat: Category,
-    dur: f64,
-    /// work beyond the replica's historical frontier (advances the
-    /// fleet's global new-work frontier — the Count rule's clock)
-    advances: bool,
-    /// a completed checkpoint: volatile progress becomes durable
-    commits: bool,
-}
-
 /// A batch replica's planned timeline within one session — prologue,
 /// then work chunks interleaved with checkpoints, mirroring
-/// `sim::run`'s inner loop arithmetic exactly.
+/// `sim::run`'s inner loop arithmetic exactly.  Segments land in the
+/// run's [`SegArena`]; the returned [`SegRange`] is the copy's handle
+/// for replay via [`replay_spans`] / [`useful_done_abs`].
 fn build_batch_segments(
+    arena: &mut SegArena,
     job: &Job,
     ft: &dyn FtMechanism,
     container: &ContainerModel,
     p0: f64,
     frontier: f64,
     carry: Carry,
-) -> Vec<Segment> {
-    let mut segs = Vec::new();
-    let seg = |cat, dur| Segment { cat, dur, advances: false, commits: false };
-    push_prologue(&mut segs, container, carry);
+) -> SegRange {
+    let lo = arena.start();
+    push_prologue(arena, container, carry);
     let interval = ft.checkpoint_interval(job);
     let ckpt_dur = ft.checkpoint_time(job, container);
     let len = job.exec_len_h;
@@ -350,32 +388,22 @@ fn build_batch_segments(
         let chunk = (len - pos).min(until_ckpt);
         let reexec = (frontier - pos).clamp(0.0, chunk);
         if reexec > 0.0 {
-            segs.push(seg(Category::Reexec, reexec));
+            arena.push(Category::Reexec, reexec, false, false);
         }
         let useful = chunk - reexec;
         if useful > 0.0 {
-            segs.push(Segment {
-                cat: Category::Useful,
-                dur: useful,
-                advances: true,
-                commits: false,
-            });
+            arena.push(Category::Useful, useful, true, false);
         }
         pos += chunk;
         since_ckpt += chunk;
         if let Some(i) = interval {
             if since_ckpt >= i - 1e-9 && pos < len - 1e-9 {
-                segs.push(Segment {
-                    cat: Category::Checkpoint,
-                    dur: ckpt_dur,
-                    advances: false,
-                    commits: true,
-                });
+                arena.push(Category::Checkpoint, ckpt_dur, false, true);
                 since_ckpt = 0.0;
             }
         }
     }
-    segs
+    arena.finish(lo)
 }
 
 /// An open-ended replica's session: prologue, then one serving span to
@@ -383,108 +411,35 @@ fn build_batch_segments(
 /// checkpoint spans — an FT mechanism shows up as the recovery
 /// prologue it charges after a revocation.
 fn build_open_segments(
+    arena: &mut SegArena,
     container: &ContainerModel,
     carry: Carry,
     t0: f64,
     horizon_end: f64,
-) -> Vec<Segment> {
-    let mut segs = Vec::new();
-    push_prologue(&mut segs, container, carry);
+) -> SegRange {
+    let lo = arena.start();
+    push_prologue(arena, container, carry);
     // absolute accumulation, matching the span replay
-    let mut tt = t0;
-    for s in &segs {
-        tt += s.dur;
-    }
+    let tt = t0 + arena.total_dur(arena.finish(lo));
     let serve = horizon_end - tt;
     if serve > 0.0 {
-        segs.push(Segment { cat: Category::Useful, dur: serve, advances: true, commits: false });
+        arena.push(Category::Useful, serve, true, false);
     }
-    segs
+    arena.finish(lo)
 }
 
-fn push_prologue(segs: &mut Vec<Segment>, container: &ContainerModel, carry: Carry) {
-    let seg = |cat, dur| Segment { cat, dur, advances: false, commits: false };
+fn push_prologue(arena: &mut SegArena, container: &ContainerModel, carry: Carry) {
     match carry {
-        Carry::Migrate(m) => segs.push(seg(Category::Migration, m)),
-        Carry::Repack(r) => segs.push(seg(Category::Repack, r)),
-        Carry::Fresh => segs.push(seg(Category::Startup, container.startup_time())),
+        Carry::Migrate(m) => arena.push(Category::Migration, m, false, false),
+        Carry::Repack(r) => arena.push(Category::Repack, r, false, false),
+        Carry::Fresh => arena.push(Category::Startup, container.startup_time(), false, false),
         Carry::Recover(r) => {
-            segs.push(seg(Category::Startup, container.startup_time()));
+            arena.push(Category::Startup, container.startup_time(), false, false);
             if r > 0.0 {
-                segs.push(seg(Category::Recovery, r));
+                arena.push(Category::Recovery, r, false, false);
             }
         }
     }
-}
-
-/// Replay a session's spans up to the absolute cutoff `upto`, mutating
-/// the ledger (and, for lead batch stages, the replica's progress and
-/// frontier) with exactly `sim::run::execute`'s per-span arithmetic:
-/// spans walk an absolutely-accumulated clock, work spans add to
-/// volatile progress one at a time, and a checkpoint commits only when
-/// it completes.  Standby copies record their runtime as cost-only
-/// [`Category::Idle`] (hot-standby capacity).  Returns the
-/// frontier-advancing work executed (the Count rule's clock).
-#[allow(clippy::too_many_arguments)]
-fn replay_spans(
-    ledger: &mut Ledger,
-    progress: Option<(&mut JobProgress, &mut f64)>,
-    segs: &[Segment],
-    t0: f64,
-    upto: f64,
-    price: f64,
-    standby: bool,
-) -> f64 {
-    let mut off = t0;
-    let mut useful = 0.0f64;
-    let mut prog = progress;
-    for s in segs {
-        let cut = upto < off + s.dur;
-        let run = if cut { (upto - off).max(0.0) } else { s.dur };
-        if standby {
-            ledger.cost.add(Category::Idle, run * price);
-        } else {
-            ledger.span(s.cat, run, price);
-            if matches!(s.cat, Category::Reexec | Category::Useful) {
-                if let Some((p, frontier)) = prog.as_mut() {
-                    p.volatile_h += run;
-                    if s.advances {
-                        **frontier = frontier.max(p.total_h());
-                    }
-                }
-                if s.advances {
-                    useful += run;
-                }
-            }
-            if s.commits && run >= s.dur {
-                if let Some((p, _)) = prog.as_mut() {
-                    p.commit();
-                }
-            }
-        }
-        if cut {
-            break;
-        }
-        off += s.dur;
-    }
-    useful
-}
-
-/// Frontier-advancing work a segment timeline has executed by the
-/// absolute time `at` (session started at `t0`).
-fn useful_done_at(segs: &[Segment], t0: f64, at: f64) -> f64 {
-    let mut off = t0;
-    let mut u = 0.0f64;
-    for s in segs {
-        if off >= at - 1e-12 {
-            break;
-        }
-        if s.advances {
-            u += s.dur.min(at - off);
-        }
-        off += s.dur;
-    }
-    u
 }
 
 #[derive(Debug)]
@@ -570,7 +525,8 @@ struct BinStage {
     /// memory share of the instance price this copy pays
     share: f64,
     standby: bool,
-    segments: Vec<Segment>,
+    /// this session's timeline, as a range into the run's [`SegArena`]
+    segments: SegRange,
     /// natural session end (absolute hours, accumulated like the
     /// single-job engine's clock)
     end_abs: f64,
@@ -591,6 +547,9 @@ struct ActiveBin {
     is_spot: bool,
     /// instance $/h, fixed at session start (as in `sim::run`)
     price: f64,
+    /// memory claimed by the packed copies (grows when an incremental
+    /// re-pack warm-joins a displaced copy)
+    used_gb: f64,
     stages: Vec<BinStage>,
     live: usize,
 }
@@ -600,6 +559,9 @@ struct Sim<'a> {
     spec: &'a ServiceSpec,
     policy: &'a mut dyn Policy,
     cfg: &'a RunConfig,
+    /// caller-owned working memory: the segment arena plus the
+    /// frontier-sweep buffers reused by [`Sim::resched_count`]
+    scratch: &'a mut Scratch,
     packer: Packer,
     rng: Rng,
     schedule: FleetSchedule,
@@ -640,13 +602,16 @@ impl Sim<'_> {
         self.ended || (self.spec.is_batch_only() && self.all_batch_done())
     }
 
-    /// Pack every ready copy into bins and launch them at `t`.
+    /// Pack every ready copy into bins and launch them at `t`.  Under
+    /// [`RepackMode::Incremental`] displaced copies first warm-join the
+    /// residual headroom of surviving bins (see [`Sim::join_bin`]);
+    /// only the overflow reaches the packer.
     fn launch_ready(&mut self, eng: &mut Engine, t: f64) {
         if self.ended || self.aborted || t >= self.horizon_end {
             return;
         }
         let grouped = self.degree > 1;
-        let ready: Vec<(usize, f64, u64)> = (0..self.copies.len())
+        let mut ready: Vec<(usize, f64, u64)> = (0..self.copies.len())
             .filter(|&c| {
                 let cp = &self.copies[c];
                 let r = &self.replicas[cp.replica];
@@ -659,6 +624,30 @@ impl Sim<'_> {
                 (c, self.replicas[cp.replica].job.mem_gb, group)
             })
             .collect();
+        if self.spec.repack == RepackMode::Incremental && !self.active.is_empty() {
+            // incremental re-pack: first-fit over ascending bin id,
+            // respecting capacity, remaining bin life, and replica
+            // anti-affinity; overflow falls through to the packer
+            let cap = self.packer.capacity_gb();
+            let mut overflow = Vec::with_capacity(ready.len());
+            for (c, mem, group) in ready {
+                let li = self.copies[c].replica;
+                let target = self
+                    .active
+                    .iter()
+                    .find(|(_, b)| {
+                        b.used_gb + mem <= cap + 1e-9
+                            && t < b.end_t
+                            && !b.stages.iter().any(|o| self.copies[o.cid].replica == li)
+                    })
+                    .map(|(&id, _)| id);
+                match target {
+                    Some(id) => self.join_bin(eng, t, c, id),
+                    None => overflow.push((c, mem, group)),
+                }
+            }
+            ready = overflow;
+        }
         if ready.is_empty() {
             return;
         }
@@ -720,6 +709,7 @@ impl Sim<'_> {
                 let standby = cp.copy_idx != 0;
                 let segments = if r.batch {
                     build_batch_segments(
+                        &mut self.scratch.arena,
                         &r.job,
                         r.ft.as_ref(),
                         container,
@@ -728,14 +718,20 @@ impl Sim<'_> {
                         cp.carry,
                     )
                 } else {
-                    build_open_segments(container, cp.carry, t, self.horizon_end)
+                    build_open_segments(
+                        &mut self.scratch.arena,
+                        container,
+                        cp.carry,
+                        t,
+                        self.horizon_end,
+                    )
                 };
                 // the session clock accumulates absolutely, one span at
                 // a time — the single-job engine's arithmetic
                 let mut tt = t;
                 let mut up_from = t;
                 let mut in_prologue = true;
-                for s in &segments {
+                for s in self.scratch.arena.iter(segments) {
                     if in_prologue
                         && !matches!(
                             s.cat,
@@ -788,8 +784,113 @@ impl Sim<'_> {
                 }
             }
             let live = stages.len();
-            self.active
-                .insert(bin_id, ActiveBin { t0: t, end_t, market, is_spot, price, stages, live });
+            self.active.insert(
+                bin_id,
+                ActiveBin {
+                    t0: t,
+                    end_t,
+                    market,
+                    is_spot,
+                    price,
+                    used_gb: bin.used_gb,
+                    stages,
+                    live,
+                },
+            );
+        }
+    }
+
+    /// Incremental re-pack: warm-join ready copy `c` onto surviving bin
+    /// `bin_id` at `t`, consuming its residual headroom.  The joiner
+    /// keeps its FT carry (no [`Category::Repack`] charge — survivors
+    /// are never drained, so there is no planned state transfer to
+    /// pay), pays its memory share of the instance price from `t`
+    /// onward, and may extend the bin's natural end.  Survivor shares
+    /// stay fixed at their launch packing.
+    fn join_bin(&mut self, eng: &mut Engine, t: f64, c: usize, bin_id: u64) {
+        let li = self.copies[c].replica;
+        let standby = self.copies[c].copy_idx != 0;
+        let carry = self.copies[c].carry;
+        let batch = self.replicas[li].batch;
+        let mem = self.replicas[li].job.mem_gb;
+        let container = &self.world.container;
+        let segments = if batch {
+            let r = &self.replicas[li];
+            build_batch_segments(
+                &mut self.scratch.arena,
+                &r.job,
+                r.ft.as_ref(),
+                container,
+                r.progress.total_h(),
+                r.frontier,
+                carry,
+            )
+        } else {
+            build_open_segments(&mut self.scratch.arena, container, carry, t, self.horizon_end)
+        };
+        // absolute session clock, as in the launch path
+        let mut tt = t;
+        let mut up_from = t;
+        let mut in_prologue = true;
+        for s in self.scratch.arena.iter(segments) {
+            if in_prologue
+                && !matches!(
+                    s.cat,
+                    Category::Startup
+                        | Category::Recovery
+                        | Category::Migration
+                        | Category::Repack
+                )
+            {
+                up_from = tt;
+                in_prologue = false;
+            }
+            tt += s.dur;
+        }
+        if in_prologue {
+            up_from = tt; // prologue swallowed the session
+        }
+        let end_abs = if batch { tt } else { self.horizon_end };
+
+        let cp = &mut self.copies[c];
+        cp.state = CState::Running;
+        cp.gen += 1;
+        cp.bin = bin_id;
+        cp.sessions += 1;
+        cp.carry = Carry::Fresh; // consumed by this session
+        if batch {
+            eng.schedule_at(end_abs, Event::Timer { tag: tag(K_COPY_DONE, cp.gen, c as u64) });
+        }
+
+        let bin = self.active.get_mut(&bin_id).expect("joining unknown bin");
+        bin.used_gb += mem;
+        bin.stages.push(BinStage {
+            cid: c,
+            // the joiner's share reflects the updated footprint; the
+            // survivors' sessions were priced at launch
+            share: mem / bin.used_gb,
+            standby,
+            segments,
+            end_abs,
+            up_from_abs: up_from,
+            done: false,
+            closed_abs: end_abs,
+        });
+        bin.live += 1;
+        let old_end = bin.end_t;
+        bin.end_t = bin.end_t.max(end_abs);
+        self.peak_bin_used_gb = self.peak_bin_used_gb.max(bin.used_gb);
+        // an extension can pull the bin's next trace revocation into
+        // the (now longer) session window; at most one notice is ever
+        // pending, because launch scheduled one only for rev < old_end
+        if bin.is_spot && bin.end_t > old_end {
+            if let FleetSchedule::Trace = self.schedule {
+                if let Some(rev) = self.world.market(bin.market).next_revocation_after(bin.t0) {
+                    if rev >= old_end && rev < bin.end_t {
+                        eng.schedule_at(rev, Event::Timer { tag: tag(K_BIN_REVOKE, 0, bin_id) });
+                    }
+                }
+            }
         }
     }
 
@@ -828,7 +929,8 @@ impl Sim<'_> {
                 replay_spans(
                     &mut r.ledger,
                     (!standby).then_some((&mut r.progress, &mut r.frontier)),
-                    &bs.segments,
+                    &self.scratch.arena,
+                    bs.segments,
                     t0,
                     bs.end_abs,
                     price * share,
@@ -884,7 +986,8 @@ impl Sim<'_> {
                     replay_spans(
                         &mut r.ledger,
                         (!standby).then_some((&mut r.progress, &mut r.frontier)),
-                        &bs.segments,
+                        &self.scratch.arena,
+                        bs.segments,
                         t0,
                         t,
                         price * share,
@@ -930,8 +1033,11 @@ impl Sim<'_> {
 
     /// A revocation at `t_eff` kills every copy on the bin; each
     /// consults its FT mechanism (a running sibling copy absorbs the
-    /// loss under replication), then — with `repack` enabled — the
-    /// whole surviving fleet is drained and re-packed.
+    /// loss under replication).  What happens next is the
+    /// [`RepackMode`]: `Full` drains and re-packs the whole surviving
+    /// fleet, `Incremental` counts the consolidation and lets the
+    /// victims warm-join survivors at the next launch, `Off` does
+    /// neither.
     fn revoke_bin(&mut self, eng: &mut Engine, t_eff: f64, bin_id: u64) {
         let Some(bin) = self.active.remove(&bin_id) else {
             return; // closed at the same timestamp before the notice
@@ -958,7 +1064,8 @@ impl Sim<'_> {
             let useful = replay_spans(
                 &mut r.ledger,
                 (!bs.standby).then_some((&mut r.progress, &mut r.frontier)),
-                &bs.segments,
+                &self.scratch.arena,
+                bs.segments,
                 bin.t0,
                 t_eff,
                 bin.price * bs.share,
@@ -1000,15 +1107,24 @@ impl Sim<'_> {
             self.copies[cid].gen += 1; // invalidate the pending completion
         }
         self.revoked_markets.push(bin.market);
-        if self.spec.repack {
-            self.fleet_repack(eng, t_eff.max(self.t_start));
+        match self.spec.repack {
+            RepackMode::Full => self.fleet_repack(eng, t_eff.max(self.t_start)),
+            RepackMode::Incremental => {
+                // a consolidation event: the displaced copies warm-join
+                // surviving bins at the next `launch_ready` instead of
+                // draining the whole fleet (no survivor is touched, so
+                // no `Category::Repack` transfer is charged)
+                self.fleet_repacks += 1;
+            }
+            RepackMode::Off => {}
         }
     }
 
-    /// Mid-session survivor re-packing: drain every active bin at `t`,
-    /// charge each in-flight copy a state-transfer prologue
-    /// ([`Category::Repack`], progress preserved), and return the whole
-    /// fleet to the packer for a fresh FFD consolidation.
+    /// Mid-session survivor re-packing — the [`RepackMode::Full`]
+    /// oracle: drain every active bin at `t`, charge each in-flight
+    /// copy a state-transfer prologue ([`Category::Repack`], progress
+    /// preserved), and return the whole fleet to the packer for a
+    /// fresh FFD consolidation.
     fn fleet_repack(&mut self, _eng: &mut Engine, t: f64) {
         // a consolidation event even when no surviving bin needs
         // draining (the fresh packing then starts from scratch)
@@ -1035,7 +1151,8 @@ impl Sim<'_> {
                 let useful = replay_spans(
                     &mut r.ledger,
                     (!bs.standby).then_some((&mut r.progress, &mut r.frontier)),
-                    &bs.segments,
+                    &self.scratch.arena,
+                    bs.segments,
                     bin.t0,
                     t,
                     bin.price * bs.share,
@@ -1132,37 +1249,41 @@ impl Sim<'_> {
         if self.ended {
             return;
         }
+        let Scratch { arena, spans, bounds, .. } = &mut *self.scratch;
         let mut w_now = self.w_closed;
         for b in self.active.values() {
             for bs in b.stages.iter().filter(|bs| !bs.done && !bs.standby) {
-                w_now += useful_done_at(&bs.segments, b.t0, now);
+                w_now += useful_done_abs(arena, bs.segments, b.t0, now);
             }
         }
         let mut need = thr - w_now;
         let t_cross = if need <= 1e-12 {
             Some(now)
         } else {
-            let mut segs: Vec<(f64, f64)> = Vec::new();
+            // the span and bound buffers live in the scratch: cleared
+            // per call, capacity kept across calls and runs
+            spans.clear();
             for b in self.active.values() {
                 for bs in b.stages.iter().filter(|bs| !bs.done && !bs.standby) {
                     let mut off = b.t0;
-                    for s in &bs.segments {
+                    for s in arena.iter(bs.segments) {
                         let (s0, s1) = (off, off + s.dur);
                         off = s1;
                         if s.advances && s1 > now + 1e-12 {
-                            segs.push((s0.max(now), s1));
+                            spans.push((s0.max(now), s1));
                         }
                     }
                 }
             }
-            let mut bounds: Vec<f64> = segs.iter().flat_map(|&(a, b)| [a, b]).collect();
+            bounds.clear();
+            bounds.extend(spans.iter().flat_map(|&(a, b)| [a, b]));
             bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
             bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
             let mut found = None;
             for w in bounds.windows(2) {
                 let (lo, hi) = (w[0], w[1]);
                 let rate =
-                    segs.iter().filter(|&&(a, b)| a <= lo + 1e-12 && b >= hi - 1e-12).count();
+                    spans.iter().filter(|&&(a, b)| a <= lo + 1e-12 && b >= hi - 1e-12).count();
                 if rate == 0 {
                     continue;
                 }
@@ -1187,6 +1308,7 @@ impl Sim<'_> {
         }
         // victim: prefer a spot bin actively advancing the frontier at
         // `t`; fall back to the lowest-id active spot bin
+        let arena = &self.scratch.arena;
         let advancing = self
             .active
             .iter()
@@ -1195,7 +1317,7 @@ impl Sim<'_> {
                 b.stages.iter().any(|bs| {
                     !bs.done && !bs.standby && {
                         let mut off = b.t0;
-                        bs.segments.iter().any(|s| {
+                        arena.iter(bs.segments).any(|s| {
                             let hit = s.advances && t >= off - 1e-9 && t <= off + s.dur + 1e-9;
                             off += s.dur;
                             hit
@@ -1261,7 +1383,9 @@ impl Sim<'_> {
             }
             std::cmp::Ordering::Equal => {}
         }
-        if self.spec.repack {
+        // only the full oracle consolidates on autoscale boundaries;
+        // incremental scale-ups warm-join through `launch_ready`
+        if self.spec.repack == RepackMode::Full {
             self.fleet_repack(eng, t);
         }
         self.launch_ready(eng, t);
@@ -1289,7 +1413,8 @@ impl Sim<'_> {
                 let useful = replay_spans(
                     &mut r.ledger,
                     (!bs.standby).then_some((&mut r.progress, &mut r.frontier)),
-                    &bs.segments,
+                    &self.scratch.arena,
+                    bs.segments,
                     bin.t0,
                     t,
                     bin.price * bs.share,
@@ -1319,7 +1444,7 @@ impl Sim<'_> {
 
     /// Assemble the per-tier results: merged ledgers, the SLO integral
     /// (recorded as the time-only `slo` row), uptime, counters.
-    fn finish(mut self, policy: String, ft: String, capacity: f64) -> ServiceResult {
+    fn finish(&mut self, policy: String, ft: String, capacity: f64) -> ServiceResult {
         let horizon_end = self.horizon_end;
         let t_start = self.t_start;
         let mut tiers = Vec::with_capacity(self.spec.tiers.len());
@@ -1507,7 +1632,7 @@ mod tests {
     #[test]
     fn revocations_trigger_fleet_repack() {
         let (w, start) = world();
-        let spec = web(24.0); // repack defaults on
+        let spec = web(24.0).repack(true); // pin the full-drain oracle
         let r = Scenario::on(&w)
             .policy(PolicyKind::FtSpot)
             .rule(RevocationRule::ForcedRate { per_day: 12.0 })
@@ -1524,6 +1649,44 @@ mod tests {
         for t in &r.tiers {
             assert!(t.slo_violation_h < r.horizon_h * 0.5, "{}: {}", t.name, t.slo_violation_h);
         }
+    }
+
+    #[test]
+    fn incremental_repack_counts_consolidations_without_transfer_charges() {
+        let (w, start) = world();
+        let spec = web(24.0); // repack defaults to Incremental
+        let r = Scenario::on(&w)
+            .policy(PolicyKind::FtSpot)
+            .rule(RevocationRule::ForcedRate { per_day: 12.0 })
+            .start_t(start)
+            .seed(5)
+            .service(spec)
+            .run();
+        assert!(r.revocations > 0, "forced rate must revoke");
+        assert_eq!(r.repacks, r.revocations, "every revocation consolidates the fleet");
+        // survivors are never drained: no state transfer anywhere
+        assert_eq!(r.ledger().time.get(Category::Repack), 0.0);
+        assert_eq!(r.ledger().cost.get(Category::Repack), 0.0);
+        // warm-joins never overflow an instance
+        assert!(r.peak_bin_used_gb <= r.capacity_gb + 1e-9, "{r:?}");
+    }
+
+    #[test]
+    fn repack_modes_agree_without_revocations() {
+        let (w, start) = world();
+        let runs: Vec<ServiceResult> = [RepackMode::Off, RepackMode::Incremental, RepackMode::Full]
+            .into_iter()
+            .map(|mode| {
+                Scenario::on(&w)
+                    .policy(PolicyKind::OnDemand)
+                    .start_t(start)
+                    .seed(3)
+                    .service(web(24.0).repack_mode(mode))
+                    .run()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "incremental must be invisible without revocations");
+        assert_eq!(runs[0], runs[2], "full must be invisible without revocations");
     }
 
     #[test]

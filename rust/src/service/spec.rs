@@ -10,7 +10,12 @@
 //! name = "web"
 //! horizon_h = 72.0          # steady-state window simulated
 //! capacity_gb = 64          # optional per-instance packing capacity
-//! repack = true             # re-pack survivors on fleet events
+//! repack = "incremental"    # revocation response: "off", "incremental"
+//!                           # (default: displaced replicas warm-join
+//!                           # survivor headroom), or "full" (drain and
+//!                           # re-pack the whole fleet — the oracle).
+//!                           # Plain booleans still parse: true = "full",
+//!                           # false = "off".
 //!
 //! [tier.frontend]
 //! replicas = 4              # target replica count
@@ -109,6 +114,44 @@ impl TierSpec {
     }
 }
 
+/// How the fleet responds to a bin revocation (and burst boundary).
+///
+/// `Incremental` is the default: only the revoked bin's replicas move,
+/// warm-joining residual headroom on surviving bins before falling back
+/// to fresh launches — no survivor is disturbed and no `Repack`
+/// transfer time is charged.  `Full` drains and re-packs the whole
+/// fleet onto a fresh FFD packing (the consolidation oracle
+/// `Incremental` is benchmarked against; also consolidates at burst
+/// ends).  `Off` relaunches victims through the normal pack path and
+/// never consolidates.  With zero revocations and zero bursts all
+/// three modes produce bitwise-identical results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RepackMode {
+    /// never consolidate; victims relaunch via the normal pack path
+    Off,
+    /// move only displaced replicas, warm-joining survivor headroom
+    Incremental,
+    /// drain-and-repack oracle: every survivor moves on every event
+    Full,
+}
+
+impl Default for RepackMode {
+    fn default() -> RepackMode {
+        RepackMode::Incremental
+    }
+}
+
+impl RepackMode {
+    /// The TOML spelling (also the CLI display label).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RepackMode::Off => "off",
+            RepackMode::Incremental => "incremental",
+            RepackMode::Full => "full",
+        }
+    }
+}
+
 /// A validated-on-use service fleet of tiers.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServiceSpec {
@@ -118,10 +161,8 @@ pub struct ServiceSpec {
     /// per-instance packing capacity override (GB); `None` = the
     /// largest instance type in the catalog
     pub capacity_gb: Option<f64>,
-    /// re-pack surviving replicas onto a fresh FFD packing at every
-    /// fleet event (revocation, burst boundary); `false` = only the
-    /// revoked bin's replicas move (the DAG-style minimal response)
-    pub repack: bool,
+    /// revocation response: see [`RepackMode`]
+    pub repack: RepackMode,
     pub tiers: Vec<TierSpec>,
 }
 
@@ -131,7 +172,7 @@ impl ServiceSpec {
             name: name.into(),
             horizon_h: 72.0,
             capacity_gb: None,
-            repack: true,
+            repack: RepackMode::default(),
             tiers: Vec::new(),
         }
     }
@@ -154,9 +195,16 @@ impl ServiceSpec {
         self
     }
 
-    /// Enable/disable mid-session survivor re-packing.
-    pub fn repack(mut self, on: bool) -> ServiceSpec {
-        self.repack = on;
+    /// Boolean shorthand for [`ServiceSpec::repack_mode`], kept for
+    /// call-site compatibility: `true` = the [`RepackMode::Full`]
+    /// drain-and-repack oracle, `false` = [`RepackMode::Off`].
+    pub fn repack(self, on: bool) -> ServiceSpec {
+        self.repack_mode(if on { RepackMode::Full } else { RepackMode::Off })
+    }
+
+    /// Set the revocation response (builder style).
+    pub fn repack_mode(mut self, mode: RepackMode) -> ServiceSpec {
+        self.repack = mode;
         self
     }
 
@@ -288,7 +336,24 @@ impl ServiceSpec {
         let name = cfg.str_or("service.name", "service").to_string();
         let horizon_h = cfg.f64_or("service.horizon_h", 72.0);
         let capacity_gb = cfg.get("service.capacity_gb").and_then(|v| v.as_f64());
-        let repack = cfg.bool_or("service.repack", true);
+        let repack = match cfg.get("service.repack") {
+            None => RepackMode::default(),
+            // legacy boolean form: true was the old always-repack
+            // behavior (now the Full oracle), false disabled it
+            Some(v) if v.as_bool() == Some(true) => RepackMode::Full,
+            Some(v) if v.as_bool() == Some(false) => RepackMode::Off,
+            Some(v) => match v.as_str() {
+                Some("off") => RepackMode::Off,
+                Some("incremental") => RepackMode::Incremental,
+                Some("full") => RepackMode::Full,
+                _ => {
+                    return Err(format!(
+                        "service '{name}': repack must be a bool or one of \
+                         \"off\", \"incremental\", \"full\""
+                    ))
+                }
+            },
+        };
         // enumerate tier names from the key space (BTreeMap keys are
         // sorted, so TOML tier order is sorted-by-name — deterministic)
         let mut names: Vec<String> = Vec::new();
@@ -463,7 +528,8 @@ run_h = 6.0
         assert_eq!(s.name, "web");
         assert_eq!(s.horizon_h, 48.0);
         assert_eq!(s.capacity_gb, Some(64.0));
-        assert!(!s.repack);
+        // legacy boolean form: false maps to Off
+        assert_eq!(s.repack, RepackMode::Off);
         assert_eq!(s.len(), 3);
         // sorted-by-name order from the config key space
         assert_eq!(s.tiers[0].name, "api");
@@ -496,8 +562,29 @@ run_h = 6.0
         let s = ServiceSpec::parse("[tier.a]\nreplicas = 1\nmem_gb = 4.0\n").unwrap();
         assert_eq!(s.name, "service");
         assert_eq!(s.horizon_h, 72.0);
-        assert!(s.repack);
+        assert_eq!(s.repack, RepackMode::Incremental);
         assert_eq!(s.tiers[0].slack, 0.05);
         assert_eq!(s.tiers[0].run_h, None);
+    }
+
+    #[test]
+    fn repack_mode_parses_strings_and_booleans() {
+        let tier = "[tier.a]\nreplicas = 1\nmem_gb = 4.0\n";
+        let with = |v: &str| format!("[service]\nrepack = {v}\n{tier}");
+        assert_eq!(ServiceSpec::parse(&with("\"off\"")).unwrap().repack, RepackMode::Off);
+        assert_eq!(
+            ServiceSpec::parse(&with("\"incremental\"")).unwrap().repack,
+            RepackMode::Incremental
+        );
+        assert_eq!(ServiceSpec::parse(&with("\"full\"")).unwrap().repack, RepackMode::Full);
+        assert_eq!(ServiceSpec::parse(&with("true")).unwrap().repack, RepackMode::Full);
+        assert_eq!(ServiceSpec::parse(&with("false")).unwrap().repack, RepackMode::Off);
+        assert!(ServiceSpec::parse(&with("\"sometimes\""))
+            .unwrap_err()
+            .contains("repack must be"));
+        // builder shorthand maps the same way
+        assert_eq!(ServiceSpec::new("b").repack(true).repack, RepackMode::Full);
+        assert_eq!(ServiceSpec::new("b").repack(false).repack, RepackMode::Off);
+        assert_eq!(ServiceSpec::new("b").repack, RepackMode::Incremental);
     }
 }

@@ -64,8 +64,22 @@ impl Category {
             Category::Slo => "slo",
         }
     }
-    fn index(self) -> usize {
-        CATEGORIES.iter().position(|&c| c == self).unwrap()
+    /// Position in [`CATEGORIES`] — the arena's 1-byte encoding
+    /// (`CATEGORIES[c.index()] == c`): an explicit match instead of a
+    /// linear scan, since the hot replay loops decode one per segment.
+    pub fn index(self) -> usize {
+        match self {
+            Category::Useful => 0,
+            Category::Checkpoint => 1,
+            Category::Recovery => 2,
+            Category::Reexec => 3,
+            Category::Startup => 4,
+            Category::Migration => 5,
+            Category::Buffer => 6,
+            Category::Idle => 7,
+            Category::Repack => 8,
+            Category::Slo => 9,
+        }
     }
 }
 
@@ -167,6 +181,13 @@ impl Ledger {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn index_matches_categories_order() {
+        for (i, &c) in CATEGORIES.iter().enumerate() {
+            assert_eq!(c.index(), i, "{c} encodes to the wrong slot");
+        }
+    }
 
     #[test]
     fn categories_sum_to_total() {

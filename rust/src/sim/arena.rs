@@ -1,0 +1,450 @@
+//! Struct-of-arrays segment arena — the hot-path timeline store shared
+//! by the DAG and service runners (DESIGN.md §11).
+//!
+//! Both runners plan each session as a list of activity *segments*
+//! (category, duration, advances-frontier?, commits-checkpoint?) and
+//! then replay those lists many times: at session end, at revocations,
+//! and — worst — inside the ForcedCount frontier sweep, which walks
+//! every live timeline on every reschedule.  The previous layout was
+//! one `Vec<Segment>` per stage (a 24-byte AoS element behind its own
+//! heap allocation), so a sweep over a fleet chased one pointer per
+//! stage and the Breakdown accumulation loop touched scattered memory.
+//!
+//! [`SegArena`] flattens every timeline of a run into three parallel
+//! vectors (`cats: u8`, `durs: f64`, `flags: u8`); a stage holds a
+//! [`SegRange`] — two `u32`s — instead of an owning vector.  Building a
+//! session is `arena.start()` … `arena.push(..)` … `arena.finish(lo)`;
+//! ranges stay valid for the whole run because the arena only grows
+//! (it is cleared between runs, which is what makes a reused
+//! [`Scratch`] free — the capacity survives, the contents do not).
+//!
+//! The replay primitives ([`record_spans`], [`useful_done_rel`],
+//! [`replay_spans`], [`useful_done_abs`]) are verbatim ports of the
+//! runner-private functions they replace, down to every epsilon and
+//! accumulation order, so the arena engine is bit-identical to the
+//! Vec-of-structs engine — pinned by `tests/engine_equivalence.rs`,
+//! which keeps the old loops as in-test oracles.
+
+use super::accounting::{Category, Ledger, CATEGORIES};
+use crate::job::JobProgress;
+
+/// Segment flag: the span executes work beyond the historical frontier
+/// (it advances the run's global new-work clock — the Count rule's
+/// measure).
+pub const FLAG_ADVANCES: u8 = 1;
+/// Segment flag: a completed checkpoint — volatile progress becomes
+/// durable when (and only when) the span runs to its full duration.
+pub const FLAG_COMMITS: u8 = 2;
+
+/// One activity span, decoded from the arena (a value copy — the arena
+/// itself never hands out references into its columns).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Seg {
+    pub cat: Category,
+    pub dur: f64,
+    pub advances: bool,
+    pub commits: bool,
+}
+
+/// A half-open range of arena indices — a stage's session timeline.
+/// Two `u32`s where a `Vec<Segment>` used to be.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SegRange {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl SegRange {
+    pub fn len(self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// The flat timeline store: three parallel columns, one element per
+/// segment, across every session of a run.
+#[derive(Clone, Debug, Default)]
+pub struct SegArena {
+    cats: Vec<u8>,
+    durs: Vec<f64>,
+    flags: Vec<u8>,
+}
+
+impl SegArena {
+    pub fn new() -> SegArena {
+        SegArena::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.durs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.durs.is_empty()
+    }
+
+    /// Drop every timeline but keep the allocations (the scratch-reuse
+    /// contract: capacity survives across runs).
+    pub fn clear(&mut self) {
+        self.cats.clear();
+        self.durs.clear();
+        self.flags.clear();
+    }
+
+    /// Cursor for a new timeline; pair with [`SegArena::finish`].
+    pub fn start(&self) -> u32 {
+        debug_assert!(self.durs.len() <= u32::MAX as usize, "arena overflow");
+        self.durs.len() as u32
+    }
+
+    pub fn push(&mut self, cat: Category, dur: f64, advances: bool, commits: bool) {
+        self.cats.push(cat.index() as u8);
+        self.durs.push(dur);
+        self.flags
+            .push((advances as u8 * FLAG_ADVANCES) | (commits as u8 * FLAG_COMMITS));
+    }
+
+    /// Close the timeline opened at `lo`.
+    pub fn finish(&self, lo: u32) -> SegRange {
+        SegRange { lo, hi: self.start() }
+    }
+
+    pub fn get(&self, i: u32) -> Seg {
+        let i = i as usize;
+        Seg {
+            cat: CATEGORIES[self.cats[i] as usize],
+            dur: self.durs[i],
+            advances: self.flags[i] & FLAG_ADVANCES != 0,
+            commits: self.flags[i] & FLAG_COMMITS != 0,
+        }
+    }
+
+    pub fn iter(&self, r: SegRange) -> impl Iterator<Item = Seg> + '_ {
+        (r.lo..r.hi).map(move |i| self.get(i))
+    }
+
+    /// Sum of durations over `r` — the session length, accumulated in
+    /// push order (the same order the old `Vec<Segment>` summed in).
+    pub fn total_dur(&self, r: SegRange) -> f64 {
+        self.durs[r.lo as usize..r.hi as usize].iter().sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// replay primitives
+//
+// Two clock conventions, inherited from the runners they were lifted
+// out of: the DAG runner replays with a *relative* offset from session
+// start (`record_spans` / `useful_done_rel`), the service runner with
+// an *absolute* clock (`replay_spans` / `useful_done_abs`).  They also
+// differ in cut/commit epsilons; both are preserved exactly.
+
+/// Replay a timeline up to the relative cutoff `upto` (hours from the
+/// session start), mutating the ledger.  Returns
+/// `(work, useful, committed)`: total Reexec+Useful hours executed,
+/// the frontier-advancing subset, and the hours made durable by
+/// completed checkpoints.  The DAG runner's span arithmetic, verbatim.
+pub fn record_spans(
+    ledger: &mut Ledger,
+    arena: &SegArena,
+    range: SegRange,
+    upto: f64,
+    price_share: f64,
+) -> (f64, f64, f64) {
+    let mut off = 0.0f64;
+    let (mut work, mut useful, mut committed, mut pending) = (0.0, 0.0, 0.0, 0.0);
+    for s in arena.iter(range) {
+        if off >= upto - 1e-12 {
+            break;
+        }
+        let run = s.dur.min(upto - off);
+        ledger.span(s.cat, run, price_share);
+        if matches!(s.cat, Category::Reexec | Category::Useful) {
+            work += run;
+            pending += run;
+            if s.advances {
+                useful += run;
+            }
+        }
+        if s.commits && run >= s.dur - 1e-12 {
+            committed += pending;
+            pending = 0.0;
+        }
+        off += s.dur;
+    }
+    (work, useful, committed)
+}
+
+/// Frontier-advancing work a timeline has executed `d` hours into its
+/// session (relative clock — the DAG runner's sweep primitive).
+pub fn useful_done_rel(arena: &SegArena, range: SegRange, d: f64) -> f64 {
+    let mut off = 0.0f64;
+    let mut u = 0.0f64;
+    for s in arena.iter(range) {
+        if off >= d - 1e-12 {
+            break;
+        }
+        if s.advances {
+            u += s.dur.min(d - off);
+        }
+        off += s.dur;
+    }
+    u
+}
+
+/// Replay a timeline up to the absolute cutoff `upto`, mutating the
+/// ledger (and, for lead batch stages, the replica's progress and
+/// frontier) with exactly `sim::run::execute`'s per-span arithmetic.
+/// Standby copies record their runtime as cost-only
+/// [`Category::Idle`].  Returns the frontier-advancing work executed.
+/// The service runner's span arithmetic, verbatim.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_spans(
+    ledger: &mut Ledger,
+    progress: Option<(&mut JobProgress, &mut f64)>,
+    arena: &SegArena,
+    range: SegRange,
+    t0: f64,
+    upto: f64,
+    price: f64,
+    standby: bool,
+) -> f64 {
+    let mut off = t0;
+    let mut useful = 0.0f64;
+    let mut prog = progress;
+    for s in arena.iter(range) {
+        let cut = upto < off + s.dur;
+        let run = if cut { (upto - off).max(0.0) } else { s.dur };
+        if standby {
+            ledger.cost.add(Category::Idle, run * price);
+        } else {
+            ledger.span(s.cat, run, price);
+            if matches!(s.cat, Category::Reexec | Category::Useful) {
+                if let Some((p, frontier)) = prog.as_mut() {
+                    p.volatile_h += run;
+                    if s.advances {
+                        **frontier = frontier.max(p.total_h());
+                    }
+                }
+                if s.advances {
+                    useful += run;
+                }
+            }
+            if s.commits && run >= s.dur {
+                if let Some((p, _)) = prog.as_mut() {
+                    p.commit();
+                }
+            }
+        }
+        if cut {
+            break;
+        }
+        off += s.dur;
+    }
+    useful
+}
+
+/// Frontier-advancing work a timeline has executed by the absolute
+/// time `at` (session started at `t0` — the service runner's sweep
+/// primitive).
+pub fn useful_done_abs(arena: &SegArena, range: SegRange, t0: f64, at: f64) -> f64 {
+    let mut off = t0;
+    let mut u = 0.0f64;
+    for s in arena.iter(range) {
+        if off >= at - 1e-12 {
+            break;
+        }
+        if s.advances {
+            u += s.dur.min(at - off);
+        }
+        off += s.dur;
+    }
+    u
+}
+
+// ---------------------------------------------------------------------
+// per-worker scratch
+
+/// Reusable per-worker working memory for the sim hot path: the
+/// segment arena plus the ForcedCount sweep buffers and the threshold
+/// scratch.  One `Scratch` per pool worker (threaded through
+/// [`Pool::map_with`](crate::coordinator::Pool::map_with)) turns the
+/// per-(point × seed) allocation churn of a sweep into amortized
+/// reuse.  A `Scratch` never affects numeric results — every run
+/// clears what it borrows (pinned by the fresh-vs-reused cases in
+/// `tests/engine_equivalence.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    /// flat segment timelines for the run in flight
+    pub arena: SegArena,
+    /// ForcedCount sweep: advancing spans as absolute `(start, end)`
+    pub spans: Vec<(f64, f64)>,
+    /// ForcedCount sweep: sorted span boundaries
+    pub bounds: Vec<f64>,
+    /// ForcedCount schedule: sorted frontier thresholds
+    pub thresholds: Vec<f64>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena_of(segs: &[(Category, f64, bool, bool)]) -> (SegArena, SegRange) {
+        let mut a = SegArena::new();
+        let lo = a.start();
+        for &(cat, dur, adv, com) in segs {
+            a.push(cat, dur, adv, com);
+        }
+        let r = a.finish(lo);
+        (a, r)
+    }
+
+    #[test]
+    fn push_get_roundtrip_all_categories() {
+        let mut a = SegArena::new();
+        let lo = a.start();
+        for (i, &c) in CATEGORIES.iter().enumerate() {
+            a.push(c, i as f64 + 0.5, i % 2 == 0, i % 3 == 0);
+        }
+        let r = a.finish(lo);
+        assert_eq!(r.len(), CATEGORIES.len());
+        for (i, s) in a.iter(r).enumerate() {
+            assert_eq!(s.cat, CATEGORIES[i]);
+            assert_eq!(s.dur, i as f64 + 0.5);
+            assert_eq!(s.advances, i % 2 == 0);
+            assert_eq!(s.commits, i % 3 == 0);
+        }
+    }
+
+    #[test]
+    fn ranges_survive_later_pushes() {
+        let mut a = SegArena::new();
+        let lo1 = a.start();
+        a.push(Category::Useful, 1.0, true, false);
+        let r1 = a.finish(lo1);
+        let lo2 = a.start();
+        a.push(Category::Startup, 0.1, false, false);
+        a.push(Category::Useful, 2.0, true, false);
+        let r2 = a.finish(lo2);
+        assert_eq!(r1.len(), 1);
+        assert_eq!(r2.len(), 2);
+        assert_eq!(a.get(r1.lo).dur, 1.0);
+        assert_eq!(a.iter(r2).map(|s| s.dur).sum::<f64>(), 2.1);
+        assert_eq!(a.total_dur(r2), 2.1);
+    }
+
+    #[test]
+    fn clear_keeps_capacity_drops_contents() {
+        let (mut a, r) = arena_of(&[(Category::Useful, 3.0, true, false)]);
+        assert_eq!(r.len(), 1);
+        a.clear();
+        assert!(a.is_empty());
+        assert_eq!(a.start(), 0);
+    }
+
+    #[test]
+    fn record_spans_commits_only_completed_checkpoints() {
+        let (a, r) = arena_of(&[
+            (Category::Startup, 0.1, false, false),
+            (Category::Useful, 2.0, true, false),
+            (Category::Checkpoint, 0.2, false, true),
+            (Category::Useful, 1.0, true, false),
+        ]);
+        // cut mid-checkpoint: nothing durable
+        let mut l = Ledger::new();
+        let (work, useful, committed) = record_spans(&mut l, &a, r, 2.2, 1.0);
+        assert!((work - 2.0).abs() < 1e-12);
+        assert!((useful - 2.0).abs() < 1e-12);
+        assert_eq!(committed, 0.0);
+        // full replay: the checkpoint commits the first chunk only
+        let mut l = Ledger::new();
+        let (work, useful, committed) = record_spans(&mut l, &a, r, 10.0, 1.0);
+        assert!((work - 3.0).abs() < 1e-12);
+        assert!((useful - 3.0).abs() < 1e-12);
+        assert!((committed - 2.0).abs() < 1e-12);
+        assert!((l.time.get(Category::Checkpoint) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn useful_done_rel_skips_non_advancing_spans() {
+        let (a, r) = arena_of(&[
+            (Category::Startup, 0.5, false, false),
+            (Category::Reexec, 1.0, false, false),
+            (Category::Useful, 2.0, true, false),
+        ]);
+        assert_eq!(useful_done_rel(&a, r, 0.4), 0.0);
+        assert_eq!(useful_done_rel(&a, r, 1.5), 0.0);
+        assert!((useful_done_rel(&a, r, 2.5) - 1.0).abs() < 1e-12);
+        assert!((useful_done_rel(&a, r, 99.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_spans_standby_is_cost_only_idle() {
+        let (a, r) = arena_of(&[
+            (Category::Startup, 0.1, false, false),
+            (Category::Useful, 4.0, true, false),
+        ]);
+        let mut l = Ledger::new();
+        let useful = replay_spans(&mut l, None, &a, r, 10.0, 12.0, 0.5, true);
+        assert_eq!(useful, 0.0);
+        assert_eq!(l.time.total(), 0.0, "standby records no time");
+        assert!((l.cost.get(Category::Idle) - 2.0 * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_spans_tracks_progress_and_frontier() {
+        let (a, r) = arena_of(&[
+            (Category::Startup, 0.1, false, false),
+            (Category::Useful, 2.0, true, false),
+            (Category::Checkpoint, 0.2, false, true),
+            (Category::Useful, 1.0, true, false),
+        ]);
+        let mut l = Ledger::new();
+        let mut p = JobProgress::new();
+        let mut frontier = 0.0f64;
+        let useful =
+            replay_spans(&mut l, Some((&mut p, &mut frontier)), &a, r, 0.0, 99.0, 1.0, false);
+        assert!((useful - 3.0).abs() < 1e-12);
+        assert!((p.durable_h - 2.0).abs() < 1e-12);
+        assert!((p.volatile_h - 1.0).abs() < 1e-12);
+        assert!((frontier - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn useful_done_abs_uses_absolute_clock() {
+        let (a, r) = arena_of(&[
+            (Category::Startup, 0.5, false, false),
+            (Category::Useful, 3.0, true, false),
+        ]);
+        assert_eq!(useful_done_abs(&a, r, 100.0, 100.4), 0.0);
+        assert!((useful_done_abs(&a, r, 100.0, 101.5) - 1.0).abs() < 1e-12);
+        assert!((useful_done_abs(&a, r, 100.0, 200.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scratch_reuse_is_invisible() {
+        let mut s = Scratch::new();
+        s.spans.push((1.0, 2.0));
+        s.bounds.push(3.0);
+        s.thresholds.push(4.0);
+        let lo = s.arena.start();
+        s.arena.push(Category::Useful, 1.0, true, false);
+        let _ = s.arena.finish(lo);
+        // a run's prologue: clear everything it borrows
+        s.arena.clear();
+        s.spans.clear();
+        s.bounds.clear();
+        s.thresholds.clear();
+        assert!(s.arena.is_empty() && s.spans.is_empty());
+        assert!(s.bounds.is_empty() && s.thresholds.is_empty());
+    }
+}

@@ -3,12 +3,14 @@
 //! result aggregation.
 
 pub mod accounting;
+pub mod arena;
 pub mod engine;
 pub mod result;
 pub mod run;
 pub mod world;
 
 pub use accounting::{Breakdown, Category, Ledger, CATEGORIES};
+pub use arena::{Scratch, Seg, SegArena, SegRange};
 pub use engine::{Engine, Event, SimTime};
 pub use result::AggregateResult;
 #[allow(deprecated)] // legacy shim re-exported for external migrators

@@ -22,6 +22,7 @@
 //! exactly the job length on completion.
 
 use super::accounting::{Category, Ledger};
+use super::arena::Scratch;
 use super::world::World;
 use crate::ft::{FtMechanism, Recovery};
 use crate::job::{Job, JobProgress};
@@ -117,6 +118,19 @@ enum Schedule {
 
 impl Schedule {
     fn new(rule: RevocationRule, job: &Job, start_t: f64, rng: &mut Rng) -> Schedule {
+        Schedule::new_in(rule, job, start_t, rng, Vec::new())
+    }
+
+    /// [`Schedule::new`] building the Count thresholds into a reused
+    /// buffer (same draws, same sort, same values — the scratch only
+    /// donates capacity).
+    fn new_in(
+        rule: RevocationRule,
+        job: &Job,
+        start_t: f64,
+        rng: &mut Rng,
+        mut buf: Vec<f64>,
+    ) -> Schedule {
         match rule {
             RevocationRule::Trace => Schedule::Trace,
             RevocationRule::ForcedRate { per_day } => {
@@ -126,12 +140,13 @@ impl Schedule {
             RevocationRule::ForcedCount { total } => {
                 // Sorted-uniform fractions of the job length; capped below
                 // 0.98 so the final stretch always completes.
-                let mut fr: Vec<f64> = (0..total).map(|_| rng.f64() * 0.98).collect();
-                fr.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                Schedule::Count {
-                    thresholds: fr.iter().map(|f| f * job.exec_len_h).collect(),
-                    idx: 0,
+                buf.clear();
+                buf.extend((0..total).map(|_| rng.f64() * 0.98));
+                buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for f in buf.iter_mut() {
+                    *f *= job.exec_len_h;
                 }
+                Schedule::Count { thresholds: buf, idx: 0 }
             }
         }
     }
@@ -200,12 +215,35 @@ pub(crate) fn execute(
     cfg: &RunConfig,
     seed: u64,
 ) -> JobResult {
+    execute_in(world, policy, ft, job, cfg, seed, &mut Scratch::new())
+}
+
+/// [`execute`] with caller-owned working memory: the ForcedCount
+/// threshold buffer is borrowed from (and returned to) `scratch`, so a
+/// sweep worker replaying thousands of (point × seed) arms stops
+/// re-allocating it per run.  Numerically identical to [`execute`] for
+/// every input — the scratch only donates capacity.
+pub(crate) fn execute_in(
+    world: &World,
+    policy: &mut dyn Policy,
+    ft: &dyn FtMechanism,
+    job: &Job,
+    cfg: &RunConfig,
+    seed: u64,
+    scratch: &mut Scratch,
+) -> JobResult {
     policy.reset();
     if ft.degree() > 1 {
         return replicated::simulate(world, policy, ft, job, cfg, seed);
     }
     let mut rng = Rng::with_stream(seed, job.id ^ 0x51307F7);
-    let mut schedule = Schedule::new(cfg.rule, job, cfg.start_t, &mut rng);
+    let mut schedule = Schedule::new_in(
+        cfg.rule,
+        job,
+        cfg.start_t,
+        &mut rng,
+        std::mem::take(&mut scratch.thresholds),
+    );
 
     let mut ledger = Ledger::new();
     let mut progress = JobProgress::new();
@@ -386,6 +424,11 @@ pub(crate) fn execute(
         // completed within this session
         close_session!();
         break;
+    }
+
+    // hand the threshold buffer back for the next run on this worker
+    if let Schedule::Count { thresholds, .. } = schedule {
+        scratch.thresholds = thresholds;
     }
 
     let completed = progress.is_complete(job);

@@ -1,0 +1,520 @@
+//! Pinned-equivalence harness for the hot-path overhaul (DESIGN.md
+//! §11): the struct-of-arrays segment arena and the reusable per-worker
+//! [`Scratch`] must be *invisible* — identical results to the
+//! Vec-of-structs engine they replaced, for any scratch state and any
+//! worker count.
+//!
+//! Two layers of pinning:
+//!
+//! 1. **primitive oracles** — the pre-arena runner-private
+//!    `Vec<Segment>` replay loops, kept verbatim in this file, compared
+//!    bitwise against their public arena ports over randomized segment
+//!    sequences and cutoffs;
+//! 2. **scenario grids** — (policy × ft × rule) × seeds for single-job,
+//!    DAG, and service workloads: run-twice determinism, fresh-vs-reused
+//!    scratch, serial-vs-8-workers, and the legacy `simulate_job` shim.
+//!    Comparisons are bitwise except under the ForcedCount rule, whose
+//!    threshold pipeline is pinned at 1e-9.
+
+use siwoft::job::JobProgress;
+use siwoft::prelude::*;
+use siwoft::sim::arena::{record_spans, replay_spans, useful_done_abs, useful_done_rel, SegArena};
+use siwoft::sim::{Category, JobResult, Ledger, SegRange, CATEGORIES};
+use siwoft::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// 1. primitive oracles: the old Vec<Segment> loops, verbatim
+
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    cat: Category,
+    dur: f64,
+    advances: bool,
+    commits: bool,
+}
+
+/// The DAG runner's old `record_spans`, byte-for-byte.
+fn record_spans_oracle(
+    ledger: &mut Ledger,
+    segs: &[Segment],
+    upto: f64,
+    price_share: f64,
+) -> (f64, f64, f64) {
+    let mut off = 0.0f64;
+    let (mut work, mut useful, mut committed, mut pending) = (0.0, 0.0, 0.0, 0.0);
+    for s in segs {
+        if off >= upto - 1e-12 {
+            break;
+        }
+        let run = s.dur.min(upto - off);
+        ledger.span(s.cat, run, price_share);
+        if matches!(s.cat, Category::Reexec | Category::Useful) {
+            work += run;
+            pending += run;
+            if s.advances {
+                useful += run;
+            }
+        }
+        if s.commits && run >= s.dur - 1e-12 {
+            committed += pending;
+            pending = 0.0;
+        }
+        off += s.dur;
+    }
+    (work, useful, committed)
+}
+
+/// The DAG runner's old `useful_done_at`, byte-for-byte.
+fn useful_done_rel_oracle(segs: &[Segment], d: f64) -> f64 {
+    let mut off = 0.0f64;
+    let mut u = 0.0f64;
+    for s in segs {
+        if off >= d - 1e-12 {
+            break;
+        }
+        if s.advances {
+            u += s.dur.min(d - off);
+        }
+        off += s.dur;
+    }
+    u
+}
+
+/// The service runner's old `replay_spans`, byte-for-byte.
+fn replay_spans_oracle(
+    ledger: &mut Ledger,
+    mut progress: Option<(&mut JobProgress, &mut f64)>,
+    segs: &[Segment],
+    t0: f64,
+    upto: f64,
+    price: f64,
+    standby: bool,
+) -> f64 {
+    let mut off = t0;
+    let mut useful = 0.0f64;
+    for s in segs {
+        let cut = upto < off + s.dur;
+        let run = if cut { (upto - off).max(0.0) } else { s.dur };
+        if standby {
+            ledger.cost.add(Category::Idle, run * price);
+        } else {
+            ledger.span(s.cat, run, price);
+            if matches!(s.cat, Category::Reexec | Category::Useful) {
+                if let Some((p, frontier)) = progress.as_mut() {
+                    p.volatile_h += run;
+                    if s.advances {
+                        **frontier = frontier.max(p.total_h());
+                    }
+                }
+                if s.advances {
+                    useful += run;
+                }
+            }
+            if s.commits && run >= s.dur {
+                if let Some((p, _)) = progress.as_mut() {
+                    p.commit();
+                }
+            }
+        }
+        if cut {
+            break;
+        }
+        off += s.dur;
+    }
+    useful
+}
+
+/// The service runner's old `useful_done_at`, byte-for-byte.
+fn useful_done_abs_oracle(segs: &[Segment], t0: f64, at: f64) -> f64 {
+    let mut off = t0;
+    let mut u = 0.0f64;
+    for s in segs {
+        if off >= at - 1e-12 {
+            break;
+        }
+        if s.advances {
+            u += s.dur.min(at - off);
+        }
+        off += s.dur;
+    }
+    u
+}
+
+fn random_segs(r: &mut Rng, max_len: usize) -> Vec<Segment> {
+    let n = (r.f64() * (max_len as f64 + 1.0)) as usize % (max_len + 1);
+    (0..n)
+        .map(|_| Segment {
+            cat: CATEGORIES[(r.f64() * CATEGORIES.len() as f64) as usize % CATEGORIES.len()],
+            dur: r.f64() * 3.0,
+            advances: r.f64() < 0.5,
+            commits: r.f64() < 0.3,
+        })
+        .collect()
+}
+
+fn arena_of(segs: &[Segment]) -> (SegArena, SegRange) {
+    let mut a = SegArena::new();
+    let lo = a.start();
+    for s in segs {
+        a.push(s.cat, s.dur, s.advances, s.commits);
+    }
+    let r = a.finish(lo);
+    (a, r)
+}
+
+#[test]
+fn arena_record_spans_matches_vec_oracle_bitwise() {
+    let mut rng = Rng::new(0xE01);
+    for case in 0..300 {
+        let segs = random_segs(&mut rng, 8);
+        let (arena, range) = arena_of(&segs);
+        let total: f64 = segs.iter().map(|s| s.dur).sum();
+        for upto in [-0.5, 0.0, total * rng.f64(), total, total + 1.0] {
+            let price = rng.f64() * 2.0;
+            let mut la = Ledger::new();
+            let mut lb = Ledger::new();
+            let got = record_spans(&mut la, &arena, range, upto, price);
+            let want = record_spans_oracle(&mut lb, &segs, upto, price);
+            assert_eq!(got, want, "case {case} upto {upto}");
+            assert_eq!(la, lb, "case {case} upto {upto}");
+        }
+    }
+}
+
+#[test]
+fn arena_useful_done_rel_matches_vec_oracle_bitwise() {
+    let mut rng = Rng::new(0xE02);
+    for case in 0..300 {
+        let segs = random_segs(&mut rng, 8);
+        let (arena, range) = arena_of(&segs);
+        let total: f64 = segs.iter().map(|s| s.dur).sum();
+        for d in [-0.5, 0.0, total * rng.f64(), total, total + 1.0] {
+            let got = useful_done_rel(&arena, range, d);
+            let want = useful_done_rel_oracle(&segs, d);
+            assert_eq!(got.to_bits(), want.to_bits(), "case {case} d {d}");
+        }
+    }
+}
+
+#[test]
+fn arena_replay_spans_matches_vec_oracle_bitwise() {
+    let mut rng = Rng::new(0xE03);
+    for case in 0..300 {
+        let segs = random_segs(&mut rng, 8);
+        let (arena, range) = arena_of(&segs);
+        let t0 = rng.f64() * 100.0;
+        let total: f64 = segs.iter().map(|s| s.dur).sum();
+        for upto in [t0 - 1.0, t0, t0 + total * 0.37, t0 + total, t0 + total + 5.0] {
+            for standby in [false, true] {
+                let price = rng.f64();
+                // without progress tracking
+                let mut la = Ledger::new();
+                let mut lb = Ledger::new();
+                let got = replay_spans(&mut la, None, &arena, range, t0, upto, price, standby);
+                let want = replay_spans_oracle(&mut lb, None, &segs, t0, upto, price, standby);
+                assert_eq!(got.to_bits(), want.to_bits(), "case {case} upto {upto}");
+                assert_eq!(la, lb, "case {case} upto {upto}");
+                // with a lead replica's progress + frontier
+                let mut la = Ledger::new();
+                let mut lb = Ledger::new();
+                let mut pa = JobProgress::new();
+                let mut pb = JobProgress::new();
+                pa.durable_h = 1.25;
+                pb.durable_h = 1.25;
+                let (mut fa, mut fb) = (2.5f64, 2.5f64);
+                let got = replay_spans(
+                    &mut la,
+                    Some((&mut pa, &mut fa)),
+                    &arena,
+                    range,
+                    t0,
+                    upto,
+                    price,
+                    standby,
+                );
+                let want = replay_spans_oracle(
+                    &mut lb,
+                    Some((&mut pb, &mut fb)),
+                    &segs,
+                    t0,
+                    upto,
+                    price,
+                    standby,
+                );
+                assert_eq!(got.to_bits(), want.to_bits(), "case {case} upto {upto}");
+                assert_eq!(la, lb, "case {case} upto {upto}");
+                assert_eq!(
+                    (pa.volatile_h.to_bits(), pa.durable_h.to_bits(), fa.to_bits()),
+                    (pb.volatile_h.to_bits(), pb.durable_h.to_bits(), fb.to_bits()),
+                    "case {case} upto {upto}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_useful_done_abs_matches_vec_oracle_bitwise() {
+    let mut rng = Rng::new(0xE04);
+    for case in 0..300 {
+        let segs = random_segs(&mut rng, 8);
+        let (arena, range) = arena_of(&segs);
+        let t0 = rng.f64() * 50.0;
+        let total: f64 = segs.iter().map(|s| s.dur).sum();
+        for at in [t0 - 1.0, t0, t0 + total * rng.f64(), t0 + total + 2.0] {
+            let got = useful_done_abs(&arena, range, t0, at);
+            let want = useful_done_abs_oracle(&segs, t0, at);
+            assert_eq!(got.to_bits(), want.to_bits(), "case {case} at {at}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. scenario grids
+
+fn world() -> (World, f64) {
+    let mut w = World::generate(64, 1.5, 17);
+    let start = w.split_train(0.6);
+    (w, start)
+}
+
+const RULES: [RevocationRule; 3] = [
+    RevocationRule::Trace,
+    RevocationRule::ForcedRate { per_day: 6.0 },
+    RevocationRule::ForcedCount { total: 2 },
+];
+
+/// Bitwise everywhere except the ForcedCount threshold pipeline (1e-9).
+fn tol_for(rule: RevocationRule) -> f64 {
+    match rule {
+        RevocationRule::ForcedCount { .. } => 1e-9,
+        _ => 0.0,
+    }
+}
+
+fn assert_ledger_close(a: &Ledger, b: &Ledger, tol: f64, ctx: &str) {
+    if tol == 0.0 {
+        assert_eq!(a, b, "{ctx}");
+        return;
+    }
+    for &c in CATEGORIES.iter() {
+        assert!(
+            (a.time.get(c) - b.time.get(c)).abs() <= tol,
+            "{ctx}: time[{c:?}] {} vs {}",
+            a.time.get(c),
+            b.time.get(c)
+        );
+        assert!(
+            (a.cost.get(c) - b.cost.get(c)).abs() <= tol,
+            "{ctx}: cost[{c:?}] {} vs {}",
+            a.cost.get(c),
+            b.cost.get(c)
+        );
+    }
+}
+
+fn assert_job_eq(a: &JobResult, b: &JobResult, tol: f64, ctx: &str) {
+    assert_eq!(a.policy, b.policy, "{ctx}");
+    assert_eq!(a.ft, b.ft, "{ctx}");
+    assert_eq!(a.revocations, b.revocations, "{ctx}");
+    assert_eq!(a.sessions, b.sessions, "{ctx}");
+    assert_eq!(a.ondemand_sessions, b.ondemand_sessions, "{ctx}");
+    assert_eq!(a.completed, b.completed, "{ctx}");
+    if tol == 0.0 {
+        assert_eq!(a.makespan_h.to_bits(), b.makespan_h.to_bits(), "{ctx}: makespan");
+    } else {
+        assert!((a.makespan_h - b.makespan_h).abs() <= tol, "{ctx}: makespan");
+    }
+    assert_ledger_close(&a.ledger, &b.ledger, tol, ctx);
+}
+
+fn assert_dag_close(a: &DagResult, b: &DagResult, tol: f64, ctx: &str) {
+    if tol == 0.0 {
+        assert_eq!(a, b, "{ctx}");
+        return;
+    }
+    assert_eq!(
+        (a.revocations, a.bins, a.completed),
+        (b.revocations, b.bins, b.completed),
+        "{ctx}"
+    );
+    assert!((a.makespan_h - b.makespan_h).abs() <= tol, "{ctx}: makespan");
+    assert_eq!(a.stages.len(), b.stages.len(), "{ctx}");
+    for (sa, sb) in a.stages.iter().zip(&b.stages) {
+        assert_eq!(sa.name, sb.name, "{ctx}");
+        assert_eq!(
+            (sa.revocations, sa.sessions, sa.completed),
+            (sb.revocations, sb.sessions, sb.completed),
+            "{ctx}: stage {}",
+            sa.name
+        );
+        assert_ledger_close(&sa.ledger, &sb.ledger, tol, &format!("{ctx}: stage {}", sa.name));
+    }
+}
+
+fn assert_service_close(a: &ServiceResult, b: &ServiceResult, tol: f64, ctx: &str) {
+    if tol == 0.0 {
+        assert_eq!(a, b, "{ctx}");
+        return;
+    }
+    assert_eq!(
+        (a.revocations, a.bins, a.repacks, a.completed, a.copack_conflicts),
+        (b.revocations, b.bins, b.repacks, b.completed, b.copack_conflicts),
+        "{ctx}"
+    );
+    assert!((a.makespan_h - b.makespan_h).abs() <= tol, "{ctx}: makespan");
+    assert_eq!(a.tiers.len(), b.tiers.len(), "{ctx}");
+    for (ta, tb) in a.tiers.iter().zip(&b.tiers) {
+        assert_eq!(ta.name, tb.name, "{ctx}");
+        assert_eq!(
+            (ta.revocations, ta.sessions, ta.repacks, ta.completed, ta.slo_met),
+            (tb.revocations, tb.sessions, tb.repacks, tb.completed, tb.slo_met),
+            "{ctx}: tier {}",
+            ta.name
+        );
+        assert!((ta.slo_violation_h - tb.slo_violation_h).abs() <= tol, "{ctx}: slo");
+        assert!((ta.up_h - tb.up_h).abs() <= tol, "{ctx}: up_h");
+        assert_ledger_close(&ta.ledger, &tb.ledger, tol, &format!("{ctx}: tier {}", ta.name));
+    }
+}
+
+#[test]
+fn single_job_grid_pins_scratch_and_legacy_paths() {
+    let (w, start) = world();
+    let mut scratch = Scratch::new();
+    let policies = [PolicyKind::default(), PolicyKind::FtSpot, PolicyKind::OnDemand];
+    let fts = [FtKind::None, FtKind::Checkpoint { n: 2 }, FtKind::Replication { k: 2 }];
+    for &policy in &policies {
+        for &ft in &fts {
+            for &rule in &RULES {
+                for seed in 0..3u64 {
+                    let scen = Scenario::on(&w)
+                        .job(Job::new(7, 3.0, 16.0))
+                        .policy(policy)
+                        .ft(ft)
+                        .rule(rule)
+                        .start_t(start);
+                    let ctx = format!("{policy:?}/{ft:?}/{} seed {seed}", rule.label());
+                    let fresh = scen.run_seeded(seed);
+                    // run-twice determinism, bitwise
+                    assert_job_eq(&fresh, &scen.run_seeded(seed), 0.0, &ctx);
+                    // a dirty reused scratch donates capacity only
+                    let reused = scen.run_seeded_in(&mut scratch, seed);
+                    assert_job_eq(&fresh, &reused, tol_for(rule), &ctx);
+                    // the legacy free-function shim drives the same engine
+                    let mut policy_box = policy.build(&w, start);
+                    let ft_box = ft.build(scen.job_ref());
+                    let cfg = scen.run_config();
+                    #[allow(deprecated)]
+                    let legacy = siwoft::sim::simulate_job(
+                        &w,
+                        policy_box.as_mut(),
+                        ft_box.as_ref(),
+                        scen.job_ref(),
+                        &cfg,
+                        seed,
+                    );
+                    assert_job_eq(&fresh, &legacy, tol_for(rule), &ctx);
+                }
+            }
+        }
+    }
+}
+
+fn diamond() -> DagSpec {
+    DagSpec::new("diamond")
+        .stage("extract", 1.5, 8.0, &[])
+        .stage("train-a", 2.0, 16.0, &["extract"])
+        .stage("train-b", 2.0, 16.0, &["extract"])
+        .stage("merge", 1.0, 8.0, &["train-a", "train-b"])
+}
+
+#[test]
+fn dag_grid_pins_scratch_reuse_and_determinism() {
+    let (w, start) = world();
+    let spec = diamond();
+    let mut scratch = Scratch::new();
+    for &policy in &[PolicyKind::default(), PolicyKind::FtSpot] {
+        for &ft in &[FtKind::None, FtKind::Checkpoint { n: 2 }] {
+            for &rule in &RULES {
+                for seed in 0..3u64 {
+                    let scen = Scenario::on(&w)
+                        .policy(policy)
+                        .ft(ft)
+                        .rule(rule)
+                        .start_t(start)
+                        .dag(spec.clone());
+                    let ctx = format!("{policy:?}/{ft:?}/{} seed {seed}", rule.label());
+                    let fresh = scen.run_seeded(seed);
+                    assert_dag_close(&fresh, &scen.run_seeded(seed), 0.0, &ctx);
+                    let reused = scen.run_seeded_in(&mut scratch, seed);
+                    assert_dag_close(&fresh, &reused, tol_for(rule), &ctx);
+                }
+            }
+        }
+    }
+}
+
+fn grid_fleet(mode: RepackMode) -> ServiceSpec {
+    ServiceSpec::new("grid")
+        .horizon(24.0)
+        .capacity(64.0)
+        .repack_mode(mode)
+        .tier(TierSpec::open("web", 3, 8.0).slack(0.25).burst(8.0, 2.0, 5))
+        .tier(TierSpec::batch("reindex", 1, 16.0, 3.0))
+}
+
+#[test]
+fn service_grid_pins_scratch_reuse_and_determinism() {
+    let (w, start) = world();
+    let mut scratch = Scratch::new();
+    for mode in [RepackMode::Incremental, RepackMode::Full] {
+        for &policy in &[PolicyKind::default(), PolicyKind::OnDemand] {
+            for &ft in &[FtKind::None, FtKind::Replication { k: 2 }] {
+                for &rule in &RULES {
+                    for seed in 0..3u64 {
+                        let scen = Scenario::on(&w)
+                            .policy(policy)
+                            .ft(ft)
+                            .rule(rule)
+                            .start_t(start)
+                            .service(grid_fleet(mode));
+                        let ctx = format!(
+                            "{policy:?}/{ft:?}/{}/{} seed {seed}",
+                            rule.label(),
+                            mode.as_str()
+                        );
+                        let fresh = scen.run_seeded(seed);
+                        assert_service_close(&fresh, &scen.run_seeded(seed), 0.0, &ctx);
+                        let reused = scen.run_seeded_in(&mut scratch, seed);
+                        assert_service_close(&fresh, &reused, tol_for(rule), &ctx);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn worker_count_is_invisible_across_workloads() {
+    let (w, start) = world();
+    let pool = Pool::new(8);
+    let rule = RevocationRule::ForcedRate { per_day: 6.0 };
+
+    let scen = Scenario::on(&w)
+        .job(Job::new(3, 3.0, 16.0))
+        .policy(PolicyKind::FtSpot)
+        .ft(FtKind::Checkpoint { n: 2 })
+        .rule(rule)
+        .start_t(start);
+    assert_eq!(scen.replicate(8), scen.replicate_on(&pool, 8));
+
+    let dag = Scenario::on(&w).rule(rule).start_t(start).dag(diamond());
+    assert_eq!(dag.replicate(8), dag.replicate_on(&pool, 8));
+
+    let svc = Scenario::on(&w)
+        .rule(rule)
+        .start_t(start)
+        .service(grid_fleet(RepackMode::Incremental));
+    assert_eq!(svc.replicate(8), svc.replicate_on(&pool, 8));
+}

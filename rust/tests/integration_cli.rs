@@ -412,6 +412,65 @@ fn serve_max_conns_rejects_excess_connections() {
 }
 
 #[test]
+fn bench_area_emits_schema_tracked_json() {
+    // the BENCH_<area>.json schema EXPERIMENTS.md §Perf tracks:
+    // {area, rows: [{case, workers, items_per_sec, p50_us, p99_us}],
+    //  seed, git_rev} — pinned here so CI's bench-smoke artifacts stay
+    // machine-comparable across PRs
+    for area in ["engine", "service"] {
+        let (out, err, ok) = run(&[
+            "bench", "--area", area, "--markets", "48", "--months", "0.5", "--seed", "3",
+            "--warmup-ms", "5", "--measure-ms", "20", "--out", "-",
+        ]);
+        assert!(ok, "bench --area {area} failed: {err}");
+        let line = out
+            .lines()
+            .rev()
+            .find(|l| l.trim_start().starts_with('{'))
+            .unwrap_or_else(|| panic!("no JSON in bench --area {area} output: {out}"));
+        let doc = siwoft::util::json::Json::parse(line)
+            .unwrap_or_else(|e| panic!("bench --area {area}: bad JSON ({e:?}): {line}"));
+        assert_eq!(doc.get("area").and_then(|j| j.as_str()), Some(area));
+        assert!(doc.get("seed").and_then(|j| j.as_f64()).is_some(), "{area}: missing seed");
+        let rev = doc.get("git_rev").and_then(|j| j.as_str()).expect("git_rev present");
+        assert!(!rev.is_empty(), "{area}: empty git_rev");
+        let rows = doc.get("rows").and_then(|j| j.as_arr()).expect("rows array");
+        assert!(!rows.is_empty(), "{area}: no rows");
+        let mut saw_serial = false;
+        for row in rows {
+            let case = row.get("case").and_then(|j| j.as_str()).expect("row.case");
+            let workers = row.get("workers").and_then(|j| j.as_usize()).expect("row.workers");
+            let ips = row.get("items_per_sec").and_then(|j| j.as_f64()).expect("items_per_sec");
+            let p50 = row.get("p50_us").and_then(|j| j.as_f64()).expect("p50_us");
+            let p99 = row.get("p99_us").and_then(|j| j.as_f64()).expect("p99_us");
+            assert!(!case.is_empty(), "{area}: empty case name");
+            assert!(workers >= 1, "{area}/{case}: workers {workers}");
+            if workers == 1 {
+                saw_serial = true;
+            }
+            assert!(ips >= 0.0 && ips.is_finite(), "{area}/{case}: items_per_sec {ips}");
+            assert!(p50 >= 0.0 && p99 >= 0.0, "{area}/{case}: negative latency");
+            assert!(p99 + 1e-9 >= p50, "{area}/{case}: p99 {p99} below p50 {p50}");
+        }
+        assert!(saw_serial, "{area}: no serial (workers == 1) baseline row");
+    }
+
+    // the file-writing path the CI bench-smoke job uploads from
+    let dir = tmpdir("bench");
+    let (_, err, ok) = run(&[
+        "bench", "--area", "engine", "--markets", "48", "--months", "0.5", "--seed", "3",
+        "--warmup-ms", "5", "--measure-ms", "20", "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "bench --area engine --out <dir> failed: {err}");
+    let path = dir.join("BENCH_engine.json");
+    let body = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{} not written: {e}", path.display()));
+    let doc = siwoft::util::json::Json::parse(&body).expect("valid JSON on disk");
+    assert_eq!(doc.get("area").and_then(|j| j.as_str()), Some("engine"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn ablation_subcommand_runs() {
     let dir = tmpdir("abl");
     let out_dir = dir.to_str().unwrap();

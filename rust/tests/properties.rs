@@ -389,9 +389,10 @@ fn prop_fleet_never_exceeds_bin_capacity_after_repack() {
             (random_service(r), rule, r.next_u64())
         },
         |(spec, rule, seed)| {
-            // repack defaults on: every revocation drains and re-packs
-            // the surviving fleet, so the packing invariant is
-            // re-established mid-session many times per run
+            // the default incremental mode answers every revocation by
+            // warm-joining displaced replicas into survivor headroom, so
+            // the packing invariant is re-established mid-session many
+            // times per run (`repacks` counts one response per revocation)
             let res = Scenario::on(&world)
                 .policy(PolicyKind::FtSpot)
                 .rule(*rule)
@@ -422,6 +423,136 @@ fn prop_fleet_never_exceeds_bin_capacity_after_repack() {
             Ok(())
         },
     );
+}
+
+// ---- incremental re-pack vs the full oracle ---------------------------
+
+#[test]
+fn prop_incremental_repack_keeps_placement_valid() {
+    let mut world = World::generate(48, 1.0, 1111);
+    let start = world.split_train(0.6);
+    check(
+        25,
+        12,
+        |r: &mut Rng| {
+            let rule = match r.below(2) {
+                0 => RevocationRule::ForcedRate { per_day: r.range(4.0, 24.0) },
+                _ => RevocationRule::ForcedCount { total: 1 + r.below(3) as u32 },
+            };
+            (random_service(r), rule, r.next_u64())
+        },
+        |(spec, rule, seed)| {
+            // displaced replicas warm-join survivor headroom: the packing
+            // invariant and replica anti-affinity must survive every join
+            let res = Scenario::on(&world)
+                .policy(PolicyKind::FtSpot)
+                .ft(FtKind::Replication { k: 2 })
+                .rule(*rule)
+                .start_t(start)
+                .seed(*seed)
+                .service(spec.clone().repack_mode(RepackMode::Incremental))
+                .run();
+            if res.peak_bin_used_gb > res.capacity_gb + 1e-9 {
+                return Err(format!(
+                    "warm-join over capacity: {} > {}",
+                    res.peak_bin_used_gb, res.capacity_gb
+                ));
+            }
+            if res.copack_conflicts != 0 {
+                return Err(format!(
+                    "{} anti-affinity violations after warm-join",
+                    res.copack_conflicts
+                ));
+            }
+            if res.revocations > 0 && res.repacks != res.revocations {
+                return Err(format!(
+                    "{} revocations but {} incremental re-packs",
+                    res.revocations, res.repacks
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_incremental_repack_cost_bounded_by_full_oracle() {
+    let mut world = World::generate(48, 1.0, 1212);
+    let start = world.split_train(0.6);
+    check(
+        20,
+        13,
+        |r: &mut Rng| (random_service(r), r.range(4.0, 24.0), r.next_u64()),
+        |(spec, per_day, seed)| {
+            let rule = RevocationRule::ForcedRate { per_day: *per_day };
+            let run = |mode| {
+                Scenario::on(&world)
+                    .policy(PolicyKind::FtSpot)
+                    .rule(rule)
+                    .start_t(start)
+                    .seed(*seed)
+                    .service(spec.clone().repack_mode(mode))
+                    .run()
+            };
+            let incr = run(RepackMode::Incremental);
+            let full = run(RepackMode::Full);
+            // warm-joins are free: only the drain-and-repack oracle bills
+            // Category::Repack, so the mode spread in that category is
+            // non-negative and bounded by the oracle's own total bill
+            let incr_repack = incr.ledger().cost.get(Category::Repack);
+            let full_repack = full.ledger().cost.get(Category::Repack);
+            if incr_repack.abs() > 1e-12 {
+                return Err(format!("incremental charged Repack: {incr_repack}"));
+            }
+            if full_repack < -1e-12 {
+                return Err(format!("oracle Repack negative: {full_repack}"));
+            }
+            if full_repack - incr_repack < -1e-9 {
+                return Err("incremental Repack cost exceeds the full oracle".into());
+            }
+            if full_repack > full.ledger().cost.total() + 1e-9 {
+                return Err("Repack category exceeds the oracle's total cost".into());
+            }
+            for res in [&incr, &full] {
+                if res.revocations > 0 && res.repacks != res.revocations {
+                    return Err(format!(
+                        "{} revocations but {} re-packs",
+                        res.revocations, res.repacks
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_zero_revocation_runs_identical_across_repack_modes() {
+    let mut world = World::generate(48, 1.0, 1313);
+    let start = world.split_train(0.6);
+    check(20, 14, |r: &mut Rng| (random_service(r), r.next_u64()), |(spec, seed)| {
+        // with nothing revoked, no mode ever moves a replica, so the
+        // re-pack strategy must be completely invisible in the result
+        let run = |mode| {
+            Scenario::on(&world)
+                .policy(PolicyKind::FtSpot)
+                .rule(RevocationRule::ForcedCount { total: 0 })
+                .start_t(start)
+                .seed(*seed)
+                .service(spec.clone().repack_mode(mode))
+                .run()
+        };
+        let off = run(RepackMode::Off);
+        let incr = run(RepackMode::Incremental);
+        let full = run(RepackMode::Full);
+        if off.revocations != 0 {
+            return Err(format!("count:0 rule fired {} revocations", off.revocations));
+        }
+        if incr != off || full != off {
+            return Err("repack mode visible with zero revocations".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]

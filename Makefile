@@ -1,7 +1,7 @@
 # Convenience targets; everything also works as plain cargo/pytest
 # invocations (see README.md).
 
-.PHONY: build test test-rust test-python artifacts fig1 docs fmt lint
+.PHONY: build test test-rust test-python artifacts fig1 docs fmt lint lint-src
 
 build:
 	cd rust && cargo build --release
@@ -33,3 +33,11 @@ fmt:
 
 lint:
 	cd rust && cargo clippy --all-targets -- -D warnings
+
+# In-tree static-analysis pass (DESIGN.md §12) via the dependency-free
+# Python mirror — works on hosts without a Rust toolchain.  The
+# canonical implementation is `siwoft lint` (same rules, same fixture
+# corpus: rust/tests/fixtures/lint/).
+lint-src:
+	python3 tools/lint_src.py --selfcheck
+	python3 tools/lint_src.py --src rust/src

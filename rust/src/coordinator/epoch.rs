@@ -28,6 +28,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 
 #[derive(Clone, Copy, Debug)]
+/// Knobs of a long-horizon cluster simulation (`siwoft cluster`).
 pub struct ClusterConfig {
     /// Poisson job arrival rate (jobs per simulated hour)
     pub arrival_rate_per_h: f64,
@@ -39,6 +40,7 @@ pub struct ClusterConfig {
     pub window_h: f64,
     /// first hour jobs may arrive (needs `window_h` of history)
     pub start_h: f64,
+    /// RNG seed for arrivals and job shapes.
     pub seed: u64,
 }
 
@@ -58,12 +60,19 @@ impl Default for ClusterConfig {
 /// Aggregate report of a cluster run.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterReport {
+    /// Jobs that arrived over the horizon.
     pub jobs: usize,
+    /// Jobs that completed inside the horizon.
     pub completed: usize,
+    /// Analytics refresh epochs executed.
     pub epochs: u64,
+    /// Total cost across all jobs ($).
     pub total_cost: f64,
+    /// Completion-time statistics over finished jobs (hours).
     pub completion: Welford,
+    /// Spot revocations across all runs.
     pub revocations: u64,
+    /// Every finished job's result.
     pub results: Vec<JobResult>,
 }
 

@@ -24,8 +24,11 @@ pub use crate::scenario::{FtKind, PolicyKind};
 /// One experiment arm: a named (policy, ft) pairing.
 #[derive(Clone, Copy, Debug)]
 pub struct Arm {
+    /// Display label (`"P"`, `"F"`, `"O"` for the paper's arms).
     pub label: &'static str,
+    /// The provisioning policy of this arm.
     pub policy: PolicyKind,
+    /// The fault-tolerance mechanism paired with it.
     pub ft: FtKind,
 }
 
@@ -51,13 +54,17 @@ pub fn paper_arms() -> Vec<Arm> {
 /// [`World`], keeping the coordinator `Send + Sync` for the pool and the
 /// TCP control plane.
 pub struct Coordinator {
+    /// The current world (markets, prices, analytics).
     pub world: World,
+    /// The worker pool runs fan out on.
     pub pool: Pool,
+    /// Operational counters shared with the control plane.
     pub metrics: Arc<Metrics>,
     backend: &'static str,
 }
 
 impl Coordinator {
+    /// Build a coordinator over `world` with `workers` threads.
     pub fn new(world: World, engine: AnalyticsEngine, workers: usize) -> Coordinator {
         let mut c = Coordinator {
             world,
@@ -100,6 +107,7 @@ impl Coordinator {
         Ok(())
     }
 
+    /// Which analytics backend is live (`"pjrt"` or `"native"`).
     pub fn analytics_backend(&self) -> &'static str {
         self.backend
     }

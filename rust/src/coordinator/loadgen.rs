@@ -26,8 +26,11 @@ pub const TRIVIAL_SUBMIT: &str =
 /// (ready for [`percentile`]).
 #[derive(Clone, Debug)]
 pub struct LoadReport {
+    /// Concurrent client connections.
     pub conns: usize,
+    /// Submit round-trips issued per connection.
     pub submits_per_conn: usize,
+    /// Wall-clock duration of the whole run (seconds).
     pub wall_s: f64,
     /// steady-state submit round-trips (ms), sorted
     pub submit_ms: Vec<f64>,
@@ -37,21 +40,27 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
+    /// Total submit requests issued.
     pub fn total_requests(&self) -> usize {
         self.conns * self.submits_per_conn
     }
+    /// Submits completed per wall-clock second.
     pub fn throughput_per_s(&self) -> f64 {
         self.total_requests() as f64 / self.wall_s
     }
+    /// Median submit round-trip (ms).
     pub fn submit_p50_ms(&self) -> f64 {
         percentile(&self.submit_ms, 50.0)
     }
+    /// 99th-percentile submit round-trip (ms).
     pub fn submit_p99_ms(&self) -> f64 {
         percentile(&self.submit_ms, 99.0)
     }
+    /// Median connect-to-first-reply latency (ms).
     pub fn first_reply_p50_ms(&self) -> f64 {
         percentile(&self.first_reply_ms, 50.0)
     }
+    /// 99th-percentile connect-to-first-reply latency (ms).
     pub fn first_reply_p99_ms(&self) -> f64 {
         percentile(&self.first_reply_ms, 99.0)
     }

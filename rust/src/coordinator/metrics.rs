@@ -6,35 +6,50 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::util::json::Json;
 
 #[derive(Debug, Default)]
+/// Lock-free operational counters for a running coordinator.
 pub struct Metrics {
+    /// Jobs accepted over the control plane.
     pub jobs_submitted: AtomicU64,
+    /// Jobs that finished their work budget.
     pub jobs_completed: AtomicU64,
+    /// Jobs that failed or were aborted.
     pub jobs_failed: AtomicU64,
+    /// Spot revocations observed across runs.
     pub revocations: AtomicU64,
+    /// Policy decisions taken.
     pub decisions: AtomicU64,
+    /// Falls back to on-demand capacity.
     pub ondemand_fallbacks: AtomicU64,
+    /// Market-analytics refresh epochs completed.
     pub analytics_epochs: AtomicU64,
     /// microseconds spent in policy decisions (sum)
     pub decision_us: AtomicU64,
 }
 
 impl Metrics {
+    /// Fresh all-zero metrics.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
     #[inline]
+    /// Increment a counter by one.
     pub fn inc(counter: &AtomicU64) {
+        // ordering: standalone stats counter — no memory published
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
+    /// Add `v` to a counter.
     pub fn add(counter: &AtomicU64, v: u64) {
+        // ordering: standalone stats counter — no memory published
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Snapshot every counter into a JSON object.
     pub fn snapshot(&self) -> Json {
-        let g = |c: &AtomicU64| Json::num(c.load(Ordering::Relaxed) as f64);
+        // ordering: stats counter reads; snapshots tolerate cross-counter skew by design
+        let g = |counter: &AtomicU64| Json::num(counter.load(Ordering::Relaxed) as f64);
         Json::obj(vec![
             ("jobs_submitted", g(&self.jobs_submitted)),
             ("jobs_completed", g(&self.jobs_completed)),

@@ -62,7 +62,9 @@ impl<T> Slots<T> {
     /// SAFETY: the caller must hold the exclusive claim to `idx` (a
     /// successful injector claim or deque pop/steal covering it).
     unsafe fn take(&self, idx: usize) -> T {
-        (*self.slots[idx].get()).take().expect("item claimed twice")
+        // SAFETY: forwarded from the caller — the exclusive claim means
+        // no other thread can alias this slot's contents.
+        unsafe { (*self.slots[idx].get()).take().expect("item claimed twice") }
     }
 }
 
@@ -81,6 +83,7 @@ impl Injector {
 
     /// Claim the next unclaimed chunk as a `(lo, hi)` index range.
     fn claim(&self) -> Option<(u32, u32)> {
+        // ordering: self.next is a pure ticket counter; claimers only need distinct values
         let c = self.next.fetch_add(1, Ordering::Relaxed);
         if c >= self.n_chunks {
             return None;
@@ -109,11 +112,13 @@ impl Deque {
     /// thieves can shrink a non-empty range but never refill one, so a
     /// plain store cannot race with a successful steal.
     fn install(&self, lo: u32, hi: u32) {
+        // ordering: Release pairs with the Acquire loads in pop/steal, publishing the slots
         self.range.store(pack(lo, hi), Ordering::Release);
     }
 
     /// Owner: pop one index off the back.
     fn pop(&self) -> Option<usize> {
+        // ordering: Acquire pairs with install()'s Release store
         let mut cur = self.range.load(Ordering::Acquire);
         loop {
             let (lo, hi) = unpack(cur);
@@ -123,7 +128,9 @@ impl Deque {
             match self.range.compare_exchange_weak(
                 cur,
                 pack(lo, hi - 1),
+                // ordering: success publishes the shrunk range to thieves
                 Ordering::AcqRel,
+                // ordering: failure re-reads a word another side just wrote
                 Ordering::Acquire,
             ) {
                 Ok(_) => return Some((hi - 1) as usize),
@@ -134,6 +141,7 @@ impl Deque {
 
     /// Thief: split off the front half of the victim's range.
     fn steal(&self) -> Option<(u32, u32)> {
+        // ordering: Acquire pairs with install()'s Release; a visible range implies visible slots
         let mut cur = self.range.load(Ordering::Acquire);
         loop {
             let (lo, hi) = unpack(cur);
@@ -144,7 +152,9 @@ impl Deque {
             match self.range.compare_exchange_weak(
                 cur,
                 pack(lo + take, hi),
+                // ordering: success hands the stolen half to this thief
                 Ordering::AcqRel,
+                // ordering: failure re-reads the contended word
                 Ordering::Acquire,
             ) {
                 Ok(_) => return Some((lo, lo + take)),
@@ -154,6 +164,7 @@ impl Deque {
     }
 
     fn is_empty(&self) -> bool {
+        // ordering: Acquire matches install(); a stale empty read only costs a retry
         let (lo, hi) = unpack(self.range.load(Ordering::Acquire));
         lo >= hi
     }
@@ -184,6 +195,7 @@ impl Pool {
         Pool { workers }
     }
 
+    /// Number of worker threads this pool spawns.
     pub fn workers(&self) -> usize {
         self.workers
     }

@@ -46,10 +46,12 @@ impl Shutdown {
     }
 
     fn is_set(&self) -> bool {
+        // ordering: SeqCst; shutdown is rare and must totally order against trigger()
         self.flag.load(Ordering::SeqCst)
     }
 
     fn trigger(&self) {
+        // ordering: SeqCst store pairs with the SeqCst load in is_set()
         self.flag.store(true, Ordering::SeqCst);
         // Wake the acceptor.  Errors are fine: the listener may not be
         // bound yet (flag alone suffices) or may already be gone.
@@ -63,6 +65,7 @@ impl Shutdown {
 /// survive multi-tenant traffic (`--max-conns` on the CLI).
 pub const DEFAULT_MAX_CONNS: usize = 256;
 
+/// The TCP control plane (`siwoft serve`): accept loop + job threads.
 pub struct Server {
     coordinator: Arc<Coordinator>,
     shutdown: Arc<Shutdown>,
@@ -79,6 +82,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// Wrap a coordinator for serving (default connection cap).
     pub fn new(coordinator: Coordinator) -> Server {
         Server {
             coordinator: Arc::new(coordinator),
@@ -125,6 +129,7 @@ impl Server {
             for h in std::mem::take(&mut handles) {
                 if h.is_finished() {
                     let _ = h.join();
+                    // ordering: reaped is a standalone stats counter
                     self.reaped.fetch_add(1, Ordering::Relaxed);
                 } else {
                     handles.push(h);
@@ -133,6 +138,7 @@ impl Server {
             if handles.len() >= self.max_conns {
                 // accept-time backpressure: tell the client why and
                 // close instead of spawning an unbounded thread
+                // ordering: rejected is a standalone stats counter
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 crate::log_warn!(
                     "rejecting connection from {peer}: {} live connections (cap {})",
@@ -156,12 +162,14 @@ impl Server {
             }
             let coordinator = self.coordinator.clone();
             let shutdown = self.shutdown.clone();
+            // ordering: SeqCst keeps id blocks totally ordered; overlap would alias job ids
             let id = self.next_job_id.fetch_add(1_000_000, Ordering::SeqCst);
             handles.push(std::thread::spawn(move || {
                 if let Err(e) = handle_conn(stream, &coordinator, &shutdown, id) {
                     crate::log_warn!("connection error: {e:#}");
                 }
             }));
+            // ordering: peak_live is a standalone high-water counter
             self.peak_live.fetch_max(handles.len(), Ordering::Relaxed);
         }
         for h in handles {
@@ -170,6 +178,7 @@ impl Server {
         Ok(())
     }
 
+    /// Set the shutdown latch and wake the acceptor.
     pub fn request_shutdown(&self) {
         self.shutdown.trigger();
     }
@@ -177,16 +186,19 @@ impl Server {
     /// Connection threads joined by the in-loop reaper (excludes the
     /// final drain at shutdown).
     pub fn reaped_conn_threads(&self) -> u64 {
+        // ordering: stats counter read — staleness is acceptable
         self.reaped.load(Ordering::Relaxed)
     }
 
     /// High-water mark of simultaneously-held connection handles.
     pub fn peak_live_conn_threads(&self) -> usize {
+        // ordering: stats counter read — staleness is acceptable
         self.peak_live.load(Ordering::Relaxed)
     }
 
     /// Connections rejected at accept time by the `max_conns` cap.
     pub fn rejected_conns(&self) -> u64 {
+        // ordering: stats counter read — staleness is acceptable
         self.rejected.load(Ordering::Relaxed)
     }
 }

@@ -62,10 +62,15 @@ use crate::util::rng::Rng;
 /// Outcome of one stage across the whole DAG run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StageResult {
+    /// Stage name (from the spec).
     pub name: String,
+    /// Per-category time/cost ledger for this stage's work.
     pub ledger: Ledger,
+    /// Instance revocations that hit this stage.
     pub revocations: u32,
+    /// Instance sessions this stage participated in.
     pub sessions: u32,
+    /// The stage finished its work budget.
     pub completed: bool,
     /// first session start (absolute sim hours); −1 if never started
     pub started_at_h: f64,
@@ -79,9 +84,13 @@ pub struct StageResult {
 /// Outcome of one DAG execution.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DagResult {
+    /// DAG scenario name.
     pub dag: String,
+    /// Provisioning policy that ran the DAG.
     pub policy: String,
+    /// Fault-tolerance mechanism label (`"none"` under P-SIWOFT).
     pub ft: String,
+    /// Per-stage outcomes, in spec order.
     pub stages: Vec<StageResult>,
     /// wall-clock hours from submission to the last stage completion
     pub makespan_h: f64,
@@ -89,6 +98,7 @@ pub struct DagResult {
     pub revocations: u32,
     /// instance sessions launched (packed bins)
     pub bins: u32,
+    /// Every stage completed.
     pub completed: bool,
 }
 
@@ -107,6 +117,7 @@ impl DagResult {
         out
     }
 
+    /// The stage outcome named `name`, if present.
     pub fn stage(&self, name: &str) -> Option<&StageResult> {
         self.stages.iter().find(|s| s.name == name)
     }
@@ -115,28 +126,43 @@ impl DagResult {
 /// Per-stage means over a set of DAG runs.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StageAgg {
+    /// Stage name (from the spec).
     pub name: String,
+    /// Mean per-category time breakdown (hours).
     pub time: Breakdown,
+    /// Mean per-category cost breakdown ($).
     pub cost: Breakdown,
+    /// Mean revocations hitting this stage.
     pub mean_revocations: f64,
+    /// Mean sessions this stage participated in.
     pub mean_sessions: f64,
+    /// Mean co-packed idle hours after finishing.
     pub mean_idle_h: f64,
+    /// Fraction of runs where this stage completed.
     pub completion_rate: f64,
 }
 
 /// Mean DAG outcome over seeds (one "bar" of a DAG sweep).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct DagAggregate {
+    /// Number of runs aggregated.
     pub n: usize,
+    /// Mean wall-clock from submission to last completion (hours).
     pub mean_makespan_h: f64,
+    /// Mean total execution cost ($).
     pub mean_cost_usd: f64,
+    /// Mean instance revocation events.
     pub mean_revocations: f64,
+    /// Mean instance sessions (packed bins) launched.
     pub mean_bins: f64,
+    /// Fraction of runs where the whole DAG completed.
     pub completion_rate: f64,
+    /// Per-stage means, in spec order.
     pub stages: Vec<StageAgg>,
 }
 
 impl DagAggregate {
+    /// Aggregate a set of runs (empty input → all-zero default).
     pub fn from_runs(runs: &[DagResult]) -> DagAggregate {
         if runs.is_empty() {
             return DagAggregate::default();
@@ -197,6 +223,7 @@ impl<'w> DagScenario<'w> {
         DagScenario { scen, spec }
     }
 
+    /// The validated DAG spec this scenario runs.
     pub fn spec(&self) -> &DagSpec {
         &self.spec
     }
@@ -264,6 +291,7 @@ pub struct DagRunner<'a> {
 }
 
 impl<'a> DagRunner<'a> {
+    /// Build a runner with an explicit policy instance (the generic entry; [`DagRunner::new`] wraps the standard kinds).
     pub fn with_policy(
         world: &'a World,
         spec: &'a DagSpec,

@@ -33,6 +33,7 @@ use crate::util::config::Config;
 /// outputs it consumes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StageSpec {
+    /// Stage name (unique within the DAG).
     pub name: String,
     /// pure compute time on a dedicated slot (hours)
     pub exec_len_h: f64,
@@ -45,14 +46,17 @@ pub struct StageSpec {
 /// A validated-on-use DAG of stages.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DagSpec {
+    /// DAG name (used in sweep rows and artifacts).
     pub name: String,
     /// per-instance packing capacity override (GB); `None` = the
     /// largest instance type in the catalog
     pub capacity_gb: Option<f64>,
+    /// The stages, in declaration order.
     pub stages: Vec<StageSpec>,
 }
 
 impl DagSpec {
+    /// Start a DAG named `name` (builder style).
     pub fn new(name: impl Into<String>) -> DagSpec {
         DagSpec { name: name.into(), capacity_gb: None, stages: Vec::new() }
     }
@@ -80,10 +84,12 @@ impl DagSpec {
         self
     }
 
+    /// Number of stages.
     pub fn len(&self) -> usize {
         self.stages.len()
     }
 
+    /// True when the DAG holds no stages.
     pub fn is_empty(&self) -> bool {
         self.stages.is_empty()
     }
@@ -93,10 +99,12 @@ impl DagSpec {
         self.stages.iter().map(|s| s.exec_len_h).sum()
     }
 
+    /// Largest per-stage memory footprint (GB).
     pub fn max_mem_gb(&self) -> f64 {
         self.stages.iter().map(|s| s.mem_gb).fold(0.0, f64::max)
     }
 
+    /// Index of the stage named `name`, if present.
     pub fn index_of(&self, name: &str) -> Option<usize> {
         self.stages.iter().position(|s| s.name == name)
     }

@@ -27,15 +27,21 @@ use crate::util::rng::Rng;
 use super::tables::Panel;
 
 #[derive(Clone, Copy, Debug)]
+/// Inputs for the Figure 1 reproduction (world shape, seeds, fan-out).
 pub struct Fig1Options {
+    /// Number of spot markets to generate.
     pub markets: usize,
+    /// Trace length (months).
     pub months: f64,
+    /// Seed for world generation.
     pub world_seed: u64,
     /// randomized runs per bar
     pub seeds: u64,
     /// forced revocations/day for the F arm (panels a/b/d/e)
     pub ft_rate_per_day: f64,
+    /// Fraction of the trace reserved for analytics training.
     pub train_frac: f64,
+    /// Worker threads for the fan-out (0 = one per CPU).
     pub workers: usize,
 }
 
@@ -83,13 +89,17 @@ fn arms() -> [(Arm, bool); 3] {
 
 /// Everything needed to run bars: a prepared world + sim-start bounds.
 pub struct Fig1Runner {
+    /// The generated world every bar runs in.
     pub world: World,
+    /// First simulatable hour (after the training prefix).
     pub sim_start: f64,
+    /// The options the runner was prepared with.
     pub opts: Fig1Options,
     pool: Pool,
 }
 
 impl Fig1Runner {
+    /// Generate the world and analytics once, ready to run bars.
     pub fn prepare(opts: Fig1Options) -> Fig1Runner {
         let mut world = World::generate(opts.markets, opts.months, opts.world_seed);
         let sim_start = world.split_train(opts.train_frac);

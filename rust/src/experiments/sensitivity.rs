@@ -17,17 +17,24 @@ use crate::scenario::{FtKind, PolicyKind, Scenario};
 use crate::sim::{AggregateResult, RevocationRule, World};
 
 #[derive(Clone, Debug)]
+/// The three arms' aggregates at one spot/on-demand price ratio.
 pub struct RatioPoint {
+    /// The spot/on-demand price ratio simulated.
     pub ratio: f64,
+    /// P-SIWOFT aggregate at this ratio.
     pub p: AggregateResult,
+    /// FT-spot baseline aggregate at this ratio.
     pub f: AggregateResult,
+    /// On-demand baseline aggregate at this ratio.
     pub o: AggregateResult,
 }
 
 impl RatioPoint {
+    /// FT-spot cost relative to on-demand.
     pub fn f_over_o(&self) -> f64 {
         self.f.cost_usd() / self.o.cost_usd()
     }
+    /// P-SIWOFT cost relative to on-demand.
     pub fn p_over_o(&self) -> f64 {
         self.p.cost_usd() / self.o.cost_usd()
     }

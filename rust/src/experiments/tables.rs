@@ -36,6 +36,7 @@ pub fn stacked_bar(b: &Breakdown, max_total: f64, width: usize) -> String {
     out
 }
 
+/// The category legend line printed under the figure.
 pub fn legend() -> String {
     CATEGORIES
         .iter()
@@ -46,7 +47,9 @@ pub fn legend() -> String {
 
 /// One figure panel: x-axis labels × arms, with stacked breakdowns.
 pub struct Panel {
+    /// Panel title (e.g. `(a) completion time vs length`).
     pub title: String,
+    /// X-axis label.
     pub xlabel: String,
     /// metric selector: time (Fig. 1a–c) or cost (Fig. 1d–f)
     pub is_cost: bool,
@@ -55,10 +58,12 @@ pub struct Panel {
 }
 
 impl Panel {
+    /// An empty panel (builder for [`Panel::push`]).
     pub fn new(title: &str, xlabel: &str, is_cost: bool) -> Panel {
         Panel { title: title.to_string(), xlabel: xlabel.to_string(), is_cost, bars: Vec::new() }
     }
 
+    /// Append one bar: x label × arm label × aggregate.
     pub fn push(&mut self, x: impl Into<String>, arm: impl Into<String>, agg: AggregateResult) {
         self.bars.push((x.into(), arm.into(), agg));
     }

@@ -11,12 +11,14 @@ use super::{FtMechanism, Recovery};
 use crate::job::{ContainerModel, Job};
 
 #[derive(Clone, Copy, Debug)]
+/// Periodic checkpointing: `num_checkpoints` evenly spaced checkpoints.
 pub struct Checkpointing {
     /// checkpoints per job execution (the paper's "number of checkpoints")
     pub num_checkpoints: u32,
 }
 
 impl Checkpointing {
+    /// Checkpointing with `num_checkpoints` checkpoints (min 1).
     pub fn new(num_checkpoints: u32) -> Self {
         assert!(num_checkpoints > 0, "need at least one checkpoint");
         Checkpointing { num_checkpoints }

@@ -14,6 +14,7 @@ use super::{FtMechanism, Recovery};
 use crate::job::{ContainerModel, Job};
 
 #[derive(Clone, Copy, Debug)]
+/// Checkpointing at the Young/Daly-optimal interval for an expected MTTR.
 pub struct DalyCheckpointing {
     /// expected MTTR of the provisioned market (hours); fed by the
     /// policy layer / experiment harness from the analytics
@@ -23,6 +24,7 @@ pub struct DalyCheckpointing {
 }
 
 impl DalyCheckpointing {
+    /// Daly checkpointing sized for `expected_mttr_h`.
     pub fn new(expected_mttr_h: f64) -> Self {
         DalyCheckpointing { expected_mttr_h, container: ContainerModel::default() }
     }

@@ -11,6 +11,7 @@ use crate::job::{ContainerModel, Job};
 use crate::market::TERMINATION_NOTICE_H;
 
 #[derive(Clone, Copy, Debug, Default)]
+/// Live migration ahead of predicted revocations.
 pub struct Migration;
 
 impl FtMechanism for Migration {

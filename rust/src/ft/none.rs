@@ -7,6 +7,7 @@ use super::{FtMechanism, Recovery};
 use crate::job::{ContainerModel, Job};
 
 #[derive(Clone, Copy, Debug, Default)]
+/// No fault tolerance: P-SIWOFT's pairing — restart from scratch.
 pub struct NoFt;
 
 impl FtMechanism for NoFt {

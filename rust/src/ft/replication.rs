@@ -12,11 +12,14 @@ use super::{FtMechanism, Recovery};
 use crate::job::{ContainerModel, Job};
 
 #[derive(Clone, Copy, Debug)]
+/// Run `degree` replicas in distinct failure groups.
 pub struct Replication {
+    /// Number of simultaneous replicas.
     pub degree: u32,
 }
 
 impl Replication {
+    /// Replication at the given degree (min 1).
     pub fn new(degree: u32) -> Self {
         assert!(degree >= 1, "replication degree must be >= 1");
         Replication { degree }

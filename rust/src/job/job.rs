@@ -7,7 +7,9 @@
 /// A batch job packaged (conceptually) in a Docker container.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Job {
+    /// Stable job id (also the default name suffix).
     pub id: u64,
+    /// Human-readable name (defaults to `job-<id>`).
     pub name: String,
     /// pure compute time on a dedicated instance (hours)
     pub exec_len_h: f64,
@@ -19,6 +21,7 @@ pub struct Job {
 }
 
 impl Job {
+    /// A job with the given length/footprint (vCPUs derived from memory).
     pub fn new(id: u64, exec_len_h: f64, mem_gb: f64) -> Job {
         assert!(exec_len_h > 0.0, "job length must be positive");
         assert!(mem_gb > 0.0, "memory footprint must be positive");
@@ -31,6 +34,7 @@ impl Job {
         }
     }
 
+    /// Rename the job (builder style).
     pub fn named(mut self, name: impl Into<String>) -> Job {
         self.name = name.into();
         self
@@ -65,22 +69,27 @@ pub struct JobProgress {
     pub volatile_h: f64,
     /// number of revocations suffered so far
     pub revocations: u32,
+    /// Current lifecycle phase.
     pub phase: JobPhase,
 }
 
 impl JobProgress {
+    /// Fresh progress: nothing done, pending.
     pub fn new() -> Self {
         JobProgress { durable_h: 0.0, volatile_h: 0.0, revocations: 0, phase: JobPhase::Pending }
     }
 
+    /// Total finished work, durable plus volatile (hours).
     pub fn total_h(&self) -> f64 {
         self.durable_h + self.volatile_h
     }
 
+    /// Work left before `job` completes (hours).
     pub fn remaining(&self, job: &Job) -> f64 {
         (job.exec_len_h - self.total_h()).max(0.0)
     }
 
+    /// True when the job's work budget is finished.
     pub fn is_complete(&self, job: &Job) -> bool {
         self.total_h() >= job.exec_len_h - 1e-9
     }

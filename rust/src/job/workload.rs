@@ -18,6 +18,7 @@ pub mod paper {
     pub const REVOCATIONS: &[u32] = &[1, 2, 4, 8, 16];
     /// fixed values when the other knob sweeps
     pub const FIXED_LEN_H: f64 = 8.0;
+    /// Fixed memory footprint (GB) when length or revocations sweep.
     pub const FIXED_MEM_GB: f64 = 16.0;
 }
 
@@ -47,14 +48,19 @@ pub fn revocation_sweep_job() -> Job {
 /// Parameters for randomized heterogeneous batches.
 #[derive(Clone, Debug)]
 pub struct BatchConfig {
+    /// Number of jobs in the batch.
     pub count: usize,
     /// lognormal (mu, sigma) of length in hours
     pub len_mu: f64,
+    /// Lognormal sigma of length (log-hours).
     pub len_sigma: f64,
+    /// Shortest allowed job (hours; truncates the lognormal).
     pub len_min_h: f64,
+    /// Longest allowed job (hours; truncates the lognormal).
     pub len_max_h: f64,
     /// memory classes sampled with Zipf skew (small jobs dominate)
     pub mem_classes_gb: Vec<f64>,
+    /// Zipf skew exponent over the memory classes.
     pub mem_zipf_s: f64,
 }
 

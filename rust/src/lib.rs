@@ -23,11 +23,20 @@
 //! `EXPERIMENTS.md` for the paper-vs-measured record; `README.md` holds
 //! the CLI reference for the `siwoft` binary.
 
+// The crate-level lint wall (DESIGN.md §12): the in-tree `siwoft lint`
+// pass enforces the same invariants source-side so toolchain-less
+// containers keep the wall standing, but on a real toolchain rustc is
+// the authority.
+#![deny(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(unreachable_pub)]
+
 pub mod coordinator;
 pub mod dag;
 pub mod experiments;
 pub mod ft;
 pub mod job;
+pub mod lint;
 pub mod market;
 pub mod pack;
 pub mod policy;

@@ -1,0 +1,253 @@
+//! `siwoft::lint` — the in-tree static-analysis pass that machine-checks
+//! the invariants the equivalence suites depend on (DESIGN.md §12).
+//!
+//! The repo's central claim — market-based provisioning beats
+//! fault-tolerance — is defended by bitwise-equivalence tests, which
+//! only stay meaningful while the simulation core stays deterministic:
+//! no wall-clock reads, no hash-order iteration, all randomness through
+//! seeded [`crate::util::rng`] streams, and a justified-by-comment
+//! trail on every atomic ordering and `unsafe` block in the lock-free
+//! scheduler.  This module enforces exactly that, as a zero-external-dep
+//! source scanner runnable anywhere `std` is:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `d1` | determinism wall: no `SystemTime`/`Instant::now`/`std::env`/`HashMap` in result-producing modules |
+//! | `d2` | rng discipline: randomness only via seeded `util::rng` streams |
+//! | `a1` | atomics audit: `// ordering:` justifications, Relaxed counter allowlist, `SAFETY:` comments |
+//! | `e1` | exhaustiveness: `Category` enum, `CATEGORIES`, `Breakdown` array and tables glyphs agree |
+//! | `h1` | doc hygiene: rustdoc on public items; `DESIGN.md §<n>` references resolve |
+//!
+//! Findings can be waived in place with
+//! `// siwoft-lint: allow(<rule>, <reason>)` on the offending line or
+//! the line above; the reason is mandatory, and the pragma must sit in
+//! a plain `//` comment (doc comments never arm the parser, so this
+//! paragraph is not a pragma).  The CLI entry point is
+//! `siwoft lint [--format {text,json}] [--rules d1,d2,a1,e1,h1]
+//! [--src rust/src]`, exiting non-zero on findings.  A dependency-free
+//! Python mirror (`tools/lint_src.py`) runs the same rules on
+//! toolchain-less hosts; `tests/lint_selfcheck.rs` pins both to one
+//! fixture corpus.
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+pub use report::{Finding, Report, SCHEMA_VERSION};
+pub use rules::{Rule, ALL_RULES};
+
+use crate::util::error::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Configuration for one lint run.
+#[derive(Clone, Debug)]
+pub struct Options {
+    /// Root of the Rust source tree to scan (e.g. `rust/src`).
+    pub src: PathBuf,
+    /// Rules to run (canonical order is applied for the report).
+    pub rules: Vec<Rule>,
+}
+
+impl Options {
+    /// Lint `src` under every rule.
+    pub fn new(src: impl Into<PathBuf>) -> Options {
+        Options { src: src.into(), rules: ALL_RULES.to_vec() }
+    }
+}
+
+/// Run the lint pass and return the (sorted) report.
+pub fn run(opts: &Options) -> Result<Report> {
+    let mut paths = Vec::new();
+    walk(&opts.src, &mut paths)
+        .with_context(|| format!("scanning {}", opts.src.display()))?;
+    paths.sort(); // deterministic scan order on every filesystem
+
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(&opts.src)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(scan::scan_source(&rel, &text));
+    }
+
+    let sections = design_sections(&opts.src);
+    let mut rules_sorted = opts.rules.clone();
+    rules_sorted.sort();
+    rules_sorted.dedup();
+
+    let mut findings = rules::apply(&files, &rules_sorted, sections.as_deref());
+    let mut pragma_findings = Vec::new();
+    let allows = collect_pragmas(&files, &mut pragma_findings);
+    findings.retain(|f| !is_allowed(f, &allows));
+    findings.extend(pragma_findings);
+
+    let mut report = Report {
+        findings,
+        files_scanned: files.len(),
+        rules: rules_sorted.iter().map(|r| r.id()).collect(),
+    };
+    report.sort();
+    Ok(report)
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// One parsed `siwoft-lint: allow(...)` pragma site.
+struct Allow {
+    file: String,
+    /// The pragma suppresses findings on its own line and the next.
+    line: u32,
+    rule: &'static str,
+}
+
+/// Parse every allow pragma in the tree.  Malformed pragmas (unknown
+/// rule id, missing reason) are themselves findings — a waiver without
+/// a recorded reason is exactly the silent drift the pass exists to
+/// stop — reported under rule id `p1`.
+fn collect_pragmas(files: &[scan::ScannedFile], findings: &mut Vec<Finding>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for f in files {
+        for l in &f.lines {
+            // pragmas live in plain `//` comments only; rustdoc may
+            // quote the grammar without arming the parser
+            if l.is_doc {
+                continue;
+            }
+            let Some(pos) = l.comment.find("siwoft-lint:") else { continue };
+            let rest = l.comment[pos + "siwoft-lint:".len()..].trim_start();
+            let bad = |findings: &mut Vec<Finding>, why: &str| {
+                findings.push(Finding {
+                    rule: "p1",
+                    file: f.rel_path.clone(),
+                    line: l.number,
+                    msg: format!(
+                        "malformed lint pragma: {why} — grammar is \
+                         `// siwoft-lint: allow(<rule>, <reason>)`"
+                    ),
+                });
+            };
+            let Some(args) = rest
+                .strip_prefix("allow(")
+                .and_then(|r| r.find(')').map(|end| &r[..end]))
+            else {
+                bad(findings, "expected `allow(<rule>, <reason>)`");
+                continue;
+            };
+            let Some((rule_s, reason)) = args.split_once(',') else {
+                bad(findings, "missing `, <reason>`");
+                continue;
+            };
+            let Some(rule) = Rule::parse(rule_s) else {
+                bad(findings, &format!("unknown rule id `{}`", rule_s.trim()));
+                continue;
+            };
+            if reason.trim().is_empty() {
+                bad(findings, "empty reason");
+                continue;
+            }
+            allows.push(Allow { file: f.rel_path.clone(), line: l.number, rule: rule.id() });
+        }
+    }
+    allows
+}
+
+/// True when `f` is waived by a pragma on its line or the line above.
+fn is_allowed(f: &Finding, allows: &[Allow]) -> bool {
+    allows.iter().any(|a| {
+        a.file == f.file && a.rule == f.rule && (a.line == f.line || a.line + 1 == f.line)
+    })
+}
+
+/// Locate DESIGN.md near the scan root (the root itself, then up to two
+/// parent directories — `rust/src` → repo root) and extract its `§`
+/// section ids.  `None` disables reference checking (fixture trees
+/// without a DESIGN.md).
+fn design_sections(src: &Path) -> Option<Vec<String>> {
+    let mut dir = src.to_path_buf();
+    for _ in 0..3 {
+        let candidate = dir.join("DESIGN.md");
+        if let Ok(text) = std::fs::read_to_string(&candidate) {
+            let mut ids = Vec::new();
+            for line in text.lines() {
+                let t = line.trim_start_matches('#').trim_start();
+                if let Some(rest) = t.strip_prefix('§') {
+                    let id: String = rest
+                        .chars()
+                        .take_while(|c| c.is_alphanumeric() || *c == '-' || *c == '_')
+                        .collect();
+                    if !id.is_empty() && line.starts_with('#') {
+                        ids.push(id);
+                    }
+                }
+            }
+            return Some(ids);
+        }
+        dir = dir.parent()?.to_path_buf();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_one(rel: &str, src: &str) -> Vec<scan::ScannedFile> {
+        vec![scan::scan_source(rel, src)]
+    }
+
+    #[test]
+    fn pragma_waives_same_and_next_line() {
+        let src = "// siwoft-lint: allow(d1, test helper needs a temp dir)\n\
+                   use std::collections::HashMap;\n";
+        let files = scan_one("sim/x.rs", src);
+        let mut pf = Vec::new();
+        let allows = collect_pragmas(&files, &mut pf);
+        assert!(pf.is_empty());
+        let findings = rules::apply(&files, &[Rule::D1], None);
+        assert_eq!(findings.len(), 1);
+        assert!(is_allowed(&findings[0], &allows));
+    }
+
+    #[test]
+    fn pragma_does_not_waive_other_rules() {
+        let src = "// siwoft-lint: allow(d2, wrong rule)\n\
+                   use std::collections::HashMap;\n";
+        let files = scan_one("sim/x.rs", src);
+        let mut pf = Vec::new();
+        let allows = collect_pragmas(&files, &mut pf);
+        let findings = rules::apply(&files, &[Rule::D1], None);
+        assert!(!is_allowed(&findings[0], &allows));
+    }
+
+    #[test]
+    fn malformed_pragmas_are_findings() {
+        for src in [
+            "// siwoft-lint: allow(d1)\n",
+            "// siwoft-lint: allow(zz, reason)\n",
+            "// siwoft-lint: allow(d1, )\n",
+            "// siwoft-lint: deny(d1, x)\n",
+        ] {
+            let files = scan_one("sim/x.rs", src);
+            let mut pf = Vec::new();
+            let _ = collect_pragmas(&files, &mut pf);
+            assert_eq!(pf.len(), 1, "no p1 finding for {src:?}");
+            assert_eq!(pf[0].rule, "p1");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Finding and report types for the lint pass, plus the text and JSON
+//! renderers.
+//!
+//! The JSON document is schema-pinned the same way `BENCH_<area>.json`
+//! is (see `tests/lint_selfcheck.rs`): harnesses parse it, so the shape
+//! only changes together with `SCHEMA_VERSION`.
+
+use crate::util::json::Json;
+
+/// The pinned JSON schema version of [`Report::to_json`].
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One lint finding: a rule violation at a source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id (`"d1"`, `"d2"`, `"a1"`, `"e1"`, `"h1"`, `"p1"`).
+    pub rule: &'static str,
+    /// File path relative to the scan root (`/`-separated).
+    pub file: String,
+    /// 1-based line number the finding anchors to.
+    pub line: u32,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+/// The result of one lint run over a source tree.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Every finding that survived pragma suppression, sorted by
+    /// (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// The rule ids that ran, in canonical order.
+    pub rules: Vec<&'static str>,
+}
+
+impl Report {
+    /// True when the tree is clean under the rules that ran.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Canonical ordering: by file, then line, then rule id — so output
+    /// is bitwise stable across hosts and worker counts.
+    pub fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+        });
+    }
+
+    /// Render the human-readable text report (one finding per line,
+    /// `file:line: [rule] message`, then a summary line).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+        }
+        out.push_str(&format!(
+            "siwoft lint: {} finding{} in {} file{} (rules: {})\n",
+            self.findings.len(),
+            if self.findings.len() == 1 { "" } else { "s" },
+            self.files_scanned,
+            if self.files_scanned == 1 { "" } else { "s" },
+            self.rules.join(",")
+        ));
+        out
+    }
+
+    /// Render the schema-pinned JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tool", Json::str("siwoft-lint")),
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("rules", Json::arr(self.rules.iter().map(|r| Json::str(*r)).collect())),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            (
+                "findings",
+                Json::arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("rule", Json::str(f.rule)),
+                                ("file", Json::str(f.file.clone())),
+                                ("line", Json::num(f.line as f64)),
+                                ("msg", Json::str(f.msg.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_is_by_file_line_rule() {
+        let mut r = Report {
+            findings: vec![
+                Finding { rule: "h1", file: "b.rs".into(), line: 2, msg: "x".into() },
+                Finding { rule: "a1", file: "b.rs".into(), line: 2, msg: "y".into() },
+                Finding { rule: "d1", file: "a.rs".into(), line: 9, msg: "z".into() },
+            ],
+            files_scanned: 2,
+            rules: vec!["a1", "d1", "h1"],
+        };
+        r.sort();
+        assert_eq!(r.findings[0].file, "a.rs");
+        assert_eq!(r.findings[1].rule, "a1");
+        assert_eq!(r.findings[2].rule, "h1");
+    }
+
+    #[test]
+    fn json_has_pinned_top_level_keys() {
+        let r = Report { findings: vec![], files_scanned: 3, rules: vec!["d1"] };
+        let doc = r.to_json();
+        for key in ["tool", "schema_version", "rules", "files_scanned", "findings"] {
+            assert!(doc.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(doc.get("tool").and_then(|j| j.as_str()), Some("siwoft-lint"));
+    }
+
+    #[test]
+    fn text_summary_counts() {
+        let r = Report {
+            findings: vec![Finding { rule: "d1", file: "a.rs".into(), line: 1, msg: "m".into() }],
+            files_scanned: 1,
+            rules: vec!["d1"],
+        };
+        let t = r.to_text();
+        assert!(t.contains("a.rs:1: [d1] m"));
+        assert!(t.contains("1 finding in 1 file"));
+    }
+}

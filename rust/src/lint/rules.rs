@@ -1,0 +1,671 @@
+//! The lint rule catalog: D1 determinism wall, D2 rng discipline,
+//! A1 atomics audit, E1 exhaustiveness, H1 doc hygiene.
+//!
+//! Every rule is a pure function over [`ScannedFile`]s — no rustc, no
+//! filesystem (the caller reads and scans; `mod.rs` also resolves
+//! DESIGN.md once and passes the section list in).  Rules skip
+//! `#[cfg(test)]` regions: the invariants defend *shipped* simulation
+//! behaviour, and test code legitimately uses wall-clock temp dirs or
+//! unordered maps.  See DESIGN.md §12 for the catalog rationale and the
+//! `// siwoft-lint: allow(<rule>, <reason>)` pragma grammar.
+
+use super::report::Finding;
+use super::scan::{Line, ScannedFile};
+use std::collections::BTreeMap;
+
+/// A lint rule id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Determinism wall: no wall-clock, host env, or hash-order
+    /// iteration in result-producing modules.
+    D1,
+    /// Rng discipline: randomness only via seeded `util::rng` streams.
+    D2,
+    /// Atomics audit: `Ordering::*` justifications, Relaxed counter
+    /// allowlist, `SAFETY:` comments on `unsafe`.
+    A1,
+    /// Exhaustiveness: `Category` variants, `CATEGORIES`, the
+    /// `Breakdown` array length and the tables glyph list agree.
+    E1,
+    /// Doc hygiene: rustdoc on public items and resolvable
+    /// `DESIGN.md §<n>` references.
+    H1,
+}
+
+/// Every rule, in canonical (report) order.
+pub const ALL_RULES: &[Rule] = &[Rule::A1, Rule::D1, Rule::D2, Rule::E1, Rule::H1];
+
+impl Rule {
+    /// The lowercase id used on the CLI, in pragmas and in reports.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::D1 => "d1",
+            Rule::D2 => "d2",
+            Rule::A1 => "a1",
+            Rule::E1 => "e1",
+            Rule::H1 => "h1",
+        }
+    }
+
+    /// Parse a rule id as written on the CLI (`d1`, `A1`, ...).
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "d1" => Some(Rule::D1),
+            "d2" => Some(Rule::D2),
+            "a1" => Some(Rule::A1),
+            "e1" => Some(Rule::E1),
+            "h1" => Some(Rule::H1),
+            _ => None,
+        }
+    }
+}
+
+/// Modules whose outputs feed the equivalence suites: the directories
+/// (and the one root file) where D1/D2 forbid nondeterminism sources.
+pub const RESULT_MODULES: &[&str] =
+    &["sim", "dag", "service", "scenario", "policy", "ft", "job", "market", "pack"];
+
+/// Tokens D1 forbids in result-producing modules (wall-clock, host
+/// state, hash-order iteration).
+const D1_TOKENS: &[&str] =
+    &["SystemTime", "Instant::now", "std::time::Instant", "std::env", "HashMap", "HashSet"];
+
+/// Tokens D2 forbids everywhere in the library tree (ambient
+/// randomness outside the seeded `util::rng` streams).
+const D2_TOKENS: &[&str] =
+    &["rand::", "thread_rng", "from_entropy", "getrandom", "RandomState", "DefaultHasher"];
+
+/// Atomic names allowed to use `Ordering::Relaxed` (standalone
+/// monotonic counters whose readers tolerate staleness).  A Relaxed
+/// site passes only when its code line names one of these.
+pub const RELAXED_ALLOWLIST: &[&str] =
+    &["counter", "reaped", "rejected", "peak_live", "self.next", "LEVEL"];
+
+/// True when `rel_path` lives in a result-producing module.
+pub fn is_result_module(rel_path: &str) -> bool {
+    RESULT_MODULES.iter().any(|m| {
+        rel_path.starts_with(&format!("{m}/")) || rel_path == format!("{m}.rs")
+    })
+}
+
+/// True when A1's `Ordering::*` audit covers `rel_path` (the lock-free
+/// scheduler/serving layer plus the process-wide logger level).
+pub fn a1_ordering_scope(rel_path: &str) -> bool {
+    rel_path.starts_with("coordinator/") || rel_path == "util/logger.rs"
+}
+
+/// Run the enabled rules over the scanned tree.  `design_sections` is
+/// the list of `§` ids found in DESIGN.md (None = no DESIGN.md found;
+/// reference checking is skipped).
+pub fn apply(
+    files: &[ScannedFile],
+    rules: &[Rule],
+    design_sections: Option<&[String]>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let module_docs = module_doc_map(files);
+    for f in files {
+        if rules.contains(&Rule::D1) {
+            d1_determinism(f, &mut out);
+        }
+        if rules.contains(&Rule::D2) {
+            d2_rng(f, &mut out);
+        }
+        if rules.contains(&Rule::A1) {
+            a1_atomics(f, &mut out);
+        }
+        if rules.contains(&Rule::H1) {
+            h1_docs(f, &module_docs, &mut out);
+            h1_design_refs(f, design_sections, &mut out);
+        }
+    }
+    if rules.contains(&Rule::E1) {
+        e1_exhaustiveness(files, &mut out);
+    }
+    out
+}
+
+// ---------------------------------------------------------------- D1/D2
+
+fn d1_determinism(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if !is_result_module(&f.rel_path) {
+        return;
+    }
+    for l in &f.lines {
+        if l.in_test {
+            continue;
+        }
+        for tok in D1_TOKENS {
+            if l.code.contains(tok) {
+                out.push(Finding {
+                    rule: "d1",
+                    file: f.rel_path.clone(),
+                    line: l.number,
+                    msg: format!(
+                        "determinism wall: `{tok}` is forbidden in result-producing modules \
+                         (wall-clock/host state/hash order breaks the bitwise-equivalence \
+                         suites; use seeded util::rng streams and BTreeMap/Vec, or annotate \
+                         `// siwoft-lint: allow(d1, <reason>)`)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn d2_rng(f: &ScannedFile, out: &mut Vec<Finding>) {
+    // ambient randomness is banned tree-wide, not just in result
+    // modules — a "harmless" nondeterministic id upstream still breaks
+    // replayability
+    if f.rel_path == "util/rng.rs" {
+        return; // the one sanctioned randomness substrate
+    }
+    for l in &f.lines {
+        if l.in_test {
+            continue;
+        }
+        for tok in D2_TOKENS {
+            if l.code.contains(tok) {
+                out.push(Finding {
+                    rule: "d2",
+                    file: f.rel_path.clone(),
+                    line: l.number,
+                    msg: format!(
+                        "rng discipline: `{tok}` bypasses the seeded util::rng streams \
+                         (all randomness must derive from an explicit seed; or annotate \
+                         `// siwoft-lint: allow(d2, <reason>)`)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- A1
+
+/// How many lines above an `unsafe` site a `SAFETY:` comment may sit
+/// (covers the idiom of a SAFETY paragraph inside the doc comment of a
+/// small `unsafe fn`).
+const SAFETY_LOOKBACK: usize = 8;
+
+fn a1_atomics(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let in_ordering_scope = a1_ordering_scope(&f.rel_path);
+    for (i, l) in f.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        // `std::cmp::Ordering` is not an atomic ordering — mask it out
+        // before matching
+        let code = l.code.replace("cmp::Ordering", "");
+        if in_ordering_scope && code.contains("Ordering::") {
+            let justified = has_comment_tag(f, i, "ordering:", 1);
+            if !justified {
+                out.push(Finding {
+                    rule: "a1",
+                    file: f.rel_path.clone(),
+                    line: l.number,
+                    msg: "atomics audit: `Ordering::*` needs an `// ordering:` justification \
+                          on the same or preceding line (Acquire/Release pairing or \
+                          Relaxed-counter rationale)"
+                        .to_string(),
+                });
+            }
+            if code.contains("Ordering::Relaxed")
+                && !RELAXED_ALLOWLIST.iter().any(|a| code.contains(a))
+            {
+                out.push(Finding {
+                    rule: "a1",
+                    file: f.rel_path.clone(),
+                    line: l.number,
+                    msg: format!(
+                        "atomics audit: `Ordering::Relaxed` on an atomic outside the counter \
+                         allowlist [{}] — use Acquire/Release (or extend the allowlist in \
+                         lint/rules.rs with the new counter's rationale)",
+                        RELAXED_ALLOWLIST.join(", ")
+                    ),
+                });
+            }
+        }
+        // SAFETY comments are required tree-wide
+        if (code.contains("unsafe fn")
+            || code.contains("unsafe impl")
+            || code.contains("unsafe {"))
+            && !has_comment_tag(f, i, "SAFETY", SAFETY_LOOKBACK)
+        {
+            out.push(Finding {
+                rule: "a1",
+                file: f.rel_path.clone(),
+                line: l.number,
+                msg: "atomics audit: `unsafe` without a `SAFETY:` comment on the same line \
+                      or within the preceding 8 lines"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// True when line `i` or one of the `lookback` lines above it carries a
+/// comment containing `tag`.
+fn has_comment_tag(f: &ScannedFile, i: usize, tag: &str, lookback: usize) -> bool {
+    let lo = i.saturating_sub(lookback);
+    f.lines[lo..=i].iter().any(|l| l.comment.contains(tag))
+}
+
+// ------------------------------------------------------------------- E1
+
+/// The two files whose category tables must agree.
+const E1_ACCOUNTING: &str = "sim/accounting.rs";
+const E1_TABLES: &str = "experiments/tables.rs";
+
+fn e1_exhaustiveness(files: &[ScannedFile], out: &mut Vec<Finding>) {
+    let acc = files.iter().find(|f| f.rel_path == E1_ACCOUNTING);
+    let Some(acc) = acc else { return }; // not this tree (e.g. a fixture subset)
+
+    let mut counts: Vec<(&str, String, u32, Option<usize>)> = Vec::new();
+
+    // 1. variant count of `pub enum Category`
+    let (vline, variants) = enum_variant_count(acc, "pub enum Category");
+    counts.push(("Category variants", E1_ACCOUNTING.to_string(), vline, variants));
+
+    // 2. entries in `pub const CATEGORIES`
+    let (cline, entries) = span_token_count(acc, "const CATEGORIES", "];", "Category::");
+    counts.push(("CATEGORIES entries", E1_ACCOUNTING.to_string(), cline, entries));
+
+    // 3. the `vals: [f64; N]` array length in Breakdown
+    let (bline, arr_len) = breakdown_array_len(acc);
+    counts.push(("Breakdown array length", E1_ACCOUNTING.to_string(), bline, arr_len));
+
+    // 4. glyph match arms in experiments/tables.rs (skipped when the
+    //    scan root doesn't include it)
+    if let Some(tab) = files.iter().find(|f| f.rel_path == E1_TABLES) {
+        let (gline, glyphs) = span_token_count(tab, "fn glyph", "\n}", "Category::");
+        counts.push(("tables glyph arms", E1_TABLES.to_string(), gline, glyphs));
+    }
+
+    for (what, file, line, n) in &counts {
+        if n.is_none() {
+            out.push(Finding {
+                rule: "e1",
+                file: file.clone(),
+                line: *line,
+                msg: format!("exhaustiveness: could not locate {what} (marker moved? update lint/rules.rs)"),
+            });
+        }
+    }
+    let known: Vec<_> = counts.iter().filter_map(|(w, f, l, n)| n.map(|n| (*w, f, *l, n))).collect();
+    if let Some(&(_, _, _, first)) = known.first() {
+        for (what, file, line, n) in &known {
+            if *n != first {
+                out.push(Finding {
+                    rule: "e1",
+                    file: (*file).clone(),
+                    line: *line,
+                    msg: format!(
+                        "exhaustiveness: {what} = {n} but {} = {first} — the Category \
+                         tables drifted (accounting enum, CATEGORIES, Breakdown array \
+                         and the tables glyph list must all agree)",
+                        known[0].0
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Count the variants of the enum declared by a line containing
+/// `marker`; returns (decl line, Some(count)) or (0, None).
+fn enum_variant_count(f: &ScannedFile, marker: &str) -> (u32, Option<usize>) {
+    let Some(i) = f.lines.iter().position(|l| !l.in_test && l.code.contains(marker)) else {
+        return (0, None);
+    };
+    let decl_depth = f.lines[i].depth;
+    let mut n = 0usize;
+    for l in &f.lines[i + 1..] {
+        if l.depth <= decl_depth && !l.code.trim().is_empty() {
+            break;
+        }
+        if l.depth == decl_depth + 1 && is_variant_line(l) {
+            n += 1;
+        }
+    }
+    (f.lines[i].number, Some(n))
+}
+
+/// True for a line that declares an enum variant (ident starting with
+/// an uppercase letter; attributes and comment-only lines excluded).
+fn is_variant_line(l: &Line) -> bool {
+    let t = l.code.trim();
+    !t.starts_with("#[") && t.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+}
+
+/// Count occurrences of `token` in the code span starting at the line
+/// containing `start` and ending at the first later line containing
+/// `end` (or, for `end == "\n}"`, at the first line whose depth returns
+/// to the start line's depth).
+fn span_token_count(f: &ScannedFile, start: &str, end: &str, token: &str) -> (u32, Option<usize>) {
+    let Some(i) = f.lines.iter().position(|l| !l.in_test && l.code.contains(start)) else {
+        return (0, None);
+    };
+    let mut n = 0usize;
+    for l in &f.lines[i..] {
+        n += l.code.matches(token).count();
+        let closes = if end == "\n}" {
+            l.number > f.lines[i].number
+                && l.depth == f.lines[i].depth + 1
+                && l.code.trim() == "}"
+        } else {
+            l.code.contains(end)
+        };
+        if closes {
+            return (f.lines[i].number, Some(n));
+        }
+    }
+    (f.lines[i].number, Some(n))
+}
+
+/// Find `vals: [f64; N]` and parse N.
+fn breakdown_array_len(f: &ScannedFile) -> (u32, Option<usize>) {
+    for l in &f.lines {
+        if l.in_test {
+            continue;
+        }
+        if let Some(pos) = l.code.find("vals: [f64;") {
+            let rest = &l.code[pos + "vals: [f64;".len()..];
+            let digits: String =
+                rest.chars().skip_while(|c| c.is_whitespace()).take_while(|c| c.is_ascii_digit()).collect();
+            return (l.number, digits.parse().ok());
+        }
+    }
+    (0, None)
+}
+
+// ------------------------------------------------------------------- H1
+
+/// Item kinds H1 requires rustdoc on when declared `pub` (matching what
+/// `#![deny(missing_docs)]` will enforce once a toolchain host builds
+/// the tree).
+const H1_ITEM_PREFIXES: &[&str] = &[
+    "pub fn ",
+    "pub unsafe fn ",
+    "pub struct ",
+    "pub enum ",
+    "pub trait ",
+    "pub unsafe trait ",
+    "pub const ",
+    "pub static ",
+    "pub type ",
+];
+
+/// Map each scanned file to whether it opens with inner (`//!`) docs —
+/// what satisfies `missing_docs` for the `pub mod x;` that mounts it.
+fn module_doc_map(files: &[ScannedFile]) -> BTreeMap<String, bool> {
+    let mut m = BTreeMap::new();
+    for f in files {
+        let documented = f
+            .lines
+            .iter()
+            .find(|l| !l.code.trim().is_empty() || !l.comment.is_empty())
+            .is_some_and(|l| l.is_doc);
+        m.insert(f.rel_path.clone(), documented);
+    }
+    m
+}
+
+fn h1_docs(f: &ScannedFile, module_docs: &BTreeMap<String, bool>, out: &mut Vec<Finding>) {
+    if f.rel_path == "main.rs" {
+        return; // the binary crate root is outside the lib doc wall
+    }
+    let push = |out: &mut Vec<Finding>, line: u32, what: &str, name: &str| {
+        out.push(Finding {
+            rule: "h1",
+            file: f.rel_path.clone(),
+            line,
+            msg: format!("doc hygiene: missing rustdoc on public {what} `{name}`"),
+        });
+    };
+
+    for (i, l) in f.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        let t = l.code.trim();
+
+        // `pub mod x;` — satisfied by `///` above or `//!` inside x
+        if let Some(rest) = t.strip_prefix("pub mod ") {
+            if let Some(name) = rest.strip_suffix(';') {
+                let name = name.trim();
+                if !has_doc_above(f, i) && !submodule_has_inner_docs(&f.rel_path, name, module_docs)
+                {
+                    push(out, l.number, "module", name);
+                }
+                continue;
+            }
+        }
+
+        for prefix in H1_ITEM_PREFIXES {
+            if let Some(rest) = t.strip_prefix(prefix) {
+                if !has_doc_above(f, i) {
+                    let name: String = rest
+                        .chars()
+                        .take_while(|c| c.is_alphanumeric() || *c == '_')
+                        .collect();
+                    let what = prefix.trim_start_matches("pub ").trim_start_matches("unsafe ");
+                    push(out, l.number, what.trim(), &name);
+                }
+                break;
+            }
+        }
+
+        // struct fields / enum variants of public containers
+        let is_struct = t.starts_with("pub struct ");
+        let is_enum = t.starts_with("pub enum ");
+        if (is_struct || is_enum) && region_opens(f, i) {
+            let decl_depth = l.depth;
+            for m in &f.lines[i + 1..] {
+                if m.depth <= decl_depth && !m.code.trim().is_empty() {
+                    break;
+                }
+                if m.depth != decl_depth + 1 || m.in_test {
+                    continue;
+                }
+                let mt = m.code.trim();
+                let midx = (m.number - 1) as usize;
+                if is_struct {
+                    if let Some(rest) = mt.strip_prefix("pub ") {
+                        let name: String =
+                            rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+                        if rest[name.len()..].trim_start().starts_with(':')
+                            && !has_doc_above(f, midx)
+                        {
+                            push(out, m.number, "field", &name);
+                        }
+                    }
+                } else if is_variant_line(m) && !has_doc_above(f, midx) {
+                    let name: String =
+                        mt.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+                    push(out, m.number, "enum variant", &name);
+                }
+            }
+        }
+    }
+}
+
+/// True when the item declared on line `i` opens a brace region (its
+/// next line sits deeper).
+fn region_opens(f: &ScannedFile, i: usize) -> bool {
+    f.lines.get(i + 1).is_some_and(|n| n.depth > f.lines[i].depth)
+}
+
+/// True when the item starting at line `i` has an attached doc comment:
+/// walking upward over attributes, blank lines and plain comments, the
+/// first other thing found is a doc line.
+fn has_doc_above(f: &ScannedFile, i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &f.lines[j];
+        let t = l.code.trim();
+        if l.is_doc {
+            return true;
+        }
+        if t.starts_with("#[") || t.is_empty() {
+            continue; // attributes, blanks, comment-only lines
+        }
+        return false;
+    }
+    false
+}
+
+/// Resolve `pub mod <name>;` from the file that declares it to the
+/// submodule file and report whether that file opens with `//!` docs.
+fn submodule_has_inner_docs(
+    decl_rel: &str,
+    name: &str,
+    module_docs: &BTreeMap<String, bool>,
+) -> bool {
+    let dir = match decl_rel.rfind('/') {
+        Some(pos) => {
+            let d = &decl_rel[..pos];
+            // `sim/mod.rs` mounts siblings from `sim/`; `lib.rs` from
+            // the root
+            format!("{d}/")
+        }
+        None => String::new(),
+    };
+    let candidates = [format!("{dir}{name}.rs"), format!("{dir}{name}/mod.rs")];
+    candidates.iter().any(|c| module_docs.get(c).copied().unwrap_or(false))
+}
+
+fn h1_design_refs(f: &ScannedFile, sections: Option<&[String]>, out: &mut Vec<Finding>) {
+    let Some(sections) = sections else { return };
+    for l in &f.lines {
+        let mut rest = l.comment.as_str();
+        while let Some(pos) = rest.find("DESIGN.md §") {
+            rest = &rest[pos + "DESIGN.md §".len()..];
+            let id: String = rest
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '-' || *c == '_')
+                .collect();
+            if !id.is_empty() && !sections.iter().any(|s| s == &id) {
+                out.push(Finding {
+                    rule: "h1",
+                    file: f.rel_path.clone(),
+                    line: l.number,
+                    msg: format!(
+                        "doc hygiene: reference to DESIGN.md §{id} does not resolve to a \
+                         real section (stale after a DESIGN.md edit?)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan_source;
+
+    fn run(rel: &str, src: &str, rules: &[Rule]) -> Vec<Finding> {
+        apply(&[scan_source(rel, src)], rules, None)
+    }
+
+    #[test]
+    fn d1_fires_in_result_module_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(run("sim/x.rs", src, &[Rule::D1]).len(), 1);
+        assert_eq!(run("util/x.rs", src, &[Rule::D1]).len(), 0);
+        assert_eq!(run("pack.rs", src, &[Rule::D1]).len(), 1);
+    }
+
+    #[test]
+    fn d1_skips_tests_and_strings() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        assert!(run("sim/x.rs", src, &[Rule::D1]).is_empty());
+        let src2 = "let s = \"a HashMap walks into a bar\";\n";
+        assert!(run("sim/x.rs", src2, &[Rule::D1]).is_empty());
+    }
+
+    #[test]
+    fn d2_fires_tree_wide() {
+        let src = "let r = rand::thread_rng();\n";
+        assert_eq!(run("util/x.rs", src, &[Rule::D2]).len(), 2); // rand:: + thread_rng
+        assert!(run("util/rng.rs", src, &[Rule::D2]).is_empty());
+    }
+
+    #[test]
+    fn a1_requires_ordering_justification() {
+        let bad = "x.load(Ordering::Acquire);\n";
+        assert_eq!(run("coordinator/p.rs", bad, &[Rule::A1]).len(), 1);
+        let good = "// ordering: Acquire pairs with the Release store in install()\nx.load(Ordering::Acquire);\n";
+        assert!(run("coordinator/p.rs", good, &[Rule::A1]).is_empty());
+        // out of scope: no finding even unjustified
+        assert!(run("sim/p.rs", bad, &[Rule::A1]).is_empty());
+    }
+
+    #[test]
+    fn a1_relaxed_allowlist() {
+        let bad = "// ordering: whatever\nself.flag.store(true, Ordering::Relaxed);\n";
+        assert_eq!(run("coordinator/p.rs", bad, &[Rule::A1]).len(), 1);
+        let good = "// ordering: standalone counter, readers tolerate staleness\nself.reaped.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(run("coordinator/p.rs", good, &[Rule::A1]).is_empty());
+    }
+
+    #[test]
+    fn a1_cmp_ordering_is_not_atomic() {
+        let src = "a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal);\n";
+        assert!(run("coordinator/p.rs", src, &[Rule::A1]).is_empty());
+    }
+
+    #[test]
+    fn a1_unsafe_needs_safety() {
+        let bad = "let v = unsafe { slots.take(i) };\n";
+        assert_eq!(run("x.rs", bad, &[Rule::A1]).len(), 1);
+        let good = "// SAFETY: the pop above gave us the exclusive claim\nlet v = unsafe { slots.take(i) };\n";
+        assert!(run("x.rs", good, &[Rule::A1]).is_empty());
+    }
+
+    #[test]
+    fn h1_missing_docs_on_pub_items() {
+        let src = "pub fn naked() {}\n\n/// documented\npub fn clothed() {}\n";
+        let f = run("sim/x.rs", src, &[Rule::H1]);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("naked"));
+    }
+
+    #[test]
+    fn h1_fields_and_variants() {
+        let src = "/// S\npub struct S {\n    pub undoc: f64,\n    /// fine\n    pub doc: f64,\n    private: u32,\n}\n/// E\npub enum E {\n    Undoc,\n    /// fine\n    Doc,\n}\n";
+        let f = run("sim/x.rs", src, &[Rule::H1]);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f[0].msg.contains("undoc"));
+        assert!(f[1].msg.contains("Undoc"));
+    }
+
+    #[test]
+    fn h1_design_ref_resolution() {
+        let secs = vec!["8".to_string(), "Hardware-Adaptation".to_string()];
+        let src = "//! See DESIGN.md §8 and DESIGN.md §99.\n";
+        let f = apply(&[scan_source("x.rs", src)], &[Rule::H1], Some(&secs));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("§99"));
+    }
+
+    #[test]
+    fn e1_detects_drift() {
+        let acc_bad = "/// C\npub enum Category {\n    /// a\n    A,\n    /// b\n    B,\n}\n\n/// t\npub const CATEGORIES: &[Category] = &[\n    Category::A,\n    Category::B,\n];\n\n/// B\npub struct Breakdown {\n    /// v\n    vals: [f64; 3],\n}\n";
+        let files = vec![scan_source("sim/accounting.rs", acc_bad)];
+        let f = apply(&files, &[Rule::E1], None);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].msg.contains("Breakdown array length"));
+    }
+
+    #[test]
+    fn e1_clean_when_counts_agree() {
+        let acc = "/// C\npub enum Category {\n    /// a\n    A,\n    /// b\n    B,\n}\npub const CATEGORIES: &[Category] = &[\n    Category::A,\n    Category::B,\n];\npub struct Breakdown {\n    vals: [f64; 2],\n}\n";
+        let tab = "fn glyph(c: Category) -> char {\n    match c {\n        Category::A => 'a',\n        Category::B => 'b',\n    }\n}\n";
+        let files = vec![scan_source("sim/accounting.rs", acc), scan_source("experiments/tables.rs", tab)];
+        let f = apply(&files, &[Rule::E1], None);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,0 +1,352 @@
+//! Comment/string-aware line scanner for the lint pass.
+//!
+//! The linter deliberately works on source *lines*, not on a rustc AST
+//! (DESIGN.md §12 records why): the container that grows this repo has
+//! no toolchain, so the pass must be runnable as a zero-dependency
+//! binary subcommand — and mirrorable in `tools/lint_src.py` — with
+//! nothing but `std`.  The scanner therefore does the one lexical job
+//! the rules cannot get wrong: splitting every line into its *code*
+//! part (string/char literals blanked, comments removed) and its
+//! *comment* part (the text of `//`/`///`/`/* */` runs), while tracking
+//! brace depth and `#[cfg(test)]` item extents so rules can skip test
+//! code.
+
+/// One scanned source line: the lexical facts every rule consumes.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// 1-based line number in the file.
+    pub number: u32,
+    /// The code on this line with comments removed and the contents of
+    /// string/char literals blanked to spaces (delimiters kept), so
+    /// token searches never match inside literals.
+    pub code: String,
+    /// The concatenated comment text on this line (doc or plain; block
+    /// comment interiors included), without the `//`/`/*` markers.
+    pub comment: String,
+    /// True when the line is inside (or is) an item gated by
+    /// `#[cfg(test)]` — rules that police shipped behaviour skip these.
+    pub in_test: bool,
+    /// True when the comment is a doc comment (`///`, `//!`, `/** */`).
+    pub is_doc: bool,
+    /// Brace depth at the *start* of the line.
+    pub depth: u32,
+}
+
+/// A whole scanned file: path (relative to the scan root) plus lines.
+#[derive(Clone, Debug)]
+pub struct ScannedFile {
+    /// Path relative to the `--src` root, with `/` separators.
+    pub rel_path: String,
+    /// Every line of the file, in order.
+    pub lines: Vec<Line>,
+}
+
+/// Lexer mode carried across lines (block comments and raw strings can
+/// span lines; everything else resets at the newline).
+enum Mode {
+    /// Plain code.
+    Code,
+    /// Inside a (possibly nested) block comment; payload is the
+    /// nesting depth and whether the outermost opener was a doc
+    /// comment (`/**` or `/*!`).
+    Block(u32, bool),
+    /// Inside a raw string literal `r##"…"##`; payload is the number
+    /// of `#` marks required to close it.
+    RawStr(u32),
+    /// Inside an ordinary `"…"` string literal.
+    Str,
+}
+
+/// Scan one file's text into [`Line`] records.
+///
+/// `rel_path` is stored verbatim on the result; it is what findings
+/// report, so callers pass the path relative to the scan root.
+pub fn scan_source(rel_path: &str, text: &str) -> ScannedFile {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    let mut depth: u32 = 0;
+    // #[cfg(test)] tracking: `pending` is set between the attribute and
+    // the `{` that opens the gated item; `until` is the depth the gated
+    // item's closing brace returns to.
+    let mut test_pending = false;
+    let mut test_until: Option<u32> = None;
+
+    for (idx, raw) in text.split('\n').enumerate() {
+        let start_depth = depth;
+        let in_test_at_start = test_until.is_some() || test_pending;
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let mut is_doc = matches!(mode, Mode::Block(_, true));
+
+        let bytes: Vec<char> = raw.chars().collect();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let c = bytes[i];
+            let next = bytes.get(i + 1).copied();
+            match mode {
+                Mode::Block(ref mut d, _doc) => {
+                    if c == '/' && next == Some('*') {
+                        *d += 1;
+                        i += 2;
+                    } else if c == '*' && next == Some('/') {
+                        if *d == 1 {
+                            mode = Mode::Code;
+                        } else {
+                            *d -= 1;
+                        }
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' {
+                        let mut n = 0u32;
+                        while n < hashes && bytes.get(i + 1 + n as usize) == Some(&'#') {
+                            n += 1;
+                        }
+                        if n == hashes {
+                            code.push('"');
+                            i += 1 + hashes as usize;
+                            mode = Mode::Code;
+                            continue;
+                        }
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if next.is_some() {
+                            code.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if c == '/' && next == Some('/') {
+                        // line comment: doc if `///` or `//!`
+                        let third = bytes.get(i + 2).copied();
+                        is_doc = third == Some('/') || third == Some('!');
+                        let skip = if is_doc { 3 } else { 2 };
+                        comment.push_str(&bytes[(i + skip).min(bytes.len())..].iter().collect::<String>());
+                        i = bytes.len();
+                    } else if c == '/' && next == Some('*') {
+                        let third = bytes.get(i + 2).copied();
+                        let doc = third == Some('*') || third == Some('!');
+                        is_doc = is_doc || doc;
+                        mode = Mode::Block(1, doc);
+                        i += 2;
+                    } else if c == 'r'
+                        && (next == Some('"') || next == Some('#'))
+                        && !prev_is_ident(&bytes, i)
+                    {
+                        // raw string r"…" / r#"…"#
+                        let mut hashes = 0u32;
+                        let mut j = i + 1;
+                        while bytes.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if bytes.get(j) == Some(&'"') {
+                            code.push('"');
+                            mode = Mode::RawStr(hashes);
+                            i = j + 1;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        // char literal vs lifetime: a char literal closes
+                        // within a couple of chars (`'x'`, `'\n'`, `'\u{…}'`)
+                        if let Some(end) = char_literal_end(&bytes, i) {
+                            code.push('\'');
+                            for _ in (i + 1)..end {
+                                code.push(' ');
+                            }
+                            code.push('\'');
+                            i = end + 1;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        if c == '{' {
+                            depth += 1;
+                            if test_pending {
+                                test_pending = false;
+                                // nested #[cfg(test)] inside an already
+                                // tracked region must not shrink it
+                                if test_until.is_none() {
+                                    test_until = Some(depth - 1);
+                                }
+                            }
+                        } else if c == '}' {
+                            depth = depth.saturating_sub(1);
+                            if test_until == Some(depth) {
+                                test_until = None;
+                            }
+                        }
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+
+        // a `#[cfg(test)]` attribute arms the test-region tracker for
+        // the next item that opens a brace (or a `mod t;` declaration,
+        // which carries no braces and stays pending one line only).
+        // The check runs on `code`, so the attribute spelled out inside
+        // a comment or string never arms it.
+        let attr_pos =
+            code.find("#[cfg(test)]").or_else(|| code.find("#[cfg(all(test"));
+        if let Some(p) = attr_pos {
+            if code[p..].contains('{') {
+                // attribute and item brace on one line: the region we
+                // just walked into closes back at this line's depth
+                if test_until.is_none() {
+                    test_until = Some(start_depth);
+                }
+            } else {
+                test_pending = true;
+            }
+        } else if test_pending && test_until.is_none() && code.trim().ends_with(';') {
+            test_pending = false;
+        }
+
+        out.push(Line {
+            number: (idx + 1) as u32,
+            code,
+            comment,
+            in_test: in_test_at_start || test_until.is_some() || test_pending,
+            is_doc,
+            depth: start_depth,
+        });
+    }
+
+    ScannedFile { rel_path: rel_path.to_string(), lines: out }
+}
+
+/// True when `bytes[i]` is preceded by an identifier character (so an
+/// `r` there is the tail of a name like `var`, not a raw-string mark).
+fn prev_is_ident(bytes: &[char], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_alphanumeric() || bytes[i - 1] == '_')
+}
+
+/// If a char literal starts at `bytes[i] == '\''`, return the index of
+/// its closing quote; `None` means the quote is a lifetime mark.
+fn char_literal_end(bytes: &[char], i: usize) -> Option<usize> {
+    match bytes.get(i + 1)? {
+        '\\' => {
+            // escaped char: scan to the next unescaped quote (covers
+            // `'\n'`, `'\''`, `'\u{1F600}'`)
+            let mut j = i + 2;
+            while j < bytes.len() && j < i + 12 {
+                if bytes[j] == '\'' {
+                    return Some(j);
+                }
+                j += 1;
+            }
+            None
+        }
+        '\'' => None, // `''` is not a char literal
+        _ => {
+            if bytes.get(i + 2) == Some(&'\'') {
+                Some(i + 2)
+            } else {
+                None // `'a` lifetime / `'static`
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        scan_source("t.rs", text).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_comments_and_keeps_text() {
+        let f = scan_source("t.rs", "let x = 1; // ordering: Relaxed counter\n");
+        assert_eq!(f.lines[0].code.trim(), "let x = 1;");
+        assert!(f.lines[0].comment.contains("ordering: Relaxed counter"));
+        assert!(!f.lines[0].is_doc);
+    }
+
+    #[test]
+    fn blanks_string_literals() {
+        let c = codes("let s = \"HashMap inside a string\";");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains('"'));
+    }
+
+    #[test]
+    fn blanks_raw_strings_across_lines() {
+        let c = codes("let s = r#\"SystemTime\nstill SystemTime\"#;\nlet y = 1;");
+        assert!(!c[0].contains("SystemTime"));
+        assert!(!c[1].contains("SystemTime"));
+        assert!(c[2].contains("let y"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = scan_source("t.rs", "/* a /* b */ still comment */ let z = 1;");
+        assert!(f.lines[0].code.contains("let z"));
+        assert!(!f.lines[0].code.contains('a'));
+    }
+
+    #[test]
+    fn doc_comments_flagged() {
+        let f = scan_source("t.rs", "/// docs here\npub fn f() {}\n//! module docs");
+        assert!(f.lines[0].is_doc);
+        assert!(!f.lines[1].is_doc);
+        assert!(f.lines[2].is_doc);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let c = codes("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'x';\nlet n = '\\n';");
+        assert!(c[0].contains("'a str"));
+        assert!(!c[1].contains('x') || c[1].matches('x').count() == 0);
+        assert!(c[2].contains('\''));
+    }
+
+    #[test]
+    fn cfg_test_region_tracked() {
+        let src = "pub fn shipped() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\npub fn also_shipped() {}\n";
+        let f = scan_source("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test); // the attribute itself
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn depth_tracks_braces() {
+        let f = scan_source("t.rs", "fn f() {\n    if x {\n    }\n}\n");
+        assert_eq!(f.lines[0].depth, 0);
+        assert_eq!(f.lines[1].depth, 1);
+        assert_eq!(f.lines[2].depth, 2);
+        assert_eq!(f.lines[3].depth, 1);
+    }
+}

@@ -12,6 +12,7 @@
 //!   tables       P/F/O summary table at the paper's fixed job point
 //!   cluster      rolling-epoch cluster simulation
 //!   bench        quick in-binary micro-benchmarks
+//!   lint         in-tree static analysis (determinism/atomics/doc invariants)
 //!   run          run an experiment described by a TOML config
 //!   serve        start the TCP control plane
 //!
@@ -48,6 +49,7 @@ fn main() -> ExitCode {
         "tables" => tables(rest),
         "cluster" => cluster(rest),
         "bench" => bench_quick(rest),
+        "lint" => lint_cmd(rest),
         "run" => run_config(rest),
         "serve" => serve(rest),
         "help" | "--help" | "-h" => {
@@ -82,6 +84,7 @@ fn help_text() -> String {
      tables       P/F/O summary table at the paper's fixed job point\n  \
      cluster      rolling-epoch cluster simulation (Poisson arrivals)\n  \
      bench        quick micro-benchmarks; --area {engine,service} emits BENCH_<area>.json\n  \
+     lint         static-analysis pass: determinism/atomics/doc invariants (DESIGN.md \u{00a7}12)\n  \
      run          run an experiment described by a TOML config\n  \
      serve        start the TCP control plane\n  \
      version      print version\n\nsee `siwoft <command> --help`"
@@ -1044,6 +1047,64 @@ fn git_rev() -> String {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// `siwoft lint`: run the in-tree static-analysis pass (DESIGN.md §12)
+/// and exit non-zero when the tree has findings.
+fn lint_cmd(raw: &[String]) -> Result<(), String> {
+    use siwoft::lint::{self, Rule};
+    let spec = CommandSpec::new("lint", "static-analysis pass over the Rust source tree")
+        .opt("format", "text", "output format: text | json (schema-pinned findings document)")
+        .opt(
+            "rules",
+            "",
+            "comma-separated rule ids to run: d1,d2,a1,e1,h1 (empty = all; \
+             see DESIGN.md \u{00a7}12 for the catalog)",
+        )
+        .opt(
+            "src",
+            "",
+            "source tree root (empty = rust/src when it exists, else src)",
+        );
+    let a = spec.parse(raw)?;
+
+    let src = match a.str("src") {
+        "" => {
+            if std::path::Path::new("rust/src").is_dir() {
+                "rust/src".to_string()
+            } else if std::path::Path::new("src").is_dir() {
+                "src".to_string()
+            } else {
+                return Err("lint: neither rust/src nor src exists; pass --src".into());
+            }
+        }
+        s => s.to_string(),
+    };
+    let mut opts = lint::Options::new(&src);
+    if !a.str("rules").is_empty() {
+        let mut rules = Vec::new();
+        for id in a.str("rules").split(',').filter(|s| !s.trim().is_empty()) {
+            rules.push(
+                Rule::parse(id)
+                    .ok_or_else(|| format!("lint: unknown rule '{id}' (expected d1,d2,a1,e1,h1)"))?,
+            );
+        }
+        opts.rules = rules;
+    }
+
+    let report = lint::run(&opts).map_err(|e| format!("lint: {e:#}"))?;
+    match a.str("format") {
+        "text" => print!("{}", report.to_text()),
+        "json" => println!("{}", report.to_json()),
+        other => return Err(format!("unknown --format '{other}' (expected text or json)")),
+    }
+    if report.is_clean() {
+        Ok(())
+    } else {
+        // the findings themselves went to stdout; keep stderr terse so
+        // CI logs stay readable
+        Err(format!("siwoft lint: {} finding(s)", report.findings.len()))
+    }
 }
 
 fn cluster(raw: &[String]) -> Result<(), String> {

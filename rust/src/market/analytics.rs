@@ -11,7 +11,9 @@ use super::catalog::Catalog;
 use super::trace::PriceTrace;
 
 #[derive(Clone, Debug)]
+/// Per-market statistics derived from a price trace window — the Layer 2 compute graph's native mirror.
 pub struct MarketAnalytics {
+    /// Number of markets covered.
     pub markets: usize,
     /// window length the stats were computed over (hours)
     pub window_hours: usize,
@@ -103,6 +105,7 @@ impl MarketAnalytics {
     }
 
     #[inline]
+    /// Price correlation between markets `i` and `j` (diagonal = 1).
     pub fn corr_at(&self, i: usize, j: usize) -> f32 {
         self.corr[i * self.markets + j]
     }
@@ -171,6 +174,7 @@ impl MarketAnalytics {
 /// knobs of `PSiwoft` / `PredictivePolicy` consume.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlacementScores {
+    /// Number of markets covered.
     pub markets: usize,
     /// placement horizon the stability discount was computed for (hours)
     pub horizon_h: f64,
@@ -180,6 +184,7 @@ pub struct PlacementScores {
 
 impl PlacementScores {
     #[inline]
+    /// The placement score of `market`.
     pub fn at(&self, market: usize) -> f32 {
         self.score[market]
     }
@@ -203,15 +208,19 @@ impl PlacementScores {
 /// window edge); an always-revoked market is all-zero.
 #[derive(Clone, Debug)]
 pub struct SurvivalCurves {
+    /// Number of markets covered.
     pub markets: usize,
+    /// Number of survival-time buckets (hours) per market.
     pub t_buckets: usize,
     /// row-major [M * T]
     pub s: Vec<f32>,
 }
 
 impl SurvivalCurves {
+    /// Default number of survival buckets.
     pub const DEFAULT_T: usize = 64;
 
+    /// Compute the curves from a trace (availability = priced under on-demand).
     pub fn compute(trace: &PriceTrace, od_prices: &[f32], t_buckets: usize) -> SurvivalCurves {
         assert_eq!(trace.markets, od_prices.len());
         let (m, h) = (trace.markets, trace.hours);

@@ -9,9 +9,13 @@
 /// A rentable instance type.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InstanceType {
+    /// Instance type name (e.g. `m4.xlarge`).
     pub name: &'static str,
+    /// Instance family group (first letter key, e.g. `m4`).
     pub family: &'static str,
+    /// Virtual CPU count.
     pub vcpus: u32,
+    /// Memory (GB).
     pub mem_gb: f64,
     /// us-east-1 Linux on-demand $/h (2020)
     pub od_price: f64,
@@ -20,20 +24,26 @@ pub struct InstanceType {
 /// One cloud spot market = (instance type, region, availability zone).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MarketSpec {
+    /// Stable market index into the catalog and every price trace.
     pub id: usize,
+    /// The instance type sold in this market.
     pub instance: InstanceType,
+    /// Region name (e.g. `us-east-1`).
     pub region: &'static str,
+    /// Availability-zone letter within the region.
     pub az: char,
     /// on-demand price in this region ($/h)
     pub od_price: f64,
 }
 
 impl MarketSpec {
+    /// Human-readable `type@region-az` label.
     pub fn label(&self) -> String {
         format!("{}/{}{}", self.instance.name, self.region, self.az)
     }
 }
 
+/// The modeled regions and their price-level multipliers.
 pub const REGIONS: &[(&str, f64)] = &[
     // (region, on-demand price multiplier vs us-east-1)
     ("us-east-1", 1.00),
@@ -42,6 +52,7 @@ pub const REGIONS: &[(&str, f64)] = &[
     ("ap-southeast-1", 1.20),
 ];
 
+/// The availability-zone letters each region offers.
 pub const AZS: &[char] = &['a', 'b', 'c'];
 
 /// Base instance-type table (2020 us-east-1 Linux on-demand).
@@ -76,6 +87,7 @@ pub fn instance_types() -> Vec<InstanceType> {
 /// Catalog: the full market universe plus lookup helpers.
 #[derive(Clone, Debug)]
 pub struct Catalog {
+    /// Every market, indexed by its `id`.
     pub markets: Vec<MarketSpec>,
 }
 
@@ -109,9 +121,11 @@ impl Catalog {
         Catalog { markets }
     }
 
+    /// Number of markets in the catalog.
     pub fn len(&self) -> usize {
         self.markets.len()
     }
+    /// True when the catalog holds no markets.
     pub fn is_empty(&self) -> bool {
         self.markets.is_empty()
     }
@@ -172,6 +186,7 @@ impl Catalog {
         region_idx * AZS.len() + az_idx
     }
 
+    /// Number of distinct `(region, az)` failure groups.
     pub fn az_group_count(&self) -> usize {
         REGIONS.len() * AZS.len()
     }

@@ -24,9 +24,13 @@ use super::trace::PriceTrace;
 use crate::util::json::Json;
 
 #[derive(Debug)]
+/// Everything that can go wrong importing a price history dump.
 pub enum ImportError {
+    /// The document is not valid JSON or misses required keys.
     Json(String),
+    /// The document holds no samples.
     Empty,
+    /// A timestamp that does not parse.
     Timestamp(String),
     /// pagination stitching failed (missing or dangling `NextToken`)
     Pagination(String),
@@ -48,8 +52,11 @@ impl std::error::Error for ImportError {}
 /// One parsed price observation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Sample {
+    /// Instance type name as reported (e.g. `m4.xlarge`).
     pub instance_type: String,
+    /// Availability zone as reported (e.g. `us-east-1a`).
     pub zone: String,
+    /// Spot price ($/h).
     pub price: f32,
     /// hours since the unix epoch
     pub epoch_hour: i64,

@@ -18,12 +18,15 @@ pub const BILLING_CYCLE_H: f64 = 1.0;
 /// A revocation check / schedule view over one market's trace row.
 #[derive(Clone, Copy, Debug)]
 pub struct SpotMarket<'a> {
+    /// Market id (index into catalog and trace).
     pub id: usize,
+    /// On-demand price of this market's instance type ($/h).
     pub od_price: f32,
     trace: &'a PriceTrace,
 }
 
 impl<'a> SpotMarket<'a> {
+    /// A view of market `id` over `trace`.
     pub fn new(trace: &'a PriceTrace, id: usize, od_price: f32) -> Self {
         SpotMarket { id, od_price, trace }
     }

@@ -10,17 +10,24 @@ use crate::csv_row;
 use crate::util::csvio;
 
 #[derive(Clone, Debug)]
+/// A dense spot-price matrix: `markets × hours` prices ($/h, `f32`).
 pub struct PriceTrace {
+    /// Number of markets (rows).
     pub markets: usize,
+    /// Number of hourly steps (columns).
     pub hours: usize,
     /// row-major [markets * hours]
     pub prices: Vec<f32>,
 }
 
 #[derive(Debug)]
+/// Everything that can go wrong loading a trace.
 pub enum TraceError {
+    /// A CSV cell or row that does not parse.
     Csv(String),
+    /// A row with the wrong number of columns.
     Shape { expected: usize, got: usize, row: usize },
+    /// A trace with no rows or no columns.
     Empty,
 }
 
@@ -40,10 +47,12 @@ impl std::fmt::Display for TraceError {
 impl std::error::Error for TraceError {}
 
 impl PriceTrace {
+    /// An all-zero trace of the given shape.
     pub fn new(markets: usize, hours: usize) -> Self {
         PriceTrace { markets, hours, prices: vec![0.0; markets * hours] }
     }
 
+    /// Build a trace from per-market rows (all must share one length).
     pub fn from_rows(rows: Vec<Vec<f32>>) -> Result<Self, TraceError> {
         if rows.is_empty() {
             return Err(TraceError::Empty);
@@ -61,11 +70,13 @@ impl PriceTrace {
     }
 
     #[inline]
+    /// The price of `market` at `hour` ($/h).
     pub fn price(&self, market: usize, hour: usize) -> f32 {
         self.prices[market * self.hours + hour]
     }
 
     #[inline]
+    /// Set the price of `market` at `hour`.
     pub fn set(&mut self, market: usize, hour: usize, p: f32) {
         self.prices[market * self.hours + hour] = p;
     }
@@ -77,6 +88,7 @@ impl PriceTrace {
         self.price(market, h)
     }
 
+    /// The full hourly price row of `market`.
     pub fn row(&self, market: usize) -> &[f32] {
         &self.prices[market * self.hours..(market + 1) * self.hours]
     }
@@ -113,15 +125,18 @@ impl PriceTrace {
         rows
     }
 
+    /// Write the trace as CSV (one row per market).
     pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
         csvio::write_file(path, &self.to_csv_rows())
     }
 
+    /// Read a trace from a CSV file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self, TraceError> {
         let rows = csvio::read_file(path).map_err(TraceError::Csv)?;
         Self::from_csv_rows(rows)
     }
 
+    /// Build a trace from parsed CSV string cells.
     pub fn from_csv_rows(rows: Vec<Vec<String>>) -> Result<Self, TraceError> {
         if rows.len() < 2 {
             return Err(TraceError::Empty);

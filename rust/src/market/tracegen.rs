@@ -22,12 +22,17 @@ use super::catalog::Catalog;
 use super::trace::PriceTrace;
 use crate::util::rng::Rng;
 
+/// Hours per modeled 30-day month.
 pub const HOURS_PER_MONTH: usize = 720;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Volatility class of a market's synthetic price process.
 pub enum VolClass {
+    /// Rarely revoked; prices hug the base ratio.
     Stable,
+    /// Occasional excursions above on-demand.
     Moderate,
+    /// Frequent excursions and shock participation.
     Volatile,
 }
 
@@ -46,6 +51,7 @@ impl VolClass {
 }
 
 #[derive(Clone, Debug)]
+/// Knobs of the synthetic trace generator (OU log-price + AZ shocks).
 pub struct TraceGenConfig {
     /// trace length in months (30-day months, hourly resolution)
     pub months: f64,
@@ -59,6 +65,7 @@ pub struct TraceGenConfig {
     pub az_shock_prob: f64,
     /// class mix: fractions (stable, moderate, volatile)
     pub class_mix: (f64, f64, f64),
+    /// RNG seed for the generator.
     pub seed: u64,
 }
 
@@ -82,6 +89,7 @@ impl Default for TraceGenConfig {
 }
 
 impl TraceGenConfig {
+    /// Trace length in hourly steps.
     pub fn hours(&self) -> usize {
         (self.months * HOURS_PER_MONTH as f64).round() as usize
     }

@@ -42,6 +42,7 @@ pub struct Packer {
 const NO_GROUP: u64 = u64::MAX;
 
 impl Packer {
+    /// A packer for bins of `capacity_gb` GB.
     pub fn new(capacity_gb: f64) -> Packer {
         assert!(capacity_gb > 0.0, "packer capacity must be positive");
         Packer { capacity_gb }
@@ -57,6 +58,7 @@ impl Packer {
         Packer::new(cap)
     }
 
+    /// The per-bin capacity this packer packs to (GB).
     pub fn capacity_gb(&self) -> f64 {
         self.capacity_gb
     }

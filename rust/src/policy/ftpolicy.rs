@@ -10,6 +10,7 @@ use super::{Ctx, Decision, Policy};
 use crate::job::Job;
 
 #[derive(Clone, Debug, Default)]
+/// The paper's FT arm policy: cheapest suitable spot market, relying on its paired FT mechanism to absorb revocations.
 pub struct FtSpotPolicy {
     /// markets already revoked for the current job (avoid immediate
     /// re-provisioning of a just-revoked market)
@@ -17,6 +18,7 @@ pub struct FtSpotPolicy {
 }
 
 impl FtSpotPolicy {
+    /// A fresh FT-spot policy.
     pub fn new() -> Self {
         FtSpotPolicy::default()
     }

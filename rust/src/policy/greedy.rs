@@ -8,11 +8,13 @@ use super::{Ctx, Decision, Policy};
 use crate::job::Job;
 
 #[derive(Clone, Debug, Default)]
+/// Greedy baseline: always the cheapest spot market right now.
 pub struct GreedyCheapest {
     last_revoked: Option<usize>,
 }
 
 impl GreedyCheapest {
+    /// A fresh greedy policy.
     pub fn new() -> Self {
         GreedyCheapest::default()
     }

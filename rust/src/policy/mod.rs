@@ -33,11 +33,13 @@ pub enum Decision {
 }
 
 impl Decision {
+    /// The market this decision provisions in.
     pub fn market(&self) -> usize {
         match *self {
             Decision::Spot { market } | Decision::OnDemand { market } => market,
         }
     }
+    /// True for spot decisions.
     pub fn is_spot(&self) -> bool {
         matches!(self, Decision::Spot { .. })
     }
@@ -45,11 +47,13 @@ impl Decision {
 
 /// Context handed to a policy at decision time.
 pub struct Ctx<'a> {
+    /// The world (markets, prices, analytics) at decision time.
     pub world: &'a World,
     /// current simulation time (hours into the trace window)
     pub now: f64,
 }
 
+/// A provisioning policy: chooses markets, observes revocations.
 pub trait Policy: Send {
     fn name(&self) -> &'static str;
 

@@ -7,6 +7,7 @@ use super::{Ctx, Decision, Policy};
 use crate::job::Job;
 
 #[derive(Clone, Copy, Debug, Default)]
+/// On-demand baseline: never touches the spot market.
 pub struct OnDemandPolicy;
 
 impl Policy for OnDemandPolicy {

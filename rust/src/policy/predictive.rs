@@ -18,6 +18,7 @@ use crate::market::analytics::SurvivalCurves;
 use crate::market::PlacementScores;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
+/// Knobs of the survival-probability baseline (ref. \[17\]).
 pub struct PredictiveConfig {
     /// minimum acceptable survival probability over the job length
     pub confidence: f32,
@@ -38,10 +39,13 @@ impl Default for PredictiveConfig {
     }
 }
 
+/// Survival-probability policy: pick the cheapest market whose curve clears the confidence bar over the job length.
 pub struct PredictivePolicy {
+    /// The configuration in force.
     pub cfg: PredictiveConfig,
     curves: SurvivalCurves,
     banned: Vec<usize>,
+    /// Decisions that fell back to on-demand.
     pub ondemand_fallbacks: u64,
     /// placement scores cached per job (pure function of analytics ×
     /// catalog × horizon; recomputing per select would rebuild an
@@ -62,6 +66,7 @@ impl PredictivePolicy {
         }
     }
 
+    /// Train curves on `world`'s trace with default config.
     pub fn from_world(world: &crate::sim::World) -> Self {
         let curves =
             SurvivalCurves::compute(&world.trace, &world.od, SurvivalCurves::DEFAULT_T);

@@ -27,6 +27,7 @@ use crate::job::Job;
 use crate::market::PlacementScores;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
+/// Tunable thresholds of P-SIWOFT (Algorithm 1).
 pub struct PSiwoftConfig {
     /// Step 8 margin: require MTTR ≥ `lifetime_factor` × job length.
     pub lifetime_factor: f64,
@@ -58,7 +59,9 @@ impl Default for PSiwoftConfig {
 }
 
 #[derive(Clone, Debug)]
+/// P-SIWOFT (Algorithm 1): the paper's provisioning policy.
 pub struct PSiwoft {
+    /// The configuration in force.
     pub cfg: PSiwoftConfig,
     /// S_j: candidate market set for the current job (None = not yet
     /// initialized for this job)
@@ -74,6 +77,7 @@ pub struct PSiwoft {
 }
 
 impl PSiwoft {
+    /// A fresh policy with the given config.
     pub fn new(cfg: PSiwoftConfig) -> Self {
         PSiwoft {
             cfg,

@@ -26,9 +26,13 @@ use crate::{bail, err};
 /// One artifact entry from `manifest.json`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactInfo {
+    /// Artifact name (e.g. `market_stats`).
     pub name: String,
+    /// HLO text file, relative to the manifest.
     pub file: PathBuf,
+    /// Market count the artifact was lowered for.
     pub markets: usize,
+    /// Window length the artifact was lowered for.
     pub hours: usize,
 }
 
@@ -97,6 +101,7 @@ impl AnalyticsEngine {
         }
     }
 
+    /// Which backend is live (`"pjrt"` or `"native"`).
     pub fn backend_name(&self) -> &'static str {
         match self.backend {
             Backend::Native => "native",

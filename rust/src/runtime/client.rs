@@ -25,6 +25,7 @@ mod imp {
     /// A compiled HLO module ready to execute.
     pub struct HloExecutable {
         exe: xla::PjRtLoadedExecutable,
+        /// Path of the HLO text artifact this executable was compiled from.
         pub source: PathBuf,
     }
 
@@ -67,6 +68,7 @@ mod imp {
             Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
         }
 
+        /// Name of the PJRT platform backing this runtime (e.g. `cpu`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -89,6 +91,7 @@ mod imp {
             Ok(entry)
         }
 
+        /// Number of executables currently cached by artifact path.
         pub fn cached_count(&self) -> usize {
             self.cache.lock().unwrap().len()
         }
@@ -104,10 +107,12 @@ mod imp {
 
     /// Stub executable — never constructed without the `pjrt` feature.
     pub struct HloExecutable {
+        /// Path the caller asked to load (stub: never executed).
         pub source: PathBuf,
     }
 
     impl HloExecutable {
+        /// Stub: always fails — the `pjrt` feature is not compiled in.
         pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
             bail!("PJRT backend not compiled in (enable the `pjrt` feature)")
         }
@@ -118,6 +123,7 @@ mod imp {
     pub struct PjrtRuntime {}
 
     impl PjrtRuntime {
+        /// Stub: always fails — the `pjrt` feature is not compiled in.
         pub fn cpu() -> Result<PjrtRuntime> {
             bail!(
                 "PJRT backend not compiled in (build with `--features pjrt` \
@@ -125,15 +131,18 @@ mod imp {
             )
         }
 
+        /// Name of the stub platform (`"stub"`).
         pub fn platform(&self) -> String {
             "stub".to_string()
         }
 
+        /// Stub: always fails — the `pjrt` feature is not compiled in.
         pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<HloExecutable>> {
             let _ = path;
             bail!("PJRT backend not compiled in (enable the `pjrt` feature)")
         }
 
+        /// Stub: always 0 (nothing can be cached).
         pub fn cached_count(&self) -> usize {
             0
         }

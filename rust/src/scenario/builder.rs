@@ -50,21 +50,25 @@ impl<'w> Scenario<'w> {
         }
     }
 
+    /// The job to provision.
     pub fn job(mut self, job: Job) -> Self {
         self.job = job;
         self
     }
 
+    /// The provisioning policy to run.
     pub fn policy(mut self, policy: PolicyKind) -> Self {
         self.policy = policy;
         self
     }
 
+    /// The fault-tolerance mechanism to pair with it.
     pub fn ft(mut self, ft: FtKind) -> Self {
         self.ft = ft;
         self
     }
 
+    /// The revocation arrival rule.
     pub fn rule(mut self, rule: RevocationRule) -> Self {
         self.cfg.rule = rule;
         self
@@ -95,6 +99,7 @@ impl<'w> Scenario<'w> {
         self
     }
 
+    /// The RNG seed for this run.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -111,22 +116,28 @@ impl<'w> Scenario<'w> {
 
     // -- accessors (used by sweeps and result labelling) ---------------
 
+    /// The world this scenario runs in.
     pub fn world(&self) -> &'w World {
         self.world
     }
+    /// The configured job.
     pub fn job_ref(&self) -> &Job {
         &self.job
     }
+    /// The configured policy kind.
     pub fn policy_kind(&self) -> PolicyKind {
         self.policy
     }
+    /// The configured fault-tolerance kind.
     pub fn ft_kind(&self) -> FtKind {
         self.ft
     }
+    /// The [`RunConfig`] this scenario will execute with.
     pub fn run_config(&self) -> RunConfig {
         self.cfg
     }
 
+    /// The configured RNG seed.
     pub fn seed_value(&self) -> u64 {
         self.seed
     }

@@ -23,9 +23,13 @@ use crate::sim::World;
 #[derive(Clone, Copy, Debug, PartialEq)]
 #[allow(clippy::derive_partial_eq_without_eq)]
 pub enum PolicyKind {
+    /// P-SIWOFT (Algorithm 1) with its config.
     PSiwoft(PSiwoftConfig),
+    /// The paper's fault-tolerant spot baseline.
     FtSpot,
+    /// Pure on-demand provisioning.
     OnDemand,
+    /// Greedy cheapest-market spot selection.
     Greedy,
     /// survival-probability baseline (ref. \[17\]); trains its curves on
     /// the trace prefix `[0, start_t)` of the scenario it runs in
@@ -77,6 +81,7 @@ impl PolicyKind {
         SurvivalCurves::compute(&train, &world.od, SurvivalCurves::DEFAULT_T)
     }
 
+    /// Parse a policy name as written in configs / on the CLI.
     pub fn parse(name: &str) -> Option<PolicyKind> {
         match name {
             "p-siwoft" | "psiwoft" | "p" => Some(PolicyKind::PSiwoft(PSiwoftConfig::default())),
@@ -118,12 +123,15 @@ pub enum FtKind {
     /// P-SIWOFT's pairing: restart from scratch on revocation
     #[default]
     None,
+    /// Checkpoint every `1/n` of the job (paper-style periodic FT).
     Checkpoint {
         n: u32,
     },
     /// SpotOn-style hourly checkpoints scaled to the job length
     CheckpointHourly,
+    /// Live migration ahead of predicted revocations.
     Migration,
+    /// Run `k` replicas in distinct failure groups.
     Replication {
         k: u32,
     },
@@ -134,6 +142,7 @@ pub enum FtKind {
 }
 
 impl FtKind {
+    /// Instantiate the mechanism for `job`.
     pub fn build(&self, job: &Job) -> Box<dyn FtMechanism> {
         match *self {
             FtKind::None => Box::new(NoFt),
@@ -145,6 +154,7 @@ impl FtKind {
         }
     }
 
+    /// Parse an FT mechanism name as written in configs / on the CLI.
     pub fn parse(name: &str) -> Option<FtKind> {
         match name {
             "none" => Some(FtKind::None),

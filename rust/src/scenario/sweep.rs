@@ -19,9 +19,13 @@ use crate::sim::{AggregateResult, JobResult, RevocationRule, Scratch, World};
 /// One point of the cartesian product.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SweepPoint {
+    /// The job being provisioned.
     pub job: Job,
+    /// The provisioning policy under test.
     pub policy: PolicyKind,
+    /// The fault-tolerance mechanism paired with it.
     pub ft: FtKind,
+    /// The revocation arrival rule.
     pub rule: RevocationRule,
 }
 
@@ -29,8 +33,11 @@ pub struct SweepPoint {
 /// it (seed `i` of the row is `base_seed + i`).
 #[derive(Clone, Debug)]
 pub struct SweepRow {
+    /// The point this row executed.
     pub point: SweepPoint,
+    /// The aggregate over all seeds (the plotted bar).
     pub agg: AggregateResult,
+    /// The per-seed runs behind the aggregate.
     pub runs: Vec<JobResult>,
 }
 
@@ -56,6 +63,7 @@ pub struct Sweep<'w> {
 }
 
 impl<'w> Sweep<'w> {
+    /// Start building a sweep over `world` (builder style).
     pub fn on(world: &'w World) -> Sweep<'w> {
         Sweep {
             world,
@@ -110,16 +118,19 @@ impl<'w> Sweep<'w> {
         self
     }
 
+    /// The policy axis of the cartesian product.
     pub fn policies(mut self, policies: impl IntoIterator<Item = PolicyKind>) -> Self {
         self.policies = policies.into_iter().collect();
         self
     }
 
+    /// The fault-tolerance axis of the cartesian product.
     pub fn fts(mut self, fts: impl IntoIterator<Item = FtKind>) -> Self {
         self.fts = fts.into_iter().collect();
         self
     }
 
+    /// The revocation-rule axis of the cartesian product.
     pub fn rules(mut self, rules: impl IntoIterator<Item = RevocationRule>) -> Self {
         self.rules = rules.into_iter().collect();
         self
@@ -131,16 +142,19 @@ impl<'w> Sweep<'w> {
         self
     }
 
+    /// First seed of each point's replicate range.
     pub fn base_seed(mut self, seed: u64) -> Self {
         self.base_seed = seed;
         self
     }
 
+    /// Submission time for every job (absolute sim hours).
     pub fn start_t(mut self, start_t: f64) -> Self {
         self.start_t = start_t;
         self
     }
 
+    /// Session cap per run (0 = unlimited).
     pub fn max_sessions(mut self, max_sessions: u32) -> Self {
         self.max_sessions = max_sessions;
         self
@@ -174,6 +188,7 @@ impl<'w> Sweep<'w> {
         self.jobs.len() * self.policies.len() * self.fts.len() * self.rules.len()
     }
 
+    /// True when the cartesian product is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -368,11 +383,17 @@ impl<'w> Sweep<'w> {
 /// per-seed runs behind it (seed `i` of the row is `base_seed + i`).
 #[derive(Clone, Debug)]
 pub struct ServiceSweepRow {
+    /// Service scenario name.
     pub service: String,
+    /// The provisioning policy under test.
     pub policy: PolicyKind,
+    /// The fault-tolerance mechanism paired with it.
     pub ft: FtKind,
+    /// The revocation arrival rule.
     pub rule: RevocationRule,
+    /// The aggregate over all seeds (the plotted bar).
     pub agg: ServiceAggregate,
+    /// The per-seed runs behind the aggregate.
     pub runs: Vec<ServiceResult>,
 }
 
@@ -380,11 +401,17 @@ pub struct ServiceSweepRow {
 /// runs behind it (seed `i` of the row is `base_seed + i`).
 #[derive(Clone, Debug)]
 pub struct DagSweepRow {
+    /// DAG scenario name.
     pub dag: String,
+    /// The provisioning policy under test.
     pub policy: PolicyKind,
+    /// The fault-tolerance mechanism paired with it.
     pub ft: FtKind,
+    /// The revocation arrival rule.
     pub rule: RevocationRule,
+    /// The aggregate over all seeds (the plotted bar).
     pub agg: DagAggregate,
+    /// The per-seed runs behind the aggregate.
     pub runs: Vec<DagResult>,
 }
 

@@ -115,6 +115,7 @@ pub(crate) fn violation_time(
 /// Outcome of one tier across a whole service run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TierResult {
+    /// Tier name (from the spec).
     pub name: String,
     /// merged replica ledgers; the time breakdown carries the tier's
     /// SLO-violation integral as the time-only [`Category::Slo`] row
@@ -131,7 +132,9 @@ pub struct TierResult {
     pub up_h: f64,
     /// observation window (horizon, or completion for batch tiers)
     pub window_h: f64,
+    /// Instance revocations that hit this tier's replicas.
     pub revocations: u32,
+    /// Replica sessions launched over the window.
     pub sessions: u32,
     /// re-pack moves of this tier's replicas (survivor migrations)
     pub repacks: u32,
@@ -142,13 +145,18 @@ pub struct TierResult {
 /// Outcome of one service fleet run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServiceResult {
+    /// Service scenario name.
     pub service: String,
+    /// Provisioning policy that ran the fleet.
     pub policy: String,
+    /// Fault-tolerance mechanism label (`"none"` under P-SIWOFT).
     pub ft: String,
+    /// Per-tier outcomes, in spec order.
     pub tiers: Vec<TierResult>,
     /// wall-clock hours from start to fleet shutdown (the horizon, or
     /// earlier when every tier is batch and complete)
     pub makespan_h: f64,
+    /// Nominal horizon of the run (hours).
     pub horizon_h: f64,
     /// instance revocation events (each kills a whole bin)
     pub revocations: u32,
@@ -157,9 +165,11 @@ pub struct ServiceResult {
     /// fleet re-pack events (revocations / burst boundaries that
     /// triggered survivor consolidation)
     pub repacks: u32,
+    /// Every batch tier finished its work budget.
     pub completed: bool,
     /// diagnostics pinned by `tests/properties.rs`
     pub capacity_gb: f64,
+    /// Peak memory actually used in the fullest bin (GB).
     pub peak_bin_used_gb: f64,
     /// replicated copies that ended up co-packed (must stay 0 — the
     /// grouped packer forbids it)
@@ -181,6 +191,7 @@ impl ServiceResult {
         out
     }
 
+    /// The tier outcome named `name`, if present.
     pub fn tier(&self, name: &str) -> Option<&TierResult> {
         self.tiers.iter().find(|t| t.name == name)
     }
@@ -199,34 +210,53 @@ impl ServiceResult {
 /// Per-tier means over a set of service runs.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TierAgg {
+    /// Tier name (from the spec).
     pub name: String,
+    /// Mean per-category time breakdown (hours).
     pub time: Breakdown,
+    /// Mean per-category cost breakdown ($).
     pub cost: Breakdown,
+    /// Mean wall-clock under target replica count (hours).
     pub mean_slo_violation_h: f64,
+    /// Mean replica-hours of uptime.
     pub mean_up_h: f64,
+    /// Fraction of runs where this tier held its SLO.
     pub slo_met_rate: f64,
+    /// Mean revocations hitting this tier.
     pub mean_revocations: f64,
+    /// Mean replica sessions launched.
     pub mean_sessions: f64,
+    /// Mean survivor re-pack moves.
     pub mean_repacks: f64,
+    /// Fraction of runs where this tier completed its budget.
     pub completion_rate: f64,
 }
 
 /// Mean fleet outcome over seeds (one "bar" of a service sweep).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServiceAggregate {
+    /// Number of runs aggregated.
     pub n: usize,
+    /// Mean wall-clock from start to fleet shutdown (hours).
     pub mean_makespan_h: f64,
+    /// Mean total deployment cost ($).
     pub mean_cost_usd: f64,
+    /// Mean instance revocation events.
     pub mean_revocations: f64,
+    /// Mean instance sessions (packed bins) launched.
     pub mean_bins: f64,
+    /// Mean fleet re-pack events.
     pub mean_repacks: f64,
     /// fraction of runs where every tier held its SLO
     pub slo_met_rate: f64,
+    /// Fraction of runs where every batch tier completed.
     pub completion_rate: f64,
+    /// Per-tier means, in spec order.
     pub tiers: Vec<TierAgg>,
 }
 
 impl ServiceAggregate {
+    /// Aggregate a set of runs (empty input → all-zero default).
     pub fn from_runs(runs: &[ServiceResult]) -> ServiceAggregate {
         if runs.is_empty() {
             return ServiceAggregate::default();

@@ -95,6 +95,7 @@ impl<'w> ServiceScenario<'w> {
         ServiceScenario { scen, spec }
     }
 
+    /// The validated service spec this scenario runs.
     pub fn spec(&self) -> &ServiceSpec {
         &self.spec
     }
@@ -162,6 +163,7 @@ pub struct FleetRunner<'a> {
 }
 
 impl<'a> FleetRunner<'a> {
+    /// Build a runner with an explicit policy instance (the generic entry; [`FleetRunner::new`] wraps the standard kinds).
     pub fn with_policy(
         world: &'a World,
         spec: &'a ServiceSpec,

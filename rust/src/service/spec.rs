@@ -60,6 +60,7 @@ pub struct BurstSpec {
 /// One tier of a service fleet.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TierSpec {
+    /// Tier name (unique within the spec).
     pub name: String,
     /// target replica count outside burst windows
     pub replicas: u32,
@@ -104,6 +105,7 @@ impl TierSpec {
         self
     }
 
+    /// True when this tier has a finite work budget (batch semantics).
     pub fn is_batch(&self) -> bool {
         self.run_h.is_some()
     }
@@ -155,6 +157,7 @@ impl RepackMode {
 /// A validated-on-use service fleet of tiers.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServiceSpec {
+    /// Service name (used in sweep rows and artifacts).
     pub name: String,
     /// steady-state window simulated (hours past the scenario start)
     pub horizon_h: f64,
@@ -163,10 +166,12 @@ pub struct ServiceSpec {
     pub capacity_gb: Option<f64>,
     /// revocation response: see [`RepackMode`]
     pub repack: RepackMode,
+    /// The tiers making up the fleet.
     pub tiers: Vec<TierSpec>,
 }
 
 impl ServiceSpec {
+    /// Start a spec named `name` (builder style).
     pub fn new(name: impl Into<String>) -> ServiceSpec {
         ServiceSpec {
             name: name.into(),
@@ -208,14 +213,17 @@ impl ServiceSpec {
         self
     }
 
+    /// Number of tiers.
     pub fn len(&self) -> usize {
         self.tiers.len()
     }
 
+    /// True when the spec holds no tiers.
     pub fn is_empty(&self) -> bool {
         self.tiers.is_empty()
     }
 
+    /// Index of the tier named `name`, if present.
     pub fn tier_index(&self, name: &str) -> Option<usize> {
         self.tiers.iter().position(|t| t.name == name)
     }
@@ -225,6 +233,7 @@ impl ServiceSpec {
         self.tiers.iter().map(|t| t.replicas).sum()
     }
 
+    /// Largest per-replica memory footprint across tiers (GB).
     pub fn max_mem_gb(&self) -> f64 {
         self.tiers.iter().map(|t| t.mem_gb).fold(0.0, f64::max)
     }

@@ -23,19 +23,31 @@
 use std::fmt;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Where an hour (or a dollar) of a run went — the paper's time/cost decomposition plus this repo's extensions.
 pub enum Category {
+    /// Productive execution of the job's work budget.
     Useful,
+    /// Writing checkpoints (FT baselines only).
     Checkpoint,
+    /// Restoring state after a revocation (FT baselines only).
     Recovery,
+    /// Re-running work lost to a revocation.
     Reexec,
+    /// Instance/session startup overhead.
     Startup,
+    /// Live-migration transfer time (migration FT only).
     Migration,
+    /// Deadline buffer the policy reserved but did not use.
     Buffer,
+    /// Instance time idling while co-packed peers kept the bin alive.
     Idle,
+    /// Survivor re-packing transfers after a revocation.
     Repack,
+    /// SLO-violation integral (time-only; carries no cost).
     Slo,
 }
 
+/// Every [`Category`], in fixed presentation order (pinned by lint rule `e1` against the enum, the `Breakdown` array and the tables glyph list).
 pub const CATEGORIES: &[Category] = &[
     Category::Useful,
     Category::Checkpoint,
@@ -50,6 +62,7 @@ pub const CATEGORIES: &[Category] = &[
 ];
 
 impl Category {
+    /// Stable lowercase label used in JSON artifacts and tables.
     pub fn as_str(self) -> &'static str {
         match self {
             Category::Useful => "useful",
@@ -96,19 +109,23 @@ pub struct Breakdown {
 }
 
 impl Breakdown {
+    /// An all-zero breakdown.
     pub fn new() -> Self {
         Breakdown::default()
     }
 
+    /// Add `amount` to `cat`'s bucket.
     pub fn add(&mut self, cat: Category, amount: f64) {
         debug_assert!(amount >= -1e-9, "negative {cat} amount {amount}");
         self.vals[cat.index()] += amount.max(0.0);
     }
 
+    /// The amount accumulated in `cat`'s bucket.
     pub fn get(&self, cat: Category) -> f64 {
         self.vals[cat.index()]
     }
 
+    /// Sum over all categories.
     pub fn total(&self) -> f64 {
         self.vals.iter().sum()
     }
@@ -118,12 +135,14 @@ impl Breakdown {
         self.total() - self.get(Category::Useful)
     }
 
+    /// Add every bucket of `other` into `self`.
     pub fn merge(&mut self, other: &Breakdown) {
         for (a, b) in self.vals.iter_mut().zip(other.vals.iter()) {
             *a += b;
         }
     }
 
+    /// A copy with every bucket multiplied by `k`.
     pub fn scale(&self, k: f64) -> Breakdown {
         let mut out = self.clone();
         for v in out.vals.iter_mut() {
@@ -132,6 +151,7 @@ impl Breakdown {
         out
     }
 
+    /// Iterate `(category, amount)` pairs in presentation order.
     pub fn iter(&self) -> impl Iterator<Item = (Category, f64)> + '_ {
         CATEGORIES.iter().map(move |&c| (c, self.get(c)))
     }
@@ -141,11 +161,14 @@ impl Breakdown {
 /// both categorized.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Ledger {
+    /// Hours spent, by category.
     pub time: Breakdown,
+    /// Dollars spent, by category.
     pub cost: Breakdown,
 }
 
 impl Ledger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Ledger::default()
     }
@@ -163,6 +186,7 @@ impl Ledger {
         self.cost.add(Category::Buffer, amount);
     }
 
+    /// Add every bucket of `other` into `self`.
     pub fn merge(&mut self, other: &Ledger) {
         self.time.merge(&other.time);
         self.cost.merge(&other.cost);

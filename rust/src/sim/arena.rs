@@ -40,9 +40,13 @@ pub const FLAG_COMMITS: u8 = 2;
 /// itself never hands out references into its columns).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Seg {
+    /// Activity category of the span.
     pub cat: Category,
+    /// Span duration (hours).
     pub dur: f64,
+    /// The span advances the job's useful-work frontier.
     pub advances: bool,
+    /// The span ends with a durable commit (checkpoint semantics).
     pub commits: bool,
 }
 
@@ -50,15 +54,19 @@ pub struct Seg {
 /// Two `u32`s where a `Vec<Segment>` used to be.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SegRange {
+    /// First arena index of the range.
     pub lo: u32,
+    /// One past the last arena index.
     pub hi: u32,
 }
 
 impl SegRange {
+    /// Number of segments in the range.
     pub fn len(self) -> usize {
         (self.hi - self.lo) as usize
     }
 
+    /// True when the range holds no segments.
     pub fn is_empty(self) -> bool {
         self.hi == self.lo
     }
@@ -74,14 +82,17 @@ pub struct SegArena {
 }
 
 impl SegArena {
+    /// An empty arena.
     pub fn new() -> SegArena {
         SegArena::default()
     }
 
+    /// Total segments stored.
     pub fn len(&self) -> usize {
         self.durs.len()
     }
 
+    /// True when nothing has been pushed.
     pub fn is_empty(&self) -> bool {
         self.durs.is_empty()
     }
@@ -100,6 +111,7 @@ impl SegArena {
         self.durs.len() as u32
     }
 
+    /// Append one span; flags pack `advances`/`commits`.
     pub fn push(&mut self, cat: Category, dur: f64, advances: bool, commits: bool) {
         self.cats.push(cat.index() as u8);
         self.durs.push(dur);
@@ -112,6 +124,7 @@ impl SegArena {
         SegRange { lo, hi: self.start() }
     }
 
+    /// Decode the segment at arena index `i`.
     pub fn get(&self, i: u32) -> Seg {
         let i = i as usize;
         Seg {
@@ -122,6 +135,7 @@ impl SegArena {
         }
     }
 
+    /// Iterate the segments of `r` in timeline order.
     pub fn iter(&self, r: SegRange) -> impl Iterator<Item = Seg> + '_ {
         (r.lo..r.hi).map(move |i| self.get(i))
     }
@@ -289,6 +303,7 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Fresh scratch space (all buffers empty).
     pub fn new() -> Scratch {
         Scratch::default()
     }

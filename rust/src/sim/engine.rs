@@ -73,18 +73,22 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// A fresh engine at time zero with an empty queue.
     pub fn new() -> Self {
         Engine::default()
     }
 
+    /// Current simulation time.
     pub fn now(&self) -> SimTime {
         self.now
     }
 
+    /// Events processed so far.
     pub fn processed(&self) -> u64 {
         self.processed
     }
 
+    /// Events still queued.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

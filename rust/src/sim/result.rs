@@ -7,14 +7,20 @@ use super::run::JobResult;
 /// Mean breakdowns over a set of runs (one figure bar).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct AggregateResult {
+    /// Number of runs aggregated.
     pub n: usize,
+    /// Mean per-category time breakdown (hours).
     pub time: Breakdown,
+    /// Mean per-category cost breakdown ($).
     pub cost: Breakdown,
+    /// Mean spot revocations per run.
     pub mean_revocations: f64,
+    /// Fraction of runs that completed their budget.
     pub completion_rate: f64,
 }
 
 impl AggregateResult {
+    /// Aggregate a set of runs (empty input → all-zero default).
     pub fn from_runs(runs: &[JobResult]) -> AggregateResult {
         if runs.is_empty() {
             return AggregateResult::default();
@@ -39,9 +45,11 @@ impl AggregateResult {
         }
     }
 
+    /// Mean completion time (hours).
     pub fn completion_h(&self) -> f64 {
         self.time.total()
     }
+    /// Mean total cost ($).
     pub fn cost_usd(&self) -> f64 {
         self.cost.total()
     }
@@ -60,6 +68,7 @@ impl AggregateResult {
         out
     }
 
+    /// Column names for [`AggregateResult::csv_row`].
     pub fn csv_header() -> Vec<String> {
         let mut out = vec!["completion_h".to_string(), "cost_usd".to_string()];
         for &c in CATEGORIES {
@@ -71,9 +80,11 @@ impl AggregateResult {
         out
     }
 
+    /// Mean non-useful time per run (total minus useful hours).
     pub fn overhead_time(&self) -> f64 {
         self.time.overhead()
     }
+    /// Mean useful hours per run.
     pub fn useful_time(&self) -> f64 {
         self.time.get(Category::Useful)
     }

@@ -71,7 +71,9 @@ impl RevocationRule {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
+/// Knobs of one simulated execution (revocation rule, start, caps).
 pub struct RunConfig {
+    /// How revocation events are generated.
     pub rule: RevocationRule,
     /// simulation start hour within the trace window
     pub start_t: f64,
@@ -88,22 +90,32 @@ impl Default for RunConfig {
 /// Result of one simulated job execution.
 #[derive(Clone, Debug)]
 pub struct JobResult {
+    /// The job that ran.
     pub job: Job,
+    /// Provisioning policy name.
     pub policy: String,
+    /// Fault-tolerance mechanism label (`"none"` under P-SIWOFT).
     pub ft: String,
+    /// Per-category time/cost ledger of the run.
     pub ledger: Ledger,
+    /// Spot revocations suffered.
     pub revocations: u32,
+    /// Spot sessions launched.
     pub sessions: u32,
+    /// On-demand fallback sessions launched.
     pub ondemand_sessions: u32,
+    /// The job finished its work budget.
     pub completed: bool,
     /// wall-clock hours from submission to completion
     pub makespan_h: f64,
 }
 
 impl JobResult {
+    /// Wall-clock hours from submission to completion.
     pub fn completion_h(&self) -> f64 {
         self.ledger.completion_h()
     }
+    /// Total execution cost ($).
     pub fn cost_usd(&self) -> f64 {
         self.ledger.cost_usd()
     }
@@ -194,6 +206,7 @@ struct Carry {
     since = "0.2.0",
     note = "construct runs with `siwoft::scenario::Scenario` (or fan out with `scenario::Sweep`) instead"
 )]
+/// Simulate one job under `policy`/`ft` (legacy shim; see the deprecation note).
 pub fn simulate_job(
     world: &World,
     policy: &mut dyn Policy,
@@ -458,6 +471,7 @@ pub(crate) fn execute_in(
 mod replicated {
     use super::*;
 
+    /// Replicated-mode simulation loop (see the module docs above).
     pub fn simulate(
         world: &World,
         policy: &mut dyn Policy,

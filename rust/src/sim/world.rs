@@ -9,11 +9,17 @@ use crate::job::ContainerModel;
 use crate::market::{Catalog, MarketAnalytics, PriceTrace, SpotMarket, TraceGenConfig};
 
 #[derive(Clone, Debug)]
+/// Everything a run needs: markets, prices, analytics, container model.
 pub struct World {
+    /// The market catalog (instance types × regions × AZs).
     pub catalog: Catalog,
+    /// Hourly spot prices per market.
     pub trace: PriceTrace,
+    /// On-demand price per market ($/h).
     pub od: Vec<f32>,
+    /// Derived per-market statistics (MTTR, correlation, ...).
     pub analytics: MarketAnalytics,
+    /// Container startup/transfer cost model.
     pub container: ContainerModel,
 }
 
@@ -54,10 +60,12 @@ impl World {
         self
     }
 
+    /// A view of market `id` (catalog entry + its price rows).
     pub fn market(&self, id: usize) -> SpotMarket<'_> {
         SpotMarket::new(&self.trace, id, self.od[id])
     }
 
+    /// Number of markets in the world.
     pub fn n_markets(&self) -> usize {
         self.catalog.len()
     }

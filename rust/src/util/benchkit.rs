@@ -11,23 +11,32 @@ use std::time::{Duration, Instant};
 use super::stats::percentile;
 
 #[derive(Clone, Debug)]
+/// One benchmark's timing summary.
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Iterations measured.
     pub iters: u64,
+    /// Mean time per iteration (ns).
     pub mean_ns: f64,
+    /// Median time per iteration (ns).
     pub p50_ns: f64,
+    /// 99th-percentile time per iteration (ns).
     pub p99_ns: f64,
+    /// Standard deviation of per-iteration times (ns).
     pub std_ns: f64,
     /// optional throughput unit count per iteration (e.g. events)
     pub units_per_iter: Option<f64>,
 }
 
 impl BenchResult {
+    /// Units processed per second, when `units_per_iter` is set.
     pub fn throughput(&self) -> Option<f64> {
         self.units_per_iter.map(|u| u / (self.mean_ns * 1e-9))
     }
 }
 
+/// A warmup-then-measure micro-benchmark harness.
 pub struct Bench {
     warmup: Duration,
     measure: Duration,
@@ -45,6 +54,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A fast profile for smoke runs (50 ms warmup, 200 ms measure).
     pub fn quick() -> Self {
         Bench {
             warmup: Duration::from_millis(50),
@@ -53,6 +63,7 @@ impl Bench {
         }
     }
 
+    /// A profile with explicit warmup/measure durations (ms).
     pub fn with_times(warmup_ms: u64, measure_ms: u64) -> Self {
         Bench {
             warmup: Duration::from_millis(warmup_ms),
@@ -118,6 +129,7 @@ impl Bench {
     }
 }
 
+/// Format a duration in adaptive units (`ns`/`µs`/`ms`/`s`).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -130,6 +142,7 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Format a rate in adaptive units (`/s`, `k/s`, `M/s`).
 pub fn fmt_rate(per_sec: f64) -> String {
     if per_sec >= 1e9 {
         format!("{:.2} G/s", per_sec / 1e9)
@@ -145,15 +158,19 @@ pub fn fmt_rate(per_sec: f64) -> String {
 /// Collects results and prints an aligned report.
 #[derive(Default)]
 pub struct Suite {
+    /// Table title (printed as the header line).
     pub title: String,
+    /// The collected rows.
     pub results: Vec<BenchResult>,
 }
 
 impl Suite {
+    /// An empty table titled `title`.
     pub fn new(title: &str) -> Self {
         Suite { title: title.to_string(), results: Vec::new() }
     }
 
+    /// Append one result row (also prints it immediately).
     pub fn push(&mut self, r: BenchResult) {
         println!(
             "  {:<44} {:>12} {:>12} {:>12}{}",
@@ -166,6 +183,7 @@ impl Suite {
         self.results.push(r);
     }
 
+    /// Print the column header line.
     pub fn header(&self) {
         println!("\n== {} ==", self.title);
         println!(
@@ -174,6 +192,7 @@ impl Suite {
         );
     }
 
+    /// Render the table as CSV rows (header + one row per result).
     pub fn to_csv(&self) -> Vec<Vec<String>> {
         let mut rows = vec![crate::csv_row!["name", "mean_ns", "p50_ns", "p99_ns", "std_ns", "iters", "throughput_per_s"]];
         for r in &self.results {

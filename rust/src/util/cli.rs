@@ -9,35 +9,48 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 #[derive(Clone, Debug)]
+/// One option accepted by a subcommand.
 pub struct OptSpec {
+    /// Option name as written on the CLI (without `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value (`None` = the option is required).
     pub default: Option<&'static str>,
+    /// True for boolean flags that take no value.
     pub is_flag: bool,
 }
 
 #[derive(Clone, Debug, Default)]
+/// A subcommand's full CLI interface: options, defaults, usage text.
 pub struct CommandSpec {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line description shown in help.
     pub about: &'static str,
+    /// The options this subcommand accepts.
     pub opts: Vec<OptSpec>,
 }
 
 impl CommandSpec {
+    /// Start a spec for subcommand `name` (builder style).
     pub fn new(name: &'static str, about: &'static str) -> Self {
         CommandSpec { name, about, opts: Vec::new() }
     }
 
+    /// Add an option with a default value.
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
         self
     }
 
+    /// Add a required option.
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: None, is_flag: false });
         self
     }
 
+    /// Add a boolean flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: None, is_flag: true });
         self
@@ -56,6 +69,7 @@ impl CommandSpec {
         )
     }
 
+    /// Render the usage/help text for this subcommand.
     pub fn usage(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}\n\noptions:", self.name, self.about);
@@ -130,21 +144,26 @@ impl CommandSpec {
 }
 
 #[derive(Clone, Debug, Default)]
+/// Parsed arguments: every option resolved to its value.
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
 }
 
 impl Args {
+    /// The value of option `name` (defaults applied).
     pub fn str(&self, name: &str) -> &str {
         self.values.get(name).map(String::as_str).unwrap_or("")
     }
+    /// Whether flag `name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
+    /// Option `name` parsed as `u64`.
     pub fn u64(&self, name: &str) -> Result<u64, String> {
         self.str(name).parse().map_err(|_| format!("--{name} must be an integer"))
     }
+    /// Option `name` parsed as `usize`.
     pub fn usize(&self, name: &str) -> Result<usize, String> {
         self.str(name).parse().map_err(|_| format!("--{name} must be an integer"))
     }
@@ -156,6 +175,7 @@ impl Args {
     pub fn workers(&self) -> Result<usize, String> {
         self.usize("workers")
     }
+    /// Option `name` parsed as `f64`.
     pub fn f64(&self, name: &str) -> Result<f64, String> {
         self.str(name).parse().map_err(|_| format!("--{name} must be a number"))
     }

@@ -13,27 +13,36 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 #[derive(Clone, Debug, PartialEq)]
+/// A typed configuration value as parsed from one `key = value` line.
 pub enum Value {
+    /// A (possibly quoted) string.
     Str(String),
+    /// A decimal integer.
     Int(i64),
+    /// A floating-point number.
     Float(f64),
+    /// `true` or `false`.
     Bool(bool),
+    /// A `[v, v, ...]` array of values.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this value is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer payload, if this value is a [`Value::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// The numeric payload (ints widen), if this value is numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -41,12 +50,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean payload, if this value is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The array payload, if this value is a [`Value::Arr`].
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -56,10 +67,15 @@ impl Value {
 }
 
 #[derive(Debug)]
+/// Everything that can go wrong loading or reading a config.
 pub enum ConfigError {
+    /// A line that does not parse as `key = value`.
     Parse { line: usize, msg: String },
+    /// A required key that is absent.
     Missing(String),
+    /// A key present with the wrong type.
     Type { key: String, expected: &'static str },
+    /// The file could not be read.
     Io(std::io::Error),
 }
 
@@ -94,11 +110,13 @@ impl From<std::io::Error> for ConfigError {
 }
 
 #[derive(Clone, Debug, Default)]
+/// A parsed key/value configuration file (the `--config` format).
 pub struct Config {
     values: BTreeMap<String, Value>,
 }
 
 impl Config {
+    /// Parse config text; later duplicate keys override earlier ones.
     pub fn parse(text: &str) -> Result<Config, ConfigError> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
@@ -131,35 +149,45 @@ impl Config {
         Ok(Config { values })
     }
 
+    /// Read and parse a config file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Config, ConfigError> {
         Config::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// The raw value stored under `key`, if any.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
     }
+    /// Every key in the config, in insertion order.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.values.keys()
     }
+    /// Number of keys.
     pub fn len(&self) -> usize {
         self.values.len()
     }
+    /// True when the config holds no keys.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
 
+    /// Required string under `key`, or a [`ConfigError`].
     pub fn str(&self, key: &str) -> Result<&str, ConfigError> {
         self.req(key)?.as_str().ok_or(ConfigError::Type { key: key.into(), expected: "string" })
     }
+    /// Required integer under `key`, or a [`ConfigError`].
     pub fn i64(&self, key: &str) -> Result<i64, ConfigError> {
         self.req(key)?.as_i64().ok_or(ConfigError::Type { key: key.into(), expected: "integer" })
     }
+    /// Required float under `key` (ints widen), or a [`ConfigError`].
     pub fn f64(&self, key: &str) -> Result<f64, ConfigError> {
         self.req(key)?.as_f64().ok_or(ConfigError::Type { key: key.into(), expected: "float" })
     }
+    /// Required boolean under `key`, or a [`ConfigError`].
     pub fn bool(&self, key: &str) -> Result<bool, ConfigError> {
         self.req(key)?.as_bool().ok_or(ConfigError::Type { key: key.into(), expected: "bool" })
     }
+    /// Required array of floats under `key`, or a [`ConfigError`].
     pub fn f64_arr(&self, key: &str) -> Result<Vec<f64>, ConfigError> {
         let arr = self
             .req(key)?
@@ -171,15 +199,19 @@ impl Config {
     }
 
     // with-default variants
+    /// String under `key`, or `default` when absent.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).and_then(Value::as_str).unwrap_or(default)
     }
+    /// Integer under `key`, or `default` when absent.
     pub fn i64_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(Value::as_i64).unwrap_or(default)
     }
+    /// Float under `key`, or `default` when absent.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Value::as_f64).unwrap_or(default)
     }
+    /// Boolean under `key`, or `default` when absent.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Value::as_bool).unwrap_or(default)
     }

@@ -16,6 +16,7 @@ pub struct Error {
 }
 
 impl Error {
+    /// An error from a plain message.
     pub fn msg(msg: impl Into<String>) -> Error {
         Error { msg: msg.into() }
     }

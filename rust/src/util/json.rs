@@ -8,18 +8,28 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Clone, Debug, PartialEq)]
+/// A JSON value (objects keep keys sorted via `BTreeMap`, so rendering is deterministic).
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (all JSON numbers are `f64` here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; `BTreeMap` keeps key order stable.
     Obj(BTreeMap<String, Json>),
 }
 
 #[derive(Debug)]
+/// A parse error with its byte offset in the input.
 pub struct JsonError {
+    /// Byte offset where parsing failed.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -33,56 +43,68 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- constructors ------------------------------------------------
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Build an array.
     pub fn arr(items: Vec<Json>) -> Json {
         Json::Arr(items)
     }
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+    /// Build a number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
     // ---- accessors ---------------------------------------------------
+    /// Member `key` of an object, if present.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// Element `i` of an array, if present.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
             _ => None,
         }
     }
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
             _ => None,
         }
     }
+    /// The numeric payload truncated to `i64`, if integral.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
+    /// The numeric payload as `usize`, if integral and non-negative.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| if x >= 0.0 { Some(x as usize) } else { None })
     }
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The array payload, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -104,6 +126,7 @@ impl Json {
     }
 
     // ---- parsing -----------------------------------------------------
+    /// Parse JSON text (the full document; trailing garbage is an error).
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
         p.skip_ws();

@@ -9,15 +9,22 @@ use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
+/// Log verbosity levels, most to least severe.
 pub enum Level {
+    /// Unrecoverable or dropped-work conditions.
     Error = 0,
+    /// Degraded but continuing.
     Warn = 1,
+    /// Lifecycle and progress messages (the default).
     Info = 2,
+    /// Per-operation detail.
     Debug = 3,
+    /// Hot-path detail (disabled in normal runs).
     Trace = 4,
 }
 
 impl Level {
+    /// The lowercase name used in log lines and `SIWOFT_LOG`.
     pub fn as_str(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -28,6 +35,7 @@ impl Level {
         }
     }
 
+    /// Parse a level name (case-insensitive), e.g. from `SIWOFT_LOG`.
     pub fn from_str(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -47,15 +55,20 @@ fn init_from_env() -> u8 {
         .ok()
         .and_then(|s| Level::from_str(&s))
         .unwrap_or(Level::Info) as u8;
+    // ordering: LEVEL is a standalone config byte; racing initializers write the same value
     LEVEL.store(lvl, Ordering::Relaxed);
     lvl
 }
 
+/// Set the process-wide log level.
 pub fn set_level(level: Level) {
+    // ordering: LEVEL is a standalone config byte (see init_from_env)
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// The current process-wide log level (lazily read from `SIWOFT_LOG`).
 pub fn level() -> Level {
+    // ordering: LEVEL read — a stale level only mis-filters a log line
     let raw = LEVEL.load(Ordering::Relaxed);
     let raw = if raw == u8::MAX { init_from_env() } else { raw };
     match raw {
@@ -67,6 +80,7 @@ pub fn level() -> Level {
     }
 }
 
+/// True when messages at level `l` are currently emitted.
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }

@@ -86,10 +86,12 @@ where
 pub mod gens {
     use super::Rng;
 
+    /// Generator: a uniform `f64` in `[lo, hi)`.
     pub fn f64_in(lo: f64, hi: f64) -> impl FnMut(&mut Rng) -> f64 {
         move |r| r.range(lo, hi)
     }
 
+    /// Generator: a vector with length in `len` of uniform `f64`s.
     pub fn vec_f64(len: std::ops::Range<usize>, lo: f64, hi: f64) -> impl FnMut(&mut Rng) -> Vec<f64> {
         move |r| {
             let n = len.start + r.below((len.end - len.start).max(1));
@@ -97,6 +99,7 @@ pub mod gens {
         }
     }
 
+    /// Generator: a uniform `usize` in `[lo, hi)`.
     pub fn usize_in(lo: usize, hi: usize) -> impl FnMut(&mut Rng) -> usize {
         move |r| lo + r.below((hi - lo).max(1))
     }

@@ -56,6 +56,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 32 random bits.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -65,6 +66,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

@@ -12,10 +12,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// A fresh accumulator with no samples.
     pub fn new() -> Self {
         Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample into the running moments.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -25,6 +27,7 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Fold another accumulator's samples into this one.
     pub fn merge(&mut self, other: &Welford) {
         if other.n == 0 {
             return;
@@ -43,9 +46,11 @@ impl Welford {
         self.max = self.max.max(other.max);
     }
 
+    /// Number of samples seen.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Sample mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
@@ -53,12 +58,15 @@ impl Welford {
     pub fn var(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
+    /// Sample standard deviation (0 with fewer than two samples).
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -119,11 +127,13 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// A zeroed histogram over `[lo, hi)` with `nbins` equal bins.
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
         assert!(hi > lo && nbins > 0);
         Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0 }
     }
 
+    /// Count one sample (out-of-range goes to underflow/overflow).
     pub fn add(&mut self, x: f64) {
         if x < self.lo {
             self.underflow += 1;
@@ -136,15 +146,19 @@ impl Histogram {
         }
     }
 
+    /// The per-bin counts.
     pub fn bins(&self) -> &[u64] {
         &self.bins
     }
+    /// Total samples counted, including out-of-range ones.
     pub fn total(&self) -> u64 {
         self.bins.iter().sum::<u64>() + self.underflow + self.overflow
     }
+    /// Samples below `lo`.
     pub fn underflow(&self) -> u64 {
         self.underflow
     }
+    /// Samples at or above `hi`.
     pub fn overflow(&self) -> u64 {
         self.overflow
     }

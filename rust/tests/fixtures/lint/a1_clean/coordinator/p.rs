@@ -1,0 +1,24 @@
+// atomics-audit fixture: fully justified
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A counter cell.
+pub struct Cell {
+    counter: AtomicU64,
+}
+
+impl Cell {
+    fn bump(&self) -> u64 {
+        // ordering: counter is standalone; readers tolerate staleness
+        self.counter.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn read(&self) -> u64 {
+        // ordering: Acquire pairs with a Release publish elsewhere
+        self.counter.load(Ordering::Acquire)
+    }
+}
+
+// SAFETY: the pointer is valid for writes by contract.
+fn poke(cell: *mut u64) {
+    unsafe { *cell = 7 }
+}

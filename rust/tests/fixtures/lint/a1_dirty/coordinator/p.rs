@@ -1,0 +1,14 @@
+// atomics-audit fixture: three violation sites
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn bump(x: &AtomicU64) -> u64 {
+    x.fetch_add(1, Ordering::Relaxed)
+}
+
+fn read(x: &AtomicU64) -> u64 {
+    x.load(Ordering::Acquire)
+}
+
+fn poke(cell: *mut u64) {
+    unsafe { *cell = 7 }
+}

@@ -1,0 +1,16 @@
+// determinism-wall fixture: ordered maps only
+use std::collections::BTreeMap;
+
+fn lookup(m: &BTreeMap<u32, u32>) -> Option<u32> {
+    m.get(&1).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn test_gated_hashmap_is_exempt() {
+        let _ = HashMap::<u32, u32>::new();
+    }
+}

@@ -1,0 +1,6 @@
+// HashMap is allowed outside result-producing modules
+use std::collections::HashMap;
+
+fn count(m: &HashMap<u32, u32>) -> usize {
+    m.len()
+}

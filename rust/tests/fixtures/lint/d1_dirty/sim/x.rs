@@ -1,0 +1,6 @@
+// determinism-wall fixture: HashMap in a result module
+use std::collections::HashMap;
+
+fn lookup(m: &HashMap<u32, u32>) -> Option<u32> {
+    m.get(&1).copied()
+}

@@ -1,0 +1,5 @@
+// rng-discipline fixture: ambient randomness
+fn sample() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

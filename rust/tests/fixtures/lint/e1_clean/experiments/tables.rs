@@ -1,0 +1,9 @@
+//! Exhaustiveness fixture: the glyph table.
+
+/// Bar glyph for a category.
+fn glyph(c: Category) -> char {
+    match c {
+        Category::Useful => 'u',
+        Category::Startup => 's',
+    }
+}

@@ -1,0 +1,20 @@
+//! Exhaustiveness fixture: the Breakdown array drifted.
+
+/// Where time went.
+pub enum Category {
+    /// Productive work.
+    Useful,
+    /// Startup overhead.
+    Startup,
+}
+
+/// Presentation order.
+pub const CATEGORIES: &[Category] = &[
+    Category::Useful,
+    Category::Startup,
+];
+
+/// Per-category totals.
+pub struct Breakdown {
+    vals: [f64; 3],
+}

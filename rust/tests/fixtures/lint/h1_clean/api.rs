@@ -1,0 +1,10 @@
+//! Doc-hygiene fixture: fully documented (cites DESIGN.md §1).
+
+/// Documented.
+pub fn clothed() {}
+
+/// A container.
+pub struct S {
+    /// Documented field.
+    pub field: u32,
+}

@@ -1,0 +1,13 @@
+//! Doc-hygiene fixture: gaps planted.
+
+use std::fmt as _;
+
+pub fn naked() {}
+
+/// Documented, but cites a ghost section (DESIGN.md §9).
+pub fn cited() {}
+
+/// A container.
+pub struct S {
+    pub undocumented_field: u32,
+}

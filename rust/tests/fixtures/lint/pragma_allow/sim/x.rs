@@ -1,0 +1,3 @@
+// determinism fixture: the pragma waives the line below
+// siwoft-lint: allow(d1, fixture demonstrates the waiver)
+use std::collections::HashMap as _;

@@ -1,0 +1,4 @@
+// malformed pragmas: each is a p1 finding
+// siwoft-lint: allow(d1)
+// siwoft-lint: allow(zz, unknown rule)
+// siwoft-lint: deny(d1, wrong verb)

@@ -1,0 +1,139 @@
+//! Pins the lint pass to the planted-violation fixture corpus, and the
+//! shipped tree to "clean".
+//!
+//! The corpus under `tests/fixtures/lint/` is shared with the
+//! dependency-free Python mirror (`tools/lint_src.py --selfcheck`):
+//! `expected.json` lists, per case directory, the exact
+//! `[rule, file, line]` triples both implementations must report.
+//! Editing a rule means updating the corpus, which forces both scanners
+//! to move together (DESIGN.md §12).
+
+use siwoft::lint::{self, Options, Rule, SCHEMA_VERSION};
+use siwoft::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn fixtures_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint")
+}
+
+fn expected_cases() -> Vec<(String, Vec<(String, String, u32)>)> {
+    let text = std::fs::read_to_string(fixtures_root().join("expected.json"))
+        .expect("reading expected.json");
+    let doc = Json::parse(&text).expect("parsing expected.json");
+    let Json::Obj(map) = doc else { panic!("expected.json must be an object") };
+    map.into_iter()
+        .map(|(case, triples)| {
+            let triples = triples
+                .as_arr()
+                .expect("case value must be an array")
+                .iter()
+                .map(|t| {
+                    let rule = t.idx(0).and_then(Json::as_str).expect("rule").to_string();
+                    let file = t.idx(1).and_then(Json::as_str).expect("file").to_string();
+                    let line = t.idx(2).and_then(Json::as_i64).expect("line") as u32;
+                    (rule, file, line)
+                })
+                .collect();
+            (case, triples)
+        })
+        .collect()
+}
+
+/// Every fixture case yields exactly the findings `expected.json` pins,
+/// as `(rule, file, line)` triples in report order.
+#[test]
+fn fixture_corpus_matches_expected() {
+    let cases = expected_cases();
+    assert!(cases.len() >= 12, "corpus shrank: {} cases", cases.len());
+    for (case, want) in cases {
+        let dir = fixtures_root().join(&case);
+        assert!(dir.is_dir(), "fixture dir missing for case `{case}`");
+        let report = lint::run(&Options::new(&dir)).expect("lint run");
+        let got: Vec<(String, String, u32)> = report
+            .findings
+            .iter()
+            .map(|f| (f.rule.to_string(), f.file.clone(), f.line))
+            .collect();
+        assert_eq!(got, want, "case `{case}` diverged from expected.json");
+    }
+}
+
+/// The shipped source tree passes its own lint pass under every rule.
+#[test]
+fn shipped_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint::run(&Options::new(&src)).expect("lint run");
+    let rendered = report.to_text();
+    assert!(report.is_clean(), "shipped tree has lint findings:\n{rendered}");
+    assert!(report.files_scanned > 50, "scan missed most of the tree");
+}
+
+/// Acceptance criterion from the issue: stripping any single
+/// `// ordering:` justification from the work-stealing pool makes the
+/// atomics audit fail.
+#[test]
+fn removing_any_ordering_justification_fails_a1() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/coordinator/pool.rs");
+    let text = std::fs::read_to_string(&path).expect("reading pool.rs");
+    let sites: Vec<usize> = text
+        .match_indices("// ordering:")
+        .map(|(pos, _)| pos)
+        .collect();
+    assert!(sites.len() >= 8, "pool.rs lost its ordering audit trail");
+
+    let baseline = lint::rules::apply(
+        &[lint::scan::scan_source("coordinator/pool.rs", &text)],
+        &[Rule::A1],
+        None,
+    );
+    assert!(baseline.is_empty(), "pool.rs should be a1-clean as shipped");
+
+    for &pos in &sites {
+        let mut mutated = text.clone();
+        mutated.replace_range(pos..pos + "// ordering:".len(), "// reworded: ");
+        let findings = lint::rules::apply(
+            &[lint::scan::scan_source("coordinator/pool.rs", &mutated)],
+            &[Rule::A1],
+            None,
+        );
+        assert!(
+            findings.iter().any(|f| f.rule == "a1"),
+            "dropping the ordering justification at byte {pos} went undetected"
+        );
+    }
+}
+
+/// The JSON report keeps its pinned schema: top-level keys, tool name,
+/// schema version, and per-finding keys.
+#[test]
+fn json_schema_is_pinned() {
+    let dir = fixtures_root().join("d1_dirty");
+    let report = lint::run(&Options::new(&dir)).expect("lint run");
+    let doc = report.to_json();
+    for key in ["tool", "schema_version", "rules", "files_scanned", "findings"] {
+        assert!(doc.get(key).is_some(), "missing top-level key `{key}`");
+    }
+    assert_eq!(doc.get("tool").and_then(Json::as_str), Some("siwoft-lint"));
+    assert_eq!(
+        doc.get("schema_version").and_then(Json::as_i64),
+        Some(SCHEMA_VERSION as i64)
+    );
+    let findings = doc.get("findings").and_then(Json::as_arr).expect("findings array");
+    assert!(!findings.is_empty());
+    for f in findings {
+        for key in ["rule", "file", "line", "msg"] {
+            assert!(f.get(key).is_some(), "missing finding key `{key}`");
+        }
+    }
+}
+
+/// The text report carries `file:line: [rule] msg` lines and the
+/// summary tail the Makefile / CI logs grep for.
+#[test]
+fn text_report_format() {
+    let dir = fixtures_root().join("d2_dirty");
+    let report = lint::run(&Options::new(&dir)).expect("lint run");
+    let text = report.to_text();
+    assert!(text.contains("policy/r.rs:3: [d2]"), "unexpected text format:\n{text}");
+    assert!(text.contains("siwoft lint: 2 findings in 1 file"), "summary drifted:\n{text}");
+}

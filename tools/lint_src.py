@@ -1,0 +1,601 @@
+#!/usr/bin/env python3
+"""Dependency-free mirror of `siwoft lint` for toolchain-less hosts.
+
+The canonical linter is `rust/src/lint/` (run as `siwoft lint`); this
+script re-implements the same scanner and rule catalog (DESIGN.md §12)
+in ~stdlib Python so `make lint-src` works in containers that have no
+cargo at all — including the container this repo is grown in.  Both
+implementations are pinned to the fixture corpus under
+`rust/tests/fixtures/lint/`: the Rust side by `tests/lint_selfcheck.rs`,
+this side by `--selfcheck` (run in CI ahead of the toolchain jobs).
+
+Findings are reported as (rule, file, line, msg) and the JSON document
+uses the same schema_version=1 shape as the Rust reporter.  Exit status:
+0 clean, 1 findings, 2 usage/IO error.
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+
+SCHEMA_VERSION = 1
+ALL_RULES = ["a1", "d1", "d2", "e1", "h1"]
+
+RESULT_MODULES = [
+    "sim", "dag", "service", "scenario", "policy", "ft", "job", "market", "pack",
+]
+D1_TOKENS = [
+    "SystemTime", "Instant::now", "std::time::Instant", "std::env", "HashMap", "HashSet",
+]
+D2_TOKENS = [
+    "rand::", "thread_rng", "from_entropy", "getrandom", "RandomState", "DefaultHasher",
+]
+RELAXED_ALLOWLIST = ["counter", "reaped", "rejected", "peak_live", "self.next", "LEVEL"]
+SAFETY_LOOKBACK = 8
+
+H1_ITEM_PREFIXES = [
+    "pub fn ", "pub unsafe fn ", "pub struct ", "pub enum ", "pub trait ",
+    "pub unsafe trait ", "pub const ", "pub static ", "pub type ",
+]
+
+
+class Line:
+    __slots__ = ("number", "code", "comment", "in_test", "is_doc", "depth")
+
+    def __init__(self, number, code, comment, in_test, is_doc, depth):
+        self.number = number
+        self.code = code
+        self.comment = comment
+        self.in_test = in_test
+        self.is_doc = is_doc
+        self.depth = depth
+
+
+def _char_literal_end(s, i):
+    """Index of the closing quote of a char literal at s[i]=="'", else None."""
+    if i + 1 >= len(s):
+        return None
+    c = s[i + 1]
+    if c == "\\":
+        j = i + 2
+        while j < len(s) and j < i + 12:
+            if s[j] == "'":
+                return j
+            j += 1
+        return None
+    if c == "'":
+        return None
+    if i + 2 < len(s) and s[i + 2] == "'":
+        return i + 2
+    return None
+
+
+def scan_source(rel_path, text):
+    """Mirror of lint/scan.rs scan_source: per-line (code, comment) split."""
+    lines = []
+    mode = "code"          # code | str | block | rawstr
+    block_depth = 0
+    block_doc = False
+    raw_hashes = 0
+    depth = 0
+    test_pending = False
+    test_until = None
+
+    for idx, raw in enumerate(text.split("\n")):
+        start_depth = depth
+        in_test_at_start = test_until is not None or test_pending
+        code = []
+        comment = []
+        is_doc = mode == "block" and block_doc
+
+        i, n = 0, len(raw)
+        while i < n:
+            c = raw[i]
+            nxt = raw[i + 1] if i + 1 < n else ""
+            if mode == "block":
+                if c == "/" and nxt == "*":
+                    block_depth += 1
+                    i += 2
+                elif c == "*" and nxt == "/":
+                    block_depth -= 1
+                    if block_depth == 0:
+                        mode = "code"
+                    i += 2
+                else:
+                    comment.append(c)
+                    i += 1
+            elif mode == "rawstr":
+                if c == '"' and raw[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
+                    code.append('"')
+                    i += 1 + raw_hashes
+                    mode = "code"
+                else:
+                    code.append(" ")
+                    i += 1
+            elif mode == "str":
+                if c == "\\":
+                    code.append("  " if nxt else " ")
+                    i += 2 if nxt else 1
+                elif c == '"':
+                    code.append('"')
+                    mode = "code"
+                    i += 1
+                else:
+                    code.append(" ")
+                    i += 1
+            else:  # code
+                if c == "/" and nxt == "/":
+                    third = raw[i + 2] if i + 2 < n else ""
+                    is_doc = third in ("/", "!")
+                    skip = 3 if is_doc else 2
+                    comment.append(raw[i + skip :])
+                    i = n
+                elif c == "/" and nxt == "*":
+                    third = raw[i + 2] if i + 2 < n else ""
+                    doc = third in ("*", "!")
+                    is_doc = is_doc or doc
+                    mode, block_depth, block_doc = "block", 1, doc
+                    i += 2
+                elif (
+                    c == "r"
+                    and nxt in ('"', "#")
+                    and not (i > 0 and (raw[i - 1].isalnum() or raw[i - 1] == "_"))
+                ):
+                    j = i + 1
+                    hashes = 0
+                    while j < n and raw[j] == "#":
+                        hashes += 1
+                        j += 1
+                    if j < n and raw[j] == '"':
+                        code.append('"')
+                        mode, raw_hashes = "rawstr", hashes
+                        i = j + 1
+                    else:
+                        code.append(c)
+                        i += 1
+                elif c == '"':
+                    code.append('"')
+                    mode = "str"
+                    i += 1
+                elif c == "'":
+                    end = _char_literal_end(raw, i)
+                    if end is not None:
+                        code.append("'")
+                        code.append(" " * (end - i - 1))
+                        code.append("'")
+                        i = end + 1
+                    else:
+                        code.append("'")
+                        i += 1
+                else:
+                    if c == "{":
+                        depth += 1
+                        if test_pending:
+                            test_pending = False
+                            if test_until is None:
+                                test_until = depth - 1
+                    elif c == "}":
+                        depth = max(0, depth - 1)
+                        if test_until == depth:
+                            test_until = None
+                    code.append(c)
+                    i += 1
+
+        code = "".join(code)
+        comment = "".join(comment)
+
+        p = code.find("#[cfg(test)]")
+        if p < 0:
+            p = code.find("#[cfg(all(test")
+        if p >= 0:
+            if "{" in code[p:]:
+                if test_until is None:
+                    test_until = start_depth
+            else:
+                test_pending = True
+        elif test_pending and test_until is None and code.strip().endswith(";"):
+            test_pending = False
+
+        lines.append(
+            Line(
+                idx + 1,
+                code,
+                comment,
+                in_test_at_start or test_until is not None or test_pending,
+                is_doc,
+                start_depth,
+            )
+        )
+    return rel_path, lines
+
+
+# ---------------------------------------------------------------- rules
+
+def is_result_module(rel):
+    return any(rel.startswith(m + "/") or rel == m + ".rs" for m in RESULT_MODULES)
+
+
+def a1_ordering_scope(rel):
+    return rel.startswith("coordinator/") or rel == "util/logger.rs"
+
+
+def has_comment_tag(lines, i, tag, lookback):
+    lo = max(0, i - lookback)
+    return any(tag in l.comment for l in lines[lo : i + 1])
+
+
+def d1_rule(rel, lines, out):
+    if not is_result_module(rel):
+        return
+    for l in lines:
+        if l.in_test:
+            continue
+        for tok in D1_TOKENS:
+            if tok in l.code:
+                out.append(("d1", rel, l.number, f"determinism wall: `{tok}`"))
+
+
+def d2_rule(rel, lines, out):
+    if rel == "util/rng.rs":
+        return
+    for l in lines:
+        if l.in_test:
+            continue
+        for tok in D2_TOKENS:
+            if tok in l.code:
+                out.append(("d2", rel, l.number, f"rng discipline: `{tok}`"))
+
+
+def a1_rule(rel, lines, out):
+    scope = a1_ordering_scope(rel)
+    for i, l in enumerate(lines):
+        if l.in_test:
+            continue
+        code = l.code.replace("cmp::Ordering", "")
+        if scope and "Ordering::" in code:
+            if not has_comment_tag(lines, i, "ordering:", 1):
+                out.append(
+                    ("a1", rel, l.number, "atomics audit: `Ordering::*` needs `// ordering:`")
+                )
+            if "Ordering::Relaxed" in code and not any(a in code for a in RELAXED_ALLOWLIST):
+                out.append(
+                    ("a1", rel, l.number, "atomics audit: Relaxed outside the counter allowlist")
+                )
+        if ("unsafe fn" in code or "unsafe impl" in code or "unsafe {" in code) and not (
+            has_comment_tag(lines, i, "SAFETY", SAFETY_LOOKBACK)
+        ):
+            out.append(("a1", rel, l.number, "atomics audit: `unsafe` without `SAFETY:`"))
+
+
+def _variant_count(lines, marker):
+    for i, l in enumerate(lines):
+        if not l.in_test and marker in l.code:
+            n = 0
+            for m in lines[i + 1 :]:
+                if m.depth <= l.depth and m.code.strip():
+                    break
+                t = m.code.strip()
+                if m.depth == l.depth + 1 and t and not t.startswith("#[") and t[0].isupper():
+                    n += 1
+            return l.number, n
+    return 0, None
+
+
+def _span_token_count(lines, start, end, token):
+    for i, l in enumerate(lines):
+        if not l.in_test and start in l.code:
+            n = 0
+            for m in lines[i:]:
+                n += m.code.count(token)
+                if end == "\n}":
+                    closes = (
+                        m.number > l.number
+                        and m.depth == l.depth + 1
+                        and m.code.strip() == "}"
+                    )
+                else:
+                    closes = end in m.code
+                if closes:
+                    return l.number, n
+            return l.number, n
+    return 0, None
+
+
+def _breakdown_len(lines):
+    for l in lines:
+        if l.in_test:
+            continue
+        p = l.code.find("vals: [f64;")
+        if p >= 0:
+            mt = re.match(r"\s*(\d+)", l.code[p + len("vals: [f64;") :])
+            return l.number, int(mt.group(1)) if mt else None
+    return 0, None
+
+
+def e1_rule(files, out):
+    acc = files.get("sim/accounting.rs")
+    if acc is None:
+        return
+    counts = []
+    ln, n = _variant_count(acc, "pub enum Category")
+    counts.append(("Category variants", "sim/accounting.rs", ln, n))
+    ln, n = _span_token_count(acc, "const CATEGORIES", "];", "Category::")
+    counts.append(("CATEGORIES entries", "sim/accounting.rs", ln, n))
+    ln, n = _breakdown_len(acc)
+    counts.append(("Breakdown array length", "sim/accounting.rs", ln, n))
+    tab = files.get("experiments/tables.rs")
+    if tab is not None:
+        ln, n = _span_token_count(tab, "fn glyph", "\n}", "Category::")
+        counts.append(("tables glyph arms", "experiments/tables.rs", ln, n))
+    for what, rel, ln, n in counts:
+        if n is None:
+            out.append(("e1", rel, ln, f"exhaustiveness: could not locate {what}"))
+    known = [(w, rel, ln, n) for w, rel, ln, n in counts if n is not None]
+    if known:
+        first = known[0][3]
+        for what, rel, ln, n in known:
+            if n != first:
+                out.append(
+                    (
+                        "e1",
+                        rel,
+                        ln,
+                        f"exhaustiveness: {what} = {n} but {known[0][0]} = {first}",
+                    )
+                )
+
+
+def _has_doc_above(lines, i):
+    j = i - 1
+    while j >= 0:
+        l = lines[j]
+        t = l.code.strip()
+        if l.is_doc:
+            return True
+        if t.startswith("#[") or not t:
+            j -= 1
+            continue
+        return False
+    return False
+
+
+def _module_doc(lines):
+    for l in lines:
+        if l.code.strip() or l.comment:
+            return l.is_doc
+    return False
+
+
+def h1_rule(rel, lines, files, module_docs, sections, out):
+    if rel == "main.rs":
+        return
+    for i, l in enumerate(lines):
+        if l.in_test:
+            continue
+        t = l.code.strip()
+        if t.startswith("pub mod ") and t.endswith(";"):
+            name = t[len("pub mod ") : -1].strip()
+            d = rel.rfind("/")
+            prefix = rel[: d + 1] if d >= 0 else ""
+            cands = [f"{prefix}{name}.rs", f"{prefix}{name}/mod.rs"]
+            if not _has_doc_above(lines, i) and not any(
+                module_docs.get(c, False) for c in cands
+            ):
+                out.append(("h1", rel, l.number, f"doc hygiene: missing rustdoc on public module `{name}`"))
+            continue
+        for prefix in H1_ITEM_PREFIXES:
+            if t.startswith(prefix):
+                if not _has_doc_above(lines, i):
+                    name = re.match(r"[A-Za-z0-9_]*", t[len(prefix) :]).group(0)
+                    out.append(("h1", rel, l.number, f"doc hygiene: missing rustdoc on public item `{name}`"))
+                break
+        is_struct = t.startswith("pub struct ")
+        is_enum = t.startswith("pub enum ")
+        if (is_struct or is_enum) and i + 1 < len(lines) and lines[i + 1].depth > l.depth:
+            for m in lines[i + 1 :]:
+                if m.depth <= l.depth and m.code.strip():
+                    break
+                if m.depth != l.depth + 1 or m.in_test:
+                    continue
+                mt = m.code.strip()
+                midx = m.number - 1
+                if is_struct and mt.startswith("pub "):
+                    rest = mt[4:]
+                    name = re.match(r"[A-Za-z0-9_]*", rest).group(0)
+                    if rest[len(name) :].lstrip().startswith(":") and not _has_doc_above(lines, midx):
+                        out.append(("h1", rel, m.number, f"doc hygiene: missing rustdoc on public field `{name}`"))
+                elif is_enum and mt and not mt.startswith("#[") and mt[0].isupper():
+                    if not _has_doc_above(lines, midx):
+                        name = re.match(r"[A-Za-z0-9_]*", mt).group(0)
+                        out.append(("h1", rel, m.number, f"doc hygiene: missing rustdoc on enum variant `{name}`"))
+    if sections is not None:
+        for l in lines:
+            for mt in re.finditer(r"DESIGN\.md §([A-Za-z0-9_-]+)", l.comment):
+                if mt.group(1) not in sections:
+                    out.append(
+                        ("h1", rel, l.number, f"doc hygiene: reference to DESIGN.md §{mt.group(1)} does not resolve")
+                    )
+
+
+# --------------------------------------------------------------- driver
+
+def collect_pragmas(files, findings):
+    allows = []
+    for rel, lines in files.items():
+        for l in lines:
+            if l.is_doc:  # pragmas live in plain `//` comments only
+                continue
+            p = l.comment.find("siwoft-lint:")
+            if p < 0:
+                continue
+            rest = l.comment[p + len("siwoft-lint:") :].lstrip()
+            mt = re.match(r"allow\(([^)]*)\)", rest)
+            if not mt:
+                findings.append(("p1", rel, l.number, "malformed lint pragma: expected `allow(<rule>, <reason>)`"))
+                continue
+            args = mt.group(1)
+            if "," not in args:
+                findings.append(("p1", rel, l.number, "malformed lint pragma: missing `, <reason>`"))
+                continue
+            rule, reason = args.split(",", 1)
+            rule = rule.strip().lower()
+            if rule not in ALL_RULES:
+                findings.append(("p1", rel, l.number, f"malformed lint pragma: unknown rule id `{rule}`"))
+                continue
+            if not reason.strip():
+                findings.append(("p1", rel, l.number, "malformed lint pragma: empty reason"))
+                continue
+            allows.append((rel, l.number, rule))
+    return allows
+
+
+def design_sections(src):
+    d = os.path.abspath(src)
+    for _ in range(3):
+        cand = os.path.join(d, "DESIGN.md")
+        if os.path.isfile(cand):
+            ids = []
+            with open(cand, encoding="utf-8") as fh:
+                for line in fh:
+                    if not line.startswith("#"):
+                        continue
+                    t = line.lstrip("#").lstrip()
+                    if t.startswith("§"):
+                        mt = re.match(r"§([A-Za-z0-9_-]+)", t)
+                        if mt:
+                            ids.append(mt.group(1))
+            return ids
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+    return None
+
+
+def run_lint(src, rules):
+    files = {}
+    for root, dirs, names in os.walk(src):
+        dirs.sort()
+        for name in sorted(names):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(root, name)
+            rel = os.path.relpath(path, src).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                _, lines = scan_source(rel, fh.read())
+            files[rel] = lines
+
+    sections = design_sections(src)
+    module_docs = {rel: _module_doc(lines) for rel, lines in files.items()}
+
+    findings = []
+    for rel in sorted(files):
+        lines = files[rel]
+        if "d1" in rules:
+            d1_rule(rel, lines, findings)
+        if "d2" in rules:
+            d2_rule(rel, lines, findings)
+        if "a1" in rules:
+            a1_rule(rel, lines, findings)
+        if "h1" in rules:
+            h1_rule(rel, lines, files, module_docs, sections, findings)
+    if "e1" in rules:
+        e1_rule(files, findings)
+
+    pragma_findings = []
+    allows = collect_pragmas(files, pragma_findings)
+    kept = [
+        f
+        for f in findings
+        if not any(
+            a[0] == f[1] and a[2] == f[0] and a[1] in (f[2], f[2] - 1) for a in allows
+        )
+    ]
+    kept.extend(pragma_findings)
+    kept.sort(key=lambda f: (f[1], f[2], f[0]))
+    return kept, len(files)
+
+
+def selfcheck(fixtures_root):
+    """Run each rule against the planted fixture corpus; return failures."""
+    expect_path = os.path.join(fixtures_root, "expected.json")
+    with open(expect_path, encoding="utf-8") as fh:
+        expected = json.load(fh)
+    failures = []
+    for case, want in sorted(expected.items()):
+        case_dir = os.path.join(fixtures_root, case)
+        got, _ = run_lint(case_dir, ALL_RULES)
+        got_keys = [[f[0], f[1], f[2]] for f in got]
+        if got_keys != want:
+            failures.append(f"{case}: expected {want}, got {got_keys}")
+    return failures
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--src", default="", help="source root (default: rust/src, else src)")
+    ap.add_argument("--format", default="text", choices=["text", "json"])
+    ap.add_argument("--rules", default="", help="comma-separated subset of d1,d2,a1,e1,h1")
+    ap.add_argument(
+        "--selfcheck",
+        action="store_true",
+        help="run the fixture corpus under rust/tests/fixtures/lint instead of --src",
+    )
+    args = ap.parse_args(argv)
+
+    if args.selfcheck:
+        root = args.src or "rust/tests/fixtures/lint"
+        failures = selfcheck(root)
+        if failures:
+            for f in failures:
+                print(f"selfcheck FAIL: {f}")
+            return 1
+        print("lint_src selfcheck: fixture corpus OK")
+        return 0
+
+    src = args.src
+    if not src:
+        src = "rust/src" if os.path.isdir("rust/src") else "src"
+    if not os.path.isdir(src):
+        print(f"lint_src: source root {src!r} not found", file=sys.stderr)
+        return 2
+
+    rules = ALL_RULES if not args.rules else []
+    if args.rules:
+        for rid in args.rules.split(","):
+            rid = rid.strip().lower()
+            if not rid:
+                continue
+            if rid not in ALL_RULES:
+                print(f"lint_src: unknown rule {rid!r}", file=sys.stderr)
+                return 2
+            rules.append(rid)
+
+    findings, files_scanned = run_lint(src, rules)
+    if args.format == "json":
+        doc = {
+            "tool": "siwoft-lint",
+            "schema_version": SCHEMA_VERSION,
+            "rules": sorted(set(rules)),
+            "files_scanned": files_scanned,
+            "findings": [
+                {"rule": r, "file": f, "line": ln, "msg": m} for r, f, ln, m in findings
+            ],
+        }
+        print(json.dumps(doc, indent=2))
+    else:
+        for r, f, ln, m in findings:
+            print(f"{f}:{ln}: [{r}] {m}")
+        n = len(findings)
+        print(
+            f"siwoft lint: {n} finding{'s' if n != 1 else ''} in "
+            f"{files_scanned} file{'s' if files_scanned != 1 else ''} "
+            f"(rules: {','.join(sorted(set(rules)))})"
+        )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

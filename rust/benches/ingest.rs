@@ -1,0 +1,58 @@
+//! Bench: the streaming ingest path (DESIGN.md §13) — chunked JSON
+//! parse throughput, snapshot save/load, and point lookups against the
+//! columnar store.  These are the §Perf ingest numbers; `siwoft bench
+//! --area ingest` emits the same cases in the BENCH_ingest.json schema.
+//!
+//!     cargo bench --bench ingest
+
+use siwoft::market::importer::parse_timestamp_hours;
+use siwoft::market::store::{render_history_json, Ingest, PriceStore};
+use siwoft::market::{Catalog, TraceGenConfig};
+use siwoft::util::benchkit::{Bench, Suite};
+
+fn main() {
+    let bench = Bench::with_times(300, 1500);
+    let mut suite = Suite::new("streaming ingest + columnar store");
+    suite.header();
+
+    for &(m, months) in &[(48usize, 0.5f64), (96, 1.0)] {
+        let catalog = Catalog::with_limit(m);
+        let cfg = TraceGenConfig { months, seed: 42, ..Default::default() };
+        let trace = siwoft::market::generate_traces(&catalog, &cfg);
+        let base = parse_timestamp_hours("2020-03-01T00:00Z").unwrap();
+        let text = render_history_json(&catalog, &trace, base);
+        let mb = text.len() as f64 / (1024.0 * 1024.0);
+
+        suite.push(bench.run_with_units(&format!("stream_parse {m}x{}h ({mb:.1} MB)", trace.hours), mb, || {
+            let mut ing = Ingest::new();
+            ing.page_str(&text).unwrap();
+            ing.finish().unwrap().n_samples()
+        }));
+
+        let mut ing = Ingest::new();
+        ing.page_str(&text).unwrap();
+        let store = ing.finish().unwrap();
+        let bytes = store.to_bytes();
+        suite.push(bench.run_with_units(
+            &format!("snapshot_load {m} markets ({} KB)", bytes.len() / 1024),
+            1.0,
+            || PriceStore::from_bytes(&bytes).unwrap().n_samples(),
+        ));
+
+        let keys: Vec<String> = catalog.markets.iter().map(|spec| spec.key()).collect();
+        let (lo, hi) = store.span().unwrap();
+        let span = hi - lo + 1;
+        let lookups = 4096u64;
+        suite.push(bench.run_with_units(&format!("price_at {m} markets"), lookups as f64, || {
+            let mut acc = 0.0f64;
+            for i in 0..lookups {
+                let key = &keys[(i as usize * 31) % keys.len()];
+                let h = lo + i.wrapping_mul(2654435761) % span;
+                acc += store.price_at(key, h).unwrap_or(0.0);
+            }
+            acc
+        }));
+    }
+
+    siwoft::util::csvio::write_file("results/bench_ingest.csv", &suite.to_csv()).ok();
+}

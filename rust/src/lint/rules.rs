@@ -579,6 +579,17 @@ mod tests {
     }
 
     #[test]
+    fn d1_walls_the_market_store_module() {
+        // the streaming ingest + columnar store (DESIGN.md §13) produces
+        // grids and snapshots that must be reproducible byte-for-byte,
+        // so it sits inside the determinism wall with the rest of market
+        assert!(is_result_module("market/store.rs"));
+        assert!(is_result_module("market/importer.rs"));
+        let src = "use std::collections::HashMap;\nlet v = std::env::var(\"SNAPSHOT\");\n";
+        assert_eq!(run("market/store.rs", src, &[Rule::D1]).len(), 2);
+    }
+
+    #[test]
     fn d1_skips_tests_and_strings() {
         let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
         assert!(run("sim/x.rs", src, &[Rule::D1]).is_empty());

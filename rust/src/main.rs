@@ -83,7 +83,7 @@ fn help_text() -> String {
      sensitivity  spot/on-demand price-ratio sweep (F/O crossover)\n  \
      tables       P/F/O summary table at the paper's fixed job point\n  \
      cluster      rolling-epoch cluster simulation (Poisson arrivals)\n  \
-     bench        quick micro-benchmarks; --area {engine,service} emits BENCH_<area>.json\n  \
+     bench        quick micro-benchmarks; --area {engine,service,ingest} emits BENCH_<area>.json\n  \
      lint         static-analysis pass: determinism/atomics/doc invariants (DESIGN.md \u{00a7}12)\n  \
      run          run an experiment described by a TOML config\n  \
      serve        start the TCP control plane\n  \
@@ -140,7 +140,13 @@ fn gen_traces(raw: &[String]) -> Result<(), String> {
         .opt("markets", "192", "number of spot markets")
         .opt("months", "3", "trace length in 30-day months")
         .opt("seed", "2020", "rng seed")
-        .opt("out", "traces/prices.csv", "output CSV path");
+        .opt("out", "traces/prices.csv", "output CSV path")
+        .opt(
+            "history-out",
+            "",
+            "also render the trace as a describe-spot-price-history JSON fixture \
+             (one record per market per hour; feeds `analyze --history` and the ingest benches)",
+        );
     let a = spec.parse(raw)?;
     let catalog = Catalog::with_limit(a.usize("markets")?);
     let cfg = TraceGenConfig { months: a.f64("months")?, seed: a.u64("seed")?, ..Default::default() };
@@ -152,6 +158,14 @@ fn gen_traces(raw: &[String]) -> Result<(), String> {
         trace.hours,
         a.str("out")
     );
+    if !a.str("history-out").is_empty() {
+        use siwoft::market::{importer, store};
+        let path = a.str("history-out");
+        let base = importer::parse_timestamp_hours("2020-03-01T00:00Z").map_err(|e| format!("{e}"))?;
+        let text = store::render_history_json(&catalog, &trace, base);
+        std::fs::write(path, &text).map_err(|e| format!("write {path}: {e}"))?;
+        println!("wrote {} history records ({} bytes) to {path}", trace.markets * trace.hours, text.len());
+    }
     Ok(())
 }
 
@@ -181,6 +195,16 @@ fn analyze(raw: &[String]) -> Result<(), String> {
             "real AWS describe-spot-price-history JSON; comma-separate NextToken-paginated \
              page files to stitch them",
         )
+        .opt(
+            "snapshot",
+            "",
+            "sealed columnar price-store snapshot (.sps) to analyze instead of JSON history",
+        )
+        .opt(
+            "snapshot-out",
+            "",
+            "with --history: also write the sealed store as a snapshot to this path",
+        )
         .opt("markets", "64", "synthetic market count")
         .opt("months", "3", "synthetic months")
         .opt("seed", "2020", "synthetic seed")
@@ -189,45 +213,79 @@ fn analyze(raw: &[String]) -> Result<(), String> {
         .flag("native", "force the native backend (skip PJRT)")
         .flag(
             "coverage",
-            "with --history: per-market first/last timestamp, record count and largest gap",
+            "with --history/--snapshot: per-market first/last timestamp, record count and \
+             largest gap",
         );
     let a = spec.parse(raw)?;
-    let world = if !a.str("history").is_empty() {
-        use siwoft::market::importer;
-        let paths: Vec<&str> =
-            a.str("history").split(',').map(str::trim).filter(|p| !p.is_empty()).collect();
-        let mut pages = Vec::with_capacity(paths.len());
-        for p in &paths {
-            pages.push(std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?);
-        }
+    let world = if !a.str("history").is_empty() || !a.str("snapshot").is_empty() {
+        use siwoft::market::{importer, store::Ingest, PriceStore};
         let catalog = Catalog::full();
-        // parse_history_pages also covers the single-file case, and
-        // rejects a lone page whose dangling NextToken marks a
-        // truncated capture
-        let samples = importer::parse_history_pages(&pages).map_err(|e| format!("{e}"))?;
-        let (trace, covered) =
-            importer::to_trace(&catalog, &samples).map_err(|e| format!("{e}"))?;
+        // both entry points converge on the same sealed store, so the
+        // analytics below are byte-identical either way (CI diffs them)
+        let (store, pages) = if !a.str("snapshot").is_empty() {
+            if !a.str("history").is_empty() {
+                return Err("pass --history or --snapshot, not both".into());
+            }
+            let path = a.str("snapshot");
+            let store = PriceStore::load(path).map_err(|e| format!("{e}"))?;
+            println!(
+                "loaded snapshot {path}: {} markets, {} samples",
+                store.len(),
+                store.n_samples()
+            );
+            (store, 0)
+        } else {
+            let paths: Vec<&str> =
+                a.str("history").split(',').map(str::trim).filter(|p| !p.is_empty()).collect();
+            // NextToken-paginated captures stream page-per-file in fetch
+            // order; each page decodes in CHUNK_BYTES chunks, so peak
+            // memory stays bounded by chunk size, not file size
+            let mut ing = Ingest::new();
+            for p in &paths {
+                let f = std::fs::File::open(p).map_err(|e| format!("read {p}: {e}"))?;
+                ing.page_from_reader(f).map_err(|e| format!("{p}: {e}"))?;
+            }
+            let pages = ing.pages();
+            (ing.finish().map_err(|e| format!("{e}"))?, pages)
+        };
+        if !a.str("snapshot-out").is_empty() {
+            let path = a.str("snapshot-out");
+            store.save(path).map_err(|e| format!("{e}"))?;
+            println!(
+                "wrote snapshot {path}: {} markets, {} samples",
+                store.len(),
+                store.n_samples()
+            );
+        }
+        let (trace, covered) = store.to_trace(&catalog).map_err(|e| format!("{e}"))?;
         println!(
-            "imported real price history ({} page{}): {covered} markets covered, {} hours",
-            pages.len(),
-            if pages.len() == 1 { "" } else { "s" },
+            "imported real price history ({}): {covered} markets covered, {} hours",
+            match pages {
+                0 => "snapshot".to_string(),
+                1 => "1 page".to_string(),
+                n => format!("{n} pages"),
+            },
             trace.hours
         );
         if a.flag("coverage") {
-            let cov = importer::coverage(&catalog, &samples);
+            let cov = store.coverage(&catalog);
             println!("\nper-market coverage ({} of {} markets):", cov.len(), catalog.len());
             println!(
                 "{:<28} {:>8} {:>18} {:>18} {:>12}",
                 "market", "records", "first", "last", "largest_gap"
             );
             for c in &cov {
+                let gap = match c.largest_gap_h {
+                    Some(g) => format!("{g} h"),
+                    None => "-".to_string(),
+                };
                 println!(
-                    "{:<28} {:>8} {:>18} {:>18} {:>10} h",
+                    "{:<28} {:>8} {:>18} {:>18} {:>12}",
                     catalog.markets[c.market].label(),
                     c.records,
                     importer::format_epoch_hours(c.first_hour),
                     importer::format_epoch_hours(c.last_hour),
-                    c.largest_gap_h
+                    gap
                 );
             }
             println!();
@@ -868,7 +926,7 @@ fn bench_quick(raw: &[String]) -> Result<(), String> {
         .opt(
             "area",
             "",
-            "structured bench area: engine | service — emits the BENCH_<area>.json \
+            "structured bench area: engine | service | ingest — emits the BENCH_<area>.json \
              schema tracked in EXPERIMENTS.md (empty = the legacy quick suite)",
         )
         .opt("markets", "96", "market count")
@@ -1007,7 +1065,55 @@ fn bench_area(
             out_rows.push(row("fleet_incremental", n_workers, &pooled));
             out_rows
         }
-        other => return Err(format!("unknown --area '{other}' (expected engine or service)")),
+        "ingest" => {
+            use siwoft::market::store::{render_history_json, Ingest, PriceStore};
+            use siwoft::market::{importer, TraceGenConfig};
+            // a rendered multi-MB history page, streamed back through the
+            // constant-memory parser: the units make items_per_sec read as
+            // parse MB/s, snapshot-load docs/s and price_at lookups/s
+            let catalog = Catalog::with_limit(markets);
+            let cfg = TraceGenConfig { months, seed, ..Default::default() };
+            let trace = siwoft::market::generate_traces(&catalog, &cfg);
+            let base = importer::parse_timestamp_hours("2020-03-01T00:00Z")
+                .map_err(|e| format!("{e}"))?;
+            let text = render_history_json(&catalog, &trace, base);
+            let mb = text.len() as f64 / (1024.0 * 1024.0);
+            let parse = bench.run_with_units("stream_parse_mb", mb, || {
+                let mut ing = Ingest::new();
+                ing.page_str(&text).unwrap();
+                ing.finish().unwrap().len()
+            });
+            let mut ing = Ingest::new();
+            ing.page_str(&text).map_err(|e| format!("{e}"))?;
+            let store = ing.finish().map_err(|e| format!("{e}"))?;
+            let bytes = store.to_bytes();
+            let load = bench.run_with_units("snapshot_load", 1.0, || {
+                PriceStore::from_bytes(&bytes).unwrap().n_samples()
+            });
+            let keys: Vec<String> = catalog.markets.iter().map(|m| m.key()).collect();
+            let (lo, hi) = store.span().ok_or("empty store")?;
+            let span = hi - lo + 1;
+            let lookups = 1024u64;
+            let point = bench.run_with_units("price_at", lookups as f64, || {
+                let mut acc = 0.0f64;
+                for i in 0..lookups {
+                    // fixed-stride walk over (market, hour) pairs: cheap,
+                    // deterministic, covers the whole span
+                    let key = &keys[(i as usize * 31) % keys.len()];
+                    let h = lo + (i.wrapping_mul(2654435761)) % span;
+                    acc += store.price_at(key, h).unwrap_or(0.0);
+                }
+                acc
+            });
+            vec![
+                row("stream_parse_mb", 1, &parse),
+                row("snapshot_load", 1, &load),
+                row("price_at", 1, &point),
+            ]
+        }
+        other => {
+            return Err(format!("unknown --area '{other}' (expected engine, service or ingest)"))
+        }
     };
 
     let doc = Json::obj(vec![
@@ -1209,6 +1315,7 @@ fn run_config(raw: &[String]) -> Result<(), String> {
         "cluster" => cluster(&args),
         "bench" => bench_quick(&args),
         "gen-traces" => gen_traces(&args),
+        "analyze" => analyze(&args),
         other => Err(format!("unknown experiment.kind '{other}'")),
     }
 }
@@ -1220,10 +1327,24 @@ fn serve(raw: &[String]) -> Result<(), String> {
         .opt("months", "3", "trace months")
         .opt("seed", "2020", "world seed")
         .opt("artifacts", "artifacts", "AOT artifacts dir")
+        .opt(
+            "snapshot",
+            "",
+            "sealed price-store snapshot (.sps): serve real history instead of a synthetic world",
+        )
         .opt("max-conns", "256", "live-connection cap (excess conns rejected at accept)")
         .workers_opt();
     let a = spec.parse(raw)?;
-    let world = World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?);
+    let world = if !a.str("snapshot").is_empty() {
+        let path = a.str("snapshot");
+        let catalog = Catalog::full();
+        let store = siwoft::market::PriceStore::load(path).map_err(|e| format!("{e}"))?;
+        let (trace, covered) = store.to_trace(&catalog).map_err(|e| format!("{e}"))?;
+        println!("loaded snapshot {path}: {covered} markets covered, {} hours", trace.hours);
+        World::new(catalog, trace)
+    } else {
+        World::generate(a.usize("markets")?, a.f64("months")?, a.u64("seed")?)
+    };
     let engine = AnalyticsEngine::auto(a.str("artifacts"));
     let coordinator = Coordinator::new(world, engine, a.workers()?);
     let server = Server::new(coordinator).max_conns(a.usize("max-conns")?);

@@ -41,6 +41,14 @@ impl MarketSpec {
     pub fn label(&self) -> String {
         format!("{}/{}{}", self.instance.name, self.region, self.az)
     }
+
+    /// The `"{instance_type}|{zone}"` join key imported price samples
+    /// and columnar-store market columns are matched through — the one
+    /// spelling shared by `importer` and `store`, so a sample can never
+    /// be attributed to different markets by different layers.
+    pub fn key(&self) -> String {
+        format!("{}|{}{}", self.instance.name, self.region, self.az)
+    }
 }
 
 /// The modeled regions and their price-level multipliers.

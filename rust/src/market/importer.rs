@@ -16,6 +16,12 @@
 //! analytics layer consumes (last-observation-carried-forward within
 //! each market, matching EC2's step-function price semantics) and
 //! aligns rows with a [`Catalog`] by `(instance type, zone)`.
+//!
+//! Parsing is an adapter over the chunked streaming path in
+//! [`super::store`] (DESIGN.md §13): this module keeps the whole-file
+//! `Vec<Sample>` API, the store keeps constant-memory ingestion and the
+//! columnar/snapshot forms — `tests/store_equivalence.rs` pins the two
+//! bit-identical.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -34,6 +40,8 @@ pub enum ImportError {
     Timestamp(String),
     /// pagination stitching failed (missing or dangling `NextToken`)
     Pagination(String),
+    /// reading the input failed (streaming ingest from a file or socket)
+    Io(String),
 }
 
 impl std::fmt::Display for ImportError {
@@ -43,6 +51,7 @@ impl std::fmt::Display for ImportError {
             ImportError::Empty => write!(f, "history contains no usable samples"),
             ImportError::Timestamp(ts) => write!(f, "bad timestamp '{ts}'"),
             ImportError::Pagination(msg) => write!(f, "history pagination: {msg}"),
+            ImportError::Io(msg) => write!(f, "history io: {msg}"),
         }
     }
 }
@@ -62,21 +71,81 @@ pub struct Sample {
     pub epoch_hour: i64,
 }
 
-/// Parse `YYYY-MM-DDTHH:MM:SS[.fff]Z` into hours since the unix epoch
-/// (days-from-civil; no leap seconds, which is AWS's convention too).
+/// `n` ASCII digits at byte offset `i`, as a number.
+fn digits(b: &[u8], i: usize, n: usize) -> Option<i64> {
+    let s = b.get(i..i + n)?;
+    let mut v = 0i64;
+    for &d in s {
+        if !d.is_ascii_digit() {
+            return None;
+        }
+        v = v * 10 + (d - b'0') as i64;
+    }
+    Some(v)
+}
+
+/// Parse an AWS-style timestamp into hours since the unix epoch.
+///
+/// Accepts `YYYY-MM-DD[T ]HH[:MM[:SS[.fff]]]` with an optional trailing
+/// offset: `Z`/`z`, `±HH`, `±HH:MM` or `±HHMM`.  Minutes and the offset
+/// shift the instant *before* truncating to the hour (floor), so
+/// offset-bearing captures land deterministically on the same UTC hour
+/// grid as their `Z`-suffixed twins; timestamps with no suffix are read
+/// as UTC.  DST ambiguity never enters: offsets are explicit in the
+/// record or absent.  (Days-from-civil; no leap seconds, which is AWS's
+/// convention too.)
 pub fn parse_timestamp_hours(ts: &str) -> Result<i64, ImportError> {
     let bad = || ImportError::Timestamp(ts.to_string());
     let b = ts.as_bytes();
     if b.len() < 13 || b[4] != b'-' || b[7] != b'-' || (b[10] != b'T' && b[10] != b' ') {
         return Err(bad());
     }
-    let num = |s: &str| s.parse::<i64>().map_err(|_| bad());
-    let year = num(&ts[0..4])?;
-    let month = num(&ts[5..7])?;
-    let day = num(&ts[8..10])?;
-    let hour = num(&ts[11..13])?;
+    let year = digits(b, 0, 4).ok_or_else(bad)?;
+    let month = digits(b, 5, 2).ok_or_else(bad)?;
+    let day = digits(b, 8, 2).ok_or_else(bad)?;
+    let hour = digits(b, 11, 2).ok_or_else(bad)?;
     if !(1..=12).contains(&month) || !(1..=31).contains(&day) || !(0..=23).contains(&hour) {
         return Err(bad());
+    }
+    let min = if b.len() >= 16 && b[13] == b':' {
+        let m = digits(b, 14, 2).ok_or_else(bad)?;
+        if !(0..=59).contains(&m) {
+            return Err(bad());
+        }
+        m
+    } else {
+        0
+    };
+    // optional timezone suffix: seconds/fractions hold only digits, ':'
+    // and '.', so the first Z/+/- past the hour field is the offset
+    let mut offset_min = 0i64;
+    for i in 13..b.len() {
+        match b[i] {
+            b'Z' | b'z' => {
+                if i != b.len() - 1 {
+                    return Err(bad());
+                }
+                break;
+            }
+            sign @ (b'+' | b'-') => {
+                let oh = digits(b, i + 1, 2).ok_or_else(bad)?;
+                let om = match b.len() - (i + 1) {
+                    2 => 0,
+                    4 => digits(b, i + 3, 2).ok_or_else(bad)?,
+                    5 if b[i + 3] == b':' => digits(b, i + 4, 2).ok_or_else(bad)?,
+                    _ => return Err(bad()),
+                };
+                if !(0..=23).contains(&oh) || !(0..=59).contains(&om) {
+                    return Err(bad());
+                }
+                offset_min = oh * 60 + om;
+                if sign == b'-' {
+                    offset_min = -offset_min;
+                }
+                break;
+            }
+            _ => {}
+        }
     }
     // Howard Hinnant's days-from-civil
     let y = if month <= 2 { year - 1 } else { year };
@@ -86,46 +155,55 @@ pub fn parse_timestamp_hours(ts: &str) -> Result<i64, ImportError> {
     let doy = (153 * mp + 2) / 5 + day - 1;
     let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
     let days = era * 146_097 + doe - 719_468;
-    Ok(days * 24 + hour)
+    Ok((days * 1440 + hour * 60 + min - offset_min).div_euclid(60))
 }
 
-/// Parse one response page: the samples plus the `NextToken`
-/// continuation (absent or empty = final page).
+/// Decode one `SpotPriceHistory` record into a [`Sample`]: `Ok(None)`
+/// for partial records and unparsable prices (the REST API can return
+/// them; tolerate), an error only for unparsable timestamps.
+pub(crate) fn sample_from_json(item: &Json) -> Result<Option<Sample>, ImportError> {
+    let get = |k: &str| item.get(k).and_then(Json::as_str);
+    let (Some(ty), Some(zone), Some(price), Some(ts)) = (
+        get("InstanceType"),
+        get("AvailabilityZone"),
+        get("SpotPrice"),
+        get("Timestamp"),
+    ) else {
+        return Ok(None);
+    };
+    let Ok(price) = price.parse::<f32>() else { return Ok(None) };
+    Ok(Some(Sample {
+        instance_type: ty.to_string(),
+        zone: zone.to_string(),
+        price,
+        epoch_hour: parse_timestamp_hours(ts)?,
+    }))
+}
+
+/// The exact-duplicate identity shared by every dedup point: market,
+/// hour, and bit-identical price.
+pub(crate) fn dedup_key(s: &Sample) -> (String, String, i64, u32) {
+    (s.instance_type.clone(), s.zone.clone(), s.epoch_hour, s.price.to_bits())
+}
+
+/// Parse one response page — a thin adapter over the streaming parser
+/// (DESIGN.md §13): the samples (exact duplicates dropped, keeping the
+/// first occurrence) plus the `NextToken` continuation (absent or empty
+/// = final page).
 fn parse_page(text: &str) -> Result<(Vec<Sample>, Option<String>), ImportError> {
-    let j = Json::parse(text).map_err(|e| ImportError::Json(e.to_string()))?;
-    let arr = j
-        .get("SpotPriceHistory")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| ImportError::Json("missing 'SpotPriceHistory' array".into()))?;
-    let mut out = Vec::with_capacity(arr.len());
-    for item in arr {
-        let get = |k: &str| item.get(k).and_then(Json::as_str);
-        let (Some(ty), Some(zone), Some(price), Some(ts)) = (
-            get("InstanceType"),
-            get("AvailabilityZone"),
-            get("SpotPrice"),
-            get("Timestamp"),
-        ) else {
-            continue; // tolerate partial records, as the REST API can return them
-        };
-        let Ok(price) = price.parse::<f32>() else { continue };
-        out.push(Sample {
-            instance_type: ty.to_string(),
-            zone: zone.to_string(),
-            price,
-            epoch_hour: parse_timestamp_hours(ts)?,
-        });
-    }
-    let token = j
-        .get("NextToken")
-        .and_then(Json::as_str)
-        .filter(|t| !t.is_empty())
-        .map(str::to_string);
-    Ok((out, token))
+    let mut parser = super::store::StreamParser::new();
+    let mut sink = super::store::DedupSink::new(Vec::new());
+    parser.feed(text.as_bytes(), &mut sink)?;
+    let token = parser.finish()?;
+    Ok((sink.into_inner(), token))
 }
 
 /// Parse the raw JSON into samples (unknown instance types/zones kept —
-/// filtering happens at grid time).
+/// filtering happens at grid time).  Exact duplicate records (same
+/// market, hour and bit-identical price) are dropped keeping the first,
+/// consistent with the page-boundary dedup in [`parse_history_pages`];
+/// same-hour records with *different* prices are all kept, and LOCF
+/// gridding takes the last.
 pub fn parse_history(text: &str) -> Result<Vec<Sample>, ImportError> {
     let (out, _token) = parse_page(text)?;
     if out.is_empty() {
@@ -172,8 +250,7 @@ pub fn parse_history_pages<S: AsRef<str>>(pages: &[S]) -> Result<Vec<Sample>, Im
             _ => {}
         }
         for s in samples {
-            let key = (s.instance_type.clone(), s.zone.clone(), s.epoch_hour, s.price.to_bits());
-            if seen.insert(key) {
+            if seen.insert(dedup_key(&s)) {
                 out.push(s);
             }
         }
@@ -252,23 +329,22 @@ pub struct MarketCoverage {
     pub first_hour: i64,
     /// last observation (hours since the unix epoch)
     pub last_hour: i64,
-    /// largest gap between consecutive observations (hours; 0 with
-    /// fewer than two records) — LOCF freewheels across this span
-    pub largest_gap_h: i64,
+    /// largest gap between consecutive observations (hours) — LOCF
+    /// freewheels across this span; `None` with fewer than two records
+    /// (a single sample has no gap to measure)
+    pub largest_gap_h: Option<i64>,
 }
 
-/// The `(instance type, zone)` key both the gridder and the coverage
-/// audit map samples through — one implementation so they can never
+/// The `(instance type, zone)` key the gridder, the coverage audit and
+/// the columnar store all map samples through — one implementation
+/// (see [`super::catalog::MarketSpec::key`]) so they can never
 /// attribute the same sample to different markets.
-fn market_ids(catalog: &Catalog) -> BTreeMap<String, usize> {
-    catalog
-        .markets
-        .iter()
-        .map(|spec| (format!("{}|{}{}", spec.instance.name, spec.region, spec.az), spec.id))
-        .collect()
+pub(crate) fn market_ids(catalog: &Catalog) -> BTreeMap<String, usize> {
+    catalog.markets.iter().map(|spec| (spec.key(), spec.id)).collect()
 }
 
-fn sample_key(s: &Sample) -> String {
+/// A sample's side of the [`market_ids`] join key.
+pub(crate) fn sample_key(s: &Sample) -> String {
     format!("{}|{}", s.instance_type, s.zone)
 }
 
@@ -288,8 +364,7 @@ pub fn coverage(catalog: &Catalog, samples: &[Sample]) -> Vec<MarketCoverage> {
         .into_iter()
         .map(|(market, mut hs)| {
             hs.sort_unstable();
-            let largest_gap_h =
-                hs.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
+            let largest_gap_h = hs.windows(2).map(|w| w[1] - w[0]).max();
             MarketCoverage {
                 market,
                 records: hs.len(),
@@ -321,19 +396,22 @@ pub fn format_epoch_hours(epoch_hour: i64) -> String {
     format!("{year:04}-{m:02}-{d:02}T{hour:02}:00Z")
 }
 
-/// Convenience: parse + grid in one call.
+/// Convenience: parse + grid in one call, routed through the columnar
+/// store (pinned bit-identical to gridding the samples directly by
+/// `tests/store_equivalence.rs`).
 pub fn import(catalog: &Catalog, text: &str) -> Result<(PriceTrace, usize), ImportError> {
     let samples = parse_history(text)?;
-    to_trace(catalog, &samples)
+    super::store::PriceStore::from_samples(&samples)?.to_trace(catalog)
 }
 
-/// Convenience: stitch paginated pages + grid in one call.
+/// Convenience: stitch paginated pages + grid in one call, routed
+/// through the columnar store like [`import`].
 pub fn import_pages<S: AsRef<str>>(
     catalog: &Catalog,
     pages: &[S],
 ) -> Result<(PriceTrace, usize), ImportError> {
     let samples = parse_history_pages(pages)?;
-    to_trace(catalog, &samples)
+    super::store::PriceStore::from_samples(&samples)?.to_trace(catalog)
 }
 
 #[cfg(test)]
@@ -502,12 +580,91 @@ mod tests {
         assert_eq!(row.records, 3);
         // observations at T00, T05, T09 → span 0..9, largest gap 5→9
         assert_eq!(row.last_hour - row.first_hour, 9);
-        assert_eq!(row.largest_gap_h, 5);
+        assert_eq!(row.largest_gap_h, Some(5));
         let b = cov.iter().find(|c| c.market != a).unwrap();
         assert_eq!(b.records, 1);
-        assert_eq!(b.largest_gap_h, 0, "single-record market has no gap");
+        assert_eq!(b.largest_gap_h, None, "single-record market has no gap to measure");
         // ids come out sorted
         assert!(cov.windows(2).all(|w| w[0].market < w[1].market));
+    }
+
+    #[test]
+    fn parse_history_dedups_exact_duplicates_in_one_file() {
+        // the single-file path must apply the same exact-dup rule as the
+        // page-stitching path (this was only done at page boundaries)
+        let text = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:00:00Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:00:00Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T00:59:00Z"}
+        ]}"#;
+        let samples = parse_history(text).unwrap();
+        assert_eq!(samples.len(), 2, "exact dup dropped; same-hour new price kept");
+        // LOCF grid takes the last same-hour observation
+        let catalog = Catalog::full();
+        let (trace, _) = import(&catalog, text).unwrap();
+        let a = catalog
+            .markets
+            .iter()
+            .find(|s| s.instance.name == "r5.large" && s.region == "us-east-1" && s.az == 'a')
+            .unwrap()
+            .id;
+        assert_eq!(trace.hours, 1);
+        assert_eq!(trace.price(a, 0), 0.06);
+    }
+
+    #[test]
+    fn out_of_order_records_grid_identically() {
+        // same five records as history_json(), shuffled
+        let shuffled = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "zz-unknown-9z", "InstanceType": "x9.mega",
+             "SpotPrice": "1.0", "Timestamp": "2020-03-01T03:00:00.000Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.04", "Timestamp": "2020-03-01T09:00:00.000Z"},
+            {"AvailabilityZone": "us-east-1b", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T02:00:00.000Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:10:00.000Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"}
+        ]}"#;
+        let catalog = Catalog::full();
+        let (a, ca) = import(&catalog, shuffled).unwrap();
+        let (b, cb) = import(&catalog, &history_json()).unwrap();
+        assert_eq!(ca, cb);
+        assert_eq!(a.prices, b.prices, "record order must not affect the grid");
+    }
+
+    #[test]
+    fn offset_timestamps_normalize_deterministically() {
+        // explicit offsets shift onto the same UTC hour grid
+        assert_eq!(parse_timestamp_hours("2020-03-01T05:30:00+05:30").unwrap(), 18322 * 24);
+        assert_eq!(parse_timestamp_hours("2020-02-29T23:30:00-0100").unwrap(), 18322 * 24);
+        assert_eq!(parse_timestamp_hours("2020-03-01T00:30:00-01:00").unwrap(), 18322 * 24 + 1);
+        assert_eq!(parse_timestamp_hours("2020-03-01T02:00:00+02").unwrap(), 18322 * 24);
+        // no suffix = UTC; lowercase z = Z
+        assert_eq!(parse_timestamp_hours("2020-03-01T04:30:00").unwrap(), 18322 * 24 + 4);
+        assert_eq!(
+            parse_timestamp_hours("2020-03-01T00:00:00z").unwrap(),
+            parse_timestamp_hours("2020-03-01T00:00:00Z").unwrap()
+        );
+        // minutes floor toward past, also across the epoch
+        assert_eq!(parse_timestamp_hours("1969-12-31T23:30:00Z").unwrap(), -1);
+        // malformed suffixes are rejected, not silently ignored
+        assert!(parse_timestamp_hours("2020-03-01T00:00:00+xx").is_err());
+        assert!(parse_timestamp_hours("2020-03-01T00:00:00+5").is_err());
+        assert!(parse_timestamp_hours("2020-03-01T00:00:00Zz").is_err());
+        assert!(parse_timestamp_hours("2020-03-01T00:xx:00Z").is_err());
+        // an offset-bearing record lands exactly where its Z twin does
+        let off = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T02:15:00+02:00"}]}"#;
+        let z = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:15:00Z"}]}"#;
+        assert_eq!(parse_history(off).unwrap(), parse_history(z).unwrap());
     }
 
     #[test]

@@ -6,11 +6,13 @@ pub mod analytics;
 pub mod catalog;
 pub mod importer;
 pub mod market;
+pub mod store;
 pub mod trace;
 pub mod tracegen;
 
 pub use analytics::{MarketAnalytics, PlacementScores};
 pub use catalog::{Catalog, InstanceType, MarketSpec};
 pub use market::{billed_cycles, session_cost, SpotMarket, BILLING_CYCLE_H, TERMINATION_NOTICE_H};
+pub use store::{Ingest, PriceStore, StoreError};
 pub use trace::PriceTrace;
 pub use tracegen::{generate as generate_traces, TraceGenConfig, VolClass};

@@ -1,0 +1,1246 @@
+//! Streaming market ingestion and the columnar price store.
+//!
+//! Three pieces (DESIGN.md §13):
+//!
+//! 1. **[`StreamParser`]** — a chunked, constant-memory parser for one
+//!    `describe-spot-price-history` response page.  It never holds the
+//!    document text: history records are split off byte-by-byte at the
+//!    array level and decoded one at a time through [`crate::util::json`],
+//!    so peak buffering is one record plus the (tiny) document shell —
+//!    bounded by chunk size, not file size.
+//! 2. **[`PriceStore`]** — the columnar in-memory form: per-market flat
+//!    timestamp/price vectors, sorted and deduplicated at seal time,
+//!    binary-searchable ([`MarketColumn::price_at`] /
+//!    [`MarketColumn::window`]) and shared immutably via
+//!    [`PriceStore::into_shared`] across concurrent scenarios and the
+//!    serve path.
+//! 3. **An on-disk binary snapshot** ([`PriceStore::save`] /
+//!    [`PriceStore::load`], `siwoft analyze --snapshot-out` /
+//!    `--snapshot`) — versioned header, per-market column blocks, and a
+//!    trailing FNV-1a checksum — so `analyze`/`serve`/`bench` cold-start
+//!    in milliseconds instead of re-parsing JSON.
+//!
+//! The legacy whole-file importer ([`super::importer::parse_history`])
+//! is a thin adapter over the same streaming machinery and stays
+//! bit-identical; `tests/store_equivalence.rs` pins both directions.
+//!
+//! Deliberate corners (all stricter than, or equal to, the legacy path):
+//!
+//! * Duplicate top-level `"SpotPriceHistory"` keys are an error (the
+//!   legacy whole-document parse silently kept the last one).
+//! * Pre-1970 timestamps are rejected at seal time: store timestamps
+//!   are unsigned hours since the epoch, and no spot market predates
+//!   the epoch.
+//! * Interception only triggers for the canonical top-level shape
+//!   `{"SpotPriceHistory": [...]}`; a history array nested deeper is
+//!   buffered as part of the shell (and then rejected by the same
+//!   "missing array" check the legacy path uses).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Read;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::catalog::Catalog;
+use super::importer::{
+    dedup_key, format_epoch_hours, market_ids, sample_from_json, sample_key, ImportError,
+    MarketCoverage, Sample,
+};
+use super::trace::PriceTrace;
+use crate::util::json::Json;
+
+/// Chunk size [`Ingest::page_from_reader`] reads with — and therefore
+/// the scale peak ingest memory is bounded by (one chunk, one pending
+/// record, one document shell).
+pub const CHUNK_BYTES: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------
+// sinks
+// ---------------------------------------------------------------------
+
+/// Destination for decoded [`Sample`]s: the streaming parser feeds
+/// samples out as they decode instead of materializing a whole-file
+/// `Vec<Sample>`.
+pub trait SampleSink {
+    /// Accept one decoded sample.
+    fn push(&mut self, s: Sample);
+}
+
+impl SampleSink for Vec<Sample> {
+    fn push(&mut self, s: Sample) {
+        Vec::push(self, s);
+    }
+}
+
+/// A sink adapter that drops *exact* duplicate samples (same market,
+/// hour and bit-identical price), keeping the first occurrence — the
+/// page-boundary dedup rule of
+/// [`super::importer::parse_history_pages`], applied uniformly.
+pub struct DedupSink<S: SampleSink> {
+    inner: S,
+    seen: BTreeSet<(String, String, i64, u32)>,
+}
+
+impl<S: SampleSink> DedupSink<S> {
+    /// Wrap `inner` with exact-duplicate filtering.
+    pub fn new(inner: S) -> DedupSink<S> {
+        DedupSink { inner, seen: BTreeSet::new() }
+    }
+
+    /// Unwrap the inner sink.
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: SampleSink> SampleSink for DedupSink<S> {
+    fn push(&mut self, s: Sample) {
+        if self.seen.insert(dedup_key(&s)) {
+            self.inner.push(s);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// streaming page parser
+// ---------------------------------------------------------------------
+
+/// Incremental parser for one `describe-spot-price-history` response
+/// page, fed in arbitrary byte chunks (UTF-8 boundaries may fall
+/// anywhere — all structural JSON characters are ASCII).
+///
+/// The parser splits the document into a *shell* (everything except
+/// the elements of the top-level `"SpotPriceHistory"` array, which
+/// render as an empty array) and one pending *element* buffer.  Each
+/// completed element is decoded with [`Json::parse`] and pushed into
+/// the caller's [`SampleSink`]; [`StreamParser::finish`] then parses
+/// the shell to validate the envelope and extract the `NextToken`
+/// continuation.  Peak buffering is `max(shell + pending element)` —
+/// see [`StreamParser::peak_buffered`].
+pub struct StreamParser {
+    shell: Vec<u8>,
+    elem: Vec<u8>,
+    depth: i64,
+    in_str: bool,
+    esc: bool,
+    in_hist: bool,
+    elem_depth: i64,
+    elem_in_str: bool,
+    elem_esc: bool,
+    seen_hist: bool,
+    peak: usize,
+}
+
+impl Default for StreamParser {
+    fn default() -> Self {
+        StreamParser::new()
+    }
+}
+
+impl StreamParser {
+    /// A fresh parser for one page.
+    pub fn new() -> StreamParser {
+        StreamParser {
+            shell: Vec::new(),
+            elem: Vec::new(),
+            depth: 0,
+            in_str: false,
+            esc: false,
+            in_hist: false,
+            elem_depth: 0,
+            elem_in_str: false,
+            elem_esc: false,
+            seen_hist: false,
+            peak: 0,
+        }
+    }
+
+    /// Feed the next chunk of the document, pushing every history
+    /// record that completes within it into `sink`.
+    pub fn feed<S: SampleSink>(&mut self, bytes: &[u8], sink: &mut S) -> Result<(), ImportError> {
+        for &c in bytes {
+            if self.in_hist {
+                self.hist_byte(c, sink)?;
+            } else {
+                self.shell_byte(c)?;
+            }
+        }
+        self.peak = self.peak.max(self.shell.len() + self.elem.len());
+        Ok(())
+    }
+
+    /// End of input: validate the envelope (balanced document, history
+    /// array present, no trailing garbage) and return the `NextToken`
+    /// continuation (absent or empty = final page).
+    pub fn finish(&mut self) -> Result<Option<String>, ImportError> {
+        if self.in_hist {
+            return Err(ImportError::Json(
+                "input ends inside the 'SpotPriceHistory' array (truncated page?)".into(),
+            ));
+        }
+        self.peak = self.peak.max(self.shell.len());
+        let text = std::str::from_utf8(&self.shell)
+            .map_err(|_| ImportError::Json("document is not valid utf-8".into()))?;
+        let j = Json::parse(text).map_err(|e| ImportError::Json(e.to_string()))?;
+        j.get("SpotPriceHistory")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ImportError::Json("missing 'SpotPriceHistory' array".into()))?;
+        Ok(j.get("NextToken")
+            .and_then(Json::as_str)
+            .filter(|t| !t.is_empty())
+            .map(str::to_string))
+    }
+
+    /// High-water mark of bytes buffered so far (shell + pending
+    /// element) — *not* counting the caller's chunk.  The bounded-memory
+    /// acceptance test pins this against multi-megabyte inputs.
+    pub fn peak_buffered(&self) -> usize {
+        self.peak
+    }
+
+    /// One byte of the document shell (everything outside the history
+    /// array).
+    fn shell_byte(&mut self, c: u8) -> Result<(), ImportError> {
+        if self.in_str {
+            self.shell.push(c);
+            if self.esc {
+                self.esc = false;
+            } else if c == b'\\' {
+                self.esc = true;
+            } else if c == b'"' {
+                self.in_str = false;
+            }
+            return Ok(());
+        }
+        match c {
+            b'"' => self.in_str = true,
+            b'{' => self.depth += 1,
+            b'}' | b']' => self.depth -= 1,
+            b'[' => {
+                self.depth += 1;
+                // Intercept `{"SpotPriceHistory": [` — the array must be
+                // a direct value of the root object (depth 2 counts the
+                // root `{` and this `[`).
+                if self.depth == 2 && self.shell_tail_is_history_key() {
+                    if self.seen_hist {
+                        return Err(ImportError::Json(
+                            "duplicate top-level 'SpotPriceHistory' key".into(),
+                        ));
+                    }
+                    self.shell.push(c);
+                    self.in_hist = true;
+                    self.seen_hist = true;
+                    return Ok(());
+                }
+            }
+            _ => {}
+        }
+        self.shell.push(c);
+        Ok(())
+    }
+
+    /// Does the shell end (whitespace-tolerantly) with
+    /// `"SpotPriceHistory" :` — i.e. is the `[` about to be appended the
+    /// history array's opening bracket?
+    fn shell_tail_is_history_key(&self) -> bool {
+        const KEY: &[u8] = b"\"SpotPriceHistory\"";
+        let mut i = self.shell.len();
+        while i > 0 && self.shell[i - 1].is_ascii_whitespace() {
+            i -= 1;
+        }
+        if i == 0 || self.shell[i - 1] != b':' {
+            return false;
+        }
+        i -= 1;
+        while i > 0 && self.shell[i - 1].is_ascii_whitespace() {
+            i -= 1;
+        }
+        i >= KEY.len()
+            && &self.shell[i - KEY.len()..i] == KEY
+            // not a longer string that merely *ends* with the key (the
+            // preceding byte would be its backslash escape)
+            && (i == KEY.len() || self.shell[i - KEY.len() - 1] != b'\\')
+    }
+
+    /// One byte inside the history array: accumulate the pending
+    /// element, detect its completion at local depth 0.
+    fn hist_byte<S: SampleSink>(&mut self, c: u8, sink: &mut S) -> Result<(), ImportError> {
+        if self.elem_in_str {
+            self.elem.push(c);
+            if self.elem_esc {
+                self.elem_esc = false;
+            } else if c == b'\\' {
+                self.elem_esc = true;
+            } else if c == b'"' {
+                self.elem_in_str = false;
+            }
+            return Ok(());
+        }
+        if self.elem_depth > 0 {
+            match c {
+                b'"' => self.elem_in_str = true,
+                b'{' | b'[' => self.elem_depth += 1,
+                b'}' | b']' => self.elem_depth -= 1,
+                _ => {}
+            }
+            self.elem.push(c);
+            return Ok(());
+        }
+        // top level of the array, outside any string
+        match c {
+            b',' | b']' => {
+                if self.elem.iter().any(|b| !b.is_ascii_whitespace()) {
+                    self.finish_elem(sink)?;
+                } else if c == b',' {
+                    return Err(ImportError::Json(
+                        "empty element in 'SpotPriceHistory' array".into(),
+                    ));
+                }
+                self.elem.clear();
+                if c == b']' {
+                    self.shell.push(b']');
+                    self.depth -= 1;
+                    self.in_hist = false;
+                }
+            }
+            b'"' => {
+                self.elem_in_str = true;
+                self.elem.push(c);
+            }
+            b'{' | b'[' => {
+                self.elem_depth += 1;
+                self.elem.push(c);
+            }
+            b'}' => {
+                return Err(ImportError::Json(
+                    "unbalanced '}' in 'SpotPriceHistory' array".into(),
+                ));
+            }
+            _ => self.elem.push(c), // numbers, literals, whitespace
+        }
+        Ok(())
+    }
+
+    /// A complete array element: decode it and push the sample (partial
+    /// records and unparsable prices are tolerated, like the REST API's
+    /// consumers must).
+    fn finish_elem<S: SampleSink>(&mut self, sink: &mut S) -> Result<(), ImportError> {
+        self.peak = self.peak.max(self.shell.len() + self.elem.len());
+        let text = std::str::from_utf8(&self.elem)
+            .map_err(|_| ImportError::Json("invalid utf-8 in history record".into()))?;
+        let item = Json::parse(text).map_err(|e| ImportError::Json(e.to_string()))?;
+        if let Some(s) = sample_from_json(&item)? {
+            sink.push(s);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// pagination
+// ---------------------------------------------------------------------
+
+/// `NextToken` sequencing for a streamed multi-page capture, mirroring
+/// the REST contract [`super::importer::parse_history_pages`] enforces:
+/// every page but the last must carry a non-empty continuation token,
+/// and the last page must not.
+pub struct PageChain {
+    pages: usize,
+    token: Option<String>,
+}
+
+impl Default for PageChain {
+    fn default() -> Self {
+        PageChain::new()
+    }
+}
+
+impl PageChain {
+    /// An empty chain.
+    pub fn new() -> PageChain {
+        PageChain { pages: 0, token: None }
+    }
+
+    /// Called before parsing each page: errors if the *previous* page
+    /// ended without a continuation token (pages dropped or re-ordered).
+    pub fn begin_page(&mut self) -> Result<(), ImportError> {
+        if self.pages > 0 && self.token.is_none() {
+            return Err(ImportError::Pagination(format!(
+                "page {} has no NextToken but more pages follow (dropped or re-ordered pages?)",
+                self.pages
+            )));
+        }
+        Ok(())
+    }
+
+    /// Record the token the just-finished page ended with.
+    pub fn end_page(&mut self, token: Option<String>) {
+        self.pages += 1;
+        self.token = token;
+    }
+
+    /// Called after the last page: errors if it still carried a token
+    /// (the capture is truncated).
+    pub fn finish(&self) -> Result<(), ImportError> {
+        if let Some(t) = &self.token {
+            return Err(ImportError::Pagination(format!(
+                "last page still carries NextToken '{t}': the capture is truncated — \
+                 fetch the remaining pages"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Number of pages consumed so far.
+    pub fn pages(&self) -> usize {
+        self.pages
+    }
+}
+
+// ---------------------------------------------------------------------
+// end-to-end ingest
+// ---------------------------------------------------------------------
+
+/// End-to-end streaming ingest: pages → [`StreamParser`] →
+/// [`DedupSink`] → [`StoreBuilder`] → [`PriceStore`].
+///
+/// ```no_run
+/// # use siwoft::market::store::Ingest;
+/// let mut ing = Ingest::new();
+/// for path in ["p1.json", "p2.json"] {
+///     ing.page_from_reader(std::fs::File::open(path).unwrap()).unwrap();
+/// }
+/// let store = ing.finish().unwrap();
+/// ```
+pub struct Ingest {
+    sink: DedupSink<StoreBuilder>,
+    chain: PageChain,
+    peak: usize,
+}
+
+impl Default for Ingest {
+    fn default() -> Self {
+        Ingest::new()
+    }
+}
+
+impl Ingest {
+    /// An empty ingest (zero pages so far).
+    pub fn new() -> Ingest {
+        Ingest { sink: DedupSink::new(StoreBuilder::new()), chain: PageChain::new(), peak: 0 }
+    }
+
+    /// Stream one page from `r` in [`CHUNK_BYTES`] chunks — the
+    /// constant-memory path for on-disk captures.
+    pub fn page_from_reader<R: Read>(&mut self, mut r: R) -> Result<(), ImportError> {
+        self.chain.begin_page()?;
+        let mut parser = StreamParser::new();
+        let mut buf = [0u8; CHUNK_BYTES];
+        loop {
+            let n = r.read(&mut buf).map_err(|e| ImportError::Io(e.to_string()))?;
+            if n == 0 {
+                break;
+            }
+            parser.feed(&buf[..n], &mut self.sink)?;
+        }
+        let token = parser.finish()?;
+        self.peak = self.peak.max(parser.peak_buffered());
+        self.chain.end_page(token);
+        Ok(())
+    }
+
+    /// Ingest one page already held as a string (tests, CLI arguments).
+    pub fn page_str(&mut self, text: &str) -> Result<(), ImportError> {
+        self.page_from_reader(text.as_bytes())
+    }
+
+    /// Number of pages ingested so far.
+    pub fn pages(&self) -> usize {
+        self.chain.pages()
+    }
+
+    /// High-water mark of parser-buffered bytes across all pages (see
+    /// [`StreamParser::peak_buffered`]).
+    pub fn peak_buffered(&self) -> usize {
+        self.peak
+    }
+
+    /// Validate pagination, seal the builder and return the store.
+    pub fn finish(self) -> Result<PriceStore, ImportError> {
+        if self.chain.pages() == 0 {
+            return Err(ImportError::Empty);
+        }
+        self.chain.finish()?;
+        self.sink.into_inner().seal()
+    }
+}
+
+// ---------------------------------------------------------------------
+// builder + store
+// ---------------------------------------------------------------------
+
+/// Accumulates samples per market, then [`StoreBuilder::seal`]s them
+/// into the sorted columnar form.
+pub struct StoreBuilder {
+    cols: BTreeMap<String, Vec<(i64, f64)>>,
+    bad_hour: Option<i64>,
+    n: usize,
+}
+
+impl Default for StoreBuilder {
+    fn default() -> Self {
+        StoreBuilder::new()
+    }
+}
+
+impl SampleSink for StoreBuilder {
+    fn push(&mut self, s: Sample) {
+        if s.epoch_hour < 0 {
+            // remember the first offender; seal() reports it as a typed
+            // error (store timestamps are unsigned epoch hours)
+            if self.bad_hour.is_none() {
+                self.bad_hour = Some(s.epoch_hour);
+            }
+            return;
+        }
+        let key = sample_key(&s);
+        self.cols.entry(key).or_default().push((s.epoch_hour, s.price as f64));
+        self.n += 1;
+    }
+}
+
+impl StoreBuilder {
+    /// An empty builder.
+    pub fn new() -> StoreBuilder {
+        StoreBuilder { cols: BTreeMap::new(), bad_hour: None, n: 0 }
+    }
+
+    /// Sort each market's samples by hour (stable, preserving arrival
+    /// order among equal hours), collapse equal-hour runs keeping the
+    /// *last* observation (exactly the value LOCF gridding would take),
+    /// and freeze the columns.
+    pub fn seal(self) -> Result<PriceStore, ImportError> {
+        if let Some(h) = self.bad_hour {
+            return Err(ImportError::Timestamp(format!(
+                "{h}h (pre-1970 timestamps are not representable in the columnar store)"
+            )));
+        }
+        if self.n == 0 {
+            return Err(ImportError::Empty);
+        }
+        let mut markets = Vec::with_capacity(self.cols.len());
+        for (key, mut obs) in self.cols {
+            obs.sort_by_key(|&(t, _)| t);
+            let mut ts: Vec<u64> = Vec::with_capacity(obs.len());
+            let mut px: Vec<f64> = Vec::with_capacity(obs.len());
+            for (t, p) in obs {
+                let t = t as u64;
+                if ts.last() == Some(&t) {
+                    *px.last_mut().unwrap() = p;
+                } else {
+                    ts.push(t);
+                    px.push(p);
+                }
+            }
+            markets.push(MarketColumn { key, ts, px });
+        }
+        Ok(PriceStore { markets })
+    }
+}
+
+/// One market's column pair: parallel flat vectors of strictly
+/// increasing epoch hours and their observed prices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MarketColumn {
+    /// The `"{instance_type}|{zone}"` join key (see
+    /// [`super::catalog::MarketSpec::key`]).
+    pub key: String,
+    /// Observation hours since the unix epoch, strictly increasing,
+    /// never empty.
+    pub ts: Vec<u64>,
+    /// Observed price at each hour of `ts` ($/h).
+    pub px: Vec<f64>,
+}
+
+impl MarketColumn {
+    /// Number of observations.
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+
+    /// True when the column holds no observations (never, for sealed or
+    /// loaded stores — kept total for hand-built columns).
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    /// Price in force at `hour`: the latest observation at or before it
+    /// (LOCF), backfilling from the first observation for earlier hours
+    /// — the same step-function semantics the hourly grid uses.
+    pub fn price_at(&self, hour: u64) -> f64 {
+        let idx = self.ts.partition_point(|&t| t <= hour);
+        if idx == 0 {
+            self.px[0]
+        } else {
+            self.px[idx - 1]
+        }
+    }
+
+    /// The observations with `lo <= hour <= hi`, as `(hours, prices)`
+    /// column slices.
+    pub fn window(&self, lo: u64, hi: u64) -> (&[u64], &[f64]) {
+        let a = self.ts.partition_point(|&t| t < lo);
+        let b = self.ts.partition_point(|&t| t <= hi);
+        (&self.ts[a..b], &self.px[a..b])
+    }
+}
+
+/// The columnar price store: every ingested market's observation
+/// columns, sorted by market key.  Immutable once sealed; share it
+/// across threads with [`PriceStore::into_shared`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct PriceStore {
+    /// Per-market columns, sorted by [`MarketColumn::key`].
+    pub markets: Vec<MarketColumn>,
+}
+
+impl PriceStore {
+    /// Number of markets with data.
+    pub fn len(&self) -> usize {
+        self.markets.len()
+    }
+
+    /// True when the store holds no markets.
+    pub fn is_empty(&self) -> bool {
+        self.markets.is_empty()
+    }
+
+    /// Total observation count across all markets.
+    pub fn n_samples(&self) -> usize {
+        self.markets.iter().map(MarketColumn::len).sum()
+    }
+
+    /// Build a store from an in-memory sample slice — the adapter the
+    /// legacy whole-file import path routes through.
+    pub fn from_samples(samples: &[Sample]) -> Result<PriceStore, ImportError> {
+        let mut b = StoreBuilder::new();
+        for s in samples {
+            SampleSink::push(&mut b, s.clone());
+        }
+        b.seal()
+    }
+
+    /// The column for `key` (`"{instance_type}|{zone}"`), if present —
+    /// binary search over the sorted keys.
+    pub fn market(&self, key: &str) -> Option<&MarketColumn> {
+        self.markets
+            .binary_search_by(|c| c.key.as_str().cmp(key))
+            .ok()
+            .map(|i| &self.markets[i])
+    }
+
+    /// Price in force for `key` at `hour` (see
+    /// [`MarketColumn::price_at`]), or `None` for unknown markets.
+    pub fn price_at(&self, key: &str, hour: u64) -> Option<f64> {
+        self.market(key).map(|c| c.price_at(hour))
+    }
+
+    /// `(first, last)` observation hour across *all* markets — the span
+    /// the hourly grid covers.  `None` for an empty store.
+    pub fn span(&self) -> Option<(u64, u64)> {
+        let lo = self.markets.iter().filter_map(|c| c.ts.first()).min()?;
+        let hi = self.markets.iter().filter_map(|c| c.ts.last()).max()?;
+        Some((*lo, *hi))
+    }
+
+    /// Freeze the store behind an [`Arc`] for lock-free sharing across
+    /// concurrent scenarios and the serve path.
+    pub fn into_shared(self) -> Arc<PriceStore> {
+        Arc::new(self)
+    }
+
+    /// Build the hourly `[M, H]` trace for `catalog` — bit-identical to
+    /// [`super::importer::to_trace`] over the same (deduplicated)
+    /// samples: the grid spans the store's full hour range (unknown
+    /// markets included), covered markets step LOCF with backfill from
+    /// their first observation, uncovered markets sit flat at their
+    /// on-demand price.  Returns the trace and the covered-market count.
+    pub fn to_trace(&self, catalog: &Catalog) -> Result<(PriceTrace, usize), ImportError> {
+        let (lo, hi) = self.span().ok_or(ImportError::Empty)?;
+        let hours = (hi - lo + 1) as usize;
+        let m = catalog.len();
+        let ids = market_ids(catalog);
+        let mut trace = PriceTrace::new(m, hours);
+        let mut filled = vec![false; m];
+        let mut covered = 0usize;
+        for col in &self.markets {
+            let Some(&id) = ids.get(&col.key) else { continue };
+            covered += 1;
+            filled[id] = true;
+            let mut cur = col.px[0] as f32; // backfill before the first observation
+            let mut next = 0usize;
+            for hh in 0..hours {
+                let abs = lo + hh as u64;
+                while next < col.ts.len() && col.ts[next] <= abs {
+                    cur = col.px[next] as f32;
+                    next += 1;
+                }
+                trace.set(id, hh, cur);
+            }
+        }
+        for (id, spec) in catalog.markets.iter().enumerate() {
+            if !filled[id] {
+                // no data: flat at on-demand (never above ⇒ never revoked)
+                for hh in 0..hours {
+                    trace.set(id, hh, spec.od_price as f32);
+                }
+            }
+        }
+        Ok((trace, covered))
+    }
+
+    /// Per-market coverage audit rows in catalog-id order (the columnar
+    /// twin of [`super::importer::coverage`]; `records` counts distinct
+    /// observation hours, since equal-hour runs collapse at seal time).
+    pub fn coverage(&self, catalog: &Catalog) -> Vec<MarketCoverage> {
+        let ids = market_ids(catalog);
+        let mut out: Vec<MarketCoverage> = self
+            .markets
+            .iter()
+            .filter_map(|c| {
+                let &id = ids.get(&c.key)?;
+                Some(MarketCoverage {
+                    market: id,
+                    records: c.ts.len(),
+                    first_hour: c.ts[0] as i64,
+                    last_hour: *c.ts.last().unwrap() as i64,
+                    largest_gap_h: c.ts.windows(2).map(|w| (w[1] - w[0]) as i64).max(),
+                })
+            })
+            .collect();
+        out.sort_by_key(|c| c.market);
+        out
+    }
+
+    // ---- snapshot ----------------------------------------------------
+
+    /// Serialize to the versioned snapshot format: magic, version,
+    /// market count, per-market `(key, n, hours, price-bits)` blocks in
+    /// key order, trailing FNV-1a-64 checksum over everything before
+    /// it.  All integers little-endian; prices stored as `f64` bits, so
+    /// save→load→save is byte-identical.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.markets.len() as u32).to_le_bytes());
+        for c in &self.markets {
+            out.extend_from_slice(&(c.key.len() as u32).to_le_bytes());
+            out.extend_from_slice(c.key.as_bytes());
+            out.extend_from_slice(&(c.ts.len() as u64).to_le_bytes());
+            for &t in &c.ts {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+            for &p in &c.px {
+                out.extend_from_slice(&p.to_bits().to_le_bytes());
+            }
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Deserialize and fully validate a snapshot: magic, version,
+    /// checksum, block bounds, key ordering and strictly-increasing
+    /// timestamps.  Every failure is a typed [`StoreError`] — corrupted
+    /// or truncated input never panics.
+    pub fn from_bytes(bytes: &[u8]) -> Result<PriceStore, StoreError> {
+        let min = MAGIC.len() + 4 + 4 + 8;
+        if bytes.len() < min {
+            return Err(StoreError::Truncated { need: min, have: bytes.len() });
+        }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            return Err(StoreError::BadMagic);
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let got = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let expected = fnv1a64(body);
+        if expected != got {
+            return Err(StoreError::Checksum { expected, got });
+        }
+        let mut cur = Cursor { b: body, pos: MAGIC.len() };
+        let version = cur.u32()?;
+        if version != VERSION {
+            return Err(StoreError::BadVersion(version));
+        }
+        let n_markets = cur.u32()? as usize;
+        let mut markets: Vec<MarketColumn> = Vec::new();
+        for _ in 0..n_markets {
+            let klen = cur.u32()? as usize;
+            let key = String::from_utf8(cur.take(klen)?.to_vec())
+                .map_err(|_| StoreError::Corrupt("market key is not utf-8".into()))?;
+            if let Some(prev) = markets.last() {
+                if prev.key >= key {
+                    return Err(StoreError::Corrupt(format!(
+                        "market keys out of order at '{key}'"
+                    )));
+                }
+            }
+            let n = cur.u64()? as usize;
+            if n == 0 {
+                return Err(StoreError::Corrupt(format!("market '{key}' has no samples")));
+            }
+            let mut ts: Vec<u64> = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let t = cur.u64()?;
+                if let Some(&prev) = ts.last() {
+                    if prev >= t {
+                        return Err(StoreError::Corrupt(format!(
+                            "timestamps not strictly increasing in '{key}'"
+                        )));
+                    }
+                }
+                ts.push(t);
+            }
+            let mut px: Vec<f64> = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                px.push(f64::from_bits(cur.u64()?));
+            }
+            markets.push(MarketColumn { key, ts, px });
+        }
+        if cur.pos != body.len() {
+            return Err(StoreError::Corrupt(format!(
+                "{} trailing bytes after the last market block",
+                body.len() - cur.pos
+            )));
+        }
+        Ok(PriceStore { markets })
+    }
+
+    /// Write the snapshot to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), StoreError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| StoreError::Io(format!("{}: {e}", path.display())))
+    }
+
+    /// Read and validate a snapshot from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<PriceStore, StoreError> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| StoreError::Io(format!("{}: {e}", path.display())))?;
+        PriceStore::from_bytes(&bytes)
+    }
+}
+
+/// Snapshot file magic (8 bytes).
+const MAGIC: &[u8; 8] = b"SIWOFTPS";
+/// Snapshot format version this build reads and writes.
+const VERSION: u32 = 1;
+
+/// FNV-1a, 64-bit — dependency-free integrity check for the snapshot
+/// trailer (not cryptographic; it guards against truncation and bit
+/// rot, not adversaries).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian reader over the snapshot body.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        if self.b.len() - self.pos < n {
+            return Err(StoreError::Truncated { need: self.pos + n, have: self.b.len() });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Everything that can go wrong reading or writing a snapshot file.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Filesystem error (path and OS message).
+    Io(String),
+    /// The file does not start with the snapshot magic.
+    BadMagic,
+    /// The file's format version is one this build does not read.
+    BadVersion(u32),
+    /// The file ends before a declared block does.
+    Truncated {
+        /// Bytes the declared blocks require.
+        need: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// The trailing checksum does not match the body.
+    Checksum {
+        /// Checksum recomputed over the body.
+        expected: u64,
+        /// Checksum stored in the trailer.
+        got: u64,
+    },
+    /// Structurally invalid contents (bad key order, empty column,
+    /// non-monotonic timestamps, trailing bytes).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(msg) => write!(f, "snapshot io: {msg}"),
+            StoreError::BadMagic => write!(f, "not a siwoft price-store snapshot (bad magic)"),
+            StoreError::BadVersion(v) => {
+                write!(f, "unsupported snapshot version {v} (this build reads {VERSION})")
+            }
+            StoreError::Truncated { need, have } => {
+                write!(f, "snapshot truncated: need {need} bytes, have {have}")
+            }
+            StoreError::Checksum { expected, got } => write!(
+                f,
+                "snapshot checksum mismatch: body hashes to {expected:016x}, trailer says {got:016x}"
+            ),
+            StoreError::Corrupt(msg) => write!(f, "snapshot corrupt: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+// ---------------------------------------------------------------------
+// synthetic history rendering
+// ---------------------------------------------------------------------
+
+/// Render a synthetic trace as a `describe-spot-price-history` JSON
+/// document (one record per market per hour, starting at
+/// `base_epoch_hour`) — the fixture generator behind `siwoft gen-traces
+/// --history-out`, the ingest benches and the bounded-memory test.
+/// Round trip: ingesting the rendered text and re-gridding reproduces
+/// `trace` bit-for-bit.
+pub fn render_history_json(catalog: &Catalog, trace: &PriceTrace, base_epoch_hour: i64) -> String {
+    let mut out = String::with_capacity(16 + trace.markets * trace.hours * 120);
+    out.push_str("{\"SpotPriceHistory\": [");
+    let mut first = true;
+    for hh in 0..trace.hours {
+        let ts = format_epoch_hours(base_epoch_hour + hh as i64);
+        for (id, spec) in catalog.markets.iter().enumerate() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n  {{\"AvailabilityZone\": \"{}{}\", \"InstanceType\": \"{}\", \
+                 \"SpotPrice\": \"{}\", \"Timestamp\": \"{}\"}}",
+                spec.region,
+                spec.az,
+                spec.instance.name,
+                trace.price(id, hh),
+                ts
+            ));
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::importer::{self, parse_timestamp_hours};
+
+    fn history_json() -> String {
+        r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:10:00.000Z",
+             "ProductDescription": "Linux/UNIX"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.04", "Timestamp": "2020-03-01T09:00:00.000Z"},
+            {"AvailabilityZone": "us-east-1b", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T02:00:00.000Z"},
+            {"AvailabilityZone": "zz-unknown-9z", "InstanceType": "x9.mega",
+             "SpotPrice": "1.0", "Timestamp": "2020-03-01T03:00:00.000Z"}
+        ]}"#
+        .to_string()
+    }
+
+    fn stream_all(text: &str, chunk: usize) -> (Vec<Sample>, Option<String>) {
+        let mut p = StreamParser::new();
+        let mut out: Vec<Sample> = Vec::new();
+        for c in text.as_bytes().chunks(chunk.max(1)) {
+            p.feed(c, &mut out).unwrap();
+        }
+        let token = p.finish().unwrap();
+        (out, token)
+    }
+
+    #[test]
+    fn streaming_matches_whole_file_parse() {
+        let text = history_json();
+        let whole = importer::parse_history(&text).unwrap();
+        for chunk in [1, 3, 7, 64, 4096] {
+            let (samples, token) = stream_all(&text, chunk);
+            assert_eq!(samples, whole, "chunk={chunk}");
+            assert_eq!(token, None);
+        }
+    }
+
+    #[test]
+    fn next_token_and_tricky_strings() {
+        // brackets/braces/escapes inside string values must not confuse
+        // the element splitter; an empty NextToken means final page
+        let text = r#"{"Note": "a ] } \" [ {", "SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:00:00Z",
+             "Tag": "w{e[i]r}d, \"quoted\""}
+        ], "NextToken": "tok-\"2\""}"#;
+        let (samples, token) = stream_all(text, 5);
+        assert_eq!(samples.len(), 1);
+        assert_eq!(token.as_deref(), Some("tok-\"2\""));
+        let empty = r#"{"SpotPriceHistory": [], "NextToken": ""}"#;
+        let mut p = StreamParser::new();
+        let mut out: Vec<Sample> = Vec::new();
+        p.feed(empty.as_bytes(), &mut out).unwrap();
+        assert_eq!(p.finish().unwrap(), None);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scalar_elements_and_partial_records_are_skipped() {
+        let text = r#"{"SpotPriceHistory": [1, "x", null,
+            {"InstanceType": "r5.large"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "zzz", "Timestamp": "2020-03-01T00:00:00Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.07", "Timestamp": "2020-03-01T01:00:00Z"}]}"#;
+        let (samples, _) = stream_all(text, 9);
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].price, 0.07);
+    }
+
+    #[test]
+    fn streaming_error_paths() {
+        let mut sink: Vec<Sample> = Vec::new();
+        // truncated inside the array
+        let mut p = StreamParser::new();
+        p.feed(br#"{"SpotPriceHistory": [{"a": 1}"#, &mut sink).unwrap();
+        assert!(matches!(p.finish(), Err(ImportError::Json(_))));
+        // missing array
+        let mut p = StreamParser::new();
+        p.feed(b"{}", &mut sink).unwrap();
+        let err = p.finish().unwrap_err();
+        assert!(err.to_string().contains("missing 'SpotPriceHistory'"), "{err}");
+        // trailing garbage after the document
+        let mut p = StreamParser::new();
+        p.feed(br#"{"SpotPriceHistory": []} x"#, &mut sink).unwrap();
+        assert!(matches!(p.finish(), Err(ImportError::Json(_))));
+        // duplicate top-level history keys (stricter than the legacy
+        // last-wins whole-document parse — documented corner)
+        let mut p = StreamParser::new();
+        let err = p
+            .feed(br#"{"SpotPriceHistory": [], "SpotPriceHistory": ["#, &mut sink)
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // a nested "SpotPriceHistory" key is shell, not history
+        let mut p = StreamParser::new();
+        p.feed(br#"{"outer": {"SpotPriceHistory": [1]}, "SpotPriceHistory": []}"#, &mut sink)
+            .unwrap();
+        assert_eq!(p.finish().unwrap(), None);
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn dedup_sink_keeps_first_exact_duplicate() {
+        let s = |p: f32, h: i64| Sample {
+            instance_type: "r5.large".into(),
+            zone: "us-east-1a".into(),
+            price: p,
+            epoch_hour: h,
+        };
+        let mut d = DedupSink::new(Vec::new());
+        d.push(s(0.05, 1));
+        d.push(s(0.05, 1)); // exact dup: dropped
+        d.push(s(0.06, 1)); // same hour, new price: kept
+        d.push(s(0.05, 2));
+        assert_eq!(d.into_inner().len(), 3);
+    }
+
+    #[test]
+    fn seal_sorts_collapses_and_rejects_pre_epoch() {
+        let s = |p: f32, h: i64| Sample {
+            instance_type: "r5.large".into(),
+            zone: "us-east-1a".into(),
+            price: p,
+            epoch_hour: h,
+        };
+        let mut b = StoreBuilder::new();
+        b.push(s(0.09, 9));
+        b.push(s(0.01, 1));
+        b.push(s(0.02, 1)); // equal hour: last observation wins
+        let store = b.seal().unwrap();
+        let col = store.market("r5.large|us-east-1a").unwrap();
+        assert_eq!(col.ts, vec![1, 9]);
+        assert_eq!(col.px, vec![0.02f32 as f64, 0.09f32 as f64]);
+        // LOCF + backfill semantics
+        assert_eq!(col.price_at(0), 0.02f32 as f64);
+        assert_eq!(col.price_at(1), 0.02f32 as f64);
+        assert_eq!(col.price_at(8), 0.02f32 as f64);
+        assert_eq!(col.price_at(100), 0.09f32 as f64);
+        assert_eq!(col.window(1, 9), (&[1u64, 9][..], &[0.02f32 as f64, 0.09f32 as f64][..]));
+        let (ts, px) = col.window(2, 8);
+        assert!(ts.is_empty() && px.is_empty());
+        // pre-1970 hours are a typed error at seal
+        let mut b = StoreBuilder::new();
+        b.push(s(0.05, -3));
+        assert!(matches!(b.seal(), Err(ImportError::Timestamp(_))));
+        // no samples at all
+        assert!(matches!(StoreBuilder::new().seal(), Err(ImportError::Empty)));
+    }
+
+    #[test]
+    fn store_grid_matches_importer_grid() {
+        let catalog = Catalog::full();
+        let samples = importer::parse_history(&history_json()).unwrap();
+        let (legacy, covered_l) = importer::to_trace(&catalog, &samples).unwrap();
+        let store = PriceStore::from_samples(&samples).unwrap();
+        let (columnar, covered_c) = store.to_trace(&catalog).unwrap();
+        assert_eq!(covered_c, covered_l);
+        assert_eq!(columnar.hours, legacy.hours);
+        assert_eq!(columnar.prices, legacy.prices, "grids must be bit-identical");
+        // span covers the unknown market's hours too (hour 3 exists)
+        assert_eq!(store.span(), Some((18322 * 24, 18322 * 24 + 9)));
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.n_samples(), 5);
+    }
+
+    #[test]
+    fn coverage_in_id_order_with_optional_gaps() {
+        let catalog = Catalog::full();
+        let samples = importer::parse_history(&history_json()).unwrap();
+        let store = PriceStore::from_samples(&samples).unwrap();
+        let cov = store.coverage(&catalog);
+        assert_eq!(cov, importer::coverage(&catalog, &samples));
+        assert_eq!(cov.len(), 2);
+        assert!(cov.windows(2).all(|w| w[0].market < w[1].market));
+        assert_eq!(cov[0].largest_gap_h, Some(5));
+        assert_eq!(cov[1].largest_gap_h, None, "single-record market has no gap");
+    }
+
+    #[test]
+    fn ingest_stitches_pages_and_tracks_peak() {
+        let page1 = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:00:00Z"}
+        ], "NextToken": "t2"}"#;
+        let page2 = r#"{"SpotPriceHistory": [
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:00:00Z"},
+            {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+             "SpotPrice": "0.06", "Timestamp": "2020-03-01T04:00:00Z"}
+        ]}"#;
+        let mut ing = Ingest::new();
+        ing.page_str(page1).unwrap();
+        ing.page_str(page2).unwrap();
+        assert_eq!(ing.pages(), 2);
+        let peak = ing.peak_buffered();
+        assert!(peak > 0 && peak < page2.len(), "peak {peak} must undercut the page size");
+        let store = ing.finish().unwrap();
+        // boundary duplicate collapsed
+        assert_eq!(store.n_samples(), 2);
+        // pagination contract: dangling token
+        let mut ing = Ingest::new();
+        ing.page_str(page1).unwrap();
+        let err = ing.finish().unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // missing continuation between pages
+        let mut ing = Ingest::new();
+        ing.page_str(page2).unwrap();
+        let err = ing.page_str(page1).unwrap_err();
+        assert!(err.to_string().contains("no NextToken"), "{err}");
+        // zero pages
+        assert!(matches!(Ingest::new().finish(), Err(ImportError::Empty)));
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_for_bit() {
+        let samples = importer::parse_history(&history_json()).unwrap();
+        let store = PriceStore::from_samples(&samples).unwrap();
+        let bytes = store.to_bytes();
+        let loaded = PriceStore::from_bytes(&bytes).unwrap();
+        assert_eq!(loaded, store);
+        assert_eq!(loaded.to_bytes(), bytes, "save→load→save must be byte-identical");
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption_with_typed_errors() {
+        let samples = importer::parse_history(&history_json()).unwrap();
+        let store = PriceStore::from_samples(&samples).unwrap();
+        let bytes = store.to_bytes();
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] ^= 0xff;
+        assert!(matches!(PriceStore::from_bytes(&b), Err(StoreError::BadMagic)));
+        // flipped body byte → checksum mismatch
+        let mut b = bytes.clone();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x01;
+        assert!(matches!(PriceStore::from_bytes(&b), Err(StoreError::Checksum { .. })));
+        // truncation anywhere → typed error, never a panic
+        for cut in [0, 5, 12, bytes.len() / 3, bytes.len() - 1] {
+            assert!(PriceStore::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // future version (re-checksummed so the version check is what fires)
+        let mut b = bytes[..bytes.len() - 8].to_vec();
+        b[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let sum = fnv1a64(&b);
+        b.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(PriceStore::from_bytes(&b), Err(StoreError::BadVersion(99))));
+        // non-monotonic timestamps (re-checksummed)
+        let mut b = bytes[..bytes.len() - 8].to_vec();
+        // first column block: [8 magic+..][4 ver][4 count][4 klen]; key
+        // "r5.large|us-east-1a" = 19 bytes; then n (u64), then hours
+        let key_off = 8 + 4 + 4 + 4;
+        let ts_off = key_off + 19 + 8;
+        let first = u64::from_le_bytes(b[ts_off..ts_off + 8].try_into().unwrap());
+        b[ts_off + 8..ts_off + 16].copy_from_slice(&first.to_le_bytes());
+        let sum = fnv1a64(&b);
+        b.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(PriceStore::from_bytes(&b), Err(StoreError::Corrupt(_))));
+    }
+
+    #[test]
+    fn rendered_history_round_trips_through_ingest() {
+        use crate::market::tracegen::TraceGenConfig;
+        let catalog = Catalog::with_limit(6);
+        let cfg = TraceGenConfig { months: 0.05, seed: 11, ..Default::default() };
+        let trace = crate::market::generate_traces(&catalog, &cfg);
+        let base = parse_timestamp_hours("2020-03-01T00:00:00Z").unwrap();
+        let text = render_history_json(&catalog, &trace, base);
+        let mut ing = Ingest::new();
+        ing.page_str(&text).unwrap();
+        let store = ing.finish().unwrap();
+        let (regrid, covered) = store.to_trace(&catalog).unwrap();
+        assert_eq!(covered, catalog.len());
+        assert_eq!(regrid.hours, trace.hours);
+        assert_eq!(regrid.prices, trace.prices, "render→ingest→grid must reproduce the trace");
+    }
+}

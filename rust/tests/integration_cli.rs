@@ -295,6 +295,62 @@ fn analyze_history_coverage_report() {
 }
 
 #[test]
+fn analyze_snapshot_round_trip_matches_json_path() {
+    // gen-traces --history-out → analyze --history --snapshot-out →
+    // analyze --snapshot: the two analyze runs must agree line-for-line
+    // once the source banners are dropped (the CI configs job re-runs
+    // this same loop against the shipped binary)
+    let dir = tmpdir("snapshot");
+    let hist = dir.join("history.json");
+    let sps = dir.join("store.sps");
+    let (_, err, ok) = run(&[
+        "gen-traces", "--markets", "12", "--months", "0.5", "--seed", "11", "--out",
+        dir.join("t.csv").to_str().unwrap(), "--history-out", hist.to_str().unwrap(),
+    ]);
+    assert!(ok, "gen-traces --history-out failed: {err}");
+
+    let (from_json, err, ok) = run(&[
+        "analyze", "--history", hist.to_str().unwrap(), "--coverage", "--native",
+        "--snapshot-out", sps.to_str().unwrap(),
+    ]);
+    assert!(ok, "analyze --history --snapshot-out failed: {err}");
+    assert!(sps.exists(), "snapshot not written");
+    assert!(from_json.contains("wrote snapshot"), "{from_json}");
+
+    let (from_snap, err, ok) =
+        run(&["analyze", "--snapshot", sps.to_str().unwrap(), "--coverage", "--native"]);
+    assert!(ok, "analyze --snapshot failed: {err}");
+    assert!(from_snap.contains("loaded snapshot"), "{from_snap}");
+
+    // drop the run-specific banner lines (source description, wall
+    // clock); everything else — coverage table, analytics, correlation
+    // summary — must be byte-identical
+    let strip = |s: &str| {
+        s.lines()
+            .filter(|l| {
+                !l.starts_with("imported")
+                    && !l.starts_with("loaded")
+                    && !l.starts_with("wrote")
+                    && !l.contains("elapsed")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(strip(&from_json), strip(&from_snap), "snapshot analyze diverged from JSON analyze");
+
+    // corrupted snapshot: typed rejection through the CLI, not a panic
+    let mut bytes = std::fs::read(&sps).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    let bad = dir.join("bad.sps");
+    std::fs::write(&bad, &bytes).unwrap();
+    let (_, err, ok) = run(&["analyze", "--snapshot", bad.to_str().unwrap(), "--native"]);
+    assert!(!ok, "corrupted snapshot must fail");
+    assert!(err.contains("checksum"), "want a checksum error, got: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn serve_load_small_n_beats_the_poll_floor() {
     use std::io::{BufRead, BufReader, Write};
     use std::net::{SocketAddr, TcpStream};
@@ -417,7 +473,7 @@ fn bench_area_emits_schema_tracked_json() {
     // {area, rows: [{case, workers, items_per_sec, p50_us, p99_us}],
     //  seed, git_rev} — pinned here so CI's bench-smoke artifacts stay
     // machine-comparable across PRs
-    for area in ["engine", "service"] {
+    for area in ["engine", "service", "ingest"] {
         let (out, err, ok) = run(&[
             "bench", "--area", area, "--markets", "48", "--months", "0.5", "--seed", "3",
             "--warmup-ms", "5", "--measure-ms", "20", "--out", "-",

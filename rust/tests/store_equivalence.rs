@@ -1,0 +1,326 @@
+//! Equivalence pins for the streaming ingest + columnar store
+//! (DESIGN.md §13): the chunked streaming parse must be bit-identical
+//! to the legacy whole-document JSON path on every fixture (including
+//! the two-page stitch corpus), snapshots must round-trip bit-for-bit
+//! through real files, corrupted/truncated snapshots must fail with
+//! typed errors (never a panic), and an analyze grid built from JSON
+//! history must equal one built from a snapshot byte-for-byte.
+//!
+//! The oracle below is the pre-store whole-document parse, kept
+//! verbatim *in this file* so it stays independent of the streaming
+//! machinery `importer::parse_history` now routes through.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::PathBuf;
+
+use siwoft::market::importer::{self, parse_timestamp_hours, Sample};
+use siwoft::market::store::{
+    render_history_json, DedupSink, Ingest, PriceStore, StoreError, StreamParser, CHUNK_BYTES,
+};
+use siwoft::market::{Catalog, TraceGenConfig};
+use siwoft::util::json::Json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("siwoft_store_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The legacy whole-document parse (how `parse_history` worked before
+/// the streaming path existed), plus the exact-duplicate rule both
+/// paths now share.  Deliberately NOT routed through `market::store`.
+fn oracle_parse_page(text: &str) -> (Vec<Sample>, Option<String>) {
+    let j = Json::parse(text).expect("oracle: document parses");
+    let arr = j.get("SpotPriceHistory").and_then(Json::as_arr).expect("oracle: history array");
+    let mut out: Vec<Sample> = Vec::new();
+    let mut seen: BTreeSet<(String, String, i64, u32)> = BTreeSet::new();
+    for item in arr {
+        let get = |k: &str| item.get(k).and_then(Json::as_str);
+        let (Some(ty), Some(zone), Some(price), Some(ts)) = (
+            get("InstanceType"),
+            get("AvailabilityZone"),
+            get("SpotPrice"),
+            get("Timestamp"),
+        ) else {
+            continue;
+        };
+        let Ok(price) = price.parse::<f32>() else { continue };
+        let s = Sample {
+            instance_type: ty.to_string(),
+            zone: zone.to_string(),
+            price,
+            epoch_hour: parse_timestamp_hours(ts).expect("oracle: timestamp"),
+        };
+        if seen.insert((s.instance_type.clone(), s.zone.clone(), s.epoch_hour, s.price.to_bits()))
+        {
+            out.push(s);
+        }
+    }
+    let token = j
+        .get("NextToken")
+        .and_then(Json::as_str)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string);
+    (out, token)
+}
+
+/// Stream `text` through the chunked parser with the given chunk size.
+fn stream_page(text: &str, chunk: usize) -> (Vec<Sample>, Option<String>) {
+    let mut parser = StreamParser::new();
+    let mut sink = DedupSink::new(Vec::new());
+    for c in text.as_bytes().chunks(chunk.max(1)) {
+        parser.feed(c, &mut sink).unwrap();
+    }
+    let token = parser.finish().unwrap();
+    (sink.into_inner(), token)
+}
+
+/// Every single-page fixture the suite pins: the classic import corpus,
+/// partial/duplicate records, offset-bearing timestamps, tricky
+/// strings, and each half of the two-page stitch corpus.
+fn fixtures() -> Vec<(&'static str, String)> {
+    let single = r#"{"SpotPriceHistory": [
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:10:00.000Z",
+         "ProductDescription": "Linux/UNIX"},
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"},
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.04", "Timestamp": "2020-03-01T09:00:00.000Z"},
+        {"AvailabilityZone": "us-east-1b", "InstanceType": "r5.large",
+         "SpotPrice": "0.06", "Timestamp": "2020-03-01T02:00:00.000Z"},
+        {"AvailabilityZone": "zz-unknown-9z", "InstanceType": "x9.mega",
+         "SpotPrice": "1.0", "Timestamp": "2020-03-01T03:00:00.000Z"}
+    ]}"#;
+    let messy = r#"{"Note": "a ] } \" [ {", "SpotPriceHistory": [
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:00:00Z",
+         "Tag": "w{e[i]r}d, \"quoted\""},
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:00:00Z"},
+        {"InstanceType": "r5.large"},
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "not-a-price", "Timestamp": "2020-03-01T01:00:00Z"},
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.07", "Timestamp": "2020-03-01T04:15:00+02:00"}
+    ], "NextToken": "tok-\"2\""}"#;
+    let (page1, page2) = stitch_pages();
+    vec![
+        ("single", single.to_string()),
+        ("messy", messy.to_string()),
+        ("page1", page1),
+        ("page2", page2),
+    ]
+}
+
+/// The two-page stitch corpus: boundary record repeated on both pages.
+fn stitch_pages() -> (String, String) {
+    let page1 = r#"{"SpotPriceHistory": [
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.05", "Timestamp": "2020-03-01T00:10:00.000Z"},
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"}
+    ], "NextToken": "page-2-token"}"#;
+    let page2 = r#"{"SpotPriceHistory": [
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.20", "Timestamp": "2020-03-01T05:30:00.000Z"},
+        {"AvailabilityZone": "us-east-1a", "InstanceType": "r5.large",
+         "SpotPrice": "0.04", "Timestamp": "2020-03-01T09:00:00.000Z"},
+        {"AvailabilityZone": "us-east-1b", "InstanceType": "r5.large",
+         "SpotPrice": "0.06", "Timestamp": "2020-03-01T02:00:00.000Z"}
+    ]}"#;
+    (page1.to_string(), page2.to_string())
+}
+
+#[test]
+fn streaming_parse_equals_legacy_oracle_on_every_fixture() {
+    for (name, text) in fixtures() {
+        let (want, want_token) = oracle_parse_page(&text);
+        for chunk in [1, 2, 3, 17, 64, CHUNK_BYTES] {
+            let (got, token) = stream_page(&text, chunk);
+            assert_eq!(got, want, "{name}: samples diverge at chunk={chunk}");
+            assert_eq!(token, want_token, "{name}: token diverges at chunk={chunk}");
+        }
+        // the public whole-file API is the same machinery
+        if want_token.is_none() {
+            assert_eq!(importer::parse_history(&text).unwrap(), want, "{name}");
+        }
+    }
+}
+
+#[test]
+fn two_page_stitch_equals_oracle_with_boundary_dedup() {
+    let (p1, p2) = stitch_pages();
+    let (mut want, _) = oracle_parse_page(&p1);
+    let (tail, _) = oracle_parse_page(&p2);
+    let mut seen: BTreeSet<(String, String, i64, u32)> = want
+        .iter()
+        .map(|s| (s.instance_type.clone(), s.zone.clone(), s.epoch_hour, s.price.to_bits()))
+        .collect();
+    for s in tail {
+        if seen.insert((s.instance_type.clone(), s.zone.clone(), s.epoch_hour, s.price.to_bits()))
+        {
+            want.push(s);
+        }
+    }
+    let stitched = importer::parse_history_pages(&[p1.clone(), p2.clone()]).unwrap();
+    assert_eq!(stitched, want, "stitch must equal oracle + boundary dedup");
+
+    // the streaming Ingest grids identically to the legacy sample path
+    let catalog = Catalog::full();
+    let mut ing = Ingest::new();
+    ing.page_str(&p1).unwrap();
+    ing.page_str(&p2).unwrap();
+    let store = ing.finish().unwrap();
+    let (streamed, covered_s) = store.to_trace(&catalog).unwrap();
+    let (legacy, covered_l) = importer::to_trace(&catalog, &stitched).unwrap();
+    assert_eq!(covered_s, covered_l);
+    assert_eq!(streamed.prices, legacy.prices, "stitched grids must be bit-identical");
+}
+
+#[test]
+fn snapshot_file_round_trips_bit_for_bit() {
+    let dir = tmpdir("roundtrip");
+    let path = dir.join("store.sps");
+    let (_, page2) = stitch_pages();
+    let mut ing = Ingest::new();
+    ing.page_str(&page2).unwrap();
+    let store = ing.finish().unwrap();
+    store.save(&path).unwrap();
+    let loaded = PriceStore::load(&path).unwrap();
+    assert_eq!(loaded, store, "snapshot load must reproduce the store exactly");
+    assert_eq!(loaded.to_bytes(), store.to_bytes(), "save→load→save must be byte-identical");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupted_and_truncated_snapshots_fail_typed_never_panic() {
+    let dir = tmpdir("corrupt");
+    let (_, page2) = stitch_pages();
+    let mut ing = Ingest::new();
+    ing.page_str(&page2).unwrap();
+    let store = ing.finish().unwrap();
+    let bytes = store.to_bytes();
+
+    // flipped byte anywhere in the body → checksum error from disk
+    let flipped = dir.join("flipped.sps");
+    let mut b = bytes.clone();
+    let mid = b.len() / 2;
+    b[mid] ^= 0x40;
+    std::fs::write(&flipped, &b).unwrap();
+    assert!(matches!(PriceStore::load(&flipped), Err(StoreError::Checksum { .. })));
+
+    // truncation at every interesting boundary → typed error, no panic
+    for cut in [0, 3, 8, 15, bytes.len() / 2, bytes.len() - 1] {
+        let t = dir.join(format!("trunc_{cut}.sps"));
+        std::fs::write(&t, &bytes[..cut]).unwrap();
+        let err = PriceStore::load(&t).expect_err("truncated snapshot must not load");
+        assert!(
+            matches!(
+                err,
+                StoreError::Truncated { .. } | StoreError::Checksum { .. } | StoreError::BadMagic
+            ),
+            "cut={cut}: unexpected error {err}"
+        );
+    }
+
+    // not a snapshot at all
+    let junk = dir.join("junk.sps");
+    let mut f = std::fs::File::create(&junk).unwrap();
+    f.write_all(b"definitely not a snapshot, but comfortably past the minimum length")
+        .unwrap();
+    drop(f);
+    assert!(matches!(PriceStore::load(&junk), Err(StoreError::BadMagic)));
+
+    // missing file is an Io error, not a panic
+    assert!(matches!(
+        PriceStore::load(dir.join("does-not-exist.sps")),
+        Err(StoreError::Io(_))
+    ));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn analyze_grid_from_snapshot_equals_grid_from_json() {
+    let dir = tmpdir("grid");
+    let catalog = Catalog::full();
+    let (p1, p2) = stitch_pages();
+    let mut ing = Ingest::new();
+    ing.page_str(&p1).unwrap();
+    ing.page_str(&p2).unwrap();
+    let store = ing.finish().unwrap();
+    let (from_json, covered_j) = store.to_trace(&catalog).unwrap();
+
+    let path = dir.join("grid.sps");
+    store.save(&path).unwrap();
+    let (from_snap, covered_s) = PriceStore::load(&path).unwrap().to_trace(&catalog).unwrap();
+    assert_eq!(covered_j, covered_s);
+    assert_eq!(from_json.hours, from_snap.hours);
+    assert_eq!(from_json.prices, from_snap.prices, "JSON and snapshot grids must be bit-identical");
+
+    // and both equal the legacy import_pages adapter
+    let (legacy, covered_l) = importer::import_pages(&catalog, &[p1, p2]).unwrap();
+    assert_eq!(covered_l, covered_j);
+    assert_eq!(legacy.prices, from_json.prices);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn shared_store_serves_concurrent_readers() {
+    let (_, page2) = stitch_pages();
+    let mut ing = Ingest::new();
+    ing.page_str(&page2).unwrap();
+    let store = ing.finish().unwrap();
+    let (lo, hi) = store.span().unwrap();
+    let want: Vec<f64> =
+        (lo..=hi).map(|h| store.price_at("r5.large|us-east-1a", h).unwrap()).collect();
+    let shared = store.into_shared();
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let s = std::sync::Arc::clone(&shared);
+        handles.push(std::thread::spawn(move || {
+            (lo..=hi).map(|h| s.price_at("r5.large|us-east-1a", h).unwrap()).collect::<Vec<f64>>()
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), want, "every reader sees the same sealed columns");
+    }
+}
+
+#[test]
+fn multi_mb_ingest_is_bounded_by_chunk_size_not_file_size() {
+    // acceptance pin: peak ingest memory tracks the chunk/record scale,
+    // not the (multi-megabyte) file size
+    let dir = tmpdir("bounded");
+    let catalog = Catalog::with_limit(16);
+    let cfg = TraceGenConfig { months: 2.0, seed: 9, ..Default::default() };
+    let trace = siwoft::market::generate_traces(&catalog, &cfg);
+    let base = parse_timestamp_hours("2020-03-01T00:00Z").unwrap();
+    let text = render_history_json(&catalog, &trace, base);
+    assert!(
+        text.len() > 2 * 1024 * 1024,
+        "fixture must be multi-MB, got {} bytes",
+        text.len()
+    );
+    let path = dir.join("big_history.json");
+    std::fs::write(&path, &text).unwrap();
+
+    let mut ing = Ingest::new();
+    ing.page_from_reader(std::fs::File::open(&path).unwrap()).unwrap();
+    let peak = ing.peak_buffered();
+    let store = ing.finish().unwrap();
+    assert!(
+        peak < 4096,
+        "parser buffered {peak} bytes against a {} byte file — streaming is broken",
+        text.len()
+    );
+    assert_eq!(store.len(), catalog.len());
+    assert_eq!(store.n_samples(), catalog.len() * trace.hours);
+
+    // and the full-fidelity pin: re-gridding reproduces the source trace
+    let (regrid, covered) = store.to_trace(&catalog).unwrap();
+    assert_eq!(covered, catalog.len());
+    assert_eq!(regrid.prices, trace.prices, "render→stream→grid must reproduce the trace");
+    std::fs::remove_dir_all(dir).ok();
+}

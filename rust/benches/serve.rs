@@ -1,7 +1,9 @@
 //! Bench: control-plane load test — N concurrent connections × M
-//! submits against an in-process `siwoft serve`, plus the sequential
-//! accept-latency probe.  These are the §Perf numbers for the serving
-//! path (EXPERIMENTS.md).
+//! submits against an in-process `siwoft serve`, the sequential
+//! accept-latency probe, a sustained session churn (hundreds of named
+//! sessions created, submitted into, and deleted; DESIGN.md §14), and
+//! the snapshot hot/cold reuse cycle.  These are the §Perf numbers for
+//! the serving path (EXPERIMENTS.md).
 //!
 //!     cargo bench --bench serve
 
@@ -15,7 +17,11 @@ use siwoft::util::stats::p50_p99;
 
 fn main() {
     let world = World::generate(48, 1.0, 7);
-    let server = Arc::new(Server::new(Coordinator::new(world, AnalyticsEngine::native(), 0)));
+    let snap_dir = std::env::temp_dir().join(format!("siwoft-bench-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&snap_dir);
+    let server = Arc::new(
+        Server::new(Coordinator::new(world, AnalyticsEngine::native(), 0)).snapshot_dir(&snap_dir),
+    );
     let (tx, rx) = std::sync::mpsc::channel();
     let s2 = server.clone();
     let serve_thread = std::thread::spawn(move || {
@@ -74,7 +80,58 @@ fn main() {
         String::new(),
     ]);
 
+    println!("\n== session churn (create -> cold submit -> hot submits -> delete) ==");
+    println!(
+        "  {:<32} {:>12} {:>12} {:>12} {:>13}",
+        "scenario", "cold p50", "hot p50", "hot p99", "sessions/s"
+    );
+    // hundreds of sessions: every round trains one predictive fit cold,
+    // then reuses it hot — the contrast IS the subsystem's point
+    for (conns, rounds, submits) in [(4usize, 32usize, 4usize), (8, 32, 4)] {
+        let r = loadgen::run_session_load(addr, conns, rounds, submits).expect("session load");
+        let (cold_p50, _) = r.cold_p50_p99_ms();
+        let (hot_p50, hot_p99) = r.hot_p50_p99_ms();
+        println!(
+            "  {:<32} {:>9.3} ms {:>9.3} ms {:>9.3} ms  {:>12}",
+            format!("{conns} conns x {rounds} sessions x {submits}"),
+            cold_p50,
+            hot_p50,
+            hot_p99,
+            fmt_rate(r.throughput_per_s())
+        );
+        rows.push(vec![
+            format!("session_churn_{conns}x{rounds}"),
+            r.total_sessions().to_string(),
+            format!("{:.4}", hot_p50),
+            format!("{:.4}", hot_p99),
+            format!("{:.4}", cold_p50),
+            String::new(),
+            format!("{:.1}", r.throughput_per_s()),
+        ]);
+    }
+
+    // mixed hot/cold snapshot reuse: cold = train on first submit, hot =
+    // the same session restored from its .sss snapshot (zero retrains)
+    let (cold, hot) = loadgen::run_snapshot_reuse(addr, 32, "reuse").expect("snapshot reuse");
+    let (cold_p50, cold_p99) = p50_p99(&cold);
+    let (hot_p50, hot_p99) = p50_p99(&hot);
+    println!("\n== snapshot reuse (32 cycles: save -> evict -> load -> submit) ==");
+    println!(
+        "  {:<32} {:>9.3} ms {:>9.3} ms   (cold: {:.3} ms p50 / {:.3} ms p99)",
+        "hot submit after snapshot load", hot_p50, hot_p99, cold_p50, cold_p99
+    );
+    rows.push(vec![
+        "snapshot_reuse".to_string(),
+        cold.len().to_string(),
+        format!("{:.4}", hot_p50),
+        format!("{:.4}", hot_p99),
+        format!("{:.4}", cold_p50),
+        format!("{:.4}", cold_p99),
+        String::new(),
+    ]);
+
     server.request_shutdown();
     serve_thread.join().unwrap();
+    let _ = std::fs::remove_dir_all(&snap_dir);
     siwoft::util::csvio::write_file("results/bench_serve.csv", &rows).ok();
 }

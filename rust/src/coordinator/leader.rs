@@ -10,9 +10,10 @@ use std::time::Instant;
 use super::metrics::Metrics;
 use super::pool::Pool;
 use crate::job::Job;
+use crate::market::analytics::SurvivalCurves;
 use crate::policy::PSiwoftConfig;
 use crate::runtime::AnalyticsEngine;
-use crate::scenario::Scenario;
+use crate::scenario::{Scenario, SweepRow};
 use crate::sim::{AggregateResult, JobResult, RunConfig, World};
 use crate::util::error::Result;
 
@@ -138,6 +139,60 @@ impl Coordinator {
         r
     }
 
+    /// Run one (job, arm) simulation inside a session (DESIGN.md §14):
+    /// the job starts at the session's `start_t` in the session's
+    /// `world`, and a `Predictive` arm reuses the session's cached
+    /// survival-curve fit instead of retraining on the request path.
+    /// With a fit obtained from `PolicyKind::train_survival_curves`
+    /// over the same (world, start_t), the result is bit-identical to
+    /// an un-cached run.
+    pub fn run_one_in_session(
+        &self,
+        job: &Job,
+        arm: &Arm,
+        cfg: &RunConfig,
+        seed: u64,
+        world: &World,
+        start_t: f64,
+        curves: &SurvivalCurves,
+    ) -> JobResult {
+        let t0 = Instant::now();
+        // `with_curves` last: `config`/`start_t` invalidate the cache
+        let scen = Scenario::on(world)
+            .job(job.clone())
+            .policy(arm.policy)
+            .ft(arm.ft)
+            .config(*cfg)
+            .start_t(start_t)
+            .seed(seed);
+        let scen = match arm.policy {
+            PolicyKind::Predictive(_) => scen.with_curves(curves.clone()),
+            _ => scen,
+        };
+        let r = scen.run();
+        self.record(&r, t0);
+        r
+    }
+
+    /// Record every run of a finished session sweep in the coordinator
+    /// metrics (`scenario::Sweep` itself never touches metrics; the
+    /// serve path calls this after `Sweep::run`).
+    pub fn record_sweep(&self, rows: &[SweepRow], t0: Instant) {
+        Metrics::add(&self.metrics.decision_us, t0.elapsed().as_micros() as u64);
+        for row in rows {
+            for r in &row.runs {
+                Metrics::add(&self.metrics.decisions, r.sessions as u64);
+                Metrics::add(&self.metrics.revocations, r.revocations as u64);
+                Metrics::inc(&self.metrics.jobs_submitted);
+                if r.completed {
+                    Metrics::inc(&self.metrics.jobs_completed);
+                } else {
+                    Metrics::inc(&self.metrics.jobs_failed);
+                }
+            }
+        }
+    }
+
     /// Run a job under an arm across `seeds` seeds, aggregated (one
     /// bar).  One scenario is shared across the seeds, so per-point
     /// state (e.g. a `Predictive` arm's survival-curve fit) is trained
@@ -210,6 +265,27 @@ mod tests {
         for (a, b) in par.iter().zip(&ser) {
             assert_eq!(a.ledger, b.ledger, "parallel != serial for job {}", a.job.id);
         }
+    }
+
+    #[test]
+    fn session_run_matches_uncached_scenario() {
+        let c = coordinator();
+        let job = Job::new(3, 2.0, 16.0);
+        let arm =
+            Arm { label: "api", policy: PolicyKind::parse("predictive").unwrap(), ft: FtKind::None };
+        let start = 400.0; // inside the 720 h trace
+        let curves = PolicyKind::train_survival_curves(&c.world, start);
+        let cached =
+            c.run_one_in_session(&job, &arm, &RunConfig::default(), 5, &c.world, start, &curves);
+        let fresh = Scenario::on(&c.world)
+            .job(job)
+            .policy(arm.policy)
+            .ft(arm.ft)
+            .start_t(start)
+            .seed(5)
+            .run();
+        assert_eq!(cached.ledger, fresh.ledger, "cached fit changed the result");
+        assert_eq!(c.metrics.jobs_submitted.load(std::sync::atomic::Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::err;
 use crate::util::error::Result;
-use crate::util::stats::{percentile, sort_samples};
+use crate::util::stats::{p50_p99, percentile, sort_samples};
 
 /// A trivial-but-real submit: runs an actual (fast) on-demand
 /// simulation on the server, so latencies cover parse → simulate →
@@ -112,6 +112,202 @@ pub fn run_load(addr: SocketAddr, conns: usize, submits_per_conn: usize) -> Resu
     Ok(LoadReport { conns, submits_per_conn, wall_s, submit_ms, first_reply_ms })
 }
 
+/// Aggregate of one session-mode load run (DESIGN.md §14).  Latency
+/// vectors are sorted ascending; the cold/hot split is the headline —
+/// a cold submit pays the Predictive training cost, a hot submit reads
+/// the session's cached fit.
+#[derive(Clone, Debug)]
+pub struct SessionLoadReport {
+    /// Concurrent client connections.
+    pub conns: usize,
+    /// create → submits → delete cycles per connection.
+    pub rounds: usize,
+    /// Submits per session (first is cold, the rest hot).
+    pub submits_per_session: usize,
+    /// Wall-clock duration of the whole run (seconds).
+    pub wall_s: f64,
+    /// `session create` round-trips (ms), sorted
+    pub create_ms: Vec<f64>,
+    /// first submit per session — pays the training cost (ms), sorted
+    pub cold_submit_ms: Vec<f64>,
+    /// later submits per session — cached fit (ms), sorted
+    pub hot_submit_ms: Vec<f64>,
+    /// `session delete` round-trips (ms), sorted
+    pub delete_ms: Vec<f64>,
+}
+
+impl SessionLoadReport {
+    /// Sessions created (and deleted) across the run.
+    pub fn total_sessions(&self) -> usize {
+        self.conns * self.rounds
+    }
+    /// Submits completed per wall-clock second (cold + hot).
+    pub fn throughput_per_s(&self) -> f64 {
+        (self.cold_submit_ms.len() + self.hot_submit_ms.len()) as f64 / self.wall_s
+    }
+    /// (p50, p99) of cold (training) submits, ms.
+    pub fn cold_p50_p99_ms(&self) -> (f64, f64) {
+        p50_p99(&self.cold_submit_ms)
+    }
+    /// (p50, p99) of hot (cached) submits, ms.
+    pub fn hot_p50_p99_ms(&self) -> (f64, f64) {
+        p50_p99(&self.hot_submit_ms)
+    }
+    /// (p50, p99) of `session create` round-trips, ms.
+    pub fn create_p50_p99_ms(&self) -> (f64, f64) {
+        p50_p99(&self.create_ms)
+    }
+}
+
+/// Drive the session lifecycle under load: `conns` concurrent
+/// connections, each doing `rounds` cycles of session create →
+/// `submits_per_session` Predictive submits (the first is the cold,
+/// training one) → session delete.  Session names are
+/// `load-<conn>-<round>`, disjoint across connections.
+pub fn run_session_load(
+    addr: SocketAddr,
+    conns: usize,
+    rounds: usize,
+    submits_per_session: usize,
+) -> Result<SessionLoadReport> {
+    assert!(conns >= 1 && rounds >= 1 && submits_per_session >= 1);
+    let t0 = Instant::now();
+    let mut threads = Vec::with_capacity(conns);
+    for conn_id in 0..conns {
+        threads.push(std::thread::spawn(
+            move || -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> {
+                let mut writer = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
+                writer.set_nodelay(true).ok();
+                let mut reader = BufReader::new(writer.try_clone()?);
+                let mut create = Vec::with_capacity(rounds);
+                let mut cold = Vec::with_capacity(rounds);
+                let mut hot = Vec::with_capacity(rounds * (submits_per_session - 1));
+                let mut delete = Vec::with_capacity(rounds);
+                for round in 0..rounds {
+                    let name = format!("load-{conn_id}-{round}");
+                    let timed = |writer: &mut TcpStream,
+                                 reader: &mut BufReader<TcpStream>,
+                                 line: &str|
+                     -> Result<f64> {
+                        let t = Instant::now();
+                        round_trip(writer, reader, line)?;
+                        Ok(t.elapsed().as_secs_f64() * 1e3)
+                    };
+                    create.push(timed(
+                        &mut writer,
+                        &mut reader,
+                        &format!(r#"{{"cmd":"session","op":"create","name":"{name}"}}"#),
+                    )?);
+                    let submit = format!(
+                        r#"{{"cmd":"submit","session":"{name}","len_h":1,"mem_gb":8,"policy":"predictive","ft":"none"}}"#
+                    );
+                    cold.push(timed(&mut writer, &mut reader, &submit)?);
+                    for _ in 1..submits_per_session {
+                        hot.push(timed(&mut writer, &mut reader, &submit)?);
+                    }
+                    delete.push(timed(
+                        &mut writer,
+                        &mut reader,
+                        &format!(r#"{{"cmd":"session","op":"delete","name":"{name}"}}"#),
+                    )?);
+                }
+                Ok((create, cold, hot, delete))
+            },
+        ));
+    }
+    let mut create_ms = Vec::new();
+    let mut cold_submit_ms = Vec::new();
+    let mut hot_submit_ms = Vec::new();
+    let mut delete_ms = Vec::new();
+    for t in threads {
+        let (create, cold, hot, delete) =
+            t.join().map_err(|_| err!("session-load connection panicked"))??;
+        create_ms.extend(create);
+        cold_submit_ms.extend(cold);
+        hot_submit_ms.extend(hot);
+        delete_ms.extend(delete);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    sort_samples(&mut create_ms);
+    sort_samples(&mut cold_submit_ms);
+    sort_samples(&mut hot_submit_ms);
+    sort_samples(&mut delete_ms);
+    Ok(SessionLoadReport {
+        conns,
+        rounds,
+        submits_per_session,
+        wall_s,
+        create_ms,
+        cold_submit_ms,
+        hot_submit_ms,
+        delete_ms,
+    })
+}
+
+/// One hot/cold snapshot-reuse cycle (sequential, one connection):
+/// create a session, submit cold (trains), `snapshot save`, delete the
+/// session, `snapshot load` (pre-trained), submit hot, then clean up
+/// the session and the snapshot file.  Returns sorted
+/// `(cold_submit_ms, hot_submit_ms)` over `cycles` repetitions — the
+/// server must have been started with a snapshot dir.
+pub fn run_snapshot_reuse(
+    addr: SocketAddr,
+    cycles: usize,
+    prefix: &str,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    assert!(cycles >= 1);
+    let mut writer = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
+    writer.set_nodelay(true).ok();
+    let mut reader = BufReader::new(writer.try_clone()?);
+    let mut cold = Vec::with_capacity(cycles);
+    let mut hot = Vec::with_capacity(cycles);
+    for cycle in 0..cycles {
+        let name = format!("{prefix}-{cycle}");
+        let submit = format!(
+            r#"{{"cmd":"submit","session":"{name}","len_h":1,"mem_gb":8,"policy":"predictive","ft":"none"}}"#
+        );
+        round_trip(
+            &mut writer,
+            &mut reader,
+            &format!(r#"{{"cmd":"session","op":"create","name":"{name}"}}"#),
+        )?;
+        let t = Instant::now();
+        round_trip(&mut writer, &mut reader, &submit)?;
+        cold.push(t.elapsed().as_secs_f64() * 1e3);
+        round_trip(
+            &mut writer,
+            &mut reader,
+            &format!(r#"{{"cmd":"snapshot","op":"save","name":"{name}"}}"#),
+        )?;
+        round_trip(
+            &mut writer,
+            &mut reader,
+            &format!(r#"{{"cmd":"session","op":"delete","name":"{name}"}}"#),
+        )?;
+        round_trip(
+            &mut writer,
+            &mut reader,
+            &format!(r#"{{"cmd":"snapshot","op":"load","name":"{name}"}}"#),
+        )?;
+        let t = Instant::now();
+        round_trip(&mut writer, &mut reader, &submit)?;
+        hot.push(t.elapsed().as_secs_f64() * 1e3);
+        round_trip(
+            &mut writer,
+            &mut reader,
+            &format!(r#"{{"cmd":"session","op":"delete","name":"{name}"}}"#),
+        )?;
+        round_trip(
+            &mut writer,
+            &mut reader,
+            &format!(r#"{{"cmd":"snapshot","op":"delete","name":"{name}"}}"#),
+        )?;
+    }
+    sort_samples(&mut cold);
+    sort_samples(&mut hot);
+    Ok((cold, hot))
+}
+
 /// Sequential fresh-connection probe: each sample opens a new
 /// connection against an otherwise idle server and times connect →
 /// first `status` reply, so the measurement is dominated by accept
@@ -171,6 +367,51 @@ mod tests {
         assert!(report.throughput_per_s() > 0.0);
         server.request_shutdown();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn session_load_partitions_cold_and_hot() {
+        let (server, addr, t) = spawn_server();
+        let report = run_session_load(addr, 2, 2, 3).unwrap();
+        assert_eq!(report.total_sessions(), 4);
+        assert_eq!(report.create_ms.len(), 4);
+        assert_eq!(report.cold_submit_ms.len(), 4);
+        assert_eq!(report.hot_submit_ms.len(), 4 * 2);
+        assert_eq!(report.delete_ms.len(), 4);
+        let (cold_p50, cold_p99) = report.cold_p50_p99_ms();
+        assert!(cold_p50 > 0.0 && cold_p50 <= cold_p99 * 1.001);
+        assert!(report.throughput_per_s() > 0.0);
+        // every session deleted itself: the registry is empty again
+        assert_eq!(server.registry().len(), 0);
+        server.request_shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn snapshot_reuse_cycles_clean_up_after_themselves() {
+        let dir = std::env::temp_dir().join(format!("siwoft-reuse-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let world = World::generate(16, 0.5, 99);
+        let server = Arc::new(
+            Server::new(Coordinator::new(world, AnalyticsEngine::native(), 2))
+                .snapshot_dir(&dir),
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s2 = server.clone();
+        let t = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let (cold, hot) = run_snapshot_reuse(addr, 2, "warm").unwrap();
+        assert_eq!(cold.len(), 2);
+        assert_eq!(hot.len(), 2);
+        assert!(cold[0] > 0.0 && hot[0] > 0.0);
+        assert_eq!(server.registry().len(), 0, "sessions leaked");
+        server.request_shutdown();
+        t.join().unwrap();
+        let leftovers = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
+        assert_eq!(leftovers, 0, "snapshot files leaked");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

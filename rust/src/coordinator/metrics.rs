@@ -24,6 +24,23 @@ pub struct Metrics {
     pub analytics_epochs: AtomicU64,
     /// microseconds spent in policy decisions (sum)
     pub decision_us: AtomicU64,
+    /// Sessions created via `session create`.
+    pub sessions_created: AtomicU64,
+    /// Sessions installed from snapshots via `snapshot load`.
+    pub sessions_loaded: AtomicU64,
+    /// Sessions evicted by the registry's LRU capacity cap.
+    pub sessions_evicted: AtomicU64,
+    /// Sessions removed via `session delete`.
+    pub sessions_deleted: AtomicU64,
+    /// Predictive survival-curve fits performed for sessions (the
+    /// number `tests/session_equivalence.rs` pins at one per session).
+    pub session_curve_trains: AtomicU64,
+    /// Submit-class requests bounced by a connection's token bucket.
+    pub rate_limited_rejects: AtomicU64,
+    /// Monotonic admission counter: one tick per submit-class request
+    /// attempted anywhere on the server — the deterministic clock the
+    /// token buckets refill against (DESIGN.md §14).
+    pub admission_ticks: AtomicU64,
 }
 
 impl Metrics {
@@ -46,6 +63,16 @@ impl Metrics {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    #[inline]
+    /// Advance a monotonic tick counter, returning the pre-increment
+    /// value.  Used for the admission clock: ticks only order the token
+    /// buckets' refill math, so cross-thread skew of a tick is
+    /// harmless.
+    pub fn tick(counter: &AtomicU64) -> u64 {
+        // ordering: standalone stats counter — no memory published
+        counter.fetch_add(1, Ordering::Relaxed)
+    }
+
     /// Snapshot every counter into a JSON object.
     pub fn snapshot(&self) -> Json {
         // ordering: stats counter reads; snapshots tolerate cross-counter skew by design
@@ -59,6 +86,13 @@ impl Metrics {
             ("ondemand_fallbacks", g(&self.ondemand_fallbacks)),
             ("analytics_epochs", g(&self.analytics_epochs)),
             ("decision_us_total", g(&self.decision_us)),
+            ("sessions_created", g(&self.sessions_created)),
+            ("sessions_loaded", g(&self.sessions_loaded)),
+            ("sessions_evicted", g(&self.sessions_evicted)),
+            ("sessions_deleted", g(&self.sessions_deleted)),
+            ("session_curve_trains", g(&self.session_curve_trains)),
+            ("rate_limited_rejects", g(&self.rate_limited_rejects)),
+            ("admission_ticks", g(&self.admission_ticks)),
         ])
     }
 }
@@ -77,6 +111,16 @@ mod tests {
         assert_eq!(s.get("jobs_submitted").unwrap().as_i64(), Some(2));
         assert_eq!(s.get("revocations").unwrap().as_i64(), Some(5));
         assert_eq!(s.get("jobs_completed").unwrap().as_i64(), Some(0));
+    }
+
+    #[test]
+    fn tick_returns_pre_increment_values() {
+        let m = Metrics::new();
+        assert_eq!(Metrics::tick(&m.admission_ticks), 0);
+        assert_eq!(Metrics::tick(&m.admission_ticks), 1);
+        let s = m.snapshot();
+        assert_eq!(s.get("admission_ticks").unwrap().as_i64(), Some(2));
+        assert_eq!(s.get("session_curve_trains").unwrap().as_i64(), Some(0));
     }
 
     #[test]

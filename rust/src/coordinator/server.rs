@@ -5,8 +5,16 @@
 //! Protocol (one JSON object per line):
 //!   → {"cmd":"submit","len_h":8,"mem_gb":16,"policy":"p","ft":"none"}
 //!   ← {"ok":true,"result":{"completion_h":…,"cost_usd":…,…}}
+//!   → {"cmd":"session","op":"create","name":"a","start_t":180}
+//!   ← {"ok":true,"session":"a"}
+//!   → {"cmd":"submit","session":"a","policy":"predictive",…}
+//!   ← {"ok":true,"session":"a","result":{…}}   (reuses the cached fit)
+//!   → {"cmd":"sweep","session":"a","jobs":[…],"policies":[…],"seeds":4}
+//!   ← {"ok":true,"rows":[{"policy":…,"runs":[…]},…]}
+//!   → {"cmd":"snapshot","op":"save","name":"a"}
+//!   ← {"ok":true,"path":…,"bytes":…}
 //!   → {"cmd":"status"}
-//!   ← {"ok":true,"metrics":{…},"markets":…}
+//!   ← {"ok":true,"metrics":{…},"server":{…},"sessions":{…},…}
 //!   → {"cmd":"shutdown"}
 //!   ← {"ok":true}
 //!
@@ -17,17 +25,30 @@
 //! it can observe the flag.  Finished connection threads are reaped on
 //! every accept, so a long-lived server holds handles only for
 //! currently-live connections rather than growing without bound.
+//!
+//! Multi-tenancy (DESIGN.md §14): `session`/`sweep`/`snapshot` verbs
+//! route through a [`SessionRegistry`] so trained-policy state is
+//! built once per session and reused; an optional per-connection
+//! [`TokenBucket`] limiter gates submit-class requests against the
+//! server's monotonic admission counter (never a wall clock).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::leader::{Arm, Coordinator, FtKind, PolicyKind};
+use super::metrics::Metrics;
 use crate::err;
 use crate::job::Job;
-use crate::sim::{JobResult, RunConfig};
+use crate::market::{Catalog, PriceStore};
+use crate::scenario::Sweep;
+use crate::session::{
+    RateLimit, SessionConfig, SessionRegistry, SessionSnapshot, TokenBucket,
+};
+use crate::sim::{JobResult, RevocationRule, RunConfig, World};
 use crate::util::error::Result;
 use crate::util::json::Json;
 
@@ -65,33 +86,87 @@ impl Shutdown {
 /// survive multi-tenant traffic (`--max-conns` on the CLI).
 pub const DEFAULT_MAX_CONNS: usize = 256;
 
+/// Default session-registry capacity (`--sessions` on the CLI).
+pub const DEFAULT_SESSION_CAP: usize = crate::session::registry::DEFAULT_SESSION_CAP;
+
+/// Connection-thread counters shared between the accept loop and the
+/// per-connection `status` handler.
+#[derive(Debug, Default)]
+struct ConnStats {
+    /// connection threads joined by the in-loop reaper (not at shutdown)
+    reaped: AtomicU64,
+    /// high-water mark of live (unreaped) connection-thread handles
+    peak_live: AtomicUsize,
+    /// live (unreaped) connection threads as of the last accept
+    live_counter: AtomicUsize,
+    /// connections rejected at accept time by the cap
+    rejected: AtomicU64,
+}
+
+impl ConnStats {
+    /// Wire form for the `status` reply's `server` object.
+    fn to_json(&self, max_conns: usize) -> Json {
+        let live = self.live_counter.load(Ordering::Relaxed); // ordering: stats counter read
+        let peak = self.peak_live.load(Ordering::Relaxed); // ordering: stats counter read
+        let reaped = self.reaped.load(Ordering::Relaxed); // ordering: stats counter read
+        let rejected = self.rejected.load(Ordering::Relaxed); // ordering: stats counter read
+        Json::obj(vec![
+            ("live_conns", Json::num(live as f64)),
+            ("peak_live_conns", Json::num(peak as f64)),
+            ("reaped_conns", Json::num(reaped as f64)),
+            ("rejected_conns", Json::num(rejected as f64)),
+            ("max_conns", Json::num(max_conns as f64)),
+        ])
+    }
+}
+
+/// Everything a connection thread needs, assembled once per
+/// [`Server::serve`] and `Arc`-cloned into each thread.
+struct ConnCtx {
+    coordinator: Arc<Coordinator>,
+    shutdown: Arc<Shutdown>,
+    registry: Arc<SessionRegistry>,
+    stats: Arc<ConnStats>,
+    snapshot_dir: Option<PathBuf>,
+    rate_limit: Option<RateLimit>,
+    max_conns: usize,
+}
+
 /// The TCP control plane (`siwoft serve`): accept loop + job threads.
 pub struct Server {
     coordinator: Arc<Coordinator>,
     shutdown: Arc<Shutdown>,
     next_job_id: AtomicU64,
-    /// connection threads joined by the in-loop reaper (not at shutdown)
-    reaped: AtomicU64,
-    /// high-water mark of live (unreaped) connection-thread handles
-    peak_live: AtomicUsize,
+    /// connection-thread counters (also served under `status.server`)
+    stats: Arc<ConnStats>,
+    /// named sessions holding cached trained-policy state
+    registry: Arc<SessionRegistry>,
+    /// where `snapshot {save,load,list,delete}` persist; `None`
+    /// disables the snapshot verbs
+    snapshot_dir: Option<PathBuf>,
+    /// per-connection token-bucket limit; `None` admits everything
+    rate_limit: Option<RateLimit>,
     /// accept-time backpressure: connections beyond this many live ones
     /// are rejected with a JSON error line instead of spawning a thread
     max_conns: usize,
-    /// connections rejected at accept time by the cap
-    rejected: AtomicU64,
 }
 
 impl Server {
-    /// Wrap a coordinator for serving (default connection cap).
+    /// Wrap a coordinator for serving (default connection cap, default
+    /// session capacity, no rate limit, snapshots disabled).
     pub fn new(coordinator: Coordinator) -> Server {
+        let coordinator = Arc::new(coordinator);
+        let registry =
+            Arc::new(SessionRegistry::new(DEFAULT_SESSION_CAP, coordinator.metrics.clone()));
         Server {
-            coordinator: Arc::new(coordinator),
+            coordinator,
             shutdown: Arc::new(Shutdown::new()),
             next_job_id: AtomicU64::new(1),
-            reaped: AtomicU64::new(0),
-            peak_live: AtomicUsize::new(0),
+            stats: Arc::new(ConnStats::default()),
+            registry,
+            snapshot_dir: None,
+            rate_limit: None,
             max_conns: DEFAULT_MAX_CONNS,
-            rejected: AtomicU64::new(0),
         }
     }
 
@@ -103,6 +178,32 @@ impl Server {
         self
     }
 
+    /// Set the session-registry capacity (builder style; 0 is clamped
+    /// to 1).  Creating past the cap evicts the least-recently-used
+    /// session deterministically.
+    pub fn sessions(mut self, cap: usize) -> Server {
+        self.registry = Arc::new(SessionRegistry::new(cap, self.coordinator.metrics.clone()));
+        self
+    }
+
+    /// Enable the `snapshot` verbs, persisting to `dir` (builder style).
+    pub fn snapshot_dir(mut self, dir: impl Into<PathBuf>) -> Server {
+        self.snapshot_dir = Some(dir.into());
+        self
+    }
+
+    /// Set (or clear) the per-connection submit-rate limit (builder
+    /// style).
+    pub fn rate_limit(mut self, limit: Option<RateLimit>) -> Server {
+        self.rate_limit = limit;
+        self
+    }
+
+    /// The session registry (tests and embedders).
+    pub fn registry(&self) -> &SessionRegistry {
+        &self.registry
+    }
+
     /// Bind and serve until a `shutdown` command arrives.  Returns the
     /// bound address through `on_ready` (useful for tests with port 0).
     pub fn serve(&self, addr: &str, on_ready: impl FnOnce(SocketAddr)) -> Result<()> {
@@ -111,6 +212,15 @@ impl Server {
         *self.shutdown.addr.lock().unwrap() = Some(local);
         on_ready(local);
         crate::log_info!("control plane listening on {local}");
+        let ctx = Arc::new(ConnCtx {
+            coordinator: self.coordinator.clone(),
+            shutdown: self.shutdown.clone(),
+            registry: self.registry.clone(),
+            stats: self.stats.clone(),
+            snapshot_dir: self.snapshot_dir.clone(),
+            rate_limit: self.rate_limit,
+            max_conns: self.max_conns,
+        });
         let mut handles = Vec::new();
         while !self.shutdown.is_set() {
             let (stream, peer) = match listener.accept() {
@@ -130,7 +240,7 @@ impl Server {
                 if h.is_finished() {
                     let _ = h.join();
                     // ordering: reaped is a standalone stats counter
-                    self.reaped.fetch_add(1, Ordering::Relaxed);
+                    self.stats.reaped.fetch_add(1, Ordering::Relaxed);
                 } else {
                     handles.push(h);
                 }
@@ -139,7 +249,7 @@ impl Server {
                 // accept-time backpressure: tell the client why and
                 // close instead of spawning an unbounded thread
                 // ordering: rejected is a standalone stats counter
-                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
                 crate::log_warn!(
                     "rejecting connection from {peer}: {} live connections (cap {})",
                     handles.len(),
@@ -160,21 +270,24 @@ impl Server {
                 drop(stream);
                 continue;
             }
-            let coordinator = self.coordinator.clone();
-            let shutdown = self.shutdown.clone();
+            let conn_ctx = ctx.clone();
             // ordering: SeqCst keeps id blocks totally ordered; overlap would alias job ids
             let id = self.next_job_id.fetch_add(1_000_000, Ordering::SeqCst);
             handles.push(std::thread::spawn(move || {
-                if let Err(e) = handle_conn(stream, &coordinator, &shutdown, id) {
+                if let Err(e) = handle_conn(stream, &conn_ctx, id) {
                     crate::log_warn!("connection error: {e:#}");
                 }
             }));
             // ordering: peak_live is a standalone high-water counter
-            self.peak_live.fetch_max(handles.len(), Ordering::Relaxed);
+            self.stats.peak_live.fetch_max(handles.len(), Ordering::Relaxed);
+            // ordering: live_counter is a standalone stats counter
+            self.stats.live_counter.store(handles.len(), Ordering::Relaxed);
         }
         for h in handles {
             let _ = h.join();
         }
+        // ordering: live_counter is a standalone stats counter
+        self.stats.live_counter.store(0, Ordering::Relaxed);
         Ok(())
     }
 
@@ -187,58 +300,104 @@ impl Server {
     /// final drain at shutdown).
     pub fn reaped_conn_threads(&self) -> u64 {
         // ordering: stats counter read — staleness is acceptable
-        self.reaped.load(Ordering::Relaxed)
+        self.stats.reaped.load(Ordering::Relaxed)
     }
 
     /// High-water mark of simultaneously-held connection handles.
     pub fn peak_live_conn_threads(&self) -> usize {
         // ordering: stats counter read — staleness is acceptable
-        self.peak_live.load(Ordering::Relaxed)
+        self.stats.peak_live.load(Ordering::Relaxed)
+    }
+
+    /// Live (unreaped) connection threads as of the last accept.
+    pub fn live_conn_threads(&self) -> usize {
+        // ordering: live_counter is a standalone stats counter
+        self.stats.live_counter.load(Ordering::Relaxed)
     }
 
     /// Connections rejected at accept time by the `max_conns` cap.
     pub fn rejected_conns(&self) -> u64 {
         // ordering: stats counter read — staleness is acceptable
-        self.rejected.load(Ordering::Relaxed)
+        self.stats.rejected.load(Ordering::Relaxed)
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    coordinator: &Coordinator,
-    shutdown: &Shutdown,
-    id_base: u64,
-) -> Result<()> {
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx, id_base: u64) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     let mut next_id = id_base;
+    // each connection gets its own bucket: burst is per-tenant, and a
+    // reconnect cannot launder a drained budget into a full one faster
+    // than the admission counter refills it
+    let mut bucket = ctx.rate_limit.map(TokenBucket::new);
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_request(&line, coordinator, shutdown, &mut next_id) {
+        let reply = match handle_request(&line, ctx, &mut bucket, &mut next_id) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(format!("{e:#}")))]),
         };
         writeln!(writer, "{reply}")?;
-        if shutdown.is_set() {
+        if ctx.shutdown.is_set() {
             break;
         }
     }
     Ok(())
 }
 
+/// Charge one submit-class request against the connection's token
+/// bucket.  Every attempt advances the global admission counter (that
+/// is what buckets refill against); a drained bucket yields the
+/// rejection reply to send.
+fn admit(ctx: &ConnCtx, bucket: &mut Option<TokenBucket>) -> Option<Json> {
+    let metrics = &ctx.coordinator.metrics;
+    let tick = Metrics::tick(&metrics.admission_ticks);
+    match bucket {
+        Some(b) if !b.try_admit(tick) => {
+            Metrics::inc(&metrics.rate_limited_rejects);
+            Some(Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("rate_limited", Json::Bool(true)),
+                (
+                    "error",
+                    Json::str("rate limited: token bucket drained; retry after more admissions"),
+                ),
+            ]))
+        }
+        _ => None,
+    }
+}
+
+/// Build a session-private world from a sealed `.sps` price snapshot
+/// (`session create` with a `prices` field).
+fn load_price_world(path: &str) -> Result<World> {
+    let catalog = Catalog::full();
+    let store = PriceStore::load(path).map_err(|e| err!("price snapshot {path}: {e}"))?;
+    let (trace, _covered) = store.to_trace(&catalog).map_err(|e| err!("price snapshot {path}: {e}"))?;
+    Ok(World::new(catalog, trace))
+}
+
+/// The `name` field of a session/snapshot request.
+fn need_name(req: &Json) -> Result<&str> {
+    req.get("name").and_then(Json::as_str).ok_or_else(|| err!("missing \"name\""))
+}
+
 fn handle_request(
     line: &str,
-    c: &Coordinator,
-    shutdown: &Shutdown,
+    ctx: &ConnCtx,
+    bucket: &mut Option<TokenBucket>,
     next_id: &mut u64,
 ) -> Result<Json> {
+    let c = &*ctx.coordinator;
     let req = Json::parse(line).map_err(|e| err!("bad json: {e}"))?;
     let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("");
     match cmd {
         "submit" => {
+            if let Some(rejection) = admit(ctx, bucket) {
+                return Ok(rejection);
+            }
             let len = req.get("len_h").and_then(Json::as_f64).unwrap_or(8.0);
             let mem = req.get("mem_gb").and_then(Json::as_f64).unwrap_or(16.0);
             let policy = req.get("policy").and_then(Json::as_str).unwrap_or("p");
@@ -250,17 +409,235 @@ fn handle_request(
             *next_id += 1;
             let job = Job::new(*next_id, len, mem);
             let arm = Arm { label: "api", policy, ft };
-            let r = c.run_one(&job, &arm, &RunConfig::default(), seed);
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("result", result_json(&r))]))
+            match req.get("session").and_then(Json::as_str) {
+                None => {
+                    let r = c.run_one(&job, &arm, &RunConfig::default(), seed);
+                    Ok(Json::obj(vec![("ok", Json::Bool(true)), ("result", result_json(&r))]))
+                }
+                Some(name) => {
+                    let session = ctx.registry.checkout(name).map_err(|e| err!("{e}"))?;
+                    let world = session.world_or(&c.world);
+                    let trained = session.trained_or_train(world, &c.metrics);
+                    let r = c.run_one_in_session(
+                        &job,
+                        &arm,
+                        &RunConfig::default(),
+                        seed,
+                        world,
+                        session.config().start_t,
+                        &trained.curves,
+                    );
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("session", Json::str(name)),
+                        ("result", result_json(&r)),
+                    ]))
+                }
+            }
+        }
+        "sweep" => {
+            if let Some(rejection) = admit(ctx, bucket) {
+                return Ok(rejection);
+            }
+            let name = req
+                .get("session")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err!("sweep requires a \"session\""))?;
+            let session = ctx.registry.checkout(name).map_err(|e| err!("{e}"))?;
+            let world = session.world_or(&c.world);
+            let trained = session.trained_or_train(world, &c.metrics);
+            let mut jobs = Vec::new();
+            if let Some(arr) = req.get("jobs").and_then(Json::as_arr) {
+                for j in arr {
+                    let len = j.get("len_h").and_then(Json::as_f64).unwrap_or(8.0);
+                    let mem = j.get("mem_gb").and_then(Json::as_f64).unwrap_or(16.0);
+                    *next_id += 1;
+                    jobs.push(Job::new(*next_id, len, mem));
+                }
+            }
+            if jobs.is_empty() {
+                *next_id += 1;
+                jobs.push(Job::new(*next_id, 8.0, 16.0));
+            }
+            let strings = |key: &str, default: &str| -> Vec<String> {
+                match req.get(key).and_then(Json::as_arr) {
+                    Some(arr) => {
+                        arr.iter().filter_map(Json::as_str).map(str::to_string).collect()
+                    }
+                    None => vec![default.to_string()],
+                }
+            };
+            let mut policies = Vec::new();
+            for p in strings("policies", "p") {
+                policies.push(PolicyKind::parse(&p).ok_or_else(|| err!("unknown policy '{p}'"))?);
+            }
+            let mut fts = Vec::new();
+            for f in strings("fts", "none") {
+                fts.push(FtKind::parse(&f).ok_or_else(|| err!("unknown ft '{f}'"))?);
+            }
+            let mut rules = Vec::new();
+            for r in strings("rules", "trace") {
+                rules.push(RevocationRule::parse(&r).map_err(|e| err!("{e}"))?);
+            }
+            let seeds = req.get("seeds").and_then(Json::as_f64).unwrap_or(1.0).max(1.0) as u64;
+            let base_seed = req.get("base_seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let t0 = Instant::now();
+            let rows = Sweep::on(world)
+                .jobs(jobs)
+                .policies(policies)
+                .fts(fts)
+                .rules(rules)
+                .seeds(seeds)
+                .base_seed(base_seed)
+                .start_t(session.config().start_t)
+                .workers(c.pool.workers())
+                .curves(trained.curves.clone())
+                .run();
+            c.record_sweep(&rows, t0);
+            let rows_json = rows
+                .iter()
+                .map(|row| {
+                    Json::obj(vec![
+                        ("policy", Json::str(row.point.policy.label())),
+                        ("ft", Json::str(row.point.ft.label())),
+                        ("rule", Json::str(row.point.rule.label())),
+                        ("runs", Json::arr(row.runs.iter().map(result_json).collect())),
+                    ])
+                })
+                .collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("session", Json::str(name)),
+                ("rows", Json::arr(rows_json)),
+            ]))
+        }
+        "session" => {
+            let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+            match op {
+                "create" => {
+                    let name = need_name(&req)?;
+                    let start_t = req.get("start_t").and_then(Json::as_f64).unwrap_or(0.0);
+                    let horizon_h = req
+                        .get("horizon_h")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(SessionConfig::default().horizon_h);
+                    let world = match req.get("prices").and_then(Json::as_str) {
+                        Some(path) => Some(Arc::new(load_price_world(path)?)),
+                        None => None,
+                    };
+                    ctx.registry
+                        .create(name, SessionConfig { start_t, horizon_h }, world)
+                        .map_err(|e| err!("{e}"))?;
+                    Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", Json::str(name))]))
+                }
+                "status" => {
+                    let name = need_name(&req)?;
+                    let info =
+                        ctx.registry.status(name).ok_or_else(|| err!("unknown session '{name}'"))?;
+                    Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", info.to_json())]))
+                }
+                "reset" => {
+                    let name = need_name(&req)?;
+                    ctx.registry.reset(name).map_err(|e| err!("{e}"))?;
+                    Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", Json::str(name))]))
+                }
+                "delete" => {
+                    let name = need_name(&req)?;
+                    ctx.registry.delete(name).map_err(|e| err!("{e}"))?;
+                    Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", Json::str(name))]))
+                }
+                "list" => {
+                    let sessions =
+                        ctx.registry.list().iter().map(|i| i.to_json()).collect::<Vec<_>>();
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("sessions", Json::arr(sessions)),
+                    ]))
+                }
+                other => Err(err!(
+                    "unknown session op '{other}' (expected create, status, reset, delete or list)"
+                )),
+            }
+        }
+        "snapshot" => {
+            let dir = ctx.snapshot_dir.as_deref().ok_or_else(|| {
+                err!("session snapshots are disabled (start serve with --session-dir)")
+            })?;
+            let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+            match op {
+                "save" => {
+                    let name = need_name(&req)?;
+                    let session =
+                        ctx.registry.get(name).ok_or_else(|| err!("unknown session '{name}'"))?;
+                    let world = session.world_or(&c.world);
+                    // a cold session trains here: the snapshot must
+                    // carry the state, not a promise to compute it
+                    let trained = session.trained_or_train(world, &c.metrics);
+                    let snap = SessionSnapshot::capture(name, session.config(), world, &trained);
+                    let (path, bytes) = snap.save(dir).map_err(|e| err!("{e}"))?;
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("session", Json::str(name)),
+                        ("path", Json::str(path.display().to_string())),
+                        ("bytes", Json::num(bytes as f64)),
+                    ]))
+                }
+                "load" => {
+                    let name = need_name(&req)?;
+                    let snap = SessionSnapshot::load(dir, name).map_err(|e| err!("{e}"))?;
+                    // loaded sessions run on the serving world; curves
+                    // fitted on a different trace would silently change
+                    // results, so a fingerprint mismatch is a hard error
+                    snap.verify_world(&c.world).map_err(|e| err!("{e}"))?;
+                    ctx.registry.insert_loaded(snap.into_session()).map_err(|e| err!("{e}"))?;
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("session", Json::str(name)),
+                        ("trained", Json::Bool(true)),
+                    ]))
+                }
+                "list" => {
+                    let entries = SessionSnapshot::list(dir)
+                        .map_err(|e| err!("{e}"))?
+                        .into_iter()
+                        .map(|(name, bytes)| {
+                            Json::obj(vec![
+                                ("name", Json::str(name)),
+                                ("bytes", Json::num(bytes as f64)),
+                            ])
+                        })
+                        .collect();
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("snapshots", Json::arr(entries)),
+                    ]))
+                }
+                "delete" => {
+                    let name = need_name(&req)?;
+                    SessionSnapshot::delete(dir, name).map_err(|e| err!("{e}"))?;
+                    Ok(Json::obj(vec![("ok", Json::Bool(true)), ("snapshot", Json::str(name))]))
+                }
+                other => Err(err!(
+                    "unknown snapshot op '{other}' (expected save, load, list or delete)"
+                )),
+            }
         }
         "status" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("metrics", c.metrics.snapshot()),
             ("markets", Json::num(c.world.n_markets() as f64)),
             ("backend", Json::str(c.analytics_backend())),
+            ("server", ctx.stats.to_json(ctx.max_conns)),
+            (
+                "sessions",
+                Json::obj(vec![
+                    ("live", Json::num(ctx.registry.len() as f64)),
+                    ("capacity", Json::num(ctx.registry.capacity() as f64)),
+                ]),
+            ),
         ])),
         "shutdown" => {
-            shutdown.trigger();
+            ctx.shutdown.trigger();
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
         other => Err(err!("unknown cmd '{other}'")),
@@ -380,6 +757,99 @@ mod tests {
         reader.read_line(&mut bye).unwrap();
         assert_eq!(Json::parse(&bye).unwrap().get("ok").unwrap().as_bool(), Some(true));
         drop(held);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn session_verbs_roundtrip_and_cache_training() {
+        let (_server, addr, t) = spawn_server(2);
+
+        let reply = request(addr, r#"{"cmd":"session","op":"create","name":"a","start_t":180}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply}");
+
+        // duplicate create and bad names are client errors
+        let reply = request(addr, r#"{"cmd":"session","op":"create","name":"a"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+        let reply = request(addr, r#"{"cmd":"session","op":"create","name":"../evil"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+
+        // two Predictive submits: one train, second reuses
+        for _ in 0..2 {
+            let reply = request(
+                addr,
+                r#"{"cmd":"submit","session":"a","len_h":2,"mem_gb":8,"policy":"predictive","ft":"none"}"#,
+            );
+            assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply}");
+            assert_eq!(reply.path(&["result", "completed"]).unwrap().as_bool(), Some(true));
+        }
+        let reply = request(addr, r#"{"cmd":"session","op":"status","name":"a"}"#);
+        assert_eq!(reply.path(&["session", "trained"]).unwrap().as_bool(), Some(true));
+        assert_eq!(reply.path(&["session", "submits"]).unwrap().as_i64(), Some(2));
+        assert_eq!(reply.path(&["session", "start_t"]).unwrap().as_f64(), Some(180.0));
+
+        let status = request(addr, r#"{"cmd":"status"}"#);
+        assert_eq!(status.path(&["metrics", "session_curve_trains"]).unwrap().as_i64(), Some(1));
+        assert_eq!(status.path(&["sessions", "live"]).unwrap().as_i64(), Some(1));
+        assert_eq!(status.path(&["server", "rejected_conns"]).unwrap().as_i64(), Some(0));
+        assert!(status.path(&["server", "max_conns"]).unwrap().as_i64().unwrap() >= 1);
+
+        // reset drops the fit; delete removes the session entirely
+        let reply = request(addr, r#"{"cmd":"session","op":"reset","name":"a"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+        let reply = request(addr, r#"{"cmd":"session","op":"status","name":"a"}"#);
+        assert_eq!(reply.path(&["session", "trained"]).unwrap().as_bool(), Some(false));
+        let reply = request(addr, r#"{"cmd":"session","op":"delete","name":"a"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+        let reply = request(addr, r#"{"cmd":"submit","session":"a","len_h":1,"mem_gb":8}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+        assert!(reply.get("error").unwrap().as_str().unwrap().contains("unknown session"));
+
+        request(addr, r#"{"cmd":"shutdown"}"#);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn token_bucket_limits_per_connection() {
+        let world = World::generate(24, 0.5, 33);
+        let server = Arc::new(
+            Server::new(Coordinator::new(world, AnalyticsEngine::native(), 1))
+                .rate_limit(Some(RateLimit { burst: 2.0, rate: 0.0 })),
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s2 = server.clone();
+        let t = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+
+        let submit = r#"{"cmd":"submit","len_h":1,"mem_gb":8,"policy":"o","ft":"none"}"#;
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str| {
+            writeln!(conn, "{line}").unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            Json::parse(&reply).unwrap()
+        };
+        // burst of 2 at zero refill: exactly two admissions, ever
+        for i in 0..2 {
+            let reply = ask(&mut conn, &mut reader, submit);
+            assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "submit {i}: {reply}");
+        }
+        let reply = ask(&mut conn, &mut reader, submit);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(reply.get("rate_limited").unwrap().as_bool(), Some(true));
+        // non-submit verbs are never limited
+        let reply = ask(&mut conn, &mut reader, r#"{"cmd":"status"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(reply.path(&["metrics", "rate_limited_rejects"]).unwrap().as_i64(), Some(1));
+
+        // a fresh connection has its own (full) bucket
+        let reply = request(addr, submit);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply}");
+
+        request(addr, r#"{"cmd":"shutdown"}"#);
+        drop(conn);
         t.join().unwrap();
     }
 

@@ -43,6 +43,7 @@ pub mod policy;
 pub mod runtime;
 pub mod scenario;
 pub mod service;
+pub mod session;
 pub mod sim;
 pub mod util;
 
@@ -64,6 +65,9 @@ pub mod prelude {
     pub use crate::service::{
         FleetRunner, RepackMode, ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec,
         TierResult, TierSpec,
+    };
+    pub use crate::session::{
+        RateLimit, SessionConfig, SessionRegistry, SessionSnapshot, TokenBucket,
     };
     #[allow(deprecated)] // legacy shim kept importable for external migrators
     pub use crate::sim::simulate_job;

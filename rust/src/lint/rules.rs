@@ -62,8 +62,9 @@ impl Rule {
 
 /// Modules whose outputs feed the equivalence suites: the directories
 /// (and the one root file) where D1/D2 forbid nondeterminism sources.
-pub const RESULT_MODULES: &[&str] =
-    &["sim", "dag", "service", "scenario", "policy", "ft", "job", "market", "pack"];
+pub const RESULT_MODULES: &[&str] = &[
+    "sim", "dag", "service", "scenario", "policy", "ft", "job", "market", "pack", "session",
+];
 
 /// Tokens D1 forbids in result-producing modules (wall-clock, host
 /// state, hash-order iteration).

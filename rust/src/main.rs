@@ -14,7 +14,8 @@
 //!   bench        quick in-binary micro-benchmarks
 //!   lint         in-tree static analysis (determinism/atomics/doc invariants)
 //!   run          run an experiment described by a TOML config
-//!   serve        start the TCP control plane
+//!   serve        start the TCP control plane (sessions, snapshots, rate limits)
+//!   session      client for a running server's session registry
 //!
 //! The experiment-table subcommands (fig1, ablation, sensitivity,
 //! tables, bench) all take `--seed`, `--out` and `--format {csv,json}`;
@@ -52,6 +53,7 @@ fn main() -> ExitCode {
         "lint" => lint_cmd(rest),
         "run" => run_config(rest),
         "serve" => serve(rest),
+        "session" => session_cmd(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -83,10 +85,11 @@ fn help_text() -> String {
      sensitivity  spot/on-demand price-ratio sweep (F/O crossover)\n  \
      tables       P/F/O summary table at the paper's fixed job point\n  \
      cluster      rolling-epoch cluster simulation (Poisson arrivals)\n  \
-     bench        quick micro-benchmarks; --area {engine,service,ingest} emits BENCH_<area>.json\n  \
+     bench        quick micro-benchmarks; --area {engine,service,ingest,serve} emits BENCH_<area>.json\n  \
      lint         static-analysis pass: determinism/atomics/doc invariants (DESIGN.md \u{00a7}12)\n  \
      run          run an experiment described by a TOML config\n  \
-     serve        start the TCP control plane\n  \
+     serve        start the TCP control plane (sessions, snapshots, rate limits)\n  \
+     session      client for a running server's session registry (DESIGN.md \u{00a7}14)\n  \
      version      print version\n\nsee `siwoft <command> --help`"
         .to_string()
 }
@@ -926,8 +929,8 @@ fn bench_quick(raw: &[String]) -> Result<(), String> {
         .opt(
             "area",
             "",
-            "structured bench area: engine | service | ingest — emits the BENCH_<area>.json \
-             schema tracked in EXPERIMENTS.md (empty = the legacy quick suite)",
+            "structured bench area: engine | service | ingest | serve — emits the \
+             BENCH_<area>.json schema tracked in EXPERIMENTS.md (empty = the legacy quick suite)",
         )
         .opt("markets", "96", "market count")
         .opt("months", "2", "trace months")
@@ -1111,8 +1114,81 @@ fn bench_area(
                 row("price_at", 1, &point),
             ]
         }
+        "serve" => {
+            use siwoft::coordinator::loadgen;
+            use siwoft::util::stats::p50_p99;
+            use std::sync::Arc;
+            // a compact in-process server over the loopback: one worker so
+            // every row is serial (workers=1), a private temp snapshot dir
+            // for the .sss reuse case.  The world is deliberately small —
+            // this area measures the wire/session/snapshot path, not the
+            // analytics epoch, and it runs in CI's bench-smoke loop.
+            let snap_dir =
+                std::env::temp_dir().join(format!("siwoft-bench-serve-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&snap_dir);
+            let server = Arc::new(
+                Server::new(Coordinator::new(
+                    World::generate(24, 0.5, seed),
+                    AnalyticsEngine::native(),
+                    1,
+                ))
+                .snapshot_dir(&snap_dir),
+            );
+            let (tx, rx) = std::sync::mpsc::channel();
+            let s2 = server.clone();
+            let t = std::thread::spawn(move || {
+                s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            });
+            let addr =
+                rx.recv().map_err(|_| "bench --area serve: server failed to bind".to_string())?;
+            let wire = loadgen::run_load(addr, 2, 16).map_err(|e| format!("{e}"))?;
+            let sess = loadgen::run_session_load(addr, 2, 8, 4).map_err(|e| format!("{e}"))?;
+            let (cold, hot) =
+                loadgen::run_snapshot_reuse(addr, 4, "bench").map_err(|e| format!("{e}"))?;
+            server.request_shutdown();
+            let _ = t.join();
+            let _ = std::fs::remove_dir_all(&snap_dir);
+            let lat_row = |case: &str, per_sec: f64, p50_ms: f64, p99_ms: f64| {
+                Json::obj(vec![
+                    ("case", Json::str(case)),
+                    ("workers", Json::num(1.0)),
+                    ("items_per_sec", Json::num(per_sec)),
+                    ("p50_us", Json::num(p50_ms * 1e3)),
+                    ("p99_us", Json::num(p99_ms * 1e3)),
+                ])
+            };
+            let rate = |p50_ms: f64| if p50_ms > 0.0 { 1e3 / p50_ms } else { 0.0 };
+            let (sess_cold50, sess_cold99) = sess.cold_p50_p99_ms();
+            let (sess_hot50, sess_hot99) = sess.hot_p50_p99_ms();
+            let (snap_cold50, snap_cold99) = p50_p99(&cold);
+            let (snap_hot50, snap_hot99) = p50_p99(&hot);
+            vec![
+                lat_row(
+                    "submit_roundtrip",
+                    wire.throughput_per_s(),
+                    wire.submit_p50_ms(),
+                    wire.submit_p99_ms(),
+                ),
+                lat_row(
+                    "session_cold_submit",
+                    rate(sess_cold50),
+                    sess_cold50,
+                    sess_cold99,
+                ),
+                lat_row(
+                    "session_hot_submit",
+                    sess.throughput_per_s(),
+                    sess_hot50,
+                    sess_hot99,
+                ),
+                lat_row("snapshot_cold_train", rate(snap_cold50), snap_cold50, snap_cold99),
+                lat_row("snapshot_hot_reuse", rate(snap_hot50), snap_hot50, snap_hot99),
+            ]
+        }
         other => {
-            return Err(format!("unknown --area '{other}' (expected engine, service or ingest)"))
+            return Err(format!(
+                "unknown --area '{other}' (expected engine, service, ingest or serve)"
+            ))
         }
     };
 
@@ -1333,8 +1409,21 @@ fn serve(raw: &[String]) -> Result<(), String> {
             "sealed price-store snapshot (.sps): serve real history instead of a synthetic world",
         )
         .opt("max-conns", "256", "live-connection cap (excess conns rejected at accept)")
+        .opt("sessions", "64", "session-registry capacity; least-recently-used sessions evicted beyond it")
+        .opt(
+            "session-dir",
+            "",
+            "directory for session snapshots (.sss); empty disables the snapshot verbs",
+        )
+        .opt(
+            "rate-limit",
+            "",
+            "per-connection token bucket: <burst> or <burst>:<rate> (admissions per tick); \
+             empty or 'off' = unlimited",
+        )
         .workers_opt();
     let a = spec.parse(raw)?;
+    let rate_limit = siwoft::session::RateLimit::parse(a.str("rate-limit"))?;
     let world = if !a.str("snapshot").is_empty() {
         let path = a.str("snapshot");
         let catalog = Catalog::full();
@@ -1347,14 +1436,122 @@ fn serve(raw: &[String]) -> Result<(), String> {
     };
     let engine = AnalyticsEngine::auto(a.str("artifacts"));
     let coordinator = Coordinator::new(world, engine, a.workers()?);
-    let server = Server::new(coordinator).max_conns(a.usize("max-conns")?);
+    let mut server = Server::new(coordinator)
+        .max_conns(a.usize("max-conns")?)
+        .sessions(a.usize("sessions")?)
+        .rate_limit(rate_limit);
+    if !a.str("session-dir").is_empty() {
+        server = server.snapshot_dir(a.str("session-dir"));
+    }
     server
         .serve(a.str("addr"), |addr| {
-            println!("listening on {addr} — JSON lines: submit/status/shutdown");
+            println!("listening on {addr} — JSON lines: submit/sweep/session/snapshot/status/shutdown");
             // stdout is block-buffered when piped; harnesses parsing the
             // bound address (tests/integration_cli.rs) need it now
             use std::io::Write as _;
             let _ = std::io::stdout().flush();
         })
         .map_err(|e| format!("serve: {e:#}"))
+}
+
+/// `siwoft session <verb>`: thin client for the session registry of a
+/// running `siwoft serve` (DESIGN.md §14).  Sends exactly one JSON line,
+/// prints the server's reply, and exits non-zero when `ok` is false.
+fn session_cmd(raw: &[String]) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    const VERBS: &str = "verbs:\n  \
+         create           register a named session (--name, --start-t, --horizon, --prices)\n  \
+         status           one session's registry entry (--name)\n  \
+         reset            drop a session's cached fit, keep its config (--name)\n  \
+         delete           remove a session from the registry (--name)\n  \
+         list             every live session, name-sorted\n  \
+         snapshot-save    persist a session's trained state to <session-dir>/<name>.sss (--name)\n  \
+         snapshot-load    install a saved snapshot as a live session (--name)\n  \
+         snapshot-list    saved snapshots on the server\n  \
+         snapshot-delete  remove a saved snapshot (--name)";
+    let verb = raw.first().map(String::as_str).unwrap_or("");
+    if matches!(verb, "" | "--help" | "-h" | "help") {
+        println!("usage: siwoft session <verb> [options]\n\n{VERBS}\n\nsee `siwoft session <verb> --help`");
+        return Ok(());
+    }
+    let spec = CommandSpec::new(
+        "session",
+        "client for a running `siwoft serve` session registry (DESIGN.md §14)",
+    )
+    .opt("addr", "127.0.0.1:7747", "server address")
+    .opt("name", "", "session name (required by every verb except list/snapshot-list)")
+    .opt("start-t", "0", "simulated start hour for this session's jobs (create)")
+    .opt("horizon", "8", "placement-score horizon in hours (create)")
+    .opt(
+        "prices",
+        "",
+        "sealed price-store snapshot (.sps) backing this session's private world (create)",
+    );
+    let a = spec.parse(&raw[1..])?;
+    let name = a.str("name");
+    let need_name = |verb: &str| -> Result<(), String> {
+        if name.is_empty() {
+            Err(format!("session {verb}: --name is required"))
+        } else {
+            Ok(())
+        }
+    };
+    let req = match verb {
+        "create" => {
+            need_name(verb)?;
+            let mut fields = vec![
+                ("cmd", Json::str("session")),
+                ("op", Json::str("create")),
+                ("name", Json::str(name)),
+                ("start_t", Json::num(a.f64("start-t")?)),
+                ("horizon_h", Json::num(a.f64("horizon")?)),
+            ];
+            if !a.str("prices").is_empty() {
+                fields.push(("prices", Json::str(a.str("prices"))));
+            }
+            Json::obj(fields)
+        }
+        "status" | "reset" | "delete" => {
+            need_name(verb)?;
+            Json::obj(vec![
+                ("cmd", Json::str("session")),
+                ("op", Json::str(verb)),
+                ("name", Json::str(name)),
+            ])
+        }
+        "list" => Json::obj(vec![("cmd", Json::str("session")), ("op", Json::str("list"))]),
+        "snapshot-list" => {
+            Json::obj(vec![("cmd", Json::str("snapshot")), ("op", Json::str("list"))])
+        }
+        "snapshot-save" | "snapshot-load" | "snapshot-delete" => {
+            need_name(verb)?;
+            let op = verb.strip_prefix("snapshot-").unwrap();
+            Json::obj(vec![
+                ("cmd", Json::str("snapshot")),
+                ("op", Json::str(op)),
+                ("name", Json::str(name)),
+            ])
+        }
+        other => return Err(format!("unknown session verb '{other}'\n\n{VERBS}")),
+    };
+    let addr = a.str("addr");
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("session {verb}: connect {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("session {verb}: clone stream: {e}"))?,
+    );
+    writeln!(stream, "{req}").map_err(|e| format!("session {verb}: send: {e}"))?;
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("session {verb}: recv: {e}"))?;
+    let reply = Json::parse(line.trim())
+        .map_err(|e| format!("session {verb}: bad reply {:?}: {e}", line.trim()))?;
+    if reply.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+        let why = reply.get("error").and_then(|v| v.as_str()).unwrap_or("request failed");
+        return Err(format!("session {verb}: {why}"));
+    }
+    println!("{reply}");
+    Ok(())
 }

@@ -840,8 +840,9 @@ const VERSION: u32 = 1;
 
 /// FNV-1a, 64-bit — dependency-free integrity check for the snapshot
 /// trailer (not cryptographic; it guards against truncation and bit
-/// rot, not adversaries).
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// rot, not adversaries).  Shared with `session::snapshot`, which
+/// frames its `.sss` files the same way.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

@@ -14,6 +14,7 @@ use crate::coordinator::Pool;
 use crate::dag::{DagAggregate, DagResult, DagScenario, DagSpec};
 use crate::job::Job;
 use crate::service::{ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec};
+use crate::market::analytics::SurvivalCurves;
 use crate::sim::{AggregateResult, JobResult, RevocationRule, Scratch, World};
 
 /// One point of the cartesian product.
@@ -60,6 +61,7 @@ pub struct Sweep<'w> {
     start_t: f64,
     max_sessions: u32,
     workers: usize,
+    curves: Option<SurvivalCurves>,
 }
 
 impl<'w> Sweep<'w> {
@@ -78,6 +80,7 @@ impl<'w> Sweep<'w> {
             start_t: 0.0,
             max_sessions: crate::sim::RunConfig::default().max_sessions,
             workers: 0,
+            curves: None,
         }
     }
 
@@ -166,6 +169,17 @@ impl<'w> Sweep<'w> {
         self
     }
 
+    /// Inject a pre-trained Predictive survival-curve fit instead of
+    /// training one in [`Sweep::run`].  The caller vouches that the fit
+    /// came from `PolicyKind::train_survival_curves` (or an equivalent
+    /// computation) over this sweep's world and `start_t` — the session
+    /// subsystem (DESIGN.md §14) uses this to reuse a session's cached
+    /// state across submits with bit-identical results.
+    pub fn curves(mut self, curves: SurvivalCurves) -> Self {
+        self.curves = Some(curves);
+        self
+    }
+
     /// The cartesian product, in execution order: jobs × policies × fts
     /// × rules (rules vary fastest).
     pub fn points(&self) -> Vec<SweepPoint> {
@@ -198,6 +212,21 @@ impl<'w> Sweep<'w> {
         self.len() * self.seeds as usize
     }
 
+    /// The Predictive fit shared across every point that needs one:
+    /// the injected [`Sweep::curves`] override when present, else a
+    /// fresh fit over (world, start_t) — both sweep-wide constants, so
+    /// training happens at most once per run.  `None` when no policy on
+    /// the axis is Predictive.
+    fn shared_curves(&self) -> Option<SurvivalCurves> {
+        if !self.policies.iter().any(|p| matches!(p, PolicyKind::Predictive(_))) {
+            return None;
+        }
+        Some(match &self.curves {
+            Some(c) => c.clone(),
+            None => PolicyKind::train_survival_curves(self.world, self.start_t),
+        })
+    }
+
     /// Execute the sweep: every (point, seed) pair fanned out over the
     /// pool, grouped back into one aggregated row per point.
     pub fn run(&self) -> Vec<SweepRow> {
@@ -209,11 +238,7 @@ impl<'w> Sweep<'w> {
         // The Predictive fit depends only on (world, start_t) — both
         // sweep-wide constants — so train at most once and share the
         // result across every point that needs it.
-        let shared_curves = self
-            .policies
-            .iter()
-            .any(|p| matches!(p, PolicyKind::Predictive(_)))
-            .then(|| PolicyKind::train_survival_curves(self.world, self.start_t));
+        let shared_curves = self.shared_curves();
         // one Scenario per point, shared across its seeds, so per-point
         // state (the pre-seeded curve cache) is never recomputed
         let scenarios: Vec<Scenario<'_>> = points
@@ -266,11 +291,7 @@ impl<'w> Sweep<'w> {
             return Vec::new();
         }
         let seeds = self.seeds;
-        let shared_curves = self
-            .policies
-            .iter()
-            .any(|p| matches!(p, PolicyKind::Predictive(_)))
-            .then(|| PolicyKind::train_survival_curves(self.world, self.start_t));
+        let shared_curves = self.shared_curves();
         let mut labels = Vec::new();
         let mut scenarios: Vec<DagScenario<'_>> = Vec::new();
         for spec in &self.dags {
@@ -327,11 +348,7 @@ impl<'w> Sweep<'w> {
             return Vec::new();
         }
         let seeds = self.seeds;
-        let shared_curves = self
-            .policies
-            .iter()
-            .any(|p| matches!(p, PolicyKind::Predictive(_)))
-            .then(|| PolicyKind::train_survival_curves(self.world, self.start_t));
+        let shared_curves = self.shared_curves();
         let mut labels = Vec::new();
         let mut scenarios: Vec<ServiceScenario<'_>> = Vec::new();
         for spec in &self.services {
@@ -541,6 +558,31 @@ mod tests {
         assert_eq!(rows[3].agg.mean_revocations, 0.0);
         // a service-less sweep runs nothing
         assert!(Sweep::on(&w).run_services().is_empty());
+    }
+
+    #[test]
+    fn injected_curves_reproduce_trained_results() {
+        let (w, start) = world();
+        let build = || {
+            Sweep::on(&w)
+                .job(Job::new(1, 2.0, 16.0))
+                .policies([PolicyKind::parse("predictive").unwrap(), PolicyKind::default()])
+                .rules([RevocationRule::Trace, RevocationRule::ForcedCount { total: 1 }])
+                .seeds(2)
+                .start_t(start)
+                .workers(1)
+        };
+        let fresh = build().run();
+        let fit = PolicyKind::train_survival_curves(&w, start);
+        let injected = build().curves(fit).run();
+        assert_eq!(fresh.len(), injected.len());
+        for (a, b) in fresh.iter().zip(&injected) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.agg, b.agg);
+            for (x, y) in a.runs.iter().zip(&b.runs) {
+                assert_eq!(x.ledger, y.ledger);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Multi-tenant simulation sessions (DESIGN.md §14).
+//!
+//! `siwoft serve` historically treated every submit as a one-shot: the
+//! expensive trained-policy state behind a `Predictive` arm (the
+//! survival-curve fit) and the placement scores were recomputed per
+//! request.  This module turns the control plane into a stateful
+//! service:
+//!
+//! * [`SessionRegistry`] holds **named sessions**, each bound to a
+//!   world/catalog with lazily-built, `Arc`-shared [`TrainedState`]
+//!   (Predictive survival curves + `MarketAnalytics::placement_scores`)
+//!   so repeat submits reuse instead of recompute;
+//! * [`SessionSnapshot`] persists that state to disk in a versioned,
+//!   checksummed binary format (the `.sps` framing idiom from
+//!   `market::store`: magic + version + little-endian blocks + FNV-1a
+//!   trailer) behind the wire `snapshot {save,list,load,delete}` verbs;
+//! * [`TokenBucket`] is the per-connection submit-rate limiter — the
+//!   multi-tenant fairness half that `--max-conns` (accept-time
+//!   backpressure) left open.
+//!
+//! Everything here is deterministic and sim-clock-free: the limiter's
+//! budget is measured against the server's monotonic admission counter
+//! (a tick per attempted submit), not wall-clock time, so lint rule d1
+//! applies to this module exactly as it does to `sim`/`scenario` —
+//! `Instant` stays confined to `coordinator/`.  Determinism survives
+//! the whole subsystem: a session-bound sweep injects its cached curves
+//! into `scenario::Sweep`, whose enumeration and per-seed execution are
+//! already bit-identical for any worker count, so results match an
+//! in-process `Sweep::run` bit for bit (pinned by
+//! `tests/session_equivalence.rs`).
+
+pub mod registry;
+pub mod snapshot;
+
+pub use registry::{Session, SessionConfig, SessionError, SessionInfo, SessionRegistry, TrainedState};
+pub use snapshot::{SessionSnapshot, SnapshotError, WorldFingerprint};
+
+/// Per-connection rate-limit configuration: a token bucket holding at
+/// most `burst` tokens, refilled at `rate` tokens per admission tick
+/// (one tick = one submit-class request attempted anywhere on the
+/// server).  `rate` is therefore the connection's long-run *share* of
+/// server throughput: with `rate = 0.25` a single connection can take
+/// at most a quarter of all admissions once its burst is spent.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateLimit {
+    /// Bucket capacity: requests a connection may issue back-to-back
+    /// before the refill rate gates it.
+    pub burst: f64,
+    /// Tokens refilled per admission tick (may be fractional; 0 means
+    /// the bucket never refills — exactly `burst` requests per
+    /// connection, ever).
+    pub rate: f64,
+}
+
+impl RateLimit {
+    /// Default refill rate when only a burst is given: a quarter of the
+    /// server's admission stream.
+    pub const DEFAULT_RATE: f64 = 0.25;
+
+    /// Parse a CLI-style spec: `""` or `"off"` disables limiting
+    /// (`None`); `"<burst>"` uses [`RateLimit::DEFAULT_RATE`];
+    /// `"<burst>:<rate>"` sets both.  Burst must be ≥ 1 and rate ≥ 0,
+    /// both finite.
+    pub fn parse(spec: &str) -> Result<Option<RateLimit>, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "off" {
+            return Ok(None);
+        }
+        let (burst_s, rate_s) = match spec.split_once(':') {
+            Some((b, r)) => (b, Some(r)),
+            None => (spec, None),
+        };
+        let burst: f64 = burst_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad rate-limit burst '{burst_s}' (want a number)"))?;
+        let rate: f64 = match rate_s {
+            Some(r) => r
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad rate-limit rate '{r}' (want a number)"))?,
+            None => RateLimit::DEFAULT_RATE,
+        };
+        if !burst.is_finite() || burst < 1.0 {
+            return Err(format!("rate-limit burst must be ≥ 1, got {burst}"));
+        }
+        if !rate.is_finite() || rate < 0.0 {
+            return Err(format!("rate-limit rate must be ≥ 0, got {rate}"));
+        }
+        Ok(Some(RateLimit { burst, rate }))
+    }
+}
+
+/// Deterministic token bucket over an abstract monotonic tick source.
+///
+/// The bucket never reads a clock: [`TokenBucket::try_admit`] takes the
+/// current tick (the server passes its global admission counter) and
+/// refills `rate · Δticks` tokens, capped at `burst`.  Admissions over
+/// any tick span `t` are therefore bounded by `burst + rate · t` — the
+/// property `tests/properties.rs` pins — and a given tick sequence
+/// always produces the same admit/reject pattern, so the limiter never
+/// perturbs simulation results, only which requests run.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    limit: RateLimit,
+    tokens: f64,
+    last_tick: u64,
+}
+
+impl TokenBucket {
+    /// A full bucket (a fresh connection starts with its whole burst).
+    pub fn new(limit: RateLimit) -> TokenBucket {
+        TokenBucket { limit, tokens: limit.burst, last_tick: 0 }
+    }
+
+    /// Try to take one token at `now_tick` (monotonic; earlier ticks
+    /// are clamped, never panic).  Returns `true` when the request is
+    /// admitted.
+    pub fn try_admit(&mut self, now_tick: u64) -> bool {
+        let dt = now_tick.saturating_sub(self.last_tick) as f64;
+        self.tokens = (self.tokens + dt * self.limit.rate).min(self.limit.burst);
+        self.last_tick = self.last_tick.max(now_tick);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (diagnostics only).
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+
+    /// The configured limit.
+    pub fn limit(&self) -> RateLimit {
+        self.limit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(RateLimit::parse("").unwrap(), None);
+        assert_eq!(RateLimit::parse("off").unwrap(), None);
+        assert_eq!(
+            RateLimit::parse("8").unwrap(),
+            Some(RateLimit { burst: 8.0, rate: RateLimit::DEFAULT_RATE })
+        );
+        assert_eq!(
+            RateLimit::parse("4:0.5").unwrap(),
+            Some(RateLimit { burst: 4.0, rate: 0.5 })
+        );
+        assert!(RateLimit::parse("0:1").is_err());
+        assert!(RateLimit::parse("4:-1").is_err());
+        assert!(RateLimit::parse("many").is_err());
+    }
+
+    #[test]
+    fn burst_then_refill() {
+        // burst 2, one token per 2 ticks
+        let mut b = TokenBucket::new(RateLimit { burst: 2.0, rate: 0.5 });
+        assert!(b.try_admit(0));
+        assert!(b.try_admit(0));
+        assert!(!b.try_admit(0), "burst exhausted at tick 0");
+        assert!(!b.try_admit(1), "half a token is not a token");
+        assert!(b.try_admit(2), "two ticks refill one token");
+        assert!(!b.try_admit(2));
+    }
+
+    #[test]
+    fn zero_rate_never_refills() {
+        let mut b = TokenBucket::new(RateLimit { burst: 3.0, rate: 0.0 });
+        let admitted = (0..100u64).filter(|&t| b.try_admit(t * 10)).count();
+        assert_eq!(admitted, 3);
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let mut b = TokenBucket::new(RateLimit { burst: 2.0, rate: 1.0 });
+        assert!(b.try_admit(0));
+        // a huge idle gap refills to the cap, not beyond it
+        assert!(b.try_admit(1_000_000));
+        assert!(b.try_admit(1_000_000));
+        assert!(!b.try_admit(1_000_000));
+    }
+
+    #[test]
+    fn non_monotonic_ticks_are_clamped() {
+        let mut b = TokenBucket::new(RateLimit { burst: 1.0, rate: 1.0 });
+        assert!(b.try_admit(10));
+        // a stale (smaller) tick must not panic or refill
+        assert!(!b.try_admit(5));
+        assert!(b.try_admit(11));
+    }
+}

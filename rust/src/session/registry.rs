@@ -1,0 +1,508 @@
+//! The session registry: named, `Arc`-shared sessions holding trained
+//! policy state (DESIGN.md §14).
+//!
+//! A [`Session`] binds a name to a [`SessionConfig`] (training start
+//! hour + placement horizon) and — optionally — its own world built
+//! from a sealed price-store snapshot; sessions without their own world
+//! run against the serving coordinator's world.  The expensive part,
+//! [`TrainedState`], is built lazily exactly once per session
+//! (`OnceLock`), so the first submit trains and every later submit
+//! reuses; `snapshot load` installs a pre-trained state, so a loaded
+//! session never trains at all.
+//!
+//! The registry itself is a `Mutex<BTreeMap>` (deterministic iteration
+//! order, per lint rule d1) with a capacity cap: creating past the cap
+//! evicts the least-recently-touched session, ties broken by name, so
+//! a given operation sequence always evicts the same session.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::coordinator::Metrics;
+use crate::market::analytics::{PlacementScores, SurvivalCurves};
+use crate::scenario::PolicyKind;
+use crate::sim::World;
+use crate::util::json::Json;
+
+/// Default registry capacity (`serve --sessions`).
+pub const DEFAULT_SESSION_CAP: usize = 64;
+
+/// Longest accepted session name.
+pub const MAX_NAME_LEN: usize = 64;
+
+/// Per-session training knobs, fixed at create time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionConfig {
+    /// Hour within the trace every session-bound run starts at; also
+    /// the end of the Predictive training prefix.
+    pub start_t: f64,
+    /// Placement-score horizon (hours) for the trained
+    /// `MarketAnalytics::placement_scores` table.
+    pub horizon_h: f64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> SessionConfig {
+        // the paper's fixed job point is 8 h — a sensible placement
+        // horizon for sessions that never say otherwise
+        SessionConfig { start_t: 0.0, horizon_h: 8.0 }
+    }
+}
+
+/// The expensive, shareable product of training a session: the
+/// Predictive survival-curve fit plus the placement-score table.  Both
+/// are pure functions of (world, config), so one instance serves every
+/// submit of a session — and every session loaded from the same
+/// snapshot — bit-identically.
+#[derive(Clone, Debug)]
+pub struct TrainedState {
+    /// Survival curves fitted on the trace prefix `[0, start_t)` (the
+    /// exact fit `scenario::Sweep` would train for the same world and
+    /// start, so session sweeps are bit-identical to in-process ones).
+    pub curves: SurvivalCurves,
+    /// Placement scores at the session's horizon.
+    pub scores: PlacementScores,
+}
+
+impl TrainedState {
+    /// Train from scratch (the one-time cost sessions amortize).
+    pub fn train(world: &World, cfg: &SessionConfig) -> TrainedState {
+        TrainedState {
+            curves: PolicyKind::train_survival_curves(world, cfg.start_t),
+            scores: world.analytics.placement_scores(&world.catalog, cfg.horizon_h),
+        }
+    }
+}
+
+/// One named session.  Shared across connection threads as an
+/// `Arc<Session>`; the trained state is interior-mutable through a
+/// `OnceLock` so training happens at most once without holding the
+/// registry lock.
+#[derive(Debug)]
+pub struct Session {
+    name: String,
+    config: SessionConfig,
+    /// A session-private world (from `session create --prices`); `None`
+    /// means the session runs on the serving coordinator's world.
+    world: Option<Arc<World>>,
+    trained: OnceLock<Arc<TrainedState>>,
+}
+
+impl Session {
+    fn new(name: String, config: SessionConfig, world: Option<Arc<World>>) -> Session {
+        Session { name, config, world, trained: OnceLock::new() }
+    }
+
+    /// A session whose trained state came off disk (`snapshot load`):
+    /// it will never train.
+    pub fn preloaded(name: String, config: SessionConfig, trained: TrainedState) -> Session {
+        let cell = OnceLock::new();
+        let _ = cell.set(Arc::new(trained));
+        Session { name, config, world: None, trained: cell }
+    }
+
+    /// The session's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The training knobs fixed at create time.
+    pub fn config(&self) -> SessionConfig {
+        self.config
+    }
+
+    /// The world this session runs in: its own (if created from a
+    /// price snapshot) or the caller's fallback (the serving world).
+    pub fn world_or<'a>(&'a self, fallback: &'a World) -> &'a World {
+        self.world.as_deref().unwrap_or(fallback)
+    }
+
+    /// Whether this session carries a private world.
+    pub fn has_own_world(&self) -> bool {
+        self.world.is_some()
+    }
+
+    /// Whether the trained state has been built (or loaded) already.
+    pub fn is_trained(&self) -> bool {
+        self.trained.get().is_some()
+    }
+
+    /// The trained state, building it on first use.  `metrics` counts
+    /// the build (`session_curve_trains`) — the counter
+    /// `tests/session_equivalence.rs` pins at one train per session no
+    /// matter how many submits follow.
+    pub fn trained_or_train(&self, world: &World, metrics: &Metrics) -> Arc<TrainedState> {
+        self.trained
+            .get_or_init(|| {
+                Metrics::inc(&metrics.session_curve_trains);
+                Arc::new(TrainedState::train(world, &self.config))
+            })
+            .clone()
+    }
+
+    /// An untrained copy with the same name/config/world (`session
+    /// reset`): the next submit retrains from the current world state.
+    fn fresh_clone(&self) -> Session {
+        Session::new(self.name.clone(), self.config, self.world.clone())
+    }
+}
+
+/// A registry entry plus its bookkeeping.
+struct Entry {
+    session: Arc<Session>,
+    /// Submit-class requests routed through this session.
+    submits: u64,
+    /// Monotonic registry tick of the last create/checkout — the
+    /// eviction key (smallest evicts first, name breaks ties).
+    last_touch: u64,
+}
+
+struct Inner {
+    touch: u64,
+    entries: BTreeMap<String, Entry>,
+}
+
+/// Named-session registry with LRU-by-operation eviction.
+///
+/// All mutation is behind one mutex; training happens outside it (see
+/// [`Session::trained_or_train`]), so a cold session training for
+/// seconds never blocks other tenants' lookups.
+pub struct SessionRegistry {
+    capacity: usize,
+    metrics: Arc<Metrics>,
+    inner: Mutex<Inner>,
+}
+
+impl SessionRegistry {
+    /// An empty registry holding at most `capacity` sessions (clamped
+    /// to ≥ 1), counting into `metrics`.
+    pub fn new(capacity: usize, metrics: Arc<Metrics>) -> SessionRegistry {
+        SessionRegistry {
+            capacity: capacity.max(1),
+            metrics,
+            inner: Mutex::new(Inner { touch: 0, entries: BTreeMap::new() }),
+        }
+    }
+
+    /// The configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Live sessions.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when no session exists.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Create a named session.  Fails on a duplicate or invalid name;
+    /// evicts the least-recently-touched session when full.
+    pub fn create(
+        &self,
+        name: &str,
+        config: SessionConfig,
+        world: Option<Arc<World>>,
+    ) -> Result<Arc<Session>, SessionError> {
+        validate_name(name)?;
+        let session = Arc::new(Session::new(name.to_string(), config, world));
+        self.insert(session.clone())?;
+        Metrics::inc(&self.metrics.sessions_created);
+        Ok(session)
+    }
+
+    /// Install a session loaded from a snapshot (counts
+    /// `sessions_loaded` instead of `sessions_created`).
+    pub fn insert_loaded(&self, session: Session) -> Result<Arc<Session>, SessionError> {
+        validate_name(session.name())?;
+        let session = Arc::new(session);
+        self.insert(session.clone())?;
+        Metrics::inc(&self.metrics.sessions_loaded);
+        Ok(session)
+    }
+
+    fn insert(&self, session: Arc<Session>) -> Result<(), SessionError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.entries.contains_key(session.name()) {
+            return Err(SessionError::AlreadyExists(session.name().to_string()));
+        }
+        if inner.entries.len() >= self.capacity {
+            // deterministic LRU: smallest (last_touch, name) goes
+            let victim = inner
+                .entries
+                .iter()
+                .min_by_key(|(name, e)| (e.last_touch, name.as_str().to_string()))
+                .map(|(name, _)| name.clone())
+                .expect("capacity ≥ 1 and the map is full");
+            inner.entries.remove(&victim);
+            Metrics::inc(&self.metrics.sessions_evicted);
+            crate::log_warn!(
+                "session registry full ({}): evicted '{victim}' for '{}'",
+                self.capacity,
+                session.name()
+            );
+        }
+        inner.touch += 1;
+        let touch = inner.touch;
+        inner.entries.insert(
+            session.name().to_string(),
+            Entry { session, submits: 0, last_touch: touch },
+        );
+        Ok(())
+    }
+
+    /// Look up a session without touching its LRU position.
+    pub fn get(&self, name: &str) -> Option<Arc<Session>> {
+        self.inner.lock().unwrap().entries.get(name).map(|e| e.session.clone())
+    }
+
+    /// Route one submit-class request through `name`: bumps the LRU
+    /// position and the per-session submit counter.
+    pub fn checkout(&self, name: &str) -> Result<Arc<Session>, SessionError> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.touch += 1;
+        let touch = inner.touch;
+        let entry = inner
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| SessionError::Unknown(name.to_string()))?;
+        entry.submits += 1;
+        entry.last_touch = touch;
+        Ok(entry.session.clone())
+    }
+
+    /// Drop a session's trained state (it retrains on the next submit);
+    /// the per-session submit counter restarts too.
+    pub fn reset(&self, name: &str) -> Result<(), SessionError> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| SessionError::Unknown(name.to_string()))?;
+        entry.session = Arc::new(entry.session.fresh_clone());
+        entry.submits = 0;
+        Ok(())
+    }
+
+    /// Remove a session.
+    pub fn delete(&self, name: &str) -> Result<(), SessionError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.entries.remove(name).is_none() {
+            return Err(SessionError::Unknown(name.to_string()));
+        }
+        Metrics::inc(&self.metrics.sessions_deleted);
+        Ok(())
+    }
+
+    /// Status of one session.
+    pub fn status(&self, name: &str) -> Option<SessionInfo> {
+        let inner = self.inner.lock().unwrap();
+        inner.entries.get(name).map(|e| SessionInfo::of(e))
+    }
+
+    /// Every session, sorted by name (the `BTreeMap` order).
+    pub fn list(&self) -> Vec<SessionInfo> {
+        let inner = self.inner.lock().unwrap();
+        inner.entries.values().map(SessionInfo::of).collect()
+    }
+}
+
+/// A point-in-time view of one session, JSON-serializable for the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionInfo {
+    /// Session name.
+    pub name: String,
+    /// Whether the trained state exists (false = next submit trains).
+    pub trained: bool,
+    /// Submit-class requests routed through the session so far.
+    pub submits: u64,
+    /// Training start hour.
+    pub start_t: f64,
+    /// Placement horizon (hours).
+    pub horizon_h: f64,
+    /// Whether the session carries its own price-snapshot world.
+    pub own_world: bool,
+}
+
+impl SessionInfo {
+    fn of(e: &Entry) -> SessionInfo {
+        SessionInfo {
+            name: e.session.name().to_string(),
+            trained: e.session.is_trained(),
+            submits: e.submits,
+            start_t: e.session.config().start_t,
+            horizon_h: e.session.config().horizon_h,
+            own_world: e.session.has_own_world(),
+        }
+    }
+
+    /// The wire representation (`session status` / `session list`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("trained", Json::Bool(self.trained)),
+            ("submits", Json::num(self.submits as f64)),
+            ("start_t", Json::num(self.start_t)),
+            ("horizon_h", Json::num(self.horizon_h)),
+            ("own_world", Json::Bool(self.own_world)),
+        ])
+    }
+}
+
+/// Session names double as snapshot file stems, so the accepted
+/// alphabet is deliberately narrow: `[A-Za-z0-9][A-Za-z0-9_-]*`, at
+/// most [`MAX_NAME_LEN`] bytes — no separators, no dotfiles, no path
+/// traversal.
+pub fn validate_name(name: &str) -> Result<(), SessionError> {
+    let ok = !name.is_empty()
+        && name.len() <= MAX_NAME_LEN
+        && name.chars().next().is_some_and(|c| c.is_ascii_alphanumeric())
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_');
+    if ok {
+        Ok(())
+    } else {
+        Err(SessionError::BadName(name.to_string()))
+    }
+}
+
+/// Session-registry failures, all client errors on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SessionError {
+    /// No session under that name.
+    Unknown(String),
+    /// A session under that name already exists.
+    AlreadyExists(String),
+    /// The name fails [`validate_name`].
+    BadName(String),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Unknown(n) => write!(f, "unknown session '{n}'"),
+            SessionError::AlreadyExists(n) => write!(f, "session '{n}' already exists"),
+            SessionError::BadName(n) => write!(
+                f,
+                "bad session name '{n}' (want [A-Za-z0-9][A-Za-z0-9_-]*, ≤ {MAX_NAME_LEN} bytes)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry(cap: usize) -> SessionRegistry {
+        SessionRegistry::new(cap, Arc::new(Metrics::new()))
+    }
+
+    fn world() -> World {
+        World::generate(8, 0.5, 5)
+    }
+
+    #[test]
+    fn create_checkout_delete_lifecycle() {
+        let r = registry(4);
+        r.create("a", SessionConfig::default(), None).unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(matches!(
+            r.create("a", SessionConfig::default(), None),
+            Err(SessionError::AlreadyExists(_))
+        ));
+        let s = r.checkout("a").unwrap();
+        assert_eq!(s.name(), "a");
+        assert_eq!(r.status("a").unwrap().submits, 1);
+        assert!(matches!(r.checkout("nope"), Err(SessionError::Unknown(_))));
+        r.delete("a").unwrap();
+        assert!(r.is_empty());
+        assert!(matches!(r.delete("a"), Err(SessionError::Unknown(_))));
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(validate_name("fleet-7_a").is_ok());
+        for bad in ["", ".hidden", "a/b", "a b", "-lead", &"x".repeat(65)] {
+            assert!(validate_name(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn trains_exactly_once_and_counts() {
+        let m = Arc::new(Metrics::new());
+        let r = SessionRegistry::new(4, m.clone());
+        let w = world();
+        let s = r.create("a", SessionConfig { start_t: 100.0, horizon_h: 8.0 }, None).unwrap();
+        assert!(!s.is_trained());
+        let t1 = s.trained_or_train(&w, &m);
+        let t2 = s.trained_or_train(&w, &m);
+        assert!(Arc::ptr_eq(&t1, &t2), "second call must reuse the first fit");
+        // ordering: stats counter read in a single-threaded test
+        let trains = m.session_curve_trains.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(trains, 1);
+        assert!(s.is_trained());
+        assert_eq!(t1.curves.markets, w.n_markets());
+        assert_eq!(t1.scores.markets, w.n_markets());
+    }
+
+    #[test]
+    fn reset_forgets_trained_state() {
+        let m = Arc::new(Metrics::new());
+        let r = SessionRegistry::new(4, m.clone());
+        let w = world();
+        let s = r.create("a", SessionConfig::default(), None).unwrap();
+        s.trained_or_train(&w, &m);
+        r.checkout("a").unwrap();
+        r.reset("a").unwrap();
+        let info = r.status("a").unwrap();
+        assert!(!info.trained);
+        assert_eq!(info.submits, 0);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_deterministic() {
+        let m = Arc::new(Metrics::new());
+        let r = SessionRegistry::new(2, m.clone());
+        r.create("a", SessionConfig::default(), None).unwrap();
+        r.create("b", SessionConfig::default(), None).unwrap();
+        r.checkout("a").unwrap(); // b is now least-recently-touched
+        r.create("c", SessionConfig::default(), None).unwrap();
+        assert!(r.get("b").is_none(), "b should have been evicted");
+        assert!(r.get("a").is_some() && r.get("c").is_some());
+        // ordering: stats counter read in a single-threaded test
+        assert_eq!(m.sessions_evicted.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn preloaded_sessions_never_train() {
+        let m = Arc::new(Metrics::new());
+        let r = SessionRegistry::new(4, m.clone());
+        let w = world();
+        let cfg = SessionConfig { start_t: 50.0, horizon_h: 8.0 };
+        let trained = TrainedState::train(&w, &cfg);
+        let s = r
+            .insert_loaded(Session::preloaded("warm".into(), cfg, trained.clone()))
+            .unwrap();
+        assert!(s.is_trained());
+        let got = s.trained_or_train(&w, &m);
+        assert_eq!(got.curves.s, trained.curves.s, "loaded fit must be reused verbatim");
+        // ordering: stats counter reads in a single-threaded test
+        assert_eq!(m.session_curve_trains.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(m.sessions_loaded.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn list_is_name_sorted() {
+        let r = registry(8);
+        for n in ["zeta", "alpha", "mid"] {
+            r.create(n, SessionConfig::default(), None).unwrap();
+        }
+        let names: Vec<String> = r.list().into_iter().map(|i| i.name).collect();
+        assert_eq!(names, ["alpha", "mid", "zeta"]);
+    }
+}

@@ -1,0 +1,499 @@
+//! Durable session snapshots (`.sss` files, DESIGN.md §14).
+//!
+//! A snapshot persists a session's expensive [`TrainedState`] — the
+//! Predictive survival-curve fit and the placement-score table — plus
+//! the [`SessionConfig`] it was trained under and a fingerprint of the
+//! world it was trained *on*.  `snapshot load` refuses a snapshot whose
+//! fingerprint disagrees with the serving world: reusing curves fitted
+//! on a different trace would silently change results, which is the one
+//! thing this subsystem promises never to do.
+//!
+//! The framing deliberately mirrors `market::store`'s `.sps` format
+//! (magic + `u32` version + little-endian blocks + trailing FNV-1a-64
+//! checksum over everything before the trailer) so a reader of one
+//! format can audit the other.  Loading never panics on corrupt input:
+//! every length is bounds-checked and every failure is a typed
+//! [`SnapshotError`].
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::market::analytics::{PlacementScores, SurvivalCurves};
+use crate::market::store::fnv1a64;
+use crate::sim::World;
+
+use super::registry::{validate_name, Session, SessionConfig, TrainedState};
+
+/// Magic bytes opening every session snapshot ("SIWOFT SessioN").
+pub const MAGIC: &[u8; 8] = b"SIWOFTSN";
+
+/// Current on-disk format version.
+pub const VERSION: u32 = 1;
+
+/// File extension for session snapshots (session snapshot state).
+pub const EXTENSION: &str = "sss";
+
+/// A compact identity of the world a snapshot was trained on: market
+/// and hour counts plus an FNV-1a hash over the raw trace and on-demand
+/// price bits.  Two worlds with equal fingerprints produce bit-identical
+/// trained state, so a fingerprint match is exactly the precondition for
+/// reusing a snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorldFingerprint {
+    /// Markets in the trained world.
+    pub markets: u32,
+    /// Hourly steps in the trained world's trace.
+    pub hours: u32,
+    /// FNV-1a-64 over the trace price bits then the on-demand bits.
+    pub hash: u64,
+}
+
+impl WorldFingerprint {
+    /// Fingerprint a world.
+    pub fn of(world: &World) -> WorldFingerprint {
+        let mut bytes = Vec::with_capacity((world.trace.prices.len() + world.od.len()) * 4);
+        for &p in &world.trace.prices {
+            bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+        }
+        for &p in &world.od {
+            bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+        }
+        WorldFingerprint {
+            markets: world.trace.markets as u32,
+            hours: world.trace.hours as u32,
+            hash: fnv1a64(&bytes),
+        }
+    }
+}
+
+/// A session's durable form: name, config, world fingerprint, and the
+/// trained state itself.
+#[derive(Clone, Debug)]
+pub struct SessionSnapshot {
+    /// The session name (also the file stem on disk).
+    pub name: String,
+    /// The config the state was trained under.
+    pub config: SessionConfig,
+    /// Identity of the world the state was trained on.
+    pub fingerprint: WorldFingerprint,
+    /// The trained state being persisted.
+    pub trained: TrainedState,
+}
+
+impl SessionSnapshot {
+    /// Capture a session's trained state for persistence.  `trained`
+    /// must have come from `world` (the caller trains first if cold).
+    pub fn capture(
+        name: &str,
+        config: SessionConfig,
+        world: &World,
+        trained: &TrainedState,
+    ) -> SessionSnapshot {
+        SessionSnapshot {
+            name: name.to_string(),
+            config,
+            fingerprint: WorldFingerprint::of(world),
+            trained: trained.clone(),
+        }
+    }
+
+    /// Check the snapshot against a serving world before reuse.
+    pub fn verify_world(&self, world: &World) -> Result<(), SnapshotError> {
+        let got = WorldFingerprint::of(world);
+        if got == self.fingerprint {
+            Ok(())
+        } else {
+            Err(SnapshotError::WorldMismatch { want: self.fingerprint, got })
+        }
+    }
+
+    /// Rebuild a registry-insertable session whose trained state is the
+    /// snapshot's (it will never retrain).
+    pub fn into_session(self) -> Session {
+        Session::preloaded(self.name, self.config, self.trained)
+    }
+
+    /// Serialize to the framed binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            64 + self.name.len()
+                + self.trained.curves.s.len() * 4
+                + self.trained.scores.score.len() * 4,
+        );
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.name.as_bytes());
+        out.extend_from_slice(&self.config.start_t.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.config.horizon_h.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.markets.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.hours.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.hash.to_le_bytes());
+        let c = &self.trained.curves;
+        out.extend_from_slice(&(c.markets as u32).to_le_bytes());
+        out.extend_from_slice(&(c.t_buckets as u32).to_le_bytes());
+        for &v in &c.s {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let p = &self.trained.scores;
+        out.extend_from_slice(&(p.markets as u32).to_le_bytes());
+        out.extend_from_slice(&p.horizon_h.to_bits().to_le_bytes());
+        for &v in &p.score {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let checksum = fnv1a64(&out);
+        out.extend_from_slice(&checksum.to_le_bytes());
+        out
+    }
+
+    /// Parse the framed binary format, validating magic, checksum,
+    /// version, block lengths, and cross-block consistency — in that
+    /// order, so a corrupt file reports the earliest detectable fault.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot, SnapshotError> {
+        if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            return Err(SnapshotError::Truncated { need: MAGIC.len() + 12, have: bytes.len() });
+        }
+        let body_len = bytes.len() - 8;
+        let mut trailer = [0u8; 8];
+        trailer.copy_from_slice(&bytes[body_len..]);
+        let expected = u64::from_le_bytes(trailer);
+        let got = fnv1a64(&bytes[..body_len]);
+        if expected != got {
+            return Err(SnapshotError::Checksum { expected, got });
+        }
+        let mut cur = Cursor { b: &bytes[MAGIC.len()..body_len], pos: 0 };
+        let version = cur.u32()?;
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let name_len = cur.u32()? as usize;
+        if name_len > super::registry::MAX_NAME_LEN {
+            return Err(SnapshotError::Corrupt(format!("name length {name_len} out of range")));
+        }
+        let name = String::from_utf8(cur.take(name_len)?.to_vec())
+            .map_err(|_| SnapshotError::Corrupt("session name is not UTF-8".into()))?;
+        let start_t = f64::from_bits(cur.u64()?);
+        let horizon_h = f64::from_bits(cur.u64()?);
+        if !start_t.is_finite() || !horizon_h.is_finite() {
+            return Err(SnapshotError::Corrupt("non-finite session config".into()));
+        }
+        let fingerprint = WorldFingerprint {
+            markets: cur.u32()?,
+            hours: cur.u32()?,
+            hash: cur.u64()?,
+        };
+        let c_markets = cur.u32()? as usize;
+        let t_buckets = cur.u32()? as usize;
+        let n = c_markets
+            .checked_mul(t_buckets)
+            .ok_or_else(|| SnapshotError::Corrupt("curve dimensions overflow".into()))?;
+        let mut s = Vec::with_capacity(n);
+        for _ in 0..n {
+            s.push(f32::from_bits(cur.u32()?));
+        }
+        let p_markets = cur.u32()? as usize;
+        let p_horizon = f64::from_bits(cur.u64()?);
+        let mut score = Vec::with_capacity(p_markets);
+        for _ in 0..p_markets {
+            score.push(f32::from_bits(cur.u32()?));
+        }
+        if cur.pos != cur.b.len() {
+            return Err(SnapshotError::Corrupt(format!(
+                "{} trailing bytes after the score block",
+                cur.b.len() - cur.pos
+            )));
+        }
+        if c_markets != fingerprint.markets as usize || p_markets != c_markets {
+            return Err(SnapshotError::Corrupt(format!(
+                "market counts disagree: fingerprint {}, curves {c_markets}, scores {p_markets}",
+                fingerprint.markets
+            )));
+        }
+        Ok(SessionSnapshot {
+            name,
+            config: SessionConfig { start_t, horizon_h },
+            fingerprint,
+            trained: TrainedState {
+                curves: SurvivalCurves { markets: c_markets, t_buckets, s },
+                scores: PlacementScores { markets: p_markets, horizon_h: p_horizon, score },
+            },
+        })
+    }
+
+    /// Write the snapshot to `dir/<name>.sss` (creating `dir` if
+    /// missing), returning the path and byte size.
+    pub fn save(&self, dir: &Path) -> Result<(PathBuf, usize), SnapshotError> {
+        validate_name(&self.name)
+            .map_err(|e| SnapshotError::Corrupt(e.to_string()))?;
+        std::fs::create_dir_all(dir)?;
+        let path = snapshot_path(dir, &self.name);
+        let bytes = self.to_bytes();
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(&bytes)?;
+        Ok((path, bytes.len()))
+    }
+
+    /// Read and parse `dir/<name>.sss`.
+    pub fn load(dir: &Path, name: &str) -> Result<SessionSnapshot, SnapshotError> {
+        validate_name(name).map_err(|e| SnapshotError::Corrupt(e.to_string()))?;
+        let mut bytes = Vec::new();
+        std::fs::File::open(snapshot_path(dir, name))?.read_to_end(&mut bytes)?;
+        let snap = SessionSnapshot::from_bytes(&bytes)?;
+        if snap.name != name {
+            return Err(SnapshotError::Corrupt(format!(
+                "snapshot file '{name}.{EXTENSION}' contains session '{}'",
+                snap.name
+            )));
+        }
+        Ok(snap)
+    }
+
+    /// Delete `dir/<name>.sss`.
+    pub fn delete(dir: &Path, name: &str) -> Result<(), SnapshotError> {
+        validate_name(name).map_err(|e| SnapshotError::Corrupt(e.to_string()))?;
+        std::fs::remove_file(snapshot_path(dir, name))?;
+        Ok(())
+    }
+
+    /// Every `.sss` file in `dir` as `(name, byte size)`, name-sorted.
+    /// A missing directory is an empty listing, not an error.
+    pub fn list(dir: &Path) -> Result<Vec<(String, u64)>, SnapshotError> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(SnapshotError::Io(e)),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(EXTENSION) {
+                continue;
+            }
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+            if validate_name(stem).is_err() {
+                continue;
+            }
+            out.push((stem.to_string(), entry.metadata()?.len()));
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+fn snapshot_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.{EXTENSION}"))
+}
+
+/// Bounds-checked little-endian reader over the snapshot body.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(SnapshotError::Truncated { need: usize::MAX, have: self.b.len() })?;
+        if end > self.b.len() {
+            return Err(SnapshotError::Truncated { need: end, have: self.b.len() });
+        }
+        let out = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        let mut v = [0u8; 4];
+        v.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(v))
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        let mut v = [0u8; 8];
+        v.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(v))
+    }
+}
+
+/// Everything that can go wrong saving or loading a session snapshot.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// Filesystem failure.
+    Io(std::io::Error),
+    /// The file does not open with [`MAGIC`].
+    BadMagic,
+    /// A version this build does not read.
+    BadVersion(u32),
+    /// The file ends before a declared block does.
+    Truncated {
+        /// Bytes the block needed.
+        need: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// The FNV-1a trailer disagrees with the body.
+    Checksum {
+        /// Checksum stored in the trailer.
+        expected: u64,
+        /// Checksum recomputed over the body.
+        got: u64,
+    },
+    /// Structurally invalid content behind a valid checksum.
+    Corrupt(String),
+    /// The snapshot was trained on a different world than the one
+    /// serving — reusing it would change results.
+    WorldMismatch {
+        /// Fingerprint stored in the snapshot.
+        want: WorldFingerprint,
+        /// Fingerprint of the serving world.
+        got: WorldFingerprint,
+    },
+}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> SnapshotError {
+        SnapshotError::Io(e)
+    }
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "io: {e}"),
+            SnapshotError::BadMagic => write!(f, "not a session snapshot (bad magic)"),
+            SnapshotError::BadVersion(v) => {
+                write!(f, "unsupported session-snapshot version {v} (this build reads {VERSION})")
+            }
+            SnapshotError::Truncated { need, have } => {
+                write!(f, "truncated session snapshot: need {need} bytes, have {have}")
+            }
+            SnapshotError::Checksum { expected, got } => write!(
+                f,
+                "session snapshot checksum mismatch: trailer {expected:#018x}, body {got:#018x}"
+            ),
+            SnapshotError::Corrupt(msg) => write!(f, "corrupt session snapshot: {msg}"),
+            SnapshotError::WorldMismatch { want, got } => write!(
+                f,
+                "session snapshot was trained on a different world \
+                 (snapshot {}x{}h hash {:#018x}, serving {}x{}h hash {:#018x})",
+                want.markets, want.hours, want.hash, got.markets, got.hours, got.hash
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (World, SessionSnapshot) {
+        let world = World::generate(8, 0.5, 9);
+        let config = SessionConfig { start_t: 120.0, horizon_h: 8.0 };
+        let trained = TrainedState::train(&world, &config);
+        let snap = SessionSnapshot::capture("warm", config, &world, &trained);
+        (world, snap)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("siwoft-sss-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let (_, snap) = sample();
+        let bytes = snap.to_bytes();
+        let back = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.name, snap.name);
+        assert_eq!(back.config, snap.config);
+        assert_eq!(back.fingerprint, snap.fingerprint);
+        assert_eq!(back.trained.curves.s, snap.trained.curves.s);
+        assert_eq!(back.trained.scores.score, snap.trained.scores.score);
+        assert_eq!(back.trained.scores.horizon_h, snap.trained.scores.horizon_h);
+    }
+
+    #[test]
+    fn save_load_delete_list() {
+        let (_, snap) = sample();
+        let dir = tmpdir("lifecycle");
+        let (path, size) = snap.save(&dir).unwrap();
+        assert!(path.ends_with("warm.sss"));
+        assert_eq!(SessionSnapshot::list(&dir).unwrap(), vec![("warm".to_string(), size as u64)]);
+        let back = SessionSnapshot::load(&dir, "warm").unwrap();
+        assert_eq!(back.trained.curves.s, snap.trained.curves.s);
+        SessionSnapshot::delete(&dir, "warm").unwrap();
+        assert!(SessionSnapshot::list(&dir).unwrap().is_empty());
+        assert!(matches!(SessionSnapshot::load(&dir, "warm"), Err(SnapshotError::Io(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn list_of_missing_dir_is_empty() {
+        let dir = tmpdir("missing");
+        assert!(SessionSnapshot::list(&dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn every_flipped_byte_is_rejected() {
+        let (_, snap) = sample();
+        let bytes = snap.to_bytes();
+        // flip a byte in each structural region: magic, version, name,
+        // config, fingerprint, curve payload, score payload, trailer
+        for &i in &[0, 9, 13, 20, 36, 60, bytes.len() - 12, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x20;
+            assert!(
+                SessionSnapshot::from_bytes(&bad).is_err(),
+                "flipped byte {i} was accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_is_rejected_at_every_length() {
+        let (_, snap) = sample();
+        let bytes = snap.to_bytes();
+        for len in [0, 4, MAGIC.len(), MAGIC.len() + 4, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                SessionSnapshot::from_bytes(&bytes[..len]).is_err(),
+                "prefix of {len} bytes was accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn world_mismatch_is_detected() {
+        let (world, snap) = sample();
+        snap.verify_world(&world).unwrap();
+        let other = World::generate(8, 0.5, 10);
+        assert!(matches!(
+            snap.verify_world(&other),
+            Err(SnapshotError::WorldMismatch { .. })
+        ));
+        let err = snap.verify_world(&other).unwrap_err().to_string();
+        assert!(err.contains("different world"), "unhelpful message: {err}");
+    }
+
+    #[test]
+    fn preloaded_session_round_trip() {
+        let (world, snap) = sample();
+        let curves = snap.trained.curves.s.clone();
+        let session = Arc::new(snap.into_session());
+        assert!(session.is_trained());
+        let m = crate::coordinator::Metrics::new();
+        let trained = session.trained_or_train(&world, &m);
+        assert_eq!(trained.curves.s, curves);
+        // ordering: stats counter read in a single-threaded test
+        assert_eq!(m.session_curve_trains.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+}

@@ -468,12 +468,87 @@ fn serve_max_conns_rejects_excess_connections() {
 }
 
 #[test]
+fn serve_session_lifecycle_over_cli() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::process::Stdio;
+
+    let dir = tmpdir("sessions");
+    let mut child = Command::new(bin())
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--markets",
+            "16",
+            "--months",
+            "0.5",
+            "--session-dir",
+            dir.to_str().unwrap(),
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .env("SIWOFT_LOG", "error")
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn siwoft serve");
+    let mut ready = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut ready).unwrap();
+    let addr: SocketAddr = ready
+        .split("listening on ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in banner: {ready:?}"))
+        .parse()
+        .unwrap();
+    let addr_s = addr.to_string();
+
+    let (out, err, ok) =
+        run(&["session", "create", "--addr", &addr_s, "--name", "demo", "--start-t", "96"]);
+    assert!(ok, "session create failed: {err}");
+    assert!(out.contains("demo"), "create reply: {out}");
+
+    let (out, _, ok) = run(&["session", "status", "--addr", &addr_s, "--name", "demo"]);
+    assert!(ok, "session status failed");
+    assert!(out.contains("demo") && out.contains("trained"), "status reply: {out}");
+
+    let (out, _, ok) = run(&["session", "list", "--addr", &addr_s]);
+    assert!(ok && out.contains("demo"), "list reply: {out}");
+
+    // save trains a cold session on demand, then writes <dir>/demo.sss
+    let (out, err, ok) = run(&["session", "snapshot-save", "--addr", &addr_s, "--name", "demo"]);
+    assert!(ok, "snapshot-save failed: {err}");
+    assert!(out.contains("bytes"), "save reply: {out}");
+    let snap = dir.join("demo.sss");
+    assert!(snap.exists(), "no snapshot at {}", snap.display());
+
+    // drop the live session, corrupt the file: load must refuse it and
+    // must NOT resurrect the session
+    let (_, err, ok) = run(&["session", "delete", "--addr", &addr_s, "--name", "demo"]);
+    assert!(ok, "session delete failed: {err}");
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&snap, &bytes).unwrap();
+    let (_, err, ok) = run(&["session", "snapshot-load", "--addr", &addr_s, "--name", "demo"]);
+    assert!(!ok, "corrupted snapshot load unexpectedly succeeded");
+    assert!(err.contains("checksum"), "wanted a checksum complaint, got: {err}");
+    let (_, _, ok) = run(&["session", "status", "--addr", &addr_s, "--name", "demo"]);
+    assert!(!ok, "corrupted session came back to life");
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited with {status:?}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn bench_area_emits_schema_tracked_json() {
     // the BENCH_<area>.json schema EXPERIMENTS.md §Perf tracks:
     // {area, rows: [{case, workers, items_per_sec, p50_us, p99_us}],
     //  seed, git_rev} — pinned here so CI's bench-smoke artifacts stay
     // machine-comparable across PRs
-    for area in ["engine", "service", "ingest"] {
+    for area in ["engine", "service", "ingest", "serve"] {
         let (out, err, ok) = run(&[
             "bench", "--area", area, "--markets", "48", "--months", "0.5", "--seed", "3",
             "--warmup-ms", "5", "--measure-ms", "20", "--out", "-",

@@ -641,3 +641,83 @@ fn prop_tracegen_deterministic_and_positive() {
         Ok(())
     });
 }
+
+// ---- sessions (DESIGN.md §14) -----------------------------------------
+
+#[test]
+fn prop_token_bucket_admissions_bounded_and_deterministic() {
+    // the limiter's contract: over any admission-tick sequence, a
+    // bucket admits at most burst + rate * max_tick requests (initial
+    // burst plus every refill the monotone clock can have granted), and
+    // replaying the same sequence admits exactly the same requests.
+    let gen = |r: &mut Rng| {
+        let burst = 1.0 + r.below(8) as f64;
+        let rate = [0.0, 0.25, 0.5, 1.0, 2.0][r.below(5)];
+        let n = 1 + r.below(120);
+        let mut t = r.below(10) as u64;
+        let ticks: Vec<u64> = (0..n)
+            .map(|_| {
+                if r.chance(0.1) {
+                    // cross-thread skew: ticks may arrive out of order
+                    t = t.saturating_sub(r.below(3) as u64);
+                } else {
+                    t += r.below(4) as u64;
+                }
+                t
+            })
+            .collect();
+        (burst, rate, ticks)
+    };
+    check(300, 14, gen, |(burst, rate, ticks)| {
+        let limit = RateLimit { burst: *burst, rate: *rate };
+        let run = || {
+            let mut bucket = TokenBucket::new(limit);
+            ticks.iter().map(|&t| bucket.try_admit(t)).collect::<Vec<bool>>()
+        };
+        let admitted = run();
+        let n_ok = admitted.iter().filter(|&&a| a).count() as f64;
+        let max_tick = ticks.iter().copied().max().unwrap_or(0) as f64;
+        let bound = burst + rate * max_tick;
+        if n_ok > bound + 1e-9 {
+            return Err(format!("{n_ok} admissions exceed bound {bound}"));
+        }
+        if admitted != run() {
+            return Err("token bucket is not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_job_sweep_with_injected_curves_worker_equivalence() {
+    // a sweep fed a pre-trained survival fit (the session registry's
+    // hot path) must stay bit-identical across worker counts
+    use siwoft::market::analytics::SurvivalCurves;
+    let mut world = World::generate(48, 1.0, 909);
+    let start = world.split_train(0.6);
+    let fit = SurvivalCurves::compute(&world.trace, &world.od, SurvivalCurves::DEFAULT_T);
+    let run = |workers: usize| {
+        siwoft::scenario::Sweep::on(&world)
+            .jobs([Job::new(1, 3.0, 8.0), Job::new(2, 6.0, 16.0)])
+            .policies([PolicyKind::parse("predictive").unwrap(), PolicyKind::default()])
+            .fts([FtKind::None])
+            .rules([RevocationRule::Trace, RevocationRule::ForcedRate { per_day: 4.0 }])
+            .seeds(2)
+            .start_t(start)
+            .workers(workers)
+            .curves(fit.clone())
+            .run()
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 2 * 2 * 2);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.point.job.id, b.point.job.id);
+        assert_eq!(a.agg, b.agg, "aggregate differs for job {}/{:?}", a.point.job.id, a.point.rule);
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (ra, rb) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(ra.ledger, rb.ledger, "ledger differs for job {}", a.point.job.id);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Integration: the multi-tenant session path (DESIGN.md §14) must be a
+//! pure transport — a sweep submitted into a named session over the wire
+//! returns bit-identical numbers to `scenario::Sweep::run` on the same
+//! world, whether the session's trained state was fitted on demand or
+//! restored from a `.sss` snapshot, and the Predictive survival-curve
+//! fit happens exactly once per session (the zero-retrain guarantee).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use siwoft::coordinator::{Coordinator, Server};
+use siwoft::job::Job;
+use siwoft::runtime::AnalyticsEngine;
+use siwoft::scenario::{FtKind, PolicyKind, Sweep, SweepRow};
+use siwoft::sim::{RevocationRule, World};
+use siwoft::util::json::Json;
+
+const START_T: f64 = 180.0; // inside the 360 h test trace
+
+fn spawn(server: Server) -> (Arc<Server>, SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Arc::new(server);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let s2 = server.clone();
+    let t = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    (server, addr, t)
+}
+
+fn ask(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+    writeln!(conn, "{line}").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad reply {reply:?}: {e:?}"))
+}
+
+fn ok(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+    let reply = ask(conn, reader, line);
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{line} -> {reply}");
+    reply
+}
+
+/// The test world: small enough that a cold predictive fit is cheap,
+/// identical on both sides because `World::generate` is deterministic
+/// and `AnalyticsEngine::native()` reproduces the in-world analytics
+/// bit-for-bit (pinned by `integration_runtime::native_matches_direct`).
+fn world() -> World {
+    World::generate(24, 0.5, 33)
+}
+
+/// Assert a wire sweep reply matches locally computed rows, field by
+/// field.  Wire f64s round-trip bit-identically through the JSON layer,
+/// so `==` (not approx) is the right comparison.
+fn assert_rows_match(reply: &Json, local: &[SweepRow]) {
+    let rows = reply.get("rows").and_then(Json::as_arr).expect("rows");
+    assert_eq!(rows.len(), local.len(), "row count");
+    for (wire, want) in rows.iter().zip(local) {
+        assert_eq!(wire.get("policy").and_then(Json::as_str), Some(want.point.policy.label()));
+        assert_eq!(wire.get("ft").and_then(Json::as_str), Some(want.point.ft.label().as_str()));
+        assert_eq!(
+            wire.get("rule").and_then(Json::as_str),
+            Some(want.point.rule.label().as_str())
+        );
+        let runs = wire.get("runs").and_then(Json::as_arr).expect("runs");
+        assert_eq!(runs.len(), want.runs.len(), "run count");
+        for (wr, lr) in runs.iter().zip(&want.runs) {
+            assert_eq!(wr.get("completed").and_then(Json::as_bool), Some(lr.completed));
+            assert_eq!(wr.get("completion_h").and_then(Json::as_f64), Some(lr.completion_h()));
+            assert_eq!(wr.get("cost_usd").and_then(Json::as_f64), Some(lr.cost_usd()));
+            assert_eq!(
+                wr.get("revocations").and_then(Json::as_f64),
+                Some(lr.revocations as f64)
+            );
+            assert_eq!(wr.get("sessions").and_then(Json::as_f64), Some(lr.sessions as f64));
+        }
+    }
+}
+
+fn curve_trains(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>) -> i64 {
+    ok(conn, reader, r#"{"cmd":"status"}"#)
+        .path(&["metrics", "session_curve_trains"])
+        .and_then(Json::as_i64)
+        .unwrap()
+}
+
+#[test]
+fn session_sweep_is_bit_identical_to_in_process_sweep() {
+    let (server, addr, t) =
+        spawn(Server::new(Coordinator::new(world(), AnalyticsEngine::native(), 2)));
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    ok(
+        &mut conn,
+        &mut reader,
+        &format!(r#"{{"cmd":"session","op":"create","name":"s","start_t":{START_T}}}"#),
+    );
+    let sweep = format!(
+        r#"{{"cmd":"sweep","session":"s","jobs":[{{"len_h":2,"mem_gb":8}},{{"len_h":4,"mem_gb":16}}],"policies":["predictive","p"],"fts":["none"],"rules":["trace","count:1"],"seeds":2,"base_seed":7}}"#
+    );
+    let reply = ok(&mut conn, &mut reader, &sweep);
+
+    // the local reference: same world, same grid.  This connection is
+    // the server's first (job-id base 1), so the sweep's two jobs got
+    // ids 2 and 3; the ids matter because each run's RNG stream mixes
+    // in `job.id`.
+    let w = world();
+    let local_sweep = |id0: u64| {
+        Sweep::on(&w)
+            .jobs([Job::new(id0, 2.0, 8.0), Job::new(id0 + 1, 4.0, 16.0)])
+            .policies([PolicyKind::parse("predictive").unwrap(), PolicyKind::parse("p").unwrap()])
+            .fts([FtKind::parse("none").unwrap()])
+            .rules([
+                RevocationRule::parse("trace").unwrap(),
+                RevocationRule::parse("count:1").unwrap(),
+            ])
+            .seeds(2)
+            .base_seed(7)
+            .start_t(START_T)
+            .workers(2)
+            .run()
+    };
+    assert_rows_match(&reply, &local_sweep(2));
+
+    // the zero-retrain guarantee: the predictive fit was trained once
+    // for the whole first sweep, and a second identical sweep reuses it
+    assert_eq!(curve_trains(&mut conn, &mut reader), 1, "first sweep must train exactly once");
+    let again = ok(&mut conn, &mut reader, &sweep);
+    assert_eq!(curve_trains(&mut conn, &mut reader), 1, "second sweep retrained the fit");
+    // the second sweep's jobs got ids 4 and 5
+    assert_rows_match(&again, &local_sweep(4));
+
+    server.request_shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn snapshot_restored_session_is_bit_identical_and_never_retrains() {
+    let dir = std::env::temp_dir().join(format!("siwoft-sess-eq-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (server, addr, t) = spawn(
+        Server::new(Coordinator::new(world(), AnalyticsEngine::native(), 2)).snapshot_dir(&dir),
+    );
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    ok(
+        &mut conn,
+        &mut reader,
+        &format!(r#"{{"cmd":"session","op":"create","name":"s","start_t":{START_T}}}"#),
+    );
+    // cold submit (job id 2): trains the fit, count goes to 1
+    ok(
+        &mut conn,
+        &mut reader,
+        r#"{"cmd":"submit","session":"s","len_h":2,"mem_gb":8,"policy":"predictive","ft":"none"}"#,
+    );
+    assert_eq!(curve_trains(&mut conn, &mut reader), 1);
+
+    // persist, drop, restore: the restored session carries the fit
+    ok(&mut conn, &mut reader, r#"{"cmd":"snapshot","op":"save","name":"s"}"#);
+    ok(&mut conn, &mut reader, r#"{"cmd":"session","op":"delete","name":"s"}"#);
+    ok(&mut conn, &mut reader, r#"{"cmd":"snapshot","op":"load","name":"s"}"#);
+
+    // sweep through the restored session (job id 3)
+    let reply = ok(
+        &mut conn,
+        &mut reader,
+        r#"{"cmd":"sweep","session":"s","jobs":[{"len_h":3,"mem_gb":8}],"policies":["predictive"],"rules":["trace","rate:4"],"seeds":3,"base_seed":11}"#,
+    );
+    let w = world();
+    let local = Sweep::on(&w)
+        .jobs([Job::new(3, 3.0, 8.0)])
+        .policies([PolicyKind::parse("predictive").unwrap()])
+        .fts([FtKind::parse("none").unwrap()])
+        .rules([RevocationRule::parse("trace").unwrap(), RevocationRule::parse("rate:4").unwrap()])
+        .seeds(3)
+        .base_seed(11)
+        .start_t(START_T)
+        .workers(2)
+        .run();
+    assert_rows_match(&reply, &local);
+
+    // a snapshot-restored session must never retrain: still exactly 1
+    assert_eq!(curve_trains(&mut conn, &mut reader), 1, "restored session retrained its fit");
+
+    server.request_shutdown();
+    t.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -120,7 +120,7 @@ impl Coordinator {
 
     /// Record one finished run in the coordinator metrics.
     fn record(&self, r: &JobResult, t0: Instant) {
-        Metrics::add(&self.metrics.decision_us, t0.elapsed().as_micros() as u64);
+        self.metrics.decision.record(t0.elapsed().as_micros() as u64);
         Metrics::add(&self.metrics.decisions, r.sessions as u64);
         Metrics::add(&self.metrics.revocations, r.revocations as u64);
         Metrics::inc(&self.metrics.jobs_submitted);
@@ -178,7 +178,7 @@ impl Coordinator {
     /// metrics (`scenario::Sweep` itself never touches metrics; the
     /// serve path calls this after `Sweep::run`).
     pub fn record_sweep(&self, rows: &[SweepRow], t0: Instant) {
-        Metrics::add(&self.metrics.decision_us, t0.elapsed().as_micros() as u64);
+        self.metrics.decision.record(t0.elapsed().as_micros() as u64);
         for row in rows {
             for r in &row.runs {
                 Metrics::add(&self.metrics.decisions, r.sessions as u64);

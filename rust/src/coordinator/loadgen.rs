@@ -13,8 +13,9 @@ use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
 use crate::err;
+use crate::obs::{HistSnapshot, Histogram};
 use crate::util::error::Result;
-use crate::util::stats::{p50_p99, percentile, sort_samples};
+use crate::util::stats::sort_samples;
 
 /// A trivial-but-real submit: runs an actual (fast) on-demand
 /// simulation on the server, so latencies cover parse → simulate →
@@ -22,8 +23,10 @@ use crate::util::stats::{p50_p99, percentile, sort_samples};
 pub const TRIVIAL_SUBMIT: &str =
     r#"{"cmd":"submit","len_h":1,"mem_gb":8,"policy":"ondemand","ft":"none"}"#;
 
-/// Aggregate of one load run.  Latency vectors are sorted ascending
-/// (ready for [`percentile`]).
+/// Aggregate of one load run.  Raw latency vectors are kept in
+/// collection order; the percentile accessors read the `obs::hist`
+/// log2-bucket snapshots recorded alongside (µs), so no report ever
+/// re-sorts its sample vectors.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
     /// Concurrent client connections.
@@ -32,11 +35,15 @@ pub struct LoadReport {
     pub submits_per_conn: usize,
     /// Wall-clock duration of the whole run (seconds).
     pub wall_s: f64,
-    /// steady-state submit round-trips (ms), sorted
+    /// steady-state submit round-trips (ms), collection order
     pub submit_ms: Vec<f64>,
-    /// connect → first-reply per connection (ms), sorted — the metric a
-    /// polling accept loop inflates
+    /// connect → first-reply per connection (ms), collection order —
+    /// the metric a polling accept loop inflates
     pub first_reply_ms: Vec<f64>,
+    /// submit round-trip distribution (µs)
+    pub submit_hist: HistSnapshot,
+    /// connect-to-first-reply distribution (µs)
+    pub first_reply_hist: HistSnapshot,
 }
 
 impl LoadReport {
@@ -50,20 +57,30 @@ impl LoadReport {
     }
     /// Median submit round-trip (ms).
     pub fn submit_p50_ms(&self) -> f64 {
-        percentile(&self.submit_ms, 50.0)
+        self.submit_hist.percentile(50.0) / 1e3
     }
     /// 99th-percentile submit round-trip (ms).
     pub fn submit_p99_ms(&self) -> f64 {
-        percentile(&self.submit_ms, 99.0)
+        self.submit_hist.percentile(99.0) / 1e3
     }
     /// Median connect-to-first-reply latency (ms).
     pub fn first_reply_p50_ms(&self) -> f64 {
-        percentile(&self.first_reply_ms, 50.0)
+        self.first_reply_hist.percentile(50.0) / 1e3
     }
     /// 99th-percentile connect-to-first-reply latency (ms).
     pub fn first_reply_p99_ms(&self) -> f64 {
-        percentile(&self.first_reply_ms, 99.0)
+        self.first_reply_hist.percentile(99.0) / 1e3
     }
+}
+
+/// Fold a millisecond sample vector into a µs log2-bucket histogram
+/// snapshot (the loadgen reports' percentile backing store).
+fn hist_of_ms(samples: &[f64]) -> HistSnapshot {
+    let h = Histogram::new();
+    for &ms in samples {
+        h.record_f64(ms * 1e3);
+    }
+    h.snapshot()
 }
 
 fn round_trip(writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Result<()> {
@@ -107,15 +124,24 @@ pub fn run_load(addr: SocketAddr, conns: usize, submits_per_conn: usize) -> Resu
         submit_ms.extend(lats);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    sort_samples(&mut submit_ms);
-    sort_samples(&mut first_reply_ms);
-    Ok(LoadReport { conns, submits_per_conn, wall_s, submit_ms, first_reply_ms })
+    let submit_hist = hist_of_ms(&submit_ms);
+    let first_reply_hist = hist_of_ms(&first_reply_ms);
+    Ok(LoadReport {
+        conns,
+        submits_per_conn,
+        wall_s,
+        submit_ms,
+        first_reply_ms,
+        submit_hist,
+        first_reply_hist,
+    })
 }
 
-/// Aggregate of one session-mode load run (DESIGN.md §14).  Latency
-/// vectors are sorted ascending; the cold/hot split is the headline —
-/// a cold submit pays the Predictive training cost, a hot submit reads
-/// the session's cached fit.
+/// Aggregate of one session-mode load run (DESIGN.md §14).  Raw
+/// latency vectors are kept in collection order (percentiles come from
+/// `obs::hist` snapshots, never from re-sorting); the cold/hot split
+/// is the headline — a cold submit pays the Predictive training cost,
+/// a hot submit reads the session's cached fit.
 #[derive(Clone, Debug)]
 pub struct SessionLoadReport {
     /// Concurrent client connections.
@@ -126,14 +152,20 @@ pub struct SessionLoadReport {
     pub submits_per_session: usize,
     /// Wall-clock duration of the whole run (seconds).
     pub wall_s: f64,
-    /// `session create` round-trips (ms), sorted
+    /// `session create` round-trips (ms), collection order
     pub create_ms: Vec<f64>,
-    /// first submit per session — pays the training cost (ms), sorted
+    /// first submit per session — pays the training cost (ms)
     pub cold_submit_ms: Vec<f64>,
-    /// later submits per session — cached fit (ms), sorted
+    /// later submits per session — cached fit (ms)
     pub hot_submit_ms: Vec<f64>,
-    /// `session delete` round-trips (ms), sorted
+    /// `session delete` round-trips (ms), collection order
     pub delete_ms: Vec<f64>,
+    /// cold-submit distribution (µs)
+    pub cold_hist: HistSnapshot,
+    /// hot-submit distribution (µs)
+    pub hot_hist: HistSnapshot,
+    /// `session create` distribution (µs)
+    pub create_hist: HistSnapshot,
 }
 
 impl SessionLoadReport {
@@ -147,15 +179,15 @@ impl SessionLoadReport {
     }
     /// (p50, p99) of cold (training) submits, ms.
     pub fn cold_p50_p99_ms(&self) -> (f64, f64) {
-        p50_p99(&self.cold_submit_ms)
+        (self.cold_hist.percentile(50.0) / 1e3, self.cold_hist.percentile(99.0) / 1e3)
     }
     /// (p50, p99) of hot (cached) submits, ms.
     pub fn hot_p50_p99_ms(&self) -> (f64, f64) {
-        p50_p99(&self.hot_submit_ms)
+        (self.hot_hist.percentile(50.0) / 1e3, self.hot_hist.percentile(99.0) / 1e3)
     }
     /// (p50, p99) of `session create` round-trips, ms.
     pub fn create_p50_p99_ms(&self) -> (f64, f64) {
-        p50_p99(&self.create_ms)
+        (self.create_hist.percentile(50.0) / 1e3, self.create_hist.percentile(99.0) / 1e3)
     }
 }
 
@@ -228,10 +260,9 @@ pub fn run_session_load(
         delete_ms.extend(delete);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    sort_samples(&mut create_ms);
-    sort_samples(&mut cold_submit_ms);
-    sort_samples(&mut hot_submit_ms);
-    sort_samples(&mut delete_ms);
+    let cold_hist = hist_of_ms(&cold_submit_ms);
+    let hot_hist = hist_of_ms(&hot_submit_ms);
+    let create_hist = hist_of_ms(&create_ms);
     Ok(SessionLoadReport {
         conns,
         rounds,
@@ -241,6 +272,9 @@ pub fn run_session_load(
         cold_submit_ms,
         hot_submit_ms,
         delete_ms,
+        cold_hist,
+        hot_hist,
+        create_hist,
     })
 }
 
@@ -362,6 +396,8 @@ mod tests {
         assert_eq!(report.total_requests(), 15);
         assert_eq!(report.first_reply_ms.len(), 3);
         assert_eq!(report.submit_ms.len(), 3 * 4);
+        assert_eq!(report.submit_hist.count as usize, report.submit_ms.len());
+        assert_eq!(report.first_reply_hist.count as usize, report.first_reply_ms.len());
         assert!(report.submit_p50_ms() > 0.0);
         assert!(report.submit_p50_ms() <= report.submit_p99_ms() * 1.001);
         assert!(report.throughput_per_s() > 0.0);

@@ -1,8 +1,11 @@
 //! Coordinator metrics: lock-free counters snapshot-able as JSON (wired
-//! into the control-plane `status` response and periodic log lines).
+//! into the control-plane `status` response and periodic log lines),
+//! plus log2-bucket latency histograms (`obs::hist`) for the hot-path
+//! timings that used to be sum-only.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::obs::{Expo, Histogram};
 use crate::util::json::Json;
 
 #[derive(Debug, Default)]
@@ -22,8 +25,14 @@ pub struct Metrics {
     pub ondemand_fallbacks: AtomicU64,
     /// Market-analytics refresh epochs completed.
     pub analytics_epochs: AtomicU64,
-    /// microseconds spent in policy decisions (sum)
-    pub decision_us: AtomicU64,
+    /// Microseconds spent in policy decisions, as a full latency
+    /// distribution (count / sum / max / log2 buckets).  The legacy
+    /// `decision_us_total` status field is derived from its exact sum.
+    pub decision: Histogram,
+    /// End-to-end submit-request service time (µs).
+    pub submit: Histogram,
+    /// Session-verb service time (µs): create / step / snapshot ops.
+    pub session: Histogram,
     /// Sessions created via `session create`.
     pub sessions_created: AtomicU64,
     /// Sessions installed from snapshots via `snapshot load`.
@@ -73,7 +82,10 @@ impl Metrics {
         counter.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Snapshot every counter into a JSON object.
+    /// Snapshot every counter into a JSON object.  The pre-histogram
+    /// `decision_us_total` field is kept (derived from the histogram's
+    /// exact sum) so status consumers never break; the distribution
+    /// itself lands in the new `decision_hist` block.
     pub fn snapshot(&self) -> Json {
         // ordering: stats counter reads; snapshots tolerate cross-counter skew by design
         let g = |counter: &AtomicU64| Json::num(counter.load(Ordering::Relaxed) as f64);
@@ -85,7 +97,8 @@ impl Metrics {
             ("decisions", g(&self.decisions)),
             ("ondemand_fallbacks", g(&self.ondemand_fallbacks)),
             ("analytics_epochs", g(&self.analytics_epochs)),
-            ("decision_us_total", g(&self.decision_us)),
+            ("decision_us_total", Json::num(self.decision.sum() as f64)),
+            ("decision_hist", self.decision.snapshot().to_json()),
             ("sessions_created", g(&self.sessions_created)),
             ("sessions_loaded", g(&self.sessions_loaded)),
             ("sessions_evicted", g(&self.sessions_evicted)),
@@ -94,6 +107,34 @@ impl Metrics {
             ("rate_limited_rejects", g(&self.rate_limited_rejects)),
             ("admission_ticks", g(&self.admission_ticks)),
         ])
+    }
+
+    /// Build the unified exposition (`obs::Expo`) of every counter and
+    /// histogram — the one source the `metrics` wire verb, the
+    /// Prometheus-style text form, and the periodic log line all render
+    /// from.
+    pub fn expo(&self) -> Expo {
+        // ordering: stats counter reads; snapshots tolerate cross-counter skew by design
+        let g = |counter: &AtomicU64| counter.load(Ordering::Relaxed);
+        let mut e = Expo::new();
+        e.counter("jobs_submitted", g(&self.jobs_submitted))
+            .counter("jobs_completed", g(&self.jobs_completed))
+            .counter("jobs_failed", g(&self.jobs_failed))
+            .counter("revocations", g(&self.revocations))
+            .counter("decisions", g(&self.decisions))
+            .counter("ondemand_fallbacks", g(&self.ondemand_fallbacks))
+            .counter("analytics_epochs", g(&self.analytics_epochs))
+            .counter("sessions_created", g(&self.sessions_created))
+            .counter("sessions_loaded", g(&self.sessions_loaded))
+            .counter("sessions_evicted", g(&self.sessions_evicted))
+            .counter("sessions_deleted", g(&self.sessions_deleted))
+            .counter("session_curve_trains", g(&self.session_curve_trains))
+            .counter("rate_limited_rejects", g(&self.rate_limited_rejects))
+            .counter("admission_ticks", g(&self.admission_ticks))
+            .hist("decision_us", self.decision.snapshot())
+            .hist("submit_us", self.submit.snapshot())
+            .hist("session_us", self.session.snapshot());
+        e
     }
 }
 
@@ -128,5 +169,31 @@ mod tests {
         let m = Metrics::new();
         let text = m.snapshot().to_string();
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn decision_total_derives_from_histogram_sum() {
+        let m = Metrics::new();
+        m.decision.record(100);
+        m.decision.record(250);
+        let s = m.snapshot();
+        assert_eq!(s.get("decision_us_total").unwrap().as_i64(), Some(350));
+        let h = s.get("decision_hist").unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_i64), Some(2));
+        assert_eq!(h.get("sum").and_then(Json::as_i64), Some(350));
+        assert_eq!(h.get("max").and_then(Json::as_i64), Some(250));
+    }
+
+    #[test]
+    fn expo_carries_counters_and_hists() {
+        let m = Metrics::new();
+        Metrics::inc(&m.jobs_submitted);
+        m.submit.record(40);
+        let e = m.expo();
+        assert!(e.counters().iter().any(|(n, v)| n == "jobs_submitted" && *v == 1));
+        assert!(e.hists().iter().any(|(n, h)| n == "submit_us" && h.count == 1));
+        let text = e.to_prom_text();
+        assert!(text.contains("siwoft_jobs_submitted 1"));
+        assert!(text.contains("siwoft_submit_us_count 1"));
     }
 }

@@ -15,6 +15,8 @@
 //!   ← {"ok":true,"path":…,"bytes":…}
 //!   → {"cmd":"status"}
 //!   ← {"ok":true,"metrics":{…},"server":{…},"sessions":{…},…}
+//!   → {"cmd":"metrics"}
+//!   ← {"ok":true,"metrics":{schema_version,counters,hists},"text":"…"}
 //!   → {"cmd":"shutdown"}
 //!   ← {"ok":true}
 //!
@@ -149,6 +151,9 @@ pub struct Server {
     /// accept-time backpressure: connections beyond this many live ones
     /// are rejected with a JSON error line instead of spawning a thread
     max_conns: usize,
+    /// periodic metrics flush: log a compact exposition line this often
+    /// while serving (`--metrics-every`); `None` disables the flusher
+    metrics_every: Option<Duration>,
 }
 
 impl Server {
@@ -167,6 +172,7 @@ impl Server {
             snapshot_dir: None,
             rate_limit: None,
             max_conns: DEFAULT_MAX_CONNS,
+            metrics_every: None,
         }
     }
 
@@ -199,6 +205,13 @@ impl Server {
         self
     }
 
+    /// Log a compact metrics-exposition line this often while serving
+    /// (builder style; `None` disables the periodic flush).
+    pub fn metrics_every(mut self, period: Option<Duration>) -> Server {
+        self.metrics_every = period;
+        self
+    }
+
     /// The session registry (tests and embedders).
     pub fn registry(&self) -> &SessionRegistry {
         &self.registry
@@ -220,6 +233,28 @@ impl Server {
             snapshot_dir: self.snapshot_dir.clone(),
             rate_limit: self.rate_limit,
             max_conns: self.max_conns,
+        });
+        // periodic metrics flush: a sidecar thread logging the compact
+        // exposition line until shutdown (50 ms shutdown-check slices so
+        // a long period never delays serve() returning by more than one
+        // slice past the latch)
+        let flusher = self.metrics_every.map(|period| {
+            let coordinator = self.coordinator.clone();
+            let shutdown = self.shutdown.clone();
+            std::thread::spawn(move || {
+                let slice = Duration::from_millis(50);
+                'outer: loop {
+                    let mut slept = Duration::ZERO;
+                    while slept < period {
+                        if shutdown.is_set() {
+                            break 'outer;
+                        }
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                    crate::log_info!("metrics {}", coordinator.metrics.expo().compact_line());
+                }
+            })
         });
         let mut handles = Vec::new();
         while !self.shutdown.is_set() {
@@ -284,6 +319,9 @@ impl Server {
             self.stats.live_counter.store(handles.len(), Ordering::Relaxed);
         }
         for h in handles {
+            let _ = h.join();
+        }
+        if let Some(h) = flusher {
             let _ = h.join();
         }
         // ordering: live_counter is a standalone stats counter
@@ -384,15 +422,37 @@ fn need_name(req: &Json) -> Result<&str> {
     req.get("name").and_then(Json::as_str).ok_or_else(|| err!("missing \"name\""))
 }
 
+/// Parse one request line, dispatch it, and record its service time in
+/// the verb-class latency histogram (`submit_us` for submit-class
+/// verbs, `session_us` for session/snapshot management).
 fn handle_request(
     line: &str,
     ctx: &ConnCtx,
     bucket: &mut Option<TokenBucket>,
     next_id: &mut u64,
 ) -> Result<Json> {
-    let c = &*ctx.coordinator;
     let req = Json::parse(line).map_err(|e| err!("bad json: {e}"))?;
-    let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("");
+    let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("").to_string();
+    let t0 = Instant::now();
+    let out = dispatch(&req, &cmd, ctx, bucket, next_id);
+    let us = t0.elapsed().as_micros() as u64;
+    let metrics = &ctx.coordinator.metrics;
+    match cmd.as_str() {
+        "submit" | "sweep" => metrics.submit.record(us),
+        "session" | "snapshot" => metrics.session.record(us),
+        _ => {}
+    }
+    out
+}
+
+fn dispatch(
+    req: &Json,
+    cmd: &str,
+    ctx: &ConnCtx,
+    bucket: &mut Option<TokenBucket>,
+    next_id: &mut u64,
+) -> Result<Json> {
+    let c = &*ctx.coordinator;
     match cmd {
         "submit" => {
             if let Some(rejection) = admit(ctx, bucket) {
@@ -515,7 +575,7 @@ fn handle_request(
             let op = req.get("op").and_then(Json::as_str).unwrap_or("");
             match op {
                 "create" => {
-                    let name = need_name(&req)?;
+                    let name = need_name(req)?;
                     let start_t = req.get("start_t").and_then(Json::as_f64).unwrap_or(0.0);
                     let horizon_h = req
                         .get("horizon_h")
@@ -531,18 +591,18 @@ fn handle_request(
                     Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", Json::str(name))]))
                 }
                 "status" => {
-                    let name = need_name(&req)?;
+                    let name = need_name(req)?;
                     let info =
                         ctx.registry.status(name).ok_or_else(|| err!("unknown session '{name}'"))?;
                     Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", info.to_json())]))
                 }
                 "reset" => {
-                    let name = need_name(&req)?;
+                    let name = need_name(req)?;
                     ctx.registry.reset(name).map_err(|e| err!("{e}"))?;
                     Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", Json::str(name))]))
                 }
                 "delete" => {
-                    let name = need_name(&req)?;
+                    let name = need_name(req)?;
                     ctx.registry.delete(name).map_err(|e| err!("{e}"))?;
                     Ok(Json::obj(vec![("ok", Json::Bool(true)), ("session", Json::str(name))]))
                 }
@@ -566,7 +626,7 @@ fn handle_request(
             let op = req.get("op").and_then(Json::as_str).unwrap_or("");
             match op {
                 "save" => {
-                    let name = need_name(&req)?;
+                    let name = need_name(req)?;
                     let session =
                         ctx.registry.get(name).ok_or_else(|| err!("unknown session '{name}'"))?;
                     let world = session.world_or(&c.world);
@@ -583,7 +643,7 @@ fn handle_request(
                     ]))
                 }
                 "load" => {
-                    let name = need_name(&req)?;
+                    let name = need_name(req)?;
                     let snap = SessionSnapshot::load(dir, name).map_err(|e| err!("{e}"))?;
                     // loaded sessions run on the serving world; curves
                     // fitted on a different trace would silently change
@@ -613,7 +673,7 @@ fn handle_request(
                     ]))
                 }
                 "delete" => {
-                    let name = need_name(&req)?;
+                    let name = need_name(req)?;
                     SessionSnapshot::delete(dir, name).map_err(|e| err!("{e}"))?;
                     Ok(Json::obj(vec![("ok", Json::Bool(true)), ("snapshot", Json::str(name))]))
                 }
@@ -636,6 +696,17 @@ fn handle_request(
                 ]),
             ),
         ])),
+        "metrics" => {
+            // the unified exposition: schema-pinned JSON plus the
+            // Prometheus-style text form, both rendered from one
+            // `obs::Expo` snapshot so they can never disagree
+            let expo = c.metrics.expo();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", expo.to_json()),
+                ("text", Json::str(expo.to_prom_text())),
+            ]))
+        }
         "shutdown" => {
             ctx.shutdown.trigger();
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
@@ -705,6 +776,35 @@ mod tests {
 
         let reply = request(addr, r#"{"cmd":"shutdown"}"#);
         assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_verb_serves_expo_json_and_prom_text() {
+        let (_server, addr, t) = spawn_server(2);
+
+        let reply =
+            request(addr, r#"{"cmd":"submit","len_h":1,"mem_gb":8,"policy":"o","ft":"none"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply}");
+
+        let reply = request(addr, r#"{"cmd":"metrics"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply}");
+        let m = reply.get("metrics").unwrap();
+        assert_eq!(m.get("schema_version").unwrap().as_i64(), Some(1));
+        assert_eq!(m.path(&["counters", "jobs_submitted"]).unwrap().as_i64(), Some(1));
+        // the verb-class latency histograms are exposed alongside
+        assert!(m.path(&["hists", "decision_us"]).is_some());
+        assert!(m.path(&["hists", "submit_us", "count"]).unwrap().as_i64().unwrap() >= 1);
+        let text = reply.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("siwoft_jobs_submitted 1"), "{text}");
+        assert!(text.contains("# TYPE siwoft_submit_us summary"), "{text}");
+
+        // status keeps the legacy sum field and gains the hist block
+        let status = request(addr, r#"{"cmd":"status"}"#);
+        assert!(status.path(&["metrics", "decision_us_total"]).is_some());
+        assert!(status.path(&["metrics", "decision_hist", "count"]).is_some());
+
+        request(addr, r#"{"cmd":"shutdown"}"#);
         t.join().unwrap();
     }
 

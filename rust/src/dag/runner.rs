@@ -48,6 +48,7 @@ use crate::coordinator::Pool;
 use crate::ft::{FtMechanism, Recovery};
 use crate::job::{Job, JobProgress};
 use crate::market::session_cost;
+use crate::obs::TraceEvent;
 use crate::policy::{Ctx, Policy};
 use crate::scenario::{FtKind, Scenario};
 use crate::sim::accounting::{Breakdown, Category, Ledger};
@@ -367,6 +368,16 @@ impl<'a> DagRunner<'a> {
 
         self.policy.reset();
         let policy_name = self.policy.name().to_string();
+        if scratch.trace.is_on() {
+            scratch.trace.emit(
+                t0,
+                TraceEvent::RunStart {
+                    policy: policy_name.clone(),
+                    ft: self.ft.label(),
+                    rule: self.cfg.rule.label(),
+                },
+            );
+        }
         let mut sim = Sim {
             world: self.world,
             policy: self.policy.as_mut(),
@@ -455,6 +466,8 @@ impl<'a> DagRunner<'a> {
         if let DagSchedule::Count { thresholds, .. } = schedule {
             scratch.thresholds = thresholds;
         }
+        scratch.trace.emit(end, TraceEvent::EngineDrained { events: engine.processed() });
+        scratch.trace.emit(end, TraceEvent::RunEnd { completed, cost: result.cost_usd() });
         result
     }
 }
@@ -674,6 +687,14 @@ impl Sim<'_> {
                 self.world.od_price(market)
             };
             let container = &self.world.container;
+            self.scratch.trace.emit(
+                t,
+                TraceEvent::PolicyDecision { job: bin_id, market: market as u64, spot: is_spot },
+            );
+            self.scratch.trace.emit(
+                t,
+                TraceEvent::BidPlaced { job: bin_id, market: market as u64, price, spot: is_spot },
+            );
             let mut stages = Vec::with_capacity(bin.stages.len());
             let mut end_d = 0.0f64;
             for &i in &bin.stages {
@@ -697,6 +718,7 @@ impl Sim<'_> {
                     self.started_at[i] = t;
                 }
                 self.carry[i] = Carry::Fresh; // consumed by this session
+                self.scratch.trace.emit(t, TraceEvent::StageStart { stage: i as u64, bin: bin_id });
                 eng.schedule_at(
                     t + d,
                     Event::Timer { tag: tag(K_STAGE_DONE, self.stage_gen[i], i as u64) },
@@ -757,6 +779,7 @@ impl Sim<'_> {
         };
         self.state[i] = StageState::Done;
         self.completed_at[i] = t;
+        self.scratch.trace.emit(t, TraceEvent::StageDone { stage: i as u64, bin: bin_id });
         if live_after == 0 {
             self.close_bin(bin_id, t);
         }
@@ -790,6 +813,7 @@ impl Sim<'_> {
             return; // closed at the same timestamp before the notice
         };
         self.bin_revocations += 1;
+        self.scratch.trace.emit(t, TraceEvent::Revocation { job: bin_id, market: bin.market as u64 });
         let d = (t - bin.t0).max(0.0);
         let (_, buffer) = session_cost(d, bin.price);
         for bs in &bin.stages {
@@ -836,6 +860,8 @@ impl Sim<'_> {
             self.stage_gen[i] += 1; // invalidate the pending completion
         }
         self.revoked_markets.push(bin.market);
+        let moved = bin.stages.iter().filter(|bs| !bs.done).count() as u64;
+        self.scratch.trace.emit(t, TraceEvent::Repack { bins: 1, moved });
         self.launch_ready(eng, t);
         self.resched_count(eng, t);
     }

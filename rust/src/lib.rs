@@ -38,6 +38,7 @@ pub mod ft;
 pub mod job;
 pub mod lint;
 pub mod market;
+pub mod obs;
 pub mod pack;
 pub mod policy;
 pub mod runtime;
@@ -55,6 +56,7 @@ pub mod prelude {
     pub use crate::ft::{Checkpointing, FtMechanism, Migration, NoFt, Replication};
     pub use crate::job::{Job, JobProgress};
     pub use crate::market::{Catalog, MarketAnalytics, PriceTrace, TraceGenConfig};
+    pub use crate::obs::{Collector, Expo, HistSnapshot, Histogram, TraceEvent, TraceSink};
     pub use crate::policy::{
         Decision, FtSpotPolicy, GreedyCheapest, OnDemandPolicy, PSiwoft, PSiwoftConfig, Policy,
     };

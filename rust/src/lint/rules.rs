@@ -64,6 +64,7 @@ impl Rule {
 /// (and the one root file) where D1/D2 forbid nondeterminism sources.
 pub const RESULT_MODULES: &[&str] = &[
     "sim", "dag", "service", "scenario", "policy", "ft", "job", "market", "pack", "session",
+    "obs",
 ];
 
 /// Tokens D1 forbids in result-producing modules (wall-clock, host
@@ -588,6 +589,17 @@ mod tests {
         assert!(is_result_module("market/importer.rs"));
         let src = "use std::collections::HashMap;\nlet v = std::env::var(\"SNAPSHOT\");\n";
         assert_eq!(run("market/store.rs", src, &[Rule::D1]).len(), 2);
+    }
+
+    #[test]
+    fn d1_walls_the_obs_module() {
+        // traces are keyed by sim time + seed (DESIGN.md §15): a wall
+        // clock or hash-order map anywhere in obs/ would leak host state
+        // into trace bytes and break the worker-count invariance suite
+        assert!(is_result_module("obs/trace.rs"));
+        assert!(is_result_module("obs/hist.rs"));
+        let src = "let t = std::time::Instant::now();\n";
+        assert_eq!(run("obs/trace.rs", src, &[Rule::D1]).len(), 2); // Instant::now + std::time::Instant
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //!   cluster      rolling-epoch cluster simulation
 //!   bench        quick in-binary micro-benchmarks
 //!   lint         in-tree static analysis (determinism/atomics/doc invariants)
+//!   trace        offline ops over --trace-out JSONL (summary/filter/diff)
+//!   metrics      client for a running server's metrics exposition
 //!   run          run an experiment described by a TOML config
 //!   serve        start the TCP control plane (sessions, snapshots, rate limits)
 //!   session      client for a running server's session registry
@@ -51,6 +53,8 @@ fn main() -> ExitCode {
         "cluster" => cluster(rest),
         "bench" => bench_quick(rest),
         "lint" => lint_cmd(rest),
+        "trace" => trace_cmd(rest),
+        "metrics" => metrics_cmd(rest),
         "run" => run_config(rest),
         "serve" => serve(rest),
         "session" => session_cmd(rest),
@@ -87,6 +91,8 @@ fn help_text() -> String {
      cluster      rolling-epoch cluster simulation (Poisson arrivals)\n  \
      bench        quick micro-benchmarks; --area {engine,service,ingest,serve} emits BENCH_<area>.json\n  \
      lint         static-analysis pass: determinism/atomics/doc invariants (DESIGN.md \u{00a7}12)\n  \
+     trace        offline trace ops: summary | filter | diff over --trace-out JSONL (DESIGN.md \u{00a7}15)\n  \
+     metrics      fetch a running server's metrics exposition (JSON or Prometheus text)\n  \
      run          run an experiment described by a TOML config\n  \
      serve        start the TCP control plane (sessions, snapshots, rate limits)\n  \
      session      client for a running server's session registry (DESIGN.md \u{00a7}14)\n  \
@@ -134,6 +140,28 @@ fn emit(out_dir: &str, name: &str, rows: &[Vec<String>], format: &str) -> Result
 
 fn print_help() {
     println!("{}", help_text());
+}
+
+/// A fresh trace collector when `--trace-out` was passed, else `None`.
+fn trace_collector(path: &str) -> Option<std::sync::Arc<siwoft::obs::Collector>> {
+    (!path.is_empty()).then(siwoft::obs::Collector::new)
+}
+
+/// Write collected trace records as JSONL to `path` (`-` = stdout).
+fn write_trace(path: &str, records: &[siwoft::obs::TraceRecord]) -> Result<(), String> {
+    let text = siwoft::obs::trace::to_jsonl(records);
+    if path == "-" {
+        print!("{text}");
+        return Ok(());
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| format!("mkdir {}: {e}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, text).map_err(|e| format!("write {path}: {e}"))?;
+    println!("wrote {} trace records to {path}", records.len());
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -347,6 +375,7 @@ fn analyze(raw: &[String]) -> Result<(), String> {
 }
 
 fn simulate(raw: &[String]) -> Result<(), String> {
+    use siwoft::scenario::Sweep;
     let spec = CommandSpec::new("simulate", "run one job under a policy/ft pair")
         .opt("len", "8", "job execution length (hours)")
         .opt("mem", "16", "job memory footprint (GB)")
@@ -359,6 +388,12 @@ fn simulate(raw: &[String]) -> Result<(), String> {
         .opt("seeds", "5", "runs to average")
         .opt("train-frac", "0.67", "fraction of trace used for analytics")
         .opt("artifacts", "artifacts", "AOT artifacts dir")
+        .opt(
+            "trace-out",
+            "",
+            "write the runs' structured trace as JSONL (consumed by `siwoft trace`; \
+             DESIGN.md \u{00a7}15)",
+        )
         .workers_opt();
     let a = spec.parse(raw)?;
     let policy = PolicyKind::parse(a.str("policy")).ok_or("unknown --policy")?;
@@ -374,14 +409,25 @@ fn simulate(raw: &[String]) -> Result<(), String> {
         world.analytics = ana;
     }
     let job = Job::new(1, a.f64("len")?, a.f64("mem")?);
-    let pool = Pool::new(a.workers()?);
-    let agg = Scenario::on(&world)
+    // the one-point sweep replicates seeds 0..n exactly like
+    // Scenario::replicate_on did, and carries the trace collector
+    let mut sweep = Sweep::on(&world)
         .job(job.clone())
-        .policy(policy)
-        .ft(ft)
-        .rule(rule)
+        .policies([policy])
+        .fts([ft])
+        .rules([rule])
+        .seeds(a.u64("seeds")?)
         .start_t(start)
-        .replicate_on(&pool, a.u64("seeds")?);
+        .workers(a.workers()?);
+    let collector = trace_collector(a.str("trace-out"));
+    if let Some(col) = &collector {
+        sweep = sweep.trace(col.clone());
+    }
+    let rows = sweep.run();
+    let agg = rows.into_iter().next().ok_or("simulate: empty sweep")?.agg;
+    if let Some(col) = collector {
+        write_trace(a.str("trace-out"), &col.take_sorted())?;
+    }
     println!(
         "policy={} ft={} job(len={}h mem={}GB) over {} seeds [{} backend]",
         a.str("policy"),
@@ -431,6 +477,12 @@ fn dag_cmd(raw: &[String]) -> Result<(), String> {
         .opt("train-frac", "0.67", "fraction of trace used for analytics")
         .opt("out", "results", "output dir")
         .opt("format", "csv", "output format: csv | json")
+        .opt(
+            "trace-out",
+            "",
+            "write the runs' structured trace as JSONL (consumed by `siwoft trace`; \
+             DESIGN.md \u{00a7}15)",
+        )
         .workers_opt();
     let a = spec_cli.parse(raw)?;
     let dag = DagSpec::load(a.str("spec")).map_err(|e| format!("--spec: {e}"))?;
@@ -474,16 +526,32 @@ fn dag_cmd(raw: &[String]) -> Result<(), String> {
         "idle_h",
         "completion_rate"
     ]];
+    // one collector per arm-sweep; run keys are re-based afterwards so
+    // every (arm, rule, seed) run keeps a globally unique trace key
+    let mut trace_records = Vec::new();
+    let mut trace_run_base = 0u64;
     for (policy, ft) in &arms {
-        let sweep_rows = Sweep::on(&world)
+        let collector = trace_collector(a.str("trace-out"));
+        let mut sweep = Sweep::on(&world)
             .dag(dag.clone())
             .policies([*policy])
             .fts([*ft])
             .rules(rules.iter().copied())
             .seeds(a.u64("seeds")?)
             .start_t(start)
-            .workers(a.workers()?)
-            .run_dags();
+            .workers(a.workers()?);
+        if let Some(col) = &collector {
+            sweep = sweep.trace(col.clone());
+        }
+        let sweep_rows = sweep.run_dags();
+        if let Some(col) = collector {
+            let mut recs = col.take_sorted();
+            for r in &mut recs {
+                r.run += trace_run_base;
+            }
+            trace_records.extend(recs);
+            trace_run_base += rules.len() as u64 * a.u64("seeds")?;
+        }
         for row in sweep_rows {
             let (p, f, r) = (row.policy.label(), row.ft.label(), row.rule.label());
             println!("== {p} + {f} | rule {r} ==");
@@ -539,6 +607,9 @@ fn dag_cmd(raw: &[String]) -> Result<(), String> {
             ]);
         }
     }
+    if !a.str("trace-out").is_empty() {
+        write_trace(a.str("trace-out"), &trace_records)?;
+    }
     let path = emit(a.str("out"), "dag", &rows, a.str("format"))?;
     println!("wrote {path}");
     Ok(())
@@ -565,6 +636,12 @@ fn service_cmd(raw: &[String]) -> Result<(), String> {
         .opt("train-frac", "0.67", "fraction of trace used for analytics")
         .opt("out", "results", "output dir")
         .opt("format", "csv", "output format: csv | json")
+        .opt(
+            "trace-out",
+            "",
+            "write the runs' structured trace as JSONL (consumed by `siwoft trace`; \
+             DESIGN.md \u{00a7}15)",
+        )
         .workers_opt();
     let a = spec_cli.parse(raw)?;
     let svc = ServiceSpec::load(a.str("spec")).map_err(|e| format!("--spec: {e}"))?;
@@ -623,16 +700,32 @@ fn service_cmd(raw: &[String]) -> Result<(), String> {
         "completion_rate",
         "makespan_h"
     ]];
+    // one collector per arm-sweep; run keys are re-based afterwards so
+    // every (arm, rule, seed) run keeps a globally unique trace key
+    let mut trace_records = Vec::new();
+    let mut trace_run_base = 0u64;
     for (policy, ft) in &arms {
-        let sweep_rows = Sweep::on(&world)
+        let collector = trace_collector(a.str("trace-out"));
+        let mut sweep = Sweep::on(&world)
             .service(svc.clone())
             .policies([*policy])
             .fts([*ft])
             .rules(rules.iter().copied())
             .seeds(a.u64("seeds")?)
             .start_t(start)
-            .workers(a.workers()?)
-            .run_services();
+            .workers(a.workers()?);
+        if let Some(col) = &collector {
+            sweep = sweep.trace(col.clone());
+        }
+        let sweep_rows = sweep.run_services();
+        if let Some(col) = collector {
+            let mut recs = col.take_sorted();
+            for r in &mut recs {
+                r.run += trace_run_base;
+            }
+            trace_records.extend(recs);
+            trace_run_base += rules.len() as u64 * a.u64("seeds")?;
+        }
         for row in sweep_rows {
             let (p, f, r) = (row.policy.label(), row.ft.label(), row.rule.label());
             println!("== {p} + {f} | rule {r} ==");
@@ -704,6 +797,9 @@ fn service_cmd(raw: &[String]) -> Result<(), String> {
                 format!("{:.6}", row.agg.mean_makespan_h)
             ]);
         }
+    }
+    if !a.str("trace-out").is_empty() {
+        write_trace(a.str("trace-out"), &trace_records)?;
     }
     let path = emit(a.str("out"), "service", &rows, a.str("format"))?;
     println!("wrote {path}");
@@ -992,9 +1088,10 @@ fn bench_area(
     measure_ms: u64,
     out: &str,
 ) -> Result<(), String> {
+    use siwoft::obs::{Collector, Histogram, TraceSink};
     use siwoft::service::{RepackMode, ServiceSpec, TierSpec};
     use siwoft::sim::Scratch;
-    use siwoft::util::benchkit::{Bench, BenchResult};
+    use siwoft::util::benchkit::{Bench, BenchResult, ScopeTimer};
 
     let mut world = World::generate(markets, months, seed);
     let start = world.split_train(0.67);
@@ -1011,6 +1108,19 @@ fn bench_area(
             ("p99_us", Json::num(r.p99_ns / 1e3)),
         ])
     };
+    // renders a `ScopeTimer` histogram in the same row schema, so the
+    // in-iteration phase timings sit next to the whole-iteration rows
+    let hist_row = |case: &str, h: &Histogram| {
+        let s = h.snapshot();
+        let per_sec = if s.sum > 0 { s.count as f64 / (s.sum as f64 * 1e-6) } else { 0.0 };
+        Json::obj(vec![
+            ("case", Json::str(case)),
+            ("workers", Json::num(1.0)),
+            ("items_per_sec", Json::num(per_sec)),
+            ("p50_us", Json::num(s.percentile(50.0))),
+            ("p99_us", Json::num(s.percentile(99.0))),
+        ])
+    };
 
     let rows: Vec<Json> = match area {
         "engine" => {
@@ -1021,6 +1131,21 @@ fn bench_area(
             let mut scratch = Scratch::new();
             let single =
                 bench.run_with_units("single_job", 1.0, || scen.run_seeded_in(&mut scratch, 1));
+            // trace-overhead row: the identical run with an armed sink,
+            // drained every iteration; the scope-timer histogram backs
+            // the companion `*_scope` row (EXPERIMENTS.md §Perf)
+            let col = Collector::new();
+            let scope_h = Histogram::new();
+            let mut tscratch = Scratch::new();
+            tscratch.trace = TraceSink::to(col.clone());
+            let traced = bench.run_with_units("single_job_traced", 1.0, || {
+                let _t = ScopeTimer::start(&scope_h);
+                tscratch.trace.begin_run(0, 1);
+                let r = scen.run_seeded_in(&mut tscratch, 1);
+                tscratch.trace.flush();
+                std::hint::black_box(col.take_sorted().len());
+                r
+            });
             let serial = bench.run_with_units("replicate16", 16.0, || scen.replicate(16));
             let pooled =
                 bench.run_with_units("replicate16", 16.0, || scen.replicate_on(&pool, 16));
@@ -1037,6 +1162,8 @@ fn bench_area(
             let dag_r = bench.run_with_units("dag4", 1.0, || dag.run_seeded_in(&mut dscratch, 1));
             vec![
                 row("single_job", 1, &single),
+                row("single_job_traced", 1, &traced),
+                hist_row("single_job_traced_scope", &scope_h),
                 row("replicate16", 1, &serial),
                 row("replicate16", n_workers, &pooled),
                 row("dag4", 1, &dag_r),
@@ -1062,6 +1189,24 @@ fn bench_area(
                 let r = bench.run_with_units(&case, 1.0, || scen.run_seeded_in(&mut scratch, 1));
                 out_rows.push(row(&case, 1, &r));
             }
+            // trace-overhead rows, mirroring the engine area: the same
+            // incremental fleet run with an armed sink drained per
+            // iteration, plus its scope-timer histogram row
+            let scen_t = fleet(RepackMode::Incremental);
+            let col = Collector::new();
+            let scope_h = Histogram::new();
+            let mut tscratch = Scratch::new();
+            tscratch.trace = TraceSink::to(col.clone());
+            let traced = bench.run_with_units("fleet_incremental_traced", 1.0, || {
+                let _t = ScopeTimer::start(&scope_h);
+                tscratch.trace.begin_run(0, 1);
+                let r = scen_t.run_seeded_in(&mut tscratch, 1);
+                tscratch.trace.flush();
+                std::hint::black_box(col.take_sorted().len());
+                r
+            });
+            out_rows.push(row("fleet_incremental_traced", 1, &traced));
+            out_rows.push(hist_row("fleet_incremental_traced_scope", &scope_h));
             let scen = fleet(RepackMode::Incremental);
             let pooled =
                 bench.run_with_units("fleet_incremental", 8.0, || scen.replicate_on(&pool, 8));
@@ -1289,6 +1434,137 @@ fn lint_cmd(raw: &[String]) -> Result<(), String> {
     }
 }
 
+/// `siwoft trace <verb>`: offline operations over the JSONL documents
+/// `--trace-out` writes (DESIGN.md §15).  `summary` aggregates, `filter`
+/// projects, `diff` exits non-zero at the first divergence — the CI
+/// equivalence checks are built from these three.
+fn trace_cmd(raw: &[String]) -> Result<(), String> {
+    use siwoft::obs::trace;
+
+    const VERBS: &str = "verbs:\n  \
+         summary  record/run counts, kind histogram and time span (--in)\n  \
+         filter   keep records matching --kind/--run/--seed (--in, --out)\n  \
+         diff     first divergence between two traces; exit 1 when they differ (--a, --b)";
+    let verb = raw.first().map(String::as_str).unwrap_or("");
+    if matches!(verb, "" | "--help" | "-h" | "help") {
+        println!("usage: siwoft trace <verb> [options]\n\n{VERBS}\n\nsee `siwoft trace <verb> --help`");
+        return Ok(());
+    }
+    let read_records = |path: &str| -> Result<Vec<trace::TraceRecord>, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("trace: read {path}: {e}"))?;
+        trace::parse_jsonl(&text).map_err(|e| format!("trace: {path}: {e}"))
+    };
+    match verb {
+        "summary" => {
+            let spec = CommandSpec::new("trace summary", "aggregate counts over a trace")
+                .req("in", "trace JSONL written by --trace-out")
+                .opt("format", "text", "output format: text | json");
+            let a = spec.parse(&raw[1..])?;
+            let s = trace::summarize(&read_records(a.str("in"))?);
+            match a.str("format") {
+                "text" => print!("{}", s.to_text()),
+                "json" => {
+                    let by_kind: Vec<(String, Json)> = s
+                        .by_kind
+                        .iter()
+                        .map(|(k, n)| (k.clone(), Json::num(*n as f64)))
+                        .collect();
+                    println!(
+                        "{}",
+                        Json::obj(vec![
+                            ("records", Json::num(s.records as f64)),
+                            ("runs", Json::num(s.runs as f64)),
+                            ("t_min", Json::num(s.t_min)),
+                            ("t_max", Json::num(s.t_max)),
+                            ("by_kind", Json::Obj(by_kind.into_iter().collect())),
+                        ])
+                    );
+                }
+                other => return Err(format!("unknown --format '{other}' (expected text or json)")),
+            }
+            Ok(())
+        }
+        "filter" => {
+            let spec = CommandSpec::new("trace filter", "project a trace by kind/run/seed")
+                .req("in", "trace JSONL written by --trace-out")
+                .opt("out", "-", "output path ('-' = stdout)")
+                .opt("kind", "", "keep only this event kind (e.g. revocation)")
+                .opt("run", "", "keep only this run index")
+                .opt("seed", "", "keep only this seed");
+            let a = spec.parse(&raw[1..])?;
+            let opt_u64 = |name: &str| -> Result<Option<u64>, String> {
+                if a.str(name).is_empty() { Ok(None) } else { a.u64(name).map(Some) }
+            };
+            let kind = a.str("kind");
+            let kept = trace::filter(
+                read_records(a.str("in"))?,
+                (!kind.is_empty()).then_some(kind),
+                opt_u64("run")?,
+                opt_u64("seed")?,
+            );
+            write_trace(a.str("out"), &kept)
+        }
+        "diff" => {
+            let spec = CommandSpec::new("trace diff", "byte-level comparison of two traces")
+                .req("a", "left trace JSONL")
+                .req("b", "right trace JSONL");
+            let a = spec.parse(&raw[1..])?;
+            let (pa, pb) = (a.str("a"), a.str("b"));
+            let ta = std::fs::read_to_string(pa).map_err(|e| format!("trace: read {pa}: {e}"))?;
+            let tb = std::fs::read_to_string(pb).map_err(|e| format!("trace: read {pb}: {e}"))?;
+            match trace::diff_jsonl(&ta, &tb) {
+                None => {
+                    println!("traces identical ({} lines)", ta.lines().count());
+                    Ok(())
+                }
+                Some(d) => Err(format!("trace diff: {d}")),
+            }
+        }
+        other => Err(format!("unknown trace verb '{other}'\n\n{VERBS}")),
+    }
+}
+
+/// `siwoft metrics`: fetch the unified exposition (`obs::Expo`) from a
+/// running `siwoft serve` over the `metrics` wire verb and print it as
+/// schema-pinned JSON or Prometheus-style text (DESIGN.md §15).
+fn metrics_cmd(raw: &[String]) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let spec = CommandSpec::new("metrics", "fetch a running server's metrics exposition")
+        .opt("addr", "127.0.0.1:7747", "server address")
+        .opt("format", "json", "output format: json | prom");
+    let a = spec.parse(raw)?;
+    let addr = a.str("addr");
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("metrics: connect {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let mut reader =
+        BufReader::new(stream.try_clone().map_err(|e| format!("metrics: clone stream: {e}"))?);
+    writeln!(stream, "{}", Json::obj(vec![("cmd", Json::str("metrics"))]))
+        .map_err(|e| format!("metrics: send: {e}"))?;
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("metrics: recv: {e}"))?;
+    let reply = Json::parse(line.trim())
+        .map_err(|e| format!("metrics: bad reply {:?}: {e}", line.trim()))?;
+    if reply.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+        let why = reply.get("error").and_then(|v| v.as_str()).unwrap_or("request failed");
+        return Err(format!("metrics: {why}"));
+    }
+    match a.str("format") {
+        "json" => println!("{}", reply.get("metrics").ok_or("metrics: reply missing `metrics`")?),
+        "prom" | "text" => print!(
+            "{}",
+            reply
+                .get("text")
+                .and_then(|v| v.as_str())
+                .ok_or("metrics: reply missing `text`")?
+        ),
+        other => return Err(format!("unknown --format '{other}' (expected json or prom)")),
+    }
+    Ok(())
+}
+
 fn cluster(raw: &[String]) -> Result<(), String> {
     use siwoft::coordinator::{run_cluster, ClusterConfig};
     use siwoft::market::MarketAnalytics;
@@ -1421,9 +1697,19 @@ fn serve(raw: &[String]) -> Result<(), String> {
             "per-connection token bucket: <burst> or <burst>:<rate> (admissions per tick); \
              empty or 'off' = unlimited",
         )
+        .opt(
+            "metrics-every",
+            "0",
+            "log one compact metrics line every N seconds (0 = off; the full exposition \
+             stays on the `metrics` verb / `siwoft metrics`)",
+        )
         .workers_opt();
     let a = spec.parse(raw)?;
     let rate_limit = siwoft::session::RateLimit::parse(a.str("rate-limit"))?;
+    let metrics_every = a.f64("metrics-every")?;
+    if metrics_every < 0.0 || !metrics_every.is_finite() {
+        return Err("serve: --metrics-every must be a non-negative number of seconds".into());
+    }
     let world = if !a.str("snapshot").is_empty() {
         let path = a.str("snapshot");
         let catalog = Catalog::full();
@@ -1439,13 +1725,16 @@ fn serve(raw: &[String]) -> Result<(), String> {
     let mut server = Server::new(coordinator)
         .max_conns(a.usize("max-conns")?)
         .sessions(a.usize("sessions")?)
-        .rate_limit(rate_limit);
+        .rate_limit(rate_limit)
+        .metrics_every(
+            (metrics_every > 0.0).then(|| std::time::Duration::from_secs_f64(metrics_every)),
+        );
     if !a.str("session-dir").is_empty() {
         server = server.snapshot_dir(a.str("session-dir"));
     }
     server
         .serve(a.str("addr"), |addr| {
-            println!("listening on {addr} — JSON lines: submit/sweep/session/snapshot/status/shutdown");
+            println!("listening on {addr} — JSON lines: submit/sweep/session/snapshot/status/metrics/shutdown");
             // stdout is block-buffered when piped; harnesses parsing the
             // bound address (tests/integration_cli.rs) need it now
             use std::io::Write as _;

@@ -1,0 +1,177 @@
+//! Unified exposition plane (DESIGN.md §15).
+//!
+//! [`Expo`] is the one snapshot type everything telemetry-facing
+//! renders from: the coordinator's `metrics` wire verb, the `siwoft
+//! metrics` CLI client, and the periodic logger flush.  A producer
+//! (e.g. `coordinator::Server`) folds its counters and
+//! [`HistSnapshot`]s in, then renders the same data three ways —
+//! schema-pinned JSON (`{schema_version, counters, hists}`),
+//! Prometheus-style text, and a compact one-line form for log lines.
+//!
+//! This module is behind the d1 determinism wall: it never reads a
+//! clock or the environment — timestamps, if any, are values handed in
+//! by the caller at the coordinator edge.
+
+use std::fmt::Write as _;
+
+use crate::obs::hist::HistSnapshot;
+use crate::util::json::Json;
+
+/// Version tag pinned in the JSON rendering (bump on shape changes).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// An exposition snapshot: named counters plus named histograms, in
+/// insertion order (the Prometheus text keeps it; JSON objects sort
+/// keys as always).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Expo {
+    counters: Vec<(String, u64)>,
+    hists: Vec<(String, HistSnapshot)>,
+}
+
+impl Expo {
+    /// An empty snapshot.
+    pub fn new() -> Expo {
+        Expo::default()
+    }
+
+    /// Add a monotonic counter.
+    pub fn counter(&mut self, name: &str, v: u64) -> &mut Expo {
+        self.counters.push((name.to_string(), v));
+        self
+    }
+
+    /// Add a latency histogram snapshot.
+    pub fn hist(&mut self, name: &str, h: HistSnapshot) -> &mut Expo {
+        self.hists.push((name.to_string(), h));
+        self
+    }
+
+    /// The counters added so far, in insertion order.
+    pub fn counters(&self) -> &[(String, u64)] {
+        &self.counters
+    }
+
+    /// The histograms added so far, in insertion order.
+    pub fn hists(&self) -> &[(String, HistSnapshot)] {
+        &self.hists
+    }
+
+    /// The schema-pinned JSON form:
+    /// `{schema_version, counters: {name: n}, hists: {name: {count, sum,
+    /// max, p50, p99, buckets}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|(k, v)| (k.as_str(), Json::num(*v as f64))).collect();
+        let hists = self.hists.iter().map(|(k, h)| (k.as_str(), h.to_json())).collect();
+        Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("counters", Json::obj(counters)),
+            ("hists", Json::obj(hists)),
+        ])
+    }
+
+    /// Prometheus-style text: counters as `siwoft_<name>` counter
+    /// metrics, histograms as summaries with `quantile` labels plus
+    /// `_count`/`_sum`/`_max` series.
+    pub fn to_prom_text(&self) -> String {
+        let mut s = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(s, "# TYPE siwoft_{name} counter");
+            let _ = writeln!(s, "siwoft_{name} {v}");
+        }
+        for (name, h) in &self.hists {
+            let _ = writeln!(s, "# TYPE siwoft_{name} summary");
+            let _ = writeln!(s, "siwoft_{name}{{quantile=\"0.5\"}} {}", fmt_num(h.percentile(50.0)));
+            let _ =
+                writeln!(s, "siwoft_{name}{{quantile=\"0.99\"}} {}", fmt_num(h.percentile(99.0)));
+            let _ = writeln!(s, "siwoft_{name}_count {}", h.count);
+            let _ = writeln!(s, "siwoft_{name}_sum {}", h.sum);
+            let _ = writeln!(s, "siwoft_{name}_max {}", h.max);
+        }
+        s
+    }
+
+    /// Compact single-line form for the periodic metrics flush:
+    /// `a=1 b=2 lat[count=9 p50=120 p99=900]`.
+    pub fn compact_line(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for (name, v) in &self.counters {
+            parts.push(format!("{name}={v}"));
+        }
+        for (name, h) in &self.hists {
+            parts.push(format!(
+                "{name}[count={} p50={} p99={}]",
+                h.count,
+                fmt_num(h.percentile(50.0)),
+                fmt_num(h.percentile(99.0))
+            ));
+        }
+        parts.join(" ")
+    }
+}
+
+/// Render a float the way `Json` does: integral values without a
+/// decimal point, so the text form is stable across platforms.
+fn fmt_num(x: f64) -> String {
+    Json::num(x).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Histogram;
+
+    fn sample() -> Expo {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(200);
+        let mut e = Expo::new();
+        e.counter("jobs_submitted", 2).counter("revocations", 0).hist("submit_us", h.snapshot());
+        e
+    }
+
+    #[test]
+    fn json_shape_is_pinned() {
+        let j = sample().to_json();
+        assert_eq!(j.get("schema_version").unwrap().as_i64(), Some(SCHEMA_VERSION as i64));
+        let c = j.get("counters").unwrap();
+        assert_eq!(c.get("jobs_submitted").unwrap().as_i64(), Some(2));
+        assert_eq!(c.get("revocations").unwrap().as_i64(), Some(0));
+        let h = j.path(&["hists", "submit_us"]).unwrap();
+        assert_eq!(h.get("count").unwrap().as_i64(), Some(2));
+        assert_eq!(h.get("sum").unwrap().as_i64(), Some(300));
+        assert!(h.get("p50").is_some() && h.get("p99").is_some() && h.get("buckets").is_some());
+        // round-trips through the parser
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn prom_text_has_counter_and_summary_series() {
+        let text = sample().to_prom_text();
+        assert!(text.contains("# TYPE siwoft_jobs_submitted counter"));
+        assert!(text.contains("siwoft_jobs_submitted 2"));
+        assert!(text.contains("# TYPE siwoft_submit_us summary"));
+        assert!(text.contains("siwoft_submit_us{quantile=\"0.5\"}"));
+        assert!(text.contains("siwoft_submit_us_count 2"));
+        assert!(text.contains("siwoft_submit_us_sum 300"));
+        assert!(text.contains("siwoft_submit_us_max 200"));
+    }
+
+    #[test]
+    fn compact_line_is_single_line() {
+        let line = sample().compact_line();
+        assert!(!line.contains('\n'));
+        assert!(line.starts_with("jobs_submitted=2 "));
+        assert!(line.contains("submit_us[count=2 "));
+    }
+
+    #[test]
+    fn empty_expo_renders_empty() {
+        let e = Expo::new();
+        assert_eq!(e.compact_line(), "");
+        assert_eq!(e.to_prom_text(), "");
+        let j = e.to_json();
+        assert_eq!(j.get("counters").unwrap(), &Json::obj(vec![]));
+    }
+}

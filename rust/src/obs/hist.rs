@@ -1,0 +1,243 @@
+//! Lock-free log2-bucket latency histograms (DESIGN.md §15).
+//!
+//! A [`Histogram`] is 64 power-of-two buckets plus exact `count`,
+//! `sum`, and `max` registers, all `AtomicU64`, so any number of
+//! threads can [`Histogram::record`] concurrently without locks and a
+//! reader can take a consistent-enough [`HistSnapshot`] at any time.
+//! Bucket `b` covers the value range `[2^(b-1), 2^b)` (bucket 0 holds
+//! exact zeros), which bounds the relative quantile error at 2× while
+//! keeping `record` to four relaxed atomic adds.
+//!
+//! Merging is exact: two histograms (e.g. per-worker shards) merge by
+//! per-bucket addition, so a sharded recording is indistinguishable
+//! from a single-shard recording of the same samples — pinned by
+//! `tests/obs_equivalence.rs`.  The `sum` register is also exact,
+//! which is what lets `coordinator::Metrics` keep its historical
+//! `decision_us_total` field as a derived value after the migration
+//! from a sum-only counter.
+//!
+//! Quantiles (`p50`/`p99`/`pmax`) come from the bucket mass via
+//! [`crate::util::stats::bucket_percentile`]; `pmax` is exact because
+//! the `max` register tracks it directly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+use crate::util::stats::bucket_percentile;
+
+/// Number of log2 buckets (one per `u64` magnitude, plus the zero bucket).
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a recorded value: 0 for 0, else `floor(log2(v)) + 1`
+/// capped at the last bucket.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// A lock-free log2-bucket histogram with exact count/sum/max.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(f, "Histogram {{ count: {}, sum: {}, max: {} }}", s.count, s.sum, s.max)
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.  Lock-free; callable from any thread.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        // ordering: pure statistical counters — readers only need totals
+        // that eventually include every add, never a synchronized view
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a non-negative `f64` sample (rounded to the nearest unit).
+    #[inline]
+    pub fn record_f64(&self, v: f64) {
+        self.record(if v <= 0.0 { 0 } else { v.round() as u64 });
+    }
+
+    /// Fold another histogram into this one (exact: per-bucket adds).
+    pub fn merge(&self, other: &Histogram) {
+        // ordering: same relaxed counter discipline as `record`
+        for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            b.fetch_add(o.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        // ordering: counter read — totals only
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of all recorded samples.
+    pub fn sum(&self) -> u64 {
+        // ordering: counter read — totals only
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile `q` (0–100) from the bucket mass.
+    pub fn percentile(&self, q: f64) -> f64 {
+        self.snapshot().percentile(q)
+    }
+
+    /// Copy the registers out into a plain value.
+    pub fn snapshot(&self) -> HistSnapshot {
+        // ordering: counter reads — a snapshot taken under concurrent
+        // writers is a valid histogram of some interleaving prefix
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// A plain-value copy of a [`Histogram`]'s registers.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact sum of samples.
+    pub sum: u64,
+    /// Exact maximum sample (`pmax`).
+    pub max: u64,
+    /// Per-bucket counts (`BUCKETS` entries).
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Approximate percentile `q` (0–100); `pmax` (exact) caps the result.
+    pub fn percentile(&self, q: f64) -> f64 {
+        bucket_percentile(&self.buckets, self.count, q).min(self.max as f64)
+    }
+
+    /// Render as the schema-pinned JSON block used by `status` /
+    /// `metrics`: `{count, sum, max, p50, p99, buckets}` with the
+    /// bucket array truncated after its last non-zero entry.
+    pub fn to_json(&self) -> Json {
+        let last = self.buckets.iter().rposition(|&c| c > 0).map(|i| i + 1).unwrap_or(0);
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("max", Json::num(self.max as f64)),
+            ("p50", Json::num(self.percentile(50.0))),
+            ("p99", Json::num(self.percentile(99.0))),
+            (
+                "buckets",
+                Json::arr(self.buckets[..last].iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_of_covers_ranges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn count_sum_max_are_exact() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 7, 100, 3_000, 3_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 3_003_108);
+        assert_eq!(h.snapshot().max, 3_000_000);
+    }
+
+    #[test]
+    fn percentile_within_bucket_bounds() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(1000);
+        }
+        let p50 = h.percentile(50.0);
+        // 1000 lands in [512, 1024): the estimate must stay in-bucket
+        assert!((512.0..=1024.0).contains(&p50), "p50 {p50}");
+        // pmax is exact
+        assert_eq!(h.snapshot().percentile(100.0), 1000.0);
+    }
+
+    #[test]
+    fn merge_equals_single_shard() {
+        let shard_a = Histogram::new();
+        let shard_b = Histogram::new();
+        let single = Histogram::new();
+        for (i, v) in [3u64, 99, 18, 0, 512, 77777, 12, 4096].iter().enumerate() {
+            if i % 2 == 0 {
+                shard_a.record(*v);
+            } else {
+                shard_b.record(*v);
+            }
+            single.record(*v);
+        }
+        let merged = Histogram::new();
+        merged.merge(&shard_a);
+        merged.merge(&shard_b);
+        assert_eq!(merged.snapshot(), single.snapshot());
+    }
+
+    #[test]
+    fn empty_histogram_is_quiet() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        let j = h.snapshot().to_json();
+        assert_eq!(j.get("count").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("buckets").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn json_block_truncates_trailing_zero_buckets() {
+        let h = Histogram::new();
+        h.record(5); // bucket 3
+        let j = h.snapshot().to_json();
+        assert_eq!(j.get("buckets").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.get("p50").unwrap().as_f64().unwrap(), 5.0);
+    }
+}

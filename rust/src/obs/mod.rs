@@ -1,0 +1,24 @@
+//! Observability: deterministic tracing, latency histograms, and the
+//! unified exposition plane (DESIGN.md §15).
+//!
+//! Three layers, smallest dependency first:
+//!
+//! - [`hist`] — lock-free log2-bucket latency [`Histogram`]s with
+//!   exact count/sum/max and exact shard merge, backing
+//!   `coordinator::Metrics` and `loadgen` percentiles.
+//! - [`trace`] — the typed [`TraceEvent`] taxonomy and the
+//!   zero-cost-when-off [`TraceSink`] carried by every per-worker
+//!   `Scratch`, merged deterministically by a [`Collector`].
+//! - [`expo`] — the [`Expo`] snapshot the `metrics` wire verb, CLI
+//!   client, and periodic log flush all render from.
+//!
+//! The whole module sits behind the lint d1 determinism wall: no wall
+//! clock, no environment reads — sim time and seeds are the only keys.
+
+pub mod expo;
+pub mod hist;
+pub mod trace;
+
+pub use expo::Expo;
+pub use hist::{HistSnapshot, Histogram};
+pub use trace::{Collector, TraceEvent, TraceRecord, TraceSink};

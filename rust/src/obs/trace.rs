@@ -1,0 +1,624 @@
+//! Deterministic structured tracing (DESIGN.md §15).
+//!
+//! Every result-producing runner (`sim::run`, `dag::DagRunner`,
+//! `service::FleetRunner`) can emit typed [`TraceEvent`]s through the
+//! [`TraceSink`] carried by its per-worker
+//! [`Scratch`](crate::sim::arena::Scratch).  A record is keyed by
+//! **sim time + seed only** — `(run, seed, ord, t)` where `run` is the
+//! sweep's deterministic point index and `ord` a per-run monotonic
+//! counter — never by wall clock, thread id, or worker id, so the d1
+//! determinism wall extends over this module and a sweep's merged
+//! trace is byte-identical for any worker count: each (run, seed)
+//! executes single-threaded and emits the same `ord` sequence, and the
+//! final [`Collector::take_sorted`] merge orders records by the total
+//! key `(run, seed, ord)` regardless of which worker collected them.
+//!
+//! The sink is zero-cost when off: a disabled [`TraceSink`] is a
+//! `None` handle and [`TraceSink::emit`] returns before touching its
+//! arguments' heap.  Tracing never draws from a run's rng stream and
+//! never feeds back into simulation state, so enabling it cannot
+//! perturb results (pinned by `tests/obs_equivalence.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// One typed observability event (the §15 taxonomy).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A run began: the (policy, ft, rule) arm it executes.
+    RunStart {
+        /// Policy name.
+        policy: String,
+        /// FT mechanism label.
+        ft: String,
+        /// Revocation rule label.
+        rule: String,
+    },
+    /// The policy selected a market for a job/bin.
+    PolicyDecision {
+        /// Job or bin id.
+        job: u64,
+        /// Selected market index.
+        market: u64,
+        /// True for a spot placement, false for on-demand.
+        spot: bool,
+    },
+    /// A session opened on the selected market at a fixed price.
+    BidPlaced {
+        /// Job or bin id.
+        job: u64,
+        /// Market index.
+        market: u64,
+        /// Session price ($/h) fixed at start.
+        price: f64,
+        /// True for a spot placement.
+        spot: bool,
+    },
+    /// A spot revocation killed the session/bin.
+    Revocation {
+        /// Job or bin id.
+        job: u64,
+        /// Market index.
+        market: u64,
+    },
+    /// The fleet/packer re-packed survivors after a revocation.
+    Repack {
+        /// Bins (instances) live after the re-pack.
+        bins: u64,
+        /// Replicas moved by the re-pack.
+        moved: u64,
+    },
+    /// A DAG stage (or service replica copy) started on a bin.
+    StageStart {
+        /// Stage index in spec order.
+        stage: u64,
+        /// Bin id it was packed onto.
+        bin: u64,
+    },
+    /// A DAG stage completed its work budget.
+    StageDone {
+        /// Stage index in spec order.
+        stage: u64,
+        /// Bin id it completed on.
+        bin: u64,
+    },
+    /// A service tier dropped below its SLO floor.
+    SloViolation {
+        /// Tier index in spec order.
+        tier: u64,
+        /// Hours of violation accrued by this event.
+        hours: f64,
+    },
+    /// A burst schedule changed a tier's replica target.
+    Scale {
+        /// Tier index in spec order.
+        tier: u64,
+        /// Previous replica target.
+        from: u64,
+        /// New replica target.
+        to: u64,
+    },
+    /// A run consumed a trained session state (survival-curve fit).
+    SessionTrain {
+        /// Markets covered by the fit.
+        markets: u64,
+    },
+    /// The engine event queue drained (end of an engine-driven run).
+    EngineDrained {
+        /// Events dispatched by the queue over the run.
+        events: u64,
+    },
+    /// A run finished.
+    RunEnd {
+        /// Whether the workload completed.
+        completed: bool,
+        /// Total cost ($).
+        cost: f64,
+    },
+}
+
+impl TraceEvent {
+    /// Stable kind tag used on the wire and by `trace filter --kind`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::RunStart { .. } => "run_start",
+            TraceEvent::PolicyDecision { .. } => "policy_decision",
+            TraceEvent::BidPlaced { .. } => "bid_placed",
+            TraceEvent::Revocation { .. } => "revocation",
+            TraceEvent::Repack { .. } => "repack",
+            TraceEvent::StageStart { .. } => "stage_start",
+            TraceEvent::StageDone { .. } => "stage_done",
+            TraceEvent::SloViolation { .. } => "slo_violation",
+            TraceEvent::Scale { .. } => "scale",
+            TraceEvent::SessionTrain { .. } => "session_train",
+            TraceEvent::EngineDrained { .. } => "engine_drained",
+            TraceEvent::RunEnd { .. } => "run_end",
+        }
+    }
+
+    fn fields(&self) -> Vec<(&'static str, Json)> {
+        match self {
+            TraceEvent::RunStart { policy, ft, rule } => vec![
+                ("policy", Json::str(policy.clone())),
+                ("ft", Json::str(ft.clone())),
+                ("rule", Json::str(rule.clone())),
+            ],
+            TraceEvent::PolicyDecision { job, market, spot } => vec![
+                ("job", Json::num(*job as f64)),
+                ("market", Json::num(*market as f64)),
+                ("spot", Json::Bool(*spot)),
+            ],
+            TraceEvent::BidPlaced { job, market, price, spot } => vec![
+                ("job", Json::num(*job as f64)),
+                ("market", Json::num(*market as f64)),
+                ("price", Json::num(*price)),
+                ("spot", Json::Bool(*spot)),
+            ],
+            TraceEvent::Revocation { job, market } => vec![
+                ("job", Json::num(*job as f64)),
+                ("market", Json::num(*market as f64)),
+            ],
+            TraceEvent::Repack { bins, moved } => vec![
+                ("bins", Json::num(*bins as f64)),
+                ("moved", Json::num(*moved as f64)),
+            ],
+            TraceEvent::StageStart { stage, bin } | TraceEvent::StageDone { stage, bin } => vec![
+                ("stage", Json::num(*stage as f64)),
+                ("bin", Json::num(*bin as f64)),
+            ],
+            TraceEvent::SloViolation { tier, hours } => vec![
+                ("tier", Json::num(*tier as f64)),
+                ("hours", Json::num(*hours)),
+            ],
+            TraceEvent::Scale { tier, from, to } => vec![
+                ("tier", Json::num(*tier as f64)),
+                ("from", Json::num(*from as f64)),
+                ("to", Json::num(*to as f64)),
+            ],
+            TraceEvent::SessionTrain { markets } => {
+                vec![("markets", Json::num(*markets as f64))]
+            }
+            TraceEvent::EngineDrained { events } => {
+                vec![("events", Json::num(*events as f64))]
+            }
+            TraceEvent::RunEnd { completed, cost } => vec![
+                ("completed", Json::Bool(*completed)),
+                ("cost", Json::num(*cost)),
+            ],
+        }
+    }
+
+    fn from_json(kind: &str, j: &Json) -> Result<TraceEvent, String> {
+        let num =
+            |k: &str| j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing `{k}`"));
+        let u = |k: &str| num(k).map(|x| x as u64);
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing `{k}`"))
+        };
+        let b =
+            |k: &str| j.get(k).and_then(Json::as_bool).ok_or_else(|| format!("missing `{k}`"));
+        Ok(match kind {
+            "run_start" => TraceEvent::RunStart { policy: s("policy")?, ft: s("ft")?, rule: s("rule")? },
+            "policy_decision" => {
+                TraceEvent::PolicyDecision { job: u("job")?, market: u("market")?, spot: b("spot")? }
+            }
+            "bid_placed" => TraceEvent::BidPlaced {
+                job: u("job")?,
+                market: u("market")?,
+                price: num("price")?,
+                spot: b("spot")?,
+            },
+            "revocation" => TraceEvent::Revocation { job: u("job")?, market: u("market")? },
+            "repack" => TraceEvent::Repack { bins: u("bins")?, moved: u("moved")? },
+            "stage_start" => TraceEvent::StageStart { stage: u("stage")?, bin: u("bin")? },
+            "stage_done" => TraceEvent::StageDone { stage: u("stage")?, bin: u("bin")? },
+            "slo_violation" => TraceEvent::SloViolation { tier: u("tier")?, hours: num("hours")? },
+            "scale" => TraceEvent::Scale { tier: u("tier")?, from: u("from")?, to: u("to")? },
+            "session_train" => TraceEvent::SessionTrain { markets: u("markets")? },
+            "engine_drained" => TraceEvent::EngineDrained { events: u("events")? },
+            "run_end" => TraceEvent::RunEnd { completed: b("completed")?, cost: num("cost")? },
+            other => return Err(format!("unknown trace kind `{other}`")),
+        })
+    }
+}
+
+/// One trace record: the deterministic key plus the event payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Sweep point index (0 for single runs).
+    pub run: u64,
+    /// The run's seed.
+    pub seed: u64,
+    /// Per-(run, seed) monotonic emit counter.
+    pub ord: u64,
+    /// Simulated time of the event (hours).
+    pub t: f64,
+    /// The typed event.
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    /// The total deterministic sort key.
+    pub fn key(&self) -> (u64, u64, u64) {
+        (self.run, self.seed, self.ord)
+    }
+
+    /// Render as one JSONL line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut fields = vec![
+            ("run", Json::num(self.run as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("ord", Json::num(self.ord as f64)),
+            ("t", Json::num(self.t)),
+            ("kind", Json::str(self.event.kind())),
+        ];
+        fields.extend(self.event.fields());
+        Json::obj(fields).to_string()
+    }
+
+    /// Parse one JSONL line.
+    pub fn parse_line(line: &str) -> Result<TraceRecord, String> {
+        let j = Json::parse(line.trim()).map_err(|e| format!("{e}"))?;
+        let num =
+            |k: &str| j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing `{k}`"));
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing `kind`".to_string())?;
+        Ok(TraceRecord {
+            run: num("run")? as u64,
+            seed: num("seed")? as u64,
+            ord: num("ord")? as u64,
+            t: num("t")?,
+            event: TraceEvent::from_json(kind, &j)?,
+        })
+    }
+}
+
+/// Render records as JSONL (one line per record, trailing newline).
+pub fn to_jsonl(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        let _ = writeln!(out, "{}", r.to_json_line());
+    }
+    out
+}
+
+/// Parse a JSONL document (blank lines ignored).
+pub fn parse_jsonl(text: &str) -> Result<Vec<TraceRecord>, String> {
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .map(|(i, l)| TraceRecord::parse_line(l).map_err(|e| format!("line {}: {e}", i + 1)))
+        .collect()
+}
+
+/// The shared cross-worker record store a sweep's sinks flush into.
+///
+/// Collection order is worker-dependent (a `Mutex` guards the vector),
+/// but [`Collector::take_sorted`] re-establishes the total
+/// `(run, seed, ord)` order, which is why the emitted trace is still
+/// byte-identical for any worker count.
+#[derive(Debug, Default)]
+pub struct Collector {
+    records: Mutex<Vec<TraceRecord>>,
+}
+
+impl Collector {
+    /// A fresh shared collector handle.
+    pub fn new() -> Arc<Collector> {
+        Arc::new(Collector::default())
+    }
+
+    /// Absorb one run's buffered records.
+    pub fn absorb(&self, mut batch: Vec<TraceRecord>) {
+        if batch.is_empty() {
+            return;
+        }
+        self.records.lock().expect("trace collector poisoned").append(&mut batch);
+    }
+
+    /// Drain every record in total `(run, seed, ord)` order.
+    pub fn take_sorted(&self) -> Vec<TraceRecord> {
+        let mut all = std::mem::take(&mut *self.records.lock().expect("trace collector poisoned"));
+        all.sort_by_key(TraceRecord::key);
+        all
+    }
+}
+
+/// The zero-cost-when-off tracing handle carried by a
+/// [`Scratch`](crate::sim::arena::Scratch).
+///
+/// Off (the default) it is a `None` and [`TraceSink::emit`] is a
+/// branch.  On, it buffers records locally (no lock on the emit path)
+/// and flushes to its [`Collector`] at [`TraceSink::flush`] /
+/// [`TraceSink::begin_run`] / drop.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink {
+    shared: Option<Arc<Collector>>,
+    run: u64,
+    seed: u64,
+    ord: u64,
+    buf: Vec<TraceRecord>,
+}
+
+impl TraceSink {
+    /// The disabled sink (what `Scratch::new` carries).
+    pub fn off() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// A sink flushing into `collector`.
+    pub fn to(collector: Arc<Collector>) -> TraceSink {
+        TraceSink { shared: Some(collector), ..TraceSink::default() }
+    }
+
+    /// Whether tracing is enabled.
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Set the deterministic run key for the records that follow and
+    /// reset the `ord` counter (flushing anything still buffered).
+    pub fn begin_run(&mut self, run: u64, seed: u64) {
+        self.flush();
+        self.run = run;
+        self.seed = seed;
+        self.ord = 0;
+    }
+
+    /// Emit one event at sim time `t`.  No-op (and no allocation) when
+    /// the sink is off.
+    #[inline]
+    pub fn emit(&mut self, t: f64, event: TraceEvent) {
+        if self.shared.is_none() {
+            return;
+        }
+        let ord = self.ord;
+        self.ord += 1;
+        self.buf.push(TraceRecord { run: self.run, seed: self.seed, ord, t, event });
+    }
+
+    /// Push buffered records to the collector.
+    pub fn flush(&mut self) {
+        if let Some(shared) = &self.shared {
+            shared.absorb(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+// ---------------------------------------------------------------------
+// offline operations backing `siwoft trace {summary,filter,diff}`
+
+/// Aggregate counts over a parsed trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Total records.
+    pub records: usize,
+    /// Distinct (run, seed) pairs.
+    pub runs: usize,
+    /// Records per event kind, kind-sorted.
+    pub by_kind: Vec<(String, usize)>,
+    /// Earliest event time (hours); 0 when empty.
+    pub t_min: f64,
+    /// Latest event time (hours); 0 when empty.
+    pub t_max: f64,
+}
+
+/// Summarize a record set (kind histogram, run count, time span).
+pub fn summarize(records: &[TraceRecord]) -> TraceSummary {
+    let mut by_kind: BTreeMap<&'static str, usize> = BTreeMap::new();
+    let mut runs: Vec<(u64, u64)> = Vec::new();
+    let (mut t_min, mut t_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for r in records {
+        *by_kind.entry(r.event.kind()).or_insert(0) += 1;
+        runs.push((r.run, r.seed));
+        t_min = t_min.min(r.t);
+        t_max = t_max.max(r.t);
+    }
+    runs.sort_unstable();
+    runs.dedup();
+    TraceSummary {
+        records: records.len(),
+        runs: runs.len(),
+        by_kind: by_kind.into_iter().map(|(k, n)| (k.to_string(), n)).collect(),
+        t_min: if records.is_empty() { 0.0 } else { t_min },
+        t_max: if records.is_empty() { 0.0 } else { t_max },
+    }
+}
+
+impl TraceSummary {
+    /// Render the human-readable `trace summary` report.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{} records over {} runs, t ∈ [{:.3}, {:.3}] h",
+            self.records, self.runs, self.t_min, self.t_max
+        );
+        for (kind, n) in &self.by_kind {
+            let _ = writeln!(s, "  {kind:<16} {n}");
+        }
+        s
+    }
+}
+
+/// Keep records matching the (optional) kind / run / seed filters.
+pub fn filter(
+    records: Vec<TraceRecord>,
+    kind: Option<&str>,
+    run: Option<u64>,
+    seed: Option<u64>,
+) -> Vec<TraceRecord> {
+    records
+        .into_iter()
+        .filter(|r| kind.map(|k| r.event.kind() == k).unwrap_or(true))
+        .filter(|r| run.map(|x| r.run == x).unwrap_or(true))
+        .filter(|r| seed.map(|x| r.seed == x).unwrap_or(true))
+        .collect()
+}
+
+/// Line-level diff of two JSONL traces: `None` when identical, else a
+/// human-readable description of the first divergence.
+pub fn diff_jsonl(a: &str, b: &str) -> Option<String> {
+    let la: Vec<&str> = a.lines().collect();
+    let lb: Vec<&str> = b.lines().collect();
+    for (i, (x, y)) in la.iter().zip(lb.iter()).enumerate() {
+        if x != y {
+            return Some(format!("first divergence at line {}:\n< {x}\n> {y}", i + 1));
+        }
+    }
+    if la.len() != lb.len() {
+        return Some(format!("line counts differ: {} vs {}", la.len(), lb.len()));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceRecord> {
+        vec![
+            TraceRecord {
+                run: 0,
+                seed: 1,
+                ord: 0,
+                t: 0.0,
+                event: TraceEvent::RunStart {
+                    policy: "p-siwoft".into(),
+                    ft: "none".into(),
+                    rule: "trace".into(),
+                },
+            },
+            TraceRecord {
+                run: 0,
+                seed: 1,
+                ord: 1,
+                t: 0.5,
+                event: TraceEvent::BidPlaced { job: 7, market: 3, price: 0.25, spot: true },
+            },
+            TraceRecord {
+                run: 1,
+                seed: 1,
+                ord: 0,
+                t: 2.0,
+                event: TraceEvent::Revocation { job: 7, market: 3 },
+            },
+            TraceRecord {
+                run: 1,
+                seed: 1,
+                ord: 1,
+                t: 9.0,
+                event: TraceEvent::RunEnd { completed: true, cost: 1.5 },
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let recs = sample();
+        let text = to_jsonl(&recs);
+        assert_eq!(text.lines().count(), recs.len());
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        let events = vec![
+            TraceEvent::RunStart { policy: "p".into(), ft: "f".into(), rule: "r".into() },
+            TraceEvent::PolicyDecision { job: 1, market: 2, spot: true },
+            TraceEvent::BidPlaced { job: 1, market: 2, price: 0.5, spot: false },
+            TraceEvent::Revocation { job: 1, market: 2 },
+            TraceEvent::Repack { bins: 3, moved: 2 },
+            TraceEvent::StageStart { stage: 0, bin: 4 },
+            TraceEvent::StageDone { stage: 0, bin: 4 },
+            TraceEvent::SloViolation { tier: 1, hours: 0.25 },
+            TraceEvent::Scale { tier: 1, from: 2, to: 5 },
+            TraceEvent::SessionTrain { markets: 64 },
+            TraceEvent::EngineDrained { events: 99 },
+            TraceEvent::RunEnd { completed: false, cost: 0.0 },
+        ];
+        for (i, event) in events.into_iter().enumerate() {
+            let r = TraceRecord { run: i as u64, seed: 7, ord: 0, t: 1.25, event };
+            let back = TraceRecord::parse_line(&r.to_json_line()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn sink_off_emits_nothing() {
+        let mut sink = TraceSink::off();
+        assert!(!sink.is_on());
+        sink.emit(1.0, TraceEvent::Revocation { job: 0, market: 0 });
+        sink.flush();
+        assert!(sink.buf.is_empty());
+    }
+
+    #[test]
+    fn sink_orders_and_collector_sorts() {
+        let col = Collector::new();
+        // two "workers" flush out of submission order
+        let mut late = TraceSink::to(col.clone());
+        late.begin_run(1, 5);
+        late.emit(0.0, TraceEvent::SessionTrain { markets: 8 });
+        let mut early = TraceSink::to(col.clone());
+        early.begin_run(0, 5);
+        early.emit(0.0, TraceEvent::SessionTrain { markets: 8 });
+        early.emit(1.0, TraceEvent::RunEnd { completed: true, cost: 0.0 });
+        drop(late); // drop-flushes first
+        drop(early);
+        let all = col.take_sorted();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].key(), (0, 5, 0));
+        assert_eq!(all[1].key(), (0, 5, 1));
+        assert_eq!(all[2].key(), (1, 5, 0));
+    }
+
+    #[test]
+    fn summary_counts_kinds_and_runs() {
+        let s = summarize(&sample());
+        assert_eq!(s.records, 4);
+        assert_eq!(s.runs, 2);
+        assert_eq!(s.t_min, 0.0);
+        assert_eq!(s.t_max, 9.0);
+        assert!(s.by_kind.iter().any(|(k, n)| k == "bid_placed" && *n == 1));
+        assert!(s.to_text().contains("4 records over 2 runs"));
+    }
+
+    #[test]
+    fn filter_by_kind_run_seed() {
+        let recs = sample();
+        assert_eq!(filter(recs.clone(), Some("revocation"), None, None).len(), 1);
+        assert_eq!(filter(recs.clone(), None, Some(0), None).len(), 2);
+        assert_eq!(filter(recs.clone(), None, None, Some(1)).len(), 4);
+        assert_eq!(filter(recs, Some("run_end"), Some(0), None).len(), 0);
+    }
+
+    #[test]
+    fn diff_reports_first_divergence() {
+        let a = to_jsonl(&sample());
+        assert!(diff_jsonl(&a, &a).is_none());
+        let mut recs = sample();
+        recs[2].t = 3.0;
+        let b = to_jsonl(&recs);
+        let d = diff_jsonl(&a, &b).unwrap();
+        assert!(d.contains("line 3"), "{d}");
+        let shorter = to_jsonl(&sample()[..2]);
+        assert!(diff_jsonl(&a, &shorter).unwrap().contains("line counts differ"));
+    }
+}

@@ -193,6 +193,16 @@ impl<'w> Scenario<'w> {
     /// `tests/engine_equivalence.rs`).
     pub fn run_seeded_in(&self, scratch: &mut Scratch, seed: u64) -> JobResult {
         let mut policy = self.build_policy();
+        // Emitted per run, not from inside the `OnceLock` fit: which run
+        // races the training first is worker-dependent, but every
+        // Predictive run *consumes* a trained state, so per-run emission
+        // is worker-count invariant.
+        if matches!(self.policy, PolicyKind::Predictive(_)) {
+            scratch.trace.emit(
+                self.cfg.start_t,
+                crate::obs::TraceEvent::SessionTrain { markets: self.world.n_markets() as u64 },
+            );
+        }
         let ft = self.ft.build(&self.job);
         execute_in(self.world, policy.as_mut(), ft.as_ref(), &self.job, &self.cfg, seed, scratch)
     }

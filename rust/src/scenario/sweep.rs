@@ -8,11 +8,14 @@
 //! granularity through [`Pool::map`], which preserves submission order;
 //! results are therefore identical for any `workers` setting.
 
+use std::sync::Arc;
+
 use super::builder::Scenario;
 use super::registry::{FtKind, PolicyKind};
 use crate::coordinator::Pool;
 use crate::dag::{DagAggregate, DagResult, DagScenario, DagSpec};
 use crate::job::Job;
+use crate::obs::{Collector, TraceSink};
 use crate::service::{ServiceAggregate, ServiceResult, ServiceScenario, ServiceSpec};
 use crate::market::analytics::SurvivalCurves;
 use crate::sim::{AggregateResult, JobResult, RevocationRule, Scratch, World};
@@ -62,6 +65,7 @@ pub struct Sweep<'w> {
     max_sessions: u32,
     workers: usize,
     curves: Option<SurvivalCurves>,
+    trace: Option<Arc<Collector>>,
 }
 
 impl<'w> Sweep<'w> {
@@ -81,6 +85,7 @@ impl<'w> Sweep<'w> {
             max_sessions: crate::sim::RunConfig::default().max_sessions,
             workers: 0,
             curves: None,
+            trace: None,
         }
     }
 
@@ -180,6 +185,29 @@ impl<'w> Sweep<'w> {
         self
     }
 
+    /// Collect structured traces into `collector` (DESIGN.md §15).
+    /// Each run is keyed `(run, seed, ord)` where `run` is the
+    /// deterministic global run index `point_index * seeds +
+    /// seed_offset`, so the collector's sorted output is byte-identical
+    /// for any `workers` setting (pinned by `tests/obs_equivalence.rs`).
+    /// Off by default — a trace-less sweep pays one branch per would-be
+    /// event.
+    pub fn trace(mut self, collector: Arc<Collector>) -> Self {
+        self.trace = Some(collector);
+        self
+    }
+
+    /// Arm a worker's sink for one (point, seed) run; no-op when
+    /// tracing is off.
+    fn arm_trace(&self, scratch: &mut Scratch, pi: usize, s: u64) {
+        if let Some(col) = &self.trace {
+            if !scratch.trace.is_on() {
+                scratch.trace = TraceSink::to(col.clone());
+            }
+            scratch.trace.begin_run(pi as u64 * self.seeds + s, self.base_seed + s);
+        }
+    }
+
     /// The cartesian product, in execution order: jobs × policies × fts
     /// × rules (rules vary fastest).
     pub fn points(&self) -> Vec<SweepPoint> {
@@ -267,6 +295,7 @@ impl<'w> Sweep<'w> {
         // Each worker reuses one Scratch across every run it steals,
         // so segment timelines stop re-allocating per (point × seed).
         let runs: Vec<JobResult> = pool.map_with(items, 1, Scratch::new, |scratch, _, (pi, s)| {
+            self.arm_trace(scratch, pi, s);
             scenarios[pi].run_seeded_in(scratch, self.base_seed + s)
         });
         runs.chunks(seeds as usize)
@@ -322,6 +351,7 @@ impl<'w> Sweep<'w> {
         let pool = Pool::new(self.workers);
         // per-worker Scratch: timelines reuse capacity across runs
         let runs: Vec<DagResult> = pool.map_with(items, 1, Scratch::new, |scratch, _, (pi, s)| {
+            self.arm_trace(scratch, pi, s);
             scenarios[pi].run_seeded_in(scratch, self.base_seed + s)
         });
         runs.chunks(seeds as usize)
@@ -380,6 +410,7 @@ impl<'w> Sweep<'w> {
         // per-worker Scratch: timelines reuse capacity across runs
         let runs: Vec<ServiceResult> =
             pool.map_with(items, 1, Scratch::new, |scratch, _, (pi, s)| {
+                self.arm_trace(scratch, pi, s);
                 scenarios[pi].run_seeded_in(scratch, self.base_seed + s)
             });
         runs.chunks(seeds as usize)

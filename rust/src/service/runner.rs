@@ -63,6 +63,7 @@ use crate::coordinator::Pool;
 use crate::ft::{FtMechanism, Recovery};
 use crate::job::{ContainerModel, Job, JobProgress};
 use crate::market::session_cost;
+use crate::obs::TraceEvent;
 use crate::pack::Packer;
 use crate::policy::{Ctx, Policy};
 use crate::scenario::{FtKind, Scenario};
@@ -244,6 +245,16 @@ impl<'a> FleetRunner<'a> {
 
         self.policy.reset();
         let policy_name = self.policy.name().to_string();
+        if scratch.trace.is_on() {
+            scratch.trace.emit(
+                t0,
+                TraceEvent::RunStart {
+                    policy: policy_name.clone(),
+                    ft: self.ft.label(),
+                    rule: self.cfg.rule.label(),
+                },
+            );
+        }
         let mut sim = Sim {
             world: self.world,
             spec: self.spec,
@@ -317,6 +328,11 @@ impl<'a> FleetRunner<'a> {
         if let FleetSchedule::Count { thresholds, .. } = schedule {
             scratch.thresholds = thresholds;
         }
+        let t_end = engine.now().max(t0);
+        scratch.trace.emit(t_end, TraceEvent::EngineDrained { events: engine.processed() });
+        scratch
+            .trace
+            .emit(t_end, TraceEvent::RunEnd { completed: result.completed, cost: result.cost_usd() });
         result
     }
 }
@@ -703,6 +719,14 @@ impl Sim<'_> {
             } else {
                 self.world.od_price(market)
             };
+            self.scratch.trace.emit(
+                t,
+                TraceEvent::PolicyDecision { job: bin_id, market: market as u64, spot: is_spot },
+            );
+            self.scratch.trace.emit(
+                t,
+                TraceEvent::BidPlaced { job: bin_id, market: market as u64, price, spot: is_spot },
+            );
             let mut stages = Vec::with_capacity(bin.stages.len());
             let mut end_t = t;
             for &c in &bin.stages {
@@ -1045,6 +1069,9 @@ impl Sim<'_> {
             return; // closed at the same timestamp before the notice
         };
         self.bin_revocations += 1;
+        self.scratch
+            .trace
+            .emit(t_eff, TraceEvent::Revocation { job: bin_id, market: bin.market as u64 });
         let (_, buffer) = session_cost(t_eff - bin.t0, bin.price);
         for bs in &bin.stages {
             let cid = bs.cid;
@@ -1132,6 +1159,8 @@ impl Sim<'_> {
         // draining (the fresh packing then starts from scratch)
         self.fleet_repacks += 1;
         let bins: Vec<u64> = self.active.keys().copied().collect();
+        let n_bins = bins.len() as u64;
+        let mut moved = 0u64;
         for bin_id in bins {
             let bin = self.active.remove(&bin_id).expect("repacking unknown bin");
             let (_, buffer) = session_cost(t - bin.t0, bin.price);
@@ -1166,11 +1195,13 @@ impl Sim<'_> {
                 // paid on the next session's prologue
                 let transfer = self.world.container.restore_time(r.job.mem_gb);
                 r.repacks += 1;
+                moved += 1;
                 self.copies[cid].carry = Carry::Repack(transfer);
                 self.copies[cid].state = CState::Ready;
                 self.copies[cid].gen += 1;
             }
         }
+        self.scratch.trace.emit(t, TraceEvent::Repack { bins: n_bins, moved });
     }
 
     fn on_trace_revoke(&mut self, eng: &mut Engine, t: f64, bin_id: u64) {
@@ -1356,6 +1387,9 @@ impl Sim<'_> {
             })
             .collect();
         let n = live.len() as u32;
+        self.scratch
+            .trace
+            .emit(t, TraceEvent::Scale { tier: ti as u64, from: n as u64, to: target as u64 });
         match target.cmp(&n) {
             std::cmp::Ordering::Greater => {
                 for _ in 0..(target - n) {
@@ -1492,6 +1526,11 @@ impl Sim<'_> {
             }
             let steps = target_steps(tier, t_start, horizon_end);
             let viol = violation_time(&replica_ups, &steps, t_start, window_end);
+            if viol > 0.0 {
+                self.scratch
+                    .trace
+                    .emit(window_end, TraceEvent::SloViolation { tier: ti as u64, hours: viol });
+            }
             let window_h = (window_end - t_start).max(0.0);
             ledger.time.add(Category::Slo, viol);
             let slo_frac = if window_h > 0.0 { viol / window_h } else { 0.0 };

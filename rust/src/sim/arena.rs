@@ -300,6 +300,11 @@ pub struct Scratch {
     pub bounds: Vec<f64>,
     /// ForcedCount schedule: sorted frontier thresholds
     pub thresholds: Vec<f64>,
+    /// Structured-trace sink (off by default — zero-cost when off;
+    /// DESIGN.md §15).  Unlike the buffers above it is *read* by the
+    /// observability layer, but it still never affects numeric results:
+    /// emission draws no rng and feeds nothing back into the run.
+    pub trace: crate::obs::TraceSink,
 }
 
 impl Scratch {

@@ -27,6 +27,7 @@ use super::world::World;
 use crate::ft::{FtMechanism, Recovery};
 use crate::job::{Job, JobProgress};
 use crate::market::session_cost;
+use crate::obs::{TraceEvent, TraceSink};
 use crate::policy::{Ctx, Policy};
 use crate::util::rng::Rng;
 
@@ -246,8 +247,20 @@ pub(crate) fn execute_in(
     scratch: &mut Scratch,
 ) -> JobResult {
     policy.reset();
+    // RunStart allocates label strings, so gate on the sink being live
+    // (emit itself is a no-op branch when off).
+    if scratch.trace.is_on() {
+        scratch.trace.emit(
+            cfg.start_t,
+            TraceEvent::RunStart {
+                policy: policy.name().to_string(),
+                ft: ft.name().to_string(),
+                rule: cfg.rule.label(),
+            },
+        );
+    }
     if ft.degree() > 1 {
-        return replicated::simulate(world, policy, ft, job, cfg, seed);
+        return replicated::simulate(world, policy, ft, job, cfg, seed, &mut scratch.trace);
     }
     let mut rng = Rng::with_stream(seed, job.id ^ 0x51307F7);
     let mut schedule = Schedule::new_in(
@@ -284,6 +297,14 @@ pub(crate) fn execute_in(
         if !is_spot {
             od_sessions += 1;
         }
+        scratch.trace.emit(
+            t,
+            TraceEvent::PolicyDecision { job: job.id, market: market as u64, spot: is_spot },
+        );
+        scratch.trace.emit(
+            t,
+            TraceEvent::BidPlaced { job: job.id, market: market as u64, price, spot: is_spot },
+        );
 
         // Revocation wall-time for this session (spot only).
         let mut rev_at = if is_spot {
@@ -327,6 +348,9 @@ pub(crate) fn execute_in(
 
         macro_rules! handle_revocation {
             () => {{
+                scratch
+                    .trace
+                    .emit(t, TraceEvent::Revocation { job: job.id, market: market as u64 });
                 let rec = ft.on_revocation(job, container, progress.durable_h > 0.0);
                 match rec {
                     Recovery::Restart { recovery_time_h } => {
@@ -445,6 +469,7 @@ pub(crate) fn execute_in(
     }
 
     let completed = progress.is_complete(job);
+    scratch.trace.emit(t, TraceEvent::RunEnd { completed, cost: ledger.cost_usd() });
     JobResult {
         job: job.clone(),
         policy: policy.name().to_string(),
@@ -479,6 +504,7 @@ mod replicated {
         job: &Job,
         cfg: &RunConfig,
         seed: u64,
+        trace: &mut TraceSink,
     ) -> JobResult {
         let k = ft.degree() as usize;
         let mut rng = Rng::with_stream(seed, job.id ^ 0x3EB71CA);
@@ -567,6 +593,10 @@ mod replicated {
                     t = rt;
                     schedule.consume(&mut rng, t);
                     revocations += 1;
+                    trace.emit(
+                        t,
+                        TraceEvent::Revocation { job: job.id, market: markets[victim] as u64 },
+                    );
 
                     // bill the victim's session
                     let dur = t - session_start[victim];
@@ -628,6 +658,8 @@ mod replicated {
             ledger.buffer_cost(buffer);
         }
 
+        let completed = progress.is_complete(job);
+        trace.emit(t, TraceEvent::RunEnd { completed, cost: ledger.cost_usd() });
         JobResult {
             job: job.clone(),
             policy: policy.name().to_string(),
@@ -636,7 +668,7 @@ mod replicated {
             revocations,
             sessions,
             ondemand_sessions: 0,
-            completed: progress.is_complete(job),
+            completed,
             makespan_h: t - cfg.start_t,
         }
     }

@@ -9,6 +9,7 @@ use std::hint::black_box;
 use std::time::{Duration, Instant};
 
 use super::stats::percentile;
+use crate::obs::Histogram;
 
 #[derive(Clone, Debug)]
 /// One benchmark's timing summary.
@@ -129,6 +130,29 @@ impl Bench {
     }
 }
 
+/// A scoped profiling timer: measures the wall time from construction
+/// to drop and records it (µs) into a lock-free [`Histogram`]
+/// (`obs::hist`).  This is the hook `bench --area engine|service` uses
+/// to attribute time to phases inside a benchmarked iteration — the
+/// histogram's snapshot renders straight into a bench row.
+pub struct ScopeTimer<'a> {
+    hist: &'a Histogram,
+    t0: Instant,
+}
+
+impl<'a> ScopeTimer<'a> {
+    /// Start timing a scope; the elapsed µs land in `hist` at drop.
+    pub fn start(hist: &'a Histogram) -> ScopeTimer<'a> {
+        ScopeTimer { hist, t0: Instant::now() }
+    }
+}
+
+impl Drop for ScopeTimer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.t0.elapsed().as_micros() as u64);
+    }
+}
+
 /// Format a duration in adaptive units (`ns`/`µs`/`ms`/`s`).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -234,6 +258,21 @@ mod tests {
         let b = Bench::quick();
         let r = b.run_with_units("units", 1000.0, || 42);
         assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scope_timer_records_on_drop() {
+        let h = Histogram::new();
+        {
+            let _t = ScopeTimer::start(&h);
+            black_box(42);
+        }
+        {
+            let _t = ScopeTimer::start(&h);
+            black_box(43);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
     }
 
     #[test]

@@ -24,12 +24,15 @@ pub enum Level {
 }
 
 impl Level {
-    /// The lowercase name used in log lines and `SIWOFT_LOG`.
+    /// The canonical tag used in log lines (no padding: consumers that
+    /// tokenize the `[time LEVEL target]` prefix — the periodic metrics
+    /// flush checks in CI among them — get a stable token; column
+    /// alignment is the formatter's job, see [`log`]).
     pub fn as_str(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         }
@@ -97,7 +100,9 @@ pub fn log(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
         return;
     }
     let t = start_instant().elapsed();
-    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), l.as_str(), module, args);
+    // pad the level tag here (not in `as_str`) so the prefix tokenizes
+    // to the bare level name while columns still line up
+    eprintln!("[{:>9.3}s {:<5} {}] {}", t.as_secs_f64(), l.as_str(), module, args);
 }
 
 #[macro_export]
@@ -130,5 +135,17 @@ mod tests {
         assert_eq!(Level::from_str("debug"), Some(Level::Debug));
         assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
         assert_eq!(Level::from_str("nope"), None);
+    }
+
+    #[test]
+    fn level_tags_are_bare_tokens() {
+        // the log-line prefix is machine-consumed (CI greps the
+        // periodic metrics flush by level tag): no padding allowed in
+        // the tag itself, and every tag round-trips through the parser
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            let tag = l.as_str();
+            assert_eq!(tag, tag.trim(), "padded level tag {tag:?}");
+            assert_eq!(Level::from_str(tag), Some(l));
+        }
     }
 }

@@ -116,6 +116,36 @@ pub fn p50_p99(xs: &[f64]) -> (f64, f64) {
     (percentile(&v, 50.0), percentile(&v, 99.0))
 }
 
+/// Percentile `q` (0–100) from log2-bucket counts in the
+/// [`crate::obs::hist`] layout — bucket 0 holds exact zeros, bucket
+/// `b > 0` covers `[2^(b-1), 2^b)`.  Walks the cumulative mass to the
+/// target rank and interpolates linearly within the covering bucket;
+/// `count` is the total number of samples.  Returns 0 when empty.
+pub fn bucket_percentile(buckets: &[u64], count: u64, q: f64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let target = q.clamp(0.0, 100.0) / 100.0 * count as f64;
+    let mut cum = 0u64;
+    for (b, &n) in buckets.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        let next = cum + n;
+        if next as f64 >= target {
+            if b == 0 {
+                return 0.0;
+            }
+            let lo = 2f64.powi(b as i32 - 1);
+            let hi = 2f64.powi(b as i32);
+            let frac = ((target - cum as f64) / n as f64).clamp(0.0, 1.0);
+            return lo + frac * (hi - lo);
+        }
+        cum = next;
+    }
+    0.0
+}
+
 /// Fixed-width histogram.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -238,6 +268,20 @@ mod tests {
         assert_eq!(p50, percentile(&sorted, 50.0));
         assert_eq!(p99, percentile(&sorted, 99.0));
         assert_eq!(p50, 5.0);
+    }
+
+    #[test]
+    fn bucket_percentile_interpolates_within_bucket() {
+        // 100 samples in bucket 10 ([512, 1024))
+        let mut buckets = vec![0u64; 64];
+        buckets[10] = 100;
+        let p50 = bucket_percentile(&buckets, 100, 50.0);
+        assert!((p50 - 768.0).abs() < 1e-9, "p50 {p50}");
+        assert_eq!(bucket_percentile(&buckets, 100, 100.0), 1024.0);
+        // zero bucket dominates low quantiles
+        buckets[0] = 100;
+        assert_eq!(bucket_percentile(&buckets, 200, 25.0), 0.0);
+        assert_eq!(bucket_percentile(&[], 0, 50.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,9 @@
+// determinism-wall fixture for obs/: the trace plane is keyed by sim
+// time + seed, so wall clocks are banned; one waived token, one caught
+// siwoft-lint: allow(d1, fixture demonstrates the obs-module waiver)
+use std::collections::HashMap as _;
+
+fn stamp() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_micros()
+}

@@ -602,6 +602,136 @@ fn bench_area_emits_schema_tracked_json() {
 }
 
 #[test]
+fn trace_out_roundtrips_through_trace_verbs() {
+    // the CI configs-job loop: simulate --trace-out → trace summary /
+    // filter / diff over the written JSONL (DESIGN.md §15)
+    let dir = tmpdir("trace");
+    let trace_path = dir.join("sim.trace.jsonl");
+    let trace_str = trace_path.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "simulate", "--policy", "p", "--markets", "48", "--months", "1", "--seeds", "2",
+        "--len", "4", "--mem", "16", "--workers", "2", "--trace-out", trace_str,
+    ]);
+    assert!(ok, "simulate --trace-out failed: {err}");
+    assert!(out.contains("trace records"), "no trace-write banner: {out}");
+    let body = std::fs::read_to_string(&trace_path).expect("trace file written");
+    assert!(body.lines().count() >= 4, "2 seeds × (run_start + run_end) at minimum: {body}");
+
+    let (out, err, ok) = run(&["trace", "summary", "--in", trace_str]);
+    assert!(ok, "trace summary failed: {err}");
+    assert!(out.contains("run_start") && out.contains("run_end"), "{out}");
+    let (out, err, ok) = run(&["trace", "summary", "--in", trace_str, "--format", "json"]);
+    assert!(ok, "trace summary --format json failed: {err}");
+    let doc = siwoft::util::json::Json::parse(out.trim()).expect("summary JSON parses");
+    assert_eq!(doc.get("runs").and_then(|j| j.as_i64()), Some(2));
+    assert!(doc.path(&["by_kind", "run_start"]).is_some(), "{out}");
+
+    // filter projects; an all-pass filter reproduces the input bytes
+    let filtered = dir.join("starts.jsonl");
+    let (_, err, ok) = run(&[
+        "trace", "filter", "--in", trace_str, "--kind", "run_start", "--out",
+        filtered.to_str().unwrap(),
+    ]);
+    assert!(ok, "trace filter failed: {err}");
+    let starts = std::fs::read_to_string(&filtered).unwrap();
+    assert_eq!(starts.lines().count(), 2, "one run_start per seed: {starts}");
+    assert!(starts.lines().all(|l| l.contains("run_start")));
+
+    // diff: identical traces exit 0, diverging traces exit 1
+    let (out, _, ok) = run(&["trace", "diff", "--a", trace_str, "--b", trace_str]);
+    assert!(ok && out.contains("identical"), "{out}");
+    let (_, err, ok) = run(&["trace", "diff", "--a", trace_str, "--b", filtered.to_str().unwrap()]);
+    assert!(!ok, "diverging traces must exit non-zero");
+    assert!(err.contains("divergence") || err.contains("diff"), "{err}");
+
+    // determinism end-to-end: a rerun at a different worker count
+    // produces byte-identical JSONL
+    let rerun = dir.join("sim2.trace.jsonl");
+    let (_, err, ok) = run(&[
+        "simulate", "--policy", "p", "--markets", "48", "--months", "1", "--seeds", "2",
+        "--len", "4", "--mem", "16", "--workers", "1", "--trace-out", rerun.to_str().unwrap(),
+    ]);
+    assert!(ok, "simulate rerun failed: {err}");
+    let (out, err, ok) = run(&["trace", "diff", "--a", trace_str, "--b", rerun.to_str().unwrap()]);
+    assert!(ok, "worker-count rerun diverged: {err}");
+    assert!(out.contains("identical"), "{out}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn serve_metrics_exposition_and_status_hist_schema() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::process::Stdio;
+
+    let mut child = Command::new(bin())
+        .args(["serve", "--addr", "127.0.0.1:0", "--markets", "16", "--months", "0.5"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .env("SIWOFT_LOG", "error")
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn siwoft serve");
+    let mut ready = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut ready).unwrap();
+    assert!(ready.contains("metrics"), "banner must advertise the metrics verb: {ready:?}");
+    let addr: SocketAddr = ready
+        .split("listening on ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in banner: {ready:?}"))
+        .parse()
+        .unwrap();
+    let addr_s = addr.to_string();
+
+    let request = |body: &str| -> siwoft::util::json::Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{body}").unwrap();
+        let mut reply = String::new();
+        BufReader::new(s).read_line(&mut reply).unwrap();
+        siwoft::util::json::Json::parse(reply.trim())
+            .unwrap_or_else(|e| panic!("bad reply ({e:?}): {reply}"))
+    };
+
+    // one decision so the latency histograms are non-empty
+    let sub = request(r#"{"cmd":"submit","len_h":2,"mem_gb":16}"#);
+    assert_eq!(sub.get("ok").and_then(|j| j.as_bool()), Some(true), "{sub:?}");
+
+    // status: the historical decision_us_total stays, derived from the
+    // new decision_hist block (schema pinned here)
+    let status = request(r#"{"cmd":"status"}"#);
+    let total = status.path(&["metrics", "decision_us_total"]).and_then(|j| j.as_f64()).unwrap();
+    let hist = status.path(&["metrics", "decision_hist"]).expect("decision_hist block");
+    for key in ["count", "sum", "max", "p50", "p99", "buckets"] {
+        assert!(hist.get(key).is_some(), "decision_hist missing `{key}`: {hist:?}");
+    }
+    assert!(hist.get("count").and_then(|j| j.as_i64()).unwrap() >= 1);
+    assert_eq!(hist.get("sum").and_then(|j| j.as_f64()).unwrap(), total);
+
+    // the raw metrics wire verb: schema-pinned JSON + Prometheus text
+    let m = request(r#"{"cmd":"metrics"}"#);
+    assert_eq!(m.get("ok").and_then(|j| j.as_bool()), Some(true), "{m:?}");
+    assert!(m.path(&["metrics", "schema_version"]).is_some(), "{m:?}");
+    assert!(m.path(&["metrics", "counters", "jobs_submitted"]).is_some(), "{m:?}");
+    assert!(m.path(&["metrics", "hists", "decision_us"]).is_some(), "{m:?}");
+    let text = m.get("text").and_then(|j| j.as_str()).expect("prom text");
+    assert!(text.contains("siwoft_jobs_submitted"), "{text}");
+
+    // the `siwoft metrics` client, both formats
+    let (out, err, ok) = run(&["metrics", "--addr", &addr_s]);
+    assert!(ok, "siwoft metrics failed: {err}");
+    let doc = siwoft::util::json::Json::parse(out.trim()).expect("metrics JSON parses");
+    assert!(doc.path(&["counters", "jobs_submitted"]).is_some(), "{out}");
+    let (out, err, ok) = run(&["metrics", "--addr", &addr_s, "--format", "prom"]);
+    assert!(ok, "siwoft metrics --format prom failed: {err}");
+    assert!(out.contains("siwoft_jobs_submitted"), "{out}");
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited with {status:?}");
+}
+
+#[test]
 fn ablation_subcommand_runs() {
     let dir = tmpdir("abl");
     let out_dir = dir.to_str().unwrap();

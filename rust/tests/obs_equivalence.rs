@@ -1,0 +1,153 @@
+//! The observability equivalence suite (DESIGN.md §15).
+//!
+//! Pins the three invariants the `siwoft::obs` plane is built on:
+//!
+//! 1. **Worker-count invariance** — a traced sweep serializes to
+//!    byte-identical JSONL for any `workers` setting, because every
+//!    record is keyed by the deterministic `(run, seed, ord)` triple
+//!    and the collector's drain is a stable sort over that key.
+//! 2. **Exact histogram merge** — per-shard `obs::hist::Histogram`s
+//!    recorded concurrently and merged are indistinguishable from one
+//!    histogram fed the same samples serially.
+//! 3. **Zero-cost when off** — arming a trace collector does not
+//!    perturb simulation results: aggregates and per-run ledgers are
+//!    bit-identical with tracing on and off.
+
+use std::sync::Arc;
+
+use siwoft::obs::trace::to_jsonl;
+use siwoft::prelude::*;
+
+fn world() -> (World, f64) {
+    let mut w = World::generate(48, 1.0, 7177);
+    let start = w.split_train(0.6);
+    (w, start)
+}
+
+/// The (policy × ft × rule) grid every trace test sweeps over.
+fn grid(w: &World, start: f64) -> Sweep<'_> {
+    Sweep::on(w)
+        .job(Job::new(1, 4.0, 16.0))
+        .policies([PolicyKind::default(), PolicyKind::FtSpot, PolicyKind::OnDemand])
+        .fts([FtKind::None, FtKind::CheckpointHourly])
+        .rules([RevocationRule::Trace, RevocationRule::ForcedRate { per_day: 6.0 }])
+        .seeds(2)
+        .start_t(start)
+}
+
+#[test]
+fn traces_are_byte_identical_across_worker_counts() {
+    let (w, start) = world();
+    let run_traced = |workers: usize| {
+        let col = Collector::new();
+        grid(&w, start).trace(col.clone()).workers(workers).run();
+        to_jsonl(&col.take_sorted())
+    };
+    let serial = run_traced(1);
+    let parallel = run_traced(8);
+    assert!(!serial.is_empty(), "traced sweep produced no records");
+    // run_start + run_end alone give 2 records per run across the grid
+    assert!(serial.lines().count() >= 2 * 3 * 2 * 2 * 2);
+    assert_eq!(serial, parallel, "trace bytes depend on worker count");
+}
+
+#[test]
+fn service_traces_are_byte_identical_across_worker_counts() {
+    let (w, start) = world();
+    let spec = ServiceSpec::new("mini")
+        .horizon(12.0)
+        .capacity(64.0)
+        .tier(TierSpec::open("web", 2, 8.0).slack(0.25));
+    let run_traced = |workers: usize| {
+        let col = Collector::new();
+        Sweep::on(&w)
+            .service(spec.clone())
+            .policies([PolicyKind::default(), PolicyKind::OnDemand])
+            .rules([RevocationRule::Trace, RevocationRule::ForcedCount { total: 1 }])
+            .seeds(2)
+            .start_t(start)
+            .trace(col.clone())
+            .workers(workers)
+            .run_services();
+        to_jsonl(&col.take_sorted())
+    };
+    let serial = run_traced(1);
+    let parallel = run_traced(8);
+    assert!(!serial.is_empty(), "traced service sweep produced no records");
+    assert_eq!(serial, parallel, "service trace bytes depend on worker count");
+}
+
+#[test]
+fn trace_jsonl_round_trips_and_diffs_clean() {
+    let (w, start) = world();
+    let col = Collector::new();
+    grid(&w, start).trace(col.clone()).workers(2).run();
+    let records = col.take_sorted();
+    let text = to_jsonl(&records);
+    let parsed = siwoft::obs::trace::parse_jsonl(&text).expect("round-trip parse");
+    assert_eq!(parsed.len(), records.len());
+    assert_eq!(to_jsonl(&parsed), text);
+    assert_eq!(siwoft::obs::trace::diff_jsonl(&text, &text), None);
+    let summary = siwoft::obs::trace::summarize(&records);
+    assert_eq!(summary.records, records.len());
+    assert!(summary.by_kind.iter().any(|(k, _)| k == "run_start"));
+    assert!(summary.by_kind.iter().any(|(k, _)| k == "run_end"));
+}
+
+#[test]
+fn sharded_histogram_merge_equals_single_shard() {
+    // 8 threads record disjoint deterministic sample streams into their
+    // own shards; the merged result must equal one histogram fed every
+    // sample serially (per-bucket adds are exact — no approximation)
+    const SHARDS: u64 = 8;
+    const PER_SHARD: u64 = 4096;
+    let sample = |shard: u64, i: u64| -> u64 {
+        // splitmix-style scramble: spans many buckets, fully deterministic
+        let mut x = shard.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(i);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x % 10_000_000
+    };
+    let shards: Vec<Arc<Histogram>> =
+        (0..SHARDS).map(|_| Arc::new(Histogram::new())).collect();
+    std::thread::scope(|scope| {
+        for (s, shard) in shards.iter().enumerate() {
+            let shard = shard.clone();
+            scope.spawn(move || {
+                for i in 0..PER_SHARD {
+                    shard.record(sample(s as u64, i));
+                }
+            });
+        }
+    });
+    let merged = Histogram::new();
+    for shard in &shards {
+        merged.merge(shard);
+    }
+    let single = Histogram::new();
+    for s in 0..SHARDS {
+        for i in 0..PER_SHARD {
+            single.record(sample(s, i));
+        }
+    }
+    assert_eq!(merged.snapshot(), single.snapshot());
+    assert_eq!(merged.count(), SHARDS * PER_SHARD);
+}
+
+#[test]
+fn tracing_off_leaves_sweep_results_bit_identical() {
+    let (w, start) = world();
+    let plain = grid(&w, start).workers(2).run();
+    let col = Collector::new();
+    let traced = grid(&w, start).trace(col.clone()).workers(2).run();
+    assert!(!col.take_sorted().is_empty());
+    assert_eq!(plain.len(), traced.len());
+    for (a, b) in plain.iter().zip(&traced) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.agg, b.agg, "tracing changed the aggregate at {:?}", a.point);
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.ledger, y.ledger, "tracing changed a ledger at {:?}", a.point);
+        }
+    }
+}

@@ -25,7 +25,7 @@ ALL_RULES = ["a1", "d1", "d2", "e1", "h1"]
 
 RESULT_MODULES = [
     "sim", "dag", "service", "scenario", "policy", "ft", "job", "market", "pack",
-    "session",
+    "session", "obs",
 ]
 D1_TOKENS = [
     "SystemTime", "Instant::now", "std::time::Instant", "std::env", "HashMap", "HashSet",
